@@ -1,0 +1,59 @@
+//! Bandwidth report: regenerates the paper's Θ-bound claims (sections
+//! 3.2-3.4) as a measured table — per-algorithm site→aggregator bytes for
+//! one synchronized step, swept over layer width and batch size — plus the
+//! simulated wire time under LAN and federated-WAN cost models.
+//!
+//! Run: cargo run --release --example bandwidth_report
+
+use dad::coordinator::experiments::bandwidth_table;
+use dad::dist::CostModel;
+
+fn main() {
+    println!("== bandwidth report: measured vs paper Θ bounds ==\n");
+    println!("2 sites, batch 32/site, MLP 64-h-h-10, one synchronized step.\n");
+    let rows = bandwidth_table(&[256, 512, 1024, 2048, 4096], 32);
+    println!(
+        "{:<14} {:>6} {:>14} {:>14} {:>7}",
+        "algo", "h", "measured B", "theta B", "ratio"
+    );
+    let mut by_h: std::collections::BTreeMap<usize, Vec<(String, u64)>> = Default::default();
+    for r in &rows {
+        println!(
+            "{:<14} {:>6} {:>14} {:>14} {:>7.2}",
+            r.algo,
+            r.h,
+            r.measured_up,
+            r.theta_up,
+            r.measured_up as f64 / r.theta_up.max(1) as f64
+        );
+        by_h.entry(r.h).or_default().push((r.algo.clone(), r.measured_up));
+    }
+
+    println!("\nreduction vs dSGD (site->agg):");
+    for (h, algos) in &by_h {
+        let dsgd = algos.iter().find(|(n, _)| n == "dsgd").map(|&(_, b)| b).unwrap_or(1);
+        let fmt: Vec<String> = algos
+            .iter()
+            .filter(|(n, _)| n != "dsgd")
+            .map(|(n, b)| format!("{n} {:.1}x", dsgd as f64 / *b as f64))
+            .collect();
+        println!("  h={h:<6} {}", fmt.join("   "));
+    }
+
+    println!("\nwire time for one step's uplink (per site), LAN vs federated WAN:");
+    let lan = CostModel::lan_10gbe();
+    let wan = CostModel::wan_federated();
+    for (h, algos) in &by_h {
+        println!("  h={h}:");
+        for (name, bytes) in algos {
+            let per_site = bytes / 2;
+            println!(
+                "    {:<14} LAN {:>9.3} ms   WAN {:>9.1} ms",
+                name,
+                lan.time_for(per_site, 1) * 1e3,
+                wan.time_for(per_site, 1) * 1e3
+            );
+        }
+    }
+    println!("\n(series written to results/bandwidth.csv)");
+}

@@ -1,0 +1,129 @@
+"""AOT compiler: lower the Layer-2 JAX functions (which embed the Layer-1
+Pallas kernels) to HLO *text* artifacts for the Rust PJRT runtime.
+
+HLO text — NOT lowered.compile()/.serialize() — is the interchange format:
+jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which the
+vendored xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example/README.md
+and gen_hlo.py there).
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+Re-running is cheap and deterministic; `make artifacts` skips it when inputs
+are unchanged.
+
+Artifacts (shapes fixed at trace time; the Rust native engine handles every
+other shape):
+  mlp_stats.hlo.txt        per-site local stats, batch 32 (paper's per-site N)
+  mlp_grads.hlo.txt        gradient assembly on concatenated stats (SN = 64)
+  mlp_train_step.hlo.txt   fused pooled step, batch 64
+  rankdad_factors.hlo.txt  structured power iterations, 64x1024 / 64x1024,
+                           max_rank 10, n_iters 10 (Figure 4 configuration)
+  fused_delta.hlo.txt      standalone Layer-1 kernel (64x1024 stripe)
+  smoke.hlo.txt            2x2 matmul+2.0 sanity check for runtime tests
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import rankdad_factors, fused_delta
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _lower_mlp_stats(batch):
+    d0, d1, d2, c = model.MLP_DIMS
+    return jax.jit(model.mlp_stats_flat).lower(
+        _f32(d0, d1), _f32(d1), _f32(d1, d2), _f32(d2), _f32(d2, c), _f32(c),
+        _f32(batch, d0), _f32(batch, c),
+    )
+
+
+def _lower_mlp_grads(total_batch):
+    d0, d1, d2, c = model.MLP_DIMS
+    return jax.jit(model.mlp_grads_flat).lower(
+        _f32(total_batch, d0), _f32(total_batch, d1), _f32(total_batch, d2),
+        _f32(total_batch, d1), _f32(total_batch, d2), _f32(total_batch, c),
+        _f32(),
+    )
+
+
+def _lower_mlp_train_step(batch):
+    d0, d1, d2, c = model.MLP_DIMS
+    return jax.jit(model.mlp_train_step_flat).lower(
+        _f32(d0, d1), _f32(d1), _f32(d1, d2), _f32(d2), _f32(d2, c), _f32(c),
+        _f32(batch, d0), _f32(batch, c), _f32(),
+    )
+
+
+def _lower_rankdad(n, h_in, h_out, max_rank, n_iters):
+    def fn(a, d):
+        q_t, g_t, eff = rankdad_factors(a, d, max_rank=max_rank, n_iters=n_iters)
+        return q_t, g_t, eff.astype(jnp.float32)  # uniform f32 outputs
+
+    return jax.jit(fn).lower(_f32(n, h_in), _f32(n, h_out))
+
+
+def _lower_fused_delta(n, h_in, h_out):
+    def fn(dn, w, a):
+        return (fused_delta(dn, w, a),)
+
+    return jax.jit(fn).lower(_f32(n, h_out), _f32(h_in, h_out), _f32(n, h_in))
+
+
+def _lower_smoke():
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    s = _f32(2, 2)
+    return jax.jit(fn).lower(s, s)
+
+
+ARTIFACTS = {
+    "mlp_stats": lambda: _lower_mlp_stats(batch=32),
+    "mlp_grads": lambda: _lower_mlp_grads(total_batch=64),
+    "mlp_train_step": lambda: _lower_mlp_train_step(batch=64),
+    "rankdad_factors": lambda: _lower_rankdad(64, 1024, 1024, max_rank=10, n_iters=10),
+    "fused_delta": lambda: _lower_fused_delta(64, 1024, 1024),
+    "smoke": _lower_smoke,
+}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    names = args.only.split(",") if args.only else list(ARTIFACTS)
+    manifest = {}
+    for name in names:
+        lowered = ARTIFACTS[name]()
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {"bytes": len(text)}
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels for distributed auto-differentiation.
+
+All kernels run under interpret=True (the CPU PJRT plugin cannot execute
+Mosaic custom-calls); each has a pure-jnp oracle in ref.py, compared by
+pytest under hypothesis shape/dtype sweeps.
+"""
+
+from .fused_delta import fused_delta
+from .grad_outer import grad_outer
+from .power_iter import power_iter_step, rankdad_factors
+from . import ref
+
+__all__ = ["fused_delta", "grad_outer", "power_iter_step", "rankdad_factors", "ref"]

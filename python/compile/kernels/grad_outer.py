@@ -1,0 +1,69 @@
+"""Pallas kernel: tiled gradient outer product (paper eq. (4)).
+
+    grad W_i = scale * A_{i-1}^T @ Delta_i
+
+This is *the* operation dAD distributes: both factors have N rows (batch),
+the output has h_in x h_out entries, and N << h for every practically
+relevant layer — which is exactly why shipping the factors beats shipping
+the gradient.
+
+TPU mapping: the grid tiles the (h_in, h_out) *output*; the reduction
+dimension N is small (<= batch size) and streams through VMEM whole. Each
+program computes one (bi, bo) output tile as a (bi, N) x (N, bo) MXU
+contraction with fp32 accumulation. With N <= 128 both stripes fit VMEM at
+any practical h (see DESIGN.md VMEM table).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(a_ref, d_ref, s_ref, o_ref):
+    a = a_ref[...]  # (N, bi) stripe of A_{i-1}
+    d = d_ref[...]  # (N, bo) stripe of Delta_i
+    scale = s_ref[0, 0]  # traced scalar (1/(S*N)) — not baked into the HLO
+    acc = jax.lax.dot_general(
+        a,
+        d,
+        dimension_numbers=(((0,), (0,)), ((), ())),  # contract batch dim
+        preferred_element_type=jnp.float32,
+    )
+    o_ref[...] = (scale * acc).astype(o_ref.dtype)
+
+
+def _block(dim, want):
+    b = min(dim, want)
+    while dim % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("bi", "bo"))
+def grad_outer(a_prev, delta, scale=1.0, bi=256, bo=256):
+    """a_prev (N,h_in), delta (N,h_out) -> scale * a_prev.T @ delta.
+
+    `scale` may be a python float or a traced f32 scalar — it is fed to the
+    kernel as a (1,1) operand so one lowered artifact serves any site count.
+    """
+    n, h_in = a_prev.shape
+    n2, h_out = delta.shape
+    assert n == n2
+    bi = _block(h_in, bi)
+    bo = _block(h_out, bo)
+    grid = (h_in // bi, h_out // bo)
+    s = jnp.asarray(scale, a_prev.dtype).reshape(1, 1)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, bi), lambda i, j: (0, i)),
+            pl.BlockSpec((n, bo), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bi, bo), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((h_in, h_out), a_prev.dtype),
+        interpret=True,
+    )(a_prev, delta, s)

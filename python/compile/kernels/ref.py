@@ -1,0 +1,216 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here, written in
+the most direct jnp form possible. pytest compares kernel outputs against
+these under hypothesis-driven shape/dtype sweeps; the Rust native engine
+mirrors the same math (tested on the Rust side against finite differences).
+
+Shape conventions (match DESIGN.md):
+    A_{i-1} in R^{N x h_i}      input activations of layer i
+    Delta_i in R^{N x h_{i+1}}  backpropagated error at layer i (unscaled)
+    W_i     in R^{h_i x h_{i+1}}
+    grad W_i = A_{i-1}^T Delta_i / (S*N)
+"""
+
+import jax
+import jax.numpy as jnp
+
+# Activation tags shared with the kernels and the Rust engine.
+RELU, SIGMOID, TANH, LINEAR = "relu", "sigmoid", "tanh", "linear"
+
+
+def act(name, z):
+    """Forward activation."""
+    if name == RELU:
+        return jnp.maximum(z, 0.0)
+    if name == SIGMOID:
+        return jax.nn.sigmoid(z)
+    if name == TANH:
+        return jnp.tanh(z)
+    if name == LINEAR:
+        return z
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def act_deriv_from_output(name, a):
+    """phi'(z) computed *from the output activation* a = phi(z).
+
+    This is the edAD trick (paper section 3.3): for the common activations the
+    derivative is an analytic function of the output, so the aggregator's
+    broadcast activations suffice to continue backpropagation without any
+    further delta communication.
+    """
+    if name == RELU:
+        return (a > 0.0).astype(a.dtype)
+    if name == SIGMOID:
+        return a * (1.0 - a)
+    if name == TANH:
+        return 1.0 - a * a
+    if name == LINEAR:
+        return jnp.ones_like(a)
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def fused_delta_ref(delta_next, w, a, activation=RELU):
+    """Delta_i = (Delta_{i+1} W_{i+1}^T) . phi'_i(A_i)   [paper eq. (3)/(5)].
+
+    delta_next: (N, h_out), w: (h_in, h_out), a: (N, h_in) -> (N, h_in)
+    """
+    return (delta_next @ w.T) * act_deriv_from_output(activation, a)
+
+
+def grad_outer_ref(a_prev, delta, scale=1.0):
+    """grad W = scale * A_{i-1}^T Delta_i     [paper eq. (4)].
+
+    a_prev: (N, h_in), delta: (N, h_out) -> (h_in, h_out)
+    """
+    return scale * (a_prev.T @ delta)
+
+
+def power_iter_step_ref(a, d, g, gs, sigmas):
+    """One deflated structured power-iteration step  [paper eq. (6)-(8)].
+
+    Iterates g <- M^T M g in factored space, where M = A^T D is the gradient
+    that is never materialized:
+
+        v  = D g            (N,)
+        w  = C v, C = A A^T (N,)
+        g' = D^T w          (h_out,)
+        g' -= sum_j sigma_j^2 g_j (g_j^T g)     (deflation of found pairs)
+
+    a: (N, h_in), d: (N, h_out), g: (h_out,)
+    gs: (r, h_out) previously found right singular vectors (rows may be zero)
+    sigmas: (r,) corresponding singular values (zero rows are inert)
+    Returns the *unnormalized* next iterate.
+    """
+    v = d @ g
+    w = a @ (a.T @ v)  # C v without materializing C
+    g_next = d.T @ w
+    coeff = (sigmas**2) * (gs @ g)
+    g_next = g_next - gs.T @ coeff
+    # Re-orthogonalize against the found right singular vectors (unit rows of
+    # gs; zero rows are inert). Algebraically redundant with the deflation
+    # above, but it keeps the iterate in the orthogonal complement despite
+    # f32 cancellation noise — without it the theta-stop floor sits at
+    # ~eps*sigma_0 and exhausted spectra are not reliably detected. Applied
+    # twice ("twice is enough", Kahan/Parlett): a single pass leaves an
+    # O(eps) relative residual that the sigma_0^2 amplification of the next
+    # step resurrects into a spurious duplicate dominant component.
+    g_next = g_next - gs.T @ (gs @ g_next)
+    g_next = g_next - gs.T @ (gs @ g_next)
+    return g_next
+
+
+def deterministic_init(h, dt=jnp.float32):
+    """Deterministic pseudo-random unit start vector (PRNG-free so the exact
+    same sequence is reproducible from the Rust native engine)."""
+    i = jnp.arange(h, dtype=jnp.float32)
+    v = jnp.sin(i * 12.9898 + 78.233) * 43758.5453
+    v = v - jnp.floor(v) - 0.5
+    return (v / jnp.linalg.norm(v)).astype(dt)
+
+
+def rankdad_factors_ref(a, d, max_rank, n_iters=10, theta=1e-3):
+    """Full structured-power-iteration factorization (paper section 3.4.1).
+
+    Returns (q_t, g_t, eff_rank) with q_t: (max_rank, h_in) holding
+    sigma_j * q_j rows and g_t: (max_rank, h_out) holding unit right singular
+    vectors, so that   A^T D  ~=  q_t^T @ g_t.  Rows past eff_rank are zero.
+
+    The effective rank is the number of components extracted before the
+    residual spectrum is indistinguishable from zero (paper's theta-stop on
+    the convergence gap ||g^j - g^{j+1}|| / ||g^j|| with theta = 1e-3).
+    """
+    n, h_in = a.shape
+    h_out = d.shape[1]
+    dt = a.dtype
+    q_t = jnp.zeros((max_rank, h_in), dt)
+    g_t = jnp.zeros((max_rank, h_out), dt)
+    sigmas = jnp.zeros((max_rank,), dt)
+    eff_rank = 0
+    g0 = deterministic_init(h_out, dt)
+    # True rank is bounded by every dimension; f32 cannot resolve residual
+    # spectra below ~sqrt(eps)*sigma_0 (see the Rust twin in
+    # rust/src/lowrank/power_iter.rs for the full story).
+    hard_cap = min(max_rank, n, h_in, h_out)
+    theta_stop = max(theta, 3e-4)
+    for j in range(hard_cap):
+        g = g0
+        degenerate = False
+        nrm = 0.0
+        for _ in range(n_iters):
+            g_new = power_iter_step_ref(a, d, g, g_t, sigmas)
+            nrm = float(jnp.linalg.norm(g_new))
+            if nrm < 1e-30:  # residual spectrum ~ zero
+                degenerate = True
+                break
+            g_new = g_new / nrm
+            gap = float(jnp.linalg.norm(g - g_new)) / (float(jnp.linalg.norm(g)) + 1e-30)
+            g = g_new
+            if gap < theta:
+                break
+        # The deflated operator applied to a unit iterate has norm ~= the
+        # residual spectrum's sigma^2: once it collapses relative to the
+        # dominant sigma, the remaining columns are noise — skip them
+        # (the paper's theta-stop, section 3.4.1).
+        res_sigma = nrm**0.5
+        if degenerate or res_sigma < theta_stop * max(1.0, float(sigmas[0])):
+            break
+        v = d @ g
+        sigma = float(jnp.sqrt(v @ (a @ (a.T @ v))))
+        if sigma < theta_stop * max(1.0, float(sigmas[0])):
+            break  # noisy column: skip per paper section 3.4.1
+        q = (a.T @ v) / sigma
+        q_t = q_t.at[j].set(sigma * q)
+        g_t = g_t.at[j].set(g)
+        sigmas = sigmas.at[j].set(sigma)
+        eff_rank = j + 1
+    return q_t, g_t, eff_rank
+
+
+# ---------------------------------------------------------------------------
+# MLP local-stats oracle (mirrors model.mlp_local_stats and the Rust tape).
+# ---------------------------------------------------------------------------
+
+
+def mlp_forward_ref(params, x, activations):
+    """Forward pass returning all layer activations [A_0 .. A_L]."""
+    a = x
+    acts = [a]
+    for (w, b), name in zip(params, activations):
+        a = act(name, a @ w + b)
+        acts.append(a)
+    return acts
+
+
+def mlp_local_stats_ref(params, x, y, activations):
+    """(loss, [A_0..A_{L-1}], [Delta_1..Delta_L]) for a softmax-CE MLP.
+
+    Deltas are UNSCALED (Delta_L = softmax(z_L) - y); the coordinator applies
+    the 1/(S*N) global-mean scale when assembling gradients, so the same
+    artifact serves any site count. `activations` names the hidden
+    activations; the output layer is always softmax + cross-entropy.
+    """
+    acts = [x]
+    a = x
+    for (w, b), name in zip(params[:-1], activations):
+        a = act(name, a @ w + b)
+        acts.append(a)
+    w_l, b_l = params[-1]
+    z_l = a @ w_l + b_l
+    p = jax.nn.softmax(z_l, axis=-1)
+    logp = jax.nn.log_softmax(z_l, axis=-1)
+    loss = -jnp.mean(jnp.sum(y * logp, axis=-1))
+    deltas = [None] * len(params)
+    deltas[-1] = p - y
+    for i in range(len(params) - 2, -1, -1):
+        w_next = params[i + 1][0]
+        deltas[i] = fused_delta_ref(deltas[i + 1], w_next, acts[i + 1], activations[i])
+    return loss, acts[:-1], deltas
+
+
+def mlp_grads_from_stats_ref(a_hats, delta_hats, scale):
+    """Exact global gradients from (concatenated) stats [paper eq. (4)]."""
+    grads_w = [grad_outer_ref(a, d, scale) for a, d in zip(a_hats, delta_hats)]
+    grads_b = [scale * jnp.sum(d, axis=0) for d in delta_hats]
+    return grads_w, grads_b

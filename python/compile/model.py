@@ -1,0 +1,111 @@
+"""Layer-2 JAX model: the paper's feed-forward network, built on the Layer-1
+Pallas kernels, structured so each site's *local AD statistics* — not the
+gradient — are the function outputs.
+
+Three entry points, each AOT-lowered by aot.py to an HLO-text artifact the
+Rust coordinator executes through PJRT:
+
+  mlp_local_stats      one site's forward + backward, returning
+                       (loss, A_0..A_{L-1}, Delta_1..Delta_L). This is what a
+                       site computes before the dAD exchange. Deltas are
+                       unscaled; the coordinator applies 1/(S*N).
+  mlp_grads_from_stats the post-exchange gradient assembly
+                       grad W_i = scale * A_hat^T Delta_hat (paper eq. 4),
+                       run on concatenated stats.
+  rankdad_factors      the structured-power-iteration factorization used by
+                       rank-dAD (kernels/power_iter.py).
+
+The canonical architecture matches the paper's MNIST experiment:
+784 -> 1024 -> 1024 -> 10, ReLU hidden activations, softmax cross-entropy
+(Table 2 lists FC1 as 768x1024; 768 is inconsistent with MNIST's 28x28=784
+inputs used in Figure 1, and we use 784 throughout).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_delta, grad_outer
+from .kernels import ref
+
+# Canonical paper MLP (hidden activations; output layer is softmax-CE).
+MLP_DIMS = (784, 1024, 1024, 10)
+MLP_ACTS = (ref.RELU, ref.RELU)
+
+
+def mlp_init(key, dims=MLP_DIMS):
+    """He-uniform init, matching rust/src/nn/init.rs."""
+    params = []
+    for h_in, h_out in zip(dims[:-1], dims[1:]):
+        key, sub = jax.random.split(key)
+        bound = jnp.sqrt(6.0 / h_in)
+        w = jax.random.uniform(sub, (h_in, h_out), jnp.float32, -bound, bound)
+        params.append((w, jnp.zeros((h_out,), jnp.float32)))
+    return params
+
+
+def mlp_local_stats(params, x, y, activations=MLP_ACTS):
+    """One site's AD statistics for a softmax-CE MLP.
+
+    params: [(W_i, b_i)] with W_i (h_{i-1}, h_i); x (N, h_0); y (N, C) one-hot.
+    Returns (loss, acts, deltas): acts = [A_0..A_{L-1}] (A_0 = x),
+    deltas = [Delta_1..Delta_L], all unscaled (Delta_L = softmax - y).
+
+    The backward recurrence runs on the Pallas fused_delta kernel — the same
+    fused matmul+Hadamard tile pass edAD performs at the aggregated level.
+    """
+    acts = [x]
+    a = x
+    for (w, b), name in zip(params[:-1], activations):
+        a = ref.act(name, a @ w + b)
+        acts.append(a)
+    w_l, b_l = params[-1]
+    z_l = a @ w_l + b_l
+    logp = jax.nn.log_softmax(z_l, axis=-1)
+    loss = -jnp.mean(jnp.sum(y * logp, axis=-1))
+    deltas = [None] * len(params)
+    deltas[-1] = jnp.exp(logp) - y
+    for i in range(len(params) - 2, -1, -1):
+        w_next = params[i + 1][0]
+        deltas[i] = fused_delta(deltas[i + 1], w_next, acts[i + 1], activations[i])
+    return loss, acts, deltas
+
+
+def mlp_grads_from_stats(a_hats, delta_hats, scale):
+    """Gradient assembly from (concatenated) statistics, on the Pallas
+    grad_outer kernel. Returns ([grad W_i], [grad b_i])."""
+    grads_w = [grad_outer(a, d, scale=scale) for a, d in zip(a_hats, delta_hats)]
+    grads_b = [scale * jnp.sum(d, axis=0) for d in delta_hats]
+    return grads_w, grads_b
+
+
+# --- flat-signature wrappers for AOT lowering (PJRT takes a flat arg list) --
+
+
+def mlp_stats_flat(w1, b1, w2, b2, w3, b3, x, y):
+    """Flat-tuple mlp_local_stats for the canonical 784-1024-1024-10 MLP.
+
+    Outputs: (loss, a0, a1, a2, d1, d2, d3).
+    """
+    loss, acts, deltas = mlp_local_stats([(w1, b1), (w2, b2), (w3, b3)], x, y)
+    return (loss, acts[0], acts[1], acts[2], deltas[0], deltas[1], deltas[2])
+
+
+def mlp_grads_flat(a0, a1, a2, d1, d2, d3, scale):
+    """Flat-tuple mlp_grads_from_stats. scale is a f32 scalar (1/(S*N)).
+
+    Outputs: (gw1, gb1, gw2, gb2, gw3, gb3).
+    """
+    gw, gb = mlp_grads_from_stats([a0, a1, a2], [d1, d2, d3], scale)
+    return (gw[0], gb[0], gw[1], gb[1], gw[2], gb[2])
+
+
+def mlp_train_step_flat(w1, b1, w2, b2, w3, b3, x, y, scale):
+    """Fused single-site step: stats + gradient assembly in one executable.
+
+    Used by the pooled/PJRT backend where no exchange is needed between the
+    two halves. Outputs: (loss, gw1, gb1, gw2, gb2, gw3, gb3,
+    a0, a1, a2, d1, d2, d3) — gradients for the update, stats for telemetry.
+    """
+    loss, a0, a1, a2, d1, d2, d3 = mlp_stats_flat(w1, b1, w2, b2, w3, b3, x, y)
+    gw1, gb1, gw2, gb2, gw3, gb3 = mlp_grads_flat(a0, a1, a2, d1, d2, d3, scale)
+    return (loss, gw1, gb1, gw2, gb2, gw3, gb3, a0, a1, a2, d1, d2, d3)

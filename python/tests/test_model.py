@@ -1,0 +1,105 @@
+"""Layer-2 correctness: the stats-producing MLP against jax.grad.
+
+The decisive test: gradients assembled from the model's AD statistics
+(A_hat^T Delta_hat, paper eq. 4) must equal jax.grad of the loss — including
+when the statistics come from *concatenated multi-site batches* (the dAD
+exactness claim).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _one_hot(key, n, c):
+    lbl = jax.random.randint(key, (n,), 0, c)
+    return jax.nn.one_hot(lbl, c, dtype=jnp.float32)
+
+
+def _setup(seed, dims=(20, 32, 24, 6), n=8):
+    k = jax.random.split(jax.random.PRNGKey(seed), 3)
+    params = model.mlp_init(k[0], dims)
+    x = jax.random.normal(k[1], (n, dims[0]), jnp.float32)
+    y = _one_hot(k[2], n, dims[-1])
+    return params, x, y
+
+
+def _loss_fn(params, x, y):
+    a = x
+    for (w, b) in params[:-1]:
+        a = jnp.maximum(a @ w + b, 0.0)
+    z = a @ params[-1][0] + params[-1][1]
+    return -jnp.mean(jnp.sum(y * jax.nn.log_softmax(z, axis=-1), axis=-1))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 16))
+def test_stats_reconstruct_jax_grad(seed, n):
+    params, x, y = _setup(seed, n=n)
+    loss, acts, deltas = model.mlp_local_stats(params, x, y)
+    gw, gb = model.mlp_grads_from_stats(acts, deltas, 1.0 / n)
+    ref_loss = _loss_fn(params, x, y)
+    ref_grads = jax.grad(_loss_fn)(params, x, y)
+    np.testing.assert_allclose(float(loss), float(ref_loss), rtol=1e-5)
+    for i, (rw, rb) in enumerate(ref_grads):
+        np.testing.assert_allclose(np.asarray(gw[i]), np.asarray(rw), rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(gb[i]), np.asarray(rb), rtol=1e-4, atol=1e-5)
+
+
+def test_two_site_concat_equals_pooled_grad():
+    """dAD exactness: concatenating two sites' stats gives the pooled
+    gradient of the union batch."""
+    params, x1, y1 = _setup(23, n=8)
+    _, x2, y2 = _setup(29, n=8)
+    _, a1, d1 = model.mlp_local_stats(params, x1, y1)
+    _, a2, d2 = model.mlp_local_stats(params, x2, y2)
+    a_hat = [jnp.concatenate([u, v]) for u, v in zip(a1, a2)]
+    d_hat = [jnp.concatenate([u, v]) for u, v in zip(d1, d2)]
+    gw, gb = model.mlp_grads_from_stats(a_hat, d_hat, 1.0 / 16)
+    x = jnp.concatenate([x1, x2])
+    y = jnp.concatenate([y1, y2])
+    ref_grads = jax.grad(_loss_fn)(params, x, y)
+    for i, (rw, rb) in enumerate(ref_grads):
+        np.testing.assert_allclose(np.asarray(gw[i]), np.asarray(rw), rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(gb[i]), np.asarray(rb), rtol=1e-4, atol=1e-5)
+
+
+def test_edad_delta_recurrence_matches_stats():
+    """edAD (alg. 2): deltas recomputed at the aggregated level from
+    broadcast activations equal the concatenation of local deltas."""
+    params, x1, y1 = _setup(31, n=8)
+    _, x2, y2 = _setup(37, n=8)
+    _, a1, d1 = model.mlp_local_stats(params, x1, y1)
+    _, a2, d2 = model.mlp_local_stats(params, x2, y2)
+    a_hat = [jnp.concatenate([u, v]) for u, v in zip(a1, a2)]
+    d_hat_full = [jnp.concatenate([u, v]) for u, v in zip(d1, d2)]
+    # edAD only ever communicates Delta_L; recompute the rest (eq. 5).
+    d_l = d_hat_full[-1]
+    deltas = [None] * len(params)
+    deltas[-1] = d_l
+    for i in range(len(params) - 2, -1, -1):
+        deltas[i] = ref.fused_delta_ref(
+            deltas[i + 1], params[i + 1][0], a_hat[i + 1], ref.RELU
+        )
+    for i in range(len(params)):
+        np.testing.assert_allclose(
+            np.asarray(deltas[i]), np.asarray(d_hat_full[i]), rtol=1e-4, atol=1e-5
+        )
+
+
+def test_flat_wrappers_roundtrip():
+    params, x, y = _setup(41, dims=model.MLP_DIMS, n=4)
+    flat = [t for p in params for t in p]
+    out = model.mlp_stats_flat(*flat, x, y)
+    assert len(out) == 7
+    loss, a0, a1, a2, d1, d2, d3 = out
+    assert a0.shape == (4, 784) and a1.shape == (4, 1024)
+    assert d3.shape == (4, 10)
+    g = model.mlp_grads_flat(a0, a1, a2, d1, d2, d3, jnp.float32(0.25))
+    assert g[0].shape == (784, 1024) and g[5].shape == (10,)
+    step = model.mlp_train_step_flat(*flat, x, y, jnp.float32(0.25))
+    np.testing.assert_allclose(np.asarray(step[1]), np.asarray(g[0]), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,121 @@
+"""Layer-1 correctness: structured power iterations (paper section 3.4.1).
+
+Checks, in increasing strength:
+  1. the Pallas step kernel matches the jnp oracle step;
+  2. the jitted factorization matches the python-loop oracle;
+  3. the factorization matches a *full SVD* of the materialized gradient
+     (the thing the paper avoids computing) on the dominant components;
+  4. the effective-rank early stop detects synthetic low-rank gradients.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import power_iter_step, rankdad_factors
+from compile.kernels import ref
+
+
+def _rand(key, shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(2, 32),
+    h_in=st.integers(2, 96),
+    h_out=st.integers(2, 96),
+    r=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_step_matches_ref(n, h_in, h_out, r, seed):
+    k = jax.random.split(jax.random.PRNGKey(seed), 5)
+    a, d, g = _rand(k[0], (n, h_in)), _rand(k[1], (n, h_out)), _rand(k[2], (h_out,))
+    gs, sigmas = _rand(k[3], (r, h_out)), jnp.abs(_rand(k[4], (r,)))
+    got = np.asarray(power_iter_step(a, d, g, gs, sigmas))
+    want = np.asarray(ref.power_iter_step_ref(a, d, g, gs, sigmas))
+    # Hypothesis feeds arbitrary (non-orthonormal, large) gs rows, and the
+    # double deflation/orthogonalization amplifies f32 rounding by ~|gs|^2;
+    # compare relative to the output scale, not elementwise.
+    scale = max(1.0, float(np.linalg.norm(want)))
+    np.testing.assert_allclose(got / scale, want / scale, rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(4, 24),
+    h_in=st.integers(8, 64),
+    h_out=st.integers(8, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_factors_match_python_oracle(n, h_in, h_out, seed):
+    """The jitted factorization and the python-loop oracle take the same path
+    up to f32 rounding; near the theta boundary the iteration counts can flip
+    on chaotic tail components, so we compare what matters — the low-rank
+    *reconstruction* quality and the effective rank (within 1)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a, d = _rand(k1, (n, h_in)), _rand(k2, (n, h_out))
+    q_j, g_j, eff_j = rankdad_factors(a, d, max_rank=6, n_iters=10)
+    q_r, g_r, eff_r = ref.rankdad_factors_ref(a, d, max_rank=6, n_iters=10)
+    assert abs(int(eff_j) - int(eff_r)) <= 1
+    m = np.asarray(a.T @ d)
+    err_j = np.linalg.norm(m - np.asarray(q_j).T @ np.asarray(g_j))
+    err_r = np.linalg.norm(m - np.asarray(q_r).T @ np.asarray(g_r))
+    scale = np.linalg.norm(m)
+    assert err_j <= 1.05 * err_r + 0.05 * scale
+    assert err_r <= 1.05 * err_j + 0.05 * scale
+
+
+def test_dominant_component_matches_svd():
+    """The first extracted pair must match the SVD of M = A^T D."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+    a, d = _rand(k1, (16, 80)), _rand(k2, (16, 60))
+    m = np.asarray(a.T @ d)
+    u, s, vt = np.linalg.svd(m, full_matrices=False)
+    q_t, g_t, eff = rankdad_factors(a, d, max_rank=4, n_iters=60)
+    sigma0 = float(np.linalg.norm(np.asarray(q_t)[0]))
+    np.testing.assert_allclose(sigma0, s[0], rtol=1e-2)
+    # Right singular vector up to sign.
+    g0 = np.asarray(g_t)[0]
+    cos = abs(float(g0 @ vt[0]))
+    assert cos > 0.99
+
+
+def test_low_rank_reconstruction_error():
+    """Q^T G must be a near-least-squares-optimal rank-r approximation."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(11))
+    a, d = _rand(k1, (12, 64)), _rand(k2, (12, 48))
+    m = np.asarray(a.T @ d)
+    r = 6
+    q_t, g_t, eff = rankdad_factors(a, d, max_rank=r, n_iters=80)
+    approx = np.asarray(q_t).T @ np.asarray(g_t)
+    u, s, vt = np.linalg.svd(m, full_matrices=False)
+    optimal = (u[:, :r] * s[:r]) @ vt[:r]
+    err = np.linalg.norm(m - approx)
+    err_opt = np.linalg.norm(m - optimal)
+    assert err <= 1.25 * err_opt + 1e-6
+
+
+def test_effective_rank_detects_true_rank():
+    """A gradient of true rank 3 must stop at effective rank ~3, not max_rank
+    (the adaptive-bandwidth claim of section 3.4/5.2)."""
+    k = jax.random.split(jax.random.PRNGKey(13), 4)
+    # Build A, D sharing a 3-dim latent so M = A^T D has rank exactly 3.
+    basis = _rand(k[0], (3, 24))  # latent -> batch
+    a = basis.T @ _rand(k[1], (3, 96))
+    d = basis.T @ _rand(k[2], (3, 72))
+    q_t, g_t, eff = rankdad_factors(a, d, max_rank=10, n_iters=60)
+    assert int(eff) <= 4
+    approx = np.asarray(q_t).T @ np.asarray(g_t)
+    m = np.asarray(a.T @ d)
+    rel = np.linalg.norm(m - approx) / np.linalg.norm(m)
+    assert rel < 1e-2
+
+
+def test_rank_bounded_by_batch():
+    """Effective rank can never exceed N (the paper's upper bound)."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(17))
+    a, d = _rand(k1, (4, 64)), _rand(k2, (4, 64))
+    _, _, eff = rankdad_factors(a, d, max_rank=10, n_iters=60)
+    assert int(eff) <= 4

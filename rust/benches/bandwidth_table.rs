@@ -1,0 +1,28 @@
+//! Bench: measured site->aggregator bytes per synchronized step vs the
+//! paper's Θ bounds (sections 3.2-3.4), swept over layer width. Checks the
+//! orderings the paper claims: rank-dAD < edAD < dAD < dSGD for h >> N.
+//!
+//! Run: cargo bench --bench bandwidth_table
+
+use dad::coordinator::experiments::bandwidth_table;
+
+fn main() {
+    println!("== bandwidth: measured vs Θ (2 sites, batch 32/site) ==");
+    let rows = bandwidth_table(&[256, 512, 1024, 2048, 4096], 32);
+    println!("{:<14} {:>6} {:>14} {:>14} {:>7}", "algo", "h", "measured", "theta", "ratio");
+    for r in &rows {
+        println!(
+            "{:<14} {:>6} {:>14} {:>14} {:>7.2}",
+            r.algo, r.h, r.measured_up, r.theta_up,
+            r.measured_up as f64 / r.theta_up.max(1) as f64
+        );
+    }
+    // Assert the paper's ordering at every h >= 1024 (h >> N regime).
+    for &h in &[1024usize, 2048, 4096] {
+        let get = |name: &str| rows.iter().find(|r| r.algo == name && r.h == h).unwrap().measured_up;
+        assert!(get("rank-dad:4") < get("edad"), "h={h}");
+        assert!(get("edad") < get("dad"), "h={h}");
+        assert!(get("dad") < get("dsgd"), "h={h}");
+    }
+    println!("ordering rank-dad < edad < dad < dsgd holds for h in {{1024, 2048, 4096}}");
+}

@@ -1,0 +1,25 @@
+//! Bench: regenerate Figure 2 — the GRU equivalence curves on the
+//! SpokenArabicDigits-analog (pooled / dSGD / dAD / edAD coincide).
+//!
+//! Run: cargo bench --bench fig2_gru_equivalence
+
+use dad::coordinator::experiments::{fig2, Scale};
+
+fn main() {
+    let scale = std::env::var("DAD_SCALE").ok().and_then(|s| Scale::parse(&s)).unwrap_or(Scale::Quick);
+    println!("== Figure 2 (scale {scale:?}) ==");
+    let t0 = std::time::Instant::now();
+    let set = fig2(scale);
+    println!("{:<12} {:>10} {:>14}", "algo", "final AUC", "total bytes");
+    let mut aucs = vec![];
+    for ((name, series), (_, bytes)) in set.curves.iter().zip(&set.bytes) {
+        let last = series.last().unwrap();
+        println!("{:<12} {:>10.4} {:>14}", name, last.0, bytes);
+        aucs.push(last.0);
+    }
+    let spread = aucs.iter().cloned().fold(f32::MIN, f32::max)
+        - aucs.iter().cloned().fold(f32::MAX, f32::min);
+    println!("AUC spread: {spread:.4} (paper: curves coincide)");
+    println!("[{:.1}s] results/fig2.csv written", t0.elapsed().as_secs_f32());
+    assert!(spread < 0.10, "equivalence violated: spread {spread}");
+}

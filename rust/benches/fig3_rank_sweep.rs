@@ -1,0 +1,19 @@
+//! Bench: regenerate Figure 3 — rank-dAD vs PowerSGD test AUC for
+//! increasing rank on the MNIST-analog MLP. Paper: above rank ~3 both are
+//! equivalent; rank-dAD never loses.
+//!
+//! Run: cargo bench --bench fig3_rank_sweep
+
+use dad::coordinator::experiments::{fig3_mnist, Scale};
+
+fn main() {
+    let scale = std::env::var("DAD_SCALE").ok().and_then(|s| Scale::parse(&s)).unwrap_or(Scale::Quick);
+    println!("== Figure 3 / MNIST panel (scale {scale:?}) ==");
+    let t0 = std::time::Instant::now();
+    let set = fig3_mnist(scale);
+    println!("{:<14} {:>10} {:>14}", "algo", "final AUC", "total bytes");
+    for ((name, series), (_, bytes)) in set.curves.iter().zip(&set.bytes) {
+        println!("{:<14} {:>10.4} {:>14}", name, series.last().unwrap().0, bytes);
+    }
+    println!("[{:.1}s] results/fig3_mnist.csv written", t0.elapsed().as_secs_f32());
+}

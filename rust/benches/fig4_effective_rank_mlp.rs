@@ -1,0 +1,40 @@
+//! Bench: regenerate Figure 4 — effective gradient rank per layer during
+//! MLP/MNIST training (max rank 10). Paper: output layer's rank is lowest;
+//! ranks decrease during training.
+//!
+//! Run: cargo bench --bench fig4_effective_rank_mlp
+
+use dad::coordinator::experiments::{fig4, Scale};
+
+fn main() {
+    let scale = std::env::var("DAD_SCALE").ok().and_then(|s| Scale::parse(&s)).unwrap_or(Scale::Quick);
+    println!("== Figure 4 (scale {scale:?}) ==");
+    let t0 = std::time::Instant::now();
+    let curves = fig4(scale);
+    println!("mean effective rank per layer (per epoch):");
+    print!("{:<8}", "epoch");
+    for n in &curves.entry_names {
+        print!(" {n:>24}");
+    }
+    println!();
+    for (e, row) in curves.per_epoch.iter().enumerate() {
+        print!("{e:<8}");
+        for r in row {
+            print!(" {r:>24.2}");
+        }
+        println!();
+    }
+    let first = &curves.per_epoch[0];
+    let last = curves.per_epoch.last().unwrap();
+    let out_idx = curves.entry_names.len() - 1;
+    println!(
+        "output-layer rank {:.2} -> {:.2}; hidden {:.2} -> {:.2}",
+        first[out_idx], last[out_idx], first[0], last[0]
+    );
+    println!("[{:.1}s] results/fig4.csv written", t0.elapsed().as_secs_f32());
+    // Paper shape: output layer rank below the widest hidden layer's.
+    assert!(
+        last[out_idx] <= last[..out_idx].iter().cloned().fold(f32::MIN, f32::max) + 0.5,
+        "output layer should have the smallest effective rank"
+    );
+}

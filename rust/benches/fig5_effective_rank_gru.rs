@@ -1,0 +1,23 @@
+//! Bench: regenerate Figure 5 — effective rank per layer for the GRU on
+//! the four UEA-analog datasets (max rank 32). Paper: output layer lowest;
+//! classifier ranks decrease during training; recurrent layer decreases
+//! more gently.
+//!
+//! Run: cargo bench --bench fig5_effective_rank_gru
+
+use dad::coordinator::experiments::{fig5, Scale};
+
+fn main() {
+    let scale = std::env::var("DAD_SCALE").ok().and_then(|s| Scale::parse(&s)).unwrap_or(Scale::Quick);
+    println!("== Figure 5 (scale {scale:?}) ==");
+    let t0 = std::time::Instant::now();
+    for (name, curves) in fig5(scale) {
+        println!("--- {name} ---");
+        let first = &curves.per_epoch[0];
+        let last = curves.per_epoch.last().unwrap();
+        for (i, n) in curves.entry_names.iter().enumerate() {
+            println!("  {:<28} {:>6.2} -> {:>6.2}", n, first[i], last[i]);
+        }
+    }
+    println!("[{:.1}s] results/fig5_*.csv written", t0.elapsed().as_secs_f32());
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerate Figure 6 — GRU on the ArabicDigits-analog, rank-dAD
+//! vs PowerSGD per maximum rank. Paper: rank-dAD matches or beats PowerSGD.
+//!
+//! Run: cargo bench --bench fig6_gru_rank_sweep
+
+use dad::coordinator::experiments::{fig3_arabic, Scale};
+
+fn main() {
+    let scale = std::env::var("DAD_SCALE").ok().and_then(|s| Scale::parse(&s)).unwrap_or(Scale::Quick);
+    println!("== Figure 6 (scale {scale:?}) ==");
+    let t0 = std::time::Instant::now();
+    let set = fig3_arabic(scale);
+    println!("{:<14} {:>10} {:>14}", "algo", "final AUC", "total bytes");
+    for ((name, series), (_, bytes)) in set.curves.iter().zip(&set.bytes) {
+        println!("{:<14} {:>10.4} {:>14}", name, series.last().unwrap().0, bytes);
+    }
+    println!("[{:.1}s] results/fig6_gru_ranks.csv written", t0.elapsed().as_secs_f32());
+}

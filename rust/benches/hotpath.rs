@@ -1,0 +1,88 @@
+//! Bench: hot-path kernel timings (the §Perf working set) — matmul
+//! variants at the paper's layer shapes, structured power iterations vs a
+//! materialize-then-iterate baseline, the full local-stats step, and one
+//! complete dAD exchange. This is the harness the optimization pass
+//! iterates against.
+//!
+//! Run: cargo bench --bench hotpath
+
+use dad::bench::{bench, gflops, report};
+use dad::lowrank::rankdad_factors;
+use dad::nn::loss::one_hot;
+use dad::nn::model::{Batch, DistModel};
+use dad::nn::Mlp;
+use dad::tensor::{matmul, matmul_nt, matmul_tn, Matrix, Rng};
+
+fn main() {
+    let mut rng = Rng::new(1);
+    println!("== hotpath kernels ==  (threads: {})", dad::tensor::parallel::num_threads());
+
+    // matmul at the paper's three layer shapes (batch 64 = 2 sites x 32).
+    for &(m, k, n, tag) in &[
+        (64usize, 784usize, 1024usize, "fwd fc1  64x784 * 784x1024"),
+        (64, 1024, 1024, "fwd fc2  64x1024 * 1024x1024"),
+        (1024, 1024, 1024, "square   1024^3"),
+    ] {
+        let a = Matrix::randn(m, k, 1.0, &mut rng);
+        let b = Matrix::randn(k, n, 1.0, &mut rng);
+        let t = bench(3, 15, || matmul(&a, &b));
+        report(&format!("matmul {tag}"), t);
+        println!("{:<48} {:.2} GFLOP/s", "", gflops(&t, 2 * m * k * n));
+    }
+    // Gradient outer product and backward delta shapes.
+    let a = Matrix::randn(64, 1024, 1.0, &mut rng);
+    let d = Matrix::randn(64, 1024, 1.0, &mut rng);
+    let t = bench(3, 15, || matmul_tn(&a, &d));
+    report("grad outer AᵀΔ 1024x64x1024", t);
+    println!("{:<48} {:.2} GFLOP/s", "", gflops(&t, 2 * 64 * 1024 * 1024));
+    let w = Matrix::randn(1024, 1024, 1.0, &mut rng);
+    let t = bench(3, 15, || matmul_nt(&d, &w));
+    report("delta step ΔWᵀ 64x1024x1024", t);
+
+    // Structured power iterations (factored) vs materialized baseline.
+    let t_struct = bench(2, 10, || rankdad_factors(&a, &d, 10, 10, 1e-3));
+    report("rank-dad factors (structured, r=10, 10 it)", t_struct);
+    let t_mat = bench(2, 10, || {
+        // Baseline: materialize M = AᵀΔ, then the same iteration on M
+        // directly (the O(h^2) path of paper eq. 6).
+        let m = matmul_tn(&a, &d);
+        let mut g = vec![0.0f32; 1024];
+        g[0] = 1.0;
+        for _ in 0..10 * 10 {
+            let u = dad::tensor::matvec(&m, &g);
+            let g2 = dad::tensor::matvec_t(&m, &u);
+            let n = g2.iter().map(|x| x * x).sum::<f32>().sqrt();
+            for (gi, v) in g.iter_mut().zip(&g2) {
+                *gi = v / n;
+            }
+        }
+        g[0]
+    });
+    report("materialized power iteration baseline", t_mat);
+    println!(
+        "structured speedup vs materialized: {:.2}x",
+        t_mat.median_ns as f64 / t_struct.median_ns as f64
+    );
+
+    // Full local-stats step + dAD exchange on the paper MLP.
+    let mut mrng = Rng::new(42);
+    let mlp = Mlp::paper_mnist(&mut mrng);
+    let x = Matrix::rand_uniform(32, 784, 0.0, 1.0, &mut rng);
+    let labels: Vec<usize> = (0..32).map(|i| i % 10).collect();
+    let batch = Batch::Dense { x, y: one_hot(&labels, 10) };
+    let t = bench(2, 10, || mlp.local_stats(&batch));
+    report("mlp local_stats (batch 32, paper dims)", t);
+
+    use dad::algos::common::DistAlgorithm;
+    let batches = vec![batch.clone(), batch.clone()];
+    let t = bench(1, 8, || {
+        let mut cluster = dad::dist::Cluster::replicate(mlp.clone(), 2);
+        dad::algos::Dad.step(&mut cluster, &batches)
+    });
+    report("full dAD step (2 sites, incl. clone)", t);
+    let t = bench(1, 8, || {
+        let mut cluster = dad::dist::Cluster::replicate(mlp.clone(), 2);
+        dad::algos::Dsgd.step(&mut cluster, &batches)
+    });
+    report("full dSGD step (2 sites, incl. clone)", t);
+}

@@ -1,0 +1,176 @@
+//! Shared machinery for the distributed algorithms.
+
+use crate::dist::Cluster;
+use crate::nn::model::{Batch, DistModel};
+use crate::nn::stats::LocalStats;
+use crate::tensor::Matrix;
+
+/// Result of one synchronized distributed step. Exact algorithms guarantee
+/// `grads` is what *every* site computes; compressed ones guarantee all
+/// sites reconstruct the same approximation (so replicas never diverge).
+pub struct StepOutcome {
+    /// Batch-size-weighted mean training loss across sites.
+    pub loss: f32,
+    /// Synchronized global gradient, aligned with the model's param list.
+    pub grads: Vec<Matrix>,
+    /// rank-dAD telemetry: per stats entry, per site, the effective rank
+    /// chosen by the theta-stop. Empty for other algorithms.
+    pub eff_ranks: Vec<Vec<usize>>,
+    /// Bytes site->aggregator this step (sum over sites).
+    pub bytes_up: u64,
+    /// Bytes aggregator->sites this step (sum over receiving sites).
+    pub bytes_down: u64,
+}
+
+/// A distributed training algorithm: one synchronized step over per-site
+/// batches. Mutable to allow cross-step compressor state (PowerSGD's warm
+/// start + error feedback).
+pub trait DistAlgorithm<M: DistModel> {
+    fn name(&self) -> &'static str;
+    fn step(&mut self, cluster: &mut Cluster<M>, batches: &[Batch]) -> StepOutcome;
+}
+
+/// Per-site local statistics + the global row count (Σ output-delta rows),
+/// which sets the 1/(S*N) gradient scale.
+pub struct GatheredStats {
+    pub per_site: Vec<LocalStats>,
+    pub total_rows: usize,
+    pub site_rows: Vec<usize>,
+}
+
+pub fn gather_local_stats<M: DistModel>(cluster: &Cluster<M>, batches: &[Batch]) -> GatheredStats {
+    assert_eq!(cluster.n_sites(), batches.len(), "one batch per site");
+    let per_site: Vec<LocalStats> =
+        cluster.sites.iter().zip(batches).map(|(s, b)| s.model.local_stats(b)).collect();
+    let site_rows: Vec<usize> =
+        per_site.iter().map(|s| s.entries.last().expect("no stats entries").d.rows()).collect();
+    let total_rows = site_rows.iter().sum();
+    GatheredStats { per_site, total_rows, site_rows }
+}
+
+/// Batch-size-weighted mean loss (what the pooled model would report).
+pub fn weighted_loss(stats: &GatheredStats) -> f32 {
+    let num: f64 = stats
+        .per_site
+        .iter()
+        .zip(&stats.site_rows)
+        .map(|(s, &n)| s.loss as f64 * n as f64)
+        .sum();
+    (num / stats.total_rows as f64) as f32
+}
+
+/// dSGD-style exchange for `direct` gradients (embeddings, layer norms):
+/// average across sites, count bytes both ways. Returns (param_idx, grad)
+/// averaged — identical at every site. These parameters have no
+/// outer-product structure, so every algorithm (including dAD/edAD/rank-dAD)
+/// falls back to plain gradient averaging for them, exactly as the paper
+/// does implicitly by evaluating on architectures where they are absent.
+pub fn exchange_direct<M: DistModel>(
+    cluster: &mut Cluster<M>,
+    stats: &GatheredStats,
+) -> Vec<(usize, Matrix)> {
+    let n_direct = stats.per_site[0].direct.len();
+    if n_direct == 0 {
+        return vec![];
+    }
+    let scale = 1.0 / stats.total_rows as f32;
+    let mut out: Vec<(usize, Matrix)> = Vec::with_capacity(n_direct);
+    for di in 0..n_direct {
+        let idx = stats.per_site[0].direct[di].0;
+        let mut sum = stats.per_site[0].direct[di].1.clone();
+        for s in &stats.per_site[1..] {
+            debug_assert_eq!(s.direct[di].0, idx);
+            sum.axpy(1.0, &s.direct[di].1);
+        }
+        sum.scale_inplace(scale);
+        out.push((idx, sum));
+    }
+    // Bytes: each site uploads its direct grads once; the mean comes back.
+    for s in &stats.per_site {
+        let payload: Vec<&Matrix> = s.direct.iter().map(|(_, g)| g).collect();
+        cluster.send_to_agg("direct-grad", &payload);
+    }
+    let payload: Vec<&Matrix> = out.iter().map(|(_, g)| g).collect();
+    cluster.broadcast("direct-grad", &payload);
+    out
+}
+
+/// Concatenate per-site batches into one pooled batch (for the pooled
+/// baseline and for tests).
+pub fn concat_batches(batches: &[Batch]) -> Batch {
+    assert!(!batches.is_empty());
+    match &batches[0] {
+        Batch::Dense { .. } => {
+            let xs: Vec<&Matrix> = batches
+                .iter()
+                .map(|b| match b {
+                    Batch::Dense { x, .. } => x,
+                    _ => panic!("mixed batch kinds"),
+                })
+                .collect();
+            let ys: Vec<&Matrix> = batches
+                .iter()
+                .map(|b| match b {
+                    Batch::Dense { y, .. } => y,
+                    _ => unreachable!(),
+                })
+                .collect();
+            Batch::Dense { x: Matrix::vertcat(&xs), y: Matrix::vertcat(&ys) }
+        }
+        Batch::Seq { xs: first_xs, .. } => {
+            let t = first_xs.len();
+            let xs: Vec<Matrix> = (0..t)
+                .map(|ti| {
+                    let parts: Vec<&Matrix> = batches
+                        .iter()
+                        .map(|b| match b {
+                            Batch::Seq { xs, .. } => &xs[ti],
+                            _ => panic!("mixed batch kinds"),
+                        })
+                        .collect();
+                    Matrix::vertcat(&parts)
+                })
+                .collect();
+            let ys: Vec<&Matrix> = batches
+                .iter()
+                .map(|b| match b {
+                    Batch::Seq { y, .. } => y,
+                    _ => unreachable!(),
+                })
+                .collect();
+            Batch::Seq { xs, y: Matrix::vertcat(&ys) }
+        }
+        Batch::Tokens { t, .. } => {
+            let t = *t;
+            let mut ids = Vec::new();
+            let mut targets = Vec::new();
+            let mut btot = 0;
+            for b in batches {
+                match b {
+                    Batch::Tokens { b: bb, t: tt, ids: i, targets: tg } => {
+                        assert_eq!(*tt, t, "token batches must share T");
+                        btot += bb;
+                        ids.extend_from_slice(i);
+                        targets.extend_from_slice(tg);
+                    }
+                    _ => panic!("mixed batch kinds"),
+                }
+            }
+            Batch::Tokens { b: btot, t, ids, targets }
+        }
+    }
+}
+
+/// Snapshot ledger totals around a closure; returns (up_delta, down_delta).
+pub fn measure_bytes<M, F: FnOnce(&mut Cluster<M>) -> R, R>(
+    cluster: &mut Cluster<M>,
+    f: F,
+) -> (R, u64, u64) {
+    use crate::dist::Direction;
+    let up0 = cluster.ledger.total_dir(Direction::SiteToAgg);
+    let down0 = cluster.ledger.total_dir(Direction::AggToSite);
+    let r = f(cluster);
+    let up1 = cluster.ledger.total_dir(Direction::SiteToAgg);
+    let down1 = cluster.ledger.total_dir(Direction::AggToSite);
+    (r, up1 - up0, down1 - down0)
+}

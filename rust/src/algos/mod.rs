@@ -1,0 +1,262 @@
+//! The six training algorithms the paper evaluates, behind one trait:
+//!
+//! | algorithm | exactness | per-layer site->agg bytes |
+//! |---|---|---|
+//! | pooled    | oracle (single site)      | 0 |
+//! | dSGD      | exact                     | h_i * h_{i+1} |
+//! | dAD       | exact (Algorithm 1)       | N (h_i + h_{i+1}) |
+//! | edAD      | exact (Algorithm 2)       | N h_i (+ Δ_L once) |
+//! | rank-dAD  | low-rank, adaptive (§3.4) | r_eff (h_i + h_{i+1}), r_eff <= r |
+//! | PowerSGD  | low-rank, fixed (baseline)| r (h_i + h_{i+1}) |
+
+pub mod common;
+pub mod compressed;
+pub mod exact;
+pub mod p2p;
+
+pub use common::{concat_batches, DistAlgorithm, StepOutcome};
+pub use compressed::{PowerSgd, RankDad, RankDadConfig};
+pub use exact::{Dad, Dsgd, Edad, Pooled};
+pub use p2p::DadP2p;
+
+use crate::nn::model::DistModel;
+
+/// Algorithm selector (config/CLI surface).
+#[derive(Clone, Debug, PartialEq)]
+pub enum AlgoSpec {
+    Pooled,
+    Dsgd,
+    Dad,
+    /// Decentralized dAD (section 3.6): no aggregator, all-to-all stats.
+    DadP2p,
+    Edad,
+    RankDad { max_rank: usize, n_iters: usize, theta: f32 },
+    PowerSgd { rank: usize },
+}
+
+impl AlgoSpec {
+    pub fn parse(s: &str) -> Option<AlgoSpec> {
+        // Forms: pooled | dsgd | dad | edad | rank-dad[:r] | powersgd[:r]
+        let (name, arg) = match s.split_once(':') {
+            Some((n, a)) => (n, Some(a)),
+            None => (s, None),
+        };
+        let rank = |d: usize| arg.and_then(|a| a.parse().ok()).unwrap_or(d);
+        match name {
+            "pooled" => Some(AlgoSpec::Pooled),
+            "dsgd" => Some(AlgoSpec::Dsgd),
+            "dad" => Some(AlgoSpec::Dad),
+            "dad-p2p" | "dadp2p" => Some(AlgoSpec::DadP2p),
+            "edad" => Some(AlgoSpec::Edad),
+            "rank-dad" | "rankdad" => {
+                Some(AlgoSpec::RankDad { max_rank: rank(10), n_iters: 10, theta: 1e-3 })
+            }
+            "powersgd" | "power-sgd" => Some(AlgoSpec::PowerSgd { rank: rank(10) }),
+            _ => None,
+        }
+    }
+
+    pub fn build<M: DistModel>(&self) -> Box<dyn DistAlgorithm<M>> {
+        match *self {
+            AlgoSpec::Pooled => Box::new(Pooled),
+            AlgoSpec::Dsgd => Box::new(Dsgd),
+            AlgoSpec::Dad => Box::new(Dad),
+            AlgoSpec::DadP2p => Box::new(DadP2p),
+            AlgoSpec::Edad => Box::new(Edad),
+            AlgoSpec::RankDad { max_rank, n_iters, theta } => {
+                Box::new(RankDad { cfg: RankDadConfig { max_rank, n_iters, theta } })
+            }
+            AlgoSpec::PowerSgd { rank } => Box::new(PowerSgd::new(rank)),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            AlgoSpec::Pooled => "pooled".into(),
+            AlgoSpec::Dsgd => "dsgd".into(),
+            AlgoSpec::Dad => "dad".into(),
+            AlgoSpec::DadP2p => "dad-p2p".into(),
+            AlgoSpec::Edad => "edad".into(),
+            AlgoSpec::RankDad { max_rank, .. } => format!("rank-dad:{max_rank}"),
+            AlgoSpec::PowerSgd { rank } => format!("powersgd:{rank}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Cluster;
+    use crate::nn::loss::one_hot;
+    use crate::nn::model::Batch;
+    use crate::nn::{Activation, Mlp};
+    use crate::tensor::{Matrix, Rng};
+
+    fn setup(seed: u64) -> (Cluster<Mlp>, Vec<Batch>) {
+        let mut rng = Rng::new(seed);
+        let mlp = Mlp::new(&[12, 16, 10, 4], &[Activation::Relu, Activation::Tanh], &mut rng);
+        let cluster = Cluster::replicate(mlp, 2);
+        let batches: Vec<Batch> = (0..2)
+            .map(|s| {
+                let x = Matrix::randn(6, 12, 1.0, &mut rng);
+                // Disjoint labels per site — the paper's hard non-IID split.
+                let labels: Vec<usize> = (0..6).map(|i| (s * 2 + i % 2) as usize).collect();
+                Batch::Dense { x, y: one_hot(&labels, 4) }
+            })
+            .collect();
+        (cluster, batches)
+    }
+
+    /// THE core claim (paper §4.1, Table 2): dAD and edAD gradients are
+    /// exactly the pooled gradients; dSGD matches too. Tolerance reflects
+    /// f32 reduction-order noise only.
+    #[test]
+    fn exact_algorithms_match_pooled() {
+        let (mut cluster, batches) = setup(1);
+        let pooled = Pooled.step(&mut cluster, &batches);
+        let (mut c2, b2) = setup(1);
+        let dsgd = Dsgd.step(&mut c2, &b2);
+        let (mut c3, b3) = setup(1);
+        let dad = Dad.step(&mut c3, &b3);
+        let (mut c4, b4) = setup(1);
+        let edad = Edad.step(&mut c4, &b4);
+        for (i, pg) in pooled.grads.iter().enumerate() {
+            let e_dsgd = pg.max_abs_diff(&dsgd.grads[i]);
+            let e_dad = pg.max_abs_diff(&dad.grads[i]);
+            let e_edad = pg.max_abs_diff(&edad.grads[i]);
+            assert!(e_dsgd < 1e-5, "dsgd param {i}: {e_dsgd}");
+            assert!(e_dad < 1e-5, "dad param {i}: {e_dad}");
+            assert!(e_edad < 1e-5, "edad param {i}: {e_edad}");
+        }
+        assert!((pooled.loss - dad.loss).abs() < 1e-5);
+    }
+
+    /// Bandwidth ordering on the paper's regime (h >> N): edAD < dAD < dSGD.
+    #[test]
+    fn bandwidth_ordering_wide_layers() {
+        let mut rng = Rng::new(2);
+        let mlp = Mlp::new(&[64, 256, 256, 4], &[Activation::Relu, Activation::Relu], &mut rng);
+        let mk = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            let cluster = Cluster::replicate(mlp.clone(), 2);
+            let batches: Vec<Batch> = (0..2)
+                .map(|_| {
+                    let x = Matrix::randn(8, 64, 1.0, &mut rng);
+                    let labels: Vec<usize> = (0..8).map(|i| i % 4).collect();
+                    Batch::Dense { x, y: one_hot(&labels, 4) }
+                })
+                .collect();
+            (cluster, batches)
+        };
+        let (mut c1, b1) = mk(3);
+        let dsgd = Dsgd.step(&mut c1, &b1);
+        let (mut c2, b2) = mk(3);
+        let dad = Dad.step(&mut c2, &b2);
+        let (mut c3, b3) = mk(3);
+        let edad = Edad.step(&mut c3, &b3);
+        let (mut c4, b4) = mk(3);
+        let rdad = RankDad::new(4).step(&mut c4, &b4);
+        assert!(dad.bytes_up < dsgd.bytes_up, "dad {} !< dsgd {}", dad.bytes_up, dsgd.bytes_up);
+        assert!(edad.bytes_up < dad.bytes_up, "edad {} !< dad {}", edad.bytes_up, dad.bytes_up);
+        assert!(rdad.bytes_up < edad.bytes_up, "rank-dad {} !< edad {}", rdad.bytes_up, edad.bytes_up);
+    }
+
+    /// rank-dAD with rank >= N reconstructs the exact gradient (the stats
+    /// matrices have at most N independent rows).
+    #[test]
+    fn rankdad_full_rank_is_exact() {
+        let (mut cluster, batches) = setup(4);
+        let pooled = Pooled.step(&mut cluster, &batches);
+        let (mut c2, b2) = setup(4);
+        let mut algo = RankDad { cfg: RankDadConfig { max_rank: 6, n_iters: 80, theta: 1e-7 } };
+        let rdad = algo.step(&mut c2, &b2);
+        for (i, pg) in pooled.grads.iter().enumerate() {
+            let scale = pg.max_abs().max(1e-3);
+            let err = pg.max_abs_diff(&rdad.grads[i]) / scale;
+            assert!(err < 5e-2, "param {i}: rel err {err}");
+        }
+        // Effective ranks reported for every entry and site.
+        assert_eq!(rdad.eff_ranks.len(), 3);
+        for per_site in &rdad.eff_ranks {
+            assert_eq!(per_site.len(), 2);
+            for &r in per_site {
+                assert!(r <= 6);
+            }
+        }
+    }
+
+    /// PowerSGD error feedback: compressed updates accumulate toward the
+    /// true gradient over repeated steps on a fixed batch.
+    #[test]
+    fn powersgd_error_feedback_converges_on_fixed_batch() {
+        let (mut cluster, batches) = setup(5);
+        let pooled = Pooled.step(&mut cluster, &batches);
+        let (mut c2, b2) = setup(5);
+        let mut algo = PowerSgd::new(2);
+        let mut acc: Option<Vec<Matrix>> = None;
+        let steps = 12;
+        for _ in 0..steps {
+            let out = algo.step(&mut c2, &b2);
+            acc = Some(match acc {
+                None => out.grads,
+                Some(mut a) => {
+                    for (x, y) in a.iter_mut().zip(&out.grads) {
+                        x.axpy(1.0, y);
+                    }
+                    a
+                }
+            });
+        }
+        let acc = acc.unwrap();
+        // Mean applied gradient ≈ true gradient (error feedback drains).
+        for (i, pg) in pooled.grads.iter().enumerate() {
+            if pg.rows() == 1 {
+                continue; // biases are exact by construction
+            }
+            let mean = acc[i].scale(1.0 / steps as f32);
+            let rel = mean.sub(pg).fro_norm() / pg.fro_norm().max(1e-6);
+            assert!(rel < 0.2, "param {i}: rel {rel}");
+        }
+    }
+
+    #[test]
+    fn spec_parsing() {
+        assert_eq!(AlgoSpec::parse("dad"), Some(AlgoSpec::Dad));
+        assert_eq!(
+            AlgoSpec::parse("rank-dad:4"),
+            Some(AlgoSpec::RankDad { max_rank: 4, n_iters: 10, theta: 1e-3 })
+        );
+        assert_eq!(AlgoSpec::parse("powersgd:2"), Some(AlgoSpec::PowerSgd { rank: 2 }));
+        assert_eq!(AlgoSpec::parse("nope"), None);
+        assert_eq!(AlgoSpec::parse("rank-dad:4").unwrap().name(), "rank-dad:4");
+    }
+
+    /// GRU path: dAD == pooled on sequence batches too (paper §4.1.2).
+    #[test]
+    fn gru_dad_matches_pooled() {
+        use crate::nn::GruClassifier;
+        let mut rng = Rng::new(7);
+        let gru = GruClassifier::new(3, 4, &[6], 3, &mut rng);
+        let mk_batches = |rng: &mut Rng| {
+            (0..2)
+                .map(|_| {
+                    let xs: Vec<Matrix> = (0..3).map(|_| Matrix::randn(4, 3, 1.0, rng)).collect();
+                    let labels: Vec<usize> = (0..4).map(|i| i % 3).collect();
+                    Batch::Seq { xs, y: one_hot(&labels, 3) }
+                })
+                .collect::<Vec<_>>()
+        };
+        let mut rng_b = Rng::new(8);
+        let batches = mk_batches(&mut rng_b);
+        let mut c1 = Cluster::replicate(gru.clone(), 2);
+        let pooled = Pooled.step(&mut c1, &batches);
+        let mut c2 = Cluster::replicate(gru.clone(), 2);
+        let dad = Dad.step(&mut c2, &batches);
+        let mut c3 = Cluster::replicate(gru, 2);
+        let edad = Edad.step(&mut c3, &batches);
+        for (i, pg) in pooled.grads.iter().enumerate() {
+            assert!(pg.max_abs_diff(&dad.grads[i]) < 1e-5, "dad param {i}");
+            assert!(pg.max_abs_diff(&edad.grads[i]) < 1e-5, "edad param {i}");
+        }
+    }
+}

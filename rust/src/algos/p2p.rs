@@ -1,0 +1,147 @@
+//! Peer-to-peer dAD — the paper's section 3.6 extension: "all of the
+//! methods presented could be ameliorated to peer-to-peer communication,
+//! where each local site can serve as an aggregator for what is received
+//! from other peers."
+//!
+//! Every site broadcasts its (A, Δ) statistics directly to the other S-1
+//! peers; each site then vertcats everything it holds (its own stats plus
+//! the received ones, in canonical site order) and computes the exact
+//! global gradient locally. No trusted aggregator exists, and the
+//! round-trip latency of the star is replaced by a single exchange phase.
+//!
+//! Bytes: each site sends N(h_i + h_{i+1}) per layer to each of the S-1
+//! peers — total S(S-1)·N·Σ(h_i+h_{i+1}); the star's down-link broadcast
+//! disappears. For S=2 this is *half* the star topology's total traffic
+//! (no aggregator echo); the crossover versus the star is at S where
+//! (S-1) ≥ 1 + S (never for the up+down total), i.e. p2p always ships
+//! fewer total bytes but spreads them across S uplinks.
+
+use crate::algos::common::{
+    gather_local_stats, weighted_loss, DistAlgorithm, StepOutcome,
+};
+use crate::dist::{Cluster, Direction};
+use crate::nn::model::{Batch, DistModel};
+use crate::nn::stats::{assemble_grads, concat_stats, StatsEntry};
+use crate::tensor::Matrix;
+
+/// dAD over a fully-connected peer topology (no aggregator).
+pub struct DadP2p;
+
+impl<M: DistModel> DistAlgorithm<M> for DadP2p {
+    fn name(&self) -> &'static str {
+        "dad-p2p"
+    }
+
+    fn step(&mut self, cluster: &mut Cluster<M>, batches: &[Batch]) -> StepOutcome {
+        cluster.next_step();
+        let p2p0 = cluster.ledger.total_dir(Direction::PeerToPeer);
+        let stats = gather_local_stats(cluster, batches);
+        let shapes = cluster.sites[0].model.param_shapes();
+        let scale = 1.0 / stats.total_rows as f32;
+        // Every site sends all of its stats entries to every peer.
+        for s in &stats.per_site {
+            for e in &s.entries {
+                cluster.send_p2p("acts", &[&e.a]);
+                cluster.send_p2p("deltas", &[&e.d]);
+            }
+            let direct_refs: Vec<&Matrix> = s.direct.iter().map(|(_, g)| g).collect();
+            if !direct_refs.is_empty() {
+                cluster.send_p2p("direct-grad", &direct_refs);
+            }
+        }
+        // Each site now holds the full statistic set; vertcat in canonical
+        // site order (deterministic everywhere) and assemble.
+        let entry_refs: Vec<&[StatsEntry]> =
+            stats.per_site.iter().map(|s| &s.entries[..]).collect();
+        let cat = concat_stats(&entry_refs);
+        // Direct grads: every peer averages the copies it received.
+        let mut direct: Vec<(usize, Matrix)> = Vec::new();
+        for di in 0..stats.per_site[0].direct.len() {
+            let idx = stats.per_site[0].direct[di].0;
+            let mut sum = stats.per_site[0].direct[di].1.clone();
+            for s in &stats.per_site[1..] {
+                sum.axpy(1.0, &s.direct[di].1);
+            }
+            sum.scale_inplace(scale);
+            direct.push((idx, sum));
+        }
+        let grads = assemble_grads(&shapes, &cat, &direct, scale, 1.0);
+        let p2p1 = cluster.ledger.total_dir(Direction::PeerToPeer);
+        StepOutcome {
+            loss: weighted_loss(&stats),
+            grads,
+            eff_ranks: vec![],
+            // P2P has no star directions; report the exchange as up-bytes.
+            bytes_up: p2p1 - p2p0,
+            bytes_down: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algos::{Dad, Pooled};
+    use crate::nn::loss::one_hot;
+    use crate::nn::{Activation, Mlp};
+    use crate::tensor::Rng;
+
+    fn setup(sites: usize) -> (Mlp, Vec<Batch>) {
+        let mut rng = Rng::new(61);
+        let mlp = Mlp::new(&[10, 14, 4], &[Activation::Relu], &mut rng);
+        let batches = (0..sites)
+            .map(|_| {
+                let x = Matrix::randn(5, 10, 1.0, &mut rng);
+                let labels: Vec<usize> = (0..5).map(|i| i % 4).collect();
+                Batch::Dense { x, y: one_hot(&labels, 4) }
+            })
+            .collect();
+        (mlp, batches)
+    }
+
+    /// Decentralized dAD computes the same exact gradient as star dAD and
+    /// the pooled oracle (section 3.6's claim).
+    #[test]
+    fn p2p_matches_star_and_pooled() {
+        for sites in [2usize, 3, 4] {
+            let (mlp, batches) = setup(sites);
+            let mut c1 = Cluster::replicate(mlp.clone(), sites);
+            let pooled = Pooled.step(&mut c1, &batches);
+            let mut c2 = Cluster::replicate(mlp.clone(), sites);
+            let star = Dad.step(&mut c2, &batches);
+            let mut c3 = Cluster::replicate(mlp, sites);
+            let p2p = DadP2p.step(&mut c3, &batches);
+            for (i, pg) in pooled.grads.iter().enumerate() {
+                assert!(pg.max_abs_diff(&star.grads[i]) < 1e-5, "S={sites} star param {i}");
+                assert!(pg.max_abs_diff(&p2p.grads[i]) < 1e-5, "S={sites} p2p param {i}");
+            }
+        }
+    }
+
+    /// At S=2 the p2p exchange ships fewer total bytes than the star's
+    /// up+down (no aggregator echo); per-peer payloads scale with (S-1).
+    #[test]
+    fn p2p_bytes_scale_with_peers() {
+        let (mlp, batches2) = setup(2);
+        let mut c = Cluster::replicate(mlp.clone(), 2);
+        let star = Dad.step(&mut c, &batches2);
+        let mut c2 = Cluster::replicate(mlp.clone(), 2);
+        let p2p2 = DadP2p.step(&mut c2, &batches2);
+        assert!(p2p2.bytes_up < star.bytes_up + star.bytes_down);
+        let (mlp3, batches3) = setup(4);
+        let mut c3 = Cluster::replicate(mlp3, 4);
+        let p2p4 = DadP2p.step(&mut c3, &batches3);
+        // 4 sites, 3 receivers each: 4*3=12 site-pair payloads vs 2*1=2.
+        assert!(p2p4.bytes_up > p2p2.bytes_up * 4);
+    }
+
+    /// The ledger files p2p traffic under its own direction.
+    #[test]
+    fn p2p_direction_recorded() {
+        let (mlp, batches) = setup(2);
+        let mut c = Cluster::replicate(mlp, 2);
+        let _ = DadP2p.step(&mut c, &batches);
+        assert!(c.ledger.total_dir(Direction::PeerToPeer) > 0);
+        assert_eq!(c.ledger.total_dir(Direction::AggToSite), 0);
+    }
+}

@@ -1,0 +1,87 @@
+//! Benchmark harness (criterion is unavailable offline): warmup + sampled
+//! timing with median/p10/p90, and a tiny table printer. `cargo bench`
+//! targets use `harness = false` and drive this directly.
+
+use std::time::Instant;
+
+/// Timing result in nanoseconds.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub median_ns: u128,
+    pub p10_ns: u128,
+    pub p90_ns: u128,
+    pub samples: usize,
+}
+
+impl Timing {
+    pub fn human(&self) -> String {
+        fn fmt(ns: u128) -> String {
+            if ns >= 1_000_000_000 {
+                format!("{:.2} s", ns as f64 / 1e9)
+            } else if ns >= 1_000_000 {
+                format!("{:.2} ms", ns as f64 / 1e6)
+            } else if ns >= 1_000 {
+                format!("{:.2} µs", ns as f64 / 1e3)
+            } else {
+                format!("{ns} ns")
+            }
+        }
+        format!("{} [{} .. {}]", fmt(self.median_ns), fmt(self.p10_ns), fmt(self.p90_ns))
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs, then `samples` timed runs.
+pub fn bench<R>(warmup: usize, samples: usize, mut f: impl FnMut() -> R) -> Timing {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times: Vec<u128> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_nanos());
+    }
+    times.sort_unstable();
+    let n = times.len();
+    Timing {
+        median_ns: times[n / 2],
+        p10_ns: times[n / 10],
+        p90_ns: times[(n * 9) / 10],
+        samples: n,
+    }
+}
+
+/// Named benchmark line, criterion-style output.
+pub fn report(name: &str, t: Timing) {
+    println!("{name:<48} {}", t.human());
+}
+
+/// Throughput helper: GFLOP/s given flops per run.
+pub fn gflops(t: &Timing, flops: usize) -> f64 {
+    flops as f64 / t.median_ns as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_orders() {
+        let t = bench(1, 20, || {
+            let mut s = 0u64;
+            for i in 0..10_000u64 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(t.p10_ns <= t.median_ns && t.median_ns <= t.p90_ns);
+        assert_eq!(t.samples, 20);
+    }
+
+    #[test]
+    fn human_units() {
+        let t = Timing { median_ns: 2_500_000, p10_ns: 900, p90_ns: 3_000_000_000, samples: 1 };
+        let s = t.human();
+        assert!(s.contains("ms") && s.contains("ns") && s.contains("s"), "{s}");
+    }
+}

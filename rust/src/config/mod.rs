@@ -1,0 +1,8 @@
+//! Configuration substrate: a TOML-subset parser and a CLI argument parser
+//! (no clap/serde offline — both are built here and unit-tested).
+
+pub mod args;
+pub mod toml_lite;
+
+pub use args::Args;
+pub use toml_lite::TomlLite;

@@ -1,0 +1,202 @@
+//! Minimal TOML-subset parser: `[section]` headers, `key = value` lines,
+//! strings ("..."), integers, floats, booleans, and flat arrays of those.
+//! Enough for experiment config files; not a general TOML implementation.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config: section -> key -> value ("" is the root section).
+#[derive(Debug, Default, Clone)]
+pub struct TomlLite {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl TomlLite {
+    pub fn parse(text: &str) -> Result<TomlLite, String> {
+        let mut out = TomlLite::default();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(format!("line {}: malformed section header", ln + 1));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", ln + 1))?;
+            let value = parse_value(val.trim()).map_err(|e| format!("line {}: {e}", ln + 1))?;
+            out.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), value);
+        }
+        Ok(out)
+    }
+
+    pub fn load(path: &str) -> Result<TomlLite, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        TomlLite::parse(&text)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
+        self.get(section, key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn int_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(|v| v.as_int()).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_float()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside of quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if s.starts_with('"') {
+        if !s.ends_with('"') || s.len() < 2 {
+            return Err("unterminated string".into());
+        }
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            return Err("unterminated array".into());
+        }
+        let inner = &s[1..s.len() - 1];
+        if inner.trim().is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        let items: Result<Vec<Value>, String> =
+            inner.split(',').map(|i| parse_value(i.trim())).collect();
+        return Ok(Value::Array(items?));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let text = r#"
+# experiment config
+name = "fig1"        # inline comment
+[train]
+epochs = 50
+lr = 1e-4
+non_iid = true
+ranks = [1, 2, 4]
+"#;
+        let cfg = TomlLite::parse(text).unwrap();
+        assert_eq!(cfg.str_or("", "name", "?"), "fig1");
+        assert_eq!(cfg.int_or("train", "epochs", 0), 50);
+        assert!((cfg.float_or("train", "lr", 0.0) - 1e-4).abs() < 1e-12);
+        assert!(cfg.bool_or("train", "non_iid", false));
+        match cfg.get("train", "ranks") {
+            Some(Value::Array(a)) => assert_eq!(a.len(), 3),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let cfg = TomlLite::parse("").unwrap();
+        assert_eq!(cfg.int_or("x", "y", 7), 7);
+    }
+
+    #[test]
+    fn errors_are_located() {
+        let err = TomlLite::parse("[broken\n").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+        let err = TomlLite::parse("key value\n").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let cfg = TomlLite::parse("s = \"a#b\"").unwrap();
+        assert_eq!(cfg.str_or("", "s", ""), "a#b");
+    }
+}

@@ -1,0 +1,8 @@
+//! Layer-3 coordinator: the training loop over the simulated cluster, the
+//! experiment drivers for every paper table/figure, and update schedules.
+
+pub mod experiments;
+pub mod trainer;
+
+pub use experiments::Scale;
+pub use trainer::{evaluate, fold_mean_auc, train, DataSource, Schedule, TrainLog, TrainSpec};

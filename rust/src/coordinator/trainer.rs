@@ -1,0 +1,394 @@
+//! The training coordinator: epoch loops over the simulated cluster,
+//! synchronized algorithm steps, per-epoch evaluation, bandwidth/rank
+//! telemetry, update schedules and the k-fold driver.
+//!
+//! This is the Layer-3 entry point the paper's experiments run through:
+//! `TrainRun::new(model, spec).train(shards, test)` reproduces one curve of
+//! Figures 1-6; `kfold_mean` aggregates the 5-fold averages the paper plots.
+
+use crate::algos::AlgoSpec;
+use crate::data::BatchIter;
+use crate::dist::Cluster;
+use crate::metrics::{accuracy, multiclass_auc};
+use crate::nn::model::{Batch, DistModel};
+use crate::nn::Adam;
+use crate::tensor::{Matrix, Rng};
+
+/// Synchronization schedule (section 2's "update schedules are orthogonal
+/// to the shared statistic" — exercised by the ablation bench).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Schedule {
+    /// Synchronize every batch (all paper experiments).
+    EveryBatch,
+    /// Local steps between syncs; every k-th batch runs the distributed
+    /// algorithm (statistics can reconstruct gradients at any point, so the
+    /// payload is unchanged — only the frequency drops).
+    Periodic(usize),
+}
+
+/// Training configuration for one run.
+#[derive(Clone, Debug)]
+pub struct TrainSpec {
+    pub algo: AlgoSpec,
+    pub n_sites: usize,
+    pub batch_per_site: usize,
+    pub epochs: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub schedule: Schedule,
+}
+
+impl Default for TrainSpec {
+    fn default() -> Self {
+        // The paper's settings: Adam(1e-4), batch 32/site, 2 sites.
+        TrainSpec {
+            algo: AlgoSpec::Dad,
+            n_sites: 2,
+            batch_per_site: 32,
+            epochs: 50,
+            lr: 1e-4,
+            seed: 13,
+            schedule: Schedule::EveryBatch,
+        }
+    }
+}
+
+/// Per-epoch telemetry.
+#[derive(Clone, Debug)]
+pub struct EpochLog {
+    pub epoch: usize,
+    pub train_loss: f32,
+    pub test_auc: f32,
+    pub test_acc: f32,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    /// Mean effective rank per stats entry (rank-dAD only; NaN otherwise).
+    pub mean_eff_rank: Vec<f32>,
+}
+
+/// Full run log.
+#[derive(Clone, Debug)]
+pub struct TrainLog {
+    pub algo: String,
+    pub epochs: Vec<EpochLog>,
+    pub sim_time_s: f64,
+    pub entry_names: Vec<String>,
+}
+
+impl TrainLog {
+    pub fn final_auc(&self) -> f32 {
+        self.epochs.last().map(|e| e.test_auc).unwrap_or(0.5)
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.epochs.iter().map(|e| e.bytes_up + e.bytes_down).sum()
+    }
+}
+
+/// Anything that can produce batches from example indices (DenseDataset,
+/// SeqDataset — see `crate::data`).
+pub trait DataSource {
+    fn len(&self) -> usize;
+    fn make_batch(&self, idx: &[usize]) -> Batch;
+    fn labels(&self) -> &[usize];
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl DataSource for crate::data::DenseDataset {
+    fn len(&self) -> usize {
+        self.labels.len()
+    }
+    fn make_batch(&self, idx: &[usize]) -> Batch {
+        self.batch(idx)
+    }
+    fn labels(&self) -> &[usize] {
+        &self.labels
+    }
+}
+
+impl DataSource for crate::data::SeqDataset {
+    fn len(&self) -> usize {
+        self.labels.len()
+    }
+    fn make_batch(&self, idx: &[usize]) -> Batch {
+        self.batch(idx)
+    }
+    fn labels(&self) -> &[usize] {
+        &self.labels
+    }
+}
+
+/// Train `model` under `spec` on per-site index shards of `data`,
+/// evaluating on `test` after every epoch.
+pub fn train<M: DistModel + Clone, D: DataSource>(
+    model: M,
+    spec: &TrainSpec,
+    data: &D,
+    shards: &[Vec<usize>],
+    test: &D,
+) -> TrainLog {
+    let pooled = spec.algo == AlgoSpec::Pooled;
+    let n_replicas = if pooled { 1 } else { spec.n_sites };
+    let mut cluster = Cluster::replicate(model, n_replicas);
+    let mut algo = spec.algo.build::<M>();
+    let shapes = cluster.sites[0].model.param_shapes();
+    let mut params: Vec<Matrix> =
+        cluster.sites[0].model.params().into_iter().cloned().collect();
+    let mut opt = Adam::new(spec.lr, &shapes);
+    let mut rng = Rng::new(spec.seed);
+    let entry_names = cluster.sites[0].model.entry_names();
+    let n_entries = cluster.sites[0].model.local_stats_entry_count();
+
+    let mut epochs = Vec::with_capacity(spec.epochs);
+    for epoch in 0..spec.epochs {
+        // Per-site shuffled batch iterators; lockstep over the minimum
+        // number of batches (paper: equal shards, equal batch counts).
+        let mut iters: Vec<BatchIter> = shards
+            .iter()
+            .map(|s| BatchIter::new(s.len(), spec.batch_per_site, &mut rng))
+            .collect();
+        let n_steps = iters.iter().map(|i| i.n_batches()).min().unwrap_or(0);
+        let mut loss_sum = 0.0f64;
+        let mut bytes_up = 0u64;
+        let mut bytes_down = 0u64;
+        let mut rank_sums = vec![0.0f64; n_entries];
+        let mut rank_count = 0usize;
+        for step in 0..n_steps {
+            let batches: Vec<Batch> = iters
+                .iter_mut()
+                .zip(shards)
+                .map(|(it, shard)| {
+                    let local = it.next().expect("batch iterator exhausted");
+                    let idx: Vec<usize> = local.iter().map(|&i| shard[i]).collect();
+                    data.make_batch(&idx)
+                })
+                .collect();
+            let synchronize = match spec.schedule {
+                Schedule::EveryBatch => true,
+                Schedule::Periodic(k) => step % k.max(1) == 0,
+            };
+            let outcome = if synchronize || pooled {
+                algo.step(&mut cluster, &batches)
+            } else {
+                // Local phase of the periodic schedule: every site applies
+                // its own local gradient; replicas diverge until next sync.
+                local_step(&mut cluster, &batches, &shapes)
+            };
+            loss_sum += outcome.loss as f64;
+            bytes_up += outcome.bytes_up;
+            bytes_down += outcome.bytes_down;
+            if !outcome.eff_ranks.is_empty() {
+                for (ei, per_site) in outcome.eff_ranks.iter().enumerate() {
+                    let mean: f64 =
+                        per_site.iter().map(|&r| r as f64).sum::<f64>() / per_site.len() as f64;
+                    rank_sums[ei] += mean;
+                }
+                rank_count += 1;
+            }
+            if synchronize || pooled {
+                // Identical gradient everywhere: advance canonical params,
+                // install on every replica.
+                opt.step(&mut params, &outcome.grads);
+                for site in &mut cluster.sites {
+                    site.model.set_params(&params);
+                }
+            }
+        }
+        // Evaluation (site 0's replica; all replicas are identical under
+        // EveryBatch).
+        let (test_auc, test_acc) = evaluate(&cluster.sites[0].model, test);
+        let mean_eff_rank: Vec<f32> = rank_sums
+            .iter()
+            .map(|&s| if rank_count == 0 { f32::NAN } else { (s / rank_count as f64) as f32 })
+            .collect();
+        epochs.push(EpochLog {
+            epoch,
+            train_loss: (loss_sum / n_steps.max(1) as f64) as f32,
+            test_auc,
+            test_acc,
+            bytes_up,
+            bytes_down,
+            mean_eff_rank,
+        });
+    }
+    TrainLog {
+        algo: spec.algo.name(),
+        epochs,
+        sim_time_s: cluster.sim_time_s,
+        entry_names,
+    }
+}
+
+/// A purely local step (periodic schedule's off-sync phase): each site
+/// applies its own gradient with a site-local one-step SGD at the Adam lr
+/// scale. No communication.
+fn local_step<M: DistModel>(
+    cluster: &mut Cluster<M>,
+    batches: &[Batch],
+    shapes: &[(usize, usize)],
+) -> crate::algos::StepOutcome {
+    let mut losses = 0.0f32;
+    for (site, batch) in cluster.sites.iter_mut().zip(batches) {
+        let stats = site.model.local_stats(batch);
+        let rows = stats.entries.last().unwrap().d.rows();
+        let grads = stats.assemble_grads(shapes, 1.0 / rows as f32, 1.0 / rows as f32);
+        let mut params: Vec<Matrix> = site.model.params().into_iter().cloned().collect();
+        for (p, g) in params.iter_mut().zip(&grads) {
+            p.axpy(-1e-4, g);
+        }
+        site.model.set_params(&params);
+        losses += stats.loss;
+    }
+    crate::algos::StepOutcome {
+        loss: losses / batches.len() as f32,
+        grads: shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect(),
+        eff_ranks: vec![],
+        bytes_up: 0,
+        bytes_down: 0,
+    }
+}
+
+/// Chunked test-set evaluation: (macro OvR AUC, accuracy).
+pub fn evaluate<M: DistModel, D: DataSource>(model: &M, test: &D) -> (f32, f32) {
+    let n = test.len();
+    if n == 0 {
+        return (0.5, 0.0);
+    }
+    let chunk = 256;
+    let mut all_scores: Vec<Matrix> = Vec::new();
+    let mut lo = 0;
+    while lo < n {
+        let hi = (lo + chunk).min(n);
+        let idx: Vec<usize> = (lo..hi).collect();
+        let batch = test.make_batch(&idx);
+        all_scores.push(model.predict(&batch));
+        lo = hi;
+    }
+    let refs: Vec<&Matrix> = all_scores.iter().collect();
+    let scores = Matrix::vertcat(&refs);
+    (multiclass_auc(&scores, test.labels()), accuracy(&scores, test.labels()))
+}
+
+/// Mean curve across folds: average test AUC per epoch (the paper's plotted
+/// quantity), with the fold standard deviation.
+pub fn fold_mean_auc(logs: &[TrainLog]) -> Vec<(f32, f32)> {
+    assert!(!logs.is_empty());
+    let n_epochs = logs[0].epochs.len();
+    (0..n_epochs)
+        .map(|e| {
+            let vals: Vec<f32> = logs.iter().map(|l| l.epochs[e].test_auc).collect();
+            let mean = vals.iter().sum::<f32>() / vals.len() as f32;
+            let var =
+                vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / vals.len() as f32;
+            (mean, var.sqrt())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{mnist_like, split_by_label};
+    use crate::nn::{Activation, Mlp};
+
+    fn small_mlp(seed: u64) -> Mlp {
+        let mut rng = Rng::new(seed);
+        Mlp::new(&[784, 32, 10], &[Activation::Relu], &mut rng)
+    }
+
+    fn spec(algo: AlgoSpec, epochs: usize) -> TrainSpec {
+        TrainSpec { algo, epochs, batch_per_site: 16, lr: 1e-3, ..Default::default() }
+    }
+
+    #[test]
+    fn training_improves_auc_and_exact_algos_agree() {
+        let mut rng = Rng::new(5);
+        // One generator call => one set of class prototypes; train and test
+        // must share them (they are different draws of the same classes).
+        let full = mnist_like(520, &mut rng);
+        let train_ds = full.subset(&(0..400).collect::<Vec<_>>());
+        let test_ds = full.subset(&(400..520).collect::<Vec<_>>());
+        let shards = split_by_label(&train_ds.labels, 10, 2);
+
+        let log_dad = train(small_mlp(1), &spec(AlgoSpec::Dad, 3), &train_ds, &shards, &test_ds);
+        assert!(log_dad.final_auc() > 0.8, "dAD AUC {}", log_dad.final_auc());
+        // Exact equivalence: dAD and dSGD produce identical trajectories up
+        // to f32 reduction order => final AUC within noise.
+        let log_dsgd = train(small_mlp(1), &spec(AlgoSpec::Dsgd, 3), &train_ds, &shards, &test_ds);
+        assert!(
+            (log_dad.final_auc() - log_dsgd.final_auc()).abs() < 2e-2,
+            "dad {} vs dsgd {}",
+            log_dad.final_auc(),
+            log_dsgd.final_auc()
+        );
+        // Bandwidth: dAD ships less than dSGD on this architecture.
+        assert!(log_dad.total_bytes() < log_dsgd.total_bytes());
+    }
+
+    #[test]
+    fn pooled_runs_without_communication() {
+        let mut rng = Rng::new(6);
+        let full = mnist_like(260, &mut rng);
+        let train_ds = full.subset(&(0..200).collect::<Vec<_>>());
+        let test_ds = full.subset(&(200..260).collect::<Vec<_>>());
+        let shards = split_by_label(&train_ds.labels, 10, 2);
+        let log = train(small_mlp(2), &spec(AlgoSpec::Pooled, 3), &train_ds, &shards, &test_ds);
+        assert_eq!(log.total_bytes(), 0);
+        assert!(log.final_auc() > 0.65, "pooled AUC {}", log.final_auc());
+    }
+
+    #[test]
+    fn rankdad_records_effective_ranks() {
+        let mut rng = Rng::new(7);
+        let full = mnist_like(260, &mut rng);
+        let train_ds = full.subset(&(0..200).collect::<Vec<_>>());
+        let test_ds = full.subset(&(200..260).collect::<Vec<_>>());
+        let shards = split_by_label(&train_ds.labels, 10, 2);
+        let algo = AlgoSpec::RankDad { max_rank: 4, n_iters: 6, theta: 1e-3 };
+        let log = train(small_mlp(3), &spec(algo, 2), &train_ds, &shards, &test_ds);
+        for e in &log.epochs {
+            assert_eq!(e.mean_eff_rank.len(), 2); // two layers
+            for &r in &e.mean_eff_rank {
+                assert!(r.is_finite() && r > 0.0 && r <= 4.0, "rank {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn periodic_schedule_reduces_bytes() {
+        let mut rng = Rng::new(8);
+        let full = mnist_like(360, &mut rng);
+        let train_ds = full.subset(&(0..300).collect::<Vec<_>>());
+        let test_ds = full.subset(&(300..360).collect::<Vec<_>>());
+        let shards = split_by_label(&train_ds.labels, 10, 2);
+        let every = train(small_mlp(4), &spec(AlgoSpec::Dad, 2), &train_ds, &shards, &test_ds);
+        let mut p = spec(AlgoSpec::Dad, 2);
+        p.schedule = Schedule::Periodic(3);
+        let periodic = train(small_mlp(4), &p, &train_ds, &shards, &test_ds);
+        assert!(periodic.total_bytes() < every.total_bytes());
+        assert!(periodic.total_bytes() > 0);
+    }
+
+    #[test]
+    fn fold_mean_aggregates() {
+        let mk = |auc: f32| TrainLog {
+            algo: "x".into(),
+            epochs: vec![EpochLog {
+                epoch: 0,
+                train_loss: 1.0,
+                test_auc: auc,
+                test_acc: 0.5,
+                bytes_up: 0,
+                bytes_down: 0,
+                mean_eff_rank: vec![],
+            }],
+            sim_time_s: 0.0,
+            entry_names: vec![],
+        };
+        let m = fold_mean_auc(&[mk(0.8), mk(0.9)]);
+        assert!((m[0].0 - 0.85).abs() < 1e-6);
+        assert!(m[0].1 > 0.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Datasets and partitioning: synthetic MNIST/UEA analogs (DESIGN.md
+//! "Substitutions"), non-IID label sharding, k-fold CV and batching.
+
+pub mod partition;
+pub mod synth;
+
+pub use partition::{kfold, split_by_label, split_iid, BatchIter};
+pub use synth::{
+    arabic_digits_like, mnist_like, natops_like, pems_sf_like, pen_digits_like, token_corpus,
+    DenseDataset, SeqDataset,
+};

@@ -1,0 +1,139 @@
+//! Data partitioning: non-IID label splits (the paper's hard case — "no one
+//! class can be found on more than one site"), IID splits, and k-fold
+//! cross-validation (k=5 in all paper experiments).
+
+use crate::tensor::Rng;
+
+/// Split example indices across `n_sites` so that each *class* lives on
+/// exactly one site (paper section 4.1.1). Classes are dealt round-robin to
+/// sites; examples follow their class.
+pub fn split_by_label(labels: &[usize], classes: usize, n_sites: usize) -> Vec<Vec<usize>> {
+    let mut shards: Vec<Vec<usize>> = vec![Vec::new(); n_sites];
+    for (i, &l) in labels.iter().enumerate() {
+        shards[l % n_sites].push(i);
+        let _ = classes;
+    }
+    shards
+}
+
+/// IID split: shuffle and deal round-robin.
+pub fn split_iid(n: usize, n_sites: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    let perm = rng.permutation(n);
+    let mut shards: Vec<Vec<usize>> = vec![Vec::new(); n_sites];
+    for (pos, &i) in perm.iter().enumerate() {
+        shards[pos % n_sites].push(i);
+    }
+    shards
+}
+
+/// k-fold split: returns (train_idx, test_idx) per fold, stratification-free
+/// (the paper reports plain 5-fold CV).
+pub fn kfold(n: usize, k: usize, rng: &mut Rng) -> Vec<(Vec<usize>, Vec<usize>)> {
+    let perm = rng.permutation(n);
+    let fold_size = n / k;
+    (0..k)
+        .map(|f| {
+            let lo = f * fold_size;
+            let hi = if f + 1 == k { n } else { lo + fold_size };
+            let test: Vec<usize> = perm[lo..hi].to_vec();
+            let train: Vec<usize> =
+                perm[..lo].iter().chain(&perm[hi..]).copied().collect();
+            (train, test)
+        })
+        .collect()
+}
+
+/// Mini-batch index iterator: shuffles each epoch, yields fixed-size chunks
+/// (dropping the ragged tail, as the paper's fixed batch size implies).
+pub struct BatchIter {
+    order: Vec<usize>,
+    batch: usize,
+    cursor: usize,
+}
+
+impl BatchIter {
+    pub fn new(n: usize, batch: usize, rng: &mut Rng) -> Self {
+        BatchIter { order: rng.permutation(n), batch, cursor: 0 }
+    }
+
+    pub fn n_batches(&self) -> usize {
+        self.order.len() / self.batch
+    }
+}
+
+impl Iterator for BatchIter {
+    type Item = Vec<usize>;
+
+    fn next(&mut self) -> Option<Vec<usize>> {
+        if self.cursor + self.batch > self.order.len() {
+            return None;
+        }
+        let out = self.order[self.cursor..self.cursor + self.batch].to_vec();
+        self.cursor += self.batch;
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_split_is_disjoint_by_class() {
+        let labels: Vec<usize> = (0..100).map(|i| i % 10).collect();
+        let shards = split_by_label(&labels, 10, 2);
+        // Every class appears on exactly one site.
+        for (s, shard) in shards.iter().enumerate() {
+            for &i in shard {
+                assert_eq!(labels[i] % 2, s);
+            }
+        }
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, 100);
+    }
+
+    #[test]
+    fn iid_split_balanced() {
+        let mut rng = Rng::new(1);
+        let shards = split_iid(101, 4, &mut rng);
+        let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 101);
+        assert!(sizes.iter().all(|&s| (25..=26).contains(&s)));
+    }
+
+    #[test]
+    fn kfold_partitions() {
+        let mut rng = Rng::new(2);
+        let folds = kfold(103, 5, &mut rng);
+        assert_eq!(folds.len(), 5);
+        let mut seen = vec![0usize; 103];
+        for (train, test) in &folds {
+            assert_eq!(train.len() + test.len(), 103);
+            for &i in test {
+                seen[i] += 1;
+            }
+            // Disjointness within a fold.
+            let mut t = train.clone();
+            t.extend(test);
+            t.sort_unstable();
+            t.dedup();
+            assert_eq!(t.len(), 103);
+        }
+        // Every example is tested exactly once.
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn batch_iter_covers_epoch() {
+        let mut rng = Rng::new(3);
+        let it = BatchIter::new(70, 32, &mut rng);
+        assert_eq!(it.n_batches(), 2);
+        let batches: Vec<Vec<usize>> = it.collect();
+        assert_eq!(batches.len(), 2);
+        assert!(batches.iter().all(|b| b.len() == 32));
+        let mut all: Vec<usize> = batches.concat();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 64); // no repeats within an epoch
+    }
+}

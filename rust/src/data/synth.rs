@@ -1,0 +1,354 @@
+//! Synthetic dataset generators — stand-ins for MNIST and the UEA archive
+//! (no dataset downloads in this environment; see DESIGN.md "Substitutions").
+//!
+//! Both generators produce class-separable data with controlled difficulty:
+//! the phenomena under test (non-IID label splits hurting local training,
+//! dAD == pooled equivalence, gradient-rank collapse during training) depend
+//! on the statistical *structure*, not on the actual pixels/signals.
+
+use crate::nn::loss::one_hot;
+use crate::nn::model::Batch;
+use crate::tensor::{Matrix, Rng};
+
+/// Dense classification dataset (the MNIST analog).
+#[derive(Clone)]
+pub struct DenseDataset {
+    pub x: Matrix,
+    pub labels: Vec<usize>,
+    pub classes: usize,
+    pub name: &'static str,
+}
+
+/// Sequence classification dataset (the UEA analogs): per-example (T, c_in)
+/// trajectories stored contiguously.
+#[derive(Clone)]
+pub struct SeqDataset {
+    /// xs[i] is example i's (T, c_in) trajectory.
+    pub xs: Vec<Matrix>,
+    pub labels: Vec<usize>,
+    pub classes: usize,
+    pub seq_len: usize,
+    pub channels: usize,
+    pub name: &'static str,
+}
+
+/// MNIST-analog: 784-dim "images", 10 classes. Each class has a smooth
+/// prototype (mixture of low-frequency 2D gaussian bumps on the 28x28 grid);
+/// samples are prototype + pixel noise + random intensity, clipped to [0,1]
+/// like normalized MNIST.
+pub fn mnist_like(n: usize, rng: &mut Rng) -> DenseDataset {
+    let classes = 10;
+    let side = 28;
+    let dim = side * side;
+    // Class prototypes.
+    let mut protos = Vec::with_capacity(classes);
+    for _ in 0..classes {
+        let mut p = vec![0.0f32; dim];
+        let n_bumps = 3 + rng.below(3);
+        for _ in 0..n_bumps {
+            let cx = rng.uniform_in(4.0, 24.0);
+            let cy = rng.uniform_in(4.0, 24.0);
+            let sx = rng.uniform_in(2.0, 5.0);
+            let sy = rng.uniform_in(2.0, 5.0);
+            let amp = rng.uniform_in(0.5, 1.0);
+            for yy in 0..side {
+                for xx in 0..side {
+                    let dx = (xx as f32 - cx) / sx;
+                    let dy = (yy as f32 - cy) / sy;
+                    p[yy * side + xx] += amp * (-(dx * dx + dy * dy) / 2.0).exp();
+                }
+            }
+        }
+        protos.push(p);
+    }
+    let mut x = Matrix::zeros(n, dim);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let c = rng.below(classes);
+        labels.push(c);
+        let gain = rng.uniform_in(0.6, 1.4);
+        // Noise level chosen so a linear probe cannot saturate instantly:
+        // the paper's AUC curves need a task that takes epochs to fit.
+        for j in 0..dim {
+            let v = gain * protos[c][j] + 0.5 * rng.normal();
+            x[(i, j)] = v.clamp(0.0, 1.0);
+        }
+    }
+    DenseDataset { x, labels, classes, name: "mnist-like" }
+}
+
+/// UEA-analog family: class prototypes are per-channel sums of sinusoids
+/// with class-specific frequencies/phases; samples add AR(1) noise.
+fn uea_like(
+    name: &'static str,
+    n: usize,
+    seq_len: usize,
+    channels: usize,
+    classes: usize,
+    rng: &mut Rng,
+) -> SeqDataset {
+    // Prototype spectra per (class, channel): 2 sinusoids each.
+    struct Proto {
+        f1: f32,
+        p1: f32,
+        a1: f32,
+        f2: f32,
+        p2: f32,
+        a2: f32,
+    }
+    let mut protos: Vec<Vec<Proto>> = Vec::with_capacity(classes);
+    for _ in 0..classes {
+        protos.push(
+            (0..channels)
+                .map(|_| Proto {
+                    f1: rng.uniform_in(0.5, 3.0),
+                    p1: rng.uniform_in(0.0, std::f32::consts::TAU),
+                    a1: rng.uniform_in(0.4, 1.0),
+                    f2: rng.uniform_in(3.0, 8.0),
+                    p2: rng.uniform_in(0.0, std::f32::consts::TAU),
+                    a2: rng.uniform_in(0.1, 0.4),
+                })
+                .collect(),
+        );
+    }
+    let mut xs = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = rng.below(classes);
+        labels.push(c);
+        let mut m = Matrix::zeros(seq_len, channels);
+        let warp = rng.uniform_in(0.9, 1.1); // mild time warping per sample
+        for ch in 0..channels {
+            let p = &protos[c][ch];
+            let mut ar = 0.0f32; // AR(1) noise state
+            for t in 0..seq_len {
+                let tt = warp * t as f32 / seq_len as f32 * std::f32::consts::TAU;
+                ar = 0.7 * ar + 0.3 * rng.normal();
+                let clean = p.a1 * (p.f1 * tt + p.p1).sin() + p.a2 * (p.f2 * tt + p.p2).sin();
+                m[(t, ch)] = clean + 0.25 * ar;
+            }
+        }
+        xs.push(m);
+    }
+    SeqDataset { xs, labels, classes, seq_len, channels, name }
+}
+
+/// SpokenArabicDigits analog: 13 MFCC-like channels, T=40, 10 digits.
+pub fn arabic_digits_like(n: usize, rng: &mut Rng) -> SeqDataset {
+    uea_like("arabic-digits-like", n, 40, 13, 10, rng)
+}
+
+/// NATOPS analog: 24 sensor channels, T=51, 6 gesture classes.
+pub fn natops_like(n: usize, rng: &mut Rng) -> SeqDataset {
+    uea_like("natops-like", n, 51, 24, 6, rng)
+}
+
+/// PenDigits analog: 2 pen-trajectory channels, T=8, 10 digits.
+pub fn pen_digits_like(n: usize, rng: &mut Rng) -> SeqDataset {
+    uea_like("pen-digits-like", n, 8, 2, 10, rng)
+}
+
+/// PEMS-SF analog: occupancy-rate channels, T=24, 7 weekday classes.
+/// (The real archive has 963 channels; 144 keeps the CPU budget sane while
+/// preserving the channels >> classes regime — see DESIGN.md.)
+pub fn pems_sf_like(n: usize, rng: &mut Rng) -> SeqDataset {
+    uea_like("pems-sf-like", n, 24, 144, 7, rng)
+}
+
+impl DenseDataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Assemble a batch from example indices.
+    pub fn batch(&self, idx: &[usize]) -> Batch {
+        let x = self.x.gather_rows(idx);
+        let labels: Vec<usize> = idx.iter().map(|&i| self.labels[i]).collect();
+        Batch::Dense { x, y: one_hot(&labels, self.classes) }
+    }
+
+    /// Subset view by indices (k-fold splits, site shards).
+    pub fn subset(&self, idx: &[usize]) -> DenseDataset {
+        DenseDataset {
+            x: self.x.gather_rows(idx),
+            labels: idx.iter().map(|&i| self.labels[i]).collect(),
+            classes: self.classes,
+            name: self.name,
+        }
+    }
+}
+
+impl SeqDataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Assemble a batch: xs[t] is (|idx|, channels).
+    pub fn batch(&self, idx: &[usize]) -> Batch {
+        let xs: Vec<Matrix> = (0..self.seq_len)
+            .map(|t| {
+                let mut m = Matrix::zeros(idx.len(), self.channels);
+                for (row, &i) in idx.iter().enumerate() {
+                    m.row_mut(row).copy_from_slice(self.xs[i].row(t));
+                }
+                m
+            })
+            .collect();
+        let labels: Vec<usize> = idx.iter().map(|&i| self.labels[i]).collect();
+        Batch::Seq { xs, y: one_hot(&labels, self.classes) }
+    }
+
+    pub fn subset(&self, idx: &[usize]) -> SeqDataset {
+        SeqDataset {
+            xs: idx.iter().map(|&i| self.xs[i].clone()).collect(),
+            labels: idx.iter().map(|&i| self.labels[i]).collect(),
+            classes: self.classes,
+            seq_len: self.seq_len,
+            channels: self.channels,
+            name: self.name,
+        }
+    }
+}
+
+/// Synthetic token corpus for the transformer driver: a periodic formal
+/// language with per-position structure (so an LM can actually learn it).
+pub fn token_corpus(n_tokens: usize, vocab: usize, rng: &mut Rng) -> Vec<u32> {
+    let mut out = Vec::with_capacity(n_tokens);
+    let mut state = rng.below(vocab) as u32;
+    for _ in 0..n_tokens {
+        // Markov structure: next = f(prev) with prob 0.8, noise otherwise.
+        // (Depends only on the previous token, so any window of the stream
+        // is equally learnable — an LM can reach ~H = 0.8 ln(1/0.8) +
+        // 0.2 ln(V) nats by mastering the bigram table.)
+        let det = (state.wrapping_mul(31).wrapping_add(7)) % vocab as u32;
+        state = if rng.uniform() < 0.8 { det } else { rng.below(vocab) as u32 };
+        out.push(state);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mnist_like_shapes_and_range() {
+        let mut rng = Rng::new(1);
+        let ds = mnist_like(200, &mut rng);
+        assert_eq!(ds.x.shape(), (200, 784));
+        assert_eq!(ds.labels.len(), 200);
+        assert!(ds.labels.iter().all(|&l| l < 10));
+        assert!(ds.x.data().iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // All classes present in a reasonable sample.
+        let mut seen = vec![false; 10];
+        for &l in &ds.labels {
+            seen[l] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn classes_are_separable() {
+        // A nearest-prototype classifier on class means must beat chance by
+        // a wide margin — otherwise the dataset can't support the paper's
+        // AUC curves.
+        let mut rng = Rng::new(2);
+        let ds = mnist_like(600, &mut rng);
+        let mut means = vec![vec![0.0f32; 784]; 10];
+        let mut counts = vec![0usize; 10];
+        for i in 0..ds.len() {
+            counts[ds.labels[i]] += 1;
+            for j in 0..784 {
+                means[ds.labels[i]][j] += ds.x[(i, j)];
+            }
+        }
+        for c in 0..10 {
+            for v in &mut means[c] {
+                *v /= counts[c].max(1) as f32;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..ds.len() {
+            let mut best = (f32::MAX, 0);
+            for c in 0..10 {
+                let d2: f32 =
+                    (0..784).map(|j| (ds.x[(i, j)] - means[c][j]).powi(2)).sum();
+                if d2 < best.0 {
+                    best = (d2, c);
+                }
+            }
+            if best.1 == ds.labels[i] {
+                correct += 1;
+            }
+        }
+        let acc = correct as f32 / ds.len() as f32;
+        assert!(acc > 0.8, "prototype accuracy too low: {acc}");
+    }
+
+    #[test]
+    fn seq_datasets_shapes() {
+        let mut rng = Rng::new(3);
+        let ds = arabic_digits_like(50, &mut rng);
+        assert_eq!(ds.xs[0].shape(), (40, 13));
+        assert_eq!(ds.classes, 10);
+        let n = natops_like(20, &mut rng);
+        assert_eq!(n.xs[0].shape(), (51, 24));
+        assert_eq!(n.classes, 6);
+        let p = pen_digits_like(20, &mut rng);
+        assert_eq!(p.xs[0].shape(), (8, 2));
+        let pe = pems_sf_like(10, &mut rng);
+        assert_eq!(pe.xs[0].shape(), (24, 144));
+        assert_eq!(pe.classes, 7);
+    }
+
+    #[test]
+    fn seq_batch_layout() {
+        let mut rng = Rng::new(4);
+        let ds = pen_digits_like(30, &mut rng);
+        let b = ds.batch(&[0, 5, 7]);
+        match b {
+            Batch::Seq { xs, y } => {
+                assert_eq!(xs.len(), 8);
+                assert_eq!(xs[0].shape(), (3, 2));
+                assert_eq!(y.shape(), (3, 10));
+                // Row 1 of timestep 3 must be example 5's t=3 row.
+                assert_eq!(xs[3].row(1), ds.xs[5].row(3));
+            }
+            _ => panic!("expected Seq"),
+        }
+    }
+
+    #[test]
+    fn token_corpus_learnable_structure() {
+        let mut rng = Rng::new(5);
+        let toks = token_corpus(10_000, 64, &mut rng);
+        assert!(toks.iter().all(|&t| t < 64));
+        // The deterministic transition must dominate: measure how often
+        // next == f(prev).
+        let mut hits = 0;
+        for i in 1..toks.len() {
+            let det = (toks[i - 1].wrapping_mul(31).wrapping_add(7)) % 64;
+            if toks[i] == det {
+                hits += 1;
+            }
+        }
+        let rate = hits as f32 / (toks.len() - 1) as f32;
+        assert!(rate > 0.7, "structure rate {rate}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = mnist_like(20, &mut Rng::new(9));
+        let b = mnist_like(20, &mut Rng::new(9));
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.labels, b.labels);
+    }
+}

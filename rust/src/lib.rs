@@ -1,0 +1,29 @@
+//! # dad — distributed auto-differentiation
+//!
+//! A reproduction of Baker, Calhoun, Pearlmutter & Plis, *"Efficient
+//! Distributed Auto-Differentiation"* (arXiv title: *"Peering Beyond the
+//! Gradient Veil with Distributed Auto Differentiation"*, 2021): instead of
+//! shipping gradients between training sites, ship the reverse-AD
+//! intermediates (activations A and deltas Δ) whose outer product *is* the
+//! gradient — exactly (dAD, edAD) or in adaptively low-rank form via
+//! structured power iterations (rank-dAD).
+//!
+//! Architecture (see DESIGN.md): a Rust coordinator (this crate) owns the
+//! training loop, the simulated multi-site cluster, and all the algorithms
+//! (pooled / dSGD / dAD / dAD-p2p / edAD / rank-dAD / PowerSGD); JAX+Pallas exists
+//! only at build time, AOT-lowering the model's stats computation and the
+//! power-iteration kernel to HLO-text artifacts executed through PJRT
+//! (`runtime`). A from-scratch tensor/NN stack (`tensor`, `nn`) provides the
+//! native backend and all substrates.
+
+pub mod algos;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dist;
+pub mod lowrank;
+pub mod metrics;
+pub mod nn;
+pub mod runtime;
+pub mod tensor;

@@ -1,0 +1,8 @@
+//! Low-rank machinery: the paper's structured power iterations on AD
+//! factors (rank-dAD) and the PowerSGD baseline it is evaluated against.
+
+pub mod power_iter;
+pub mod powersgd;
+
+pub use power_iter::{deterministic_init, power_iter_step, rankdad_factors, Factors};
+pub use powersgd::{orthonormalize_cols, PowerSgdState};

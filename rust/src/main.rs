@@ -1,0 +1,244 @@
+//! `dad` — the launcher for distributed auto-differentiation experiments.
+//!
+//! Subcommands:
+//!   exp <id> [--scale quick|default|paper]
+//!       regenerate a paper table/figure: table2, fig1, fig2, fig3, fig4,
+//!       fig5, fig6, bandwidth, all
+//!   train [--algo A] [--dataset D] [--epochs N] [--batch B] [--sites S]
+//!         [--scale SC] [--config path.toml]
+//!       one training run with full telemetry
+//!   info
+//!       platform, artifact and thread-pool status
+
+use dad::algos::AlgoSpec;
+use dad::config::{Args, TomlLite};
+use dad::coordinator::experiments::{self, Scale};
+use dad::coordinator::{train, Schedule, TrainSpec};
+use dad::data::{arabic_digits_like, mnist_like, split_by_label};
+use dad::nn::{Activation, Mlp};
+use dad::tensor::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "exp" => cmd_exp(&args),
+        "train" => cmd_train(&args),
+        "info" => cmd_info(),
+        _ => print_help(),
+    }
+}
+
+fn print_help() {
+    println!(
+        "dad — distributed auto-differentiation (dAD / edAD / rank-dAD)\n\
+         \n\
+         USAGE:\n\
+           dad exp <table2|fig1|fig2|fig3|fig4|fig5|fig6|bandwidth|all> [--scale quick|default|paper]\n\
+           dad train [--algo pooled|dsgd|dad|edad|rank-dad:R|powersgd:R] [--dataset mnist|arabic]\n\
+                     [--epochs N] [--batch B] [--sites S] [--lr F] [--seed N] [--sync-every K]\n\
+                     [--scale quick|default|paper] [--config path.toml]\n\
+           dad info\n\
+         \n\
+         Experiment outputs land in results/*.csv; see EXPERIMENTS.md."
+    );
+}
+
+fn scale_of(args: &Args) -> Scale {
+    Scale::parse(args.opt_or("scale", "default")).unwrap_or(Scale::Default)
+}
+
+fn cmd_info() {
+    println!("dad v{}", env!("CARGO_PKG_VERSION"));
+    println!("threads: {}", dad::tensor::parallel::num_threads());
+    let dir = dad::runtime::PjrtRuntime::default_dir();
+    println!("artifacts dir: {}", dir.display());
+    for name in ["smoke", "mlp_stats", "mlp_grads", "mlp_train_step", "rankdad_factors", "fused_delta"] {
+        let ok = dir.join(format!("{name}.hlo.txt")).is_file();
+        println!("  {name}: {}", if ok { "present" } else { "MISSING (run `make artifacts`)" });
+    }
+    match dad::runtime::PjrtRuntime::cpu(&dir) {
+        Ok(rt) => println!("PJRT platform: {}", rt.platform()),
+        Err(e) => println!("PJRT unavailable: {e:#}"),
+    }
+}
+
+fn cmd_exp(args: &Args) {
+    let id = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let scale = scale_of(args);
+    println!("== experiment {id} (scale {scale:?}) ==");
+    let t0 = std::time::Instant::now();
+    match id {
+        "table2" => run_table2(scale),
+        "fig1" => run_curves("fig1", experiments::fig1(scale)),
+        "fig2" => run_curves("fig2", experiments::fig2(scale)),
+        "fig3" => {
+            run_curves("fig3/mnist", experiments::fig3_mnist(scale));
+            run_curves("fig3/arabic", experiments::fig3_arabic(scale));
+        }
+        "fig4" => run_rank_curves("fig4 (MLP/MNIST, max rank 10)", &experiments::fig4(scale)),
+        "fig5" => {
+            for (name, curves) in experiments::fig5(scale) {
+                run_rank_curves(&format!("fig5 {name} (max rank 32)"), &curves);
+            }
+        }
+        "fig6" => run_curves("fig6 (GRU ranks)", experiments::fig3_arabic(scale)),
+        "bandwidth" => run_bandwidth(),
+        "all" => {
+            run_table2(scale);
+            run_curves("fig1", experiments::fig1(scale));
+            run_curves("fig2", experiments::fig2(scale));
+            run_curves("fig3/mnist", experiments::fig3_mnist(scale));
+            run_curves("fig3+6/arabic", experiments::fig3_arabic(scale));
+            run_rank_curves("fig4", &experiments::fig4(scale));
+            for (name, curves) in experiments::fig5(scale) {
+                run_rank_curves(&format!("fig5 {name}"), &curves);
+            }
+            run_bandwidth();
+        }
+        other => {
+            eprintln!("unknown experiment {other:?}");
+            print_help();
+            std::process::exit(2);
+        }
+    }
+    println!("[{} done in {:.1}s]", id, t0.elapsed().as_secs_f32());
+}
+
+fn run_table2(scale: Scale) {
+    let rows = experiments::table2(scale);
+    println!("Table 2 — max |grad_dist - grad_pooled| over one epoch:");
+    println!("{:<24} {:>12} {:>12} {:>12}", "layer", "dSGD", "dAD", "edAD");
+    for r in rows {
+        println!("{:<24} {:>12.3e} {:>12.3e} {:>12.3e}", r.layer, r.dsgd, r.dad, r.edad);
+    }
+}
+
+fn run_curves(tag: &str, set: experiments::CurveSet) {
+    println!("{tag}: final test AUC (mean over folds) and total bytes:");
+    for ((name, series), (_, bytes)) in set.curves.iter().zip(&set.bytes) {
+        let last = series.last().copied().unwrap_or((0.5, 0.0));
+        println!("  {:<14} auc {:.4} ± {:.4}   bytes {:>12}", name, last.0, last.1, bytes);
+    }
+}
+
+fn run_rank_curves(tag: &str, curves: &experiments::RankCurves) {
+    println!("{tag}: mean effective rank per layer (first -> last epoch):");
+    for (i, name) in curves.entry_names.iter().enumerate() {
+        let first = curves.per_epoch.first().map(|e| e[i]).unwrap_or(f32::NAN);
+        let last = curves.per_epoch.last().map(|e| e[i]).unwrap_or(f32::NAN);
+        println!("  {:<28} {:>6.2} -> {:>6.2}", name, first, last);
+    }
+}
+
+fn run_bandwidth() {
+    let rows = experiments::bandwidth_table(&[256, 512, 1024, 2048], 32);
+    println!("Bandwidth (site->agg bytes, one step, 2 sites, batch 32/site):");
+    println!("{:<14} {:>6} {:>14} {:>14} {:>7}", "algo", "h", "measured", "theta-bound", "ratio");
+    for r in rows {
+        println!(
+            "{:<14} {:>6} {:>14} {:>14} {:>7.2}",
+            r.algo,
+            r.h,
+            r.measured_up,
+            r.theta_up,
+            r.measured_up as f64 / r.theta_up.max(1) as f64
+        );
+    }
+}
+
+fn cmd_train(args: &Args) {
+    // Optional config file; CLI overrides.
+    let cfg = args
+        .opt("config")
+        .map(|p| TomlLite::load(p).unwrap_or_else(|e| panic!("config: {e}")))
+        .unwrap_or_default();
+    let algo_s = args
+        .opt("algo")
+        .map(str::to_string)
+        .unwrap_or_else(|| cfg.str_or("train", "algo", "dad").to_string());
+    let algo = AlgoSpec::parse(&algo_s).unwrap_or_else(|| panic!("unknown algo {algo_s:?}"));
+    let dataset = args
+        .opt("dataset")
+        .map(str::to_string)
+        .unwrap_or_else(|| cfg.str_or("train", "dataset", "mnist").to_string());
+    let scale = scale_of(args);
+    let spec = TrainSpec {
+        algo,
+        n_sites: args.usize_or("sites", cfg.int_or("train", "sites", 2) as usize),
+        batch_per_site: args.usize_or("batch", cfg.int_or("train", "batch", 32) as usize),
+        epochs: args.usize_or("epochs", cfg.int_or("train", "epochs", 10) as usize),
+        lr: args.f32_or("lr", cfg.float_or("train", "lr", 1e-4) as f32),
+        seed: args.usize_or("seed", cfg.int_or("train", "seed", 13) as usize) as u64,
+        schedule: match args.usize_or("sync-every", 1) {
+            0 | 1 => Schedule::EveryBatch,
+            k => Schedule::Periodic(k),
+        },
+    };
+    println!("training {} on {dataset} ({:?})", spec.algo.name(), scale);
+    let t0 = std::time::Instant::now();
+    let log = match dataset.as_str() {
+        "mnist" => {
+            let (n_train, n_test) = match scale {
+                Scale::Quick => (400, 120),
+                Scale::Default => (2000, 500),
+                Scale::Paper => (60_000, 10_000),
+            };
+            let mut rng = Rng::new(spec.seed);
+            let full = mnist_like(n_train + n_test, &mut rng);
+            let train_ds = full.subset(&(0..n_train).collect::<Vec<_>>());
+            let test_ds = full.subset(&(n_train..n_train + n_test).collect::<Vec<_>>());
+            let shards = split_by_label(&train_ds.labels, 10, spec.n_sites);
+            let dims: Vec<usize> = if scale == Scale::Quick {
+                vec![784, 128, 128, 10]
+            } else {
+                vec![784, 1024, 1024, 10]
+            };
+            let mut mrng = Rng::new(42);
+            let model = Mlp::new(&dims, &vec![Activation::Relu; dims.len() - 2], &mut mrng);
+            train(model, &spec, &train_ds, &shards, &test_ds)
+        }
+        "arabic" => {
+            let (n_train, n_test) = match scale {
+                Scale::Quick => (240, 80),
+                Scale::Default => (600, 200),
+                Scale::Paper => (6600, 2200),
+            };
+            let mut rng = Rng::new(spec.seed);
+            let full = arabic_digits_like(n_train + n_test, &mut rng);
+            let train_ds = full.subset(&(0..n_train).collect::<Vec<_>>());
+            let test_ds = full.subset(&(n_train..n_train + n_test).collect::<Vec<_>>());
+            let shards = split_by_label(&train_ds.labels, 10, spec.n_sites);
+            let mut mrng = Rng::new(42);
+            let model = if scale == Scale::Quick {
+                dad::nn::GruClassifier::new(13, 32, &[64, 32], 10, &mut mrng)
+            } else {
+                dad::nn::GruClassifier::paper_uea(13, 10, &mut mrng)
+            };
+            train(model, &spec, &train_ds, &shards, &test_ds)
+        }
+        other => panic!("unknown dataset {other:?} (mnist|arabic)"),
+    };
+    for e in &log.epochs {
+        println!(
+            "epoch {:>3}  loss {:.4}  auc {:.4}  acc {:.4}  up {:>10}B  down {:>10}B{}",
+            e.epoch,
+            e.train_loss,
+            e.test_auc,
+            e.test_acc,
+            e.bytes_up,
+            e.bytes_down,
+            if e.mean_eff_rank.iter().any(|r| r.is_finite()) {
+                format!("  eff-rank {:?}", e.mean_eff_rank)
+            } else {
+                String::new()
+            }
+        );
+    }
+    println!(
+        "done in {:.1}s wall; simulated wire time {:.3}s; total {} bytes",
+        t0.elapsed().as_secs_f32(),
+        log.sim_time_s,
+        log.total_bytes()
+    );
+}

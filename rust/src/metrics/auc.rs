@@ -1,0 +1,144 @@
+//! AUC and accuracy. The paper plots macro-averaged one-vs-rest test AUC;
+//! we compute exact (rank-based) ROC AUC per class and average over classes
+//! present in the test set.
+
+use crate::tensor::Matrix;
+
+/// Exact binary ROC AUC from scores via the rank statistic (ties averaged).
+pub fn binary_auc(scores: &[f32], is_pos: &[bool]) -> Option<f32> {
+    let n_pos = is_pos.iter().filter(|&&p| p).count();
+    let n_neg = is_pos.len() - n_pos;
+    if n_pos == 0 || n_neg == 0 {
+        return None;
+    }
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[a].partial_cmp(&scores[b]).unwrap_or(std::cmp::Ordering::Equal));
+    // Average ranks over ties.
+    let mut rank_sum_pos = 0.0f64;
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && scores[idx[j + 1]] == scores[idx[i]] {
+            j += 1;
+        }
+        let avg_rank = (i + j) as f64 / 2.0 + 1.0; // 1-based
+        for &k in &idx[i..=j] {
+            if is_pos[k] {
+                rank_sum_pos += avg_rank;
+            }
+        }
+        i = j + 1;
+    }
+    let auc =
+        (rank_sum_pos - (n_pos * (n_pos + 1)) as f64 / 2.0) / (n_pos as f64 * n_neg as f64);
+    Some(auc as f32)
+}
+
+/// Macro-averaged one-vs-rest AUC. `scores` is (N, C) class probabilities,
+/// `labels` the true classes. Classes absent from the labels are skipped.
+pub fn multiclass_auc(scores: &Matrix, labels: &[usize]) -> f32 {
+    let c = scores.cols();
+    let mut sum = 0.0f64;
+    let mut count = 0usize;
+    for class in 0..c {
+        let col: Vec<f32> = (0..scores.rows()).map(|i| scores[(i, class)]).collect();
+        let pos: Vec<bool> = labels.iter().map(|&l| l == class).collect();
+        if let Some(a) = binary_auc(&col, &pos) {
+            sum += a as f64;
+            count += 1;
+        }
+    }
+    if count == 0 {
+        0.5
+    } else {
+        (sum / count as f64) as f32
+    }
+}
+
+/// Top-1 accuracy.
+pub fn accuracy(scores: &Matrix, labels: &[usize]) -> f32 {
+    let mut correct = 0usize;
+    for (i, &l) in labels.iter().enumerate() {
+        let row = scores.row(i);
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(j, _)| j)
+            .unwrap_or(0);
+        if pred == l {
+            correct += 1;
+        }
+    }
+    correct as f32 / labels.len().max(1) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_separation_is_one() {
+        let scores = vec![0.1, 0.2, 0.8, 0.9];
+        let pos = vec![false, false, true, true];
+        assert_eq!(binary_auc(&scores, &pos), Some(1.0));
+    }
+
+    #[test]
+    fn reversed_is_zero() {
+        let scores = vec![0.9, 0.8, 0.2, 0.1];
+        let pos = vec![false, false, true, true];
+        assert_eq!(binary_auc(&scores, &pos), Some(0.0));
+    }
+
+    #[test]
+    fn random_is_half() {
+        // Constant scores => all ties => AUC 0.5 exactly.
+        let scores = vec![0.5; 10];
+        let pos: Vec<bool> = (0..10).map(|i| i % 2 == 0).collect();
+        let a = binary_auc(&scores, &pos).unwrap();
+        assert!((a - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn degenerate_returns_none() {
+        assert_eq!(binary_auc(&[0.1, 0.2], &[true, true]), None);
+    }
+
+    #[test]
+    fn matches_pair_counting() {
+        // Oracle: AUC = P(score_pos > score_neg) + 0.5 P(equal).
+        let scores = vec![0.3, 0.7, 0.7, 0.1, 0.9, 0.4];
+        let pos = vec![true, false, true, false, true, false];
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for i in 0..6 {
+            for j in 0..6 {
+                if pos[i] && !pos[j] {
+                    den += 1.0;
+                    if scores[i] > scores[j] {
+                        num += 1.0;
+                    } else if scores[i] == scores[j] {
+                        num += 0.5;
+                    }
+                }
+            }
+        }
+        let want = (num / den) as f32;
+        let got = binary_auc(&scores, &pos).unwrap();
+        assert!((got - want).abs() < 1e-6, "got {got} want {want}");
+    }
+
+    #[test]
+    fn multiclass_and_accuracy() {
+        // 3-class toy with clearly correct argmax.
+        let scores = Matrix::from_vec(
+            3,
+            3,
+            vec![0.8, 0.1, 0.1, 0.1, 0.8, 0.1, 0.1, 0.1, 0.8],
+        );
+        let labels = vec![0, 1, 2];
+        assert_eq!(accuracy(&scores, &labels), 1.0);
+        assert!((multiclass_auc(&scores, &labels) - 1.0).abs() < 1e-6);
+    }
+}

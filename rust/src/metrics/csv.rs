@@ -1,0 +1,64 @@
+//! Tiny CSV emitter for experiment outputs (figures are regenerated as CSV
+//! series; EXPERIMENTS.md references the files under results/).
+
+use std::io::Write;
+use std::path::Path;
+
+/// Buffered CSV writer with a fixed header.
+pub struct CsvWriter {
+    file: std::io::BufWriter<std::fs::File>,
+    n_cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> std::io::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut file = std::io::BufWriter::new(std::fs::File::create(path)?);
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvWriter { file, n_cols: header.len() })
+    }
+
+    pub fn row(&mut self, values: &[String]) -> std::io::Result<()> {
+        assert_eq!(values.len(), self.n_cols, "CSV row width mismatch");
+        writeln!(self.file, "{}", values.join(","))
+    }
+
+    pub fn row_f32(&mut self, values: &[f32]) -> std::io::Result<()> {
+        self.row(&values.iter().map(|v| format!("{v}")).collect::<Vec<_>>())
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.file.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let dir = std::env::temp_dir().join("dad_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&["1".into(), "2".into()]).unwrap();
+            w.row_f32(&[0.5, 1.5]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n0.5,1.5\n");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_mismatch_panics() {
+        let dir = std::env::temp_dir().join("dad_csv_test2");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(path, &["a", "b"]).unwrap();
+        let _ = w.row(&["only-one".into()]);
+    }
+}

@@ -1,0 +1,8 @@
+//! Evaluation metrics and experiment telemetry: multiclass OvR AUC (the
+//! paper's headline metric), accuracy, and CSV emission for the figures.
+
+pub mod auc;
+pub mod csv;
+
+pub use auc::{accuracy, multiclass_auc};
+pub use csv::CsvWriter;

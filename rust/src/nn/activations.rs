@@ -1,0 +1,159 @@
+//! Activation functions with derivative-from-output — the analytic identity
+//! phi'(z) = f(phi(z)) that lets edAD continue backpropagation at the
+//! aggregated level without communicating deltas (paper section 3.3).
+
+use crate::tensor::Matrix;
+
+/// Activation tag, shared with the Python kernels (kernels/ref.py).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    Relu,
+    Sigmoid,
+    Tanh,
+    Linear,
+}
+
+impl Activation {
+    pub fn name(self) -> &'static str {
+        match self {
+            Activation::Relu => "relu",
+            Activation::Sigmoid => "sigmoid",
+            Activation::Tanh => "tanh",
+            Activation::Linear => "linear",
+        }
+    }
+
+    #[inline]
+    pub fn apply_scalar(self, z: f32) -> f32 {
+        match self {
+            Activation::Relu => z.max(0.0),
+            Activation::Sigmoid => sigmoid(z),
+            Activation::Tanh => z.tanh(),
+            Activation::Linear => z,
+        }
+    }
+
+    /// phi'(z) expressed through a = phi(z).
+    #[inline]
+    pub fn deriv_from_output_scalar(self, a: f32) -> f32 {
+        match self {
+            Activation::Relu => {
+                if a > 0.0 {
+                    1.0
+                } else {
+                    0.0
+                }
+            }
+            Activation::Sigmoid => a * (1.0 - a),
+            Activation::Tanh => 1.0 - a * a,
+            Activation::Linear => 1.0,
+        }
+    }
+
+    pub fn apply(self, z: &mut Matrix) {
+        if self == Activation::Linear {
+            return;
+        }
+        z.map_inplace(|v| self.apply_scalar(v));
+    }
+
+    /// Elementwise phi' evaluated from the output activations.
+    pub fn deriv_from_output(self, a: &Matrix) -> Matrix {
+        a.map(|v| self.deriv_from_output_scalar(v))
+    }
+
+    /// d ⊙ phi'(a) in place — the Hadamard of eq. (3)/(5).
+    pub fn mask_delta_inplace(self, d: &mut Matrix, a: &Matrix) {
+        assert_eq!(d.shape(), a.shape());
+        let ad = a.data();
+        for (dv, &av) in d.data_mut().iter_mut().zip(ad) {
+            *dv *= self.deriv_from_output_scalar(av);
+        }
+    }
+}
+
+#[inline]
+pub fn sigmoid(z: f32) -> f32 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+/// Row-wise softmax (numerically stable).
+pub fn softmax_rows(z: &Matrix) -> Matrix {
+    let mut out = z.clone();
+    for i in 0..out.rows() {
+        let row = out.row_mut(i);
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn deriv_from_output_matches_finite_difference() {
+        // phi'(z) via output must equal (phi(z+e)-phi(z-e))/2e.
+        let eps = 1e-3f32;
+        for act in [Activation::Relu, Activation::Sigmoid, Activation::Tanh, Activation::Linear] {
+            for i in -20..=20 {
+                let z = i as f32 * 0.17 + 0.05; // avoid the ReLU kink at 0
+                let a = act.apply_scalar(z);
+                let fd = (act.apply_scalar(z + eps) - act.apply_scalar(z - eps)) / (2.0 * eps);
+                let an = act.deriv_from_output_scalar(a);
+                assert!((fd - an).abs() < 2e-3, "{act:?} z={z} fd={fd} an={an}");
+            }
+        }
+    }
+
+    #[test]
+    fn sigmoid_stable_extremes() {
+        assert!(sigmoid(100.0) <= 1.0 && sigmoid(100.0) > 0.999);
+        assert!(sigmoid(-100.0) >= 0.0 && sigmoid(-100.0) < 1e-4);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Rng::new(1);
+        let z = Matrix::randn(5, 7, 3.0, &mut rng);
+        let p = softmax_rows(&z);
+        for i in 0..5 {
+            let s: f32 = p.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(p.row(i).iter().all(|&v| v >= 0.0));
+        }
+    }
+
+    #[test]
+    fn softmax_shift_invariant() {
+        let z = Matrix::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let z2 = z.map(|v| v + 1000.0);
+        assert!(softmax_rows(&z).max_abs_diff(&softmax_rows(&z2)) < 1e-6);
+    }
+
+    #[test]
+    fn mask_delta_inplace_matches_hadamard() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(4, 6, 1.0, &mut rng).map(|v| v.tanh());
+        let d0 = Matrix::randn(4, 6, 1.0, &mut rng);
+        let mut d = d0.clone();
+        Activation::Tanh.mask_delta_inplace(&mut d, &a);
+        let want = d0.hadamard(&Activation::Tanh.deriv_from_output(&a));
+        assert!(d.max_abs_diff(&want) < 1e-6);
+    }
+}

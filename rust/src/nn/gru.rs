@@ -1,0 +1,490 @@
+//! GRU sequence classifier — the paper's UEA architecture: a GRU cell
+//! (hidden 64) feeding a fully-connected classifier (512 -> 256 -> C),
+//! with BPTT statistics stacked over batch AND time (paper section 3.5):
+//! for each recurrent weight, A and Δ stacks have T*N rows, so rank-dAD
+//! still ships O(r*h) numbers per layer.
+//!
+//! Gate math (PyTorch layout [r | z | n]):
+//!     r_t = σ(x_t W_ir + h W_hr + b_.r)
+//!     z_t = σ(x_t W_iz + h W_hz + b_.z)
+//!     n_t = tanh(x_t W_in + b_in + r_t ⊙ (h W_hn + b_hn))
+//!     h_t = (1 - z_t) ⊙ n_t + z_t ⊙ h_{t-1}
+//!
+//! Parameter layout: [W_i (c_in,3h), b_i, W_h (h,3h), b_h, classifier...].
+//! Stats entries: [W_i (Δ = [δr|δz|δn]), W_h (Δ = [δr|δz|δn⊙r]), classifier
+//! layers...]. edAD aux = per-site t-major stacks of [r|z|n|s] (s = h W_hn
+//! + b_hn), which together with the A-stacks let the aggregated deltas be
+//! recomputed from Δ_L alone.
+
+use crate::nn::activations::{sigmoid, Activation};
+use crate::nn::init::xavier_uniform;
+use crate::nn::mlp::{add_bias, Mlp};
+use crate::nn::model::{Batch, DistModel};
+use crate::nn::stats::{LocalStats, StatsEntry};
+use crate::tensor::{matmul, matmul_nt, Matrix, Rng};
+
+/// GRU + MLP-classifier sequence model.
+#[derive(Clone)]
+pub struct GruClassifier {
+    pub c_in: usize,
+    pub hidden: usize,
+    w_i: Matrix, // (c_in, 3h)
+    b_i: Matrix, // (1, 3h)
+    w_h: Matrix, // (h, 3h)
+    b_h: Matrix, // (1, 3h)
+    pub classifier: Mlp,
+}
+
+/// Saved forward state for one timestep.
+struct StepState {
+    h_prev: Matrix,
+    r: Matrix,
+    z: Matrix,
+    n: Matrix,
+    s: Matrix, // h_prev W_hn + b_hn (pre-r-Hadamard candidate input)
+}
+
+impl GruClassifier {
+    /// The paper's UEA configuration: hidden 64, classifier 512 -> 256 -> C.
+    pub fn paper_uea(c_in: usize, classes: usize, rng: &mut Rng) -> Self {
+        GruClassifier::new(c_in, 64, &[512, 256], classes, rng)
+    }
+
+    pub fn new(
+        c_in: usize,
+        hidden: usize,
+        fc_dims: &[usize],
+        classes: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        let w_i = xavier_uniform(c_in, 3 * hidden, rng);
+        let w_h = xavier_uniform(hidden, 3 * hidden, rng);
+        let mut dims = vec![hidden];
+        dims.extend_from_slice(fc_dims);
+        dims.push(classes);
+        let acts = vec![Activation::Relu; dims.len() - 2];
+        let classifier = Mlp::new(&dims, &acts, rng);
+        GruClassifier {
+            c_in,
+            hidden,
+            w_i,
+            b_i: Matrix::zeros(1, 3 * hidden),
+            w_h,
+            b_h: Matrix::zeros(1, 3 * hidden),
+            classifier,
+        }
+    }
+
+    /// One GRU step; returns (h_t, saved state).
+    fn step(&self, x_t: &Matrix, h_prev: &Matrix) -> (Matrix, StepState) {
+        let h = self.hidden;
+        let n_rows = x_t.rows();
+        let mut gi = matmul(x_t, &self.w_i);
+        add_bias(&mut gi, &self.b_i);
+        let mut gh = matmul(h_prev, &self.w_h);
+        add_bias(&mut gh, &self.b_h);
+        let mut r = Matrix::zeros(n_rows, h);
+        let mut z = Matrix::zeros(n_rows, h);
+        let mut n = Matrix::zeros(n_rows, h);
+        let mut s = Matrix::zeros(n_rows, h);
+        let mut h_t = Matrix::zeros(n_rows, h);
+        for i in 0..n_rows {
+            let gi_row = gi.row(i);
+            let gh_row = gh.row(i);
+            let hp = h_prev.row(i);
+            for j in 0..h {
+                let rv = sigmoid(gi_row[j] + gh_row[j]);
+                let zv = sigmoid(gi_row[h + j] + gh_row[h + j]);
+                let sv = gh_row[2 * h + j];
+                let nv = (gi_row[2 * h + j] + rv * sv).tanh();
+                r[(i, j)] = rv;
+                z[(i, j)] = zv;
+                s[(i, j)] = sv;
+                n[(i, j)] = nv;
+                h_t[(i, j)] = (1.0 - zv) * nv + zv * hp[j];
+            }
+        }
+        (h_t, StepState { h_prev: h_prev.clone(), r, z, n, s })
+    }
+
+    /// Full forward; returns (h_T, per-step states).
+    fn forward_seq(&self, xs: &[Matrix]) -> (Matrix, Vec<StepState>) {
+        let n_rows = xs[0].rows();
+        let mut h = Matrix::zeros(n_rows, self.hidden);
+        let mut states = Vec::with_capacity(xs.len());
+        for x_t in xs {
+            let (h_t, st) = self.step(x_t, &h);
+            states.push(st);
+            h = h_t;
+        }
+        (h, states)
+    }
+
+    /// Gate backward for one timestep. Returns (δ_i stack row block,
+    /// δ_h stack row block, δh_{t-1}).
+    fn step_backward(&self, st: &StepState, dh: &Matrix) -> (Matrix, Matrix, Matrix) {
+        let h = self.hidden;
+        let n_rows = dh.rows();
+        let mut d_i = Matrix::zeros(n_rows, 3 * h); // [δr | δz | δn]
+        let mut d_h = Matrix::zeros(n_rows, 3 * h); // [δr | δz | δn⊙r]
+        for i in 0..n_rows {
+            for j in 0..h {
+                let (rv, zv, nv, sv) = (st.r[(i, j)], st.z[(i, j)], st.n[(i, j)], st.s[(i, j)]);
+                let dhv = dh[(i, j)];
+                let dz = dhv * (st.h_prev[(i, j)] - nv) * zv * (1.0 - zv);
+                let dn = dhv * (1.0 - zv) * (1.0 - nv * nv);
+                let dr = dn * sv * rv * (1.0 - rv);
+                d_i[(i, j)] = dr;
+                d_i[(i, h + j)] = dz;
+                d_i[(i, 2 * h + j)] = dn;
+                d_h[(i, j)] = dr;
+                d_h[(i, h + j)] = dz;
+                d_h[(i, 2 * h + j)] = dn * rv;
+            }
+        }
+        // δh_{t-1} = δh ⊙ z + d_h W_hᵀ
+        let mut dh_prev = matmul_nt(&d_h, &self.w_h);
+        for i in 0..n_rows {
+            for j in 0..h {
+                dh_prev[(i, j)] += dh[(i, j)] * st.z[(i, j)];
+            }
+        }
+        (d_i, d_h, dh_prev)
+    }
+
+    /// BPTT from states + classifier output delta; returns t-major stacks
+    /// (δ_i stack, δ_h stack) and nothing else — A-stacks come from inputs.
+    fn bptt(&self, states: &[StepState], dh_last: Matrix) -> (Matrix, Matrix) {
+        let t_len = states.len();
+        let mut d_i_blocks: Vec<Matrix> = vec![Matrix::zeros(0, 0); t_len];
+        let mut d_h_blocks: Vec<Matrix> = vec![Matrix::zeros(0, 0); t_len];
+        let mut dh = dh_last;
+        for t in (0..t_len).rev() {
+            let (d_i, d_h, dh_prev) = self.step_backward(&states[t], &dh);
+            d_i_blocks[t] = d_i;
+            d_h_blocks[t] = d_h;
+            dh = dh_prev;
+        }
+        let d_i_refs: Vec<&Matrix> = d_i_blocks.iter().collect();
+        let d_h_refs: Vec<&Matrix> = d_h_blocks.iter().collect();
+        (Matrix::vertcat(&d_i_refs), Matrix::vertcat(&d_h_refs))
+    }
+
+    /// Number of classifier dense layers.
+    fn fc_layers(&self) -> usize {
+        self.classifier.n_layers()
+    }
+}
+
+impl DistModel for GruClassifier {
+    fn param_shapes(&self) -> Vec<(usize, usize)> {
+        let mut shapes = vec![self.w_i.shape(), self.b_i.shape(), self.w_h.shape(), self.b_h.shape()];
+        shapes.extend(self.classifier.param_shapes());
+        shapes
+    }
+
+    fn params(&self) -> Vec<&Matrix> {
+        let mut ps = vec![&self.w_i, &self.b_i, &self.w_h, &self.b_h];
+        ps.extend(self.classifier.params());
+        ps
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Matrix> {
+        let mut ps: Vec<&mut Matrix> =
+            vec![&mut self.w_i, &mut self.b_i, &mut self.w_h, &mut self.b_h];
+        ps.extend(self.classifier.params_mut());
+        ps
+    }
+
+    fn local_stats(&self, batch: &Batch) -> LocalStats {
+        let (xs, y) = match batch {
+            Batch::Seq { xs, y } => (xs, y),
+            _ => panic!("GruClassifier consumes sequence batches"),
+        };
+        let (h_t, states) = self.forward_seq(xs);
+        // Classifier forward/backward on h_T.
+        let cls_batch = Batch::Dense { x: h_t, y: y.clone() };
+        let mut cls_stats = self.classifier.local_stats(&cls_batch);
+        // Delta w.r.t. classifier input = Δ_c1 W_c1ᵀ (no activation on h_T).
+        let dh_last = matmul_nt(&cls_stats.entries[0].d, self.classifier.weight(0));
+        let (d_i_stack, d_h_stack) = self.bptt(&states, dh_last);
+        // A-stacks (t-major).
+        let x_refs: Vec<&Matrix> = xs.iter().collect();
+        let x_stack = Matrix::vertcat(&x_refs);
+        let hp_refs: Vec<&Matrix> = states.iter().map(|s| &s.h_prev).collect();
+        let hp_stack = Matrix::vertcat(&hp_refs);
+        // edAD aux: [r|z|n|s] stacks (t-major), one matrix.
+        let aux_blocks: Vec<Matrix> = states
+            .iter()
+            .map(|st| {
+                let n_rows = st.r.rows();
+                let h = self.hidden;
+                let mut m = Matrix::zeros(n_rows, 4 * h);
+                for i in 0..n_rows {
+                    for j in 0..h {
+                        m[(i, j)] = st.r[(i, j)];
+                        m[(i, h + j)] = st.z[(i, j)];
+                        m[(i, 2 * h + j)] = st.n[(i, j)];
+                        m[(i, 3 * h + j)] = st.s[(i, j)];
+                    }
+                }
+                m
+            })
+            .collect();
+        let aux_refs: Vec<&Matrix> = aux_blocks.iter().collect();
+        let aux = vec![Matrix::vertcat(&aux_refs)];
+
+        let mut entries = vec![
+            StatsEntry { w_idx: 0, b_idx: Some(1), a: x_stack, d: d_i_stack },
+            StatsEntry { w_idx: 2, b_idx: Some(3), a: hp_stack, d: d_h_stack },
+        ];
+        // Shift classifier entries past the 4 GRU params.
+        for e in cls_stats.entries.drain(..) {
+            entries.push(StatsEntry {
+                w_idx: e.w_idx + 4,
+                b_idx: e.b_idx.map(|b| b + 4),
+                a: e.a,
+                d: e.d,
+            });
+        }
+        LocalStats { loss: cls_stats.loss, entries, aux, direct: vec![] }
+    }
+
+    fn predict(&self, batch: &Batch) -> Matrix {
+        let (xs, y) = match batch {
+            Batch::Seq { xs, y } => (xs, y),
+            _ => panic!("GruClassifier consumes sequence batches"),
+        };
+        let (h_t, _) = self.forward_seq(xs);
+        self.classifier.predict(&Batch::Dense { x: h_t, y: y.clone() })
+    }
+
+    fn edad_recompute(
+        &self,
+        a_hats: &[Matrix],
+        aux: &[Matrix],
+        delta_out: &Matrix,
+        site_rows: &[usize],
+    ) -> Option<Vec<StatsEntry>> {
+        // a_hats: [x_stack, hp_stack, cls A_0 (= h_T), cls A_1, ...]
+        // aux:    [rzns stack]
+        // Row-independence of the recurrence means recomputation on the
+        // site-major concatenated stacks is exact as long as per-t slices
+        // are taken per site block; here stacks arrive already vertcat'd
+        // over sites with t-major blocks inside, and batch rows never mix —
+        // so we recover T from stack heights and process per site block.
+        let h = self.hidden;
+        let fc = self.fc_layers();
+        assert_eq!(a_hats.len(), 2 + fc);
+        let x_stack = &a_hats[0];
+        let hp_stack = &a_hats[1];
+        let rzns = &aux[0];
+        let n_total = delta_out.rows(); // total examples across sites
+        let tn = x_stack.rows();
+        if n_total == 0 || tn % n_total != 0 {
+            return None;
+        }
+        let t_len = tn / n_total;
+
+        // Classifier deltas from aggregated activations (MLP recurrence).
+        let cls_a_hats: Vec<Matrix> = a_hats[2..].to_vec();
+        let cls_entries = self.classifier.edad_recompute(&cls_a_hats, &[], delta_out, site_rows)?;
+        let dh_last = matmul_nt(&cls_entries[0].d, self.classifier.weight(0));
+
+        // Rebuild per-t states from the stacks. Stacks are t-major over the
+        // *whole* concatenated batch only if every site contributed equal
+        // rows per t — which holds because concat_stats vertcats per-site
+        // t-major stacks and every row is independent. We process per-t
+        // slices of size n_total by gathering each site's t-block; with
+        // equal site batches the layout [s][t][n] maps t-slices to strided
+        // row gathers.
+        // To stay layout-exact for ANY site split we instead recompute per
+        // "site block": each block of T*n_s consecutive rows in x_stack
+        // corresponds to n_s consecutive rows in delta_out.
+        let mut d_i_total = Matrix::zeros(tn, 3 * h);
+        let mut d_h_total = Matrix::zeros(tn, 3 * h);
+        // Site blocks come from the aggregator: stacks are site-major with
+        // t-major blocks of T*n_s rows inside.
+        let blocks: Vec<usize> =
+            if site_rows.is_empty() { vec![n_total] } else { site_rows.to_vec() };
+        debug_assert_eq!(blocks.iter().sum::<usize>(), n_total);
+        let mut row_n = 0usize; // cursor in delta_out rows
+        let mut row_tn = 0usize; // cursor in stack rows
+        for &n_s in &blocks {
+            let dh_site = dh_last.slice_rows(row_n, row_n + n_s);
+            let mut dh = dh_site;
+            let mut d_i_blocks = vec![Matrix::zeros(0, 0); t_len];
+            let mut d_h_blocks = vec![Matrix::zeros(0, 0); t_len];
+            for t in (0..t_len).rev() {
+                let lo = row_tn + t * n_s;
+                let hi = lo + n_s;
+                let st = StepState {
+                    h_prev: hp_stack.slice_rows(lo, hi),
+                    r: slice_cols(&rzns.slice_rows(lo, hi), 0, h),
+                    z: slice_cols(&rzns.slice_rows(lo, hi), h, 2 * h),
+                    n: slice_cols(&rzns.slice_rows(lo, hi), 2 * h, 3 * h),
+                    s: slice_cols(&rzns.slice_rows(lo, hi), 3 * h, 4 * h),
+                };
+                let (d_i, d_h, dh_prev) = self.step_backward(&st, &dh);
+                d_i_blocks[t] = d_i;
+                d_h_blocks[t] = d_h;
+                dh = dh_prev;
+            }
+            for t in 0..t_len {
+                copy_rows(&mut d_i_total, row_tn + t * n_s, &d_i_blocks[t]);
+                copy_rows(&mut d_h_total, row_tn + t * n_s, &d_h_blocks[t]);
+            }
+            row_n += n_s;
+            row_tn += t_len * n_s;
+        }
+
+        let mut entries = vec![
+            StatsEntry { w_idx: 0, b_idx: Some(1), a: x_stack.clone(), d: d_i_total },
+            StatsEntry { w_idx: 2, b_idx: Some(3), a: hp_stack.clone(), d: d_h_total },
+        ];
+        for e in cls_entries {
+            entries.push(StatsEntry {
+                w_idx: e.w_idx + 4,
+                b_idx: e.b_idx.map(|b| b + 4),
+                a: e.a,
+                d: e.d,
+            });
+        }
+        Some(entries)
+    }
+
+    fn local_stats_entry_count(&self) -> usize {
+        2 + self.fc_layers()
+    }
+
+    fn entry_names(&self) -> Vec<String> {
+        let mut names = vec![
+            format!("gru-input ({}x{})", self.c_in, 3 * self.hidden),
+            format!("gru-hidden ({}x{})", self.hidden, 3 * self.hidden),
+        ];
+        for (i, n) in self.classifier.entry_names().into_iter().enumerate() {
+            names.push(format!("fc{}-{}", i + 1, n));
+        }
+        names
+    }
+}
+
+fn slice_cols(m: &Matrix, lo: usize, hi: usize) -> Matrix {
+    let mut out = Matrix::zeros(m.rows(), hi - lo);
+    for i in 0..m.rows() {
+        out.row_mut(i).copy_from_slice(&m.row(i)[lo..hi]);
+    }
+    out
+}
+
+fn copy_rows(dst: &mut Matrix, row0: usize, src: &Matrix) {
+    for i in 0..src.rows() {
+        dst.row_mut(row0 + i).copy_from_slice(src.row(i));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::loss::one_hot;
+
+    fn tiny(rng: &mut Rng) -> GruClassifier {
+        GruClassifier::new(3, 5, &[7], 4, rng)
+    }
+
+    fn seq_batch(rng: &mut Rng, n: usize, t: usize, c_in: usize, classes: usize) -> Batch {
+        let xs: Vec<Matrix> = (0..t).map(|_| Matrix::randn(n, c_in, 1.0, rng)).collect();
+        let labels: Vec<usize> = (0..n).map(|i| i % classes).collect();
+        Batch::Seq { xs, y: one_hot(&labels, classes) }
+    }
+
+    /// BPTT statistics must reproduce finite-difference gradients — this
+    /// validates the full gate backward derivation.
+    #[test]
+    fn gru_grads_match_finite_difference() {
+        let mut rng = Rng::new(21);
+        let gru = tiny(&mut rng);
+        let b = seq_batch(&mut rng, 4, 3, 3, 4);
+        let stats = gru.local_stats(&b);
+        let shapes = gru.param_shapes();
+        let grads = stats.assemble_grads(&shapes, 1.0 / 4.0, 1.0);
+        let eps = 3e-3f32;
+        let loss_of = |m: &GruClassifier| m.local_stats(&b).loss;
+        for (pi, g) in grads.iter().enumerate() {
+            let (rows, cols) = g.shape();
+            for &(i, j) in &[(0usize, 0usize), (rows / 2, cols / 2), (rows - 1, cols - 1)] {
+                let mut mp = gru.clone();
+                mp.params_mut()[pi][(i, j)] += eps;
+                let mut mm = gru.clone();
+                mm.params_mut()[pi][(i, j)] -= eps;
+                let fd = (loss_of(&mp) - loss_of(&mm)) / (2.0 * eps);
+                let an = g[(i, j)];
+                assert!(
+                    (fd - an).abs() < 3e-2 * (1.0 + an.abs()),
+                    "param {pi} ({i},{j}): fd={fd} an={an}"
+                );
+            }
+        }
+    }
+
+    /// Stats stacks have T*N rows for the recurrent weights (section 3.5).
+    #[test]
+    fn stacks_are_time_by_batch() {
+        let mut rng = Rng::new(2);
+        let gru = tiny(&mut rng);
+        let b = seq_batch(&mut rng, 4, 6, 3, 4);
+        let stats = gru.local_stats(&b);
+        assert_eq!(stats.entries[0].a.shape(), (24, 3)); // x stack
+        assert_eq!(stats.entries[0].d.shape(), (24, 15)); // [δr|δz|δn]
+        assert_eq!(stats.entries[1].a.shape(), (24, 5)); // h_prev stack
+        assert_eq!(stats.aux[0].shape(), (24, 20)); // [r|z|n|s]
+    }
+
+    /// edAD recompute on a single site must reproduce local deltas exactly.
+    #[test]
+    fn edad_single_site_identity() {
+        let mut rng = Rng::new(3);
+        let gru = tiny(&mut rng);
+        let b = seq_batch(&mut rng, 5, 4, 3, 4);
+        let stats = gru.local_stats(&b);
+        let a_hats: Vec<Matrix> = stats.entries.iter().map(|e| e.a.clone()).collect();
+        let d_out = stats.entries.last().unwrap().d.clone();
+        let re = gru.edad_recompute(&a_hats, &stats.aux, &d_out, &[5]).unwrap();
+        for (i, e) in re.iter().enumerate() {
+            let diff = e.d.max_abs_diff(&stats.entries[i].d);
+            assert!(diff < 1e-5, "entry {i} mismatch {diff}");
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss() {
+        use crate::nn::optimizer::Adam;
+        let mut rng = Rng::new(5);
+        let mut gru = tiny(&mut rng);
+        let b = seq_batch(&mut rng, 12, 4, 3, 4);
+        let shapes = gru.param_shapes();
+        let mut opt = Adam::new(5e-3, &shapes);
+        let first = gru.local_stats(&b).loss;
+        for _ in 0..80 {
+            let stats = gru.local_stats(&b);
+            let grads = stats.assemble_grads(&shapes, 1.0 / 12.0, 1.0);
+            let mut params: Vec<Matrix> = gru.params().into_iter().cloned().collect();
+            opt.step(&mut params, &grads);
+            gru.set_params(&params);
+        }
+        let last = gru.local_stats(&b).loss;
+        assert!(last < first * 0.7, "loss did not drop: {first} -> {last}");
+    }
+
+    #[test]
+    fn predict_shapes_and_distribution() {
+        let mut rng = Rng::new(6);
+        let gru = tiny(&mut rng);
+        let b = seq_batch(&mut rng, 3, 4, 3, 4);
+        let p = gru.predict(&b);
+        assert_eq!(p.shape(), (3, 4));
+        for i in 0..3 {
+            assert!((p.row(i).iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        }
+    }
+}

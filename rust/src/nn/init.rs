@@ -1,0 +1,46 @@
+//! Weight initializers. Sites must initialize identically (the paper seeds
+//! every site the same way), so all initializers are driven by the caller's
+//! deterministic `Rng`.
+
+use crate::tensor::{Matrix, Rng};
+
+/// He (Kaiming) uniform: U(-sqrt(6/fan_in), +sqrt(6/fan_in)) — matches
+/// python/compile/model.py::mlp_init.
+pub fn he_uniform(fan_in: usize, fan_out: usize, rng: &mut Rng) -> Matrix {
+    let bound = (6.0 / fan_in as f32).sqrt();
+    Matrix::rand_uniform(fan_in, fan_out, -bound, bound, rng)
+}
+
+/// Xavier/Glorot uniform: U(±sqrt(6/(fan_in+fan_out))) — used for the GRU
+/// and transformer projections.
+pub fn xavier_uniform(fan_in: usize, fan_out: usize, rng: &mut Rng) -> Matrix {
+    let bound = (6.0 / (fan_in + fan_out) as f32).sqrt();
+    Matrix::rand_uniform(fan_in, fan_out, -bound, bound, rng)
+}
+
+/// Scaled normal init (transformer embeddings / residual projections).
+pub fn normal(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Matrix {
+    Matrix::randn(rows, cols, std, rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn he_bounds_and_spread() {
+        let mut rng = Rng::new(9);
+        let w = he_uniform(100, 50, &mut rng);
+        let bound = (6.0f32 / 100.0).sqrt();
+        assert!(w.data().iter().all(|&v| v > -bound && v < bound));
+        // Not degenerate.
+        assert!(w.fro_norm() > 0.1);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut r1 = Rng::new(4);
+        let mut r2 = Rng::new(4);
+        assert_eq!(he_uniform(10, 10, &mut r1), he_uniform(10, 10, &mut r2));
+    }
+}

@@ -1,0 +1,111 @@
+//! Losses. Softmax cross-entropy is the paper's training loss; its output
+//! delta (softmax(z) - y) is exactly the Δ_L of eq. (2) — UNSCALED here, the
+//! coordinator applies 1/(S*N) so one code path serves any site count.
+
+use crate::nn::activations::softmax_rows;
+use crate::tensor::Matrix;
+
+/// Softmax cross-entropy: returns (mean loss over rows, UNSCALED output
+/// delta p - y). `y` is one-hot (N, C).
+pub fn softmax_xent(logits: &Matrix, y: &Matrix) -> (f32, Matrix) {
+    assert_eq!(logits.shape(), y.shape());
+    let n = logits.rows();
+    let mut delta = softmax_rows(logits);
+    let mut loss = 0.0f64;
+    for i in 0..n {
+        let zrow = logits.row(i);
+        let mx = zrow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let lse: f32 = zrow.iter().map(|&v| (v - mx).exp()).sum::<f32>().ln() + mx;
+        for (j, &yv) in y.row(i).iter().enumerate() {
+            if yv != 0.0 {
+                loss -= (yv * (zrow[j] - lse)) as f64;
+            }
+        }
+    }
+    delta.axpy(-1.0, y);
+    ((loss / n as f64) as f32, delta)
+}
+
+/// Mean-squared error: returns (mean over entries, UNSCALED delta 2(p-y)/C).
+pub fn mse(pred: &Matrix, y: &Matrix) -> (f32, Matrix) {
+    assert_eq!(pred.shape(), y.shape());
+    let diff = pred.sub(y);
+    let n = pred.numel() as f32;
+    let loss = diff.data().iter().map(|&d| d * d).sum::<f32>() / n;
+    let delta = diff.scale(2.0 * pred.rows() as f32 / n); // per-row-mean scale
+    (loss, delta)
+}
+
+/// One-hot encode labels into (n, classes).
+pub fn one_hot(labels: &[usize], classes: usize) -> Matrix {
+    let mut y = Matrix::zeros(labels.len(), classes);
+    for (i, &l) in labels.iter().enumerate() {
+        assert!(l < classes, "label {l} out of range {classes}");
+        y[(i, l)] = 1.0;
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn xent_uniform_is_log_c() {
+        let logits = Matrix::zeros(4, 10);
+        let y = one_hot(&[0, 3, 5, 9], 10);
+        let (loss, _) = softmax_xent(&logits, &y);
+        assert!((loss - (10.0f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn xent_delta_is_p_minus_y() {
+        let mut rng = Rng::new(1);
+        let logits = Matrix::randn(6, 5, 1.0, &mut rng);
+        let y = one_hot(&[0, 1, 2, 3, 4, 0], 5);
+        let (_, delta) = softmax_xent(&logits, &y);
+        let p = softmax_rows(&logits);
+        assert!(delta.max_abs_diff(&p.sub(&y)) < 1e-6);
+        // Rows of p - y sum to zero.
+        for i in 0..6 {
+            let s: f32 = delta.row(i).iter().sum();
+            assert!(s.abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn xent_delta_is_loss_gradient() {
+        // Finite-difference check: d(mean loss)/dz == delta / N.
+        let mut rng = Rng::new(2);
+        let logits = Matrix::randn(3, 4, 0.5, &mut rng);
+        let y = one_hot(&[1, 2, 0], 4);
+        let (_, delta) = softmax_xent(&logits, &y);
+        let eps = 1e-3f32;
+        for i in 0..3 {
+            for j in 0..4 {
+                let mut zp = logits.clone();
+                zp[(i, j)] += eps;
+                let mut zm = logits.clone();
+                zm[(i, j)] -= eps;
+                let fd = (softmax_xent(&zp, &y).0 - softmax_xent(&zm, &y).0) / (2.0 * eps);
+                let an = delta[(i, j)] / 3.0;
+                assert!((fd - an).abs() < 1e-3, "({i},{j}): fd={fd} an={an}");
+            }
+        }
+    }
+
+    #[test]
+    fn mse_zero_at_target() {
+        let y = Matrix::filled(2, 3, 0.7);
+        let (loss, delta) = mse(&y, &y);
+        assert_eq!(loss, 0.0);
+        assert_eq!(delta.max_abs(), 0.0);
+    }
+
+    #[test]
+    fn one_hot_rows() {
+        let y = one_hot(&[2, 0], 3);
+        assert_eq!(y.data(), &[0.0, 0.0, 1.0, 1.0, 0.0, 0.0]);
+    }
+}

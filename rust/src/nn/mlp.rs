@@ -1,0 +1,324 @@
+//! Feed-forward softmax-CE classifier — the paper's MNIST architecture
+//! (784 -> 1024 -> 1024 -> 10, ReLU), with the reverse-AD backward pass
+//! exposed as per-layer (A, Δ) statistics.
+//!
+//! Parameter layout (flat list): [W_1, b_1, W_2, b_2, ..., W_L, b_L], with
+//! W_i (h_{i-1}, h_i) and b_i (1, h_i). Stats entry i covers (W_{i+1},
+//! b_{i+1}) with A = A_i, Δ = Δ_{i+1} — exactly Algorithm 1's payloads.
+
+use crate::nn::activations::{softmax_rows, Activation};
+use crate::nn::init::he_uniform;
+use crate::nn::loss::softmax_xent;
+use crate::nn::model::{Batch, DistModel};
+use crate::nn::stats::{LocalStats, StatsEntry};
+use crate::tensor::{matmul, matmul_nt, Matrix, Rng};
+
+/// Feed-forward network with softmax cross-entropy output.
+#[derive(Clone)]
+pub struct Mlp {
+    /// Layer dims: [input, hidden..., classes].
+    pub dims: Vec<usize>,
+    /// Hidden activations (len = dims.len() - 2); output is softmax-CE.
+    pub acts: Vec<Activation>,
+    ws: Vec<Matrix>,
+    bs: Vec<Matrix>,
+}
+
+impl Mlp {
+    /// He-uniform init; deterministic in `rng` (sites share the seed).
+    pub fn new(dims: &[usize], acts: &[Activation], rng: &mut Rng) -> Self {
+        assert!(dims.len() >= 2);
+        assert_eq!(acts.len(), dims.len() - 2, "one activation per hidden layer");
+        let mut ws = Vec::new();
+        let mut bs = Vec::new();
+        for (&h_in, &h_out) in dims.iter().zip(&dims[1..]) {
+            ws.push(he_uniform(h_in, h_out, rng));
+            bs.push(Matrix::zeros(1, h_out));
+        }
+        Mlp { dims: dims.to_vec(), acts: acts.to_vec(), ws, bs }
+    }
+
+    /// The paper's MNIST network: 784-1024-1024-10, ReLU hidden layers.
+    pub fn paper_mnist(rng: &mut Rng) -> Self {
+        Mlp::new(&[784, 1024, 1024, 10], &[Activation::Relu, Activation::Relu], rng)
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.ws.len()
+    }
+
+    pub fn weight(&self, i: usize) -> &Matrix {
+        &self.ws[i]
+    }
+
+    /// Forward pass returning all activations [A_0 = x, A_1, ..., A_L].
+    /// A_L holds *logits* (softmax applied only inside the loss / predict).
+    pub fn forward(&self, x: &Matrix) -> Vec<Matrix> {
+        let mut acts = Vec::with_capacity(self.n_layers() + 1);
+        acts.push(x.clone());
+        for i in 0..self.n_layers() {
+            let mut z = matmul(acts.last().unwrap(), &self.ws[i]);
+            add_bias(&mut z, &self.bs[i]);
+            if i + 1 < self.n_layers() {
+                self.acts[i].apply(&mut z);
+            }
+            acts.push(z);
+        }
+        acts
+    }
+
+    /// Logits for a dense batch.
+    pub fn logits(&self, x: &Matrix) -> Matrix {
+        self.forward(x).pop().unwrap()
+    }
+
+    /// Backward delta recurrence from an output delta and activation list —
+    /// shared by local_stats and edad_recompute (they differ only in whose
+    /// activations are fed in: local or aggregated).
+    fn backward_deltas(&self, acts: &[Matrix], delta_out: Matrix) -> Vec<Matrix> {
+        let l = self.n_layers();
+        let mut deltas = vec![Matrix::zeros(0, 0); l];
+        deltas[l - 1] = delta_out;
+        for i in (0..l - 1).rev() {
+            // Δ_i = (Δ_{i+1} W_{i+1}ᵀ) ⊙ φ'_i(A_{i+1-th activation}) (eq. 3/5)
+            let mut d = matmul_nt(&deltas[i + 1], &self.ws[i + 1]);
+            self.acts[i].mask_delta_inplace(&mut d, &acts[i + 1]);
+            deltas[i] = d;
+        }
+        deltas
+    }
+}
+
+/// z += bias (broadcast row).
+pub fn add_bias(z: &mut Matrix, b: &Matrix) {
+    debug_assert_eq!(b.rows(), 1);
+    debug_assert_eq!(z.cols(), b.cols());
+    let brow = b.row(0).to_vec();
+    for i in 0..z.rows() {
+        for (v, &bv) in z.row_mut(i).iter_mut().zip(&brow) {
+            *v += bv;
+        }
+    }
+}
+
+impl DistModel for Mlp {
+    fn param_shapes(&self) -> Vec<(usize, usize)> {
+        let mut shapes = Vec::new();
+        for (w, b) in self.ws.iter().zip(&self.bs) {
+            shapes.push(w.shape());
+            shapes.push(b.shape());
+        }
+        shapes
+    }
+
+    fn params(&self) -> Vec<&Matrix> {
+        self.ws.iter().zip(&self.bs).flat_map(|(w, b)| [w, b]).collect()
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Matrix> {
+        self.ws
+            .iter_mut()
+            .zip(self.bs.iter_mut())
+            .flat_map(|(w, b)| [w, b])
+            .collect()
+    }
+
+    fn local_stats(&self, batch: &Batch) -> LocalStats {
+        let (x, y) = match batch {
+            Batch::Dense { x, y } => (x, y),
+            _ => panic!("Mlp consumes dense batches"),
+        };
+        let acts = self.forward(x);
+        let logits = acts.last().unwrap();
+        let (loss, delta_out) = softmax_xent(logits, y);
+        let deltas = self.backward_deltas(&acts, delta_out);
+        let entries = (0..self.n_layers())
+            .map(|i| StatsEntry {
+                w_idx: 2 * i,
+                b_idx: Some(2 * i + 1),
+                a: acts[i].clone(),
+                d: deltas[i].clone(),
+            })
+            .collect();
+        LocalStats { loss, entries, aux: vec![], direct: vec![] }
+    }
+
+    fn predict(&self, batch: &Batch) -> Matrix {
+        let x = match batch {
+            Batch::Dense { x, .. } => x,
+            _ => panic!("Mlp consumes dense batches"),
+        };
+        softmax_rows(&self.logits(x))
+    }
+
+    fn edad_recompute(
+        &self,
+        a_hats: &[Matrix],
+        _aux: &[Matrix],
+        delta_out: &Matrix,
+        _site_rows: &[usize],
+    ) -> Option<Vec<StatsEntry>> {
+        // a_hats[i] = aggregated A_i for i = 0..L-1; A_L (logits) is never
+        // needed because Δ_L itself is communicated (Algorithm 2 line 16).
+        let l = self.n_layers();
+        assert_eq!(a_hats.len(), l);
+        let mut acts: Vec<Matrix> = a_hats.to_vec();
+        acts.push(Matrix::zeros(0, 0)); // placeholder for logits (unused)
+        let deltas = self.backward_deltas(&acts, delta_out.clone());
+        Some(
+            (0..l)
+                .map(|i| StatsEntry {
+                    w_idx: 2 * i,
+                    b_idx: Some(2 * i + 1),
+                    a: a_hats[i].clone(),
+                    d: deltas[i].clone(),
+                })
+                .collect(),
+        )
+    }
+
+    fn local_stats_entry_count(&self) -> usize {
+        self.n_layers()
+    }
+
+    fn entry_names(&self) -> Vec<String> {
+        (0..self.n_layers())
+            .map(|i| {
+                if i + 1 == self.n_layers() {
+                    format!("output ({}x{})", self.dims[i], self.dims[i + 1])
+                } else {
+                    format!("fc{} ({}x{})", i + 1, self.dims[i], self.dims[i + 1])
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::loss::one_hot;
+
+    fn tiny(rng: &mut Rng) -> Mlp {
+        Mlp::new(&[6, 8, 5, 3], &[Activation::Relu, Activation::Tanh], rng)
+    }
+
+    fn batch(rng: &mut Rng, n: usize, d: usize, c: usize) -> Batch {
+        let x = Matrix::randn(n, d, 1.0, rng);
+        let labels: Vec<usize> = (0..n).map(|i| i % c).collect();
+        Batch::Dense { x, y: one_hot(&labels, c) }
+    }
+
+    /// The decisive correctness test: gradients assembled from the AD
+    /// statistics must match central finite differences of the loss.
+    #[test]
+    fn stats_grads_match_finite_difference() {
+        let mut rng = Rng::new(7);
+        let mlp = tiny(&mut rng);
+        let b = batch(&mut rng, 5, 6, 3);
+        let stats = mlp.local_stats(&b);
+        let shapes = mlp.param_shapes();
+        let n = b.len() as f32;
+        let grads = stats.assemble_grads(&shapes, 1.0 / n, 1.0);
+
+        let loss_of = |m: &Mlp| {
+            let s = m.local_stats(&b);
+            s.loss
+        };
+        let eps = 5e-3f32;
+        for (pi, g) in grads.iter().enumerate() {
+            // Spot-check a handful of coordinates per parameter.
+            let (rows, cols) = g.shape();
+            for &(i, j) in &[(0usize, 0usize), (rows / 2, cols / 2), (rows - 1, cols - 1)] {
+                let mut mp = mlp.clone();
+                mp.params_mut()[pi][(i, j)] += eps;
+                let mut mm = mlp.clone();
+                mm.params_mut()[pi][(i, j)] -= eps;
+                let fd = (loss_of(&mp) - loss_of(&mm)) / (2.0 * eps);
+                let an = g[(i, j)];
+                assert!(
+                    (fd - an).abs() < 2e-2 * (1.0 + an.abs()),
+                    "param {pi} ({i},{j}): fd={fd} an={an}"
+                );
+            }
+        }
+    }
+
+    /// edAD recompute from aggregated activations must reproduce the
+    /// concatenation of local deltas exactly (Algorithm 2's claim).
+    #[test]
+    fn edad_recompute_equals_concat() {
+        let mut rng = Rng::new(11);
+        let mlp = tiny(&mut rng);
+        let b1 = batch(&mut rng, 4, 6, 3);
+        let b2 = batch(&mut rng, 4, 6, 3);
+        let s1 = mlp.local_stats(&b1);
+        let s2 = mlp.local_stats(&b2);
+        let a_hats: Vec<Matrix> = (0..s1.entries.len())
+            .map(|i| Matrix::vertcat(&[&s1.entries[i].a, &s2.entries[i].a]))
+            .collect();
+        let d_l = Matrix::vertcat(&[&s1.entries.last().unwrap().d, &s2.entries.last().unwrap().d]);
+        let re = mlp.edad_recompute(&a_hats, &[], &d_l, &[4, 4]).unwrap();
+        for i in 0..re.len() {
+            let d_cat = Matrix::vertcat(&[&s1.entries[i].d, &s2.entries[i].d]);
+            let diff = re[i].d.max_abs_diff(&d_cat);
+            assert!(diff < 1e-5, "layer {i} delta mismatch {diff}");
+        }
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let mut rng = Rng::new(1);
+        let mlp = Mlp::paper_mnist(&mut rng);
+        let x = Matrix::randn(3, 784, 1.0, &mut rng);
+        let acts = mlp.forward(&x);
+        assert_eq!(acts.len(), 4);
+        assert_eq!(acts[1].shape(), (3, 1024));
+        assert_eq!(acts[3].shape(), (3, 10));
+    }
+
+    #[test]
+    fn predict_rows_are_distributions() {
+        let mut rng = Rng::new(2);
+        let mlp = tiny(&mut rng);
+        let b = batch(&mut rng, 4, 6, 3);
+        let p = mlp.predict(&b);
+        for i in 0..4 {
+            let s: f32 = p.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn param_roundtrip() {
+        let mut rng = Rng::new(3);
+        let mut mlp = tiny(&mut rng);
+        let shapes = mlp.param_shapes();
+        assert_eq!(shapes.len(), 6);
+        let snapshot: Vec<Matrix> = mlp.params().into_iter().cloned().collect();
+        mlp.params_mut()[0][(0, 0)] += 1.0;
+        assert_ne!(*mlp.params()[0], snapshot[0]);
+        mlp.set_params(&snapshot);
+        assert_eq!(*mlp.params()[0], snapshot[0]);
+    }
+
+    #[test]
+    fn training_reduces_loss() {
+        use crate::nn::optimizer::Adam;
+        let mut rng = Rng::new(5);
+        let mut mlp = tiny(&mut rng);
+        let b = batch(&mut rng, 16, 6, 3);
+        let shapes = mlp.param_shapes();
+        let mut opt = Adam::new(1e-2, &shapes);
+        let first = mlp.local_stats(&b).loss;
+        for _ in 0..60 {
+            let stats = mlp.local_stats(&b);
+            let grads = stats.assemble_grads(&shapes, 1.0 / 16.0, 1.0);
+            let mut params: Vec<Matrix> = mlp.params().into_iter().cloned().collect();
+            opt.step(&mut params, &grads);
+            mlp.set_params(&params);
+        }
+        let last = mlp.local_stats(&b).loss;
+        assert!(last < first * 0.5, "loss did not drop: {first} -> {last}");
+    }
+}

@@ -1,0 +1,22 @@
+//! Neural-network substrate: layers, losses, optimizers, and the three
+//! model families the paper evaluates (feed-forward MLP, GRU classifier)
+//! plus a decoder-only transformer for the end-to-end driver — all exposing
+//! reverse-AD statistics (A, Δ) per dense parameter via `DistModel`.
+
+pub mod activations;
+pub mod gru;
+pub mod init;
+pub mod loss;
+pub mod mlp;
+pub mod model;
+pub mod optimizer;
+pub mod stats;
+pub mod transformer;
+
+pub use activations::Activation;
+pub use gru::GruClassifier;
+pub use mlp::Mlp;
+pub use model::{Batch, DistModel};
+pub use optimizer::{Adam, Sgd};
+pub use stats::{LocalStats, StatsEntry};
+pub use transformer::Transformer;

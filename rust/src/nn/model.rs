@@ -1,0 +1,102 @@
+//! Common model interface consumed by the distributed algorithms.
+//!
+//! Every architecture (MLP, GRU classifier, decoder-only transformer)
+//! exposes the same contract: produce AD statistics for a batch, accept a
+//! synchronized gradient list, and score inputs for evaluation. The
+//! algorithms in `crate::algos` are generic over this trait, which is what
+//! makes dAD a *first-class feature* rather than something wired into one
+//! model.
+
+use crate::nn::stats::{LocalStats, StatsEntry};
+use crate::tensor::Matrix;
+
+/// A batch of training data, in whichever layout the model consumes.
+#[derive(Clone, Debug)]
+pub enum Batch {
+    /// Dense features: x (N, d), y one-hot (N, C).
+    Dense { x: Matrix, y: Matrix },
+    /// Sequences: xs[t] is (N, c_in) for t = 0..T; y one-hot (N, C).
+    Seq { xs: Vec<Matrix>, y: Matrix },
+    /// Token streams for the LM: ids/targets are (B, T) row-major.
+    Tokens { b: usize, t: usize, ids: Vec<u32>, targets: Vec<u32> },
+}
+
+impl Batch {
+    /// Number of examples (rows of the eventual output delta).
+    pub fn len(&self) -> usize {
+        match self {
+            Batch::Dense { x, .. } => x.rows(),
+            Batch::Seq { y, .. } => y.rows(),
+            Batch::Tokens { b, .. } => *b,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn labels_onehot(&self) -> Option<&Matrix> {
+        match self {
+            Batch::Dense { y, .. } | Batch::Seq { y, .. } => Some(y),
+            Batch::Tokens { .. } => None,
+        }
+    }
+}
+
+/// Model contract for distributed training.
+pub trait DistModel {
+    /// Flat parameter list (weights, biases, everything updatable).
+    fn param_shapes(&self) -> Vec<(usize, usize)>;
+    fn params(&self) -> Vec<&Matrix>;
+    fn params_mut(&mut self) -> Vec<&mut Matrix>;
+
+    /// Forward + backward on a local batch, producing the paper's statistics.
+    fn local_stats(&self, batch: &Batch) -> LocalStats;
+
+    /// Class scores (N, C) for evaluation (softmax probabilities).
+    fn predict(&self, batch: &Batch) -> Matrix;
+
+    /// edAD (Algorithm 2): recompute the full aggregated delta stacks from
+    /// the aggregated A-stacks (`a_hats`, one per stats entry, in entry
+    /// order), the aggregated aux activations and the aggregated output
+    /// delta. `site_rows` gives each site's example count — needed by
+    /// models whose stacks are site-major with t-major blocks inside
+    /// (recurrent nets). Returns None if the architecture does not support
+    /// the activation-derivative recurrence (e.g. attention).
+    fn edad_recompute(
+        &self,
+        a_hats: &[Matrix],
+        aux: &[Matrix],
+        delta_out: &Matrix,
+        site_rows: &[usize],
+    ) -> Option<Vec<StatsEntry>>;
+
+    /// Human-readable per-entry layer names (for Table-2 / effective-rank
+    /// reporting). Default: entry indices.
+    fn entry_names(&self) -> Vec<String> {
+        (0..self.local_stats_entry_count()).map(|i| format!("entry{i}")).collect()
+    }
+
+    /// Number of stats entries a batch produces (layers with dense weights).
+    fn local_stats_entry_count(&self) -> usize;
+
+    /// In-place parameter update: p -= ... is the optimizer's job; models
+    /// only expose storage. Provided for convenience.
+    fn set_params(&mut self, new: &[Matrix]) {
+        for (p, n) in self.params_mut().into_iter().zip(new) {
+            *p = n.clone();
+        }
+    }
+}
+
+/// Clone-able model handle: sites hold replicas; `replicate` must produce a
+/// bit-identical copy (the paper's "same random seed" requirement).
+pub trait Replicate: Sized {
+    fn replicate(&self) -> Self;
+}
+
+impl<T: Clone> Replicate for T {
+    fn replicate(&self) -> T {
+        self.clone()
+    }
+}

@@ -1,0 +1,158 @@
+//! Optimizers over flat parameter lists. The paper trains everything with
+//! Adam(lr=1e-4); every site runs the *same* optimizer on the *same* global
+//! gradient, so replicas stay bit-identical without parameter broadcasts.
+
+use crate::tensor::Matrix;
+
+/// Adam with bias-corrected moments (Kingma & Ba), matching PyTorch defaults
+/// except where the paper overrides them (lr = 1e-4).
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    t: u64,
+    m: Vec<Matrix>,
+    v: Vec<Matrix>,
+}
+
+impl Adam {
+    pub fn new(lr: f32, shapes: &[(usize, usize)]) -> Self {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            t: 0,
+            m: shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect(),
+            v: shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect(),
+        }
+    }
+
+    /// Paper configuration: Adam with fixed lr 1e-4.
+    pub fn paper(shapes: &[(usize, usize)]) -> Self {
+        Adam::new(1e-4, shapes)
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.t
+    }
+
+    /// One update step. `params[i] -= lr * mhat / (sqrt(vhat)+eps)`.
+    pub fn step(&mut self, params: &mut [Matrix], grads: &[Matrix]) {
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), self.m.len());
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for ((p, g), (m, v)) in
+            params.iter_mut().zip(grads).zip(self.m.iter_mut().zip(self.v.iter_mut()))
+        {
+            assert_eq!(p.shape(), g.shape(), "optimizer shape mismatch");
+            let (b1, b2, eps, lr) = (self.beta1, self.beta2, self.eps, self.lr);
+            let pd = p.data_mut();
+            let md = m.data_mut();
+            let vd = v.data_mut();
+            let gd = g.data();
+            // Zipped iteration: no bounds checks in the 4-array hot loop.
+            for (((pi, mi), vi), &gi) in
+                pd.iter_mut().zip(md.iter_mut()).zip(vd.iter_mut()).zip(gd)
+            {
+                *mi = b1 * *mi + (1.0 - b1) * gi;
+                *vi = b2 * *vi + (1.0 - b2) * gi * gi;
+                let mhat = *mi / b1t;
+                let vhat = *vi / b2t;
+                *pi -= lr * mhat / (vhat.sqrt() + eps);
+            }
+        }
+    }
+}
+
+/// Plain SGD (used by ablation benches and the PowerSGD baseline's default).
+pub struct Sgd {
+    pub lr: f32,
+    pub momentum: f32,
+    vel: Option<Vec<Matrix>>,
+}
+
+impl Sgd {
+    pub fn new(lr: f32, momentum: f32) -> Self {
+        Sgd { lr, momentum, vel: None }
+    }
+
+    pub fn step(&mut self, params: &mut [Matrix], grads: &[Matrix]) {
+        assert_eq!(params.len(), grads.len());
+        if self.momentum == 0.0 {
+            for (p, g) in params.iter_mut().zip(grads) {
+                p.axpy(-self.lr, g);
+            }
+            return;
+        }
+        let vel = self
+            .vel
+            .get_or_insert_with(|| grads.iter().map(|g| Matrix::zeros(g.rows(), g.cols())).collect());
+        for ((p, g), v) in params.iter_mut().zip(grads).zip(vel.iter_mut()) {
+            v.scale_inplace(self.momentum);
+            v.axpy(1.0, g);
+            p.axpy(-self.lr, v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    /// Adam must minimize a simple quadratic.
+    #[test]
+    fn adam_minimizes_quadratic() {
+        let mut rng = Rng::new(1);
+        let target = Matrix::randn(4, 4, 1.0, &mut rng);
+        let mut p = vec![Matrix::zeros(4, 4)];
+        let mut opt = Adam::new(0.05, &[(4, 4)]);
+        for _ in 0..500 {
+            let g = p[0].sub(&target);
+            opt.step(&mut p, &[g]);
+        }
+        assert!(p[0].max_abs_diff(&target) < 0.05);
+    }
+
+    #[test]
+    fn adam_first_step_size_is_lr() {
+        // With bias correction, |Δp| of step 1 == lr regardless of grad scale.
+        let mut p = vec![Matrix::filled(1, 1, 1.0)];
+        let mut opt = Adam::new(1e-2, &[(1, 1)]);
+        opt.step(&mut p, &[Matrix::filled(1, 1, 123.0)]);
+        assert!((p[0][(0, 0)] - (1.0 - 1e-2)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn adam_deterministic() {
+        let g = Matrix::from_vec(1, 2, vec![0.5, -0.25]);
+        let mut p1 = vec![Matrix::zeros(1, 2)];
+        let mut p2 = vec![Matrix::zeros(1, 2)];
+        let mut o1 = Adam::paper(&[(1, 2)]);
+        let mut o2 = Adam::paper(&[(1, 2)]);
+        for _ in 0..10 {
+            o1.step(&mut p1, std::slice::from_ref(&g));
+            o2.step(&mut p2, std::slice::from_ref(&g));
+        }
+        assert_eq!(p1[0], p2[0]);
+    }
+
+    #[test]
+    fn sgd_momentum_accelerates() {
+        let target = Matrix::filled(1, 1, 2.0);
+        let run = |mom: f32| {
+            let mut p = vec![Matrix::zeros(1, 1)];
+            let mut opt = Sgd::new(0.01, mom);
+            for _ in 0..100 {
+                let g = p[0].sub(&target);
+                opt.step(&mut p, &[g]);
+            }
+            (p[0][(0, 0)] - 2.0).abs()
+        };
+        assert!(run(0.9) < run(0.0));
+    }
+}

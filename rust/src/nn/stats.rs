@@ -1,0 +1,190 @@
+//! The paper's shared statistic: per-parameter (A, Δ) factor pairs.
+//!
+//! For every dense parameter W (h_in x h_out) touched by a batch, reverse AD
+//! yields an input-activation stack A (N' x h_in) and a delta stack
+//! Δ (N' x h_out) with   grad W = scale * Aᵀ Δ   (paper eq. 4). N' is the
+//! batch size for feed-forward layers and T*N for unrolled recurrent weights
+//! (section 3.5). dAD ships these stacks; edAD ships only A-stacks (+ small
+//! model-specific aux activations) and the output delta; rank-dAD ships
+//! low-rank factors of the same outer product.
+
+use crate::tensor::{matmul_tn, Matrix};
+
+/// AD statistics for one dense parameter.
+#[derive(Clone, Debug)]
+pub struct StatsEntry {
+    /// Index of the weight matrix in the model's flat parameter list.
+    pub w_idx: usize,
+    /// Index of the bias (grad = scale * colsum(Δ)); biases ride along with
+    /// the deltas and cost no extra communication under dAD/edAD.
+    pub b_idx: Option<usize>,
+    /// Input-activation stack (N', h_in).
+    pub a: Matrix,
+    /// Delta stack (N', h_out), UNSCALED.
+    pub d: Matrix,
+}
+
+impl StatsEntry {
+    /// grad W = scale * Aᵀ Δ.
+    pub fn weight_grad(&self, scale: f32) -> Matrix {
+        let mut g = matmul_tn(&self.a, &self.d);
+        g.scale_inplace(scale);
+        g
+    }
+
+    /// grad b = scale * 1ᵀ Δ (row vector 1 x h_out).
+    pub fn bias_grad(&self, scale: f32) -> Matrix {
+        let sums = self.d.col_sums();
+        Matrix::from_vec(1, sums.len(), sums).scale(scale)
+    }
+
+    /// Bytes to ship both factors (dAD's per-layer site->aggregator cost).
+    pub fn wire_bytes(&self) -> u64 {
+        self.a.wire_bytes() + self.d.wire_bytes()
+    }
+}
+
+/// Everything one site produces for one batch.
+#[derive(Clone, Debug)]
+pub struct LocalStats {
+    /// Mean loss over the site's batch.
+    pub loss: f32,
+    /// Factor pairs for the dense parameters (the dAD payload).
+    pub entries: Vec<StatsEntry>,
+    /// Extra activations edAD must broadcast to recompute deltas at the
+    /// aggregated level (empty for MLPs; gate activations for GRUs).
+    pub aux: Vec<Matrix>,
+    /// Gradients for parameters with no outer-product form (embeddings,
+    /// layer norms); exchanged dSGD-style by every algorithm.
+    pub direct: Vec<(usize, Matrix)>,
+}
+
+impl LocalStats {
+    /// Assemble the full gradient list (aligned with the model's parameter
+    /// list) from statistics. `scale` is 1/(S*N_per_site*...) — whatever
+    /// converts unscaled delta sums into the global-mean gradient.
+    pub fn assemble_grads(
+        &self,
+        shapes: &[(usize, usize)],
+        scale: f32,
+        direct_scale: f32,
+    ) -> Vec<Matrix> {
+        assemble_grads(shapes, &self.entries, &self.direct, scale, direct_scale)
+    }
+}
+
+/// Gradient assembly shared by all algorithms: outer products for stats
+/// entries, pass-through (scaled) for direct grads, zeros elsewhere.
+pub fn assemble_grads(
+    shapes: &[(usize, usize)],
+    entries: &[StatsEntry],
+    direct: &[(usize, Matrix)],
+    scale: f32,
+    direct_scale: f32,
+) -> Vec<Matrix> {
+    let mut grads: Vec<Matrix> = shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect();
+    for e in entries {
+        grads[e.w_idx] = e.weight_grad(scale);
+        if let Some(bi) = e.b_idx {
+            grads[bi] = e.bias_grad(scale);
+        }
+    }
+    for (idx, g) in direct {
+        let mut g = g.clone();
+        g.scale_inplace(direct_scale);
+        grads[*idx] = g;
+    }
+    grads
+}
+
+/// Concatenate per-site stats along the batch dimension — the aggregator's
+/// `vertcat` (Algorithms 1-2). Entry lists must be congruent across sites.
+pub fn concat_stats(site_stats: &[&[StatsEntry]]) -> Vec<StatsEntry> {
+    assert!(!site_stats.is_empty());
+    let n_entries = site_stats[0].len();
+    (0..n_entries)
+        .map(|i| {
+            let a_parts: Vec<&Matrix> = site_stats.iter().map(|s| &s[i].a).collect();
+            let d_parts: Vec<&Matrix> = site_stats.iter().map(|s| &s[i].d).collect();
+            StatsEntry {
+                w_idx: site_stats[0][i].w_idx,
+                b_idx: site_stats[0][i].b_idx,
+                a: Matrix::vertcat(&a_parts),
+                d: Matrix::vertcat(&d_parts),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    #[test]
+    fn weight_grad_is_scaled_outer() {
+        let mut rng = Rng::new(1);
+        let e = StatsEntry {
+            w_idx: 0,
+            b_idx: None,
+            a: Matrix::randn(8, 5, 1.0, &mut rng),
+            d: Matrix::randn(8, 3, 1.0, &mut rng),
+        };
+        let g = e.weight_grad(0.5);
+        let want = matmul_tn(&e.a, &e.d).scale(0.5);
+        assert!(g.max_abs_diff(&want) < 1e-6);
+        assert_eq!(g.shape(), (5, 3));
+    }
+
+    #[test]
+    fn concat_linearity_of_grad() {
+        // grad(concat) == sum of per-site grads — the dAD exactness identity.
+        let mut rng = Rng::new(2);
+        let mk = |rng: &mut Rng| StatsEntry {
+            w_idx: 0,
+            b_idx: Some(1),
+            a: Matrix::randn(4, 6, 1.0, rng),
+            d: Matrix::randn(4, 2, 1.0, rng),
+        };
+        let s1 = vec![mk(&mut rng)];
+        let s2 = vec![mk(&mut rng)];
+        let cat = concat_stats(&[&s1, &s2]);
+        assert_eq!(cat[0].a.shape(), (8, 6));
+        let g_cat = cat[0].weight_grad(1.0);
+        let mut g_sum = s1[0].weight_grad(1.0);
+        g_sum.axpy(1.0, &s2[0].weight_grad(1.0));
+        assert!(g_cat.max_abs_diff(&g_sum) < 1e-5);
+        let b_cat = cat[0].bias_grad(1.0);
+        let mut b_sum = s1[0].bias_grad(1.0);
+        b_sum.axpy(1.0, &s2[0].bias_grad(1.0));
+        assert!(b_cat.max_abs_diff(&b_sum) < 1e-5);
+    }
+
+    #[test]
+    fn assemble_fills_all_shapes() {
+        let mut rng = Rng::new(3);
+        let entries = vec![StatsEntry {
+            w_idx: 0,
+            b_idx: Some(1),
+            a: Matrix::randn(4, 5, 1.0, &mut rng),
+            d: Matrix::randn(4, 3, 1.0, &mut rng),
+        }];
+        let direct = vec![(2usize, Matrix::filled(2, 2, 4.0))];
+        let shapes = [(5, 3), (1, 3), (2, 2)];
+        let grads = assemble_grads(&shapes, &entries, &direct, 1.0, 0.5);
+        assert_eq!(grads.len(), 3);
+        assert_eq!(grads[0].shape(), (5, 3));
+        assert_eq!(grads[2][(0, 0)], 2.0);
+    }
+
+    #[test]
+    fn wire_bytes_counts_both_factors() {
+        let e = StatsEntry {
+            w_idx: 0,
+            b_idx: None,
+            a: Matrix::zeros(32, 784),
+            d: Matrix::zeros(32, 1024),
+        };
+        assert_eq!(e.wire_bytes(), (32 * 784 + 32 * 1024) as u64 * 4);
+    }
+}

@@ -1,0 +1,570 @@
+//! Decoder-only transformer LM with a fully manual backward pass exposing
+//! per-linear (A, Δ) statistics — the paper's method applied to the
+//! architecture its section 5.3.2 mentions ("as well as transformers").
+//!
+//! dAD covers every dense projection (W_qkv, W_o, W_fc1, W_fc2, lm_head);
+//! embeddings, positional table and LayerNorm gains/biases have no
+//! outer-product factorization, so their (small) gradients travel in
+//! `LocalStats::direct`, dSGD-style — analogous to the paper's observation
+//! that convolutions need special treatment. edAD is not defined through
+//! attention (the softmax mixes rows), so `edad_recompute` returns None and
+//! the coordinator falls back to dAD for this architecture.
+
+use crate::nn::init::normal;
+use crate::nn::loss::softmax_xent;
+use crate::nn::model::{Batch, DistModel};
+use crate::nn::stats::{LocalStats, StatsEntry};
+use crate::tensor::{matmul, matmul_nt, Matrix, Rng};
+
+/// Transformer hyperparameters.
+#[derive(Clone, Debug)]
+pub struct TransformerConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub max_t: usize,
+}
+
+impl TransformerConfig {
+    pub fn tiny() -> Self {
+        TransformerConfig { vocab: 11, d_model: 8, n_heads: 2, n_layers: 2, d_ff: 16, max_t: 6 }
+    }
+
+    /// ~12.8M parameters: the end-to-end training driver's scale
+    /// (examples/transformer_e2e.rs; see EXPERIMENTS.md for why the session
+    /// substitutes this for a 100M model on a CPU-only testbed).
+    pub fn e2e() -> Self {
+        TransformerConfig { vocab: 512, d_model: 320, n_heads: 8, n_layers: 10, d_ff: 1280, max_t: 64 }
+    }
+
+    pub fn n_params(&self) -> usize {
+        let d = self.d_model;
+        let per_block = d * 3 * d + 3 * d + d * d + d + 2 * d + d * self.d_ff + self.d_ff
+            + self.d_ff * d + d + 2 * d;
+        self.vocab * d + self.max_t * d + self.n_layers * per_block + 2 * d + d * self.vocab
+    }
+}
+
+/// Parameter indices per block (offsets into the flat list).
+const BLOCK_PARAMS: usize = 12;
+
+#[derive(Clone)]
+pub struct Transformer {
+    pub cfg: TransformerConfig,
+    /// Flat parameter list; layout documented in `param_layout`.
+    params: Vec<Matrix>,
+}
+
+/// Saved forward state for backward.
+struct Saved {
+    x0: Matrix, // embed+pos (rows = B*T)
+    per_block: Vec<BlockSaved>,
+    hf: Matrix,         // final LN output
+    lnf: LnSaved,       // final LN stats
+    x_final: Matrix,    // input of final LN
+    logits: Matrix,     // (B*T, V)
+}
+
+struct BlockSaved {
+    ln1: LnSaved,   // LN1 stats
+    h1: Matrix,     // LN1 output
+    q: Matrix,      // (B*T, D)
+    k: Matrix,
+    v: Matrix,
+    probs: Vec<Matrix>, // per (b, head): (T, T) causal softmax rows
+    ctx: Matrix,        // concatenated heads (B*T, D)
+    ln2: LnSaved,
+    h2: Matrix,         // LN2 output
+    f: Matrix,          // relu(fc1) output (B*T, F)
+}
+
+struct LnSaved {
+    xhat: Matrix,
+    rstd: Vec<f32>,
+}
+
+fn layer_norm(x: &Matrix, g: &Matrix, b: &Matrix) -> (Matrix, LnSaved) {
+    let (n, d) = x.shape();
+    let mut out = Matrix::zeros(n, d);
+    let mut xhat = Matrix::zeros(n, d);
+    let mut rstd = vec![0.0f32; n];
+    let eps = 1e-5f32;
+    for i in 0..n {
+        let row = x.row(i);
+        let mean = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let r = 1.0 / (var + eps).sqrt();
+        rstd[i] = r;
+        for j in 0..d {
+            let xh = (row[j] - mean) * r;
+            xhat[(i, j)] = xh;
+            out[(i, j)] = g[(0, j)] * xh + b[(0, j)];
+        }
+    }
+    (out, LnSaved { xhat, rstd })
+}
+
+/// LayerNorm backward: returns (dx, dg, db).
+fn layer_norm_backward(dy: &Matrix, g: &Matrix, saved: &LnSaved) -> (Matrix, Matrix, Matrix) {
+    let (n, d) = dy.shape();
+    let mut dx = Matrix::zeros(n, d);
+    let mut dg = Matrix::zeros(1, d);
+    let mut db = Matrix::zeros(1, d);
+    for i in 0..n {
+        let mut sum_dyg = 0.0f32;
+        let mut sum_dyg_xhat = 0.0f32;
+        for j in 0..d {
+            let dyg = dy[(i, j)] * g[(0, j)];
+            sum_dyg += dyg;
+            sum_dyg_xhat += dyg * saved.xhat[(i, j)];
+            dg[(0, j)] += dy[(i, j)] * saved.xhat[(i, j)];
+            db[(0, j)] += dy[(i, j)];
+        }
+        let m1 = sum_dyg / d as f32;
+        let m2 = sum_dyg_xhat / d as f32;
+        for j in 0..d {
+            let dyg = dy[(i, j)] * g[(0, j)];
+            dx[(i, j)] = saved.rstd[i] * (dyg - m1 - saved.xhat[(i, j)] * m2);
+        }
+    }
+    (dx, dg, db)
+}
+
+fn add_bias_rows(z: &mut Matrix, b: &Matrix) {
+    for i in 0..z.rows() {
+        for (v, &bv) in z.row_mut(i).iter_mut().zip(b.row(0)) {
+            *v += bv;
+        }
+    }
+}
+
+impl Transformer {
+    /// Parameter layout:
+    ///   0: embed (V, D)      1: pos (max_t, D)
+    ///   per block k (base = 2 + k*12):
+    ///     +0 W_qkv (D,3D) +1 b_qkv  +2 W_o (D,D) +3 b_o
+    ///     +4 ln1_g +5 ln1_b  +6 W_fc1 (D,F) +7 b_fc1
+    ///     +8 W_fc2 (F,D) +9 b_fc2  +10 ln2_g +11 ln2_b
+    ///   tail (base = 2 + L*12): +0 lnf_g +1 lnf_b +2 lm_head (D,V)
+    pub fn new(cfg: TransformerConfig, rng: &mut Rng) -> Self {
+        let d = cfg.d_model;
+        let std = 0.02f32;
+        let mut params = vec![
+            normal(cfg.vocab, d, std, rng),
+            normal(cfg.max_t, d, std, rng),
+        ];
+        let resid_std = std / (2.0 * cfg.n_layers as f32).sqrt();
+        for _ in 0..cfg.n_layers {
+            params.push(normal(d, 3 * d, std, rng)); // W_qkv
+            params.push(Matrix::zeros(1, 3 * d));
+            params.push(normal(d, d, resid_std, rng)); // W_o
+            params.push(Matrix::zeros(1, d));
+            params.push(Matrix::filled(1, d, 1.0)); // ln1_g
+            params.push(Matrix::zeros(1, d));
+            params.push(normal(d, cfg.d_ff, std, rng)); // W_fc1
+            params.push(Matrix::zeros(1, cfg.d_ff));
+            params.push(normal(cfg.d_ff, d, resid_std, rng)); // W_fc2
+            params.push(Matrix::zeros(1, d));
+            params.push(Matrix::filled(1, d, 1.0)); // ln2_g
+            params.push(Matrix::zeros(1, d));
+        }
+        params.push(Matrix::filled(1, d, 1.0)); // lnf_g
+        params.push(Matrix::zeros(1, d));
+        params.push(normal(d, cfg.vocab, std, rng)); // lm_head
+        Transformer { cfg, params }
+    }
+
+    fn block_base(&self, k: usize) -> usize {
+        2 + k * BLOCK_PARAMS
+    }
+
+    fn tail_base(&self) -> usize {
+        2 + self.cfg.n_layers * BLOCK_PARAMS
+    }
+
+    fn forward(&self, b: usize, t: usize, ids: &[u32]) -> Saved {
+        let cfg = &self.cfg;
+        let d = cfg.d_model;
+        let rows = b * t;
+        assert!(t <= cfg.max_t);
+        let embed = &self.params[0];
+        let pos = &self.params[1];
+        let mut x = Matrix::zeros(rows, d);
+        for r in 0..rows {
+            let tok = ids[r] as usize;
+            let tt = r % t;
+            for j in 0..d {
+                x[(r, j)] = embed[(tok, j)] + pos[(tt, j)];
+            }
+        }
+        let x0 = x.clone();
+        let mut per_block = Vec::with_capacity(cfg.n_layers);
+        for kblock in 0..cfg.n_layers {
+            let base = self.block_base(kblock);
+            let (w_qkv, b_qkv) = (&self.params[base], &self.params[base + 1]);
+            let (w_o, b_o) = (&self.params[base + 2], &self.params[base + 3]);
+            let (g1, bb1) = (&self.params[base + 4], &self.params[base + 5]);
+            let (w_fc1, b_fc1) = (&self.params[base + 6], &self.params[base + 7]);
+            let (w_fc2, b_fc2) = (&self.params[base + 8], &self.params[base + 9]);
+            let (g2, bb2) = (&self.params[base + 10], &self.params[base + 11]);
+
+            let (h1, ln1) = layer_norm(&x, g1, bb1);
+            let mut qkv = matmul(&h1, w_qkv);
+            add_bias_rows(&mut qkv, b_qkv);
+            let dh = d / cfg.n_heads;
+            let scale = 1.0 / (dh as f32).sqrt();
+            // Split q/k/v.
+            let mut q = Matrix::zeros(rows, d);
+            let mut k = Matrix::zeros(rows, d);
+            let mut v = Matrix::zeros(rows, d);
+            for r in 0..rows {
+                q.row_mut(r).copy_from_slice(&qkv.row(r)[0..d]);
+                k.row_mut(r).copy_from_slice(&qkv.row(r)[d..2 * d]);
+                v.row_mut(r).copy_from_slice(&qkv.row(r)[2 * d..3 * d]);
+            }
+            // Causal attention per (batch, head).
+            let mut ctx = Matrix::zeros(rows, d);
+            let mut probs = Vec::with_capacity(b * cfg.n_heads);
+            for bi in 0..b {
+                let r0 = bi * t;
+                for hh in 0..cfg.n_heads {
+                    let c0 = hh * dh;
+                    // scores (T,T), causal.
+                    let mut p = Matrix::zeros(t, t);
+                    for ti in 0..t {
+                        let qrow = &q.row(r0 + ti)[c0..c0 + dh];
+                        let mut mx = f32::NEG_INFINITY;
+                        for tj in 0..=ti {
+                            let krow = &k.row(r0 + tj)[c0..c0 + dh];
+                            let s = crate::tensor::dot(qrow, krow) * scale;
+                            p[(ti, tj)] = s;
+                            mx = mx.max(s);
+                        }
+                        let mut sum = 0.0f32;
+                        for tj in 0..=ti {
+                            let e = (p[(ti, tj)] - mx).exp();
+                            p[(ti, tj)] = e;
+                            sum += e;
+                        }
+                        let inv = 1.0 / sum;
+                        for tj in 0..=ti {
+                            p[(ti, tj)] *= inv;
+                        }
+                        // ctx row
+                        for jj in 0..dh {
+                            let mut acc = 0.0f32;
+                            for tj in 0..=ti {
+                                acc += p[(ti, tj)] * v.row(r0 + tj)[c0 + jj];
+                            }
+                            ctx[(r0 + ti, c0 + jj)] = acc;
+                        }
+                    }
+                    probs.push(p);
+                }
+            }
+            let mut o = matmul(&ctx, w_o);
+            add_bias_rows(&mut o, b_o);
+            x = x.add(&o);
+            let (h2, ln2) = layer_norm(&x, g2, bb2);
+            let mut f = matmul(&h2, w_fc1);
+            add_bias_rows(&mut f, b_fc1);
+            f.map_inplace(|v| v.max(0.0));
+            let mut m = matmul(&f, w_fc2);
+            add_bias_rows(&mut m, b_fc2);
+            x = x.add(&m);
+            per_block.push(BlockSaved { ln1, h1, q, k, v, probs, ctx, ln2, h2, f });
+        }
+        let tb = self.tail_base();
+        let x_final = x.clone();
+        let (hf, lnf) = layer_norm(&x, &self.params[tb], &self.params[tb + 1]);
+        let logits = matmul(&hf, &self.params[tb + 2]);
+        Saved { x0, per_block, hf, lnf, x_final, logits }
+    }
+
+    /// Mean next-token cross-entropy of a token batch.
+    pub fn loss(&self, batch: &Batch) -> f32 {
+        self.local_stats(batch).loss
+    }
+}
+
+impl DistModel for Transformer {
+    fn param_shapes(&self) -> Vec<(usize, usize)> {
+        self.params.iter().map(|p| p.shape()).collect()
+    }
+
+    fn params(&self) -> Vec<&Matrix> {
+        self.params.iter().collect()
+    }
+
+    fn params_mut(&mut self) -> Vec<&mut Matrix> {
+        self.params.iter_mut().collect()
+    }
+
+    fn local_stats(&self, batch: &Batch) -> LocalStats {
+        let (b, t, ids, targets) = match batch {
+            Batch::Tokens { b, t, ids, targets } => (*b, *t, ids, targets),
+            _ => panic!("Transformer consumes token batches"),
+        };
+        let cfg = self.cfg.clone();
+        let d = cfg.d_model;
+        let rows = b * t;
+        let saved = self.forward(b, t, ids);
+
+        // Loss + output delta (UNSCALED p - y, matching the other models).
+        let y = crate::nn::loss::one_hot(
+            &targets.iter().map(|&v| v as usize).collect::<Vec<_>>(),
+            cfg.vocab,
+        );
+        let (loss, d_logits) = softmax_xent(&saved.logits, &y);
+
+        let mut entries = Vec::new();
+        let mut direct: Vec<(usize, Matrix)> = Vec::new();
+        let tb = self.tail_base();
+
+        // lm_head: A = hf, Δ = d_logits.
+        entries.push(StatsEntry { w_idx: tb + 2, b_idx: None, a: saved.hf.clone(), d: d_logits.clone() });
+        // Backprop into final LN.
+        let d_hf = matmul_nt(&d_logits, &self.params[tb + 2]);
+        let (mut dx, dgf, dbf) = layer_norm_backward(&d_hf, &self.params[tb], &saved.lnf);
+        direct.push((tb, dgf));
+        direct.push((tb + 1, dbf));
+        let _ = &saved.x_final;
+
+        let dh = d / cfg.n_heads;
+        let scale = 1.0 / (dh as f32).sqrt();
+        for kblock in (0..cfg.n_layers).rev() {
+            let base = self.block_base(kblock);
+            let bs = &saved.per_block[kblock];
+            let (w_o, _b_o) = (&self.params[base + 2], &self.params[base + 3]);
+            let (g1, _bb1) = (&self.params[base + 4], &self.params[base + 5]);
+            let (w_fc1, _) = (&self.params[base + 6], &self.params[base + 7]);
+            let (w_fc2, _) = (&self.params[base + 8], &self.params[base + 9]);
+            let (g2, _bb2) = (&self.params[base + 10], &self.params[base + 11]);
+
+            // ---- MLP sub-block backward (x = x_mid + fc2(relu(fc1(LN2 x_mid))))
+            let d_m = dx.clone(); // gradient wrt fc2 output (residual passthrough)
+            entries.push(StatsEntry { w_idx: base + 8, b_idx: Some(base + 9), a: bs.f.clone(), d: d_m.clone() });
+            let mut d_f = matmul_nt(&d_m, w_fc2);
+            // relu mask from output f.
+            for (dv, &fv) in d_f.data_mut().iter_mut().zip(bs.f.data()) {
+                if fv <= 0.0 {
+                    *dv = 0.0;
+                }
+            }
+            entries.push(StatsEntry { w_idx: base + 6, b_idx: Some(base + 7), a: bs.h2.clone(), d: d_f.clone() });
+            let d_h2 = matmul_nt(&d_f, w_fc1);
+            let (d_xmid_ln, dg2, db2) = layer_norm_backward(&d_h2, g2, &bs.ln2);
+            direct.push((base + 10, dg2));
+            direct.push((base + 11, db2));
+            let d_xmid = dx.add(&d_xmid_ln); // residual + LN path
+
+            // ---- Attention sub-block backward (x_mid = x_in + W_o ctx)
+            let d_o = d_xmid.clone();
+            entries.push(StatsEntry { w_idx: base + 2, b_idx: Some(base + 3), a: bs.ctx.clone(), d: d_o.clone() });
+            let d_ctx = matmul_nt(&d_o, w_o);
+            // Attention backward per (batch, head).
+            let mut d_q = Matrix::zeros(rows, d);
+            let mut d_k = Matrix::zeros(rows, d);
+            let mut d_v = Matrix::zeros(rows, d);
+            for bi in 0..b {
+                let r0 = bi * t;
+                for hh in 0..cfg.n_heads {
+                    let c0 = hh * dh;
+                    let p = &bs.probs[bi * cfg.n_heads + hh];
+                    // dP = d_ctx V^T ; dV = P^T d_ctx (within the head cols)
+                    for ti in 0..t {
+                        // dP row + softmax backward
+                        let mut dp = vec![0.0f32; ti + 1];
+                        for tj in 0..=ti {
+                            let vrow = &bs.v.row(r0 + tj)[c0..c0 + dh];
+                            let drow = &d_ctx.row(r0 + ti)[c0..c0 + dh];
+                            dp[tj] = crate::tensor::dot(vrow, drow);
+                        }
+                        let dot_pd: f32 =
+                            (0..=ti).map(|tj| dp[tj] * p[(ti, tj)]).sum();
+                        for tj in 0..=ti {
+                            let ds = p[(ti, tj)] * (dp[tj] - dot_pd); // softmax bwd
+                            // dQ[ti] += ds * K[tj] * scale ; dK[tj] += ds * Q[ti] * scale
+                            for jj in 0..dh {
+                                d_q[(r0 + ti, c0 + jj)] += ds * bs.k[(r0 + tj, c0 + jj)] * scale;
+                                d_k[(r0 + tj, c0 + jj)] += ds * bs.q[(r0 + ti, c0 + jj)] * scale;
+                            }
+                            // dV[tj] += P[ti,tj] * d_ctx[ti]
+                            for jj in 0..dh {
+                                d_v[(r0 + tj, c0 + jj)] += p[(ti, tj)] * d_ctx[(r0 + ti, c0 + jj)];
+                            }
+                        }
+                    }
+                }
+            }
+            // Assemble d_qkv (rows, 3D).
+            let mut d_qkv = Matrix::zeros(rows, 3 * d);
+            for r in 0..rows {
+                d_qkv.row_mut(r)[0..d].copy_from_slice(d_q.row(r));
+                d_qkv.row_mut(r)[d..2 * d].copy_from_slice(d_k.row(r));
+                d_qkv.row_mut(r)[2 * d..3 * d].copy_from_slice(d_v.row(r));
+            }
+            entries.push(StatsEntry { w_idx: base, b_idx: Some(base + 1), a: bs.h1.clone(), d: d_qkv.clone() });
+            let d_h1 = matmul_nt(&d_qkv, &self.params[base]);
+            let (d_xin_ln, dg1, db1) = layer_norm_backward(&d_h1, g1, &bs.ln1);
+            direct.push((base + 4, dg1));
+            direct.push((base + 5, db1));
+            dx = d_xmid.add(&d_xin_ln);
+        }
+
+        // Embedding + positional gradients (scatter-add of dx over x0 rows).
+        let mut d_embed = Matrix::zeros(cfg.vocab, d);
+        let mut d_pos = Matrix::zeros(cfg.max_t, d);
+        for r in 0..rows {
+            let tok = ids[r] as usize;
+            let tt = r % t;
+            for j in 0..d {
+                d_embed[(tok, j)] += dx[(r, j)];
+                d_pos[(tt, j)] += dx[(r, j)];
+            }
+        }
+        let _ = &saved.x0;
+        direct.push((0, d_embed));
+        direct.push((1, d_pos));
+
+        // Entries were pushed head-first; reverse into forward order for
+        // stable entry naming.
+        entries.reverse();
+        LocalStats { loss, entries, aux: vec![], direct }
+    }
+
+    fn predict(&self, batch: &Batch) -> Matrix {
+        let (b, t, ids) = match batch {
+            Batch::Tokens { b, t, ids, .. } => (*b, *t, ids),
+            _ => panic!("Transformer consumes token batches"),
+        };
+        let saved = self.forward(b, t, ids);
+        crate::nn::activations::softmax_rows(&saved.logits)
+    }
+
+    fn edad_recompute(
+        &self,
+        _a_hats: &[Matrix],
+        _aux: &[Matrix],
+        _delta_out: &Matrix,
+        _site_rows: &[usize],
+    ) -> Option<Vec<StatsEntry>> {
+        None // attention mixes rows; the activation-derivative trick does not apply
+    }
+
+    fn local_stats_entry_count(&self) -> usize {
+        4 * self.cfg.n_layers + 1
+    }
+
+    fn entry_names(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        for k in 0..self.cfg.n_layers {
+            names.push(format!("block{k}-qkv"));
+            names.push(format!("block{k}-attn_out"));
+            names.push(format!("block{k}-fc1"));
+            names.push(format!("block{k}-fc2"));
+        }
+        names.push("lm_head".to_string());
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn token_batch(rng: &mut Rng, cfg: &TransformerConfig, b: usize, t: usize) -> Batch {
+        let ids: Vec<u32> = (0..b * t).map(|_| rng.below(cfg.vocab) as u32).collect();
+        let targets: Vec<u32> = (0..b * t).map(|_| rng.below(cfg.vocab) as u32).collect();
+        Batch::Tokens { b, t, ids, targets }
+    }
+
+    /// Full-stack gradcheck: stats-assembled gradients vs finite differences
+    /// across every parameter family (embeddings, LN, attention, MLP, head).
+    #[test]
+    fn grads_match_finite_difference() {
+        let mut rng = Rng::new(31);
+        let cfg = TransformerConfig::tiny();
+        let model = Transformer::new(cfg.clone(), &mut rng);
+        let batch = token_batch(&mut rng, &cfg, 2, 5);
+        let rows = 10.0f32;
+        let stats = model.local_stats(&batch);
+        let shapes = model.param_shapes();
+        let grads = stats.assemble_grads(&shapes, 1.0 / rows, 1.0 / rows);
+        let loss_of = |m: &Transformer| m.local_stats(&batch).loss;
+        let eps = 2e-2f32;
+        for (pi, g) in grads.iter().enumerate() {
+            let (r, c) = g.shape();
+            for &(i, j) in &[(0usize, 0usize), (r / 2, c / 2), (r - 1, c - 1)] {
+                let mut mp = model.clone();
+                mp.params_mut()[pi][(i, j)] += eps;
+                let mut mm = model.clone();
+                mm.params_mut()[pi][(i, j)] -= eps;
+                let fd = (loss_of(&mp) - loss_of(&mm)) / (2.0 * eps);
+                let an = g[(i, j)];
+                assert!(
+                    (fd - an).abs() < 4e-2 * (1.0 + an.abs().max(fd.abs())),
+                    "param {pi} ({i},{j}): fd={fd} an={an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn causal_masking_no_future_leak() {
+        // Changing a future token must not change earlier logits.
+        let mut rng = Rng::new(5);
+        let cfg = TransformerConfig::tiny();
+        let model = Transformer::new(cfg.clone(), &mut rng);
+        let t = 5;
+        let ids: Vec<u32> = (0..t).map(|i| (i % cfg.vocab) as u32).collect();
+        let mut ids2 = ids.clone();
+        ids2[t - 1] = (ids[t - 1] + 1) % cfg.vocab as u32;
+        let s1 = model.forward(1, t, &ids);
+        let s2 = model.forward(1, t, &ids2);
+        for r in 0..t - 1 {
+            for j in 0..cfg.vocab {
+                assert!(
+                    (s1.logits[(r, j)] - s2.logits[(r, j)]).abs() < 1e-5,
+                    "future token leaked into position {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn loss_decreases_under_training() {
+        use crate::nn::optimizer::Adam;
+        let mut rng = Rng::new(6);
+        let cfg = TransformerConfig::tiny();
+        let mut model = Transformer::new(cfg.clone(), &mut rng);
+        let batch = token_batch(&mut rng, &cfg, 4, 5);
+        let shapes = model.param_shapes();
+        let mut opt = Adam::new(3e-3, &shapes);
+        let rows = 20.0f32;
+        let first = model.loss(&batch);
+        for _ in 0..40 {
+            let stats = model.local_stats(&batch);
+            let grads = stats.assemble_grads(&shapes, 1.0 / rows, 1.0 / rows);
+            let mut params: Vec<Matrix> = model.params().into_iter().cloned().collect();
+            opt.step(&mut params, &grads);
+            model.set_params(&params);
+        }
+        let last = model.loss(&batch);
+        assert!(last < first * 0.8, "loss did not drop: {first} -> {last}");
+    }
+
+    #[test]
+    fn param_count_formula() {
+        let cfg = TransformerConfig::tiny();
+        let model = Transformer::new(cfg.clone(), &mut rng_of(1));
+        let total: usize = model.params().iter().map(|p| p.numel()).sum();
+        assert_eq!(total, cfg.n_params());
+    }
+
+    fn rng_of(seed: u64) -> Rng {
+        Rng::new(seed)
+    }
+}

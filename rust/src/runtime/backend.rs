@@ -1,0 +1,105 @@
+//! Compute backends for the MLP local-stats step: native (the from-scratch
+//! tensor engine) or PJRT (the AOT-compiled JAX+Pallas artifact). Both
+//! produce the same (loss, A-stacks, Δ-stacks) — asserted by the
+//! integration test — so the coordinator can run the paper's hot path on
+//! compiled XLA code with Python nowhere in sight.
+
+use anyhow::{bail, Result};
+
+use crate::nn::model::{Batch, DistModel};
+use crate::nn::stats::LocalStats;
+use crate::nn::Mlp;
+use crate::runtime::pjrt::{PjrtInput, PjrtRuntime};
+use crate::tensor::Matrix;
+
+/// The canonical artifact shapes (python/compile/aot.py): batch 32/site,
+/// 784-1024-1024-10.
+pub const ARTIFACT_BATCH: usize = 32;
+pub const ARTIFACT_DIMS: [usize; 4] = [784, 1024, 1024, 10];
+
+/// A provider of MLP local statistics.
+pub trait MlpBackend {
+    fn name(&self) -> &'static str;
+    /// (loss, stats) for one site batch.
+    fn local_stats(&mut self, mlp: &Mlp, batch: &Batch) -> Result<LocalStats>;
+}
+
+/// Native backend: the pure-Rust reverse-AD tape.
+pub struct NativeMlpBackend;
+
+impl MlpBackend for NativeMlpBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn local_stats(&mut self, mlp: &Mlp, batch: &Batch) -> Result<LocalStats> {
+        Ok(mlp.local_stats(batch))
+    }
+}
+
+/// PJRT backend: executes artifacts/mlp_stats.hlo.txt. Fixed to the
+/// artifact's traced shapes (the AOT contract); the native backend covers
+/// every other configuration.
+pub struct PjrtMlpBackend {
+    runtime: PjrtRuntime,
+}
+
+impl PjrtMlpBackend {
+    pub fn new(runtime: PjrtRuntime) -> Self {
+        PjrtMlpBackend { runtime }
+    }
+
+    pub fn from_default_artifacts() -> Result<Self> {
+        Ok(PjrtMlpBackend { runtime: PjrtRuntime::cpu(PjrtRuntime::default_dir())? })
+    }
+
+    fn check_shapes(mlp: &Mlp, batch: &Batch) -> Result<(Matrix, Matrix)> {
+        let (x, y) = match batch {
+            Batch::Dense { x, y } => (x.clone(), y.clone()),
+            _ => bail!("PJRT MLP backend consumes dense batches"),
+        };
+        if mlp.dims != ARTIFACT_DIMS.to_vec() {
+            bail!("artifact is traced for dims {:?}, model has {:?}", ARTIFACT_DIMS, mlp.dims);
+        }
+        if x.rows() != ARTIFACT_BATCH {
+            bail!("artifact is traced for batch {}, got {}", ARTIFACT_BATCH, x.rows());
+        }
+        Ok((x, y))
+    }
+}
+
+impl MlpBackend for PjrtMlpBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn local_stats(&mut self, mlp: &Mlp, batch: &Batch) -> Result<LocalStats> {
+        let (x, y) = Self::check_shapes(mlp, batch)?;
+        // Artifact signature (aot.py): (w1,b1,w2,b2,w3,b3,x,y) ->
+        // (loss, a0, a1, a2, d1, d2, d3).
+        let params = mlp.params();
+        let mut inputs: Vec<PjrtInput> = Vec::with_capacity(8);
+        for layer in 0..3 {
+            inputs.push(PjrtInput::from_matrix(params[2 * layer]));
+            inputs.push(PjrtInput::from_row(params[2 * layer + 1].row(0)));
+        }
+        inputs.push(PjrtInput::from_matrix(&x));
+        inputs.push(PjrtInput::from_matrix(&y));
+        let out = self.runtime.execute("mlp_stats", &inputs)?;
+        if out.len() != 7 {
+            bail!("mlp_stats artifact returned {} outputs, expected 7", out.len());
+        }
+        let loss = out[0].scalar();
+        let a = [out[1].to_matrix(), out[2].to_matrix(), out[3].to_matrix()];
+        let d = [out[4].to_matrix(), out[5].to_matrix(), out[6].to_matrix()];
+        let entries = (0..3)
+            .map(|i| crate::nn::stats::StatsEntry {
+                w_idx: 2 * i,
+                b_idx: Some(2 * i + 1),
+                a: a[i].clone(),
+                d: d[i].clone(),
+            })
+            .collect();
+        Ok(LocalStats { loss, entries, aux: vec![], direct: vec![] })
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT artifacts produced by `make artifacts`
+//! (python/compile/aot.py lowers the JAX+Pallas Layer-1/2 functions to HLO
+//! text) and executes them on the XLA CPU client from the Rust hot path.
+//!
+//! Python never runs at training time: this module is the only bridge, and
+//! its inputs are files. HLO *text* is the interchange format because the
+//! vendored xla_extension 0.5.1 rejects jax>=0.5's 64-bit instruction-id
+//! protos (see /opt/xla-example/README.md).
+
+pub mod backend;
+pub mod pjrt;
+
+pub use backend::{MlpBackend, NativeMlpBackend, PjrtMlpBackend};
+pub use pjrt::PjrtRuntime;

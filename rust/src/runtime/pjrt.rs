@@ -1,0 +1,152 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client: artifact loading,
+//! executable caching, and Matrix <-> Literal conversion.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::tensor::Matrix;
+
+/// A PJRT client plus a cache of compiled executables, keyed by artifact
+/// name (e.g. "mlp_stats" -> artifacts/mlp_stats.hlo.txt).
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// CPU client over the given artifacts directory.
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime {
+            client,
+            dir: artifacts_dir.as_ref().to_path_buf(),
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Default artifact location (repo-root relative), overridable with
+    /// DAD_ARTIFACTS.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("DAD_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
+            // Walk up from cwd looking for artifacts/.
+            let mut d = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+            loop {
+                let cand = d.join("artifacts");
+                if cand.is_dir() {
+                    return cand;
+                }
+                if !d.pop() {
+                    return PathBuf::from("artifacts");
+                }
+            }
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?} (run `make artifacts`)"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.cache.contains_key(name)
+    }
+
+    /// Execute a loaded artifact on f32 inputs; returns the flattened tuple
+    /// of f32 outputs as (shape, data) pairs.
+    pub fn execute(&mut self, name: &str, inputs: &[PjrtInput]) -> Result<Vec<PjrtOutput>> {
+        self.load(name)?;
+        let exe = self.cache.get(name).unwrap();
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|i| -> Result<xla::Literal> {
+                let lit = xla::Literal::vec1(&i.data);
+                let dims: Vec<usize> = i.dims.clone();
+                if dims.len() == 1 && dims[0] == i.data.len() {
+                    Ok(lit)
+                } else if dims.is_empty() {
+                    lit.reshape(&[]).context("scalar reshape")
+                } else {
+                    let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+                    lit.reshape(&d).context("input reshape")
+                }
+            })
+            .collect::<Result<_>>()?;
+        let mut result = exe.execute::<xla::Literal>(&literals).context("execute")?[0][0]
+            .to_literal_sync()
+            .context("to_literal_sync")?;
+        // aot.py lowers with return_tuple=True: decompose the tuple.
+        let elems = result.decompose_tuple().context("decompose_tuple")?;
+        elems
+            .into_iter()
+            .map(|lit| -> Result<PjrtOutput> {
+                let shape = lit.array_shape().context("array_shape")?;
+                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                let data = lit.to_vec::<f32>().context("to_vec<f32>")?;
+                Ok(PjrtOutput { dims, data })
+            })
+            .collect()
+    }
+}
+
+/// An f32 input tensor (row-major).
+pub struct PjrtInput {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl PjrtInput {
+    pub fn from_matrix(m: &Matrix) -> Self {
+        PjrtInput { dims: vec![m.rows(), m.cols()], data: m.data().to_vec() }
+    }
+
+    pub fn from_row(v: &[f32]) -> Self {
+        PjrtInput { dims: vec![v.len()], data: v.to_vec() }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        PjrtInput { dims: vec![], data: vec![v] }
+    }
+}
+
+/// An f32 output tensor (row-major).
+#[derive(Debug, Clone)]
+pub struct PjrtOutput {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl PjrtOutput {
+    pub fn to_matrix(&self) -> Matrix {
+        match self.dims.len() {
+            2 => Matrix::from_vec(self.dims[0], self.dims[1], self.data.clone()),
+            1 => Matrix::from_vec(1, self.dims[0], self.data.clone()),
+            0 => Matrix::from_vec(1, 1, self.data.clone()),
+            _ => panic!("unsupported output rank {:?}", self.dims),
+        }
+    }
+
+    pub fn scalar(&self) -> f32 {
+        self.data[0]
+    }
+}
+
+// NOTE: runtime tests live in rust/tests/pjrt_integration.rs (they need the
+// artifacts built and the xla shared library available).

@@ -1,0 +1,352 @@
+//! Dense row-major f32 matrix — the storage type for every statistic the
+//! paper ships: activations A (N x h), deltas Δ (N x h'), weights W (h x h'),
+//! and low-rank factors Q/G (r x h).
+
+use super::rng::Rng;
+
+/// Dense row-major f32 matrix.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl std::fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Matrix({}x{})", self.rows, self.cols)?;
+        if self.rows * self.cols <= 16 {
+            write!(f, " {:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn filled(rows: usize, cols: usize, v: f32) -> Self {
+        Matrix { rows, cols, data: vec![v; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Standard-normal entries scaled by `std`.
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(rng.normal() * std);
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Uniform entries in [lo, hi).
+    pub fn rand_uniform(rows: usize, cols: usize, lo: f32, hi: f32, rng: &mut Rng) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows * cols {
+            data.push(rng.uniform_in(lo, hi));
+        }
+        Matrix { rows, cols, data }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn numel(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Bytes on the wire (f32): the unit of the paper's bandwidth accounting.
+    #[inline]
+    pub fn wire_bytes(&self) -> u64 {
+        (self.numel() * 4) as u64
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness on the big stat matrices.
+        const B: usize = 32;
+        for i0 in (0..self.rows).step_by(B) {
+            for j0 in (0..self.cols).step_by(B) {
+                for i in i0..(i0 + B).min(self.rows) {
+                    for j in j0..(j0 + B).min(self.cols) {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Vertical concatenation — the aggregator's `vertcat` in Algorithms 1-2.
+    pub fn vertcat(parts: &[&Matrix]) -> Matrix {
+        assert!(!parts.is_empty());
+        let cols = parts[0].cols;
+        let rows: usize = parts.iter().map(|m| m.rows).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for m in parts {
+            assert_eq!(m.cols, cols, "vertcat column mismatch");
+            data.extend_from_slice(&m.data);
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Rows [lo, hi) as a new matrix (a site's shard of a broadcast stat).
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Matrix {
+        assert!(lo <= hi && hi <= self.rows);
+        Matrix {
+            rows: hi - lo,
+            cols: self.cols,
+            data: self.data[lo * self.cols..hi * self.cols].to_vec(),
+        }
+    }
+
+    /// Gather the given rows into a new matrix (mini-batch assembly).
+    pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
+        let mut data = Vec::with_capacity(idx.len() * self.cols);
+        for &i in idx {
+            data.extend_from_slice(self.row(i));
+        }
+        Matrix { rows: idx.len(), cols: self.cols, data }
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for x in &mut self.data {
+            *x = f(*x);
+        }
+    }
+
+    pub fn zip_map(&self, other: &Matrix, f: impl Fn(f32, f32) -> f32) -> Matrix {
+        assert_eq!(self.shape(), other.shape());
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect(),
+        }
+    }
+
+    /// self += alpha * other
+    pub fn axpy(&mut self, alpha: f32, other: &Matrix) {
+        assert_eq!(self.shape(), other.shape());
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        self.zip_map(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        self.zip_map(other, |a, b| a - b)
+    }
+
+    /// Elementwise (Hadamard) product — the ⊙ of paper eq. (2)/(3)/(5).
+    pub fn hadamard(&self, other: &Matrix) -> Matrix {
+        self.zip_map(other, |a, b| a * b)
+    }
+
+    pub fn scale(&self, alpha: f32) -> Matrix {
+        self.map(|x| alpha * x)
+    }
+
+    pub fn scale_inplace(&mut self, alpha: f32) {
+        self.map_inplace(|x| alpha * x);
+    }
+
+    /// Column sums (bias gradients: scale * 1ᵀ Δ).
+    pub fn col_sums(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.cols];
+        for i in 0..self.rows {
+            let row = self.row(i);
+            for (o, &v) in out.iter_mut().zip(row) {
+                *o += v;
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|&x| x as f64 * x as f64).sum::<f64>().sqrt() as f32
+    }
+
+    /// max_ij |a_ij - b_ij| — the metric of the paper's Table 2.
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().map(|x| x.abs()).fold(0.0f32, f32::max)
+    }
+
+    /// True iff all entries are finite (NaN/Inf guard used in tests and the
+    /// coordinator's failure-injection checks).
+    pub fn all_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Matrix {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let m = Matrix::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+        assert_eq!(m.shape(), (2, 3));
+        assert_eq!(m[(1, 2)], 5.0);
+        assert_eq!(m.row(1), &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        let _ = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(1);
+        let m = Matrix::randn(37, 53, 1.0, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+        let t = m.transpose();
+        assert_eq!(t[(5, 7)], m[(7, 5)]);
+    }
+
+    #[test]
+    fn vertcat_slice_roundtrip() {
+        let mut rng = Rng::new(2);
+        let a = Matrix::randn(4, 6, 1.0, &mut rng);
+        let b = Matrix::randn(3, 6, 1.0, &mut rng);
+        let cat = Matrix::vertcat(&[&a, &b]);
+        assert_eq!(cat.shape(), (7, 6));
+        assert_eq!(cat.slice_rows(0, 4), a);
+        assert_eq!(cat.slice_rows(4, 7), b);
+    }
+
+    #[test]
+    fn col_sums() {
+        let m = Matrix::from_fn(3, 2, |i, j| (i + j) as f32);
+        assert_eq!(m.col_sums(), vec![3.0, 6.0]);
+    }
+
+    #[test]
+    fn hadamard_and_axpy() {
+        let a = Matrix::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let b = Matrix::from_vec(1, 3, vec![4.0, 5.0, 6.0]);
+        assert_eq!(a.hadamard(&b).data(), &[4.0, 10.0, 18.0]);
+        let mut c = a.clone();
+        c.axpy(2.0, &b);
+        assert_eq!(c.data(), &[9.0, 12.0, 15.0]);
+    }
+
+    #[test]
+    fn max_abs_diff() {
+        let a = Matrix::from_vec(1, 3, vec![1.0, 2.0, 3.0]);
+        let b = Matrix::from_vec(1, 3, vec![1.0, 2.5, 2.0]);
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+
+    #[test]
+    fn gather_rows() {
+        let m = Matrix::from_fn(5, 2, |i, _| i as f32);
+        let g = m.gather_rows(&[4, 0, 2]);
+        assert_eq!(g.data(), &[4.0, 4.0, 0.0, 0.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn wire_bytes() {
+        assert_eq!(Matrix::zeros(32, 1024).wire_bytes(), 32 * 1024 * 4);
+    }
+}

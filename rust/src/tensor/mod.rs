@@ -1,0 +1,16 @@
+//! From-scratch f32 tensor substrate: dense matrices, matmul kernels, a
+//! deterministic PRNG, and a minimal thread-parallel helper.
+//!
+//! Everything the coordinator computes natively (forward passes, the backward
+//! delta recurrence, gradient outer products, structured power iterations)
+//! runs on these kernels; the PJRT runtime provides an alternative backend
+//! executing the AOT-compiled JAX/Pallas artifacts for the same math.
+
+pub mod matrix;
+pub mod ops;
+pub mod parallel;
+pub mod rng;
+
+pub use matrix::Matrix;
+pub use ops::{dot, matmul, matmul_nt, matmul_tn, matvec, matvec_t};
+pub use rng::Rng;

@@ -1,0 +1,264 @@
+//! Matrix-multiply kernels — the compute hot path of the native engine.
+//!
+//! Three variants cover everything the paper's math needs without ever
+//! materializing a transpose:
+//!   matmul     C = A B        forward passes, Δ_{i+1} Wᵀ is matmul_nt
+//!   matmul_tn  C = Aᵀ B       gradient outer products  AᵀΔ   (eq. 4)
+//!   matmul_nt  C = A Bᵀ       backward delta step      ΔWᵀ   (eq. 3/5)
+//!
+//! Layout: ikj loops with row-panel accumulation (unit-stride inner loops
+//! that LLVM auto-vectorizes), parallelized over output rows via scoped
+//! threads. See EXPERIMENTS.md §Perf for the measured roofline.
+
+use super::matrix::Matrix;
+use super::parallel::parallel_rows_mut;
+
+/// Minimum FLOPs before a matmul is worth threading (tuned in §Perf).
+const PAR_FLOP_THRESHOLD: usize = 1 << 20;
+
+#[inline]
+fn min_rows_for(total_rows: usize, flops: usize) -> usize {
+    if flops < PAR_FLOP_THRESHOLD {
+        total_rows // single chunk => serial
+    } else {
+        1
+    }
+}
+
+/// C = A B.  A: (m,k), B: (k,n) -> (m,n).
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, k) = a.shape();
+    let (k2, n) = b.shape();
+    assert_eq!(k, k2, "matmul inner dim: {:?} x {:?}", a.shape(), b.shape());
+    let mut out = Matrix::zeros(m, n);
+    let flops = 2 * m * k * n;
+    let bd = b.data();
+    let ad = a.data();
+    parallel_rows_mut(out.data_mut(), n, min_rows_for(m, flops), |start, chunk| {
+        for (r, crow) in chunk.chunks_mut(n).enumerate() {
+            let i = start + r;
+            let arow = &ad[i * k..(i + 1) * k];
+            for (kk, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue; // ReLU activations are ~50% zeros
+                }
+                let brow = &bd[kk * n..(kk + 1) * n];
+                for (c, &bv) in crow.iter_mut().zip(brow) {
+                    *c += aik * bv;
+                }
+            }
+        }
+    });
+    out
+}
+
+/// C = Aᵀ B.  A: (k,m), B: (k,n) -> (m,n).  The gradient outer product:
+/// k is the (small) batch dimension, m/n are layer widths.
+pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    let (k, m) = a.shape();
+    let (k2, n) = b.shape();
+    assert_eq!(k, k2, "matmul_tn inner dim: {:?} x {:?}", a.shape(), b.shape());
+    let mut out = Matrix::zeros(m, n);
+    let flops = 2 * m * k * n;
+    let ad = a.data();
+    let bd = b.data();
+    parallel_rows_mut(out.data_mut(), n, min_rows_for(m, flops), |start, chunk| {
+        let rows = chunk.len() / n;
+        for kk in 0..k {
+            let brow = &bd[kk * n..(kk + 1) * n];
+            let acol = &ad[kk * m..(kk + 1) * m];
+            for r in 0..rows {
+                let aik = acol[start + r];
+                if aik == 0.0 {
+                    continue;
+                }
+                let crow = &mut chunk[r * n..(r + 1) * n];
+                for (c, &bv) in crow.iter_mut().zip(brow) {
+                    *c += aik * bv;
+                }
+            }
+        }
+    });
+    out
+}
+
+/// C = A Bᵀ.  A: (m,k), B: (n,k) -> (m,n).  The backward delta contraction.
+///
+/// Two regimes (§Perf iteration 2): for large problems, transposing B once
+/// (O(nk), cache-blocked) and running the ikj kernel beats the dot-product
+/// kernel ~1.8x — the ikj inner loop streams with independent FMA chains,
+/// while back-to-back dots stall on the horizontal-add dependency.
+pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, k) = a.shape();
+    let (n, k2) = b.shape();
+    assert_eq!(k, k2, "matmul_nt inner dim: {:?} x {:?}", a.shape(), b.shape());
+    let flops = 2 * m * k * n;
+    if flops >= 1 << 22 {
+        return matmul(a, &b.transpose());
+    }
+    let mut out = Matrix::zeros(m, n);
+    let ad = a.data();
+    let bd = b.data();
+    parallel_rows_mut(out.data_mut(), n, min_rows_for(m, flops), |start, chunk| {
+        for (r, crow) in chunk.chunks_mut(n).enumerate() {
+            let i = start + r;
+            let arow = &ad[i * k..(i + 1) * k];
+            for (j, c) in crow.iter_mut().enumerate() {
+                let brow = &bd[j * k..(j + 1) * k];
+                *c = dot(arow, brow);
+            }
+        }
+    });
+    out
+}
+
+/// Unit-stride dot product with 8-lane unrolled accumulators.
+///
+/// chunks_exact + zip lets LLVM elide every bounds check and vectorize;
+/// the indexed version of this loop ran at ~2.5 GFLOP/s inside matmul_nt,
+/// this one at ~9 GFLOP/s (EXPERIMENTS.md §Perf, L3 iteration 1).
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut acc = [0.0f32; 8];
+    let xc = x.chunks_exact(8);
+    let yc = y.chunks_exact(8);
+    let rx = xc.remainder();
+    let ry = yc.remainder();
+    for (xs, ys) in xc.zip(yc) {
+        for l in 0..8 {
+            acc[l] += xs[l] * ys[l];
+        }
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for (a, b) in rx.iter().zip(ry) {
+        s += a * b;
+    }
+    s
+}
+
+/// y = A x.  A: (m,n), x: n -> m.
+pub fn matvec(a: &Matrix, x: &[f32]) -> Vec<f32> {
+    let (m, n) = a.shape();
+    assert_eq!(x.len(), n);
+    (0..m).map(|i| dot(a.row(i), x)).collect()
+}
+
+/// y = Aᵀ x.  A: (m,n), x: m -> n.
+pub fn matvec_t(a: &Matrix, x: &[f32]) -> Vec<f32> {
+    let (m, n) = a.shape();
+    assert_eq!(x.len(), m);
+    let mut out = vec![0.0f32; n];
+    for i in 0..m {
+        let xi = x[i];
+        if xi == 0.0 {
+            continue;
+        }
+        for (o, &aij) in out.iter_mut().zip(a.row(i)) {
+            *o += xi * aij;
+        }
+    }
+    out
+}
+
+/// Naive triple-loop oracle (tests + perf baseline).
+pub fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, k) = a.shape();
+    let (_, n) = b.shape();
+    let mut out = Matrix::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0.0;
+            for kk in 0..k {
+                s += a[(i, kk)] * b[(kk, j)];
+            }
+            out[(i, j)] = s;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rng::Rng;
+
+    fn close(a: &Matrix, b: &Matrix, tol: f32) {
+        assert_eq!(a.shape(), b.shape());
+        let d = a.max_abs_diff(b);
+        assert!(d < tol, "max abs diff {d} >= {tol}");
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(1);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (32, 784, 64), (17, 13, 29)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            close(&matmul(&a, &b), &matmul_naive(&a, &b), 1e-3);
+        }
+    }
+
+    #[test]
+    fn tn_equals_transpose_then_mul() {
+        let mut rng = Rng::new(2);
+        for &(k, m, n) in &[(8, 33, 21), (32, 128, 64), (1, 5, 5)] {
+            let a = Matrix::randn(k, m, 1.0, &mut rng);
+            let b = Matrix::randn(k, n, 1.0, &mut rng);
+            close(&matmul_tn(&a, &b), &matmul(&a.transpose(), &b), 1e-3);
+        }
+    }
+
+    #[test]
+    fn nt_equals_mul_transpose() {
+        let mut rng = Rng::new(3);
+        for &(m, k, n) in &[(9, 17, 5), (32, 64, 128)] {
+            let a = Matrix::randn(m, k, 1.0, &mut rng);
+            let b = Matrix::randn(n, k, 1.0, &mut rng);
+            close(&matmul_nt(&a, &b), &matmul(&a, &b.transpose()), 1e-3);
+        }
+    }
+
+    #[test]
+    fn big_parallel_path_correct() {
+        // Force the threaded path (flops > threshold) and compare to naive.
+        let mut rng = Rng::new(4);
+        let a = Matrix::randn(256, 300, 1.0, &mut rng);
+        let b = Matrix::randn(300, 256, 1.0, &mut rng);
+        close(&matmul(&a, &b), &matmul_naive(&a, &b), 1e-2);
+    }
+
+    #[test]
+    fn matvec_consistency() {
+        let mut rng = Rng::new(5);
+        let a = Matrix::randn(20, 30, 1.0, &mut rng);
+        let x: Vec<f32> = (0..30).map(|i| (i as f32).sin()).collect();
+        let y = matvec(&a, &x);
+        let xm = Matrix::from_vec(30, 1, x.clone());
+        let ym = matmul(&a, &xm);
+        for i in 0..20 {
+            assert!((y[i] - ym[(i, 0)]).abs() < 1e-4);
+        }
+        let z = matvec_t(&a, &y);
+        let zm = matmul_tn(&a, &ym);
+        for j in 0..30 {
+            assert!((z[j] - zm[(j, 0)]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn dot_handles_tails() {
+        let x: Vec<f32> = (0..7).map(|i| i as f32).collect();
+        let y: Vec<f32> = (0..7).map(|i| (i + 1) as f32).collect();
+        // 0*1+1*2+2*3+3*4+4*5+5*6+6*7 = 112
+        assert_eq!(dot(&x, &y), 112.0);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(6);
+        let a = Matrix::randn(12, 12, 1.0, &mut rng);
+        close(&matmul(&a, &Matrix::identity(12)), &a, 1e-5);
+        close(&matmul(&Matrix::identity(12), &a), &a, 1e-5);
+    }
+}

@@ -1,0 +1,130 @@
+//! Minimal data-parallel substrate (no rayon offline): scoped threads over
+//! row-range chunks, with a FLOP threshold below which work stays on the
+//! calling thread — small matmuls dominate the per-batch hot path and thread
+//! spawn overhead would swamp them.
+
+use std::sync::OnceLock;
+
+/// Number of worker threads; override with DAD_THREADS.
+pub fn num_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(v) = std::env::var("DAD_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+    })
+}
+
+/// Run `f(lo, hi)` over disjoint chunks of 0..n, possibly in parallel.
+/// `f` must be safe to run concurrently on disjoint ranges.
+pub fn parallel_ranges<F>(n: usize, min_chunk: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let nt = num_threads();
+    if n == 0 {
+        return;
+    }
+    let chunks = nt.min(n.div_ceil(min_chunk.max(1))).max(1);
+    if chunks == 1 {
+        f(0, n);
+        return;
+    }
+    let per = n.div_ceil(chunks);
+    std::thread::scope(|s| {
+        for c in 0..chunks {
+            let lo = c * per;
+            let hi = ((c + 1) * per).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(lo, hi));
+        }
+    });
+}
+
+/// Split a mutable slice into disjoint row-chunks and run `f` on each in
+/// parallel. `row_len` is the stride; chunk boundaries are row-aligned.
+pub fn parallel_rows_mut<F>(data: &mut [f32], row_len: usize, min_rows: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    let rows = if row_len == 0 { 0 } else { data.len() / row_len };
+    if rows == 0 {
+        return;
+    }
+    let nt = num_threads();
+    let chunks = nt.min(rows.div_ceil(min_rows.max(1))).max(1);
+    if chunks == 1 {
+        f(0, data);
+        return;
+    }
+    let per = rows.div_ceil(chunks);
+    std::thread::scope(|s| {
+        let mut rest = data;
+        let mut row0 = 0usize;
+        for _ in 0..chunks {
+            let take = per.min(rest.len() / row_len - 0);
+            if take == 0 {
+                break;
+            }
+            let take = take.min(rest.len() / row_len);
+            let (head, tail) = rest.split_at_mut(take * row_len);
+            rest = tail;
+            let f = &f;
+            let start = row0;
+            s.spawn(move || f(start, head));
+            row0 += take;
+            if rest.is_empty() {
+                break;
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn covers_all_indices() {
+        let hits = AtomicUsize::new(0);
+        parallel_ranges(1000, 10, |lo, hi| {
+            hits.fetch_add(hi - lo, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 1000);
+    }
+
+    #[test]
+    fn small_stays_serial() {
+        // n below min_chunk => single call covering everything.
+        let calls = AtomicUsize::new(0);
+        parallel_ranges(5, 100, |lo, hi| {
+            calls.fetch_add(1, Ordering::SeqCst);
+            assert_eq!((lo, hi), (0, 5));
+        });
+        assert_eq!(calls.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn rows_mut_disjoint_and_complete() {
+        let mut data = vec![0.0f32; 64 * 8];
+        parallel_rows_mut(&mut data, 8, 4, |start, chunk| {
+            for (r, row) in chunk.chunks_mut(8).enumerate() {
+                for v in row.iter_mut() {
+                    *v = (start + r) as f32;
+                }
+            }
+        });
+        for r in 0..64 {
+            for c in 0..8 {
+                assert_eq!(data[r * 8 + c], r as f32);
+            }
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! Cross-module integration: full multi-epoch training runs must produce
+//! identical trajectories for pooled/dSGD/dAD/edAD (the paper's Figures
+//! 1-2 claim, asserted numerically rather than visually).
+
+use dad::algos::AlgoSpec;
+use dad::coordinator::{train, Schedule, TrainSpec};
+use dad::data::{arabic_digits_like, mnist_like, split_by_label};
+use dad::nn::{Activation, GruClassifier, Mlp};
+use dad::tensor::Rng;
+
+fn spec(algo: AlgoSpec, epochs: usize) -> TrainSpec {
+    TrainSpec {
+        algo,
+        n_sites: 2,
+        batch_per_site: 16,
+        epochs,
+        lr: 1e-3,
+        seed: 5,
+        schedule: Schedule::EveryBatch,
+    }
+}
+
+#[test]
+fn mlp_four_algorithms_same_trajectory() {
+    let mut rng = Rng::new(41);
+    let full = mnist_like(560, &mut rng);
+    let train_ds = full.subset(&(0..440).collect::<Vec<_>>());
+    let test_ds = full.subset(&(440..560).collect::<Vec<_>>());
+    let shards = split_by_label(&train_ds.labels, 10, 2);
+    let model = || {
+        let mut r = Rng::new(9);
+        Mlp::new(&[784, 64, 32, 10], &[Activation::Relu, Activation::Relu], &mut r)
+    };
+    let logs: Vec<_> = [AlgoSpec::Pooled, AlgoSpec::Dsgd, AlgoSpec::Dad, AlgoSpec::Edad]
+        .into_iter()
+        .map(|a| train(model(), &spec(a, 2), &train_ds, &shards, &test_ds))
+        .collect();
+    // All four loss trajectories agree to f32 noise — the training is
+    // literally the same optimization.
+    for e in 0..2 {
+        let base = logs[0].epochs[e].train_loss;
+        for log in &logs[1..] {
+            let l = log.epochs[e].train_loss;
+            assert!(
+                (l - base).abs() < 5e-3 * (1.0 + base.abs()),
+                "epoch {e}: {} vs pooled {}",
+                l,
+                base
+            );
+        }
+        let base_auc = logs[0].epochs[e].test_auc;
+        for log in &logs[1..] {
+            assert!((log.epochs[e].test_auc - base_auc).abs() < 2e-2);
+        }
+    }
+    // And learning actually happened.
+    assert!(logs[0].final_auc() > 0.75, "pooled AUC {}", logs[0].final_auc());
+}
+
+#[test]
+fn gru_dad_edad_trajectories_match() {
+    let mut rng = Rng::new(43);
+    let full = arabic_digits_like(200, &mut rng);
+    let train_ds = full.subset(&(0..160).collect::<Vec<_>>());
+    let test_ds = full.subset(&(160..200).collect::<Vec<_>>());
+    let shards = split_by_label(&train_ds.labels, 10, 2);
+    let model = || {
+        let mut r = Rng::new(9);
+        GruClassifier::new(13, 16, &[32], 10, &mut r)
+    };
+    let log_dad = train(model(), &spec(AlgoSpec::Dad, 2), &train_ds, &shards, &test_ds);
+    let log_edad = train(model(), &spec(AlgoSpec::Edad, 2), &train_ds, &shards, &test_ds);
+    for e in 0..2 {
+        let (a, b) = (log_dad.epochs[e].train_loss, log_edad.epochs[e].train_loss);
+        assert!((a - b).abs() < 5e-3 * (1.0 + a.abs()), "epoch {e}: dad {a} vs edad {b}");
+    }
+    // edAD strictly cheaper on the wire.
+    assert!(log_edad.total_bytes() < log_dad.total_bytes());
+}
+
+#[test]
+fn rankdad_higher_rank_is_no_worse() {
+    let mut rng = Rng::new(47);
+    let full = mnist_like(400, &mut rng);
+    let train_ds = full.subset(&(0..320).collect::<Vec<_>>());
+    let test_ds = full.subset(&(320..400).collect::<Vec<_>>());
+    let shards = split_by_label(&train_ds.labels, 10, 2);
+    let model = || {
+        let mut r = Rng::new(9);
+        Mlp::new(&[784, 64, 10], &[Activation::Relu], &mut r)
+    };
+    let lo = train(
+        model(),
+        &spec(AlgoSpec::RankDad { max_rank: 1, n_iters: 10, theta: 1e-3 }, 3),
+        &train_ds,
+        &shards,
+        &test_ds,
+    );
+    let hi = train(
+        model(),
+        &spec(AlgoSpec::RankDad { max_rank: 8, n_iters: 10, theta: 1e-3 }, 3),
+        &train_ds,
+        &shards,
+        &test_ds,
+    );
+    // Figure 3's qualitative shape: more rank, no (significant) loss.
+    assert!(hi.final_auc() > lo.final_auc() - 0.05, "hi {} lo {}", hi.final_auc(), lo.final_auc());
+    // And rank-1 ships fewer bytes.
+    assert!(lo.total_bytes() < hi.total_bytes());
+}

@@ -1,0 +1,178 @@
+//! Integration tests across the AOT boundary: the Rust PJRT runtime
+//! executing the JAX/Pallas-lowered artifacts must agree with the native
+//! engine. Requires `make artifacts` to have been run (the Makefile test
+//! target guarantees the ordering).
+
+use dad::nn::loss::one_hot;
+use dad::nn::model::{Batch, DistModel};
+use dad::nn::Mlp;
+use dad::runtime::{MlpBackend, NativeMlpBackend, PjrtMlpBackend};
+use dad::runtime::pjrt::{PjrtInput, PjrtRuntime};
+use dad::tensor::{Matrix, Rng};
+
+fn artifacts_ready() -> bool {
+    PjrtRuntime::default_dir().join("smoke.hlo.txt").is_file()
+}
+
+#[test]
+fn smoke_artifact_runs() {
+    if !artifacts_ready() {
+        panic!("artifacts missing: run `make artifacts` first");
+    }
+    let mut rt = PjrtRuntime::cpu(PjrtRuntime::default_dir()).unwrap();
+    // smoke: fn(x, y) = (matmul(x, y) + 2.0,) over f32[2,2].
+    let x = PjrtInput { dims: vec![2, 2], data: vec![1.0, 2.0, 3.0, 4.0] };
+    let y = PjrtInput { dims: vec![2, 2], data: vec![1.0, 1.0, 1.0, 1.0] };
+    let out = rt.execute("smoke", &[x, y]).unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].data, vec![5.0, 5.0, 9.0, 9.0]);
+    assert_eq!(rt.platform().to_lowercase(), "cpu");
+}
+
+#[test]
+fn pjrt_mlp_stats_match_native() {
+    if !artifacts_ready() {
+        panic!("artifacts missing: run `make artifacts` first");
+    }
+    let mut rng = Rng::new(3);
+    let mlp = Mlp::paper_mnist(&mut rng);
+    let x = Matrix::rand_uniform(32, 784, 0.0, 1.0, &mut rng);
+    let labels: Vec<usize> = (0..32).map(|i| i % 10).collect();
+    let batch = Batch::Dense { x, y: one_hot(&labels, 10) };
+
+    let native = NativeMlpBackend.local_stats(&mlp, &batch).unwrap();
+    let mut pjrt = PjrtMlpBackend::from_default_artifacts().unwrap();
+    let compiled = pjrt.local_stats(&mlp, &batch).unwrap();
+
+    assert!(
+        (native.loss - compiled.loss).abs() < 1e-4,
+        "loss: native {} vs pjrt {}",
+        native.loss,
+        compiled.loss
+    );
+    assert_eq!(native.entries.len(), compiled.entries.len());
+    for (i, (n, c)) in native.entries.iter().zip(&compiled.entries).enumerate() {
+        assert_eq!(n.a.shape(), c.a.shape(), "entry {i} A shape");
+        assert_eq!(n.d.shape(), c.d.shape(), "entry {i} D shape");
+        let ea = n.a.max_abs_diff(&c.a);
+        let ed = n.d.max_abs_diff(&c.d);
+        assert!(ea < 1e-3, "entry {i} A diff {ea}");
+        assert!(ed < 1e-3, "entry {i} D diff {ed}");
+    }
+}
+
+#[test]
+fn pjrt_grads_artifact_matches_native_outer_product() {
+    if !artifacts_ready() {
+        panic!("artifacts missing: run `make artifacts` first");
+    }
+    let mut rng = Rng::new(5);
+    // mlp_grads artifact: concatenated stats at SN = 64.
+    let a0 = Matrix::randn(64, 784, 1.0, &mut rng);
+    let a1 = Matrix::randn(64, 1024, 1.0, &mut rng);
+    let a2 = Matrix::randn(64, 1024, 1.0, &mut rng);
+    let d1 = Matrix::randn(64, 1024, 1.0, &mut rng);
+    let d2 = Matrix::randn(64, 1024, 1.0, &mut rng);
+    let d3 = Matrix::randn(64, 10, 1.0, &mut rng);
+    let scale = 1.0f32 / 64.0;
+    let mut rt = PjrtRuntime::cpu(PjrtRuntime::default_dir()).unwrap();
+    let out = rt
+        .execute(
+            "mlp_grads",
+            &[
+                PjrtInput::from_matrix(&a0),
+                PjrtInput::from_matrix(&a1),
+                PjrtInput::from_matrix(&a2),
+                PjrtInput::from_matrix(&d1),
+                PjrtInput::from_matrix(&d2),
+                PjrtInput::from_matrix(&d3),
+                PjrtInput::scalar(scale),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 6);
+    // gw1 = scale * a0ᵀ d1 — compare against the native kernel.
+    let gw1 = out[0].to_matrix();
+    let want = dad::tensor::matmul_tn(&a0, &d1).scale(scale);
+    let diff = gw1.max_abs_diff(&want);
+    // 64-deep f32 reductions in different orders: allow 1e-3 absolute.
+    assert!(diff < 5e-3, "gw1 diff {diff}");
+    // gb3 = scale * colsum(d3).
+    let gb3 = out[5].to_matrix();
+    let want_b = Matrix::from_vec(1, 10, d3.col_sums()).scale(scale);
+    assert!(gb3.max_abs_diff(&want_b) < 1e-4);
+}
+
+#[test]
+fn pjrt_rankdad_factors_artifact_reconstructs() {
+    if !artifacts_ready() {
+        panic!("artifacts missing: run `make artifacts` first");
+    }
+    let mut rng = Rng::new(7);
+    // Artifact traced at (64, 1024) x (64, 1024), max_rank 10, 10 iters.
+    let a = Matrix::randn(64, 1024, 1.0, &mut rng);
+    let d = Matrix::randn(64, 1024, 1.0, &mut rng);
+    let mut rt = PjrtRuntime::cpu(PjrtRuntime::default_dir()).unwrap();
+    let out = rt
+        .execute(
+            "rankdad_factors",
+            &[PjrtInput::from_matrix(&a), PjrtInput::from_matrix(&d)],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 3);
+    let q_t = out[0].to_matrix();
+    let g_t = out[1].to_matrix();
+    let eff = out[2].scalar() as usize;
+    assert_eq!(q_t.shape(), (10, 1024));
+    assert_eq!(g_t.shape(), (10, 1024));
+    assert!(eff >= 1 && eff <= 10, "eff {eff}");
+    // The rank-10 reconstruction must capture the top of the spectrum:
+    // relative error strictly below 1 and sigma_0 within 5% of the native
+    // engine's estimate.
+    let m = dad::tensor::matmul_tn(&a, &d);
+    let approx = dad::tensor::matmul_tn(&q_t, &g_t);
+    let rel = approx.sub(&m).fro_norm() / m.fro_norm();
+    assert!(rel < 1.0, "rel {rel}");
+    let native = dad::lowrank::rankdad_factors(&a, &d, 10, 10, 1e-3);
+    let sig0_pjrt: f32 = q_t.row(0).iter().map(|v| v * v).sum::<f32>().sqrt();
+    let sig0_native: f32 = native.q_t.row(0).iter().map(|v| v * v).sum::<f32>().sqrt();
+    let rel_sig = (sig0_pjrt - sig0_native).abs() / sig0_native;
+    assert!(rel_sig < 0.05, "sigma0: pjrt {sig0_pjrt} vs native {sig0_native}");
+}
+
+/// End-to-end over the AOT boundary: one dAD exchange where every site's
+/// stats come from the compiled artifact, gradients assembled natively,
+/// compared against the all-native pipeline.
+#[test]
+fn dad_step_with_pjrt_stats_matches_native() {
+    if !artifacts_ready() {
+        panic!("artifacts missing: run `make artifacts` first");
+    }
+    let mut rng = Rng::new(11);
+    let mlp = Mlp::paper_mnist(&mut rng);
+    let mk_batch = |rng: &mut Rng| {
+        let x = Matrix::rand_uniform(32, 784, 0.0, 1.0, rng);
+        let labels: Vec<usize> = (0..32).map(|i| i % 10).collect();
+        Batch::Dense { x, y: one_hot(&labels, 10) }
+    };
+    let b1 = mk_batch(&mut rng);
+    let b2 = mk_batch(&mut rng);
+    let mut pjrt = PjrtMlpBackend::from_default_artifacts().unwrap();
+    let s1 = pjrt.local_stats(&mlp, &b1).unwrap();
+    let s2 = pjrt.local_stats(&mlp, &b2).unwrap();
+    // Aggregate (the dAD exchange) and assemble.
+    let refs: Vec<&[dad::nn::StatsEntry]> = vec![&s1.entries, &s2.entries];
+    let cat = dad::nn::stats::concat_stats(&refs);
+    let shapes = mlp.param_shapes();
+    let grads_pjrt = dad::nn::stats::assemble_grads(&shapes, &cat, &[], 1.0 / 64.0, 1.0);
+    // Native oracle.
+    let n1 = mlp.local_stats(&b1);
+    let n2 = mlp.local_stats(&b2);
+    let refs_n: Vec<&[dad::nn::StatsEntry]> = vec![&n1.entries, &n2.entries];
+    let cat_n = dad::nn::stats::concat_stats(&refs_n);
+    let grads_native = dad::nn::stats::assemble_grads(&shapes, &cat_n, &[], 1.0 / 64.0, 1.0);
+    for (i, (p, n)) in grads_pjrt.iter().zip(&grads_native).enumerate() {
+        let diff = p.max_abs_diff(n);
+        assert!(diff < 1e-3, "param {i} grad diff {diff}");
+    }
+}

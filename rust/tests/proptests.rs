@@ -1,0 +1,166 @@
+//! Property-based tests over the coordinator invariants, driven by the
+//! in-repo `testing` substrate (no proptest crate offline). Each property
+//! runs across a seeded family of random shapes/values and shrinks nothing
+//! — failures print the seed for exact reproduction.
+
+use dad::algos::common::DistAlgorithm;
+use dad::algos::{Dad, Dsgd, Edad, Pooled, RankDad, RankDadConfig};
+use dad::dist::Cluster;
+use dad::nn::loss::one_hot;
+use dad::nn::model::{Batch, DistModel};
+use dad::nn::{Activation, Mlp};
+use dad::tensor::{matmul_tn, Matrix, Rng};
+
+/// Deterministic case fan-out helper.
+fn forall(cases: usize, seed: u64, mut prop: impl FnMut(u64, &mut Rng)) {
+    for case in 0..cases {
+        let case_seed = seed.wrapping_mul(1_000_003).wrapping_add(case as u64);
+        let mut rng = Rng::new(case_seed);
+        prop(case_seed, &mut rng);
+    }
+}
+
+fn random_mlp(rng: &mut Rng) -> Mlp {
+    let depth = 1 + rng.below(3);
+    let mut dims = vec![3 + rng.below(20)];
+    for _ in 0..depth {
+        dims.push(2 + rng.below(24));
+    }
+    dims.push(2 + rng.below(6)); // classes
+    let acts: Vec<Activation> = (0..dims.len() - 2)
+        .map(|_| match rng.below(3) {
+            0 => Activation::Relu,
+            1 => Activation::Tanh,
+            _ => Activation::Sigmoid,
+        })
+        .collect();
+    Mlp::new(&dims, &acts, rng)
+}
+
+fn random_batches(mlp: &Mlp, sites: usize, rng: &mut Rng) -> Vec<Batch> {
+    let classes = *mlp.dims.last().unwrap();
+    (0..sites)
+        .map(|_| {
+            let n = 2 + rng.below(10);
+            let x = Matrix::randn(n, mlp.dims[0], 1.0, rng);
+            let labels: Vec<usize> = (0..n).map(|_| rng.below(classes)).collect();
+            Batch::Dense { x, y: one_hot(&labels, classes) }
+        })
+        .collect()
+}
+
+/// dAD == dSGD == edAD == pooled for random architectures, activations,
+/// site counts and (unequal!) batch sizes.
+#[test]
+fn prop_exact_algorithms_agree() {
+    forall(25, 0xA11CE, |seed, rng| {
+        let mlp = random_mlp(rng);
+        let sites = 2 + rng.below(3);
+        let batches = random_batches(&mlp, sites, rng);
+        let grads = |algo: &mut dyn DistAlgorithm<Mlp>| {
+            let mut cluster = Cluster::replicate(mlp.clone(), sites);
+            algo.step(&mut cluster, &batches).grads
+        };
+        let g_pooled = grads(&mut Pooled);
+        let g_dsgd = grads(&mut Dsgd);
+        let g_dad = grads(&mut Dad);
+        let g_edad = grads(&mut Edad);
+        for (i, p) in g_pooled.iter().enumerate() {
+            let tol = 1e-4 * (1.0 + p.max_abs());
+            assert!(p.max_abs_diff(&g_dsgd[i]) < tol, "seed {seed:#x} dsgd param {i}");
+            assert!(p.max_abs_diff(&g_dad[i]) < tol, "seed {seed:#x} dad param {i}");
+            assert!(p.max_abs_diff(&g_edad[i]) < tol, "seed {seed:#x} edad param {i}");
+        }
+    });
+}
+
+/// The gradient's rank never exceeds the global batch size: rank-dAD with
+/// max_rank >= N must therefore be (near-)exact for any shape.
+#[test]
+fn prop_rankdad_exact_at_full_rank() {
+    forall(12, 0xBEEF, |seed, rng| {
+        let mlp = random_mlp(rng);
+        let sites = 2;
+        let batches = random_batches(&mlp, sites, rng);
+        let mut cluster = Cluster::replicate(mlp.clone(), sites);
+        let g_pooled = Pooled.step(&mut cluster, &batches).grads;
+        let mut cluster2 = Cluster::replicate(mlp.clone(), sites);
+        let mut algo =
+            RankDad { cfg: RankDadConfig { max_rank: 16, n_iters: 60, theta: 1e-6 } };
+        let g_rd = algo.step(&mut cluster2, &batches).grads;
+        for (i, p) in g_pooled.iter().enumerate() {
+            let tol = 5e-2 * (1.0 + p.max_abs());
+            assert!(
+                p.max_abs_diff(&g_rd[i]) < tol,
+                "seed {seed:#x} param {i}: {} vs tol {tol}",
+                p.max_abs_diff(&g_rd[i])
+            );
+        }
+    });
+}
+
+/// Factor reconstruction error is monotonically non-increasing in rank.
+#[test]
+fn prop_factor_error_monotone_in_rank() {
+    forall(15, 0xFACE, |seed, rng| {
+        let n = 3 + rng.below(12);
+        let h1 = 8 + rng.below(48);
+        let h2 = 8 + rng.below(48);
+        let a = Matrix::randn(n, h1, 1.0, rng);
+        let d = Matrix::randn(n, h2, 1.0, rng);
+        let m = matmul_tn(&a, &d);
+        let mut last = f32::MAX;
+        for r in [1usize, 2, 4, 8] {
+            let f = dad::lowrank::rankdad_factors(&a, &d, r, 40, 1e-5);
+            let err = f.reconstruct(1.0).sub(&m).fro_norm();
+            assert!(
+                err <= last * 1.01 + 1e-4,
+                "seed {seed:#x} rank {r}: err {err} > last {last}"
+            );
+            last = err;
+        }
+    });
+}
+
+/// Ledger bytes are conserved: the sum over tag breakdown equals the total.
+#[test]
+fn prop_ledger_breakdown_consistent() {
+    forall(10, 0xCAFE, |_seed, rng| {
+        let mlp = random_mlp(rng);
+        let batches = random_batches(&mlp, 2, rng);
+        let mut cluster = Cluster::replicate(mlp.clone(), 2);
+        let _ = Dad.step(&mut cluster, &batches);
+        let total = cluster.ledger.total();
+        let sum: u64 = cluster.ledger.breakdown().iter().map(|&(_, _, b)| b).sum();
+        assert_eq!(total, sum);
+        assert!(total > 0);
+    });
+}
+
+/// Per-site stats wire size never exceeds dSGD's gradient wire size by the
+/// paper's bound when N < min(h_i): the premise of the whole method.
+#[test]
+fn prop_stats_cheaper_than_grads_when_batch_small() {
+    forall(15, 0xD00D, |seed, rng| {
+        // Wide layers, small batch: the paper's regime.
+        let h = 48 + rng.below(64);
+        let mut r2 = rng.fork(1);
+        let mlp = Mlp::new(&[h, h, 4 + rng.below(6)], &[Activation::Relu], &mut r2);
+        let n = 2 + rng.below(8); // n << h
+        let classes = *mlp.dims.last().unwrap();
+        let x = Matrix::randn(n, h, 1.0, rng);
+        let labels: Vec<usize> = (0..n).map(|_| rng.below(classes)).collect();
+        let b = Batch::Dense { x, y: one_hot(&labels, classes) };
+        let stats = mlp.local_stats(&b);
+        let stat_bytes: u64 = stats.entries.iter().map(|e| e.wire_bytes()).sum();
+        let grad_bytes: u64 = mlp
+            .param_shapes()
+            .iter()
+            .map(|&(r, c)| (r * c * 4) as u64)
+            .sum();
+        assert!(
+            stat_bytes < grad_bytes,
+            "seed {seed:#x}: stats {stat_bytes} >= grads {grad_bytes} (h={h}, n={n})"
+        );
+    });
+}
