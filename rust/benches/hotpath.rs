@@ -1,48 +1,211 @@
-//! Bench: hot-path kernel timings (the §Perf working set) — matmul
-//! variants at the paper's layer shapes, structured power iterations vs a
-//! materialize-then-iterate baseline, the full local-stats step, and one
-//! complete dAD exchange. This is the harness the optimization pass
-//! iterates against.
+//! Bench: hot-path kernel timings (the §Perf working set) — the blocked/
+//! packed pool-dispatched GEMM engine vs the seed's spawn-per-call kernels
+//! (reproduced below as `legacy`), structured power iterations vs a
+//! materialize-then-iterate baseline, the allocation-free workspace
+//! local-stats step vs the allocating one, and one complete dAD exchange.
+//! This is the harness the optimization pass iterates against.
+//!
+//! Emits BENCH_hotpath.json (see `dad::bench::JsonSink`) so CI tracks the
+//! perf trajectory across PRs. Set DAD_BENCH_FAST=1 for a smoke run.
 //!
 //! Run: cargo bench --bench hotpath
 
-use dad::bench::{bench, gflops, report};
+use dad::bench::{bench, gflops, report, JsonSink, Timing};
 use dad::lowrank::rankdad_factors;
 use dad::nn::loss::one_hot;
 use dad::nn::model::{Batch, DistModel};
+use dad::nn::stats::LocalStats;
 use dad::nn::Mlp;
-use dad::tensor::{matmul, matmul_nt, matmul_tn, Matrix, Rng};
+use dad::tensor::{matmul, matmul_nt, matmul_tn, Matrix, Rng, Workspace};
+
+/// The seed's kernels, frozen as the perf baseline: scoped-thread spawns
+/// per call, unblocked ikj loops, dot-product / transpose-the-whole-B
+/// regimes for A·Bᵀ. Kept verbatim (minus the dead `- 0`) so "speedup vs
+/// pre-PR" in BENCH_hotpath.json measures exactly the engine change.
+mod legacy {
+    use dad::tensor::{parallel::num_threads, Matrix};
+
+    fn rows_mut_spawning<F>(data: &mut [f32], row_len: usize, min_rows: usize, f: F)
+    where
+        F: Fn(usize, &mut [f32]) + Sync,
+    {
+        let rows = if row_len == 0 { 0 } else { data.len() / row_len };
+        if rows == 0 {
+            return;
+        }
+        let nt = num_threads();
+        let chunks = nt.min(rows.div_ceil(min_rows.max(1))).max(1);
+        if chunks == 1 {
+            f(0, data);
+            return;
+        }
+        let per = rows.div_ceil(chunks);
+        std::thread::scope(|s| {
+            let mut rest = data;
+            let mut row0 = 0usize;
+            for _ in 0..chunks {
+                let take = per.min(rest.len() / row_len);
+                if take == 0 {
+                    break;
+                }
+                let (head, tail) = rest.split_at_mut(take * row_len);
+                rest = tail;
+                let f = &f;
+                let start = row0;
+                s.spawn(move || f(start, head));
+                row0 += take;
+                if rest.is_empty() {
+                    break;
+                }
+            }
+        });
+    }
+
+    const PAR_FLOP_THRESHOLD: usize = 1 << 20;
+
+    fn min_rows_for(total_rows: usize, flops: usize) -> usize {
+        if flops < PAR_FLOP_THRESHOLD {
+            total_rows
+        } else {
+            1
+        }
+    }
+
+    pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let (m, k) = a.shape();
+        let (k2, n) = b.shape();
+        assert_eq!(k, k2);
+        let mut out = Matrix::zeros(m, n);
+        let flops = 2 * m * k * n;
+        let bd = b.data();
+        let ad = a.data();
+        rows_mut_spawning(out.data_mut(), n, min_rows_for(m, flops), |start, chunk| {
+            for (r, crow) in chunk.chunks_mut(n).enumerate() {
+                let i = start + r;
+                let arow = &ad[i * k..(i + 1) * k];
+                for (kk, &aik) in arow.iter().enumerate() {
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &bd[kk * n..(kk + 1) * n];
+                    for (c, &bv) in crow.iter_mut().zip(brow) {
+                        *c += aik * bv;
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+        let (k, m) = a.shape();
+        let (k2, n) = b.shape();
+        assert_eq!(k, k2);
+        let mut out = Matrix::zeros(m, n);
+        let flops = 2 * m * k * n;
+        let ad = a.data();
+        let bd = b.data();
+        rows_mut_spawning(out.data_mut(), n, min_rows_for(m, flops), |start, chunk| {
+            let rows = chunk.len() / n;
+            for kk in 0..k {
+                let brow = &bd[kk * n..(kk + 1) * n];
+                let acol = &ad[kk * m..(kk + 1) * m];
+                for r in 0..rows {
+                    let aik = acol[start + r];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let crow = &mut chunk[r * n..(r + 1) * n];
+                    for (c, &bv) in crow.iter_mut().zip(brow) {
+                        *c += aik * bv;
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+        let (m, k) = a.shape();
+        let (n, k2) = b.shape();
+        assert_eq!(k, k2);
+        let flops = 2 * m * k * n;
+        if flops >= 1 << 22 {
+            return matmul(a, &b.transpose());
+        }
+        let mut out = Matrix::zeros(m, n);
+        let ad = a.data();
+        let bd = b.data();
+        rows_mut_spawning(out.data_mut(), n, min_rows_for(m, flops), |start, chunk| {
+            for (r, crow) in chunk.chunks_mut(n).enumerate() {
+                let i = start + r;
+                let arow = &ad[i * k..(i + 1) * k];
+                for (j, c) in crow.iter_mut().enumerate() {
+                    let brow = &bd[j * k..(j + 1) * k];
+                    *c = dad::tensor::dot(arow, brow);
+                }
+            }
+        });
+        out
+    }
+}
 
 fn main() {
+    let fast = std::env::var("DAD_BENCH_FAST").is_ok();
+    let (wu, ns) = if fast { (1, 4) } else { (3, 15) };
     let mut rng = Rng::new(1);
-    println!("== hotpath kernels ==  (threads: {})", dad::tensor::parallel::num_threads());
+    let threads = dad::tensor::parallel::num_threads();
+    println!("== hotpath kernels ==  (threads: {threads}{})", if fast { ", fast" } else { "" });
+    let mut sink = JsonSink::new();
+    sink.meta("threads", &threads.to_string());
+    sink.meta("fast", &fast.to_string());
 
-    // matmul at the paper's three layer shapes (batch 64 = 2 sites x 32).
+    let duel = |sink: &mut JsonSink,
+                    name: &str,
+                    flops: usize,
+                    new_t: Timing,
+                    old_t: Timing| {
+        report(&format!("{name} [engine]"), new_t);
+        report(&format!("{name} [legacy]"), old_t);
+        println!(
+            "{:<48} {:.2} GFLOP/s, {:.2}x vs legacy",
+            "",
+            gflops(&new_t, flops),
+            old_t.median_ns as f64 / new_t.median_ns.max(1) as f64
+        );
+        sink.add_vs_baseline(name, new_t, old_t, Some(flops));
+    };
+
+    // matmul at the paper's layer shapes (batch 64 = 2 sites x 32).
     for &(m, k, n, tag) in &[
-        (64usize, 784usize, 1024usize, "fwd fc1  64x784 * 784x1024"),
-        (64, 1024, 1024, "fwd fc2  64x1024 * 1024x1024"),
-        (1024, 1024, 1024, "square   1024^3"),
+        (64usize, 784usize, 1024usize, "matmul fwd fc1 64x784*784x1024"),
+        (64, 1024, 1024, "matmul fwd fc2 64x1024*1024x1024"),
+        (1024, 1024, 1024, "matmul square 1024^3"),
     ] {
         let a = Matrix::randn(m, k, 1.0, &mut rng);
         let b = Matrix::randn(k, n, 1.0, &mut rng);
-        let t = bench(3, 15, || matmul(&a, &b));
-        report(&format!("matmul {tag}"), t);
-        println!("{:<48} {:.2} GFLOP/s", "", gflops(&t, 2 * m * k * n));
+        let t_new = bench(wu, ns, || matmul(&a, &b));
+        let t_old = bench(wu, ns, || legacy::matmul(&a, &b));
+        duel(&mut sink, tag, 2 * m * k * n, t_new, t_old);
     }
+
     // Gradient outer product and backward delta shapes.
     let a = Matrix::randn(64, 1024, 1.0, &mut rng);
     let d = Matrix::randn(64, 1024, 1.0, &mut rng);
-    let t = bench(3, 15, || matmul_tn(&a, &d));
-    report("grad outer AᵀΔ 1024x64x1024", t);
-    println!("{:<48} {:.2} GFLOP/s", "", gflops(&t, 2 * 64 * 1024 * 1024));
+    let t_new = bench(wu, ns, || matmul_tn(&a, &d));
+    let t_old = bench(wu, ns, || legacy::matmul_tn(&a, &d));
+    duel(&mut sink, "grad outer AᵀΔ 1024x64x1024", 2 * 64 * 1024 * 1024, t_new, t_old);
+
     let w = Matrix::randn(1024, 1024, 1.0, &mut rng);
-    let t = bench(3, 15, || matmul_nt(&d, &w));
-    report("delta step ΔWᵀ 64x1024x1024", t);
+    let t_new = bench(wu, ns, || matmul_nt(&d, &w));
+    let t_old = bench(wu, ns, || legacy::matmul_nt(&d, &w));
+    duel(&mut sink, "delta step ΔWᵀ 64x1024x1024", 2 * 64 * 1024 * 1024, t_new, t_old);
 
     // Structured power iterations (factored) vs materialized baseline.
-    let t_struct = bench(2, 10, || rankdad_factors(&a, &d, 10, 10, 1e-3));
+    let (wu2, ns2) = if fast { (1, 3) } else { (2, 10) };
+    let t_struct = bench(wu2, ns2, || rankdad_factors(&a, &d, 10, 10, 1e-3));
     report("rank-dad factors (structured, r=10, 10 it)", t_struct);
-    let t_mat = bench(2, 10, || {
+    let t_mat = bench(wu2, ns2, || {
         // Baseline: materialize M = AᵀΔ, then the same iteration on M
         // directly (the O(h^2) path of paper eq. 6).
         let m = matmul_tn(&a, &d);
@@ -63,26 +226,41 @@ fn main() {
         "structured speedup vs materialized: {:.2}x",
         t_mat.median_ns as f64 / t_struct.median_ns as f64
     );
+    sink.add_vs_baseline("rank-dad structured vs materialized", t_struct, t_mat, None);
 
-    // Full local-stats step + dAD exchange on the paper MLP.
+    // Full local-stats step on the paper MLP: allocating entry point vs the
+    // workspace-reusing one (the zero-allocation steady state).
     let mut mrng = Rng::new(42);
     let mlp = Mlp::paper_mnist(&mut mrng);
     let x = Matrix::rand_uniform(32, 784, 0.0, 1.0, &mut rng);
     let labels: Vec<usize> = (0..32).map(|i| i % 10).collect();
     let batch = Batch::Dense { x, y: one_hot(&labels, 10) };
-    let t = bench(2, 10, || mlp.local_stats(&batch));
-    report("mlp local_stats (batch 32, paper dims)", t);
+    let t_alloc = bench(wu2, ns2, || mlp.local_stats(&batch));
+    report("mlp local_stats (allocating, batch 32)", t_alloc);
+    let mut ws = Workspace::new();
+    let mut out = LocalStats::empty();
+    let t_ws = bench(wu2, ns2, || mlp.local_stats_into(&batch, &mut ws, &mut out));
+    report("mlp local_stats (workspace reuse)", t_ws);
+    sink.add("mlp local_stats allocating", t_alloc);
+    sink.add_vs_baseline("mlp local_stats workspace", t_ws, t_alloc, None);
 
+    // Full synchronized steps (2 sites, incl. replica clone).
     use dad::algos::common::DistAlgorithm;
+    let (wu3, ns3) = if fast { (1, 3) } else { (1, 8) };
     let batches = vec![batch.clone(), batch.clone()];
-    let t = bench(1, 8, || {
+    let t = bench(wu3, ns3, || {
         let mut cluster = dad::dist::Cluster::replicate(mlp.clone(), 2);
         dad::algos::Dad.step(&mut cluster, &batches)
     });
     report("full dAD step (2 sites, incl. clone)", t);
-    let t = bench(1, 8, || {
+    sink.add("full dAD step", t);
+    let t = bench(wu3, ns3, || {
         let mut cluster = dad::dist::Cluster::replicate(mlp.clone(), 2);
         dad::algos::Dsgd.step(&mut cluster, &batches)
     });
     report("full dSGD step (2 sites, incl. clone)", t);
+    sink.add("full dSGD step", t);
+
+    sink.write("BENCH_hotpath.json").expect("writing BENCH_hotpath.json");
+    println!("wrote BENCH_hotpath.json");
 }

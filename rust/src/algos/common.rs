@@ -40,8 +40,14 @@ pub struct GatheredStats {
 
 pub fn gather_local_stats<M: DistModel>(cluster: &Cluster<M>, batches: &[Batch]) -> GatheredStats {
     assert_eq!(cluster.n_sites(), batches.len(), "one batch per site");
-    let per_site: Vec<LocalStats> =
-        cluster.sites.iter().zip(batches).map(|(s, b)| s.model.local_stats(b)).collect();
+    // Each site computes on its own persistent workspace, so the forward/
+    // backward scratch is reused across steps instead of re-allocated.
+    let per_site: Vec<LocalStats> = cluster
+        .sites
+        .iter()
+        .zip(batches)
+        .map(|(s, b)| s.model.local_stats_ws(b, &mut s.ws.borrow_mut()))
+        .collect();
     let site_rows: Vec<usize> =
         per_site.iter().map(|s| s.entries.last().expect("no stats entries").d.rows()).collect();
     let total_rows = site_rows.iter().sum();

@@ -23,7 +23,8 @@ impl<M: DistModel> DistAlgorithm<M> for Pooled {
     fn step(&mut self, cluster: &mut Cluster<M>, batches: &[Batch]) -> StepOutcome {
         cluster.next_step();
         let pooled = crate::algos::common::concat_batches(batches);
-        let stats = cluster.sites[0].model.local_stats(&pooled);
+        let site = &cluster.sites[0];
+        let stats = site.model.local_stats_ws(&pooled, &mut site.ws.borrow_mut());
         let rows = stats.entries.last().unwrap().d.rows();
         let scale = 1.0 / rows as f32;
         let shapes = cluster.sites[0].model.param_shapes();

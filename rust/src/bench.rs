@@ -1,7 +1,10 @@
 //! Benchmark harness (criterion is unavailable offline): warmup + sampled
-//! timing with median/p10/p90, and a tiny table printer. `cargo bench`
+//! timing with median/p10/p90, a tiny table printer, and a machine-readable
+//! JSON sink (`JsonSink`) so CI can track the perf trajectory across PRs —
+//! benches/hotpath.rs emits BENCH_hotpath.json through it. `cargo bench`
 //! targets use `harness = false` and drive this directly.
 
+use std::io::Write;
 use std::time::Instant;
 
 /// Timing result in nanoseconds.
@@ -61,6 +64,120 @@ pub fn gflops(t: &Timing, flops: usize) -> f64 {
     flops as f64 / t.median_ns as f64
 }
 
+/// One benchmark row destined for the JSON artifact.
+#[derive(Debug, Clone)]
+pub struct BenchRecord {
+    pub name: String,
+    pub timing: Timing,
+    /// GFLOP/s, when the benchmark has a FLOP count.
+    pub gflops: Option<f64>,
+    /// Median speedup vs a named baseline timing, when one was measured.
+    pub speedup: Option<f64>,
+}
+
+/// Collects benchmark records and writes them as a single JSON document —
+/// the `BENCH_hotpath.json` contract consumed by CI (uploaded as an
+/// artifact) and by EXPERIMENTS.md §Perf. Hand-rolled serialization: no
+/// serde offline, and the schema is flat.
+#[derive(Debug, Default)]
+pub struct JsonSink {
+    meta: Vec<(String, String)>,
+    records: Vec<BenchRecord>,
+}
+
+impl JsonSink {
+    pub fn new() -> Self {
+        JsonSink::default()
+    }
+
+    /// Attach a free-form metadata key (threads, git rev, scale, ...).
+    pub fn meta(&mut self, key: &str, value: &str) {
+        self.meta.push((key.to_string(), value.to_string()));
+    }
+
+    /// Record a plain timing.
+    pub fn add(&mut self, name: &str, t: Timing) {
+        self.records.push(BenchRecord { name: name.to_string(), timing: t, gflops: None, speedup: None });
+    }
+
+    /// Record a timing with throughput.
+    pub fn add_gflops(&mut self, name: &str, t: Timing, flops: usize) {
+        self.records.push(BenchRecord {
+            name: name.to_string(),
+            timing: t,
+            gflops: Some(gflops(&t, flops)),
+            speedup: None,
+        });
+    }
+
+    /// Record a timing together with its speedup over a baseline timing
+    /// (baseline_median / median) and optional throughput.
+    pub fn add_vs_baseline(&mut self, name: &str, t: Timing, baseline: Timing, flops: Option<usize>) {
+        self.records.push(BenchRecord {
+            name: name.to_string(),
+            timing: t,
+            gflops: flops.map(|f| gflops(&t, f)),
+            speedup: Some(baseline.median_ns as f64 / t.median_ns.max(1) as f64),
+        });
+    }
+
+    /// Minimal JSON string escaping (names are ASCII identifiers, but stay
+    /// correct anyway).
+    fn escape(s: &str) -> String {
+        let mut out = String::with_capacity(s.len());
+        for c in s.chars() {
+            match c {
+                '"' => out.push_str("\\\""),
+                '\\' => out.push_str("\\\\"),
+                '\n' => out.push_str("\\n"),
+                c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                c => out.push(c),
+            }
+        }
+        out
+    }
+
+    /// Serialize to a JSON document.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("{\n  \"meta\": {");
+        for (i, (k, v)) in self.meta.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!("\n    \"{}\": \"{}\"", Self::escape(k), Self::escape(v)));
+        }
+        s.push_str("\n  },\n  \"benchmarks\": [");
+        for (i, r) in self.records.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "\n    {{\"name\": \"{}\", \"median_ns\": {}, \"p10_ns\": {}, \"p90_ns\": {}, \"samples\": {}",
+                Self::escape(&r.name),
+                r.timing.median_ns,
+                r.timing.p10_ns,
+                r.timing.p90_ns,
+                r.timing.samples
+            ));
+            if let Some(g) = r.gflops {
+                s.push_str(&format!(", \"gflops\": {g:.4}"));
+            }
+            if let Some(x) = r.speedup {
+                s.push_str(&format!(", \"speedup_vs_baseline\": {x:.4}"));
+            }
+            s.push('}');
+        }
+        s.push_str("\n  ]\n}\n");
+        s
+    }
+
+    /// Write the document to `path`.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_json().as_bytes())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -83,5 +200,25 @@ mod tests {
         let t = Timing { median_ns: 2_500_000, p10_ns: 900, p90_ns: 3_000_000_000, samples: 1 };
         let s = t.human();
         assert!(s.contains("ms") && s.contains("ns") && s.contains("s"), "{s}");
+    }
+
+    #[test]
+    fn json_sink_schema() {
+        let mut sink = JsonSink::new();
+        sink.meta("threads", "8");
+        let t = Timing { median_ns: 100, p10_ns: 90, p90_ns: 200, samples: 5 };
+        let base = Timing { median_ns: 250, p10_ns: 240, p90_ns: 260, samples: 5 };
+        sink.add("plain", t);
+        sink.add_gflops("with \"quotes\"", t, 1000);
+        sink.add_vs_baseline("sped-up", t, base, Some(1000));
+        let json = sink.to_json();
+        assert!(json.contains("\"threads\": \"8\""), "{json}");
+        assert!(json.contains("\"median_ns\": 100"), "{json}");
+        assert!(json.contains("\\\"quotes\\\""), "{json}");
+        assert!(json.contains("\"speedup_vs_baseline\": 2.5000"), "{json}");
+        assert!(json.contains("\"gflops\": 10.0000"), "{json}");
+        // Balanced braces/brackets (cheap well-formedness check).
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
     }
 }

@@ -231,7 +231,7 @@ fn local_step<M: DistModel>(
 ) -> crate::algos::StepOutcome {
     let mut losses = 0.0f32;
     for (site, batch) in cluster.sites.iter_mut().zip(batches) {
-        let stats = site.model.local_stats(batch);
+        let stats = site.model.local_stats_ws(batch, site.ws.get_mut());
         let rows = stats.entries.last().unwrap().d.rows();
         let grads = stats.assemble_grads(shapes, 1.0 / rows as f32, 1.0 / rows as f32);
         let mut params: Vec<Matrix> = site.model.params().into_iter().cloned().collect();

@@ -1,0 +1,96 @@
+//! Byte ledger: exact accounting of every matrix that crosses the simulated
+//! wire, tagged by payload kind and link direction. The paper's bandwidth
+//! claims (Table in section 3, Figure "bytes" panels) are read directly off
+//! this ledger — no Θ-bound is ever *assumed* by the experiments, only
+//! measured and then compared against the bound.
+
+/// Link direction in the simulated topology.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Direction {
+    /// Site uplink to the aggregator (star topology).
+    SiteToAgg,
+    /// Aggregator broadcast down to the sites (star topology). Counted
+    /// once per broadcast — the down-link is a shared multicast, which is
+    /// what makes p2p dAD exactly half the star's total at S = 2
+    /// (see `algos::p2p`).
+    AggToSite,
+    /// Direct peer exchange (section 3.6's decentralized variant).
+    PeerToPeer,
+}
+
+/// Accumulated bytes per (tag, direction) pair.
+#[derive(Debug, Clone, Default)]
+pub struct Ledger {
+    entries: Vec<(String, Direction, u64)>,
+}
+
+impl Ledger {
+    pub fn new() -> Self {
+        Ledger { entries: Vec::new() }
+    }
+
+    /// Add `bytes` under (tag, dir), merging with an existing row.
+    pub fn record(&mut self, tag: &str, dir: Direction, bytes: u64) {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.1 == dir && e.0 == tag) {
+            e.2 += bytes;
+        } else {
+            self.entries.push((tag.to_string(), dir, bytes));
+        }
+    }
+
+    /// Total bytes across all tags and directions.
+    pub fn total(&self) -> u64 {
+        self.entries.iter().map(|e| e.2).sum()
+    }
+
+    /// Total bytes in one direction.
+    pub fn total_dir(&self, dir: Direction) -> u64 {
+        self.entries.iter().filter(|e| e.1 == dir).map(|e| e.2).sum()
+    }
+
+    /// Per-(tag, direction) rows, in first-recorded order. The sum of the
+    /// byte column equals `total()` — asserted by tests/proptests.rs.
+    pub fn breakdown(&self) -> &[(String, Direction, u64)] {
+        &self.entries
+    }
+
+    /// Forget everything (per-run reuse).
+    pub fn reset(&mut self) {
+        self.entries.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_merges_by_tag_and_direction() {
+        let mut l = Ledger::new();
+        l.record("acts", Direction::SiteToAgg, 100);
+        l.record("acts", Direction::SiteToAgg, 50);
+        l.record("acts", Direction::AggToSite, 7);
+        l.record("deltas", Direction::SiteToAgg, 1);
+        assert_eq!(l.breakdown().len(), 3);
+        assert_eq!(l.total(), 158);
+        assert_eq!(l.total_dir(Direction::SiteToAgg), 151);
+        assert_eq!(l.total_dir(Direction::AggToSite), 7);
+        assert_eq!(l.total_dir(Direction::PeerToPeer), 0);
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let mut l = Ledger::new();
+        for (i, dir) in [Direction::SiteToAgg, Direction::AggToSite, Direction::PeerToPeer]
+            .into_iter()
+            .enumerate()
+        {
+            l.record("t", dir, (i as u64 + 1) * 10);
+        }
+        let sum: u64 = l.breakdown().iter().map(|&(_, _, b)| b).sum();
+        assert_eq!(sum, l.total());
+        l.reset();
+        assert_eq!(l.total(), 0);
+        assert!(l.breakdown().is_empty());
+    }
+}

@@ -1,0 +1,208 @@
+//! The simulated multi-site cluster: model replicas, the byte ledger, and a
+//! wire-cost model turning ledger traffic into simulated seconds.
+//!
+//! The paper's setting is S hospital-style sites that may never pool data;
+//! this module gives the algorithms in `crate::algos` a topology to talk
+//! over while keeping everything in-process and deterministic. Three link
+//! primitives cover every algorithm:
+//!
+//!   `send_to_agg`  one site -> aggregator          (star uplink)
+//!   `broadcast`    aggregator -> all sites, once   (star shared down-link)
+//!   `send_p2p`     one site -> each of S-1 peers   (section 3.6)
+//!
+//! Every call records exact payload bytes in the [`Ledger`] and advances
+//! `sim_time_s` under the cluster's [`CostModel`]; the experiments compare
+//! the measured bytes against the paper's Θ bounds.
+
+pub mod ledger;
+
+pub use ledger::{Direction, Ledger};
+
+use std::cell::RefCell;
+
+use crate::nn::model::Replicate;
+use crate::tensor::{Matrix, Workspace};
+
+/// Latency + bandwidth model for one link class; `time_for` converts a
+/// payload into simulated seconds.
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// Per-message one-way latency (seconds).
+    pub latency_s: f64,
+    /// Link throughput (bytes/second).
+    pub bytes_per_s: f64,
+}
+
+impl CostModel {
+    /// Datacenter LAN: 10 GbE, ~50 µs one-way.
+    pub fn lan_10gbe() -> Self {
+        CostModel { latency_s: 50e-6, bytes_per_s: 10e9 / 8.0 }
+    }
+
+    /// Federated/WAN setting (the paper's motivating deployment): ~100 Mbit/s
+    /// uplinks with ~30 ms latency between institutions.
+    pub fn wan_federated() -> Self {
+        CostModel { latency_s: 30e-3, bytes_per_s: 100e6 / 8.0 }
+    }
+
+    /// Seconds to move `bytes` in `n_messages` transmissions.
+    pub fn time_for(&self, bytes: u64, n_messages: usize) -> f64 {
+        n_messages as f64 * self.latency_s + bytes as f64 / self.bytes_per_s
+    }
+}
+
+/// One simulated training site: a model replica plus a reusable per-site
+/// step workspace (so repeated `local_stats` calls are allocation-free —
+/// see `tensor::workspace`). RefCell because sites are iterated through
+/// shared references in `gather_local_stats` while only the workspace needs
+/// mutability.
+pub struct Site<M> {
+    pub id: usize,
+    pub model: M,
+    pub ws: RefCell<Workspace>,
+}
+
+/// The simulated cluster handed to every `DistAlgorithm::step`.
+pub struct Cluster<M> {
+    pub sites: Vec<Site<M>>,
+    pub ledger: Ledger,
+    pub cost: CostModel,
+    /// Simulated wall-clock spent on the wire so far.
+    pub sim_time_s: f64,
+    /// Synchronized steps taken (each `DistAlgorithm::step` calls
+    /// `next_step` once).
+    pub step: usize,
+}
+
+impl<M> Cluster<M> {
+    /// Build an S-site cluster of bit-identical replicas — the paper's
+    /// "every site initializes with the same random seed" requirement,
+    /// realized by replicating one already-initialized model.
+    pub fn replicate(model: M, n_sites: usize) -> Self
+    where
+        M: Replicate,
+    {
+        assert!(n_sites >= 1, "a cluster needs at least one site");
+        let mut sites = Vec::with_capacity(n_sites);
+        for id in 0..n_sites - 1 {
+            sites.push(Site { id, model: model.replicate(), ws: RefCell::new(Workspace::new()) });
+        }
+        sites.push(Site { id: n_sites - 1, model, ws: RefCell::new(Workspace::new()) });
+        Cluster {
+            sites,
+            ledger: Ledger::new(),
+            cost: CostModel::lan_10gbe(),
+            sim_time_s: 0.0,
+            step: 0,
+        }
+    }
+
+    /// Same cluster under a different wire-cost model.
+    pub fn with_cost(mut self, cost: CostModel) -> Self {
+        self.cost = cost;
+        self
+    }
+
+    pub fn n_sites(&self) -> usize {
+        self.sites.len()
+    }
+
+    /// Mark the start of a synchronized step.
+    pub fn next_step(&mut self) {
+        self.step += 1;
+    }
+
+    fn payload_bytes(payload: &[&Matrix]) -> u64 {
+        payload.iter().map(|m| m.wire_bytes()).sum()
+    }
+
+    /// One site ships `payload` up to the aggregator.
+    pub fn send_to_agg(&mut self, tag: &str, payload: &[&Matrix]) {
+        let bytes = Self::payload_bytes(payload);
+        self.ledger.record(tag, Direction::SiteToAgg, bytes);
+        self.sim_time_s += self.cost.time_for(bytes, 1);
+    }
+
+    /// The aggregator broadcasts `payload` to every site. Counted (and
+    /// timed) once: the down-link is a shared multicast, so its cost does
+    /// not scale with S — which is exactly why p2p dAD halves the S = 2
+    /// star total (no aggregator echo) rather than merely matching it.
+    pub fn broadcast(&mut self, tag: &str, payload: &[&Matrix]) {
+        let bytes = Self::payload_bytes(payload);
+        self.ledger.record(tag, Direction::AggToSite, bytes);
+        self.sim_time_s += self.cost.time_for(bytes, 1);
+    }
+
+    /// One site ships `payload` to each of its S-1 peers (no aggregator).
+    /// Bytes scale with the peer count; simulated time does not, because the
+    /// S-1 unicasts leave on independent links in parallel.
+    pub fn send_p2p(&mut self, tag: &str, payload: &[&Matrix]) {
+        let per_peer = Self::payload_bytes(payload);
+        let peers = self.n_sites().saturating_sub(1) as u64;
+        self.ledger.record(tag, Direction::PeerToPeer, per_peer * peers);
+        self.sim_time_s += self.cost.time_for(per_peer, 1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::model::DistModel;
+    use crate::nn::{Activation, Mlp};
+    use crate::tensor::Rng;
+
+    fn mlp() -> Mlp {
+        let mut rng = Rng::new(3);
+        Mlp::new(&[4, 6, 3], &[Activation::Relu], &mut rng)
+    }
+
+    #[test]
+    fn replicate_is_bit_identical() {
+        let m = mlp();
+        let snapshot: Vec<Matrix> = m.params().into_iter().cloned().collect();
+        let c = Cluster::replicate(m, 3);
+        assert_eq!(c.n_sites(), 3);
+        for (i, site) in c.sites.iter().enumerate() {
+            assert_eq!(site.id, i);
+            for (p, s) in site.model.params().into_iter().zip(&snapshot) {
+                assert_eq!(p, s, "site {i} diverged at init");
+            }
+        }
+    }
+
+    #[test]
+    fn link_primitives_account_bytes_and_time() {
+        let mut c = Cluster::replicate(mlp(), 4);
+        let m = Matrix::zeros(8, 16); // 512 B
+        c.send_to_agg("x", &[&m]);
+        assert_eq!(c.ledger.total_dir(Direction::SiteToAgg), 512);
+        c.broadcast("x", &[&m, &m]);
+        // Broadcast counted once, not per receiving site.
+        assert_eq!(c.ledger.total_dir(Direction::AggToSite), 1024);
+        c.send_p2p("x", &[&m]);
+        // Peer exchange counted once per receiving peer (S - 1 = 3).
+        assert_eq!(c.ledger.total_dir(Direction::PeerToPeer), 3 * 512);
+        assert!(c.sim_time_s > 0.0);
+        assert_eq!(c.ledger.total(), 512 + 1024 + 3 * 512);
+    }
+
+    #[test]
+    fn cost_models_order_sanely() {
+        let lan = CostModel::lan_10gbe();
+        let wan = CostModel::wan_federated();
+        let bytes = 1_000_000;
+        assert!(lan.time_for(bytes, 1) < wan.time_for(bytes, 1));
+        // Latency dominates small messages, bandwidth dominates big ones.
+        assert!(wan.time_for(1, 1) > 0.9 * wan.latency_s);
+        assert!(wan.time_for(10 * bytes, 1) > 5.0 * wan.time_for(bytes, 1));
+    }
+
+    #[test]
+    fn next_step_counts() {
+        let mut c = Cluster::replicate(mlp(), 2);
+        assert_eq!(c.step, 0);
+        c.next_step();
+        c.next_step();
+        assert_eq!(c.step, 2);
+    }
+}

@@ -9,7 +9,7 @@
 //! The theta early-stop yields the *effective rank* — the paper's adaptive
 //! bandwidth mechanism and training-dynamics probe.
 
-use crate::tensor::{matvec, matvec_t, Matrix};
+use crate::tensor::{matvec_into, matvec_t_into, Matrix};
 
 /// Low-rank factorization of a gradient outer product: M ≈ q_tᵀ g_t, with
 /// q_t rows = σ_j q_j (σ absorbed, paper's "absorbing singular values") and
@@ -60,18 +60,55 @@ pub fn deterministic_init(h: usize) -> Vec<f32> {
     v
 }
 
-/// One deflated structured power-iteration step (unnormalized):
-/// g' = Δᵀ(A(Aᵀ(Δ g))) − G_jᵀ(σ² ⊙ (G_j g)), then re-orthogonalized against
-/// the found vectors. `found` holds (sigma, g_row) pairs.
-pub fn power_iter_step(a: &Matrix, d: &Matrix, g: &[f32], found: &[(f32, Vec<f32>)]) -> Vec<f32> {
-    let v = matvec(d, g); // (N)
-    let t = matvec_t(a, &v); // (h_in) = Aᵀ v
-    let w = matvec(a, &t); // (N)   = C v
-    let mut g_next = matvec_t(d, &w); // (h_out)
+/// Reused step scratch: the four matvecs of one structured iteration run as
+/// two in-place passes over A and two over Δ, writing into these buffers —
+/// zero allocation per iteration once the scratch exists (the seed
+/// allocated four fresh vectors per step, ~4·n_iters·rank allocations per
+/// factorization).
+struct PowerScratch {
+    /// (N)      v = Δ g. Distinct from `w`: the σ computation needs both
+    /// at once (σ² = vᵀ w).
+    v: Vec<f32>,
+    /// (h_in)   t = Aᵀ v.
+    t: Vec<f32>,
+    /// (N)      w = A t = C v.
+    w: Vec<f32>,
+    /// (h_out)  the unnormalized next iterate.
+    g_next: Vec<f32>,
+}
+
+impl PowerScratch {
+    fn for_factors(a: &Matrix, d: &Matrix) -> Self {
+        PowerScratch {
+            v: vec![0.0; a.rows()],
+            t: vec![0.0; a.cols()],
+            w: vec![0.0; a.rows()],
+            g_next: vec![0.0; d.cols()],
+        }
+    }
+}
+
+/// One deflated structured power-iteration step (unnormalized) into
+/// `s.g_next`: g' = Δᵀ(A(Aᵀ(Δ g))) − G_jᵀ(σ² ⊙ (G_j g)), then
+/// re-orthogonalized against the found vectors.
+fn power_iter_step_into(
+    a: &Matrix,
+    d: &Matrix,
+    g: &[f32],
+    found: &[(f32, Vec<f32>)],
+    s: &mut PowerScratch,
+) {
+    // Two passes over Δ (rows stream once each) ...
+    matvec_into(d, g, &mut s.v); // (N)      v = Δ g
+    // ... two passes over A ...
+    matvec_t_into(a, &s.v, &mut s.t); // (h_in)  t = Aᵀ v
+    matvec_into(a, &s.t, &mut s.w); // (N)      w = A t = C v
+    // ... and the closing Δ pass.
+    matvec_t_into(d, &s.w, &mut s.g_next); // (h_out)
     // Deflation: subtract σ_j² g_j (g_jᵀ g).
     for (sigma, gj) in found {
         let coeff = sigma * sigma * crate::tensor::dot(gj, g);
-        for (gn, &gv) in g_next.iter_mut().zip(gj) {
+        for (gn, &gv) in s.g_next.iter_mut().zip(gj) {
             *gn -= coeff * gv;
         }
     }
@@ -82,13 +119,20 @@ pub fn power_iter_step(a: &Matrix, d: &Matrix, g: &[f32], found: &[(f32, Vec<f32
     // would resurrect into a spurious duplicate dominant component.
     for _ in 0..2 {
         for (_, gj) in found {
-            let proj = crate::tensor::dot(gj, &g_next);
-            for (gn, &gv) in g_next.iter_mut().zip(gj) {
+            let proj = crate::tensor::dot(gj, &s.g_next);
+            for (gn, &gv) in s.g_next.iter_mut().zip(gj) {
                 *gn -= proj * gv;
             }
         }
     }
-    g_next
+}
+
+/// Allocating wrapper around `power_iter_step_into` (public API and
+/// cross-checks; the factorization loop below reuses one scratch instead).
+pub fn power_iter_step(a: &Matrix, d: &Matrix, g: &[f32], found: &[(f32, Vec<f32>)]) -> Vec<f32> {
+    let mut s = PowerScratch::for_factors(a, d);
+    power_iter_step_into(a, d, g, found, &mut s);
+    s.g_next
 }
 
 fn norm(v: &[f32]) -> f32 {
@@ -115,28 +159,32 @@ pub fn rankdad_factors(a: &Matrix, d: &Matrix, max_rank: usize, n_iters: usize, 
     // residual spectra below ~sqrt(eps)*sigma_0; clamp user thetas to it.
     let theta_stop = theta.max(3e-4);
 
+    let mut scratch = PowerScratch::for_factors(a, d);
+    let mut g = vec![0.0f32; h_out];
+
     for j in 0..hard_cap {
-        let mut g = g0.clone();
+        g.copy_from_slice(&g0);
         let mut degenerate = false;
         let mut last_nrm = 0.0f32;
         for _ in 0..n_iters {
-            let g_new = power_iter_step(a, d, &g, &found);
-            let nrm = norm(&g_new);
+            power_iter_step_into(a, d, &g, &found, &mut scratch);
+            let nrm = norm(&scratch.g_next);
             last_nrm = nrm;
             if nrm < 1e-30 {
                 degenerate = true;
                 break;
             }
+            // Normalize into `g` while measuring the iterate gap — no
+            // temporary unit vector.
             let inv = 1.0 / nrm;
-            let g_unit: Vec<f32> = g_new.iter().map(|&x| x * inv).collect();
-            let gap_num: f32 = g
-                .iter()
-                .zip(&g_unit)
-                .map(|(&x, &y)| (x - y) * (x - y))
-                .sum::<f32>()
-                .sqrt();
-            let gap = gap_num / (norm(&g) + 1e-30);
-            g = g_unit;
+            let g_norm = norm(&g);
+            let mut gap_sq = 0.0f32;
+            for (gv, &gn) in g.iter_mut().zip(&scratch.g_next) {
+                let unit = gn * inv;
+                gap_sq += (*gv - unit) * (*gv - unit);
+                *gv = unit;
+            }
+            let gap = gap_sq.sqrt() / (g_norm + 1e-30);
             if gap < theta {
                 break;
             }
@@ -147,22 +195,20 @@ pub fn rankdad_factors(a: &Matrix, d: &Matrix, max_rank: usize, n_iters: usize, 
         if degenerate || res_sigma < theta_stop * 1.0f32.max(sigma0(&found)) {
             break;
         }
-        let v = matvec(d, &g);
-        let t = matvec_t(a, &v);
-        let sigma = crate::tensor::dot(&v, &matvec(a, &t)).max(0.0).sqrt();
+        // σ² = vᵀ C v through the factors, reusing the step scratch:
+        // v = Δ g, t = Aᵀ v, w = A t.
+        matvec_into(d, &g, &mut scratch.v);
+        matvec_t_into(a, &scratch.v, &mut scratch.t);
+        matvec_into(a, &scratch.t, &mut scratch.w);
+        let sigma = crate::tensor::dot(&scratch.v, &scratch.w).max(0.0).sqrt();
         if sigma < theta_stop * 1.0f32.max(sigma0(&found)) {
             break;
         }
-        // q = Aᵀ v / σ; store σ·q and g.
-        let inv = 1.0 / sigma;
-        for (jj, &tv) in t.iter().enumerate() {
-            q_t[(j, jj)] = tv * inv * sigma; // = t (σ absorbed back); kept
-                                             // explicit for clarity
-        }
-        for (jj, &gv) in g.iter().enumerate() {
-            g_t[(j, jj)] = gv;
-        }
-        found.push((sigma, g));
+        // q = Aᵀ v / σ; stored row = σ·q = t (σ absorbed back, the paper's
+        // "absorbing singular values").
+        q_t.row_mut(j).copy_from_slice(&scratch.t);
+        g_t.row_mut(j).copy_from_slice(&g);
+        found.push((sigma, g.clone()));
         if found.len() == max_rank {
             break;
         }
@@ -173,7 +219,7 @@ pub fn rankdad_factors(a: &Matrix, d: &Matrix, max_rank: usize, n_iters: usize, 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::tensor::{matmul_tn, Matrix, Rng};
+    use crate::tensor::{matmul_tn, matvec, matvec_t, Matrix, Rng};
 
     fn rand_pair(rng: &mut Rng, n: usize, h_in: usize, h_out: usize) -> (Matrix, Matrix) {
         (Matrix::randn(n, h_in, 1.0, rng), Matrix::randn(n, h_out, 1.0, rng))

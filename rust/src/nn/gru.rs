@@ -21,7 +21,7 @@ use crate::nn::init::xavier_uniform;
 use crate::nn::mlp::{add_bias, Mlp};
 use crate::nn::model::{Batch, DistModel};
 use crate::nn::stats::{LocalStats, StatsEntry};
-use crate::tensor::{matmul, matmul_nt, Matrix, Rng};
+use crate::tensor::{matmul_into, matmul_nt, matmul_nt_into, Matrix, Rng, Workspace};
 
 /// GRU + MLP-classifier sequence model.
 #[derive(Clone)]
@@ -75,19 +75,22 @@ impl GruClassifier {
         }
     }
 
-    /// One GRU step; returns (h_t, saved state).
-    fn step(&self, x_t: &Matrix, h_prev: &Matrix) -> (Matrix, StepState) {
+    /// One GRU step; consumes `h_prev` (it is saved in the state without a
+    /// clone) and draws every buffer from `arena`.
+    fn step_ws(&self, x_t: &Matrix, h_prev: Matrix, arena: &mut Workspace) -> (Matrix, StepState) {
         let h = self.hidden;
         let n_rows = x_t.rows();
-        let mut gi = matmul(x_t, &self.w_i);
+        let mut gi = arena.take(n_rows, 3 * h);
+        matmul_into(x_t, &self.w_i, &mut gi);
         add_bias(&mut gi, &self.b_i);
-        let mut gh = matmul(h_prev, &self.w_h);
+        let mut gh = arena.take(n_rows, 3 * h);
+        matmul_into(&h_prev, &self.w_h, &mut gh);
         add_bias(&mut gh, &self.b_h);
-        let mut r = Matrix::zeros(n_rows, h);
-        let mut z = Matrix::zeros(n_rows, h);
-        let mut n = Matrix::zeros(n_rows, h);
-        let mut s = Matrix::zeros(n_rows, h);
-        let mut h_t = Matrix::zeros(n_rows, h);
+        let mut r = arena.take(n_rows, h);
+        let mut z = arena.take(n_rows, h);
+        let mut n = arena.take(n_rows, h);
+        let mut s = arena.take(n_rows, h);
+        let mut h_t = arena.take(n_rows, h);
         for i in 0..n_rows {
             let gi_row = gi.row(i);
             let gh_row = gh.row(i);
@@ -104,16 +107,22 @@ impl GruClassifier {
                 h_t[(i, j)] = (1.0 - zv) * nv + zv * hp[j];
             }
         }
-        (h_t, StepState { h_prev: h_prev.clone(), r, z, n, s })
+        arena.recycle(gi);
+        arena.recycle(gh);
+        (h_t, StepState { h_prev, r, z, n, s })
     }
 
     /// Full forward; returns (h_T, per-step states).
     fn forward_seq(&self, xs: &[Matrix]) -> (Matrix, Vec<StepState>) {
+        self.forward_seq_ws(xs, &mut Workspace::new())
+    }
+
+    fn forward_seq_ws(&self, xs: &[Matrix], arena: &mut Workspace) -> (Matrix, Vec<StepState>) {
         let n_rows = xs[0].rows();
-        let mut h = Matrix::zeros(n_rows, self.hidden);
+        let mut h = arena.take(n_rows, self.hidden);
         let mut states = Vec::with_capacity(xs.len());
         for x_t in xs {
-            let (h_t, st) = self.step(x_t, &h);
+            let (h_t, st) = self.step_ws(x_t, h, arena);
             states.push(st);
             h = h_t;
         }
@@ -123,10 +132,19 @@ impl GruClassifier {
     /// Gate backward for one timestep. Returns (δ_i stack row block,
     /// δ_h stack row block, δh_{t-1}).
     fn step_backward(&self, st: &StepState, dh: &Matrix) -> (Matrix, Matrix, Matrix) {
+        self.step_backward_ws(st, dh, &mut Workspace::new())
+    }
+
+    fn step_backward_ws(
+        &self,
+        st: &StepState,
+        dh: &Matrix,
+        arena: &mut Workspace,
+    ) -> (Matrix, Matrix, Matrix) {
         let h = self.hidden;
         let n_rows = dh.rows();
-        let mut d_i = Matrix::zeros(n_rows, 3 * h); // [δr | δz | δn]
-        let mut d_h = Matrix::zeros(n_rows, 3 * h); // [δr | δz | δn⊙r]
+        let mut d_i = arena.take(n_rows, 3 * h); // [δr | δz | δn]
+        let mut d_h = arena.take(n_rows, 3 * h); // [δr | δz | δn⊙r]
         for i in 0..n_rows {
             for j in 0..h {
                 let (rv, zv, nv, sv) = (st.r[(i, j)], st.z[(i, j)], st.n[(i, j)], st.s[(i, j)]);
@@ -143,7 +161,8 @@ impl GruClassifier {
             }
         }
         // δh_{t-1} = δh ⊙ z + d_h W_hᵀ
-        let mut dh_prev = matmul_nt(&d_h, &self.w_h);
+        let mut dh_prev = arena.take(n_rows, h);
+        matmul_nt_into(&d_h, &self.w_h, &mut dh_prev);
         for i in 0..n_rows {
             for j in 0..h {
                 dh_prev[(i, j)] += dh[(i, j)] * st.z[(i, j)];
@@ -152,22 +171,31 @@ impl GruClassifier {
         (d_i, d_h, dh_prev)
     }
 
-    /// BPTT from states + classifier output delta; returns t-major stacks
-    /// (δ_i stack, δ_h stack) and nothing else — A-stacks come from inputs.
-    fn bptt(&self, states: &[StepState], dh_last: Matrix) -> (Matrix, Matrix) {
+    /// BPTT from states + classifier output delta; writes the t-major
+    /// stacks (δ_i stack, δ_h stack) directly into arena-backed matrices —
+    /// no per-t block list, no vertcat. Consumes `dh_last`.
+    fn bptt_ws(
+        &self,
+        states: &[StepState],
+        dh_last: Matrix,
+        arena: &mut Workspace,
+    ) -> (Matrix, Matrix) {
         let t_len = states.len();
-        let mut d_i_blocks: Vec<Matrix> = vec![Matrix::zeros(0, 0); t_len];
-        let mut d_h_blocks: Vec<Matrix> = vec![Matrix::zeros(0, 0); t_len];
+        let n_rows = dh_last.rows();
+        let h3 = 3 * self.hidden;
+        let mut d_i_stack = arena.take(t_len * n_rows, h3);
+        let mut d_h_stack = arena.take(t_len * n_rows, h3);
         let mut dh = dh_last;
         for t in (0..t_len).rev() {
-            let (d_i, d_h, dh_prev) = self.step_backward(&states[t], &dh);
-            d_i_blocks[t] = d_i;
-            d_h_blocks[t] = d_h;
-            dh = dh_prev;
+            let (d_i, d_h, dh_prev) = self.step_backward_ws(&states[t], &dh, arena);
+            copy_rows(&mut d_i_stack, t * n_rows, &d_i);
+            copy_rows(&mut d_h_stack, t * n_rows, &d_h);
+            arena.recycle(d_i);
+            arena.recycle(d_h);
+            arena.recycle(std::mem::replace(&mut dh, dh_prev));
         }
-        let d_i_refs: Vec<&Matrix> = d_i_blocks.iter().collect();
-        let d_h_refs: Vec<&Matrix> = d_h_blocks.iter().collect();
-        (Matrix::vertcat(&d_i_refs), Matrix::vertcat(&d_h_refs))
+        arena.recycle(dh);
+        (d_i_stack, d_h_stack)
     }
 
     /// Number of classifier dense layers.
@@ -196,58 +224,68 @@ impl DistModel for GruClassifier {
         ps
     }
 
-    fn local_stats(&self, batch: &Batch) -> LocalStats {
+    fn local_stats_into(&self, batch: &Batch, arena: &mut Workspace, out: &mut LocalStats) {
         let (xs, y) = match batch {
             Batch::Seq { xs, y } => (xs, y),
             _ => panic!("GruClassifier consumes sequence batches"),
         };
-        let (h_t, states) = self.forward_seq(xs);
+        out.recycle_into(arena);
+        let n_rows = xs[0].rows();
+        let t_len = xs.len();
+        let h = self.hidden;
+        let (h_t, mut states) = self.forward_seq_ws(xs, arena);
         // Classifier forward/backward on h_T.
         let cls_batch = Batch::Dense { x: h_t, y: y.clone() };
-        let mut cls_stats = self.classifier.local_stats(&cls_batch);
+        let mut cls_stats = self.classifier.local_stats_ws(&cls_batch, arena);
         // Delta w.r.t. classifier input = Δ_c1 W_c1ᵀ (no activation on h_T).
-        let dh_last = matmul_nt(&cls_stats.entries[0].d, self.classifier.weight(0));
-        let (d_i_stack, d_h_stack) = self.bptt(&states, dh_last);
-        // A-stacks (t-major).
-        let x_refs: Vec<&Matrix> = xs.iter().collect();
-        let x_stack = Matrix::vertcat(&x_refs);
-        let hp_refs: Vec<&Matrix> = states.iter().map(|s| &s.h_prev).collect();
-        let hp_stack = Matrix::vertcat(&hp_refs);
-        // edAD aux: [r|z|n|s] stacks (t-major), one matrix.
-        let aux_blocks: Vec<Matrix> = states
-            .iter()
-            .map(|st| {
-                let n_rows = st.r.rows();
-                let h = self.hidden;
-                let mut m = Matrix::zeros(n_rows, 4 * h);
-                for i in 0..n_rows {
-                    for j in 0..h {
-                        m[(i, j)] = st.r[(i, j)];
-                        m[(i, h + j)] = st.z[(i, j)];
-                        m[(i, 2 * h + j)] = st.n[(i, j)];
-                        m[(i, 3 * h + j)] = st.s[(i, j)];
-                    }
-                }
-                m
-            })
-            .collect();
-        let aux_refs: Vec<&Matrix> = aux_blocks.iter().collect();
-        let aux = vec![Matrix::vertcat(&aux_refs)];
+        let mut dh_last = arena.take(n_rows, h);
+        matmul_nt_into(&cls_stats.entries[0].d, self.classifier.weight(0), &mut dh_last);
+        let (d_i_stack, d_h_stack) = self.bptt_ws(&states, dh_last, arena);
+        // A-stacks (t-major), written straight into arena matrices.
+        let mut x_stack = arena.take(t_len * n_rows, self.c_in);
+        for (t, x_t) in xs.iter().enumerate() {
+            copy_rows(&mut x_stack, t * n_rows, x_t);
+        }
+        let mut hp_stack = arena.take(t_len * n_rows, h);
+        for (t, st) in states.iter().enumerate() {
+            copy_rows(&mut hp_stack, t * n_rows, &st.h_prev);
+        }
+        // edAD aux: [r|z|n|s] stack (t-major), one matrix.
+        let mut aux = arena.take(t_len * n_rows, 4 * h);
+        for (t, st) in states.iter().enumerate() {
+            for i in 0..n_rows {
+                let row = aux.row_mut(t * n_rows + i);
+                row[..h].copy_from_slice(st.r.row(i));
+                row[h..2 * h].copy_from_slice(st.z.row(i));
+                row[2 * h..3 * h].copy_from_slice(st.n.row(i));
+                row[3 * h..4 * h].copy_from_slice(st.s.row(i));
+            }
+        }
+        // The forward tape is fully consumed; hand its buffers back.
+        for st in states.drain(..) {
+            arena.recycle(st.h_prev);
+            arena.recycle(st.r);
+            arena.recycle(st.z);
+            arena.recycle(st.n);
+            arena.recycle(st.s);
+        }
+        if let Batch::Dense { x, .. } = cls_batch {
+            arena.recycle(x); // h_T
+        }
 
-        let mut entries = vec![
-            StatsEntry { w_idx: 0, b_idx: Some(1), a: x_stack, d: d_i_stack },
-            StatsEntry { w_idx: 2, b_idx: Some(3), a: hp_stack, d: d_h_stack },
-        ];
+        out.entries.push(StatsEntry { w_idx: 0, b_idx: Some(1), a: x_stack, d: d_i_stack });
+        out.entries.push(StatsEntry { w_idx: 2, b_idx: Some(3), a: hp_stack, d: d_h_stack });
         // Shift classifier entries past the 4 GRU params.
         for e in cls_stats.entries.drain(..) {
-            entries.push(StatsEntry {
+            out.entries.push(StatsEntry {
                 w_idx: e.w_idx + 4,
                 b_idx: e.b_idx.map(|b| b + 4),
                 a: e.a,
                 d: e.d,
             });
         }
-        LocalStats { loss: cls_stats.loss, entries, aux, direct: vec![] }
+        out.aux.push(aux);
+        out.loss = cls_stats.loss;
     }
 
     fn predict(&self, batch: &Batch) -> Matrix {

@@ -2,28 +2,45 @@
 //! delta (softmax(z) - y) is exactly the Δ_L of eq. (2) — UNSCALED here, the
 //! coordinator applies 1/(S*N) so one code path serves any site count.
 
-use crate::nn::activations::softmax_rows;
 use crate::tensor::Matrix;
 
 /// Softmax cross-entropy: returns (mean loss over rows, UNSCALED output
 /// delta p - y). `y` is one-hot (N, C).
 pub fn softmax_xent(logits: &Matrix, y: &Matrix) -> (f32, Matrix) {
+    let mut delta = Matrix::zeros(logits.rows(), logits.cols());
+    let loss = softmax_xent_into(logits, y, &mut delta);
+    (loss, delta)
+}
+
+/// Allocation-free softmax cross-entropy: writes the UNSCALED delta p - y
+/// into `delta` (a workspace buffer on the hot path) and returns the mean
+/// loss over rows.
+pub fn softmax_xent_into(logits: &Matrix, y: &Matrix, delta: &mut Matrix) -> f32 {
     assert_eq!(logits.shape(), y.shape());
+    assert_eq!(delta.shape(), logits.shape());
     let n = logits.rows();
-    let mut delta = softmax_rows(logits);
     let mut loss = 0.0f64;
     for i in 0..n {
         let zrow = logits.row(i);
+        let yrow = y.row(i);
+        let drow = delta.row_mut(i);
         let mx = zrow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let lse: f32 = zrow.iter().map(|&v| (v - mx).exp()).sum::<f32>().ln() + mx;
-        for (j, &yv) in y.row(i).iter().enumerate() {
+        let mut sum = 0.0f32;
+        for (dv, &zv) in drow.iter_mut().zip(zrow) {
+            let e = (zv - mx).exp();
+            *dv = e;
+            sum += e;
+        }
+        let lse = sum.ln() + mx;
+        let inv = 1.0 / sum;
+        for (j, (dv, &yv)) in drow.iter_mut().zip(yrow).enumerate() {
+            *dv = *dv * inv - yv;
             if yv != 0.0 {
                 loss -= (yv * (zrow[j] - lse)) as f64;
             }
         }
     }
-    delta.axpy(-1.0, y);
-    ((loss / n as f64) as f32, delta)
+    (loss / n as f64) as f32
 }
 
 /// Mean-squared error: returns (mean over entries, UNSCALED delta 2(p-y)/C).
@@ -49,6 +66,7 @@ pub fn one_hot(labels: &[usize], classes: usize) -> Matrix {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::nn::activations::softmax_rows;
     use crate::tensor::Rng;
 
     #[test]

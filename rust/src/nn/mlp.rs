@@ -8,10 +8,10 @@
 
 use crate::nn::activations::{softmax_rows, Activation};
 use crate::nn::init::he_uniform;
-use crate::nn::loss::softmax_xent;
+use crate::nn::loss::softmax_xent_into;
 use crate::nn::model::{Batch, DistModel};
 use crate::nn::stats::{LocalStats, StatsEntry};
-use crate::tensor::{matmul, matmul_nt, Matrix, Rng};
+use crate::tensor::{matmul, matmul_into, matmul_nt, matmul_nt_into, Matrix, Rng, Workspace};
 
 /// Feed-forward network with softmax cross-entropy output.
 #[derive(Clone)]
@@ -89,13 +89,15 @@ impl Mlp {
     }
 }
 
-/// z += bias (broadcast row).
+/// z += bias (broadcast row). Allocation-free: the hot path calls this
+/// every layer of every step.
 pub fn add_bias(z: &mut Matrix, b: &Matrix) {
     debug_assert_eq!(b.rows(), 1);
     debug_assert_eq!(z.cols(), b.cols());
-    let brow = b.row(0).to_vec();
-    for i in 0..z.rows() {
-        for (v, &bv) in z.row_mut(i).iter_mut().zip(&brow) {
+    let cols = z.cols();
+    let brow = b.data();
+    for row in z.data_mut().chunks_exact_mut(cols) {
+        for (v, &bv) in row.iter_mut().zip(brow) {
             *v += bv;
         }
     }
@@ -123,24 +125,64 @@ impl DistModel for Mlp {
             .collect()
     }
 
-    fn local_stats(&self, batch: &Batch) -> LocalStats {
+    /// The allocation-free hot path: every activation, delta and the loss
+    /// delta live in `arena` buffers; `out`'s previous stacks are recycled
+    /// first, so a steady-state (reused arena + reused out) step performs
+    /// zero heap allocations — asserted by tests/alloc_free.rs.
+    fn local_stats_into(&self, batch: &Batch, arena: &mut Workspace, out: &mut LocalStats) {
         let (x, y) = match batch {
             Batch::Dense { x, y } => (x, y),
             _ => panic!("Mlp consumes dense batches"),
         };
-        let acts = self.forward(x);
+        out.recycle_into(arena);
+        let l = self.n_layers();
+        // Forward: acts[0] = x, acts[i+1] = phi_i(acts[i] W_i + b_i).
+        let mut acts = arena.take_list();
+        acts.push(arena.copy_in(x));
+        for i in 0..l {
+            let mut z = arena.take(x.rows(), self.ws[i].cols());
+            matmul_into(&acts[i], &self.ws[i], &mut z);
+            add_bias(&mut z, &self.bs[i]);
+            if i + 1 < l {
+                self.acts[i].apply(&mut z);
+            }
+            acts.push(z);
+        }
+        // Loss + output delta (UNSCALED p - y).
         let logits = acts.last().unwrap();
-        let (loss, delta_out) = softmax_xent(logits, y);
-        let deltas = self.backward_deltas(&acts, delta_out);
-        let entries = (0..self.n_layers())
-            .map(|i| StatsEntry {
-                w_idx: 2 * i,
-                b_idx: Some(2 * i + 1),
-                a: acts[i].clone(),
-                d: deltas[i].clone(),
-            })
-            .collect();
-        LocalStats { loss, entries, aux: vec![], direct: vec![] }
+        let mut delta_out = arena.take(logits.rows(), logits.cols());
+        out.loss = softmax_xent_into(logits, y, &mut delta_out);
+        // Backward recurrence, built deepest-last then reversed in place:
+        // Δ_i = (Δ_{i+1} W_{i+1}ᵀ) ⊙ φ'_i(A_{i+1}) (eq. 3/5).
+        let mut deltas = arena.take_list();
+        deltas.push(delta_out);
+        for i in (0..l.saturating_sub(1)).rev() {
+            let top = deltas.last().unwrap();
+            let mut d = arena.take(top.rows(), self.ws[i + 1].rows());
+            matmul_nt_into(top, &self.ws[i + 1], &mut d);
+            self.acts[i].mask_delta_inplace(&mut d, &acts[i + 1]);
+            deltas.push(d);
+        }
+        deltas.reverse();
+        // Hand the stacks to the caller; recycle what stays behind.
+        {
+            let mut a_it = acts.drain(..);
+            let mut d_it = deltas.drain(..);
+            for i in 0..l {
+                out.entries.push(StatsEntry {
+                    w_idx: 2 * i,
+                    b_idx: Some(2 * i + 1),
+                    a: a_it.next().expect("activation stack"),
+                    d: d_it.next().expect("delta stack"),
+                });
+            }
+            if let Some(logits) = a_it.next() {
+                // A_L (logits) never ships; Δ_L carries the output info.
+                arena.recycle(logits);
+            }
+        }
+        arena.recycle_list(acts);
+        arena.recycle_list(deltas);
     }
 
     fn predict(&self, batch: &Batch) -> Matrix {

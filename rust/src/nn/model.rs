@@ -8,7 +8,7 @@
 //! model.
 
 use crate::nn::stats::{LocalStats, StatsEntry};
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, Workspace};
 
 /// A batch of training data, in whichever layout the model consumes.
 #[derive(Clone, Debug)]
@@ -50,8 +50,24 @@ pub trait DistModel {
     fn params(&self) -> Vec<&Matrix>;
     fn params_mut(&mut self) -> Vec<&mut Matrix>;
 
-    /// Forward + backward on a local batch, producing the paper's statistics.
-    fn local_stats(&self, batch: &Batch) -> LocalStats;
+    /// Forward + backward on a local batch, producing the paper's
+    /// statistics. The workspace-threaded core: buffers come from `ws` and
+    /// `out`'s previous contents are recycled into `ws` first, so a caller
+    /// that reuses both performs zero steady-state heap allocations
+    /// (asserted for the MLP by tests/alloc_free.rs).
+    fn local_stats_into(&self, batch: &Batch, ws: &mut Workspace, out: &mut LocalStats);
+
+    /// Workspace-reusing convenience wrapper around `local_stats_into`.
+    fn local_stats_ws(&self, batch: &Batch, ws: &mut Workspace) -> LocalStats {
+        let mut out = LocalStats::empty();
+        self.local_stats_into(batch, ws, &mut out);
+        out
+    }
+
+    /// Allocating convenience wrapper (one-shot callers, tests).
+    fn local_stats(&self, batch: &Batch) -> LocalStats {
+        self.local_stats_ws(batch, &mut Workspace::new())
+    }
 
     /// Class scores (N, C) for evaluation (softmax probabilities).
     fn predict(&self, batch: &Batch) -> Matrix;

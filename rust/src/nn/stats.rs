@@ -8,7 +8,7 @@
 //! model-specific aux activations) and the output delta; rank-dAD ships
 //! low-rank factors of the same outer product.
 
-use crate::tensor::{matmul_tn, Matrix};
+use crate::tensor::{matmul_tn, Matrix, Workspace};
 
 /// AD statistics for one dense parameter.
 #[derive(Clone, Debug)]
@@ -60,6 +60,30 @@ pub struct LocalStats {
 }
 
 impl LocalStats {
+    /// A zero-loss, zero-entry stats object — the reusable target of
+    /// `DistModel::local_stats_into`.
+    pub fn empty() -> Self {
+        LocalStats { loss: 0.0, entries: Vec::new(), aux: Vec::new(), direct: Vec::new() }
+    }
+
+    /// Return every matrix to `ws` and clear the containers *in place*
+    /// (capacity kept). Calling this at the top of `local_stats_into` is
+    /// what closes the steady-state allocation loop: last step's stacks
+    /// become this step's buffers.
+    pub fn recycle_into(&mut self, ws: &mut Workspace) {
+        for e in self.entries.drain(..) {
+            ws.recycle(e.a);
+            ws.recycle(e.d);
+        }
+        for a in self.aux.drain(..) {
+            ws.recycle(a);
+        }
+        for (_, g) in self.direct.drain(..) {
+            ws.recycle(g);
+        }
+        self.loss = 0.0;
+    }
+
     /// Assemble the full gradient list (aligned with the model's parameter
     /// list) from statistics. `scale` is 1/(S*N_per_site*...) — whatever
     /// converts unscaled delta sums into the global-mean gradient.

@@ -11,10 +11,10 @@
 //! the coordinator falls back to dAD for this architecture.
 
 use crate::nn::init::normal;
-use crate::nn::loss::softmax_xent;
+use crate::nn::loss::softmax_xent_into;
 use crate::nn::model::{Batch, DistModel};
 use crate::nn::stats::{LocalStats, StatsEntry};
-use crate::tensor::{matmul, matmul_nt, Matrix, Rng};
+use crate::tensor::{matmul, matmul_nt, Matrix, Rng, Workspace};
 
 /// Transformer hyperparameters.
 #[derive(Clone, Debug)]
@@ -302,31 +302,39 @@ impl DistModel for Transformer {
         self.params.iter_mut().collect()
     }
 
-    fn local_stats(&self, batch: &Batch) -> LocalStats {
+    /// Workspace-threaded entry point. The loss head (one-hot targets,
+    /// softmax delta) runs on arena buffers; the attention tape itself is
+    /// still allocation-bound — per-block buffers are sized by (B, T, D)
+    /// and dominated by the O(B·H·T²) attention math, left for a future
+    /// flash-style rewrite (EXPERIMENTS.md §Perf).
+    fn local_stats_into(&self, batch: &Batch, arena: &mut Workspace, out: &mut LocalStats) {
         let (b, t, ids, targets) = match batch {
             Batch::Tokens { b, t, ids, targets } => (*b, *t, ids, targets),
             _ => panic!("Transformer consumes token batches"),
         };
+        out.recycle_into(arena);
         let cfg = self.cfg.clone();
         let d = cfg.d_model;
         let rows = b * t;
         let saved = self.forward(b, t, ids);
 
         // Loss + output delta (UNSCALED p - y, matching the other models).
-        let y = crate::nn::loss::one_hot(
-            &targets.iter().map(|&v| v as usize).collect::<Vec<_>>(),
-            cfg.vocab,
-        );
-        let (loss, d_logits) = softmax_xent(&saved.logits, &y);
+        let mut y = arena.take(rows, cfg.vocab);
+        for (i, &tv) in targets.iter().enumerate() {
+            y[(i, tv as usize)] = 1.0;
+        }
+        let mut d_logits = arena.take(rows, cfg.vocab);
+        let loss = softmax_xent_into(&saved.logits, &y, &mut d_logits);
+        arena.recycle(y);
 
-        let mut entries = Vec::new();
-        let mut direct: Vec<(usize, Matrix)> = Vec::new();
+        let entries = &mut out.entries;
+        let direct = &mut out.direct;
         let tb = self.tail_base();
 
-        // lm_head: A = hf, Δ = d_logits.
-        entries.push(StatsEntry { w_idx: tb + 2, b_idx: None, a: saved.hf.clone(), d: d_logits.clone() });
-        // Backprop into final LN.
+        // Backprop into final LN, then hand Δ_logits to the lm_head entry.
         let d_hf = matmul_nt(&d_logits, &self.params[tb + 2]);
+        // lm_head: A = hf, Δ = d_logits.
+        entries.push(StatsEntry { w_idx: tb + 2, b_idx: None, a: saved.hf.clone(), d: d_logits });
         let (mut dx, dgf, dbf) = layer_norm_backward(&d_hf, &self.params[tb], &saved.lnf);
         direct.push((tb, dgf));
         direct.push((tb + 1, dbf));
@@ -432,7 +440,7 @@ impl DistModel for Transformer {
         // Entries were pushed head-first; reverse into forward order for
         // stable entry naming.
         entries.reverse();
-        LocalStats { loss, entries, aux: vec![], direct }
+        out.loss = loss;
     }
 
     fn predict(&self, batch: &Batch) -> Matrix {

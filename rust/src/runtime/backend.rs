@@ -3,13 +3,16 @@
 //! produce the same (loss, A-stacks, Δ-stacks) — asserted by the
 //! integration test — so the coordinator can run the paper's hot path on
 //! compiled XLA code with Python nowhere in sight.
+//!
+//! Error handling is the crate-local `runtime::Result` so this module (and
+//! everything that selects a backend) builds with or without the `pjrt`
+//! feature; the real client's anyhow errors are flattened at the boundary.
 
-use anyhow::{bail, Result};
-
+use super::pjrt::{PjrtInput, PjrtRuntime};
+use super::{Result, RuntimeError};
 use crate::nn::model::{Batch, DistModel};
 use crate::nn::stats::LocalStats;
 use crate::nn::Mlp;
-use crate::runtime::pjrt::{PjrtInput, PjrtRuntime};
 use crate::tensor::Matrix;
 
 /// The canonical artifact shapes (python/compile/aot.py): batch 32/site,
@@ -39,7 +42,8 @@ impl MlpBackend for NativeMlpBackend {
 
 /// PJRT backend: executes artifacts/mlp_stats.hlo.txt. Fixed to the
 /// artifact's traced shapes (the AOT contract); the native backend covers
-/// every other configuration.
+/// every other configuration. Without the `pjrt` feature the underlying
+/// runtime is the stub and construction fails cleanly.
 pub struct PjrtMlpBackend {
     runtime: PjrtRuntime,
 }
@@ -50,19 +54,27 @@ impl PjrtMlpBackend {
     }
 
     pub fn from_default_artifacts() -> Result<Self> {
-        Ok(PjrtMlpBackend { runtime: PjrtRuntime::cpu(PjrtRuntime::default_dir())? })
+        let runtime = PjrtRuntime::cpu(PjrtRuntime::default_dir())
+            .map_err(|e| RuntimeError(format!("{e:#}")))?;
+        Ok(PjrtMlpBackend { runtime })
     }
 
     fn check_shapes(mlp: &Mlp, batch: &Batch) -> Result<(Matrix, Matrix)> {
         let (x, y) = match batch {
             Batch::Dense { x, y } => (x.clone(), y.clone()),
-            _ => bail!("PJRT MLP backend consumes dense batches"),
+            _ => return Err(RuntimeError::msg("PJRT MLP backend consumes dense batches")),
         };
         if mlp.dims != ARTIFACT_DIMS.to_vec() {
-            bail!("artifact is traced for dims {:?}, model has {:?}", ARTIFACT_DIMS, mlp.dims);
+            return Err(RuntimeError(format!(
+                "artifact is traced for dims {ARTIFACT_DIMS:?}, model has {:?}",
+                mlp.dims
+            )));
         }
         if x.rows() != ARTIFACT_BATCH {
-            bail!("artifact is traced for batch {}, got {}", ARTIFACT_BATCH, x.rows());
+            return Err(RuntimeError(format!(
+                "artifact is traced for batch {ARTIFACT_BATCH}, got {}",
+                x.rows()
+            )));
         }
         Ok((x, y))
     }
@@ -85,9 +97,15 @@ impl MlpBackend for PjrtMlpBackend {
         }
         inputs.push(PjrtInput::from_matrix(&x));
         inputs.push(PjrtInput::from_matrix(&y));
-        let out = self.runtime.execute("mlp_stats", &inputs)?;
+        let out = self
+            .runtime
+            .execute("mlp_stats", &inputs)
+            .map_err(|e| RuntimeError(format!("{e:#}")))?;
         if out.len() != 7 {
-            bail!("mlp_stats artifact returned {} outputs, expected 7", out.len());
+            return Err(RuntimeError(format!(
+                "mlp_stats artifact returned {} outputs, expected 7",
+                out.len()
+            )));
         }
         let loss = out[0].scalar();
         let a = [out[1].to_matrix(), out[2].to_matrix(), out[3].to_matrix()];

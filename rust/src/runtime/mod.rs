@@ -6,9 +6,66 @@
 //! its inputs are files. HLO *text* is the interchange format because the
 //! vendored xla_extension 0.5.1 rejects jax>=0.5's 64-bit instruction-id
 //! protos (see /opt/xla-example/README.md).
+//!
+//! ## Feature gating
+//!
+//! The real client lives in `pjrt.rs` and needs the vendored `xla` crate
+//! (plus `anyhow`), which the offline build environment does not ship.
+//! It compiles only under `--features pjrt` (add the vendored crates as
+//! path dependencies first). By default `pjrt_stub.rs` provides the same
+//! API surface — `PjrtRuntime::cpu` returns an error, every consumer falls
+//! back to the native engine — so the crate, examples and CLI build with
+//! zero external dependencies.
 
 pub mod backend;
+
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
+
+#[cfg(not(feature = "pjrt"))]
+mod pjrt_stub;
+#[cfg(not(feature = "pjrt"))]
+pub use pjrt_stub as pjrt;
 
 pub use backend::{MlpBackend, NativeMlpBackend, PjrtMlpBackend};
 pub use pjrt::PjrtRuntime;
+
+/// Minimal runtime-layer error (anyhow exists only behind the `pjrt`
+/// feature, and the public API must not depend on it).
+#[derive(Debug)]
+pub struct RuntimeError(pub String);
+
+impl RuntimeError {
+    pub fn msg(s: impl Into<String>) -> Self {
+        RuntimeError(s.into())
+    }
+}
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+/// Default artifact location (repo-root relative), overridable with
+/// DAD_ARTIFACTS. Lives here so both the real and stub runtimes share it.
+pub(crate) fn default_artifacts_dir() -> std::path::PathBuf {
+    use std::path::PathBuf;
+    std::env::var("DAD_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
+        // Walk up from cwd looking for artifacts/.
+        let mut d = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        loop {
+            let cand = d.join("artifacts");
+            if cand.is_dir() {
+                return cand;
+            }
+            if !d.pop() {
+                return PathBuf::from("artifacts");
+            }
+        }
+    })
+}

@@ -30,19 +30,7 @@ impl PjrtRuntime {
     /// Default artifact location (repo-root relative), overridable with
     /// DAD_ARTIFACTS.
     pub fn default_dir() -> PathBuf {
-        std::env::var("DAD_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
-            // Walk up from cwd looking for artifacts/.
-            let mut d = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
-            loop {
-                let cand = d.join("artifacts");
-                if cand.is_dir() {
-                    return cand;
-                }
-                if !d.pop() {
-                    return PathBuf::from("artifacts");
-                }
-            }
-        })
+        super::default_artifacts_dir()
     }
 
     pub fn platform(&self) -> String {

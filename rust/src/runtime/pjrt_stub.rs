@@ -1,0 +1,116 @@
+//! API-compatible stand-in for `pjrt.rs` when the crate is built without
+//! the `pjrt` feature (no vendored xla available). `cpu()` always errors,
+//! so every consumer (backend selection, CLI `info`, examples) takes its
+//! native-engine fallback path; the input/output value types are fully
+//! functional so shared code type-checks identically.
+
+use std::path::{Path, PathBuf};
+
+use super::{Result, RuntimeError};
+use crate::tensor::Matrix;
+
+fn unavailable<T>() -> Result<T> {
+    Err(RuntimeError::msg(
+        "built without the `pjrt` feature: vendored xla is unavailable; \
+         rebuild with --features pjrt (see src/runtime/mod.rs)",
+    ))
+}
+
+/// Stub PJRT client. Construction always fails; methods exist so callers
+/// compile unchanged.
+pub struct PjrtRuntime {
+    _priv: (),
+}
+
+impl PjrtRuntime {
+    /// Always errors in the stub build.
+    pub fn cpu(_artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        unavailable()
+    }
+
+    /// Default artifact location (repo-root relative), overridable with
+    /// DAD_ARTIFACTS.
+    pub fn default_dir() -> PathBuf {
+        super::default_artifacts_dir()
+    }
+
+    pub fn platform(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn load(&mut self, _name: &str) -> Result<()> {
+        unavailable()
+    }
+
+    pub fn is_loaded(&self, _name: &str) -> bool {
+        false
+    }
+
+    pub fn execute(&mut self, _name: &str, _inputs: &[PjrtInput]) -> Result<Vec<PjrtOutput>> {
+        unavailable()
+    }
+}
+
+/// An f32 input tensor (row-major).
+pub struct PjrtInput {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl PjrtInput {
+    pub fn from_matrix(m: &Matrix) -> Self {
+        PjrtInput { dims: vec![m.rows(), m.cols()], data: m.data().to_vec() }
+    }
+
+    pub fn from_row(v: &[f32]) -> Self {
+        PjrtInput { dims: vec![v.len()], data: v.to_vec() }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        PjrtInput { dims: vec![], data: vec![v] }
+    }
+}
+
+/// An f32 output tensor (row-major).
+#[derive(Debug, Clone)]
+pub struct PjrtOutput {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl PjrtOutput {
+    pub fn to_matrix(&self) -> Matrix {
+        match self.dims.len() {
+            2 => Matrix::from_vec(self.dims[0], self.dims[1], self.data.clone()),
+            1 => Matrix::from_vec(1, self.dims[0], self.data.clone()),
+            0 => Matrix::from_vec(1, 1, self.data.clone()),
+            _ => panic!("unsupported output rank {:?}", self.dims),
+        }
+    }
+
+    pub fn scalar(&self) -> f32 {
+        self.data[0]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_reports_feature_gate() {
+        let err = PjrtRuntime::cpu("artifacts").err().expect("stub must error");
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn value_types_roundtrip() {
+        let m = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let inp = PjrtInput::from_matrix(&m);
+        assert_eq!(inp.dims, vec![2, 3]);
+        let out = PjrtOutput { dims: vec![2, 3], data: inp.data.clone() };
+        assert_eq!(out.to_matrix(), m);
+        assert_eq!(PjrtInput::scalar(4.5).data, vec![4.5]);
+        assert_eq!(PjrtInput::from_row(&[1.0, 2.0]).dims, vec![2]);
+    }
+}

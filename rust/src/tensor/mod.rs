@@ -1,5 +1,6 @@
-//! From-scratch f32 tensor substrate: dense matrices, matmul kernels, a
-//! deterministic PRNG, and a minimal thread-parallel helper.
+//! From-scratch f32 tensor substrate: dense matrices, blocked/packed matmul
+//! kernels over a persistent worker pool, a deterministic PRNG, and a
+//! reusable step-workspace arena.
 //!
 //! Everything the coordinator computes natively (forward passes, the backward
 //! delta recurrence, gradient outer products, structured power iterations)
@@ -9,8 +10,14 @@
 pub mod matrix;
 pub mod ops;
 pub mod parallel;
+pub mod pool;
 pub mod rng;
+pub mod workspace;
 
 pub use matrix::Matrix;
-pub use ops::{dot, matmul, matmul_nt, matmul_tn, matvec, matvec_t};
+pub use ops::{
+    dot, matmul, matmul_into, matmul_nt, matmul_nt_into, matmul_tn, matmul_tn_into, matvec,
+    matvec_into, matvec_t, matvec_t_into,
+};
 pub use rng::Rng;
+pub use workspace::Workspace;

@@ -2,19 +2,45 @@
 //!
 //! Three variants cover everything the paper's math needs without ever
 //! materializing a transpose:
-//!   matmul     C = A B        forward passes, Δ_{i+1} Wᵀ is matmul_nt
+//!   matmul     C = A B        forward passes
 //!   matmul_tn  C = Aᵀ B       gradient outer products  AᵀΔ   (eq. 4)
 //!   matmul_nt  C = A Bᵀ       backward delta step      ΔWᵀ   (eq. 3/5)
 //!
-//! Layout: ikj loops with row-panel accumulation (unit-stride inner loops
-//! that LLVM auto-vectorizes), parallelized over output rows via scoped
-//! threads. See EXPERIMENTS.md §Perf for the measured roofline.
+//! Engine layout (EXPERIMENTS.md §Perf): one shared strip kernel
+//! (`gemm_strip`) processes four output rows at a time with a unit-stride
+//! fused inner loop that LLVM auto-vectorizes, K-blocked so the streamed B
+//! panel stays cache-resident. The transposed operands never materialize a
+//! full transpose: `matmul_tn` packs a thin transposed A panel per output
+//! strip, and `matmul_nt` packs Bᵀ panels on the fly per column block —
+//! both into a reusable per-thread scratch buffer, so steady-state calls
+//! allocate nothing. Dispatch runs on the persistent pool (`pool::run`),
+//! replacing the seed's per-call scoped-thread spawns.
+//!
+//! Every variant has a `*_into` twin writing a caller-owned output so the
+//! training step can reuse `Workspace` buffers (see `tensor::workspace`).
 
 use super::matrix::Matrix;
-use super::parallel::parallel_rows_mut;
+use super::parallel::{self, parallel_rows_mut};
+use std::cell::RefCell;
 
-/// Minimum FLOPs before a matmul is worth threading (tuned in §Perf).
-const PAR_FLOP_THRESHOLD: usize = 1 << 20;
+/// Minimum FLOPs before a matmul is worth threading. The pool's wake/park
+/// handshake is ~µs — far below the seed's thread-spawn cost — so this sits
+/// well under the seed's 2^20 (tuned in §Perf).
+const PAR_FLOP_THRESHOLD: usize = 1 << 18;
+
+/// K-blocking depth: a KC x n B-panel (KC x jb for `matmul_nt`) stays in
+/// L2 while a strip of C rows accumulates against it.
+const KC: usize = 256;
+
+/// Column-block width bounds for `matmul_nt`'s column-parallel split.
+/// The lower bound keeps blocks worth waking a lane for; the upper bound
+/// caps the per-thread packing scratch at (k + m) * MAX_COLS floats — so
+/// the paper shapes (k <= 1024) fit inside the pre-warmed scratch
+/// (`prewarm_scratch`) on any pool width, keeping the steady state
+/// allocation-free — and gives the chunk counter more blocks than lanes
+/// for load balancing.
+const MIN_COLS: usize = 16;
+const MAX_COLS: usize = 192;
 
 #[inline]
 fn min_rows_for(total_rows: usize, flops: usize) -> usize {
@@ -25,98 +51,229 @@ fn min_rows_for(total_rows: usize, flops: usize) -> usize {
     }
 }
 
+thread_local! {
+    /// Per-thread packing scratch (A/Bᵀ panels, column-block accumulators).
+    /// Grows to the high-water mark once, then every call is allocation-free.
+    static SCRATCH: RefCell<Vec<f32>> = const { RefCell::new(Vec::new()) };
+}
+
+fn with_scratch<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    SCRATCH.with(|s| {
+        let mut v = s.borrow_mut();
+        if v.len() < len {
+            v.resize(len, 0.0);
+        }
+        f(&mut v[..len])
+    })
+}
+
+/// Pre-size this thread's packing scratch. Pool workers call this once at
+/// spawn so that steady-state kernels stay allocation-free regardless of
+/// which chunks the dynamic counter hands to which worker (a cold worker
+/// growing its scratch mid-training would otherwise be the one stray
+/// allocation). 256K floats covers the paper shapes with slack; larger
+/// problems grow once and keep the high-water mark.
+pub(crate) fn prewarm_scratch() {
+    with_scratch(1 << 18, |_| {});
+}
+
+/// c += x * b over the full slices (unit stride; auto-vectorized).
+#[inline]
+fn axpy1(c: &mut [f32], x: f32, b: &[f32]) {
+    if x == 0.0 {
+        return; // ReLU activations are ~50% zeros
+    }
+    for (cv, &bv) in c.iter_mut().zip(b) {
+        *cv += x * bv;
+    }
+}
+
+/// Four C rows advance together against one B row: b is loaded once per
+/// lane instead of four times. The re-slicing to a common length lets LLVM
+/// drop every bounds check and vectorize the fused loop.
+#[inline]
+fn axpy4(c0: &mut [f32], c1: &mut [f32], c2: &mut [f32], c3: &mut [f32], xs: [f32; 4], b: &[f32]) {
+    let n = b.len();
+    let (c0, c1, c2, c3) = (&mut c0[..n], &mut c1[..n], &mut c2[..n], &mut c3[..n]);
+    for j in 0..n {
+        let bv = b[j];
+        c0[j] += xs[0] * bv;
+        c1[j] += xs[1] * bv;
+        c2[j] += xs[2] * bv;
+        c3[j] += xs[3] * bv;
+    }
+}
+
+/// The shared micro-kernel: chunk (rows x n, contiguous, pre-zeroed or
+/// mid-accumulation) += panel (rows x k, contiguous row-major) * b (k x n
+/// row-major). K-blocked; row quads share each streamed B row.
+fn gemm_strip(chunk: &mut [f32], panel: &[f32], rows: usize, k: usize, n: usize, bd: &[f32]) {
+    debug_assert!(chunk.len() >= rows * n);
+    debug_assert!(panel.len() >= rows * k);
+    debug_assert!(bd.len() >= k * n);
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + KC).min(k);
+        let mut r = 0;
+        while r + 4 <= rows {
+            let quad = &mut chunk[r * n..(r + 4) * n];
+            let (c0, rest) = quad.split_at_mut(n);
+            let (c1, rest) = rest.split_at_mut(n);
+            let (c2, c3) = rest.split_at_mut(n);
+            let a0 = &panel[r * k + k0..r * k + k1];
+            let a1 = &panel[(r + 1) * k + k0..(r + 1) * k + k1];
+            let a2 = &panel[(r + 2) * k + k0..(r + 2) * k + k1];
+            let a3 = &panel[(r + 3) * k + k0..(r + 3) * k + k1];
+            for (off, ((&x0, &x1), (&x2, &x3))) in
+                a0.iter().zip(a1).zip(a2.iter().zip(a3)).enumerate()
+            {
+                let xs = [x0, x1, x2, x3];
+                if xs == [0.0f32; 4] {
+                    continue;
+                }
+                let kk = k0 + off;
+                axpy4(c0, c1, c2, c3, xs, &bd[kk * n..kk * n + n]);
+            }
+            r += 4;
+        }
+        while r < rows {
+            let crow = &mut chunk[r * n..(r + 1) * n];
+            for kk in k0..k1 {
+                axpy1(crow, panel[r * k + kk], &bd[kk * n..kk * n + n]);
+            }
+            r += 1;
+        }
+        k0 = k1;
+    }
+}
+
 /// C = A B.  A: (m,k), B: (k,n) -> (m,n).
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
-    let (m, k) = a.shape();
-    let (k2, n) = b.shape();
-    assert_eq!(k, k2, "matmul inner dim: {:?} x {:?}", a.shape(), b.shape());
-    let mut out = Matrix::zeros(m, n);
-    let flops = 2 * m * k * n;
-    let bd = b.data();
-    let ad = a.data();
-    parallel_rows_mut(out.data_mut(), n, min_rows_for(m, flops), |start, chunk| {
-        for (r, crow) in chunk.chunks_mut(n).enumerate() {
-            let i = start + r;
-            let arow = &ad[i * k..(i + 1) * k];
-            for (kk, &aik) in arow.iter().enumerate() {
-                if aik == 0.0 {
-                    continue; // ReLU activations are ~50% zeros
-                }
-                let brow = &bd[kk * n..(kk + 1) * n];
-                for (c, &bv) in crow.iter_mut().zip(brow) {
-                    *c += aik * bv;
-                }
-            }
-        }
-    });
+    let mut out = Matrix::zeros(a.rows(), b.cols());
+    matmul_into(a, b, &mut out);
     out
 }
 
-/// C = Aᵀ B.  A: (k,m), B: (k,n) -> (m,n).  The gradient outer product:
-/// k is the (small) batch dimension, m/n are layer widths.
-pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
-    let (k, m) = a.shape();
+/// C = A B into a caller-owned (m,n) output (contents overwritten).
+pub fn matmul_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    let (m, k) = a.shape();
     let (k2, n) = b.shape();
-    assert_eq!(k, k2, "matmul_tn inner dim: {:?} x {:?}", a.shape(), b.shape());
-    let mut out = Matrix::zeros(m, n);
+    assert_eq!(k, k2, "matmul inner dim: {:?} x {:?}", a.shape(), b.shape());
+    assert_eq!(out.shape(), (m, n), "matmul output shape");
     let flops = 2 * m * k * n;
     let ad = a.data();
     let bd = b.data();
     parallel_rows_mut(out.data_mut(), n, min_rows_for(m, flops), |start, chunk| {
         let rows = chunk.len() / n;
-        for kk in 0..k {
-            let brow = &bd[kk * n..(kk + 1) * n];
-            let acol = &ad[kk * m..(kk + 1) * m];
-            for r in 0..rows {
-                let aik = acol[start + r];
-                if aik == 0.0 {
-                    continue;
-                }
-                let crow = &mut chunk[r * n..(r + 1) * n];
-                for (c, &bv) in crow.iter_mut().zip(brow) {
-                    *c += aik * bv;
-                }
-            }
-        }
+        chunk.fill(0.0);
+        gemm_strip(chunk, &ad[start * k..(start + rows) * k], rows, k, n, bd);
     });
+}
+
+/// C = Aᵀ B.  A: (k,m), B: (k,n) -> (m,n).  The gradient outer product:
+/// k is the (small) batch dimension, m/n are layer widths.
+pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(a.cols(), b.cols());
+    matmul_tn_into(a, b, &mut out);
     out
 }
 
-/// C = A Bᵀ.  A: (m,k), B: (n,k) -> (m,n).  The backward delta contraction.
-///
-/// Two regimes (§Perf iteration 2): for large problems, transposing B once
-/// (O(nk), cache-blocked) and running the ikj kernel beats the dot-product
-/// kernel ~1.8x — the ikj inner loop streams with independent FMA chains,
-/// while back-to-back dots stall on the horizontal-add dependency.
-pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
-    let (m, k) = a.shape();
-    let (n, k2) = b.shape();
-    assert_eq!(k, k2, "matmul_nt inner dim: {:?} x {:?}", a.shape(), b.shape());
+/// C = Aᵀ B into a caller-owned (m,n) output. Each output strip packs its
+/// thin (rows x k) slice of Aᵀ into per-thread scratch — k is the batch
+/// dimension, so the pack is a vanishing fraction of the 2mkn FLOPs — and
+/// then runs the contiguous strip kernel.
+pub fn matmul_tn_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    let (k, m) = a.shape();
+    let (k2, n) = b.shape();
+    assert_eq!(k, k2, "matmul_tn inner dim: {:?} x {:?}", a.shape(), b.shape());
+    assert_eq!(out.shape(), (m, n), "matmul_tn output shape");
     let flops = 2 * m * k * n;
-    if flops >= 1 << 22 {
-        return matmul(a, &b.transpose());
-    }
-    let mut out = Matrix::zeros(m, n);
     let ad = a.data();
     let bd = b.data();
     parallel_rows_mut(out.data_mut(), n, min_rows_for(m, flops), |start, chunk| {
-        for (r, crow) in chunk.chunks_mut(n).enumerate() {
-            let i = start + r;
-            let arow = &ad[i * k..(i + 1) * k];
-            for (j, c) in crow.iter_mut().enumerate() {
-                let brow = &bd[j * k..(j + 1) * k];
-                *c = dot(arow, brow);
+        let rows = chunk.len() / n;
+        chunk.fill(0.0);
+        with_scratch(rows * k, |pack| {
+            for kk in 0..k {
+                let acol = &ad[kk * m + start..kk * m + start + rows];
+                for (r, &v) in acol.iter().enumerate() {
+                    pack[r * k + kk] = v;
+                }
             }
-        }
+            gemm_strip(chunk, pack, rows, k, n, bd);
+        });
     });
+}
+
+/// C = A Bᵀ.  A: (m,k), B: (n,k) -> (m,n).  The backward delta contraction.
+pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(a.rows(), b.rows());
+    matmul_nt_into(a, b, &mut out);
     out
+}
+
+/// C = A Bᵀ into a caller-owned (m,n) output.
+///
+/// Parallelized over *column* blocks: each task packs its own Bᵀ panel
+/// (k x jb) on the fly into per-thread scratch and accumulates a contiguous
+/// (m x jb) sub-result with the strip kernel, then scatters it into the
+/// output columns. This replaces the seed's two regimes (a dot-product
+/// kernel that stalled on horizontal adds, and a transpose-the-whole-B
+/// fallback that allocated an n x k temporary per call) with one
+/// allocation-free path whose packing cost is O(nk) against 2mnk FLOPs.
+pub fn matmul_nt_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    let (m, k) = a.shape();
+    let (n, k2) = b.shape();
+    assert_eq!(k, k2, "matmul_nt inner dim: {:?} x {:?}", a.shape(), b.shape());
+    assert_eq!(out.shape(), (m, n), "matmul_nt output shape");
+    let flops = 2 * m * k * n;
+    let ad = a.data();
+    let bd = b.data();
+    let jb = if flops < PAR_FLOP_THRESHOLD {
+        n.max(1)
+    } else {
+        let chunks = parallel::num_threads().min(n.div_ceil(MIN_COLS)).max(1);
+        n.div_ceil(chunks).clamp(MIN_COLS.min(n.max(1)), MAX_COLS)
+    };
+    let out_base = out.data_mut().as_mut_ptr() as usize;
+    super::pool::run(n.div_ceil(jb), &|c| {
+        let j0 = c * jb;
+        let j1 = ((c + 1) * jb).min(n);
+        if j0 >= j1 {
+            return;
+        }
+        let w = j1 - j0;
+        with_scratch(k * w + m * w, |scr| {
+            let (bt, csub) = scr.split_at_mut(k * w);
+            // Pack the Bᵀ panel: bt[kk][jj] = B[j0 + jj][kk].
+            for jj in 0..w {
+                let brow = &bd[(j0 + jj) * k..(j0 + jj + 1) * k];
+                for (kk, &v) in brow.iter().enumerate() {
+                    bt[kk * w + jj] = v;
+                }
+            }
+            csub.fill(0.0);
+            gemm_strip(csub, ad, m, k, w, bt);
+            // Scatter the contiguous sub-result into the output columns.
+            for i in 0..m {
+                // SAFETY: tasks own disjoint column ranges [j0, j1) of each
+                // row, so these slices never overlap across tasks, stay in
+                // bounds (j1 <= n), and `out`'s borrow outlives the
+                // blocking pool::run call.
+                let dst = unsafe {
+                    std::slice::from_raw_parts_mut((out_base as *mut f32).add(i * n + j0), w)
+                };
+                dst.copy_from_slice(&csub[i * w..(i + 1) * w]);
+            }
+        });
+    });
 }
 
 /// Unit-stride dot product with 8-lane unrolled accumulators.
 ///
 /// chunks_exact + zip lets LLVM elide every bounds check and vectorize;
-/// the indexed version of this loop ran at ~2.5 GFLOP/s inside matmul_nt,
-/// this one at ~9 GFLOP/s (EXPERIMENTS.md §Perf, L3 iteration 1).
+/// the indexed version of this loop ran at ~2.5 GFLOP/s inside the seed's
+/// matmul_nt, this one at ~9 GFLOP/s (EXPERIMENTS.md §Perf, L3 iteration 1).
 #[inline]
 pub fn dot(x: &[f32], y: &[f32]) -> f32 {
     debug_assert_eq!(x.len(), y.len());
@@ -139,26 +296,37 @@ pub fn dot(x: &[f32], y: &[f32]) -> f32 {
 
 /// y = A x.  A: (m,n), x: n -> m.
 pub fn matvec(a: &Matrix, x: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; a.rows()];
+    matvec_into(a, x, &mut out);
+    out
+}
+
+/// y = A x into a caller-owned length-m buffer (overwritten).
+pub fn matvec_into(a: &Matrix, x: &[f32], out: &mut [f32]) {
     let (m, n) = a.shape();
     assert_eq!(x.len(), n);
-    (0..m).map(|i| dot(a.row(i), x)).collect()
+    assert_eq!(out.len(), m);
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = dot(a.row(i), x);
+    }
 }
 
 /// y = Aᵀ x.  A: (m,n), x: m -> n.
 pub fn matvec_t(a: &Matrix, x: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; a.cols()];
+    matvec_t_into(a, x, &mut out);
+    out
+}
+
+/// y = Aᵀ x into a caller-owned length-n buffer (overwritten).
+pub fn matvec_t_into(a: &Matrix, x: &[f32], out: &mut [f32]) {
     let (m, n) = a.shape();
     assert_eq!(x.len(), m);
-    let mut out = vec![0.0f32; n];
+    assert_eq!(out.len(), n);
+    out.fill(0.0);
     for i in 0..m {
-        let xi = x[i];
-        if xi == 0.0 {
-            continue;
-        }
-        for (o, &aij) in out.iter_mut().zip(a.row(i)) {
-            *o += xi * aij;
-        }
+        axpy1(out, x[i], a.row(i));
     }
-    out
 }
 
 /// Naive triple-loop oracle (tests + perf baseline).
@@ -192,7 +360,7 @@ mod tests {
     #[test]
     fn matmul_matches_naive() {
         let mut rng = Rng::new(1);
-        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (32, 784, 64), (17, 13, 29)] {
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (32, 784, 64), (17, 13, 29), (5, 300, 9)] {
             let a = Matrix::randn(m, k, 1.0, &mut rng);
             let b = Matrix::randn(k, n, 1.0, &mut rng);
             close(&matmul(&a, &b), &matmul_naive(&a, &b), 1e-3);
@@ -202,7 +370,7 @@ mod tests {
     #[test]
     fn tn_equals_transpose_then_mul() {
         let mut rng = Rng::new(2);
-        for &(k, m, n) in &[(8, 33, 21), (32, 128, 64), (1, 5, 5)] {
+        for &(k, m, n) in &[(8, 33, 21), (32, 128, 64), (1, 5, 5), (300, 7, 13)] {
             let a = Matrix::randn(k, m, 1.0, &mut rng);
             let b = Matrix::randn(k, n, 1.0, &mut rng);
             close(&matmul_tn(&a, &b), &matmul(&a.transpose(), &b), 1e-3);
@@ -212,7 +380,7 @@ mod tests {
     #[test]
     fn nt_equals_mul_transpose() {
         let mut rng = Rng::new(3);
-        for &(m, k, n) in &[(9, 17, 5), (32, 64, 128)] {
+        for &(m, k, n) in &[(9, 17, 5), (32, 64, 128), (1, 1, 1), (6, 500, 37)] {
             let a = Matrix::randn(m, k, 1.0, &mut rng);
             let b = Matrix::randn(n, k, 1.0, &mut rng);
             close(&matmul_nt(&a, &b), &matmul(&a, &b.transpose()), 1e-3);
@@ -226,6 +394,34 @@ mod tests {
         let a = Matrix::randn(256, 300, 1.0, &mut rng);
         let b = Matrix::randn(300, 256, 1.0, &mut rng);
         close(&matmul(&a, &b), &matmul_naive(&a, &b), 1e-2);
+        // Threaded transposed variants on the same scale.
+        let c = matmul_nt(&a, &b.transpose());
+        close(&c, &matmul_naive(&a, &b), 1e-2);
+        let d = matmul_tn(&a, &a);
+        close(&d, &matmul_naive(&a.transpose(), &a), 1e-2);
+    }
+
+    #[test]
+    fn into_variants_overwrite_dirty_buffers() {
+        // Workspace reuse hands kernels dirty outputs; results must be
+        // identical to the fresh-allocation path, bit for bit.
+        let mut rng = Rng::new(9);
+        let a = Matrix::randn(13, 40, 1.0, &mut rng);
+        let b = Matrix::randn(40, 11, 1.0, &mut rng);
+        let fresh = matmul(&a, &b);
+        let mut dirty = Matrix::filled(13, 11, f32::from_bits(0x7f7f_7f7f));
+        matmul_into(&a, &b, &mut dirty);
+        assert_eq!(fresh, dirty);
+
+        let fresh_tn = matmul_tn(&b, &b);
+        let mut dirty_tn = Matrix::filled(11, 11, -3.0);
+        matmul_tn_into(&b, &b, &mut dirty_tn);
+        assert_eq!(fresh_tn, dirty_tn);
+
+        let fresh_nt = matmul_nt(&a, &a);
+        let mut dirty_nt = Matrix::filled(13, 13, 42.0);
+        matmul_nt_into(&a, &a, &mut dirty_nt);
+        assert_eq!(fresh_nt, dirty_nt);
     }
 
     #[test]
@@ -244,6 +440,13 @@ mod tests {
         for j in 0..30 {
             assert!((z[j] - zm[(j, 0)]).abs() < 1e-3);
         }
+        // Into-variants agree with the allocating ones on dirty buffers.
+        let mut y2 = vec![7.0f32; 20];
+        matvec_into(&a, &x, &mut y2);
+        assert_eq!(y, y2);
+        let mut z2 = vec![-1.0f32; 30];
+        matvec_t_into(&a, &y, &mut z2);
+        assert_eq!(z, z2);
     }
 
     #[test]

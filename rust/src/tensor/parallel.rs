@@ -1,54 +1,55 @@
-//! Minimal data-parallel substrate (no rayon offline): scoped threads over
-//! row-range chunks, with a FLOP threshold below which work stays on the
-//! calling thread — small matmuls dominate the per-batch hot path and thread
-//! spawn overhead would swamp them.
+//! Data-parallel helpers over the persistent worker pool (`pool`): row- and
+//! range-chunked execution with a FLOP-threshold escape hatch decided by the
+//! callers — small matmuls dominate the per-batch hot path, and even the
+//! pool's wake/park handshake is not free.
+//!
+//! (The seed's scoped-thread implementation — and its duplicated row-count
+//! clamp — lives on only in benches/hotpath.rs as the "legacy" baseline the
+//! §Perf numbers in EXPERIMENTS.md are measured against.)
 
-use std::sync::OnceLock;
+use super::pool;
 
-/// Number of worker threads; override with DAD_THREADS.
+/// Number of worker lanes (pool width including the calling thread);
+/// override with DAD_THREADS before first use, or `pool::shutdown()` and
+/// set it to re-size mid-process.
 pub fn num_threads() -> usize {
-    static N: OnceLock<usize> = OnceLock::new();
-    *N.get_or_init(|| {
-        if let Ok(v) = std::env::var("DAD_THREADS") {
-            if let Ok(n) = v.parse::<usize>() {
-                return n.max(1);
-            }
-        }
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
-    })
+    pool::num_threads()
 }
 
 /// Run `f(lo, hi)` over disjoint chunks of 0..n, possibly in parallel.
-/// `f` must be safe to run concurrently on disjoint ranges.
+/// `f` must be safe to run concurrently on disjoint ranges. At most
+/// `num_threads()` chunks are created, and never smaller than `min_chunk`
+/// (so callers can force the serial path by passing `min_chunk >= n`).
 pub fn parallel_ranges<F>(n: usize, min_chunk: usize, f: F)
 where
     F: Fn(usize, usize) + Sync,
 {
-    let nt = num_threads();
     if n == 0 {
         return;
     }
-    let chunks = nt.min(n.div_ceil(min_chunk.max(1))).max(1);
+    // Resolve the chunk cap before touching the pool, so serial-only calls
+    // (n below min_chunk) never force pool initialization.
+    let max_chunks = n.div_ceil(min_chunk.max(1));
+    let chunks = if max_chunks <= 1 { 1 } else { num_threads().min(max_chunks).max(1) };
     if chunks == 1 {
         f(0, n);
         return;
     }
     let per = n.div_ceil(chunks);
-    std::thread::scope(|s| {
-        for c in 0..chunks {
-            let lo = c * per;
-            let hi = ((c + 1) * per).min(n);
-            if lo >= hi {
-                break;
-            }
-            let f = &f;
-            s.spawn(move || f(lo, hi));
+    pool::run(n.div_ceil(per), &|c| {
+        let lo = c * per;
+        let hi = ((c + 1) * per).min(n);
+        if lo < hi {
+            f(lo, hi);
         }
     });
 }
 
-/// Split a mutable slice into disjoint row-chunks and run `f` on each in
-/// parallel. `row_len` is the stride; chunk boundaries are row-aligned.
+/// Split a mutable slice into disjoint row-chunks and run `f(first_row,
+/// rows)` on each in parallel. `row_len` is the stride; chunk boundaries
+/// are row-aligned. Rows are `data.len() / row_len`; any trailing partial
+/// row is ignored in the parallel path and included in the serial one
+/// (matching the historical contract relied on by `ops`).
 pub fn parallel_rows_mut<F>(data: &mut [f32], row_len: usize, min_rows: usize, f: F)
 where
     F: Fn(usize, &mut [f32]) + Sync,
@@ -57,32 +58,28 @@ where
     if rows == 0 {
         return;
     }
-    let nt = num_threads();
-    let chunks = nt.min(rows.div_ceil(min_rows.max(1))).max(1);
+    let max_chunks = rows.div_ceil(min_rows.max(1));
+    let chunks = if max_chunks <= 1 { 1 } else { num_threads().min(max_chunks).max(1) };
     if chunks == 1 {
         f(0, data);
         return;
     }
     let per = rows.div_ceil(chunks);
-    std::thread::scope(|s| {
-        let mut rest = data;
-        let mut row0 = 0usize;
-        for _ in 0..chunks {
-            let take = per.min(rest.len() / row_len - 0);
-            if take == 0 {
-                break;
-            }
-            let take = take.min(rest.len() / row_len);
-            let (head, tail) = rest.split_at_mut(take * row_len);
-            rest = tail;
-            let f = &f;
-            let start = row0;
-            s.spawn(move || f(start, head));
-            row0 += take;
-            if rest.is_empty() {
-                break;
-            }
+    let base = data.as_mut_ptr() as usize;
+    pool::run(rows.div_ceil(per), &|c| {
+        let lo = c * per;
+        let hi = ((c + 1) * per).min(rows);
+        if lo >= hi {
+            return;
         }
+        // SAFETY: jobs partition 0..rows into disjoint row ranges, so these
+        // reconstructed sub-slices never overlap, stay inside the `data`
+        // borrow (hi <= rows, rows * row_len <= data.len()), and `data`
+        // outlives the blocking pool::run call.
+        let chunk = unsafe {
+            std::slice::from_raw_parts_mut((base as *mut f32).add(lo * row_len), (hi - lo) * row_len)
+        };
+        f(lo, chunk);
     });
 }
 
@@ -125,6 +122,20 @@ mod tests {
             for c in 0..8 {
                 assert_eq!(data[r * 8 + c], r as f32);
             }
+        }
+    }
+
+    #[test]
+    fn rows_mut_uneven_chunks() {
+        // 37 rows, min 3: chunk math must cover every row exactly once.
+        let mut data = vec![-1.0f32; 37 * 5];
+        parallel_rows_mut(&mut data, 5, 3, |start, chunk| {
+            for (r, row) in chunk.chunks_mut(5).enumerate() {
+                row.fill((start + r) as f32);
+            }
+        });
+        for r in 0..37 {
+            assert_eq!(data[r * 5], r as f32, "row {r}");
         }
     }
 }

@@ -1,0 +1,332 @@
+//! Persistent worker pool — the dispatch substrate under every parallel
+//! kernel.
+//!
+//! The seed engine spawned fresh scoped OS threads per matmul; at the
+//! paper's shapes (batch 32-64) thread creation dominated the kernels
+//! themselves. This pool parks its workers on a condvar and hands them
+//! jobs through a single shared chunk counter, so per-call dispatch is one
+//! mutex/condvar handshake (~µs) and **zero heap allocations** — a property
+//! the steady-state training step relies on (tests/alloc_free.rs).
+//!
+//! Design:
+//!   - One global pool, lazily created on first use; width comes from
+//!     DAD_THREADS (re-read on every (re)initialization) or the machine's
+//!     available parallelism, capped at 16.
+//!   - A job is a borrowed closure `f(chunk_index)` plus a chunk count.
+//!     Workers (and the calling thread) claim chunk indices off an atomic
+//!     counter until exhausted — natural load balancing, no per-chunk
+//!     queue nodes.
+//!   - `run` blocks until every claimed chunk has finished, which is what
+//!     makes lending a stack-borrowed closure to the workers sound.
+//!   - Worker panics are caught and re-raised on the caller; the pool
+//!     itself stays usable.
+//!   - `shutdown` parks nothing: it joins all workers and clears the
+//!     global handle; the next `run`/`num_threads` re-initializes (used by
+//!     tests to vary DAD_THREADS within one process).
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Type-erased pointer to the caller's chunk closure. Only ever
+/// dereferenced while the posting `run` call is blocked, which keeps the
+/// borrow alive.
+#[derive(Clone, Copy)]
+struct JobPtr(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (bound enforced by `run`'s signature) and
+// outlives every dereference because `run` does not return until all
+// workers have retired the job.
+unsafe impl Send for JobPtr {}
+
+struct State {
+    /// Bumped once per posted job; workers use it to detect new work.
+    epoch: u64,
+    /// Live job, present from post until retire.
+    job: Option<JobPtr>,
+    n_chunks: usize,
+    /// Workers currently executing the live job.
+    active: usize,
+    /// A worker panicked while executing the live job.
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// Workers park here waiting for a new epoch.
+    work_cv: Condvar,
+    /// The caller parks here waiting for `active` to drain.
+    done_cv: Condvar,
+    /// Next unclaimed chunk index of the live job.
+    next_chunk: AtomicUsize,
+    /// Pool width including the calling thread.
+    width: usize,
+}
+
+struct Pool {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Pool {
+    fn spawn(width: usize) -> Pool {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                n_chunks: 0,
+                active: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            next_chunk: AtomicUsize::new(0),
+            width,
+        });
+        let handles = (1..width)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("dad-worker-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        Pool { shared, handles }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut seen_epoch = 0u64;
+    // Warm the kernel packing scratch now, while nobody is timing or
+    // counting allocations (see ops::prewarm_scratch).
+    super::ops::prewarm_scratch();
+    // True while this thread executes pool chunks: nested parallel calls
+    // from inside a kernel run inline instead of deadlocking on the pool.
+    IN_POOL.with(|b| b.set(true));
+    loop {
+        // Park until a new job (or shutdown) shows up, then join it.
+        let (ptr, n_chunks) = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen_epoch {
+                    seen_epoch = st.epoch;
+                    if let Some(JobPtr(p)) = st.job {
+                        st.active += 1;
+                        break (p, st.n_chunks);
+                    }
+                    // Job already retired before this worker woke; keep
+                    // waiting for the next epoch.
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        // SAFETY: see JobPtr — the posting caller is blocked until we
+        // decrement `active`, so the closure borrow is alive.
+        let f = unsafe { &*ptr };
+        let result = catch_unwind(AssertUnwindSafe(|| loop {
+            let c = shared.next_chunk.fetch_add(1, Ordering::Relaxed);
+            if c >= n_chunks {
+                break;
+            }
+            f(c);
+        }));
+        let mut st = shared.state.lock().unwrap();
+        if result.is_err() {
+            st.panicked = true;
+        }
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+thread_local! {
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+static REGISTRY: OnceLock<Mutex<Option<Pool>>> = OnceLock::new();
+
+fn registry() -> &'static Mutex<Option<Pool>> {
+    REGISTRY.get_or_init(|| Mutex::new(None))
+}
+
+/// Thread count the next pool initialization will use: DAD_THREADS
+/// (clamped to [1, 64]) or available parallelism capped at 16.
+fn configured_threads() -> usize {
+    if let Ok(v) = std::env::var("DAD_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.clamp(1, 64);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+fn handle() -> Arc<Shared> {
+    let mut reg = registry().lock().unwrap();
+    if reg.is_none() {
+        *reg = Some(Pool::spawn(configured_threads()));
+    }
+    Arc::clone(&reg.as_ref().unwrap().shared)
+}
+
+/// Current pool width (callers + workers), initializing the pool if needed.
+pub fn num_threads() -> usize {
+    handle().width
+}
+
+/// Join all workers and drop the global pool. The next `run` or
+/// `num_threads` call re-initializes, re-reading DAD_THREADS — which is how
+/// tests sweep thread counts inside one process. Must not be called from
+/// inside a pool job.
+pub fn shutdown() {
+    let pool = registry().lock().unwrap().take();
+    if let Some(pool) = pool {
+        {
+            let mut st = pool.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        pool.shared.work_cv.notify_all();
+        for h in pool.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Execute `f(0), f(1), .., f(n_chunks - 1)` across the pool (the calling
+/// thread participates), returning when all chunks are done. Chunks must be
+/// safe to run concurrently. Allocation-free after pool initialization.
+pub fn run(n_chunks: usize, f: &(dyn Fn(usize) + Sync)) {
+    if n_chunks == 0 {
+        return;
+    }
+    // Serial fast paths: trivial jobs, nested calls from inside a pool
+    // chunk (the pool's single job slot cannot express recursion), or a
+    // width-1 pool.
+    if n_chunks == 1 || IN_POOL.with(|b| b.get()) {
+        for c in 0..n_chunks {
+            f(c);
+        }
+        return;
+    }
+    let shared = handle();
+    if shared.width <= 1 {
+        for c in 0..n_chunks {
+            f(c);
+        }
+        return;
+    }
+    // Post the job. The state mutex doubles as the job slot: `run` holds no
+    // other lock, and concurrent top-level `run` calls serialize on the
+    // post/retire protocol below (a second poster would observe
+    // `job.is_some()` and spin-wait on done_cv via the retire path of the
+    // first — prevented instead by taking the slot under the same lock).
+    {
+        let mut st = shared.state.lock().unwrap();
+        while st.job.is_some() {
+            // Another thread's job is in flight; wait for it to retire.
+            st = shared.done_cv.wait(st).unwrap();
+        }
+        shared.next_chunk.store(0, Ordering::Relaxed);
+        st.job = Some(JobPtr(f as *const (dyn Fn(usize) + Sync)));
+        st.n_chunks = n_chunks;
+        st.epoch = st.epoch.wrapping_add(1);
+        shared.work_cv.notify_all();
+    }
+    // Participate in our own job.
+    IN_POOL.with(|b| b.set(true));
+    let result = catch_unwind(AssertUnwindSafe(|| loop {
+        let c = shared.next_chunk.fetch_add(1, Ordering::Relaxed);
+        if c >= n_chunks {
+            break;
+        }
+        f(c);
+    }));
+    IN_POOL.with(|b| b.set(false));
+    // Retire: wait for joined workers to drain, clear the slot.
+    let panicked = {
+        let mut st = shared.state.lock().unwrap();
+        while st.active > 0 {
+            st = shared.done_cv.wait(st).unwrap();
+        }
+        st.job = None;
+        let p = st.panicked;
+        st.panicked = false;
+        // Wake any poster waiting for the slot.
+        shared.done_cv.notify_all();
+        p
+    };
+    if let Err(payload) = result {
+        resume_unwind(payload);
+    }
+    if panicked {
+        panic!("pool worker panicked during parallel execution");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn covers_every_chunk_exactly_once() {
+        let n = 257;
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        run(n, &|c| {
+            hits[c].fetch_add(1, Ordering::SeqCst);
+        });
+        for (c, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "chunk {c}");
+        }
+    }
+
+    #[test]
+    fn nested_runs_execute_inline() {
+        let total = AtomicUsize::new(0);
+        run(4, &|_| {
+            // Nested: must run inline on this thread without deadlock.
+            run(8, &|_| {
+                total.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn reusable_across_many_jobs() {
+        let total = AtomicUsize::new(0);
+        for _ in 0..100 {
+            run(16, &|_| {
+                total.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 1600);
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let caught = std::panic::catch_unwind(|| {
+            run(64, &|c| {
+                if c == 13 {
+                    panic!("boom");
+                }
+            });
+        });
+        assert!(caught.is_err());
+        // Pool still works afterwards.
+        let total = AtomicUsize::new(0);
+        run(8, &|_| {
+            total.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 8);
+    }
+}

@@ -1,0 +1,163 @@
+//! Step workspace: a recycling arena for the training hot path.
+//!
+//! A steady-state training step computes the same set of activation, delta
+//! and scratch matrices every batch. The seed engine re-allocated all of
+//! them per step; this arena lends out `Matrix`/`Vec<f32>` buffers and
+//! takes them back, so after the first (warm-up) step the entire
+//! `local_stats` pipeline performs **zero heap allocations** — asserted by
+//! a counting-allocator test (tests/alloc_free.rs).
+//!
+//! The design deliberately reuses the existing `Matrix` type instead of
+//! introducing views: `take` hands out a real `Matrix` built from a pooled
+//! `Vec<f32>` (resized in place, no realloc once warm), and `recycle`
+//! reclaims its storage. Buffers are matched best-fit by capacity so a
+//! fixed shape-set reaches a fixed buffer-set. Lists of matrices
+//! (activation stacks) recycle the same way via `take_list`/`recycle_list`.
+
+use super::matrix::Matrix;
+
+/// Recycling buffer arena. Cheap to construct (no allocation until first
+/// use); hold one per site/thread and reuse it across steps.
+#[derive(Default)]
+pub struct Workspace {
+    /// Reclaimed f32 buffers, kept sorted ascending by capacity so
+    /// `take` can bisect for the best fit.
+    bufs: Vec<Vec<f32>>,
+    /// Reclaimed matrix-list containers (emptied before storage).
+    lists: Vec<Vec<Matrix>>,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Workspace::default()
+    }
+
+    /// Number of parked buffers (diagnostics/tests).
+    pub fn parked(&self) -> usize {
+        self.bufs.len()
+    }
+
+    /// Smallest parked buffer with capacity >= n, else the largest parked
+    /// buffer (which will grow once and then fit forever), else a new one.
+    fn take_buf(&mut self, n: usize) -> Vec<f32> {
+        if self.bufs.is_empty() {
+            return Vec::with_capacity(n);
+        }
+        let idx = match self.bufs.partition_point(|b| b.capacity() < n) {
+            i if i < self.bufs.len() => i,          // best fit
+            _ => self.bufs.len() - 1,               // largest; will grow
+        };
+        self.bufs.remove(idx)
+    }
+
+    /// Park a raw buffer for reuse.
+    pub fn recycle_vec(&mut self, mut v: Vec<f32>) {
+        v.clear();
+        let at = self.bufs.partition_point(|b| b.capacity() < v.capacity());
+        self.bufs.insert(at, v);
+    }
+
+    /// Park a matrix's storage for reuse.
+    pub fn recycle(&mut self, m: Matrix) {
+        self.recycle_vec(m.into_vec());
+    }
+
+    /// A zeroed (rows, cols) matrix backed by a recycled buffer.
+    pub fn take(&mut self, rows: usize, cols: usize) -> Matrix {
+        let n = rows * cols;
+        let mut buf = self.take_buf(n);
+        buf.clear();
+        buf.resize(n, 0.0);
+        Matrix::from_vec(rows, cols, buf)
+    }
+
+    /// A zeroed length-n vector backed by a recycled buffer.
+    pub fn take_vec(&mut self, n: usize) -> Vec<f32> {
+        let mut buf = self.take_buf(n);
+        buf.clear();
+        buf.resize(n, 0.0);
+        buf
+    }
+
+    /// A recycled copy of `src` (same shape and contents).
+    pub fn copy_in(&mut self, src: &Matrix) -> Matrix {
+        let mut m = self.take(src.rows(), src.cols());
+        m.data_mut().copy_from_slice(src.data());
+        m
+    }
+
+    /// An empty `Vec<Matrix>` container with recycled capacity.
+    pub fn take_list(&mut self) -> Vec<Matrix> {
+        self.lists.pop().unwrap_or_default()
+    }
+
+    /// Park a matrix list: remaining matrices are recycled individually,
+    /// the container's capacity is kept for `take_list`.
+    pub fn recycle_list(&mut self, mut list: Vec<Matrix>) {
+        for m in list.drain(..) {
+            self.recycle(m);
+        }
+        self.lists.push(list);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_recycle_roundtrip_reuses_storage() {
+        let mut ws = Workspace::new();
+        let m = ws.take(4, 8);
+        assert_eq!(m.shape(), (4, 8));
+        assert!(m.data().iter().all(|&v| v == 0.0));
+        let ptr = m.data().as_ptr();
+        ws.recycle(m);
+        assert_eq!(ws.parked(), 1);
+        // Same-size take must reuse the parked buffer (same allocation).
+        let m2 = ws.take(8, 4);
+        assert_eq!(m2.data().as_ptr(), ptr);
+        assert_eq!(ws.parked(), 0);
+    }
+
+    #[test]
+    fn take_zeroes_recycled_contents() {
+        let mut ws = Workspace::new();
+        let mut m = ws.take(3, 3);
+        m.data_mut().fill(7.5);
+        ws.recycle(m);
+        let m2 = ws.take(3, 3);
+        assert!(m2.data().iter().all(|&v| v == 0.0));
+        let v = ws.take_vec(9);
+        assert!(v.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_sufficient() {
+        let mut ws = Workspace::new();
+        let small = ws.take(2, 2);
+        let big = ws.take(10, 10);
+        let small_ptr = small.data().as_ptr();
+        ws.recycle(big);
+        ws.recycle(small);
+        // A 2x2 request must get the 4-capacity buffer, not the 100 one.
+        let again = ws.take(2, 2);
+        assert_eq!(again.data().as_ptr(), small_ptr);
+    }
+
+    #[test]
+    fn copy_in_and_lists() {
+        let mut ws = Workspace::new();
+        let src = Matrix::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+        let cp = ws.copy_in(&src);
+        assert_eq!(cp, src);
+        let mut list = ws.take_list();
+        list.push(cp);
+        list.push(ws.take(5, 5));
+        ws.recycle_list(list);
+        assert_eq!(ws.parked(), 2);
+        let list2 = ws.take_list();
+        assert!(list2.is_empty());
+        assert!(list2.capacity() >= 2);
+    }
+}

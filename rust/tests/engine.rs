@@ -1,0 +1,171 @@
+//! Integration tests for the rebuilt compute engine: GEMM parity against
+//! the naive oracle across pool widths (DAD_THREADS swept via pool
+//! shutdown/reinit), bit-exact workspace-reuse determinism, and pool
+//! lifecycle safety.
+
+use std::sync::Mutex;
+
+use dad::nn::loss::one_hot;
+use dad::nn::model::{Batch, DistModel};
+use dad::nn::stats::LocalStats;
+use dad::nn::{Activation, Mlp};
+use dad::tensor::{matmul, matmul_nt, matmul_tn, ops, pool, Matrix, Rng, Workspace};
+
+/// The pool is process-global; tests that reconfigure it must not overlap
+/// (cargo's test harness runs tests on multiple threads).
+static POOL_LOCK: Mutex<()> = Mutex::new(());
+
+fn pool_lock() -> std::sync::MutexGuard<'static, ()> {
+    // A failed assertion in one test must not mask the others behind
+    // PoisonError; the guarded resource (the global pool) is reset by
+    // with_threads' drop guard anyway.
+    POOL_LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Run `f` on a freshly initialized pool of `n` threads, then tear the
+/// pool down and restore the environment — even if `f` panics.
+fn with_threads(n: usize, f: impl FnOnce()) {
+    struct Restore;
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            pool::shutdown();
+            std::env::remove_var("DAD_THREADS");
+        }
+    }
+    pool::shutdown();
+    std::env::set_var("DAD_THREADS", n.to_string());
+    let _restore = Restore;
+    assert_eq!(pool::num_threads(), n, "pool must re-read DAD_THREADS on reinit");
+    f();
+}
+
+fn close(a: &Matrix, b: &Matrix, tol: f32, what: &str) {
+    assert_eq!(a.shape(), b.shape(), "{what}: shape");
+    let d = a.max_abs_diff(b);
+    assert!(d < tol, "{what}: max abs diff {d} >= {tol}");
+}
+
+#[test]
+fn gemm_parity_across_thread_counts() {
+    let _guard = pool_lock();
+    for &nt in &[1usize, 4, 16] {
+        with_threads(nt, || {
+            let mut rng = Rng::new(7 + nt as u64);
+            // Shapes straddling the parallel threshold, including the
+            // paper's batch-64 hot shapes and awkward odd sizes.
+            for &(m, k, n) in &[
+                (1usize, 1usize, 1usize),
+                (5, 3, 9),
+                (17, 13, 29),
+                (64, 784, 256),
+                (64, 300, 301),
+                (129, 65, 131),
+            ] {
+                let a = Matrix::randn(m, k, 1.0, &mut rng);
+                let b = Matrix::randn(k, n, 1.0, &mut rng);
+                let oracle = ops::matmul_naive(&a, &b);
+                close(&matmul(&a, &b), &oracle, 1e-2, &format!("matmul {m}x{k}x{n} nt={nt}"));
+                // C = Aᵀ B with A = (k, m): compare via explicit transpose.
+                let at = a.transpose();
+                close(
+                    &matmul_tn(&at, &b),
+                    &oracle,
+                    1e-2,
+                    &format!("matmul_tn {m}x{k}x{n} nt={nt}"),
+                );
+                // C = A Bᵀ with B = (n, k): compare via explicit transpose.
+                let bt = b.transpose();
+                close(
+                    &matmul_nt(&a, &bt),
+                    &oracle,
+                    1e-2,
+                    &format!("matmul_nt {m}x{k}x{n} nt={nt}"),
+                );
+            }
+        });
+    }
+}
+
+#[test]
+fn workspace_reuse_is_bit_deterministic() {
+    let _guard = pool_lock();
+    let mut rng = Rng::new(11);
+    let mlp = Mlp::new(&[40, 64, 32, 10], &[Activation::Relu, Activation::Tanh], &mut rng);
+    let x = Matrix::randn(48, 40, 1.0, &mut rng);
+    let labels: Vec<usize> = (0..48).map(|i| i % 10).collect();
+    let batch = Batch::Dense { x, y: one_hot(&labels, 10) };
+
+    // Reference: the allocating one-shot path.
+    let fresh = mlp.local_stats(&batch);
+
+    // Two identical calls on one reused workspace + output: stats must be
+    // bit-identical to each other AND to the fresh path (per-row summation
+    // order is fixed regardless of which pool lane computes a row).
+    let mut ws = Workspace::new();
+    let mut out = LocalStats::empty();
+    mlp.local_stats_into(&batch, &mut ws, &mut out);
+    let first: Vec<(Matrix, Matrix)> =
+        out.entries.iter().map(|e| (e.a.clone(), e.d.clone())).collect();
+    let first_loss = out.loss;
+    mlp.local_stats_into(&batch, &mut ws, &mut out);
+    assert_eq!(out.loss.to_bits(), first_loss.to_bits(), "loss must be bit-stable");
+    assert_eq!(out.entries.len(), first.len());
+    for (i, e) in out.entries.iter().enumerate() {
+        assert_eq!(e.a, first[i].0, "entry {i} A stack drifted across reuse");
+        assert_eq!(e.d, first[i].1, "entry {i} Δ stack drifted across reuse");
+        assert_eq!(e.a, fresh.entries[i].a, "entry {i} A stack differs from fresh path");
+        assert_eq!(e.d, fresh.entries[i].d, "entry {i} Δ stack differs from fresh path");
+    }
+    assert_eq!(out.loss.to_bits(), fresh.loss.to_bits());
+}
+
+#[test]
+fn pool_shutdown_and_reinit_are_safe() {
+    let _guard = pool_lock();
+    let mut rng = Rng::new(3);
+    let a = Matrix::randn(96, 200, 1.0, &mut rng);
+    let b = Matrix::randn(200, 96, 1.0, &mut rng);
+    let want = ops::matmul_naive(&a, &b);
+    // Use, shut down, use again (auto-reinit), double-shutdown (no-op).
+    close(&matmul(&a, &b), &want, 1e-2, "pre-shutdown");
+    pool::shutdown();
+    pool::shutdown(); // idempotent
+    close(&matmul(&a, &b), &want, 1e-2, "post-reinit");
+    // Width changes take effect across a shutdown boundary.
+    with_threads(2, || {
+        close(&matmul(&a, &b), &want, 1e-2, "nt=2");
+    });
+    with_threads(1, || {
+        assert_eq!(dad::tensor::parallel::num_threads(), 1);
+        close(&matmul(&a, &b), &want, 1e-2, "nt=1");
+    });
+}
+
+#[test]
+fn per_site_workspaces_match_across_algorithms() {
+    let _guard = pool_lock();
+    use dad::algos::common::DistAlgorithm;
+    use dad::algos::{Dad, Pooled};
+    use dad::dist::Cluster;
+    let mut rng = Rng::new(21);
+    let mlp = Mlp::new(&[12, 16, 4], &[Activation::Relu], &mut rng);
+    let batches: Vec<Batch> = (0..2)
+        .map(|_| {
+            let x = Matrix::randn(6, 12, 1.0, &mut rng);
+            let labels: Vec<usize> = (0..6).map(|i| i % 4).collect();
+            Batch::Dense { x, y: one_hot(&labels, 4) }
+        })
+        .collect();
+    // Multiple steps on the SAME cluster reuse the per-site workspaces;
+    // gradients must stay equal to the pooled oracle on every step.
+    let mut c_dad = Cluster::replicate(mlp.clone(), 2);
+    let mut c_pool = Cluster::replicate(mlp, 2);
+    for step in 0..3 {
+        let g_dad = Dad.step(&mut c_dad, &batches).grads;
+        let g_pool = Pooled.step(&mut c_pool, &batches).grads;
+        for (i, (gd, gp)) in g_dad.iter().zip(&g_pool).enumerate() {
+            let diff = gd.max_abs_diff(gp);
+            assert!(diff < 1e-5, "step {step} param {i}: {diff}");
+        }
+    }
+}

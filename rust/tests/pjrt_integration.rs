@@ -1,3 +1,5 @@
+#![cfg(feature = "pjrt")]
+
 //! Integration tests across the AOT boundary: the Rust PJRT runtime
 //! executing the JAX/Pallas-lowered artifacts must agree with the native
 //! engine. Requires `make artifacts` to have been run (the Makefile test
