@@ -26,18 +26,25 @@ pub struct StepOutcome {
 /// batches. Mutable to allow cross-step compressor state (PowerSGD's warm
 /// start + error feedback).
 pub trait DistAlgorithm<M: DistModel> {
+    /// Algorithm name as reported in logs and CSVs.
     fn name(&self) -> &'static str;
+    /// One synchronized step over per-site batches.
     fn step(&mut self, cluster: &mut Cluster<M>, batches: &[Batch]) -> StepOutcome;
 }
 
 /// Per-site local statistics + the global row count (Σ output-delta rows),
 /// which sets the 1/(S*N) gradient scale.
 pub struct GatheredStats {
+    /// One `LocalStats` per site, in site order.
     pub per_site: Vec<LocalStats>,
+    /// Σ per-site output-delta rows (the global batch size).
     pub total_rows: usize,
+    /// Per-site output-delta row counts.
     pub site_rows: Vec<usize>,
 }
 
+/// Run every site's forward/backward on its batch (each on its own
+/// persistent workspace) and collect the statistics.
 pub fn gather_local_stats<M: DistModel>(cluster: &Cluster<M>, batches: &[Batch]) -> GatheredStats {
     assert_eq!(cluster.n_sites(), batches.len(), "one batch per site");
     // Each site computes on its own persistent workspace, so the forward/

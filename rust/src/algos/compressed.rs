@@ -22,8 +22,11 @@ const POWERSGD_SEED: u64 = 0x9d5f_17ab_33c0_44de;
 /// rank-dAD configuration (paper defaults: 10 iterations, theta = 1e-3).
 #[derive(Clone, Debug)]
 pub struct RankDadConfig {
+    /// Hard cap on the transmitted rank.
     pub max_rank: usize,
+    /// Structured power iterations per factorization.
     pub n_iters: usize,
+    /// Early-stop threshold on the singular-direction residual.
     pub theta: f32,
 }
 
@@ -33,11 +36,16 @@ impl Default for RankDadConfig {
     }
 }
 
+/// rank-dAD (section 3.4): adaptive low-rank factorization of the AD
+/// statistics via structured power iterations, before any gradient is
+/// materialized.
 pub struct RankDad {
+    /// Rank/iteration/theta configuration.
     pub cfg: RankDadConfig,
 }
 
 impl RankDad {
+    /// Paper-default config at the given max rank.
     pub fn new(max_rank: usize) -> Self {
         RankDad { cfg: RankDadConfig { max_rank, ..Default::default() } }
     }
@@ -112,12 +120,15 @@ impl<M: DistModel> DistAlgorithm<M> for RankDad {
 /// PowerSGD baseline: rank-r compression of the materialized local
 /// gradients with warm start + error feedback, two-phase mean (P then Q).
 pub struct PowerSgd {
+    /// Fixed compression rank r.
     pub rank: usize,
-    /// states[site][entry] — per-site error feedback, shared warm start.
+    /// `states[site][entry]` — per-site error feedback, shared warm start.
     states: Vec<Vec<PowerSgdState>>,
 }
 
 impl PowerSgd {
+    /// Fresh compressor state at rank `rank` (lazy-initialized on first
+    /// step, when the entry shapes are known).
     pub fn new(rank: usize) -> Self {
         PowerSgd { rank, states: vec![] }
     }

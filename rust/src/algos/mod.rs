@@ -1,13 +1,19 @@
-//! The six training algorithms the paper evaluates, behind one trait:
+//! The training algorithms the paper evaluates, behind one trait. Per-layer
+//! uplink bytes are per site, for batch N and an h_i x h_{i+1} layer
+//! (dad-p2p has no aggregator: its cost is per *peer*, times S-1 links):
 //!
-//! | algorithm | exactness | per-layer site->agg bytes |
+//! | algorithm | exactness | per-layer wire bytes |
 //! |---|---|---|
-//! | pooled    | oracle (single site)      | 0 |
-//! | dSGD      | exact                     | h_i * h_{i+1} |
-//! | dAD       | exact (Algorithm 1)       | N (h_i + h_{i+1}) |
-//! | edAD      | exact (Algorithm 2)       | N h_i (+ Δ_L once) |
-//! | rank-dAD  | low-rank, adaptive (§3.4) | r_eff (h_i + h_{i+1}), r_eff <= r |
-//! | PowerSGD  | low-rank, fixed (baseline)| r (h_i + h_{i+1}) |
+//! | `pooled`    | oracle (single site)      | 0 |
+//! | `dsgd`      | exact                     | h_i * h_{i+1} |
+//! | `dad`       | exact (Algorithm 1)       | N (h_i + h_{i+1}) |
+//! | `dad-p2p`   | exact (section 3.6)       | N (h_i + h_{i+1}) x (S-1) peers |
+//! | `edad`      | exact (Algorithm 2)       | N h_i (+ Δ_L once) |
+//! | `rank-dad`  | low-rank, adaptive (§3.4) | r_eff (h_i + h_{i+1}), r_eff <= r |
+//! | `powersgd`  | low-rank, fixed (baseline)| r (h_i + h_{i+1}) |
+//!
+//! Every spelling accepted by [`AlgoSpec::parse`] (and therefore by the
+//! CLI's `--algo`) appears above; keep the three in sync.
 
 pub mod common;
 pub mod compressed;
@@ -24,17 +30,35 @@ use crate::nn::model::DistModel;
 /// Algorithm selector (config/CLI surface).
 #[derive(Clone, Debug, PartialEq)]
 pub enum AlgoSpec {
+    /// Single-site oracle: the union batch, no communication.
     Pooled,
+    /// Distributed SGD: full-gradient averaging.
     Dsgd,
+    /// dAD (Algorithm 1): ship (A, Δ) stacks, star topology.
     Dad,
     /// Decentralized dAD (section 3.6): no aggregator, all-to-all stats.
     DadP2p,
+    /// edAD (Algorithm 2): ship A-stacks + Δ_L only.
     Edad,
-    RankDad { max_rank: usize, n_iters: usize, theta: f32 },
-    PowerSgd { rank: usize },
+    /// rank-dAD (section 3.4): adaptive low-rank factors.
+    RankDad {
+        /// Hard cap on the transmitted rank.
+        max_rank: usize,
+        /// Power iterations per factorization.
+        n_iters: usize,
+        /// Early-stop threshold.
+        theta: f32,
+    },
+    /// PowerSGD baseline: fixed-rank gradient compression.
+    PowerSgd {
+        /// Compression rank.
+        rank: usize,
+    },
 }
 
 impl AlgoSpec {
+    /// Parse a CLI/config spelling: `pooled | dsgd | dad | dad-p2p | edad |
+    /// rank-dad[:r] | powersgd[:r]`.
     pub fn parse(s: &str) -> Option<AlgoSpec> {
         // Forms: pooled | dsgd | dad | edad | rank-dad[:r] | powersgd[:r]
         let (name, arg) = match s.split_once(':') {
@@ -56,6 +80,7 @@ impl AlgoSpec {
         }
     }
 
+    /// Instantiate the selected algorithm for model type `M`.
     pub fn build<M: DistModel>(&self) -> Box<dyn DistAlgorithm<M>> {
         match *self {
             AlgoSpec::Pooled => Box::new(Pooled),
@@ -70,6 +95,7 @@ impl AlgoSpec {
         }
     }
 
+    /// Canonical spelling (round-trips through [`AlgoSpec::parse`]).
     pub fn name(&self) -> String {
         match self {
             AlgoSpec::Pooled => "pooled".into(),
@@ -222,6 +248,8 @@ mod tests {
     #[test]
     fn spec_parsing() {
         assert_eq!(AlgoSpec::parse("dad"), Some(AlgoSpec::Dad));
+        assert_eq!(AlgoSpec::parse("dad-p2p"), Some(AlgoSpec::DadP2p));
+        assert_eq!(AlgoSpec::parse("dad-p2p").unwrap().name(), "dad-p2p");
         assert_eq!(
             AlgoSpec::parse("rank-dad:4"),
             Some(AlgoSpec::RankDad { max_rank: 4, n_iters: 10, theta: 1e-3 })

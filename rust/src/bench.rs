@@ -10,13 +10,18 @@ use std::time::Instant;
 /// Timing result in nanoseconds.
 #[derive(Debug, Clone, Copy)]
 pub struct Timing {
+    /// Median over all samples.
     pub median_ns: u128,
+    /// 10th-percentile sample.
     pub p10_ns: u128,
+    /// 90th-percentile sample.
     pub p90_ns: u128,
+    /// Number of timed runs.
     pub samples: usize,
 }
 
 impl Timing {
+    /// `median [p10 .. p90]` with auto-scaled units.
     pub fn human(&self) -> String {
         fn fmt(ns: u128) -> String {
             if ns >= 1_000_000_000 {
@@ -67,7 +72,9 @@ pub fn gflops(t: &Timing, flops: usize) -> f64 {
 /// One benchmark row destined for the JSON artifact.
 #[derive(Debug, Clone)]
 pub struct BenchRecord {
+    /// Benchmark id as printed and serialized.
     pub name: String,
+    /// Measured timing distribution.
     pub timing: Timing,
     /// GFLOP/s, when the benchmark has a FLOP count.
     pub gflops: Option<f64>,
@@ -86,6 +93,7 @@ pub struct JsonSink {
 }
 
 impl JsonSink {
+    /// Empty sink.
     pub fn new() -> Self {
         JsonSink::default()
     }

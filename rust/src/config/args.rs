@@ -3,14 +3,19 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// Non-option arguments, in order.
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` pairs.
     pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
     pub flags: Vec<String>,
 }
 
 impl Args {
+    /// Parse an argv-style iterator (no program name).
     pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
         let mut out = Args::default();
         let mut it = argv.into_iter().peekable();
@@ -31,26 +36,32 @@ impl Args {
         out
     }
 
+    /// Parse the process's command line (program name skipped).
     pub fn from_env() -> Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// The value of `--key`, when present.
     pub fn opt(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
     }
 
+    /// The value of `--key`, or `default`.
     pub fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.opt(key).unwrap_or(default)
     }
 
+    /// `--key` parsed as usize, or `default`.
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
         self.opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// `--key` parsed as f32, or `default`.
     pub fn f32_or(&self, key: &str, default: f32) -> f32 {
         self.opt(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Whether bare `--key` was passed.
     pub fn has_flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }

@@ -4,16 +4,23 @@
 
 use std::collections::BTreeMap;
 
+/// One parsed TOML value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// A `"..."` string.
     Str(String),
+    /// A decimal integer.
     Int(i64),
+    /// A float literal.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// A flat `[v, v, ...]` array.
     Array(Vec<Value>),
 }
 
 impl Value {
+    /// String contents, when this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -21,6 +28,7 @@ impl Value {
         }
     }
 
+    /// Integer value, when this is an integer.
     pub fn as_int(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
@@ -28,6 +36,7 @@ impl Value {
         }
     }
 
+    /// Float value (integers widen), when numeric.
     pub fn as_float(&self) -> Option<f64> {
         match self {
             Value::Float(f) => Some(*f),
@@ -36,6 +45,7 @@ impl Value {
         }
     }
 
+    /// Boolean value, when this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -47,10 +57,12 @@ impl Value {
 /// Parsed config: section -> key -> value ("" is the root section).
 #[derive(Debug, Default, Clone)]
 pub struct TomlLite {
+    /// section name -> key -> value ("" is the root section).
     pub sections: BTreeMap<String, BTreeMap<String, Value>>,
 }
 
 impl TomlLite {
+    /// Parse config text; errors carry the 1-based line number.
     pub fn parse(text: &str) -> Result<TomlLite, String> {
         let mut out = TomlLite::default();
         let mut section = String::new();
@@ -78,27 +90,33 @@ impl TomlLite {
         Ok(out)
     }
 
+    /// Read and parse `path`.
     pub fn load(path: &str) -> Result<TomlLite, String> {
         let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
         TomlLite::parse(&text)
     }
 
+    /// Look up `section.key`.
     pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
         self.sections.get(section).and_then(|s| s.get(key))
     }
 
+    /// `section.key` as a string, or `default`.
     pub fn str_or<'a>(&'a self, section: &str, key: &str, default: &'a str) -> &'a str {
         self.get(section, key).and_then(|v| v.as_str()).unwrap_or(default)
     }
 
+    /// `section.key` as an integer, or `default`.
     pub fn int_or(&self, section: &str, key: &str, default: i64) -> i64 {
         self.get(section, key).and_then(|v| v.as_int()).unwrap_or(default)
     }
 
+    /// `section.key` as a float, or `default`.
     pub fn float_or(&self, section: &str, key: &str, default: f64) -> f64 {
         self.get(section, key).and_then(|v| v.as_float()).unwrap_or(default)
     }
 
+    /// `section.key` as a boolean, or `default`.
     pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
         self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
     }

@@ -34,6 +34,7 @@ pub enum Scale {
 }
 
 impl Scale {
+    /// Parse a preset name: `quick | default | paper`.
     pub fn parse(s: &str) -> Option<Scale> {
         match s {
             "quick" => Some(Scale::Quick),
@@ -132,10 +133,15 @@ impl TrainSpec {
 // Table 2 — max gradient error vs pooled, per layer, over one epoch.
 // ---------------------------------------------------------------------------
 
+/// One layer's row of Table 2: max |grad_algo - grad_pooled| over an epoch.
 pub struct Table2Row {
+    /// Layer name (from `DistModel::entry_names`).
     pub layer: String,
+    /// Max deviation of the dSGD gradient.
     pub dsgd: f32,
+    /// Max deviation of the dAD gradient.
     pub dad: f32,
+    /// Max deviation of the edAD gradient.
     pub edad: f32,
 }
 
@@ -221,6 +227,7 @@ pub fn table2(scale: Scale) -> Vec<Table2Row> {
 // Figures 1 & 2 — equivalence curves (MLP / GRU).
 // ---------------------------------------------------------------------------
 
+/// Per-algorithm AUC curves + bandwidth for one figure.
 pub struct CurveSet {
     /// (algorithm name, per-epoch (mean, std) test AUC across folds).
     pub curves: Vec<(String, Vec<(f32, f32)>)>,
@@ -366,7 +373,9 @@ pub fn fig3_arabic(scale: Scale) -> CurveSet {
 // Figures 4 & 5 — effective-rank trajectories.
 // ---------------------------------------------------------------------------
 
+/// Effective-rank trajectories for one rank-dAD run.
 pub struct RankCurves {
+    /// Stats-entry (layer) names, aligned with `per_epoch` columns.
     pub entry_names: Vec<String>,
     /// per epoch, per entry: mean effective rank.
     pub per_epoch: Vec<Vec<f32>>,
@@ -464,10 +473,15 @@ pub fn fig5(scale: Scale) -> Vec<(&'static str, RankCurves)> {
 // Bandwidth table — measured ledger bytes vs the paper's Θ bounds.
 // ---------------------------------------------------------------------------
 
+/// One (algorithm, width) cell of the bandwidth table.
 pub struct BandwidthRow {
+    /// Algorithm name.
     pub algo: String,
+    /// Hidden width of the probe MLP.
     pub h: usize,
+    /// Ledger-measured site->aggregator bytes for one step.
     pub measured_up: u64,
+    /// The paper's Θ bound in bytes (raw f32 payload, no framing).
     pub theta_up: u64,
 }
 

@@ -1,8 +1,16 @@
-//! Layer-3 coordinator: the training loop over the simulated cluster, the
-//! experiment drivers for every paper table/figure, and update schedules.
+//! Layer-3 coordinator: the training loop over the cluster, the experiment
+//! drivers for every paper table/figure, update schedules, and the
+//! multi-process `serve`/`join` drivers.
 
 pub mod experiments;
+pub mod remote;
 pub mod trainer;
 
 pub use experiments::Scale;
-pub use trainer::{evaluate, fold_mean_auc, train, DataSource, Schedule, TrainLog, TrainSpec};
+pub use remote::{
+    ensure_remote_supported, join_training, serve_training, RemoteConfig, RemoteStep,
+};
+pub use trainer::{
+    build_task, epoch_plan, evaluate, fold_mean_auc, train, DataSource, Schedule, TrainLog,
+    TrainSpec, TrainTask,
+};

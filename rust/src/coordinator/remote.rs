@@ -1,0 +1,604 @@
+//! Multi-process training over a real transport: the `dad serve` /
+//! `dad join` drivers.
+//!
+//! The simulated trainer (`coordinator::trainer::train`) holds every
+//! replica in one process and hands the algorithms a god's-eye view. This
+//! module runs the *same* synchronized optimization with the aggregator and
+//! each site as separate OS processes exchanging [`crate::dist::wire`]
+//! frames over a [`Transport`] (in practice [`crate::dist::TcpAgg`] /
+//! [`crate::dist::TcpSite`]). Three invariants tie the two modes together,
+//! asserted by `tests/transport_e2e.rs`:
+//!
+//! 1. **Same math.** Both modes funnel through `nn::stats::concat_stats` +
+//!    `assemble_grads`, with sites concatenated in canonical id order, so a
+//!    TCP run reproduces the loopback run's loss trajectory bit-for-bit
+//!    (modulo nothing: the arithmetic is identical).
+//! 2. **Same schedule.** Every process reseeds `Rng::new(seed)` and replays
+//!    `trainer::epoch_plan`, so site i draws the same batches it would in
+//!    simulation without any index traffic on the wire.
+//! 3. **Same bytes.** Payload frames are encoded by the shared codec and
+//!    recorded per direction on the aggregator, so `dad serve`'s ledger
+//!    equals `dad train`'s for the same seed — the acceptance check for the
+//!    paper's bandwidth claims holding on a real wire.
+//!
+//! Control frames (`step-meta` uplink, `step-sync` downlink, the initial
+//! `config` broadcast) carry losses, row counts and parameter indices; they
+//! are protocol overhead and never enter the ledger. Currently `dad` and
+//! `dsgd` are wired for remote execution; the remaining algorithms run
+//! loopback-only (see `ensure_remote_supported`).
+
+use std::io;
+
+use crate::algos::AlgoSpec;
+use crate::coordinator::trainer::{
+    epoch_plan, evaluate, DataSource, EpochLog, Schedule, TrainLog, TrainSpec,
+};
+use crate::dist::wire::{Body, ByteReader, ByteWriter, Frame};
+use crate::dist::{Direction, Ledger, Transport};
+use crate::nn::model::{Batch, DistModel};
+use crate::nn::stats::{assemble_grads, concat_stats, StatsEntry};
+use crate::nn::Adam;
+use crate::tensor::{Matrix, Rng, Workspace};
+
+/// Result of one synchronized remote step, as seen from one endpoint.
+/// `grads` is identical on every endpoint (the dAD invariant); the byte
+/// counters cover only the traffic this endpoint's ledger observed — the
+/// aggregator sees everything, a site sees its own uplink plus the shared
+/// broadcast.
+pub struct RemoteStep {
+    /// Batch-size-weighted global mean training loss for the step.
+    pub loss: f32,
+    /// The synchronized global gradient (aligned with the param list).
+    pub grads: Vec<Matrix>,
+    /// Site->aggregator payload bytes recorded locally this step.
+    pub bytes_up: u64,
+    /// Aggregator->site payload bytes recorded locally this step.
+    pub bytes_down: u64,
+}
+
+/// Everything a joining site needs to reconstruct the run: training spec,
+/// dataset name, and scale preset. Broadcast once, right after the
+/// transport handshake, as the `config` control frame.
+#[derive(Clone, Debug)]
+pub struct RemoteConfig {
+    /// The run's training specification (algorithm, sites, epochs, ...).
+    pub spec: TrainSpec,
+    /// Dataset name as `trainer::build_task` understands it.
+    pub dataset: String,
+    /// Scale preset string ("quick" | "default" | "paper").
+    pub scale: String,
+}
+
+impl RemoteConfig {
+    fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.push_str(&self.spec.algo.name());
+        w.push_str(&self.dataset);
+        w.push_str(&self.scale);
+        w.push_u32(self.spec.n_sites as u32);
+        w.push_u32(self.spec.batch_per_site as u32);
+        w.push_u32(self.spec.epochs as u32);
+        w.push_f32(self.spec.lr);
+        w.push_u64(self.spec.seed);
+        w.finish()
+    }
+
+    fn decode(body: &[u8]) -> io::Result<RemoteConfig> {
+        let mut r = ByteReader::new(body);
+        let algo_s = r.read_str()?;
+        let dataset = r.read_str()?;
+        let scale = r.read_str()?;
+        let n_sites = r.read_u32()? as usize;
+        let batch_per_site = r.read_u32()? as usize;
+        let epochs = r.read_u32()? as usize;
+        let lr = r.read_f32()?;
+        let seed = r.read_u64()?;
+        let algo = AlgoSpec::parse(&algo_s)
+            .ok_or_else(|| proto(format!("unknown algo {algo_s:?} in config frame")))?;
+        Ok(RemoteConfig {
+            spec: TrainSpec {
+                algo,
+                n_sites,
+                batch_per_site,
+                epochs,
+                lr,
+                seed,
+                schedule: Schedule::EveryBatch,
+            },
+            dataset,
+            scale,
+        })
+    }
+
+    /// Aggregator side: broadcast this config to every connected site.
+    pub fn send(&self, t: &mut dyn Transport) -> io::Result<()> {
+        t.ship_control(Direction::AggToSite, "config", &self.encode())?;
+        Ok(())
+    }
+
+    /// Site side: block for the aggregator's config broadcast.
+    pub fn recv(t: &mut dyn Transport) -> io::Result<RemoteConfig> {
+        let body = expect_ctrl(t.recv_broadcast()?, "config")?;
+        RemoteConfig::decode(&body)
+    }
+}
+
+/// Per-step uplink metadata: the site's loss/rows plus the parameter-index
+/// layout of its stats entries (so the aggregator never needs a model).
+struct StepMeta {
+    loss: f32,
+    rows: u32,
+    /// Per entry: (weight param index, bias param index or u32::MAX).
+    entries: Vec<(u32, u32)>,
+    /// Param indices of direct (non-outer-product) gradients.
+    direct_idx: Vec<u32>,
+}
+
+impl StepMeta {
+    fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.push_f32(self.loss);
+        w.push_u32(self.rows);
+        w.push_u16(self.entries.len() as u16);
+        for &(wi, bi) in &self.entries {
+            w.push_u32(wi);
+            w.push_u32(bi);
+        }
+        w.push_u16(self.direct_idx.len() as u16);
+        for &i in &self.direct_idx {
+            w.push_u32(i);
+        }
+        w.finish()
+    }
+
+    fn decode(body: &[u8]) -> io::Result<StepMeta> {
+        let mut r = ByteReader::new(body);
+        let loss = r.read_f32()?;
+        let rows = r.read_u32()?;
+        let n_entries = r.read_u16()? as usize;
+        let mut entries = Vec::with_capacity(n_entries);
+        for _ in 0..n_entries {
+            let wi = r.read_u32()?;
+            let bi = r.read_u32()?;
+            entries.push((wi, bi));
+        }
+        let n_direct = r.read_u16()? as usize;
+        let mut direct_idx = Vec::with_capacity(n_direct);
+        for _ in 0..n_direct {
+            direct_idx.push(r.read_u32()?);
+        }
+        Ok(StepMeta { loss, rows, entries, direct_idx })
+    }
+}
+
+fn proto(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+fn expect_mats(f: Frame, want: &str) -> io::Result<Vec<Matrix>> {
+    match f.body {
+        Body::Mats(m) if f.tag == want => Ok(m),
+        _ => Err(proto(format!("expected payload frame {want:?}, got {:?}", f.tag))),
+    }
+}
+
+fn expect_ctrl(f: Frame, want: &str) -> io::Result<Vec<u8>> {
+    match f.body {
+        Body::Control(b) if f.tag == want => Ok(b),
+        _ => Err(proto(format!("expected control frame {want:?}, got {:?}", f.tag))),
+    }
+}
+
+fn one_mat(mats: Vec<Matrix>) -> io::Result<Matrix> {
+    let mut mats = mats;
+    if mats.len() != 1 {
+        return Err(proto(format!("expected exactly 1 matrix, got {}", mats.len())));
+    }
+    Ok(mats.pop().unwrap())
+}
+
+fn dirs(l: &Ledger) -> (u64, u64) {
+    (l.total_dir(Direction::SiteToAgg), l.total_dir(Direction::AggToSite))
+}
+
+/// Ship a payload frame and record its serialized bytes.
+fn ship(
+    t: &mut dyn Transport,
+    ledger: &mut Ledger,
+    dir: Direction,
+    tag: &str,
+    mats: &[&Matrix],
+) -> io::Result<()> {
+    let n = t.ship(dir, tag, mats)?;
+    ledger.record(tag, dir, n);
+    Ok(())
+}
+
+/// Receive one broadcast frame (site side), recording payload bytes.
+fn recv_down(t: &mut dyn Transport, ledger: &mut Ledger, want: &str) -> io::Result<Vec<Matrix>> {
+    let f = t.recv_broadcast()?;
+    if matches!(f.body, Body::Mats(_)) {
+        ledger.record(&f.tag, Direction::AggToSite, f.wire_len());
+    }
+    expect_mats(f, want)
+}
+
+/// Receive one uplink frame from `site` (aggregator side), recording
+/// payload bytes.
+fn recv_up(
+    t: &mut dyn Transport,
+    ledger: &mut Ledger,
+    site: usize,
+    want: &str,
+) -> io::Result<Vec<Matrix>> {
+    let f = t.recv_from_site(site)?;
+    if matches!(f.body, Body::Mats(_)) {
+        ledger.record(&f.tag, Direction::SiteToAgg, f.wire_len());
+    }
+    expect_mats(f, want)
+}
+
+// ---------------------------------------------------------------------------
+// dAD over the wire (Algorithm 1, star topology)
+// ---------------------------------------------------------------------------
+
+/// Site half of one remote dAD step: compute local statistics, ship
+/// per-entry (A, Δ) frames up, receive the concatenated (Â, Δ̂) broadcast,
+/// and assemble the exact global gradient locally.
+pub fn dad_site_step<M: DistModel>(
+    t: &mut dyn Transport,
+    ledger: &mut Ledger,
+    model: &M,
+    batch: &Batch,
+    ws: &mut Workspace,
+) -> io::Result<RemoteStep> {
+    let (up0, down0) = dirs(ledger);
+    let stats = model.local_stats_ws(batch, ws);
+    let rows = stats.entries.last().expect("no stats entries").d.rows();
+    let meta = StepMeta {
+        loss: stats.loss,
+        rows: rows as u32,
+        entries: stats
+            .entries
+            .iter()
+            .map(|e| (e.w_idx as u32, e.b_idx.map(|b| b as u32).unwrap_or(u32::MAX)))
+            .collect(),
+        direct_idx: stats.direct.iter().map(|&(i, _)| i as u32).collect(),
+    };
+    t.ship_control(Direction::SiteToAgg, "step-meta", &meta.encode())?;
+    for e in &stats.entries {
+        ship(t, ledger, Direction::SiteToAgg, "acts", &[&e.a])?;
+        ship(t, ledger, Direction::SiteToAgg, "deltas", &[&e.d])?;
+    }
+    if !stats.direct.is_empty() {
+        let refs: Vec<&Matrix> = stats.direct.iter().map(|(_, g)| g).collect();
+        ship(t, ledger, Direction::SiteToAgg, "direct-grad", &refs)?;
+    }
+
+    let sync = expect_ctrl(t.recv_broadcast()?, "step-sync")?;
+    let mut rd = ByteReader::new(&sync);
+    let total_rows = rd.read_u32()? as usize;
+    let loss = rd.read_f32()?;
+    let scale = 1.0 / total_rows as f32;
+    let mut cat: Vec<StatsEntry> = Vec::with_capacity(stats.entries.len());
+    for e in &stats.entries {
+        let a = one_mat(recv_down(t, ledger, "acts")?)?;
+        let d = one_mat(recv_down(t, ledger, "deltas")?)?;
+        cat.push(StatsEntry { w_idx: e.w_idx, b_idx: e.b_idx, a, d });
+    }
+    let direct: Vec<(usize, Matrix)> = if stats.direct.is_empty() {
+        vec![]
+    } else {
+        let mats = recv_down(t, ledger, "direct-grad")?;
+        if mats.len() != stats.direct.len() {
+            return Err(proto("direct-grad broadcast arity mismatch".into()));
+        }
+        stats.direct.iter().map(|&(i, _)| i).zip(mats).collect()
+    };
+    let shapes = model.param_shapes();
+    let grads = assemble_grads(&shapes, &cat, &direct, scale, 1.0);
+    let (up1, down1) = dirs(ledger);
+    Ok(RemoteStep { loss, grads, bytes_up: up1 - up0, bytes_down: down1 - down0 })
+}
+
+/// Aggregator half of one remote dAD step: collect every site's (A, Δ)
+/// stacks, vertcat in site order, broadcast the concatenation, and return
+/// the same global gradient the sites assemble.
+pub fn dad_agg_step(
+    t: &mut dyn Transport,
+    ledger: &mut Ledger,
+    shapes: &[(usize, usize)],
+) -> io::Result<RemoteStep> {
+    let (up0, down0) = dirs(ledger);
+    let n_sites = t.n_sites();
+    let mut metas: Vec<StepMeta> = Vec::with_capacity(n_sites);
+    let mut per_site: Vec<Vec<StatsEntry>> = Vec::with_capacity(n_sites);
+    let mut per_site_direct: Vec<Vec<Matrix>> = Vec::with_capacity(n_sites);
+    for site in 0..n_sites {
+        let meta = StepMeta::decode(&expect_ctrl(t.recv_from_site(site)?, "step-meta")?)?;
+        let mut entries = Vec::with_capacity(meta.entries.len());
+        for &(w_idx, b_idx) in &meta.entries {
+            let a = one_mat(recv_up(t, ledger, site, "acts")?)?;
+            let d = one_mat(recv_up(t, ledger, site, "deltas")?)?;
+            entries.push(StatsEntry {
+                w_idx: w_idx as usize,
+                b_idx: (b_idx != u32::MAX).then_some(b_idx as usize),
+                a,
+                d,
+            });
+        }
+        let direct = if meta.direct_idx.is_empty() {
+            vec![]
+        } else {
+            let mats = recv_up(t, ledger, site, "direct-grad")?;
+            if mats.len() != meta.direct_idx.len() {
+                return Err(proto(format!("site {site} direct-grad arity mismatch")));
+            }
+            mats
+        };
+        metas.push(meta);
+        per_site.push(entries);
+        per_site_direct.push(direct);
+    }
+    let total_rows: usize = metas.iter().map(|m| m.rows as usize).sum();
+    let scale = 1.0 / total_rows as f32;
+    let loss = weighted_loss_of(&metas, total_rows);
+
+    let mut w = ByteWriter::new();
+    w.push_u32(total_rows as u32);
+    w.push_f32(loss);
+    t.ship_control(Direction::AggToSite, "step-sync", &w.finish())?;
+
+    let entry_refs: Vec<&[StatsEntry]> = per_site.iter().map(|e| &e[..]).collect();
+    let cat = concat_stats(&entry_refs);
+    for e in &cat {
+        ship(t, ledger, Direction::AggToSite, "acts", &[&e.a])?;
+        ship(t, ledger, Direction::AggToSite, "deltas", &[&e.d])?;
+    }
+    let direct: Vec<(usize, Matrix)> = if metas[0].direct_idx.is_empty() {
+        vec![]
+    } else {
+        let mut out = Vec::with_capacity(metas[0].direct_idx.len());
+        for (di, &idx) in metas[0].direct_idx.iter().enumerate() {
+            let mut sum = per_site_direct[0][di].clone();
+            for s in &per_site_direct[1..] {
+                sum.axpy(1.0, &s[di]);
+            }
+            sum.scale_inplace(scale);
+            out.push((idx as usize, sum));
+        }
+        let refs: Vec<&Matrix> = out.iter().map(|(_, g)| g).collect();
+        ship(t, ledger, Direction::AggToSite, "direct-grad", &refs)?;
+        out
+    };
+    let grads = assemble_grads(shapes, &cat, &direct, scale, 1.0);
+    let (up1, down1) = dirs(ledger);
+    Ok(RemoteStep { loss, grads, bytes_up: up1 - up0, bytes_down: down1 - down0 })
+}
+
+// ---------------------------------------------------------------------------
+// dSGD over the wire (gradient averaging baseline)
+// ---------------------------------------------------------------------------
+
+/// Site half of one remote dSGD step: exchange row counts, ship the full
+/// scaled local gradient, receive the global mean.
+pub fn dsgd_site_step<M: DistModel>(
+    t: &mut dyn Transport,
+    ledger: &mut Ledger,
+    model: &M,
+    batch: &Batch,
+    ws: &mut Workspace,
+) -> io::Result<RemoteStep> {
+    let (up0, down0) = dirs(ledger);
+    let stats = model.local_stats_ws(batch, ws);
+    let rows = stats.entries.last().expect("no stats entries").d.rows();
+    let meta =
+        StepMeta { loss: stats.loss, rows: rows as u32, entries: vec![], direct_idx: vec![] };
+    t.ship_control(Direction::SiteToAgg, "step-meta", &meta.encode())?;
+    // The gradient scale needs the *global* row count, so the sync frame
+    // comes back before the gradient goes up (unlike dAD, where scaling
+    // happens after the broadcast).
+    let sync = expect_ctrl(t.recv_broadcast()?, "step-sync")?;
+    let mut rd = ByteReader::new(&sync);
+    let total_rows = rd.read_u32()? as usize;
+    let loss = rd.read_f32()?;
+    let scale = 1.0 / total_rows as f32;
+    let shapes = model.param_shapes();
+    let local = stats.assemble_grads(&shapes, scale, scale);
+    let refs: Vec<&Matrix> = local.iter().collect();
+    ship(t, ledger, Direction::SiteToAgg, "grad", &refs)?;
+    let grads = recv_down(t, ledger, "grad")?;
+    if grads.len() != shapes.len() {
+        return Err(proto("grad broadcast arity mismatch".into()));
+    }
+    let (up1, down1) = dirs(ledger);
+    Ok(RemoteStep { loss, grads, bytes_up: up1 - up0, bytes_down: down1 - down0 })
+}
+
+/// Aggregator half of one remote dSGD step: sum the per-site scaled
+/// gradients (their sum is the global mean) and broadcast the result.
+pub fn dsgd_agg_step(
+    t: &mut dyn Transport,
+    ledger: &mut Ledger,
+    shapes: &[(usize, usize)],
+) -> io::Result<RemoteStep> {
+    let (up0, down0) = dirs(ledger);
+    let n_sites = t.n_sites();
+    let mut metas: Vec<StepMeta> = Vec::with_capacity(n_sites);
+    for site in 0..n_sites {
+        metas.push(StepMeta::decode(&expect_ctrl(t.recv_from_site(site)?, "step-meta")?)?);
+    }
+    let total_rows: usize = metas.iter().map(|m| m.rows as usize).sum();
+    let loss = weighted_loss_of(&metas, total_rows);
+    let mut w = ByteWriter::new();
+    w.push_u32(total_rows as u32);
+    w.push_f32(loss);
+    t.ship_control(Direction::AggToSite, "step-sync", &w.finish())?;
+
+    let mut acc: Option<Vec<Matrix>> = None;
+    for site in 0..n_sites {
+        let g = recv_up(t, ledger, site, "grad")?;
+        if g.len() != shapes.len() {
+            return Err(proto(format!("site {site} grad arity mismatch")));
+        }
+        acc = Some(match acc {
+            None => g,
+            Some(mut a) => {
+                for (x, y) in a.iter_mut().zip(&g) {
+                    x.axpy(1.0, y);
+                }
+                a
+            }
+        });
+    }
+    let grads = acc.expect("at least one site");
+    let refs: Vec<&Matrix> = grads.iter().collect();
+    ship(t, ledger, Direction::AggToSite, "grad", &refs)?;
+    let (up1, down1) = dirs(ledger);
+    Ok(RemoteStep { loss, grads, bytes_up: up1 - up0, bytes_down: down1 - down0 })
+}
+
+fn weighted_loss_of(metas: &[StepMeta], total_rows: usize) -> f32 {
+    let num: f64 = metas.iter().map(|m| m.loss as f64 * m.rows as f64).sum();
+    (num / total_rows.max(1) as f64) as f32
+}
+
+/// Which algorithms have a remote protocol. The rest run loopback-only for
+/// now; extending them is a matter of adding a `*_site_step`/`*_agg_step`
+/// pair above. `dad serve` calls this *before* binding so an unsupported
+/// spec fails on the operator's terminal instead of stranding join
+/// processes mid-handshake.
+pub fn ensure_remote_supported(spec: &TrainSpec) -> io::Result<()> {
+    if !matches!(spec.algo, AlgoSpec::Dad | AlgoSpec::Dsgd) {
+        return Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            format!(
+                "--algo {} is not wired over TCP yet; run it with `dad train` (loopback)",
+                spec.algo.name()
+            ),
+        ));
+    }
+    if spec.schedule != Schedule::EveryBatch {
+        return Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            "periodic sync schedules are loopback-only for now".to_string(),
+        ));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Full training loops
+// ---------------------------------------------------------------------------
+
+/// Aggregator training loop (`dad serve`): drive one remote step per batch,
+/// keep a model replica in lockstep for per-epoch evaluation, and log the
+/// ledger's per-direction byte deltas per epoch.
+///
+/// `shard_sizes` are the per-site shard lengths — the aggregator never sees
+/// data, but needs them to replay the deterministic batch schedule
+/// ([`epoch_plan`]) that fixes the per-epoch step count.
+pub fn serve_training<M: DistModel, D: DataSource>(
+    t: &mut dyn Transport,
+    ledger: &mut Ledger,
+    spec: &TrainSpec,
+    mut model: M,
+    shard_sizes: &[usize],
+    test: &D,
+) -> io::Result<TrainLog> {
+    ensure_remote_supported(spec)?;
+    let shapes = model.param_shapes();
+    let mut params: Vec<Matrix> = model.params().into_iter().cloned().collect();
+    let mut opt = Adam::new(spec.lr, &shapes);
+    let mut rng = Rng::new(spec.seed);
+    let entry_names = model.entry_names();
+    let mut epochs = Vec::with_capacity(spec.epochs);
+    for epoch in 0..spec.epochs {
+        let plan = epoch_plan(shard_sizes, spec.batch_per_site, &mut rng);
+        let n_steps = plan.iter().map(|i| i.n_batches()).min().unwrap_or(0);
+        let (up0, down0) = dirs(ledger);
+        let mut loss_sum = 0.0f64;
+        for _ in 0..n_steps {
+            let out = match spec.algo {
+                AlgoSpec::Dad => dad_agg_step(t, ledger, &shapes)?,
+                AlgoSpec::Dsgd => dsgd_agg_step(t, ledger, &shapes)?,
+                _ => unreachable!("guarded by ensure_remote_supported"),
+            };
+            loss_sum += out.loss as f64;
+            opt.step(&mut params, &out.grads);
+            model.set_params(&params);
+        }
+        let (test_auc, test_acc) = evaluate(&model, test);
+        let (up1, down1) = dirs(ledger);
+        epochs.push(EpochLog {
+            epoch,
+            train_loss: (loss_sum / n_steps.max(1) as f64) as f32,
+            test_auc,
+            test_acc,
+            bytes_up: up1 - up0,
+            bytes_down: down1 - down0,
+            mean_eff_rank: vec![],
+        });
+    }
+    Ok(TrainLog { algo: spec.algo.name(), epochs, sim_time_s: 0.0, entry_names })
+}
+
+/// Site training loop (`dad join`): replay the deterministic batch schedule
+/// for this site's shard, run one remote site step per batch, and apply the
+/// synchronized gradient locally — the replica never diverges from the
+/// aggregator's. No evaluation happens on sites (`test_auc`/`test_acc` are
+/// NaN in the returned log); the serving process owns reporting.
+pub fn join_training<M: DistModel, D: DataSource>(
+    t: &mut dyn Transport,
+    ledger: &mut Ledger,
+    spec: &TrainSpec,
+    mut model: M,
+    data: &D,
+    shards: &[Vec<usize>],
+    site_id: usize,
+) -> io::Result<TrainLog> {
+    ensure_remote_supported(spec)?;
+    if site_id >= shards.len() {
+        return Err(proto(format!("site id {site_id} out of range for {} shards", shards.len())));
+    }
+    let shapes = model.param_shapes();
+    let mut params: Vec<Matrix> = model.params().into_iter().cloned().collect();
+    let mut opt = Adam::new(spec.lr, &shapes);
+    let mut rng = Rng::new(spec.seed);
+    let mut ws = Workspace::new();
+    let entry_names = model.entry_names();
+    let shard = &shards[site_id];
+    let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+    let mut epochs = Vec::with_capacity(spec.epochs);
+    for epoch in 0..spec.epochs {
+        let mut plan = epoch_plan(&sizes, spec.batch_per_site, &mut rng);
+        let n_steps = plan.iter().map(|i| i.n_batches()).min().unwrap_or(0);
+        let it = &mut plan[site_id];
+        let (up0, down0) = dirs(ledger);
+        let mut loss_sum = 0.0f64;
+        for _ in 0..n_steps {
+            let local = it.next().expect("batch iterator exhausted");
+            let idx: Vec<usize> = local.iter().map(|&i| shard[i]).collect();
+            let batch = data.make_batch(&idx);
+            let out = match spec.algo {
+                AlgoSpec::Dad => dad_site_step(t, ledger, &model, &batch, &mut ws)?,
+                AlgoSpec::Dsgd => dsgd_site_step(t, ledger, &model, &batch, &mut ws)?,
+                _ => unreachable!("guarded by ensure_remote_supported"),
+            };
+            loss_sum += out.loss as f64;
+            opt.step(&mut params, &out.grads);
+            model.set_params(&params);
+        }
+        let (up1, down1) = dirs(ledger);
+        epochs.push(EpochLog {
+            epoch,
+            train_loss: (loss_sum / n_steps.max(1) as f64) as f32,
+            test_auc: f32::NAN,
+            test_acc: f32::NAN,
+            bytes_up: up1 - up0,
+            bytes_down: down1 - down0,
+            mean_eff_rank: vec![],
+        });
+    }
+    Ok(TrainLog { algo: spec.algo.name(), epochs, sim_time_s: 0.0, entry_names })
+}

@@ -7,11 +7,14 @@
 //! Figures 1-6; `kfold_mean` aggregates the 5-fold averages the paper plots.
 
 use crate::algos::AlgoSpec;
-use crate::data::BatchIter;
+use crate::coordinator::experiments::Scale;
+use crate::data::{
+    arabic_digits_like, mnist_like, split_by_label, BatchIter, DenseDataset, SeqDataset,
+};
 use crate::dist::Cluster;
 use crate::metrics::{accuracy, multiclass_auc};
 use crate::nn::model::{Batch, DistModel};
-use crate::nn::Adam;
+use crate::nn::{Activation, Adam, GruClassifier, Mlp};
 use crate::tensor::{Matrix, Rng};
 
 /// Synchronization schedule (section 2's "update schedules are orthogonal
@@ -29,12 +32,19 @@ pub enum Schedule {
 /// Training configuration for one run.
 #[derive(Clone, Debug)]
 pub struct TrainSpec {
+    /// Which algorithm synchronizes the sites.
     pub algo: AlgoSpec,
+    /// Number of sites (model replicas / join processes).
     pub n_sites: usize,
+    /// Mini-batch size per site.
     pub batch_per_site: usize,
+    /// Training epochs.
     pub epochs: usize,
+    /// Adam learning rate.
     pub lr: f32,
+    /// Seed for data order (and, via `build_task`, the dataset itself).
     pub seed: u64,
+    /// Synchronization schedule.
     pub schedule: Schedule,
 }
 
@@ -56,11 +66,17 @@ impl Default for TrainSpec {
 /// Per-epoch telemetry.
 #[derive(Clone, Debug)]
 pub struct EpochLog {
+    /// Epoch index (0-based).
     pub epoch: usize,
+    /// Mean training loss over the epoch's synchronized steps.
     pub train_loss: f32,
+    /// Macro one-vs-rest test AUC (NaN on `dad join` sites, which skip eval).
     pub test_auc: f32,
+    /// Test accuracy (NaN on `dad join` sites).
     pub test_acc: f32,
+    /// Site->aggregator payload bytes this epoch.
     pub bytes_up: u64,
+    /// Aggregator->site payload bytes this epoch.
     pub bytes_down: u64,
     /// Mean effective rank per stats entry (rank-dAD only; NaN otherwise).
     pub mean_eff_rank: Vec<f32>,
@@ -69,17 +85,24 @@ pub struct EpochLog {
 /// Full run log.
 #[derive(Clone, Debug)]
 pub struct TrainLog {
+    /// Algorithm name (`AlgoSpec::name`).
     pub algo: String,
+    /// One entry per epoch, in order.
     pub epochs: Vec<EpochLog>,
+    /// Simulated wire time under the cluster's `CostModel` (0 for real
+    /// TCP runs, where wall clock is the measurement).
     pub sim_time_s: f64,
+    /// Stats-entry (layer) names for rank telemetry.
     pub entry_names: Vec<String>,
 }
 
 impl TrainLog {
+    /// Last epoch's test AUC (0.5 when no epochs ran).
     pub fn final_auc(&self) -> f32 {
         self.epochs.last().map(|e| e.test_auc).unwrap_or(0.5)
     }
 
+    /// Total payload bytes across all epochs and both directions.
     pub fn total_bytes(&self) -> u64 {
         self.epochs.iter().map(|e| e.bytes_up + e.bytes_down).sum()
     }
@@ -88,9 +111,13 @@ impl TrainLog {
 /// Anything that can produce batches from example indices (DenseDataset,
 /// SeqDataset — see `crate::data`).
 pub trait DataSource {
+    /// Number of examples available.
     fn len(&self) -> usize;
+    /// Assemble a batch from example indices.
     fn make_batch(&self, idx: &[usize]) -> Batch;
+    /// Class label per example.
     fn labels(&self) -> &[usize];
+    /// True when no examples are available.
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -120,6 +147,105 @@ impl DataSource for crate::data::SeqDataset {
     }
 }
 
+/// Build the per-site batch iterators for one epoch, consuming `rng`
+/// deterministically (one permutation per shard, in site order).
+///
+/// This is the *entire* coupling between the batch schedule and the
+/// process topology: the simulated trainer, a `dad serve` aggregator and
+/// every `dad join` site call this with the same seed-derived `rng` stream
+/// and shard sizes, so they agree on every batch of every epoch without a
+/// single index crossing the wire.
+pub fn epoch_plan(shard_sizes: &[usize], batch: usize, rng: &mut Rng) -> Vec<BatchIter> {
+    shard_sizes.iter().map(|&n| BatchIter::new(n, batch, rng)).collect()
+}
+
+/// A fully-constructed training task: datasets, non-IID shards, and a
+/// seeded model, as built by [`build_task`]. The enum splits on batch
+/// layout (dense features vs. sequences) because the two arms carry
+/// different model types.
+pub enum TrainTask {
+    /// Dense-feature dataset with an MLP (the paper's MNIST setup).
+    Dense {
+        /// Training split.
+        train_ds: DenseDataset,
+        /// Held-out evaluation split.
+        test_ds: DenseDataset,
+        /// Per-site example indices (hard non-IID label split).
+        shards: Vec<Vec<usize>>,
+        /// Seeded model (identical for every process given the same args).
+        model: Mlp,
+    },
+    /// Sequence dataset with a GRU classifier (the paper's Arabic Digits
+    /// setup).
+    Seq {
+        /// Training split.
+        train_ds: SeqDataset,
+        /// Held-out evaluation split.
+        test_ds: SeqDataset,
+        /// Per-site example indices (hard non-IID label split).
+        shards: Vec<Vec<usize>>,
+        /// Seeded model (identical for every process given the same args).
+        model: GruClassifier,
+    },
+}
+
+/// Deterministically construct dataset + shards + model for a named task.
+///
+/// Shared by `dad train` (one process) and `dad serve`/`dad join` (many
+/// processes): every process that calls this with the same arguments gets
+/// bit-identical data and parameters, which is what lets the multi-process
+/// mode ship only statistics — never data or weights — and still stay in
+/// lockstep with the simulation.
+pub fn build_task(
+    dataset: &str,
+    scale: Scale,
+    n_sites: usize,
+    seed: u64,
+) -> Result<TrainTask, String> {
+    match dataset {
+        "mnist" => {
+            let (n_train, n_test) = match scale {
+                Scale::Quick => (400, 120),
+                Scale::Default => (2000, 500),
+                Scale::Paper => (60_000, 10_000),
+            };
+            let mut rng = Rng::new(seed);
+            let full = mnist_like(n_train + n_test, &mut rng);
+            let train_ds = full.subset(&(0..n_train).collect::<Vec<_>>());
+            let test_ds = full.subset(&(n_train..n_train + n_test).collect::<Vec<_>>());
+            let shards = split_by_label(&train_ds.labels, 10, n_sites);
+            let dims: Vec<usize> = if scale == Scale::Quick {
+                vec![784, 128, 128, 10]
+            } else {
+                vec![784, 1024, 1024, 10]
+            };
+            let mut mrng = Rng::new(42);
+            let model = Mlp::new(&dims, &vec![Activation::Relu; dims.len() - 2], &mut mrng);
+            Ok(TrainTask::Dense { train_ds, test_ds, shards, model })
+        }
+        "arabic" => {
+            let (n_train, n_test) = match scale {
+                Scale::Quick => (240, 80),
+                Scale::Default => (600, 200),
+                Scale::Paper => (6600, 2200),
+            };
+            let mut rng = Rng::new(seed);
+            let full = arabic_digits_like(n_train + n_test, &mut rng);
+            let train_ds = full.subset(&(0..n_train).collect::<Vec<_>>());
+            let test_ds = full.subset(&(n_train..n_train + n_test).collect::<Vec<_>>());
+            let shards = split_by_label(&train_ds.labels, 10, n_sites);
+            let mut mrng = Rng::new(42);
+            let model = if scale == Scale::Quick {
+                GruClassifier::new(13, 32, &[64, 32], 10, &mut mrng)
+            } else {
+                GruClassifier::paper_uea(13, 10, &mut mrng)
+            };
+            Ok(TrainTask::Seq { train_ds, test_ds, shards, model })
+        }
+        other => Err(format!("unknown dataset {other:?} (mnist|arabic)")),
+    }
+}
+
 /// Train `model` under `spec` on per-site index shards of `data`,
 /// evaluating on `test` after every epoch.
 pub fn train<M: DistModel + Clone, D: DataSource>(
@@ -145,10 +271,8 @@ pub fn train<M: DistModel + Clone, D: DataSource>(
     for epoch in 0..spec.epochs {
         // Per-site shuffled batch iterators; lockstep over the minimum
         // number of batches (paper: equal shards, equal batch counts).
-        let mut iters: Vec<BatchIter> = shards
-            .iter()
-            .map(|s| BatchIter::new(s.len(), spec.batch_per_site, &mut rng))
-            .collect();
+        let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+        let mut iters = epoch_plan(&sizes, spec.batch_per_site, &mut rng);
         let n_steps = iters.iter().map(|i| i.n_batches()).min().unwrap_or(0);
         let mut loss_sum = 0.0f64;
         let mut bytes_up = 0u64;

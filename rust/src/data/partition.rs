@@ -52,10 +52,13 @@ pub struct BatchIter {
 }
 
 impl BatchIter {
+    /// Fresh shuffled iterator over `n` examples in `batch`-size chunks;
+    /// consumes exactly one permutation from `rng`.
     pub fn new(n: usize, batch: usize, rng: &mut Rng) -> Self {
         BatchIter { order: rng.permutation(n), batch, cursor: 0 }
     }
 
+    /// Number of full batches this epoch will yield.
     pub fn n_batches(&self) -> usize {
         self.order.len() / self.batch
     }

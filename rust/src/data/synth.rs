@@ -13,9 +13,13 @@ use crate::tensor::{Matrix, Rng};
 /// Dense classification dataset (the MNIST analog).
 #[derive(Clone)]
 pub struct DenseDataset {
+    /// Feature matrix, one example per row.
     pub x: Matrix,
+    /// Class label per example.
     pub labels: Vec<usize>,
+    /// Number of classes.
     pub classes: usize,
+    /// Dataset name for logs/CSVs.
     pub name: &'static str,
 }
 
@@ -25,10 +29,15 @@ pub struct DenseDataset {
 pub struct SeqDataset {
     /// xs[i] is example i's (T, c_in) trajectory.
     pub xs: Vec<Matrix>,
+    /// Class label per example.
     pub labels: Vec<usize>,
+    /// Number of classes.
     pub classes: usize,
+    /// Timesteps per trajectory.
     pub seq_len: usize,
+    /// Input channels per timestep.
     pub channels: usize,
+    /// Dataset name for logs/CSVs.
     pub name: &'static str,
 }
 
@@ -156,10 +165,12 @@ pub fn pems_sf_like(n: usize, rng: &mut Rng) -> SeqDataset {
 }
 
 impl DenseDataset {
+    /// Number of examples.
     pub fn len(&self) -> usize {
         self.labels.len()
     }
 
+    /// True when the dataset holds no examples.
     pub fn is_empty(&self) -> bool {
         self.labels.is_empty()
     }
@@ -183,15 +194,17 @@ impl DenseDataset {
 }
 
 impl SeqDataset {
+    /// Number of examples.
     pub fn len(&self) -> usize {
         self.labels.len()
     }
 
+    /// True when the dataset holds no examples.
     pub fn is_empty(&self) -> bool {
         self.labels.is_empty()
     }
 
-    /// Assemble a batch: xs[t] is (|idx|, channels).
+    /// Assemble a batch: `xs[t]` is (|idx|, channels).
     pub fn batch(&self, idx: &[usize]) -> Batch {
         let xs: Vec<Matrix> = (0..self.seq_len)
             .map(|t| {
@@ -206,6 +219,7 @@ impl SeqDataset {
         Batch::Seq { xs, y: one_hot(&labels, self.classes) }
     }
 
+    /// Subset view by indices (k-fold splits, site shards).
     pub fn subset(&self, idx: &[usize]) -> SeqDataset {
         SeqDataset {
             xs: idx.iter().map(|&i| self.xs[i].clone()).collect(),

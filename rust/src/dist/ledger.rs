@@ -25,6 +25,7 @@ pub struct Ledger {
 }
 
 impl Ledger {
+    /// Empty ledger.
     pub fn new() -> Self {
         Ledger { entries: Vec::new() }
     }

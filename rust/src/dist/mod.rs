@@ -1,22 +1,31 @@
-//! The simulated multi-site cluster: model replicas, the byte ledger, and a
-//! wire-cost model turning ledger traffic into simulated seconds.
+//! The multi-site cluster: model replicas, the byte ledger, a wire-cost
+//! model, and the pluggable transport the frames move through.
 //!
 //! The paper's setting is S hospital-style sites that may never pool data;
 //! this module gives the algorithms in `crate::algos` a topology to talk
-//! over while keeping everything in-process and deterministic. Three link
-//! primitives cover every algorithm:
+//! over. Three link primitives cover every algorithm:
 //!
-//!   `send_to_agg`  one site -> aggregator          (star uplink)
-//!   `broadcast`    aggregator -> all sites, once   (star shared down-link)
-//!   `send_p2p`     one site -> each of S-1 peers   (section 3.6)
+//! ```text
+//! send_to_agg   one site -> aggregator          (star uplink)
+//! broadcast     aggregator -> all sites, once   (star shared down-link)
+//! send_p2p      one site -> each of S-1 peers   (section 3.6)
+//! ```
 //!
-//! Every call records exact payload bytes in the [`Ledger`] and advances
-//! `sim_time_s` under the cluster's [`CostModel`]; the experiments compare
-//! the measured bytes against the paper's Θ bounds.
+//! Beneath the primitives sits the [`transport::Transport`] seam: every
+//! shipment is a [`wire`] frame, and the bytes recorded in the [`Ledger`]
+//! are the frame's *actual serialized size* — header, dimensions and f32
+//! body — not a `rows * cols * 4` estimate. The default backend is the
+//! in-process [`transport::Loopback`] (deterministic simulation, timed by
+//! the cluster's [`CostModel`]); `dad serve` / `dad join` run the same
+//! frames over the [`transport::tcp`] backend as separate OS processes,
+//! with identical ledger totals (asserted by `tests/transport_e2e.rs`).
 
 pub mod ledger;
+pub mod transport;
+pub mod wire;
 
 pub use ledger::{Direction, Ledger};
+pub use transport::{Loopback, TcpAgg, TcpAggListener, TcpSite, Transport};
 
 use std::cell::RefCell;
 
@@ -57,27 +66,36 @@ impl CostModel {
 /// shared references in `gather_local_stats` while only the workspace needs
 /// mutability.
 pub struct Site<M> {
+    /// Site index (0-based, canonical order everywhere).
     pub id: usize,
+    /// The site's model replica.
     pub model: M,
+    /// Reusable forward/backward scratch for this site.
     pub ws: RefCell<Workspace>,
 }
 
-/// The simulated cluster handed to every `DistAlgorithm::step`.
+/// The cluster handed to every `DistAlgorithm::step`: replicas, ledger,
+/// cost model, and the transport backend the frames ship through.
 pub struct Cluster<M> {
+    /// All site replicas, in canonical id order.
     pub sites: Vec<Site<M>>,
+    /// Exact per-(tag, direction) byte accounting.
     pub ledger: Ledger,
+    /// Wire timing model applied to every shipment.
     pub cost: CostModel,
     /// Simulated wall-clock spent on the wire so far.
     pub sim_time_s: f64,
     /// Synchronized steps taken (each `DistAlgorithm::step` calls
     /// `next_step` once).
     pub step: usize,
+    transport: Box<dyn Transport>,
 }
 
 impl<M> Cluster<M> {
     /// Build an S-site cluster of bit-identical replicas — the paper's
     /// "every site initializes with the same random seed" requirement,
-    /// realized by replicating one already-initialized model.
+    /// realized by replicating one already-initialized model. Uses the
+    /// loopback transport (the deterministic simulator).
     pub fn replicate(model: M, n_sites: usize) -> Self
     where
         M: Replicate,
@@ -94,6 +112,7 @@ impl<M> Cluster<M> {
             cost: CostModel::lan_10gbe(),
             sim_time_s: 0.0,
             step: 0,
+            transport: Box::new(Loopback::new(n_sites)),
         }
     }
 
@@ -103,6 +122,18 @@ impl<M> Cluster<M> {
         self
     }
 
+    /// Same cluster over a different transport backend.
+    pub fn with_transport(mut self, transport: Box<dyn Transport>) -> Self {
+        self.transport = transport;
+        self
+    }
+
+    /// The transport backend the link primitives ship through.
+    pub fn transport(&self) -> &dyn Transport {
+        self.transport.as_ref()
+    }
+
+    /// Number of sites in the cluster.
     pub fn n_sites(&self) -> usize {
         self.sites.len()
     }
@@ -112,13 +143,12 @@ impl<M> Cluster<M> {
         self.step += 1;
     }
 
-    fn payload_bytes(payload: &[&Matrix]) -> u64 {
-        payload.iter().map(|m| m.wire_bytes()).sum()
-    }
-
     /// One site ships `payload` up to the aggregator.
     pub fn send_to_agg(&mut self, tag: &str, payload: &[&Matrix]) {
-        let bytes = Self::payload_bytes(payload);
+        let bytes = self
+            .transport
+            .ship(Direction::SiteToAgg, tag, payload)
+            .expect("transport failed on the site->aggregator link");
         self.ledger.record(tag, Direction::SiteToAgg, bytes);
         self.sim_time_s += self.cost.time_for(bytes, 1);
     }
@@ -128,7 +158,10 @@ impl<M> Cluster<M> {
     /// not scale with S — which is exactly why p2p dAD halves the S = 2
     /// star total (no aggregator echo) rather than merely matching it.
     pub fn broadcast(&mut self, tag: &str, payload: &[&Matrix]) {
-        let bytes = Self::payload_bytes(payload);
+        let bytes = self
+            .transport
+            .ship(Direction::AggToSite, tag, payload)
+            .expect("transport failed on the aggregator->site link");
         self.ledger.record(tag, Direction::AggToSite, bytes);
         self.sim_time_s += self.cost.time_for(bytes, 1);
     }
@@ -137,10 +170,13 @@ impl<M> Cluster<M> {
     /// Bytes scale with the peer count; simulated time does not, because the
     /// S-1 unicasts leave on independent links in parallel.
     pub fn send_p2p(&mut self, tag: &str, payload: &[&Matrix]) {
-        let per_peer = Self::payload_bytes(payload);
-        let peers = self.n_sites().saturating_sub(1) as u64;
-        self.ledger.record(tag, Direction::PeerToPeer, per_peer * peers);
-        self.sim_time_s += self.cost.time_for(per_peer, 1);
+        let total = self
+            .transport
+            .ship(Direction::PeerToPeer, tag, payload)
+            .expect("transport failed on the peer-to-peer links");
+        let peers = self.n_sites().saturating_sub(1).max(1) as u64;
+        self.ledger.record(tag, Direction::PeerToPeer, total);
+        self.sim_time_s += self.cost.time_for(total / peers, 1);
     }
 }
 
@@ -162,6 +198,8 @@ mod tests {
         let snapshot: Vec<Matrix> = m.params().into_iter().cloned().collect();
         let c = Cluster::replicate(m, 3);
         assert_eq!(c.n_sites(), 3);
+        assert_eq!(c.transport().name(), "loopback");
+        assert_eq!(c.transport().n_sites(), 3);
         for (i, site) in c.sites.iter().enumerate() {
             assert_eq!(site.id, i);
             for (p, s) in site.model.params().into_iter().zip(&snapshot) {
@@ -171,19 +209,23 @@ mod tests {
     }
 
     #[test]
-    fn link_primitives_account_bytes_and_time() {
+    fn link_primitives_account_serialized_bytes_and_time() {
         let mut c = Cluster::replicate(mlp(), 4);
-        let m = Matrix::zeros(8, 16); // 512 B
+        let m = Matrix::zeros(8, 16); // 512 raw f32 bytes
+        let one = wire::payload_wire_len("x", &[&m]);
+        // Frames carry a fixed header on top of the f32 body.
+        assert!(one > m.wire_bytes() && one < m.wire_bytes() + 64);
         c.send_to_agg("x", &[&m]);
-        assert_eq!(c.ledger.total_dir(Direction::SiteToAgg), 512);
+        assert_eq!(c.ledger.total_dir(Direction::SiteToAgg), one);
+        let two = wire::payload_wire_len("x", &[&m, &m]);
         c.broadcast("x", &[&m, &m]);
         // Broadcast counted once, not per receiving site.
-        assert_eq!(c.ledger.total_dir(Direction::AggToSite), 1024);
+        assert_eq!(c.ledger.total_dir(Direction::AggToSite), two);
         c.send_p2p("x", &[&m]);
         // Peer exchange counted once per receiving peer (S - 1 = 3).
-        assert_eq!(c.ledger.total_dir(Direction::PeerToPeer), 3 * 512);
+        assert_eq!(c.ledger.total_dir(Direction::PeerToPeer), 3 * one);
         assert!(c.sim_time_s > 0.0);
-        assert_eq!(c.ledger.total(), 512 + 1024 + 3 * 512);
+        assert_eq!(c.ledger.total(), one + two + 3 * one);
     }
 
     #[test]

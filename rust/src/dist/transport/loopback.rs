@@ -1,0 +1,76 @@
+//! The in-memory loopback backend: the deterministic simulator's wire.
+//!
+//! All sites live in one process, so payload *delivery* is implicit — the
+//! algorithms already hold every replica's statistics. What the loopback
+//! models is the *cost*: each shipment reports the exact bytes the frame
+//! codec would put on a socket ([`crate::dist::wire::payload_wire_len`]),
+//! so a simulated run and a TCP multi-process run with the same seed record
+//! identical ledgers (asserted by `tests/transport_e2e.rs`). Simulated
+//! latency/bandwidth timing stays in the cluster layer's `CostModel`.
+
+use std::io;
+
+use super::Transport;
+use crate::dist::ledger::Direction;
+use crate::dist::wire;
+use crate::tensor::Matrix;
+
+/// Byte-accounting loopback endpoint for an `n_sites` fabric.
+#[derive(Debug, Clone)]
+pub struct Loopback {
+    n_sites: usize,
+}
+
+impl Loopback {
+    /// A loopback fabric connecting `n_sites` simulated sites.
+    pub fn new(n_sites: usize) -> Self {
+        Loopback { n_sites }
+    }
+
+    /// Peer-to-peer shipments fan out to the other `n_sites - 1` replicas;
+    /// star links count once.
+    fn fanout(&self, dir: Direction) -> u64 {
+        match dir {
+            Direction::PeerToPeer => self.n_sites.saturating_sub(1) as u64,
+            Direction::SiteToAgg | Direction::AggToSite => 1,
+        }
+    }
+}
+
+impl Transport for Loopback {
+    fn name(&self) -> &'static str {
+        "loopback"
+    }
+
+    fn n_sites(&self) -> usize {
+        self.n_sites
+    }
+
+    fn ship(&mut self, dir: Direction, tag: &str, mats: &[&Matrix]) -> io::Result<u64> {
+        Ok(wire::payload_wire_len(tag, mats) * self.fanout(dir))
+    }
+
+    fn ship_control(&mut self, dir: Direction, tag: &str, body: &[u8]) -> io::Result<u64> {
+        Ok(wire::control_wire_len(tag, body) * self.fanout(dir))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loopback_counts_serialized_bytes() {
+        let mut t = Loopback::new(4);
+        let m = Matrix::zeros(8, 16); // 512 raw f32 bytes
+        let one = t.ship(Direction::SiteToAgg, "x", &[&m]).unwrap();
+        assert_eq!(one, wire::payload_wire_len("x", &[&m]));
+        assert!(one > m.wire_bytes(), "framing overhead must be visible");
+        // Broadcast counts once; p2p counts once per receiving peer.
+        assert_eq!(t.ship(Direction::AggToSite, "x", &[&m]).unwrap(), one);
+        assert_eq!(t.ship(Direction::PeerToPeer, "x", &[&m]).unwrap(), 3 * one);
+        // Receive halves are not a loopback role.
+        assert!(t.recv_from_site(0).is_err());
+        assert!(t.recv_broadcast().is_err());
+    }
+}

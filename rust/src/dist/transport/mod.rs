@@ -1,0 +1,77 @@
+//! Pluggable transport backends: how frames physically move between the
+//! aggregator and the sites.
+//!
+//! The distributed algorithms only ever touch three link primitives
+//! (`send_to_agg`, `broadcast`, `send_p2p` on [`crate::dist::Cluster`]);
+//! this module is the seam beneath them. A [`Transport`] endpoint moves
+//! [`crate::dist::wire`] frames and reports the exact serialized bytes each
+//! shipment put on the wire, which is what the [`crate::dist::Ledger`]
+//! records. Two backends exist:
+//!
+//! * [`Loopback`] — the deterministic single-process simulator. Nothing is
+//!   serialized; byte counts come from `wire::payload_wire_len`, so they are
+//!   identical to what a real run would ship, and `CostModel` timing is
+//!   preserved by the cluster layer above.
+//! * [`TcpAgg`] / [`TcpSite`] — a zero-dependency `std::net` backend that
+//!   runs the aggregator and the sites as separate OS processes
+//!   (`dad serve` / `dad join`). Every frame genuinely crosses a socket.
+//!
+//! Endpoints are asymmetric by nature: a TCP site cannot read another
+//! site's uplink. Methods that a given endpoint cannot serve return
+//! `ErrorKind::Unsupported` via the trait's default implementations; the
+//! loopback endpoint plays every role at once and the drivers in
+//! `coordinator::remote` only call the half that matches their role.
+
+pub mod loopback;
+pub mod tcp;
+
+pub use loopback::Loopback;
+pub use tcp::{TcpAgg, TcpAggListener, TcpSite};
+
+use std::io;
+
+use crate::dist::ledger::Direction;
+use crate::dist::wire::Frame;
+use crate::tensor::Matrix;
+
+fn unsupported(endpoint: &'static str, op: &'static str) -> io::Error {
+    io::Error::new(
+        io::ErrorKind::Unsupported,
+        format!("{endpoint} endpoint does not implement {op}"),
+    )
+}
+
+/// One endpoint of the communication fabric (aggregator, site, or the
+/// all-roles loopback simulator).
+///
+/// `ship`/`ship_control` return the serialized bytes that crossed the wire:
+/// for a multicast broadcast the shared down-link is counted once, and for
+/// a peer-to-peer shipment the per-peer size times `n_sites - 1` — matching
+/// the ledger conventions the experiments assert against.
+pub trait Transport: Send {
+    /// Backend name for diagnostics ("loopback", "tcp-agg", "tcp-site").
+    fn name(&self) -> &'static str;
+
+    /// Number of sites on this fabric.
+    fn n_sites(&self) -> usize;
+
+    /// Move a tagged payload frame along `dir`; returns ledger bytes.
+    fn ship(&mut self, dir: Direction, tag: &str, mats: &[&Matrix]) -> io::Result<u64>;
+
+    /// Move a control frame along `dir`; returns wire bytes (control
+    /// traffic is protocol overhead and is *not* recorded in the ledger).
+    fn ship_control(&mut self, dir: Direction, tag: &str, body: &[u8]) -> io::Result<u64>;
+
+    /// Receive the next frame `site` sent toward the aggregator
+    /// (aggregator-role endpoints only).
+    fn recv_from_site(&mut self, site: usize) -> io::Result<Frame> {
+        let _ = site;
+        Err(unsupported(self.name(), "recv_from_site"))
+    }
+
+    /// Receive the next frame the aggregator broadcast to this site
+    /// (site-role endpoints only).
+    fn recv_broadcast(&mut self) -> io::Result<Frame> {
+        Err(unsupported(self.name(), "recv_broadcast"))
+    }
+}

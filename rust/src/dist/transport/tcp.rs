@@ -1,0 +1,255 @@
+//! The TCP backend: aggregator and sites as separate OS processes over
+//! `std::net` sockets — no external dependencies.
+//!
+//! Topology is the paper's star. The aggregator binds, accepts exactly
+//! `n_sites` connections, and assigns site ids in accept order during a
+//! `hello`/`welcome` control handshake (which also pins the codec version).
+//! After the handshake both endpoints speak nothing but
+//! [`crate::dist::wire`] frames:
+//!
+//! * [`TcpSite`] ships uplink frames and receives broadcasts.
+//! * [`TcpAgg`] receives per-site uplinks and ships broadcasts — written to
+//!   every socket, but *counted once*, because the ledger models the
+//!   down-link as a shared multicast (see `dist::ledger::Direction`).
+//!
+//! Blocking I/O is deliberate: the training protocol is phase-ordered
+//! (all uplinks, then the broadcast), so each endpoint always knows which
+//! frame comes next and the kernel's socket buffers absorb the skew between
+//! faster and slower sites.
+
+use std::io::{self, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+
+use super::{unsupported, Transport};
+use crate::dist::ledger::Direction;
+use crate::dist::wire::{self, Body, ByteReader, ByteWriter, Frame};
+use crate::tensor::Matrix;
+
+/// One established connection: buffered reader + writer over the same
+/// stream (`try_clone` shares the socket).
+struct Link {
+    r: BufReader<TcpStream>,
+    w: BufWriter<TcpStream>,
+}
+
+fn link(stream: TcpStream) -> io::Result<Link> {
+    stream.set_nodelay(true)?;
+    let r = BufReader::new(stream.try_clone()?);
+    Ok(Link { r, w: BufWriter::new(stream) })
+}
+
+fn expect_control(f: &Frame, want: &str) -> io::Result<Vec<u8>> {
+    match &f.body {
+        Body::Control(b) if f.tag == want => Ok(b.clone()),
+        _ => Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("expected control frame {want:?}, got {:?} ({:?})", f.tag, f.kind()),
+        )),
+    }
+}
+
+/// A bound-but-not-yet-connected aggregator: lets the caller learn the
+/// listen address (e.g. for port 0) before sites dial in.
+pub struct TcpAggListener {
+    listener: TcpListener,
+    n_sites: usize,
+}
+
+impl TcpAggListener {
+    /// The actual bound address (resolves `:0` to the kernel-chosen port).
+    pub fn local_addr(&self) -> io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Block until all `n_sites` sites have connected and completed the
+    /// `hello`/`welcome` handshake; site ids are assigned in accept order.
+    pub fn accept_sites(self) -> io::Result<TcpAgg> {
+        let mut links = Vec::with_capacity(self.n_sites);
+        for site_id in 0..self.n_sites {
+            let (stream, _) = self.listener.accept()?;
+            let mut l = link(stream)?;
+            let hello = wire::decode(&mut l.r)?;
+            expect_control(&hello, "hello")?;
+            let mut w = ByteWriter::new();
+            w.push_u32(site_id as u32);
+            w.push_u32(self.n_sites as u32);
+            wire::encode_control(&mut l.w, "welcome", &w.finish())?;
+            l.w.flush()?;
+            links.push(l);
+        }
+        Ok(TcpAgg { links })
+    }
+}
+
+/// Aggregator endpoint: one socket per site, star topology.
+pub struct TcpAgg {
+    links: Vec<Link>,
+}
+
+impl TcpAgg {
+    /// Bind the aggregator on `addr` (e.g. `"127.0.0.1:7009"` or `":0"`
+    /// forms) for an `n_sites` fabric. Accepting is a separate step so the
+    /// caller can print/propagate the address first.
+    pub fn bind(addr: &str, n_sites: usize) -> io::Result<TcpAggListener> {
+        assert!(n_sites >= 1, "a fabric needs at least one site");
+        Ok(TcpAggListener { listener: TcpListener::bind(addr)?, n_sites })
+    }
+}
+
+impl Transport for TcpAgg {
+    fn name(&self) -> &'static str {
+        "tcp-agg"
+    }
+
+    fn n_sites(&self) -> usize {
+        self.links.len()
+    }
+
+    fn ship(&mut self, dir: Direction, tag: &str, mats: &[&Matrix]) -> io::Result<u64> {
+        match dir {
+            Direction::AggToSite => {
+                let mut counted = 0;
+                for l in &mut self.links {
+                    counted = wire::encode_payload(&mut l.w, tag, mats)?;
+                    l.w.flush()?;
+                }
+                Ok(counted) // multicast down-link: counted once
+            }
+            _ => Err(unsupported("tcp-agg", "non-broadcast ship")),
+        }
+    }
+
+    fn ship_control(&mut self, dir: Direction, tag: &str, body: &[u8]) -> io::Result<u64> {
+        match dir {
+            Direction::AggToSite => {
+                let mut counted = 0;
+                for l in &mut self.links {
+                    counted = wire::encode_control(&mut l.w, tag, body)?;
+                    l.w.flush()?;
+                }
+                Ok(counted)
+            }
+            _ => Err(unsupported("tcp-agg", "non-broadcast ship_control")),
+        }
+    }
+
+    fn recv_from_site(&mut self, site: usize) -> io::Result<Frame> {
+        wire::decode(&mut self.links[site].r)
+    }
+}
+
+/// Site endpoint: a single socket to the aggregator plus the identity the
+/// handshake assigned.
+pub struct TcpSite {
+    link: Link,
+    site_id: usize,
+    n_sites: usize,
+}
+
+impl TcpSite {
+    /// Connect to a serving aggregator and complete the handshake.
+    pub fn connect(addr: &str) -> io::Result<TcpSite> {
+        let stream = TcpStream::connect(addr)?;
+        let mut l = link(stream)?;
+        wire::encode_control(&mut l.w, "hello", &[])?;
+        l.w.flush()?;
+        let welcome = wire::decode(&mut l.r)?;
+        let body = expect_control(&welcome, "welcome")?;
+        let mut rd = ByteReader::new(&body);
+        let site_id = rd.read_u32()? as usize;
+        let n_sites = rd.read_u32()? as usize;
+        Ok(TcpSite { link: l, site_id, n_sites })
+    }
+
+    /// The id the aggregator assigned this site (0-based, accept order).
+    pub fn site_id(&self) -> usize {
+        self.site_id
+    }
+}
+
+impl Transport for TcpSite {
+    fn name(&self) -> &'static str {
+        "tcp-site"
+    }
+
+    fn n_sites(&self) -> usize {
+        self.n_sites
+    }
+
+    fn ship(&mut self, dir: Direction, tag: &str, mats: &[&Matrix]) -> io::Result<u64> {
+        match dir {
+            Direction::SiteToAgg => {
+                let n = wire::encode_payload(&mut self.link.w, tag, mats)?;
+                self.link.w.flush()?;
+                Ok(n)
+            }
+            _ => Err(unsupported("tcp-site", "non-uplink ship")),
+        }
+    }
+
+    fn ship_control(&mut self, dir: Direction, tag: &str, body: &[u8]) -> io::Result<u64> {
+        match dir {
+            Direction::SiteToAgg => {
+                let n = wire::encode_control(&mut self.link.w, tag, body)?;
+                self.link.w.flush()?;
+                Ok(n)
+            }
+            _ => Err(unsupported("tcp-site", "non-uplink ship_control")),
+        }
+    }
+
+    fn recv_broadcast(&mut self) -> io::Result<Frame> {
+        wire::decode(&mut self.link.r)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    /// Handshake assigns ids in accept order; frames cross the socket
+    /// bit-exactly and byte counts agree with the arithmetic lengths.
+    #[test]
+    fn handshake_and_frame_exchange() {
+        let listener = TcpAgg::bind("127.0.0.1:0", 2).unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let sites: Vec<_> = (0..2)
+            .map(|_| {
+                let addr = addr.clone();
+                thread::spawn(move || {
+                    let mut s = TcpSite::connect(&addr).unwrap();
+                    let m = Matrix::filled(2, 3, s.site_id() as f32);
+                    let n = s.ship(Direction::SiteToAgg, "acts", &[&m]).unwrap();
+                    assert_eq!(n, wire::payload_wire_len("acts", &[&m]));
+                    let down = s.recv_broadcast().unwrap();
+                    assert_eq!(down.tag, "sum");
+                    match down.body {
+                        Body::Mats(ms) => ms[0][(0, 0)],
+                        Body::Control(_) => panic!("wrong kind"),
+                    }
+                })
+            })
+            .collect();
+        let mut agg = listener.accept_sites().unwrap();
+        assert_eq!(agg.n_sites(), 2);
+        let mut total = 0.0;
+        for site in 0..2 {
+            let f = agg.recv_from_site(site).unwrap();
+            assert_eq!(f.tag, "acts");
+            match f.body {
+                Body::Mats(ms) => {
+                    // The value encodes the handshake-assigned id.
+                    assert_eq!(ms[0][(0, 0)], site as f32);
+                    total += ms[0][(0, 0)];
+                }
+                Body::Control(_) => panic!("wrong kind"),
+            }
+        }
+        let sum = Matrix::filled(1, 1, total);
+        agg.ship(Direction::AggToSite, "sum", &[&sum]).unwrap();
+        for s in sites {
+            assert_eq!(s.join().unwrap(), 1.0);
+        }
+    }
+}

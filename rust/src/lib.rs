@@ -15,6 +15,14 @@
 //! power-iteration kernel to HLO-text artifacts executed through PJRT
 //! (`runtime`). A from-scratch tensor/NN stack (`tensor`, `nn`) provides the
 //! native backend and all substrates.
+//!
+//! Communication is a real subsystem, not a simulation detail: `dist::wire`
+//! defines the frame codec, `dist::transport` the pluggable backends
+//! (in-process loopback and multi-process TCP), and `coordinator::remote`
+//! the `dad serve` / `dad join` drivers — see ARCHITECTURE.md for the
+//! data-flow walkthrough.
+
+#![warn(missing_docs)]
 
 pub mod algos;
 pub mod bench;

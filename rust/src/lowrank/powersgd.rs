@@ -47,6 +47,7 @@ pub fn orthonormalize_cols(m: &mut Matrix) {
 /// Per-parameter PowerSGD compressor state (one per site in dSGD-style use;
 /// all sites stay in lockstep because the inputs are identical postbroadcast).
 pub struct PowerSgdState {
+    /// Compression rank r.
     pub rank: usize,
     /// Warm-start Q (n_cols x r).
     q: Matrix,
@@ -55,6 +56,8 @@ pub struct PowerSgdState {
 }
 
 impl PowerSgdState {
+    /// Fresh state for a rows x cols parameter at rank `rank`; `rng` seeds
+    /// the warm-start Q (identical seed => identical Q on every site).
     pub fn new(rows: usize, cols: usize, rank: usize, rng: &mut Rng) -> Self {
         PowerSgdState {
             rank,

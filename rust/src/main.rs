@@ -1,22 +1,31 @@
 //! `dad` — the launcher for distributed auto-differentiation experiments.
 //!
 //! Subcommands:
-//!   exp <id> [--scale quick|default|paper]
-//!       regenerate a paper table/figure: table2, fig1, fig2, fig3, fig4,
-//!       fig5, fig6, bandwidth, all
-//!   train [--algo A] [--dataset D] [--epochs N] [--batch B] [--sites S]
-//!         [--scale SC] [--config path.toml]
-//!       one training run with full telemetry
-//!   info
-//!       platform, artifact and thread-pool status
+//!
+//! ```text
+//! exp <id> [--scale quick|default|paper]
+//!     regenerate a paper table/figure: table2, fig1, fig2, fig3, fig4,
+//!     fig5, fig6, bandwidth, all
+//! train [--algo A] [--dataset D] [--epochs N] [--batch B] [--sites S]
+//!       [--scale SC] [--config path.toml]
+//!     one training run with full telemetry (in-process loopback cluster)
+//! serve [--sites S] [--addr HOST:PORT] [train options]
+//!     run the aggregator for a multi-process TCP run and wait for S
+//!     `dad join` processes
+//! join [HOST:PORT]
+//!     run one training site against a serving aggregator
+//! info
+//!     platform, artifact and thread-pool status
+//! ```
 
 use dad::algos::AlgoSpec;
 use dad::config::{Args, TomlLite};
 use dad::coordinator::experiments::{self, Scale};
-use dad::coordinator::{train, Schedule, TrainSpec};
-use dad::data::{arabic_digits_like, mnist_like, split_by_label};
-use dad::nn::{Activation, Mlp};
-use dad::tensor::Rng;
+use dad::coordinator::{
+    build_task, ensure_remote_supported, join_training, serve_training, train, RemoteConfig,
+    Schedule, TrainLog, TrainSpec, TrainTask,
+};
+use dad::dist::{Direction, Ledger, TcpAgg, TcpSite};
 
 fn main() {
     let args = Args::from_env();
@@ -24,6 +33,8 @@ fn main() {
     match cmd {
         "exp" => cmd_exp(&args),
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
+        "join" => cmd_join(&args),
         "info" => cmd_info(),
         _ => print_help(),
     }
@@ -35,11 +46,16 @@ fn print_help() {
          \n\
          USAGE:\n\
            dad exp <table2|fig1|fig2|fig3|fig4|fig5|fig6|bandwidth|all> [--scale quick|default|paper]\n\
-           dad train [--algo pooled|dsgd|dad|edad|rank-dad:R|powersgd:R] [--dataset mnist|arabic]\n\
+           dad train [--algo pooled|dsgd|dad|dad-p2p|edad|rank-dad:R|powersgd:R] [--dataset mnist|arabic]\n\
                      [--epochs N] [--batch B] [--sites S] [--lr F] [--seed N] [--sync-every K]\n\
                      [--scale quick|default|paper] [--config path.toml]\n\
+           dad serve [--addr HOST:PORT] [--sites S] [--algo dad|dsgd] [train options]\n\
+           dad join  [HOST:PORT]\n\
            dad info\n\
          \n\
+         `train` simulates all sites in one process over the loopback transport;\n\
+         `serve`/`join` run the same optimization as separate OS processes over\n\
+         TCP, with identical losses and ledger byte counts for the same seed.\n\
          Experiment outputs land in results/*.csv; see EXPERIMENTS.md."
     );
 }
@@ -147,8 +163,10 @@ fn run_bandwidth() {
     }
 }
 
-fn cmd_train(args: &Args) {
-    // Optional config file; CLI overrides.
+/// Training spec + dataset name from CLI options over optional TOML config
+/// (CLI wins). Shared by `train` and `serve` so a multi-process run is
+/// specified exactly like a simulated one.
+fn train_spec_from(args: &Args) -> (TrainSpec, String) {
     let cfg = args
         .opt("config")
         .map(|p| TomlLite::load(p).unwrap_or_else(|e| panic!("config: {e}")))
@@ -162,7 +180,6 @@ fn cmd_train(args: &Args) {
         .opt("dataset")
         .map(str::to_string)
         .unwrap_or_else(|| cfg.str_or("train", "dataset", "mnist").to_string());
-    let scale = scale_of(args);
     let spec = TrainSpec {
         algo,
         n_sites: args.usize_or("sites", cfg.int_or("train", "sites", 2) as usize),
@@ -175,50 +192,10 @@ fn cmd_train(args: &Args) {
             k => Schedule::Periodic(k),
         },
     };
-    println!("training {} on {dataset} ({:?})", spec.algo.name(), scale);
-    let t0 = std::time::Instant::now();
-    let log = match dataset.as_str() {
-        "mnist" => {
-            let (n_train, n_test) = match scale {
-                Scale::Quick => (400, 120),
-                Scale::Default => (2000, 500),
-                Scale::Paper => (60_000, 10_000),
-            };
-            let mut rng = Rng::new(spec.seed);
-            let full = mnist_like(n_train + n_test, &mut rng);
-            let train_ds = full.subset(&(0..n_train).collect::<Vec<_>>());
-            let test_ds = full.subset(&(n_train..n_train + n_test).collect::<Vec<_>>());
-            let shards = split_by_label(&train_ds.labels, 10, spec.n_sites);
-            let dims: Vec<usize> = if scale == Scale::Quick {
-                vec![784, 128, 128, 10]
-            } else {
-                vec![784, 1024, 1024, 10]
-            };
-            let mut mrng = Rng::new(42);
-            let model = Mlp::new(&dims, &vec![Activation::Relu; dims.len() - 2], &mut mrng);
-            train(model, &spec, &train_ds, &shards, &test_ds)
-        }
-        "arabic" => {
-            let (n_train, n_test) = match scale {
-                Scale::Quick => (240, 80),
-                Scale::Default => (600, 200),
-                Scale::Paper => (6600, 2200),
-            };
-            let mut rng = Rng::new(spec.seed);
-            let full = arabic_digits_like(n_train + n_test, &mut rng);
-            let train_ds = full.subset(&(0..n_train).collect::<Vec<_>>());
-            let test_ds = full.subset(&(n_train..n_train + n_test).collect::<Vec<_>>());
-            let shards = split_by_label(&train_ds.labels, 10, spec.n_sites);
-            let mut mrng = Rng::new(42);
-            let model = if scale == Scale::Quick {
-                dad::nn::GruClassifier::new(13, 32, &[64, 32], 10, &mut mrng)
-            } else {
-                dad::nn::GruClassifier::paper_uea(13, 10, &mut mrng)
-            };
-            train(model, &spec, &train_ds, &shards, &test_ds)
-        }
-        other => panic!("unknown dataset {other:?} (mnist|arabic)"),
-    };
+    (spec, dataset)
+}
+
+fn print_epochs(log: &TrainLog) {
     for e in &log.epochs {
         println!(
             "epoch {:>3}  loss {:.4}  auc {:.4}  acc {:.4}  up {:>10}B  down {:>10}B{}",
@@ -235,10 +212,112 @@ fn cmd_train(args: &Args) {
             }
         );
     }
+}
+
+fn cmd_train(args: &Args) {
+    let (spec, dataset) = train_spec_from(args);
+    let scale = scale_of(args);
+    println!("training {} on {dataset} ({:?})", spec.algo.name(), scale);
+    let t0 = std::time::Instant::now();
+    let log = match build_task(&dataset, scale, spec.n_sites, spec.seed) {
+        Ok(TrainTask::Dense { train_ds, test_ds, shards, model }) => {
+            train(model, &spec, &train_ds, &shards, &test_ds)
+        }
+        Ok(TrainTask::Seq { train_ds, test_ds, shards, model }) => {
+            train(model, &spec, &train_ds, &shards, &test_ds)
+        }
+        Err(e) => panic!("{e}"),
+    };
+    print_epochs(&log);
+    let up: u64 = log.epochs.iter().map(|e| e.bytes_up).sum();
+    let down: u64 = log.epochs.iter().map(|e| e.bytes_down).sum();
     println!(
-        "done in {:.1}s wall; simulated wire time {:.3}s; total {} bytes",
+        "done in {:.1}s wall; simulated wire time {:.3}s; ledger bytes: up {up} down {down}",
         t0.elapsed().as_secs_f32(),
         log.sim_time_s,
-        log.total_bytes()
+    );
+}
+
+fn cmd_serve(args: &Args) {
+    let (spec, dataset) = train_spec_from(args);
+    // Fail fast on the operator's terminal, before any site can connect.
+    ensure_remote_supported(&spec).unwrap_or_else(|e| panic!("{e}"));
+    let scale_s = args.opt_or("scale", "default").to_string();
+    let scale = Scale::parse(&scale_s).unwrap_or(Scale::Default);
+    let addr = args.opt_or("addr", "127.0.0.1:7009").to_string();
+    let listener =
+        TcpAgg::bind(&addr, spec.n_sites).unwrap_or_else(|e| panic!("bind {addr}: {e}"));
+    let shown = listener.local_addr().map(|a| a.to_string()).unwrap_or_else(|_| addr.clone());
+    println!(
+        "serving {} on {dataset} ({scale:?}) at {shown}; waiting for {} x `dad join {shown}`",
+        spec.algo.name(),
+        spec.n_sites
+    );
+    let mut agg = listener.accept_sites().unwrap_or_else(|e| panic!("handshake: {e}"));
+    RemoteConfig { spec: spec.clone(), dataset: dataset.clone(), scale: scale_s }
+        .send(&mut agg)
+        .unwrap_or_else(|e| panic!("config broadcast: {e}"));
+    let mut ledger = Ledger::new();
+    let t0 = std::time::Instant::now();
+    let log = match build_task(&dataset, scale, spec.n_sites, spec.seed) {
+        Ok(TrainTask::Dense { test_ds, shards, model, .. }) => {
+            let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+            serve_training(&mut agg, &mut ledger, &spec, model, &sizes, &test_ds)
+        }
+        Ok(TrainTask::Seq { test_ds, shards, model, .. }) => {
+            let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+            serve_training(&mut agg, &mut ledger, &spec, model, &sizes, &test_ds)
+        }
+        Err(e) => panic!("{e}"),
+    }
+    .unwrap_or_else(|e| panic!("serve: {e}"));
+    print_epochs(&log);
+    println!(
+        "done in {:.1}s wall; measured wire bytes: up {} down {}",
+        t0.elapsed().as_secs_f32(),
+        ledger.total_dir(Direction::SiteToAgg),
+        ledger.total_dir(Direction::AggToSite),
+    );
+    for (tag, dir, bytes) in ledger.breakdown() {
+        println!("  {dir:?} {tag:<12} {bytes:>12} B");
+    }
+}
+
+fn cmd_join(args: &Args) {
+    let addr =
+        args.positional.get(1).map(|s| s.as_str()).unwrap_or("127.0.0.1:7009").to_string();
+    let mut site = TcpSite::connect(&addr).unwrap_or_else(|e| panic!("connect {addr}: {e}"));
+    let site_id = site.site_id();
+    let cfg = RemoteConfig::recv(&mut site).unwrap_or_else(|e| panic!("config: {e}"));
+    let scale = Scale::parse(&cfg.scale).unwrap_or(Scale::Default);
+    println!(
+        "joined {addr} as site {site_id}/{}: {} on {} ({scale:?})",
+        cfg.spec.n_sites,
+        cfg.spec.algo.name(),
+        cfg.dataset,
+    );
+    let mut ledger = Ledger::new();
+    let t0 = std::time::Instant::now();
+    let log = match build_task(&cfg.dataset, scale, cfg.spec.n_sites, cfg.spec.seed) {
+        Ok(TrainTask::Dense { train_ds, shards, model, .. }) => {
+            join_training(&mut site, &mut ledger, &cfg.spec, model, &train_ds, &shards, site_id)
+        }
+        Ok(TrainTask::Seq { train_ds, shards, model, .. }) => {
+            join_training(&mut site, &mut ledger, &cfg.spec, model, &train_ds, &shards, site_id)
+        }
+        Err(e) => panic!("{e}"),
+    }
+    .unwrap_or_else(|e| panic!("join: {e}"));
+    for e in &log.epochs {
+        println!(
+            "epoch {:>3}  loss {:.4}  up {:>10}B  down {:>10}B",
+            e.epoch, e.train_loss, e.bytes_up, e.bytes_down
+        );
+    }
+    println!(
+        "done in {:.1}s; this site shipped {} B up, received {} B down",
+        t0.elapsed().as_secs_f32(),
+        ledger.total_dir(Direction::SiteToAgg),
+        ledger.total_dir(Direction::AggToSite),
     );
 }

@@ -11,6 +11,7 @@ pub struct CsvWriter {
 }
 
 impl CsvWriter {
+    /// Create/truncate `path` (directories made as needed), write `header`.
     pub fn create(path: impl AsRef<Path>, header: &[&str]) -> std::io::Result<Self> {
         if let Some(dir) = path.as_ref().parent() {
             std::fs::create_dir_all(dir)?;
@@ -20,15 +21,18 @@ impl CsvWriter {
         Ok(CsvWriter { file, n_cols: header.len() })
     }
 
+    /// Write one row (width-checked against the header).
     pub fn row(&mut self, values: &[String]) -> std::io::Result<()> {
         assert_eq!(values.len(), self.n_cols, "CSV row width mismatch");
         writeln!(self.file, "{}", values.join(","))
     }
 
+    /// Write one row of f32 values.
     pub fn row_f32(&mut self, values: &[f32]) -> std::io::Result<()> {
         self.row(&values.iter().map(|v| format!("{v}")).collect::<Vec<_>>())
     }
 
+    /// Flush the underlying buffer.
     pub fn flush(&mut self) -> std::io::Result<()> {
         self.file.flush()
     }

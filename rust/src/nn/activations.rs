@@ -7,13 +7,18 @@ use crate::tensor::Matrix;
 /// Activation tag, shared with the Python kernels (kernels/ref.py).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Activation {
+    /// max(z, 0).
     Relu,
+    /// 1 / (1 + e^-z).
     Sigmoid,
+    /// tanh(z).
     Tanh,
+    /// Identity (output layers).
     Linear,
 }
 
 impl Activation {
+    /// Canonical lowercase name.
     pub fn name(self) -> &'static str {
         match self {
             Activation::Relu => "relu",
@@ -23,6 +28,7 @@ impl Activation {
         }
     }
 
+    /// phi(z) for one scalar.
     #[inline]
     pub fn apply_scalar(self, z: f32) -> f32 {
         match self {
@@ -50,6 +56,7 @@ impl Activation {
         }
     }
 
+    /// phi applied elementwise in place.
     pub fn apply(self, z: &mut Matrix) {
         if self == Activation::Linear {
             return;
@@ -72,6 +79,7 @@ impl Activation {
     }
 }
 
+/// Numerically-stable logistic sigmoid.
 #[inline]
 pub fn sigmoid(z: f32) -> f32 {
     if z >= 0.0 {

@@ -26,12 +26,15 @@ use crate::tensor::{matmul_into, matmul_nt, matmul_nt_into, Matrix, Rng, Workspa
 /// GRU + MLP-classifier sequence model.
 #[derive(Clone)]
 pub struct GruClassifier {
+    /// Input channels per timestep.
     pub c_in: usize,
+    /// GRU hidden width.
     pub hidden: usize,
     w_i: Matrix, // (c_in, 3h)
     b_i: Matrix, // (1, 3h)
     w_h: Matrix, // (h, 3h)
     b_h: Matrix, // (1, 3h)
+    /// Readout MLP over the final hidden state.
     pub classifier: Mlp,
 }
 
@@ -50,6 +53,8 @@ impl GruClassifier {
         GruClassifier::new(c_in, 64, &[512, 256], classes, rng)
     }
 
+    /// Xavier-initialized GRU with an MLP readout of widths `fc_dims`;
+    /// deterministic in `rng` (sites share the seed).
     pub fn new(
         c_in: usize,
         hidden: usize,

@@ -43,10 +43,12 @@ impl Mlp {
         Mlp::new(&[784, 1024, 1024, 10], &[Activation::Relu, Activation::Relu], rng)
     }
 
+    /// Number of dense layers.
     pub fn n_layers(&self) -> usize {
         self.ws.len()
     }
 
+    /// Weight matrix of layer `i`.
     pub fn weight(&self, i: usize) -> &Matrix {
         &self.ws[i]
     }

@@ -15,7 +15,7 @@ use crate::tensor::{Matrix, Workspace};
 pub enum Batch {
     /// Dense features: x (N, d), y one-hot (N, C).
     Dense { x: Matrix, y: Matrix },
-    /// Sequences: xs[t] is (N, c_in) for t = 0..T; y one-hot (N, C).
+    /// Sequences: `xs[t]` is (N, c_in) for t = 0..T; y one-hot (N, C).
     Seq { xs: Vec<Matrix>, y: Matrix },
     /// Token streams for the LM: ids/targets are (B, T) row-major.
     Tokens { b: usize, t: usize, ids: Vec<u32>, targets: Vec<u32> },
@@ -31,10 +31,12 @@ impl Batch {
         }
     }
 
+    /// True for a zero-example batch.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// The one-hot label matrix, when the batch layout carries one.
     pub fn labels_onehot(&self) -> Option<&Matrix> {
         match self {
             Batch::Dense { y, .. } | Batch::Seq { y, .. } => Some(y),
@@ -45,9 +47,12 @@ impl Batch {
 
 /// Model contract for distributed training.
 pub trait DistModel {
-    /// Flat parameter list (weights, biases, everything updatable).
+    /// Shapes of the flat parameter list (weights, biases, everything
+    /// updatable), in canonical order.
     fn param_shapes(&self) -> Vec<(usize, usize)>;
+    /// The parameters, aligned with `param_shapes`.
     fn params(&self) -> Vec<&Matrix>;
+    /// Mutable access to the parameters, aligned with `param_shapes`.
     fn params_mut(&mut self) -> Vec<&mut Matrix>;
 
     /// Forward + backward on a local batch, producing the paper's
@@ -108,6 +113,7 @@ pub trait DistModel {
 /// Clone-able model handle: sites hold replicas; `replicate` must produce a
 /// bit-identical copy (the paper's "same random seed" requirement).
 pub trait Replicate: Sized {
+    /// Produce a bit-identical copy.
     fn replicate(&self) -> Self;
 }
 

@@ -7,9 +7,13 @@ use crate::tensor::Matrix;
 /// Adam with bias-corrected moments (Kingma & Ba), matching PyTorch defaults
 /// except where the paper overrides them (lr = 1e-4).
 pub struct Adam {
+    /// Learning rate.
     pub lr: f32,
+    /// First-moment decay.
     pub beta1: f32,
+    /// Second-moment decay.
     pub beta2: f32,
+    /// Denominator epsilon.
     pub eps: f32,
     t: u64,
     m: Vec<Matrix>,
@@ -17,6 +21,7 @@ pub struct Adam {
 }
 
 impl Adam {
+    /// Zero-moment state for parameters of the given shapes.
     pub fn new(lr: f32, shapes: &[(usize, usize)]) -> Self {
         Adam {
             lr,
@@ -34,6 +39,7 @@ impl Adam {
         Adam::new(1e-4, shapes)
     }
 
+    /// Updates applied so far.
     pub fn step_count(&self) -> u64 {
         self.t
     }
@@ -70,16 +76,20 @@ impl Adam {
 
 /// Plain SGD (used by ablation benches and the PowerSGD baseline's default).
 pub struct Sgd {
+    /// Learning rate.
     pub lr: f32,
+    /// Momentum coefficient (0 disables velocity state).
     pub momentum: f32,
     vel: Option<Vec<Matrix>>,
 }
 
 impl Sgd {
+    /// Fresh optimizer (velocity lazily allocated on first step).
     pub fn new(lr: f32, momentum: f32) -> Self {
         Sgd { lr, momentum, vel: None }
     }
 
+    /// One (momentum-)SGD update step.
     pub fn step(&mut self, params: &mut [Matrix], grads: &[Matrix]) {
         assert_eq!(params.len(), grads.len());
         if self.momentum == 0.0 {

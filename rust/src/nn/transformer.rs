@@ -19,15 +19,22 @@ use crate::tensor::{matmul, matmul_nt, Matrix, Rng, Workspace};
 /// Transformer hyperparameters.
 #[derive(Clone, Debug)]
 pub struct TransformerConfig {
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Residual-stream width.
     pub d_model: usize,
+    /// Attention heads per block.
     pub n_heads: usize,
+    /// Decoder blocks.
     pub n_layers: usize,
+    /// Feed-forward hidden width.
     pub d_ff: usize,
+    /// Maximum (and trained) sequence length.
     pub max_t: usize,
 }
 
 impl TransformerConfig {
+    /// Unit-test-sized configuration.
     pub fn tiny() -> Self {
         TransformerConfig { vocab: 11, d_model: 8, n_heads: 2, n_layers: 2, d_ff: 16, max_t: 6 }
     }
@@ -39,6 +46,7 @@ impl TransformerConfig {
         TransformerConfig { vocab: 512, d_model: 320, n_heads: 8, n_layers: 10, d_ff: 1280, max_t: 64 }
     }
 
+    /// Total scalar parameter count implied by the config.
     pub fn n_params(&self) -> usize {
         let d = self.d_model;
         let per_block = d * 3 * d + 3 * d + d * d + d + 2 * d + d * self.d_ff + self.d_ff
@@ -50,8 +58,11 @@ impl TransformerConfig {
 /// Parameter indices per block (offsets into the flat list).
 const BLOCK_PARAMS: usize = 12;
 
+/// Decoder-only transformer LM with the reverse-AD backward exposed as
+/// (A, Δ) statistics for its dense projections.
 #[derive(Clone)]
 pub struct Transformer {
+    /// Hyperparameters.
     pub cfg: TransformerConfig,
     /// Flat parameter list; layout documented in `param_layout`.
     params: Vec<Matrix>,

@@ -15,13 +15,14 @@ use crate::nn::stats::LocalStats;
 use crate::nn::Mlp;
 use crate::tensor::Matrix;
 
-/// The canonical artifact shapes (python/compile/aot.py): batch 32/site,
-/// 784-1024-1024-10.
+/// The canonical artifact batch size (python/compile/aot.py): 32 per site.
 pub const ARTIFACT_BATCH: usize = 32;
+/// The canonical artifact layer dims: 784-1024-1024-10.
 pub const ARTIFACT_DIMS: [usize; 4] = [784, 1024, 1024, 10];
 
 /// A provider of MLP local statistics.
 pub trait MlpBackend {
+    /// Backend name for diagnostics ("native", "pjrt").
     fn name(&self) -> &'static str;
     /// (loss, stats) for one site batch.
     fn local_stats(&mut self, mlp: &Mlp, batch: &Batch) -> Result<LocalStats>;
@@ -49,10 +50,12 @@ pub struct PjrtMlpBackend {
 }
 
 impl PjrtMlpBackend {
+    /// Wrap an already-initialized runtime.
     pub fn new(runtime: PjrtRuntime) -> Self {
         PjrtMlpBackend { runtime }
     }
 
+    /// Initialize from the default artifact directory (DAD_ARTIFACTS).
     pub fn from_default_artifacts() -> Result<Self> {
         let runtime = PjrtRuntime::cpu(PjrtRuntime::default_dir())
             .map_err(|e| RuntimeError(format!("{e:#}")))?;

@@ -36,6 +36,7 @@ pub use pjrt::PjrtRuntime;
 pub struct RuntimeError(pub String);
 
 impl RuntimeError {
+    /// Build from any stringy message.
     pub fn msg(s: impl Into<String>) -> Self {
         RuntimeError(s.into())
     }
@@ -49,6 +50,7 @@ impl std::fmt::Display for RuntimeError {
 
 impl std::error::Error for RuntimeError {}
 
+/// Crate-local result alias for runtime-layer fallibility.
 pub type Result<T> = std::result::Result<T, RuntimeError>;
 
 /// Default artifact location (repo-root relative), overridable with

@@ -33,6 +33,7 @@ impl PjrtRuntime {
         super::default_artifacts_dir()
     }
 
+    /// PJRT platform name reported by the client.
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -53,6 +54,7 @@ impl PjrtRuntime {
         Ok(())
     }
 
+    /// Whether `name` is already compiled into the cache.
     pub fn is_loaded(&self, name: &str) -> bool {
         self.cache.contains_key(name)
     }
@@ -96,19 +98,24 @@ impl PjrtRuntime {
 
 /// An f32 input tensor (row-major).
 pub struct PjrtInput {
+    /// Tensor shape (empty = scalar).
     pub dims: Vec<usize>,
+    /// Row-major values.
     pub data: Vec<f32>,
 }
 
 impl PjrtInput {
+    /// Rank-2 input from a matrix.
     pub fn from_matrix(m: &Matrix) -> Self {
         PjrtInput { dims: vec![m.rows(), m.cols()], data: m.data().to_vec() }
     }
 
+    /// Rank-1 input from a slice.
     pub fn from_row(v: &[f32]) -> Self {
         PjrtInput { dims: vec![v.len()], data: v.to_vec() }
     }
 
+    /// Rank-0 (scalar) input.
     pub fn scalar(v: f32) -> Self {
         PjrtInput { dims: vec![], data: vec![v] }
     }
@@ -117,11 +124,14 @@ impl PjrtInput {
 /// An f32 output tensor (row-major).
 #[derive(Debug, Clone)]
 pub struct PjrtOutput {
+    /// Tensor shape (empty = scalar).
     pub dims: Vec<usize>,
+    /// Row-major values.
     pub data: Vec<f32>,
 }
 
 impl PjrtOutput {
+    /// View as a matrix (rank <= 2; rank-1 becomes a row vector).
     pub fn to_matrix(&self) -> Matrix {
         match self.dims.len() {
             2 => Matrix::from_vec(self.dims[0], self.dims[1], self.data.clone()),
@@ -131,6 +141,7 @@ impl PjrtOutput {
         }
     }
 
+    /// The single value of a rank-0 output.
     pub fn scalar(&self) -> f32 {
         self.data[0]
     }

@@ -34,18 +34,22 @@ impl PjrtRuntime {
         super::default_artifacts_dir()
     }
 
+    /// Platform name ("stub").
     pub fn platform(&self) -> String {
         "stub".to_string()
     }
 
+    /// Always errors in the stub build.
     pub fn load(&mut self, _name: &str) -> Result<()> {
         unavailable()
     }
 
+    /// Always false in the stub build.
     pub fn is_loaded(&self, _name: &str) -> bool {
         false
     }
 
+    /// Always errors in the stub build.
     pub fn execute(&mut self, _name: &str, _inputs: &[PjrtInput]) -> Result<Vec<PjrtOutput>> {
         unavailable()
     }
@@ -53,19 +57,24 @@ impl PjrtRuntime {
 
 /// An f32 input tensor (row-major).
 pub struct PjrtInput {
+    /// Tensor shape (empty = scalar).
     pub dims: Vec<usize>,
+    /// Row-major values.
     pub data: Vec<f32>,
 }
 
 impl PjrtInput {
+    /// Rank-2 input from a matrix.
     pub fn from_matrix(m: &Matrix) -> Self {
         PjrtInput { dims: vec![m.rows(), m.cols()], data: m.data().to_vec() }
     }
 
+    /// Rank-1 input from a slice.
     pub fn from_row(v: &[f32]) -> Self {
         PjrtInput { dims: vec![v.len()], data: v.to_vec() }
     }
 
+    /// Rank-0 (scalar) input.
     pub fn scalar(v: f32) -> Self {
         PjrtInput { dims: vec![], data: vec![v] }
     }
@@ -74,11 +83,14 @@ impl PjrtInput {
 /// An f32 output tensor (row-major).
 #[derive(Debug, Clone)]
 pub struct PjrtOutput {
+    /// Tensor shape (empty = scalar).
     pub dims: Vec<usize>,
+    /// Row-major values.
     pub data: Vec<f32>,
 }
 
 impl PjrtOutput {
+    /// View as a matrix (rank <= 2; rank-1 becomes a row vector).
     pub fn to_matrix(&self) -> Matrix {
         match self.dims.len() {
             2 => Matrix::from_vec(self.dims[0], self.dims[1], self.data.clone()),
@@ -88,6 +100,7 @@ impl PjrtOutput {
         }
     }
 
+    /// The single value of a rank-0 output.
     pub fn scalar(&self) -> f32 {
         self.data[0]
     }

@@ -23,19 +23,23 @@ impl std::fmt::Debug for Matrix {
 }
 
 impl Matrix {
+    /// All-zero matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Matrix { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// Constant-filled matrix.
     pub fn filled(rows: usize, cols: usize, v: f32) -> Self {
         Matrix { rows, cols, data: vec![v; rows * cols] }
     }
 
+    /// Wrap a row-major value vector (length must equal rows*cols).
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
         assert_eq!(data.len(), rows * cols, "shape mismatch");
         Matrix { rows, cols, data }
     }
 
+    /// Build elementwise from `f(i, j)`.
     pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
         let mut data = Vec::with_capacity(rows * cols);
         for i in 0..rows {
@@ -64,6 +68,7 @@ impl Matrix {
         Matrix { rows, cols, data }
     }
 
+    /// The n x n identity.
     pub fn identity(n: usize) -> Self {
         let mut m = Matrix::zeros(n, n);
         for i in 0..n {
@@ -72,21 +77,25 @@ impl Matrix {
         m
     }
 
+    /// Row count.
     #[inline]
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Column count.
     #[inline]
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// (rows, cols).
     #[inline]
     pub fn shape(&self) -> (usize, usize) {
         (self.rows, self.cols)
     }
 
+    /// Total element count.
     #[inline]
     pub fn numel(&self) -> usize {
         self.rows * self.cols
@@ -98,30 +107,36 @@ impl Matrix {
         (self.numel() * 4) as u64
     }
 
+    /// Row-major value slice.
     #[inline]
     pub fn data(&self) -> &[f32] {
         &self.data
     }
 
+    /// Mutable row-major value slice.
     #[inline]
     pub fn data_mut(&mut self) -> &mut [f32] {
         &mut self.data
     }
 
+    /// Consume into the row-major value vector.
     pub fn into_vec(self) -> Vec<f32> {
         self.data
     }
 
+    /// Row `i` as a slice.
     #[inline]
     pub fn row(&self, i: usize) -> &[f32] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Row `i` as a mutable slice.
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Cache-blocked out-of-place transpose.
     pub fn transpose(&self) -> Matrix {
         let mut out = Matrix::zeros(self.cols, self.rows);
         // Blocked transpose for cache friendliness on the big stat matrices.
@@ -170,6 +185,7 @@ impl Matrix {
         Matrix { rows: idx.len(), cols: self.cols, data }
     }
 
+    /// Elementwise map into a new matrix.
     pub fn map(&self, f: impl Fn(f32) -> f32) -> Matrix {
         Matrix {
             rows: self.rows,
@@ -178,12 +194,14 @@ impl Matrix {
         }
     }
 
+    /// Elementwise map in place.
     pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
         for x in &mut self.data {
             *x = f(*x);
         }
     }
 
+    /// Elementwise combine with `other` (shapes must match).
     pub fn zip_map(&self, other: &Matrix, f: impl Fn(f32, f32) -> f32) -> Matrix {
         assert_eq!(self.shape(), other.shape());
         Matrix {
@@ -201,10 +219,12 @@ impl Matrix {
         }
     }
 
+    /// Elementwise sum.
     pub fn add(&self, other: &Matrix) -> Matrix {
         self.zip_map(other, |a, b| a + b)
     }
 
+    /// Elementwise difference.
     pub fn sub(&self, other: &Matrix) -> Matrix {
         self.zip_map(other, |a, b| a - b)
     }
@@ -214,10 +234,12 @@ impl Matrix {
         self.zip_map(other, |a, b| a * b)
     }
 
+    /// Scalar multiply into a new matrix.
     pub fn scale(&self, alpha: f32) -> Matrix {
         self.map(|x| alpha * x)
     }
 
+    /// Scalar multiply in place.
     pub fn scale_inplace(&mut self, alpha: f32) {
         self.map_inplace(|x| alpha * x);
     }
@@ -249,6 +271,7 @@ impl Matrix {
             .fold(0.0f32, f32::max)
     }
 
+    /// Largest absolute entry (0 for empty matrices).
     pub fn max_abs(&self) -> f32 {
         self.data.iter().map(|x| x.abs()).fold(0.0f32, f32::max)
     }

@@ -23,6 +23,7 @@ impl Rng {
         rng
     }
 
+    /// Seeded constructor on the default stream.
     pub fn new(seed: u64) -> Self {
         Self::with_stream(seed, 0xda3e39cb94b95bdb)
     }
@@ -34,6 +35,7 @@ impl Rng {
         Rng::with_stream(seed, tag.wrapping_add(1))
     }
 
+    /// Next raw 32-bit output.
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
@@ -43,6 +45,7 @@ impl Rng {
         xorshifted.rotate_right(rot)
     }
 
+    /// Next raw 64-bit output (two 32-bit draws).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64

@@ -28,6 +28,7 @@ pub struct Workspace {
 }
 
 impl Workspace {
+    /// Empty workspace (buffers accrete through `recycle`).
     pub fn new() -> Self {
         Workspace::default()
     }

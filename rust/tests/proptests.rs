@@ -5,6 +5,7 @@
 
 use dad::algos::common::DistAlgorithm;
 use dad::algos::{Dad, Dsgd, Edad, Pooled, RankDad, RankDadConfig};
+use dad::dist::wire::{self, Body};
 use dad::dist::Cluster;
 use dad::nn::loss::one_hot;
 use dad::nn::model::{Batch, DistModel};
@@ -134,6 +135,109 @@ fn prop_ledger_breakdown_consistent() {
         let sum: u64 = cluster.ledger.breakdown().iter().map(|&(_, _, b)| b).sum();
         assert_eq!(total, sum);
         assert!(total > 0);
+    });
+}
+
+/// Wire-codec round trip: payload frames with arbitrary shapes (including
+/// empty matrices and multi-matrix direct-grad frames) decode to the exact
+/// bits that were encoded, and the encoder's byte count always equals the
+/// arithmetic `payload_wire_len` the loopback backend charges the ledger.
+#[test]
+fn prop_wire_payload_roundtrip() {
+    forall(40, 0xF7A3E, |seed, rng| {
+        let tags = ["acts", "deltas", "direct-grad", "grad", "lowrank-q"];
+        let tag = tags[rng.below(tags.len())];
+        let n_mats = 1 + rng.below(4);
+        let mats: Vec<Matrix> = (0..n_mats)
+            .map(|_| {
+                // Empty shapes (0 rows or 0 cols) must survive too.
+                let r = rng.below(12);
+                let c = rng.below(40);
+                Matrix::randn(r, c, 1.0, rng)
+            })
+            .collect();
+        let refs: Vec<&Matrix> = mats.iter().collect();
+        let mut buf = Vec::new();
+        let written = wire::encode_payload(&mut buf, tag, &refs).unwrap();
+        assert_eq!(written as usize, buf.len(), "seed {seed:#x}: length bookkeeping");
+        assert_eq!(written, wire::payload_wire_len(tag, &refs), "seed {seed:#x}: arithmetic len");
+        let frame = wire::decode(&mut buf.as_slice()).unwrap();
+        assert_eq!(frame.tag, tag, "seed {seed:#x}");
+        assert_eq!(frame.wire_len(), written, "seed {seed:#x}");
+        match frame.body {
+            Body::Mats(got) => {
+                assert_eq!(got.len(), mats.len(), "seed {seed:#x}");
+                for (g, m) in got.iter().zip(&mats) {
+                    assert_eq!(g.shape(), m.shape(), "seed {seed:#x}");
+                    assert_eq!(g, m, "seed {seed:#x}: bit-exact f32 round trip");
+                }
+            }
+            Body::Control(_) => panic!("seed {seed:#x}: payload decoded as control"),
+        }
+    });
+}
+
+/// Control frames round-trip random byte bodies, and back-to-back frames in
+/// one stream decode in order (the property TCP links rely on).
+#[test]
+fn prop_wire_control_roundtrip_and_streaming() {
+    forall(25, 0x5EED5, |seed, rng| {
+        let n_frames = 1 + rng.below(5);
+        let mut stream = Vec::new();
+        let mut want: Vec<(String, Vec<u8>)> = Vec::new();
+        for i in 0..n_frames {
+            let tag = format!("ctl{i}");
+            let body: Vec<u8> = (0..rng.below(64)).map(|_| rng.below(256) as u8).collect();
+            wire::encode_control(&mut stream, &tag, &body).unwrap();
+            want.push((tag, body));
+        }
+        let mut rd = stream.as_slice();
+        for (tag, body) in &want {
+            let f = wire::decode(&mut rd).unwrap();
+            assert_eq!(&f.tag, tag, "seed {seed:#x}");
+            match f.body {
+                Body::Control(b) => assert_eq!(&b, body, "seed {seed:#x}"),
+                Body::Mats(_) => panic!("seed {seed:#x}: control decoded as payload"),
+            }
+        }
+        assert!(rd.is_empty(), "seed {seed:#x}: stream fully consumed");
+    });
+}
+
+/// The ledger's serialized-byte accounting exceeds the raw f32 payload by
+/// exactly the framing overhead: per-frame header + 8 bytes per matrix.
+#[test]
+fn prop_ledger_counts_framing_overhead() {
+    forall(10, 0xBEADED, |seed, rng| {
+        let mlp = random_mlp(rng);
+        let batches = random_batches(&mlp, 2, rng);
+        let mut cluster = Cluster::replicate(mlp.clone(), 2);
+        let _ = Dad.step(&mut cluster, &batches);
+        let measured = cluster.ledger.total();
+        // Reconstruct the raw f32 bytes dAD ships (up: per-site stacks;
+        // down: the concatenated stacks) and the exact frame count.
+        let stats: Vec<_> = batches.iter().map(|b| mlp.local_stats(b)).collect();
+        let mut raw = 0u64;
+        let mut frames = 0u64;
+        for s in &stats {
+            for e in &s.entries {
+                raw += e.a.wire_bytes() + e.d.wire_bytes();
+                frames += 2;
+            }
+        }
+        // Broadcast of the vertcat doubles the raw stat bytes, one frame
+        // per concatenated stack.
+        raw *= 2;
+        frames += 2 * stats[0].entries.len() as u64;
+        let per_mat = 8; // rows + cols dims
+        let per_frame_hdr = |tag: &str| 4 + 3 + tag.len() as u64 + 2;
+        // Every dad frame tag is "acts" or "deltas"; count them exactly.
+        let n_acts = stats[0].entries.len() as u64 * 3; // 2 uplinks + 1 broadcast
+        let n_deltas = n_acts;
+        let overhead = n_acts * (per_frame_hdr("acts") + per_mat)
+            + n_deltas * (per_frame_hdr("deltas") + per_mat);
+        assert_eq!(frames, n_acts + n_deltas, "seed {seed:#x}: frame census");
+        assert_eq!(measured, raw + overhead, "seed {seed:#x}: measured = raw + framing");
     });
 }
 
