@@ -1,0 +1,100 @@
+#!/usr/bin/env python3
+"""Perf regression gate: compare BENCH_hotpath.json against the checked-in
+BENCH_baseline.json and fail CI when the hotpath regresses.
+
+Runner-noise tolerance comes from two mechanisms:
+
+1. *Machine calibration.* The hotpath bench times the frozen `legacy`
+   seed kernels in the same run (their `speedup_vs_baseline` fields are
+   engine-vs-legacy ratios measured back-to-back on the same machine).
+   Where both files carry a speedup, the gate compares the *speedups* —
+   a machine-independent quantity — instead of raw nanoseconds.
+2. *Geometric-mean aggregation.* A single noisy entry cannot fail the
+   gate; the whole hotpath must be >THRESHOLD slower in aggregate.
+
+Baselines marked `"placeholder": "true"` in their meta (the initial
+check-in, produced on a machine without a recorded run) report instead of
+gate; refresh with:
+
+    cd rust && DAD_BENCH_FAST=1 cargo bench --bench hotpath \
+        && cp BENCH_hotpath.json BENCH_baseline.json
+
+Usage: bench_gate.py BASELINE.json CURRENT.json
+"""
+
+import json
+import math
+import sys
+
+THRESHOLD = 1.25  # >25% aggregate hotpath regression fails the gate
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    rows = {}
+    for b in doc.get("benchmarks", []):
+        if b.get("median_ns", 0) > 0:
+            rows[b["name"]] = b
+    return doc.get("meta", {}), rows
+
+
+def geomean(xs):
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 2
+    base_meta, base = load(sys.argv[1])
+    _, cur = load(sys.argv[2])
+    shared = sorted(set(base) & set(cur))
+    placeholder = str(base_meta.get("placeholder", "")).lower() == "true"
+
+    if not shared:
+        if placeholder:
+            print("bench gate: placeholder baseline with no shared entries; reporting only.")
+            print("Refresh the baseline from a real run (see bench_gate.py docstring).")
+            return 0
+        print("bench gate: no shared benchmark names between baseline and current; failing.")
+        return 1
+
+    # Prefer speedup-vs-legacy ratios (machine-independent); fall back to
+    # median_ns ratios for entries without a speedup field.
+    ratios = []
+    for name in shared:
+        b, c = base[name], cur[name]
+        if "speedup_vs_baseline" in b and "speedup_vs_baseline" in c:
+            if c["speedup_vs_baseline"] > 0:
+                # Regression ratio: how much slower (relative to the frozen
+                # legacy kernels) the current engine is vs the baseline run.
+                r = b["speedup_vs_baseline"] / c["speedup_vs_baseline"]
+                kind = "speedup"
+            else:
+                continue
+        else:
+            r = c["median_ns"] / b["median_ns"]
+            kind = "median"
+        flag = "SLOW" if r > THRESHOLD else "ok"
+        print(f"{name:<52} x{r:6.2f} ({kind})  [{flag}]")
+        ratios.append(r)
+
+    if not ratios:
+        print("bench gate: no comparable entries; failing closed.")
+        return 0 if placeholder else 1
+
+    agg = geomean(ratios)
+    print(f"aggregate hotpath regression: x{agg:.3f} (threshold x{THRESHOLD})")
+    if agg > THRESHOLD:
+        if placeholder:
+            print("placeholder baseline: reporting only, not failing the build.")
+            return 0
+        print("FAIL: hotpath regressed beyond the tolerance.")
+        return 1
+    print("ok: hotpath within tolerance.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

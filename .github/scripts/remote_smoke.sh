@@ -1,0 +1,48 @@
+#!/usr/bin/env bash
+# Smoke-run one --algo spelling through the multi-process TCP mode:
+# `dad serve --sites 2` plus two `dad join`s on localhost, asserting that
+# every process exits 0 and that the serve process wrote a non-empty
+# per-epoch metrics CSV. `dad join` retries its dial for up to 10 s, so
+# the three processes can be launched concurrently.
+#
+# Usage: remote_smoke.sh <algo>   (run from the repository root)
+set -euo pipefail
+
+ALGO="${1:?usage: remote_smoke.sh <algo>}"
+BIN="${BIN:-rust/target/release/dad}"
+PORT="${PORT:-7411}"
+CSV="results/remote_smoke_${ALGO//[:]/_}.csv"
+
+rm -f "$CSV"
+
+# Kill any survivors if one process fails: an orphaned blocking serve
+# would otherwise hang the CI step until the job timeout.
+trap 'kill $serve_pid $join1_pid $join2_pid 2>/dev/null || true' EXIT
+
+# `timeout` bounds every process: a protocol hang (the exact regression
+# class this job exists to catch) becomes a fast red job, not a 6-hour
+# runner stall.
+LIMIT="${LIMIT:-300}"
+timeout "$LIMIT" "$BIN" serve --addr "127.0.0.1:${PORT}" --sites 2 --algo "$ALGO" \
+    --dataset mnist --scale quick --epochs 2 --batch 8 --seed 7 --csv "$CSV" &
+serve_pid=$!
+timeout "$LIMIT" "$BIN" join "127.0.0.1:${PORT}" &
+join1_pid=$!
+timeout "$LIMIT" "$BIN" join "127.0.0.1:${PORT}" &
+join2_pid=$!
+
+# `wait <pid>` propagates each process's exit status; set -e aborts on any
+# non-zero status.
+wait "$join1_pid"
+wait "$join2_pid"
+wait "$serve_pid"
+
+# Non-empty metrics CSV: a header line plus one row per epoch.
+test -s "$CSV" || { echo "FAIL($ALGO): metrics CSV missing or empty: $CSV"; exit 1; }
+rows=$(wc -l <"$CSV")
+if [ "$rows" -lt 3 ]; then
+    echo "FAIL($ALGO): metrics CSV too short ($rows lines):"
+    cat "$CSV"
+    exit 1
+fi
+echo "ok($ALGO): serve + 2 joins exited 0; $rows CSV lines in $CSV"

@@ -1,5 +1,6 @@
 //! Shared machinery for the distributed algorithms.
 
+use crate::algos::protocol::StepProtocol;
 use crate::dist::Cluster;
 use crate::nn::model::{Batch, DistModel};
 use crate::nn::stats::LocalStats;
@@ -30,6 +31,14 @@ pub trait DistAlgorithm<M: DistModel> {
     fn name(&self) -> &'static str;
     /// One synchronized step over per-site batches.
     fn step(&mut self, cluster: &mut Cluster<M>, batches: &[Batch]) -> StepOutcome;
+    /// The algorithm's remote wire protocol: a fresh per-run state machine
+    /// describing the same per-step exchange as typed rounds over a
+    /// transport (see [`crate::algos::protocol`]). `dad serve`/`dad join`
+    /// drive it through the generic drivers in `coordinator::remote`; the
+    /// equivalence with [`DistAlgorithm::step`] — gradients, losses and
+    /// per-(tag, direction) ledger bytes — is asserted by
+    /// `tests/transport_e2e.rs`.
+    fn protocol(&self) -> Box<dyn StepProtocol<M>>;
 }
 
 /// Per-site local statistics + the global row count (Σ output-delta rows),

@@ -8,13 +8,21 @@
 //! feedback. Both ship Θ(r(h_i+h_{i+1})) per layer; rank-dAD's r is an
 //! upper bound, PowerSGD's is exact.
 
+use std::io;
+
 use crate::algos::common::{
     exchange_direct, gather_local_stats, weighted_loss, DistAlgorithm, StepOutcome,
 };
+use crate::algos::protocol::{
+    agg_direct_exchange, gather_sum, site_direct_exchange, AggExchange, Endpoint, StepMeta,
+    StepProtocol, StepSync,
+};
+use crate::dist::wire::{proto_err, ByteReader, ByteWriter};
 use crate::dist::Cluster;
 use crate::lowrank::{orthonormalize_cols, rankdad_factors, PowerSgdState};
 use crate::nn::model::{Batch, DistModel};
-use crate::tensor::{Matrix, Rng};
+use crate::nn::stats::LocalStats;
+use crate::tensor::{matmul_nt, matmul_tn, Matrix, Rng};
 
 /// Deterministic seed for PowerSGD's warm-start Q (identical on all sites).
 const POWERSGD_SEED: u64 = 0x9d5f_17ab_33c0_44de;
@@ -54,6 +62,10 @@ impl RankDad {
 impl<M: DistModel> DistAlgorithm<M> for RankDad {
     fn name(&self) -> &'static str {
         "rank-dad"
+    }
+
+    fn protocol(&self) -> Box<dyn StepProtocol<M>> {
+        Box::new(RankDadProtocol { cfg: self.cfg.clone() })
     }
 
     fn step(&mut self, cluster: &mut Cluster<M>, batches: &[Batch]) -> StepOutcome {
@@ -137,6 +149,10 @@ impl PowerSgd {
 impl<M: DistModel> DistAlgorithm<M> for PowerSgd {
     fn name(&self) -> &'static str {
         "powersgd"
+    }
+
+    fn protocol(&self) -> Box<dyn StepProtocol<M>> {
+        Box::new(PowerSgdProtocol::new(self.rank))
     }
 
     fn step(&mut self, cluster: &mut Cluster<M>, batches: &[Batch]) -> StepOutcome {
@@ -260,4 +276,246 @@ fn bytes_now<M>(cluster: &Cluster<M>) -> (u64, u64) {
         cluster.ledger.total_dir(Direction::SiteToAgg),
         cluster.ledger.total_dir(Direction::AggToSite),
     )
+}
+
+// ---------------------------------------------------------------------------
+// Wire protocols
+// ---------------------------------------------------------------------------
+
+/// Wire protocol for [`RankDad`]: each site factors its local outer
+/// products and ships the theta-truncated `(q, g)` pairs as `lowrank-q` /
+/// `lowrank-g` payload frames plus one ledger-exempt `eff-rank` control
+/// frame (the adaptive-bandwidth telemetry); the aggregator stacks the
+/// factors along the rank dimension (concatenation is exact — the
+/// reconstruction is linear: Σ_s Q_sᵀ G_s = Q̂ᵀ Ĝ) and broadcasts. Bias
+/// and direct gradients ride dSGD-style as in the simulation.
+pub struct RankDadProtocol {
+    /// Rank/iteration/theta configuration (shared with the simulated path).
+    pub cfg: RankDadConfig,
+}
+
+impl<M: DistModel> StepProtocol<M> for RankDadProtocol {
+    fn name(&self) -> &'static str {
+        "rank-dad"
+    }
+
+    fn site_exchange(
+        &mut self,
+        ep: &mut Endpoint<'_>,
+        model: &M,
+        stats: &LocalStats,
+        _site_id: usize,
+        sync: &StepSync,
+    ) -> io::Result<Vec<Matrix>> {
+        let shapes = model.param_shapes();
+        let scale = sync.scale();
+        let mut grads: Vec<Matrix> = shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect();
+        let mut ranks = ByteWriter::new();
+        ranks.push_u16(stats.entries.len() as u16);
+        for e in &stats.entries {
+            let f =
+                rankdad_factors(&e.a, &e.d, self.cfg.max_rank, self.cfg.n_iters, self.cfg.theta);
+            let (q, g) = f.truncated();
+            ep.up("lowrank-q", &[&q])?;
+            ep.up("lowrank-g", &[&g])?;
+            ranks.push_u16(f.eff_rank as u16);
+        }
+        ep.ctrl_up("eff-rank", &ranks.finish())?;
+        for e in &stats.entries {
+            let q_hat = ep.down1("lowrank-q")?;
+            let g_hat = ep.down1("lowrank-g")?;
+            let mut gw = matmul_tn(&q_hat, &g_hat);
+            gw.scale_inplace(scale);
+            grads[e.w_idx] = gw;
+        }
+        // Bias gradients: colsum(Δ) has no outer-product form; dSGD-style.
+        for e in &stats.entries {
+            if e.b_idx.is_some() {
+                let bg = e.bias_grad(scale);
+                ep.up("bias-grad", &[&bg])?;
+            }
+        }
+        for e in &stats.entries {
+            if let Some(bi) = e.b_idx {
+                grads[bi] = ep.down1("bias-grad")?;
+            }
+        }
+        for (idx, g) in site_direct_exchange(ep, stats)? {
+            grads[idx] = g;
+        }
+        Ok(grads)
+    }
+
+    fn agg_exchange(
+        &mut self,
+        ep: &mut Endpoint<'_>,
+        model: &M,
+        metas: &[StepMeta],
+        sync: &StepSync,
+    ) -> io::Result<AggExchange> {
+        let shapes = model.param_shapes();
+        let scale = sync.scale();
+        let n_entries = metas[0].entries.len();
+        let mut q_parts: Vec<Vec<Matrix>> = vec![Vec::new(); n_entries];
+        let mut g_parts: Vec<Vec<Matrix>> = vec![Vec::new(); n_entries];
+        let mut eff_ranks: Vec<Vec<usize>> = vec![Vec::new(); n_entries];
+        for (site, meta) in metas.iter().enumerate() {
+            if meta.entries.len() != n_entries {
+                return Err(proto_err(format!("site {site} stats layout mismatch")));
+            }
+            for ei in 0..n_entries {
+                q_parts[ei].push(ep.gather1(site, "lowrank-q")?);
+                g_parts[ei].push(ep.gather1(site, "lowrank-g")?);
+            }
+            let body = ep.ctrl_from(site, "eff-rank")?;
+            let mut r = ByteReader::new(&body);
+            if r.read_u16()? as usize != n_entries {
+                return Err(proto_err(format!("site {site} eff-rank arity mismatch")));
+            }
+            for ranks in eff_ranks.iter_mut() {
+                ranks.push(r.read_u16()? as usize);
+            }
+        }
+        let mut grads: Vec<Matrix> = shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect();
+        for ei in 0..n_entries {
+            let q_refs: Vec<&Matrix> = q_parts[ei].iter().collect();
+            let g_refs: Vec<&Matrix> = g_parts[ei].iter().collect();
+            let q_hat = Matrix::vertcat(&q_refs);
+            let g_hat = Matrix::vertcat(&g_refs);
+            ep.bcast("lowrank-q", &[&q_hat])?;
+            ep.bcast("lowrank-g", &[&g_hat])?;
+            let mut gw = matmul_tn(&q_hat, &g_hat);
+            gw.scale_inplace(scale);
+            grads[metas[0].entries[ei].0 as usize] = gw;
+        }
+        // Biases: sum per-site scaled bias grads in site order (the
+        // simulated reduction order), broadcast the sums. Per-socket FIFO
+        // is respected: sites ship their biases in entry order, and each
+        // gather_sum round reads exactly one frame per site.
+        for &(_, b_idx) in &metas[0].entries {
+            if b_idx == u32::MAX {
+                continue;
+            }
+            let sum = gather_sum(ep, metas.len(), "bias-grad")?;
+            ep.bcast("bias-grad", &[&sum])?;
+            grads[b_idx as usize] = sum;
+        }
+        for (idx, g) in agg_direct_exchange(ep, metas, scale)? {
+            grads[idx] = g;
+        }
+        Ok(AggExchange { grads, eff_ranks })
+    }
+}
+
+/// Wire protocol for [`PowerSgd`]: the two-phase factored all-reduce.
+/// Phase 1 ships P = (M + err) Q up; the aggregator means and
+/// orthonormalizes P̂ and broadcasts it. Phase 2 ships Q = (M + err)ᵀ P̂ up;
+/// the aggregator means and broadcasts Q̂; every endpoint reconstructs
+/// M̂ = P̂ Q̂ᵀ. The warm-start Q and the error-feedback accumulator live in
+/// this value — **site-local**, exactly one compressor per process, unlike
+/// the simulation's god's-eye `states[site][entry]` table.
+pub struct PowerSgdProtocol {
+    rank: usize,
+    states: Vec<PowerSgdState>,
+}
+
+impl PowerSgdProtocol {
+    /// Fresh protocol state at compression rank `rank` (compressors are
+    /// lazy-initialized on the first step, when entry shapes are known,
+    /// from the shared deterministic seed so every site's warm start
+    /// agrees).
+    pub fn new(rank: usize) -> Self {
+        PowerSgdProtocol { rank, states: vec![] }
+    }
+}
+
+impl<M: DistModel> StepProtocol<M> for PowerSgdProtocol {
+    fn name(&self) -> &'static str {
+        "powersgd"
+    }
+
+    fn site_exchange(
+        &mut self,
+        ep: &mut Endpoint<'_>,
+        model: &M,
+        stats: &LocalStats,
+        _site_id: usize,
+        sync: &StepSync,
+    ) -> io::Result<Vec<Matrix>> {
+        let shapes = model.param_shapes();
+        let scale = sync.scale();
+        let n_sites = ep.n_sites();
+        if self.states.is_empty() {
+            let mut rng = Rng::new(POWERSGD_SEED);
+            self.states = stats
+                .entries
+                .iter()
+                .map(|e| {
+                    let (r, c) = shapes[e.w_idx];
+                    PowerSgdState::new(r, c, self.rank, &mut rng)
+                })
+                .collect();
+        }
+        if self.states.len() != stats.entries.len() {
+            return Err(proto_err("powersgd state/entry arity mismatch".into()));
+        }
+        let mut grads: Vec<Matrix> = shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect();
+        for (ei, e) in stats.entries.iter().enumerate() {
+            // Mean-equivalent local gradient: S x contribution, so the
+            // cross-site mean equals the global mean gradient.
+            let m = e.weight_grad(scale * n_sites as f32);
+            let p = self.states[ei].compress_p(&m);
+            ep.up("psgd-p", &[&p])?;
+            let p_hat = ep.down1("psgd-p")?;
+            let q = self.states[ei].compress_q(&p_hat);
+            ep.up("psgd-q", &[&q])?;
+            let q_hat = ep.down1("psgd-q")?;
+            grads[e.w_idx] = self.states[ei].finish(&p_hat, &q_hat);
+            if let Some(bi) = e.b_idx {
+                let bg = e.bias_grad(scale);
+                ep.up("bias-grad", &[&bg])?;
+                grads[bi] = ep.down1("bias-grad")?;
+            }
+        }
+        for (idx, g) in site_direct_exchange(ep, stats)? {
+            grads[idx] = g;
+        }
+        Ok(grads)
+    }
+
+    fn agg_exchange(
+        &mut self,
+        ep: &mut Endpoint<'_>,
+        model: &M,
+        metas: &[StepMeta],
+        sync: &StepSync,
+    ) -> io::Result<AggExchange> {
+        let shapes = model.param_shapes();
+        let scale = sync.scale();
+        let n_sites = metas.len();
+        let mut grads: Vec<Matrix> = shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect();
+        for &(w_idx, b_idx) in &metas[0].entries {
+            // Phase 1: mean the P factors (gather_sum accumulates in site
+            // order, the simulated reduction order), orthonormalize,
+            // broadcast.
+            let mut p_hat = gather_sum(ep, n_sites, "psgd-p")?;
+            p_hat.scale_inplace(1.0 / n_sites as f32);
+            orthonormalize_cols(&mut p_hat);
+            ep.bcast("psgd-p", &[&p_hat])?;
+            // Phase 2: mean the Q factors, broadcast, reconstruct.
+            let mut q_hat = gather_sum(ep, n_sites, "psgd-q")?;
+            q_hat.scale_inplace(1.0 / n_sites as f32);
+            ep.bcast("psgd-q", &[&q_hat])?;
+            grads[w_idx as usize] = matmul_nt(&p_hat, &q_hat);
+            if b_idx != u32::MAX {
+                let bsum = gather_sum(ep, n_sites, "bias-grad")?;
+                ep.bcast("bias-grad", &[&bsum])?;
+                grads[b_idx as usize] = bsum;
+            }
+        }
+        for (idx, g) in agg_direct_exchange(ep, metas, scale)? {
+            grads[idx] = g;
+        }
+        Ok(AggExchange { grads, eff_ranks: vec![] })
+    }
 }

@@ -4,12 +4,19 @@
 //! which is precisely the paper's Table-2/Figure-1 claim, asserted
 //! bit-tight in this module's tests.
 
+use std::io;
+
 use crate::algos::common::{
     exchange_direct, gather_local_stats, weighted_loss, DistAlgorithm, StepOutcome,
 };
+use crate::algos::protocol::{
+    agg_direct_exchange, site_direct_exchange, AggExchange, Endpoint, StepMeta, StepProtocol,
+    StepSync,
+};
+use crate::dist::wire::proto_err;
 use crate::dist::Cluster;
 use crate::nn::model::{Batch, DistModel};
-use crate::nn::stats::{assemble_grads, concat_stats, StatsEntry};
+use crate::nn::stats::{assemble_grads, concat_stats, LocalStats, StatsEntry};
 use crate::tensor::Matrix;
 
 /// Pooled baseline: one model sees the union batch; no communication.
@@ -18,6 +25,10 @@ pub struct Pooled;
 impl<M: DistModel> DistAlgorithm<M> for Pooled {
     fn name(&self) -> &'static str {
         "pooled"
+    }
+
+    fn protocol(&self) -> Box<dyn StepProtocol<M>> {
+        Box::new(PooledProtocol)
     }
 
     fn step(&mut self, cluster: &mut Cluster<M>, batches: &[Batch]) -> StepOutcome {
@@ -40,6 +51,10 @@ pub struct Dsgd;
 impl<M: DistModel> DistAlgorithm<M> for Dsgd {
     fn name(&self) -> &'static str {
         "dsgd"
+    }
+
+    fn protocol(&self) -> Box<dyn StepProtocol<M>> {
+        Box::new(DsgdProtocol)
     }
 
     fn step(&mut self, cluster: &mut Cluster<M>, batches: &[Batch]) -> StepOutcome {
@@ -84,6 +99,10 @@ impl<M: DistModel> DistAlgorithm<M> for Dad {
         "dad"
     }
 
+    fn protocol(&self) -> Box<dyn StepProtocol<M>> {
+        Box::new(DadProtocol)
+    }
+
     fn step(&mut self, cluster: &mut Cluster<M>, batches: &[Batch]) -> StepOutcome {
         cluster.next_step();
         let (up0, down0) = step_bytes(cluster);
@@ -122,6 +141,10 @@ pub struct Edad;
 impl<M: DistModel> DistAlgorithm<M> for Edad {
     fn name(&self) -> &'static str {
         "edad"
+    }
+
+    fn protocol(&self) -> Box<dyn StepProtocol<M>> {
+        Box::new(EdadProtocol)
     }
 
     fn step(&mut self, cluster: &mut Cluster<M>, batches: &[Batch]) -> StepOutcome {
@@ -188,4 +211,275 @@ fn step_bytes<M>(cluster: &Cluster<M>) -> (u64, u64) {
         cluster.ledger.total_dir(Direction::SiteToAgg),
         cluster.ledger.total_dir(Direction::AggToSite),
     )
+}
+
+// ---------------------------------------------------------------------------
+// Wire protocols (the same exchanges as typed rounds over a Transport)
+// ---------------------------------------------------------------------------
+
+/// Vertcat a per-site stack list in site order (the aggregator's reduce).
+fn vertcat_parts(parts: &[Matrix]) -> Matrix {
+    let refs: Vec<&Matrix> = parts.iter().collect();
+    Matrix::vertcat(&refs)
+}
+
+/// Wire protocol for [`Pooled`]: the oracle ships nothing. Every process
+/// (the aggregator included) rebuilds the union batch from the seed and
+/// computes the pooled gradient locally; only the meta/sync prologue
+/// crosses the wire, so the remote ledger is empty — exactly like the
+/// simulated oracle's.
+pub struct PooledProtocol;
+
+impl<M: DistModel> StepProtocol<M> for PooledProtocol {
+    fn name(&self) -> &'static str {
+        "pooled"
+    }
+
+    fn oracle(&self) -> bool {
+        true
+    }
+
+    fn site_exchange(
+        &mut self,
+        _ep: &mut Endpoint<'_>,
+        model: &M,
+        stats: &LocalStats,
+        _site_id: usize,
+        sync: &StepSync,
+    ) -> io::Result<Vec<Matrix>> {
+        let scale = sync.scale();
+        Ok(stats.assemble_grads(&model.param_shapes(), scale, scale))
+    }
+
+    fn agg_exchange(
+        &mut self,
+        _ep: &mut Endpoint<'_>,
+        _model: &M,
+        _metas: &[StepMeta],
+        _sync: &StepSync,
+    ) -> io::Result<AggExchange> {
+        Err(proto_err(
+            "the pooled oracle has no aggregator half; the driver runs the site half \
+             on the union batch"
+                .into(),
+        ))
+    }
+}
+
+/// Wire protocol for [`Dsgd`]: each site ships its full scaled local
+/// gradient; the aggregator sums (the sum of the 1/N-scaled locals *is*
+/// the global mean) and broadcasts the result.
+pub struct DsgdProtocol;
+
+impl<M: DistModel> StepProtocol<M> for DsgdProtocol {
+    fn name(&self) -> &'static str {
+        "dsgd"
+    }
+
+    fn site_exchange(
+        &mut self,
+        ep: &mut Endpoint<'_>,
+        model: &M,
+        stats: &LocalStats,
+        _site_id: usize,
+        sync: &StepSync,
+    ) -> io::Result<Vec<Matrix>> {
+        let shapes = model.param_shapes();
+        let scale = sync.scale();
+        let local = stats.assemble_grads(&shapes, scale, scale);
+        let refs: Vec<&Matrix> = local.iter().collect();
+        ep.up("grad", &refs)?;
+        let grads = ep.down("grad")?;
+        if grads.len() != shapes.len() {
+            return Err(proto_err("grad broadcast arity mismatch".into()));
+        }
+        Ok(grads)
+    }
+
+    fn agg_exchange(
+        &mut self,
+        ep: &mut Endpoint<'_>,
+        model: &M,
+        metas: &[StepMeta],
+        _sync: &StepSync,
+    ) -> io::Result<AggExchange> {
+        let shapes = model.param_shapes();
+        let mut acc: Option<Vec<Matrix>> = None;
+        for site in 0..metas.len() {
+            let g = ep.gather(site, "grad")?;
+            if g.len() != shapes.len() {
+                return Err(proto_err(format!("site {site} grad arity mismatch")));
+            }
+            acc = Some(match acc {
+                None => g,
+                Some(mut a) => {
+                    for (x, y) in a.iter_mut().zip(&g) {
+                        x.axpy(1.0, y);
+                    }
+                    a
+                }
+            });
+        }
+        let grads = acc.ok_or_else(|| proto_err("dsgd needs at least one site".into()))?;
+        let refs: Vec<&Matrix> = grads.iter().collect();
+        ep.bcast("grad", &refs)?;
+        Ok(AggExchange { grads, eff_ranks: vec![] })
+    }
+}
+
+/// Wire protocol for [`Dad`] — Algorithm 1 as typed rounds: per-entry
+/// (A, Δ) uplinks, concatenated (Â, Δ̂) broadcasts, direct-grad averaging,
+/// local gradient assembly at every endpoint.
+pub struct DadProtocol;
+
+impl<M: DistModel> StepProtocol<M> for DadProtocol {
+    fn name(&self) -> &'static str {
+        "dad"
+    }
+
+    fn site_exchange(
+        &mut self,
+        ep: &mut Endpoint<'_>,
+        model: &M,
+        stats: &LocalStats,
+        _site_id: usize,
+        sync: &StepSync,
+    ) -> io::Result<Vec<Matrix>> {
+        for e in &stats.entries {
+            ep.up("acts", &[&e.a])?;
+            ep.up("deltas", &[&e.d])?;
+        }
+        let mut cat: Vec<StatsEntry> = Vec::with_capacity(stats.entries.len());
+        for e in &stats.entries {
+            let a = ep.down1("acts")?;
+            let d = ep.down1("deltas")?;
+            cat.push(StatsEntry { w_idx: e.w_idx, b_idx: e.b_idx, a, d });
+        }
+        let direct = site_direct_exchange(ep, stats)?;
+        Ok(assemble_grads(&model.param_shapes(), &cat, &direct, sync.scale(), 1.0))
+    }
+
+    fn agg_exchange(
+        &mut self,
+        ep: &mut Endpoint<'_>,
+        model: &M,
+        metas: &[StepMeta],
+        sync: &StepSync,
+    ) -> io::Result<AggExchange> {
+        let mut per_site: Vec<Vec<StatsEntry>> = Vec::with_capacity(metas.len());
+        for (site, meta) in metas.iter().enumerate() {
+            let mut entries = Vec::with_capacity(meta.entries.len());
+            for &(w_idx, b_idx) in &meta.entries {
+                let a = ep.gather1(site, "acts")?;
+                let d = ep.gather1(site, "deltas")?;
+                entries.push(StatsEntry {
+                    w_idx: w_idx as usize,
+                    b_idx: (b_idx != u32::MAX).then_some(b_idx as usize),
+                    a,
+                    d,
+                });
+            }
+            per_site.push(entries);
+        }
+        let entry_refs: Vec<&[StatsEntry]> = per_site.iter().map(|e| &e[..]).collect();
+        let cat = concat_stats(&entry_refs);
+        for e in &cat {
+            ep.bcast("acts", &[&e.a])?;
+            ep.bcast("deltas", &[&e.d])?;
+        }
+        let scale = sync.scale();
+        let direct = agg_direct_exchange(ep, metas, scale)?;
+        let grads = assemble_grads(&model.param_shapes(), &cat, &direct, scale, 1.0);
+        Ok(AggExchange { grads, eff_ranks: vec![] })
+    }
+}
+
+/// Wire protocol for [`Edad`] — Algorithm 2 as typed rounds: A-stacks,
+/// aux activations and Δ_L travel; every endpoint recomputes the hidden
+/// aggregated deltas locally via the model's derivative-from-output
+/// identity (eq. 5).
+pub struct EdadProtocol;
+
+impl<M: DistModel> StepProtocol<M> for EdadProtocol {
+    fn name(&self) -> &'static str {
+        "edad"
+    }
+
+    fn site_exchange(
+        &mut self,
+        ep: &mut Endpoint<'_>,
+        model: &M,
+        stats: &LocalStats,
+        _site_id: usize,
+        sync: &StepSync,
+    ) -> io::Result<Vec<Matrix>> {
+        let n_entries = stats.entries.len();
+        if n_entries == 0 {
+            return Err(proto_err("edad needs at least one stats entry".into()));
+        }
+        for e in &stats.entries {
+            ep.up("acts", &[&e.a])?;
+        }
+        for aux in &stats.aux {
+            ep.up("aux-acts", &[aux])?;
+        }
+        ep.up("delta-L", &[&stats.entries[n_entries - 1].d])?;
+        let mut a_hats = Vec::with_capacity(n_entries);
+        for _ in 0..n_entries {
+            a_hats.push(ep.down1("acts")?);
+        }
+        let mut aux_hats = Vec::with_capacity(stats.aux.len());
+        for _ in 0..stats.aux.len() {
+            aux_hats.push(ep.down1("aux-acts")?);
+        }
+        let delta_l = ep.down1("delta-L")?;
+        let recomputed = model
+            .edad_recompute(&a_hats, &aux_hats, &delta_l, &sync.site_rows)
+            .ok_or_else(|| proto_err("model does not support edAD (use dad)".into()))?;
+        let direct = site_direct_exchange(ep, stats)?;
+        Ok(assemble_grads(&model.param_shapes(), &recomputed, &direct, sync.scale(), 1.0))
+    }
+
+    fn agg_exchange(
+        &mut self,
+        ep: &mut Endpoint<'_>,
+        model: &M,
+        metas: &[StepMeta],
+        sync: &StepSync,
+    ) -> io::Result<AggExchange> {
+        let n_entries = metas[0].entries.len();
+        let n_aux = metas[0].n_aux as usize;
+        let mut a_parts: Vec<Vec<Matrix>> = vec![Vec::new(); n_entries];
+        let mut aux_parts: Vec<Vec<Matrix>> = vec![Vec::new(); n_aux];
+        let mut dl_parts: Vec<Matrix> = Vec::with_capacity(metas.len());
+        for (site, meta) in metas.iter().enumerate() {
+            if meta.entries.len() != n_entries || meta.n_aux as usize != n_aux {
+                return Err(proto_err(format!("site {site} stats layout mismatch")));
+            }
+            for part in a_parts.iter_mut() {
+                part.push(ep.gather1(site, "acts")?);
+            }
+            for part in aux_parts.iter_mut() {
+                part.push(ep.gather1(site, "aux-acts")?);
+            }
+            dl_parts.push(ep.gather1(site, "delta-L")?);
+        }
+        let a_hats: Vec<Matrix> = a_parts.iter().map(|p| vertcat_parts(p)).collect();
+        let aux_hats: Vec<Matrix> = aux_parts.iter().map(|p| vertcat_parts(p)).collect();
+        let delta_l = vertcat_parts(&dl_parts);
+        for a in &a_hats {
+            ep.bcast("acts", &[a])?;
+        }
+        for a in &aux_hats {
+            ep.bcast("aux-acts", &[a])?;
+        }
+        ep.bcast("delta-L", &[&delta_l])?;
+        let recomputed = model
+            .edad_recompute(&a_hats, &aux_hats, &delta_l, &sync.site_rows)
+            .ok_or_else(|| proto_err("model does not support edAD (use dad)".into()))?;
+        let scale = sync.scale();
+        let direct = agg_direct_exchange(ep, metas, scale)?;
+        let grads = assemble_grads(&model.param_shapes(), &recomputed, &direct, scale, 1.0);
+        Ok(AggExchange { grads, eff_ranks: vec![] })
+    }
 }

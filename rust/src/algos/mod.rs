@@ -19,11 +19,15 @@ pub mod common;
 pub mod compressed;
 pub mod exact;
 pub mod p2p;
+pub mod protocol;
 
 pub use common::{concat_batches, DistAlgorithm, StepOutcome};
-pub use compressed::{PowerSgd, RankDad, RankDadConfig};
-pub use exact::{Dad, Dsgd, Edad, Pooled};
-pub use p2p::DadP2p;
+pub use compressed::{PowerSgd, PowerSgdProtocol, RankDad, RankDadConfig, RankDadProtocol};
+pub use exact::{
+    Dad, DadProtocol, Dsgd, DsgdProtocol, Edad, EdadProtocol, Pooled, PooledProtocol,
+};
+pub use p2p::{DadP2p, DadP2pProtocol};
+pub use protocol::{AggExchange, Endpoint, StepMeta, StepProtocol, StepSync};
 
 use crate::nn::model::DistModel;
 
@@ -59,24 +63,43 @@ pub enum AlgoSpec {
 impl AlgoSpec {
     /// Parse a CLI/config spelling: `pooled | dsgd | dad | dad-p2p | edad |
     /// rank-dad[:r] | powersgd[:r]`.
-    pub fn parse(s: &str) -> Option<AlgoSpec> {
-        // Forms: pooled | dsgd | dad | edad | rank-dad[:r] | powersgd[:r]
+    ///
+    /// Malformed spellings are hard errors, not silent fallbacks: a
+    /// non-numeric or zero `:rank` argument (`rank-dad:abc`) used to train
+    /// at the default rank 10 with the wrong config on record — now it
+    /// fails with a message the CLI surfaces.
+    pub fn parse(s: &str) -> Result<AlgoSpec, String> {
         let (name, arg) = match s.split_once(':') {
             Some((n, a)) => (n, Some(a)),
             None => (s, None),
         };
-        let rank = |d: usize| arg.and_then(|a| a.parse().ok()).unwrap_or(d);
+        let no_arg = |spec: AlgoSpec| match arg {
+            None => Ok(spec),
+            Some(a) => Err(format!("algorithm {name:?} takes no :argument (got {a:?})")),
+        };
+        let rank = |default: usize| match arg {
+            None => Ok(default),
+            Some(a) => match a.parse::<usize>() {
+                Ok(r) if r >= 1 => Ok(r),
+                _ => Err(format!(
+                    "rank argument {a:?} for {name:?} must be a positive integer (e.g. {name}:8)"
+                )),
+            },
+        };
         match name {
-            "pooled" => Some(AlgoSpec::Pooled),
-            "dsgd" => Some(AlgoSpec::Dsgd),
-            "dad" => Some(AlgoSpec::Dad),
-            "dad-p2p" | "dadp2p" => Some(AlgoSpec::DadP2p),
-            "edad" => Some(AlgoSpec::Edad),
+            "pooled" => no_arg(AlgoSpec::Pooled),
+            "dsgd" => no_arg(AlgoSpec::Dsgd),
+            "dad" => no_arg(AlgoSpec::Dad),
+            "dad-p2p" | "dadp2p" => no_arg(AlgoSpec::DadP2p),
+            "edad" => no_arg(AlgoSpec::Edad),
             "rank-dad" | "rankdad" => {
-                Some(AlgoSpec::RankDad { max_rank: rank(10), n_iters: 10, theta: 1e-3 })
+                Ok(AlgoSpec::RankDad { max_rank: rank(10)?, n_iters: 10, theta: 1e-3 })
             }
-            "powersgd" | "power-sgd" => Some(AlgoSpec::PowerSgd { rank: rank(10) }),
-            _ => None,
+            "powersgd" | "power-sgd" => Ok(AlgoSpec::PowerSgd { rank: rank(10)? }),
+            other => Err(format!(
+                "unknown algorithm {other:?} \
+                 (pooled | dsgd | dad | dad-p2p | edad | rank-dad[:r] | powersgd[:r])"
+            )),
         }
     }
 
@@ -247,16 +270,34 @@ mod tests {
 
     #[test]
     fn spec_parsing() {
-        assert_eq!(AlgoSpec::parse("dad"), Some(AlgoSpec::Dad));
-        assert_eq!(AlgoSpec::parse("dad-p2p"), Some(AlgoSpec::DadP2p));
+        assert_eq!(AlgoSpec::parse("dad"), Ok(AlgoSpec::Dad));
+        assert_eq!(AlgoSpec::parse("dad-p2p"), Ok(AlgoSpec::DadP2p));
         assert_eq!(AlgoSpec::parse("dad-p2p").unwrap().name(), "dad-p2p");
         assert_eq!(
             AlgoSpec::parse("rank-dad:4"),
-            Some(AlgoSpec::RankDad { max_rank: 4, n_iters: 10, theta: 1e-3 })
+            Ok(AlgoSpec::RankDad { max_rank: 4, n_iters: 10, theta: 1e-3 })
         );
-        assert_eq!(AlgoSpec::parse("powersgd:2"), Some(AlgoSpec::PowerSgd { rank: 2 }));
-        assert_eq!(AlgoSpec::parse("nope"), None);
+        assert_eq!(AlgoSpec::parse("powersgd:2"), Ok(AlgoSpec::PowerSgd { rank: 2 }));
+        assert!(AlgoSpec::parse("nope").is_err());
         assert_eq!(AlgoSpec::parse("rank-dad:4").unwrap().name(), "rank-dad:4");
+    }
+
+    /// Malformed `:rank` arguments are parse errors, not a silent fallback
+    /// to rank 10 — `--algo rank-dad:abc` must refuse to train.
+    #[test]
+    fn spec_parsing_rejects_malformed_args() {
+        assert!(AlgoSpec::parse("rank-dad:abc").is_err());
+        assert!(AlgoSpec::parse("rank-dad:0").is_err());
+        assert!(AlgoSpec::parse("rank-dad:-3").is_err());
+        assert!(AlgoSpec::parse("powersgd:1.5").is_err());
+        assert!(AlgoSpec::parse("powersgd:").is_err());
+        // Non-parameterized algorithms reject any :argument outright.
+        assert!(AlgoSpec::parse("dad:2").is_err());
+        assert!(AlgoSpec::parse("edad:x").is_err());
+        // Alias spellings parse to the same spec.
+        assert_eq!(AlgoSpec::parse("dadp2p"), Ok(AlgoSpec::DadP2p));
+        assert_eq!(AlgoSpec::parse("rankdad:3"), AlgoSpec::parse("rank-dad:3"));
+        assert_eq!(AlgoSpec::parse("power-sgd:2"), AlgoSpec::parse("powersgd:2"));
     }
 
     /// GRU path: dAD == pooled on sequence batches too (paper §4.1.2).

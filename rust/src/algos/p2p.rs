@@ -16,12 +16,18 @@
 //! (S-1) ≥ 1 + S (never for the up+down total), i.e. p2p always ships
 //! fewer total bytes but spreads them across S uplinks.
 
+use std::io;
+
 use crate::algos::common::{
     gather_local_stats, weighted_loss, DistAlgorithm, StepOutcome,
 };
+use crate::algos::protocol::{
+    expect_mats, mean_direct, one_mat, AggExchange, Endpoint, StepMeta, StepProtocol, StepSync,
+};
+use crate::dist::wire::proto_err;
 use crate::dist::{Cluster, Direction};
 use crate::nn::model::{Batch, DistModel};
-use crate::nn::stats::{assemble_grads, concat_stats, StatsEntry};
+use crate::nn::stats::{assemble_grads, concat_stats, LocalStats, StatsEntry};
 use crate::tensor::Matrix;
 
 /// dAD over a fully-connected peer topology (no aggregator).
@@ -30,6 +36,10 @@ pub struct DadP2p;
 impl<M: DistModel> DistAlgorithm<M> for DadP2p {
     fn name(&self) -> &'static str {
         "dad-p2p"
+    }
+
+    fn protocol(&self) -> Box<dyn StepProtocol<M>> {
+        Box::new(DadP2pProtocol)
     }
 
     fn step(&mut self, cluster: &mut Cluster<M>, batches: &[Batch]) -> StepOutcome {
@@ -75,6 +85,148 @@ impl<M: DistModel> DistAlgorithm<M> for DadP2p {
             bytes_up: p2p1 - p2p0,
             bytes_down: 0,
         }
+    }
+}
+
+/// Wire protocol for [`DadP2p`]: one all-to-all round. Every site ships
+/// its (A, Δ) stacks (and raw direct grads) to all S-1 peers; each site
+/// then vertcats what it holds — its own statistics plus the received
+/// ones, in canonical site order — and assembles the exact global
+/// gradient locally, with no trusted aggregation step.
+///
+/// On the star TCP fabric the hub *relays* the peer frames (a true mesh
+/// transport plugs in at the same seam later); the ledger prices each
+/// shipment as S-1 direct unicasts under `Direction::PeerToPeer`, so the
+/// measured bytes equal what a real mesh would ship — and equal the
+/// loopback simulation's. The hub decodes what it relays to keep its
+/// evaluation replica in lockstep; it never originates statistics.
+pub struct DadP2pProtocol;
+
+impl<M: DistModel> StepProtocol<M> for DadP2pProtocol {
+    fn name(&self) -> &'static str {
+        "dad-p2p"
+    }
+
+    fn site_exchange(
+        &mut self,
+        ep: &mut Endpoint<'_>,
+        model: &M,
+        stats: &LocalStats,
+        site_id: usize,
+        sync: &StepSync,
+    ) -> io::Result<Vec<Matrix>> {
+        let n_sites = ep.n_sites();
+        for e in &stats.entries {
+            ep.p2p("acts", &[&e.a])?;
+            ep.p2p("deltas", &[&e.d])?;
+        }
+        if !stats.direct.is_empty() {
+            let refs: Vec<&Matrix> = stats.direct.iter().map(|(_, g)| g).collect();
+            ep.p2p("direct-grad", &refs)?;
+        }
+        // Receive every peer's statistics, relayed in canonical site order;
+        // this site's own slot is filled locally.
+        let mut per_site: Vec<Vec<StatsEntry>> = Vec::with_capacity(n_sites);
+        let mut per_direct: Vec<Vec<Matrix>> = Vec::with_capacity(n_sites);
+        for src in 0..n_sites {
+            if src == site_id {
+                per_site.push(stats.entries.clone());
+                per_direct.push(stats.direct.iter().map(|(_, g)| g.clone()).collect());
+                continue;
+            }
+            let mut entries = Vec::with_capacity(stats.entries.len());
+            for e in &stats.entries {
+                let a = ep.p2p_recv1("acts")?;
+                let d = ep.p2p_recv1("deltas")?;
+                entries.push(StatsEntry { w_idx: e.w_idx, b_idx: e.b_idx, a, d });
+            }
+            let direct = if stats.direct.is_empty() {
+                vec![]
+            } else {
+                let mats = ep.p2p_recv("direct-grad")?;
+                if mats.len() != stats.direct.len() {
+                    return Err(proto_err(format!("peer {src} direct-grad arity mismatch")));
+                }
+                mats
+            };
+            per_site.push(entries);
+            per_direct.push(direct);
+        }
+        let entry_refs: Vec<&[StatsEntry]> = per_site.iter().map(|e| &e[..]).collect();
+        let cat = concat_stats(&entry_refs);
+        let scale = sync.scale();
+        let idxs: Vec<usize> = stats.direct.iter().map(|&(i, _)| i).collect();
+        let direct = mean_direct(&per_direct, &idxs, scale);
+        Ok(assemble_grads(&model.param_shapes(), &cat, &direct, scale, 1.0))
+    }
+
+    fn agg_exchange(
+        &mut self,
+        ep: &mut Endpoint<'_>,
+        model: &M,
+        metas: &[StepMeta],
+        sync: &StepSync,
+    ) -> io::Result<AggExchange> {
+        // Phase 1: drain every site's uplink completely before writing a
+        // single forwarded byte. A read-one/forward-one hub could block
+        // writing to a peer whose own uplink it has not drained yet —
+        // mutual blocking at payloads beyond the kernel socket buffers.
+        let mut frames: Vec<Vec<crate::dist::wire::Frame>> = Vec::with_capacity(metas.len());
+        for (site, meta) in metas.iter().enumerate() {
+            let n_frames = meta.entries.len() * 2 + usize::from(!meta.direct_idx.is_empty());
+            let mut fs = Vec::with_capacity(n_frames);
+            for _ in 0..n_frames {
+                fs.push(ep.p2p_pull(site)?);
+            }
+            frames.push(fs);
+        }
+        // Phase 2: forward in site order — the order every site's receive
+        // loop expects; by now all sites are blocked reading.
+        for (site, fs) in frames.iter().enumerate() {
+            ep.p2p_forward(site, fs)?;
+        }
+        // Phase 3: decode the drained frames into per-site statistics for
+        // the hub's lockstep evaluation replica.
+        let mut per_site: Vec<Vec<StatsEntry>> = Vec::with_capacity(metas.len());
+        let mut per_direct: Vec<Vec<Matrix>> = Vec::with_capacity(metas.len());
+        for ((site, meta), fs) in metas.iter().enumerate().zip(frames) {
+            let mut it = fs.into_iter();
+            let mut next = |tag: &str| -> io::Result<Vec<Matrix>> {
+                let f = it
+                    .next()
+                    .ok_or_else(|| proto_err(format!("site {site}: p2p frame underrun")))?;
+                expect_mats(f, tag)
+            };
+            let mut entries = Vec::with_capacity(meta.entries.len());
+            for &(w_idx, b_idx) in &meta.entries {
+                let a = one_mat(next("acts")?)?;
+                let d = one_mat(next("deltas")?)?;
+                entries.push(StatsEntry {
+                    w_idx: w_idx as usize,
+                    b_idx: (b_idx != u32::MAX).then_some(b_idx as usize),
+                    a,
+                    d,
+                });
+            }
+            let direct = if meta.direct_idx.is_empty() {
+                vec![]
+            } else {
+                let mats = next("direct-grad")?;
+                if mats.len() != meta.direct_idx.len() {
+                    return Err(proto_err(format!("site {site} direct-grad arity mismatch")));
+                }
+                mats
+            };
+            per_site.push(entries);
+            per_direct.push(direct);
+        }
+        let entry_refs: Vec<&[StatsEntry]> = per_site.iter().map(|e| &e[..]).collect();
+        let cat = concat_stats(&entry_refs);
+        let scale = sync.scale();
+        let idxs: Vec<usize> = metas[0].direct_idx.iter().map(|&i| i as usize).collect();
+        let direct = mean_direct(&per_direct, &idxs, scale);
+        let grads = assemble_grads(&model.param_shapes(), &cat, &direct, scale, 1.0);
+        Ok(AggExchange { grads, eff_ranks: vec![] })
     }
 }
 

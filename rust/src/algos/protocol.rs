@@ -1,0 +1,519 @@
+//! Algorithm-agnostic remote execution: every [`DistAlgorithm`] describes
+//! its per-step exchange as typed rounds over a [`Transport`], so one
+//! generic driver pair (`coordinator::remote::{remote_site_step,
+//! remote_agg_step}`) runs the *entire* algorithm family — `pooled | dsgd |
+//! dad | dad-p2p | edad | rank-dad | powersgd` — under `dad serve` /
+//! `dad join` with no per-algorithm code in the coordinator.
+//!
+//! [`DistAlgorithm`]: crate::algos::DistAlgorithm
+//!
+//! The design inverts the simulated path: there an algorithm is a closure
+//! over an in-memory [`crate::dist::Cluster`] with a god's-eye view; here it
+//! is a state machine over messages. Each step has a fixed shape:
+//!
+//! ```text
+//! prologue (driver)   site: step-meta ctrl up     agg: gather S metas
+//!                     site: step-sync ctrl down   agg: broadcast sync
+//! exchange (protocol) typed rounds:  up / gather  (site -> agg payloads)
+//!                                    bcast / down (agg -> site broadcasts)
+//!                                    p2p / relay  (all-to-all, dad-p2p)
+//! ```
+//!
+//! The prologue carries losses, row counts and the stats-entry layout in
+//! *control* frames (ledger-exempt protocol overhead); the exchange moves
+//! payload frames with exactly the tags and shapes the loopback simulation
+//! prices, which is what makes a TCP run's per-(tag, direction) ledger
+//! bit-equal to the simulated run's (`tests/transport_e2e.rs`). Algorithms
+//! with cross-step compressor state (PowerSGD's warm start + error
+//! feedback) keep it inside their [`StepProtocol`] value — site-local, one
+//! instance per process, exactly as a real deployment would.
+
+use std::io;
+
+use crate::dist::wire::{proto_err, Body, ByteReader, ByteWriter, Frame};
+use crate::dist::{Direction, Ledger, Transport};
+use crate::nn::model::DistModel;
+use crate::nn::stats::LocalStats;
+use crate::tensor::Matrix;
+
+/// One endpoint of the star fabric during one remote step: the transport
+/// plus the ledger that prices its payload frames. The methods are the
+/// typed rounds the protocols compose; control-frame helpers never touch
+/// the ledger.
+pub struct Endpoint<'a> {
+    t: &'a mut dyn Transport,
+    ledger: &'a mut Ledger,
+}
+
+impl<'a> Endpoint<'a> {
+    /// Wrap a transport + ledger for one step's rounds.
+    pub fn new(t: &'a mut dyn Transport, ledger: &'a mut Ledger) -> Self {
+        Endpoint { t, ledger }
+    }
+
+    /// Number of sites on the fabric.
+    pub fn n_sites(&self) -> usize {
+        self.t.n_sites()
+    }
+
+    /// Site round: ship a tagged payload frame up to the aggregator.
+    pub fn up(&mut self, tag: &str, mats: &[&Matrix]) -> io::Result<()> {
+        let n = self.t.ship(Direction::SiteToAgg, tag, mats)?;
+        self.ledger.record(tag, Direction::SiteToAgg, n);
+        Ok(())
+    }
+
+    /// Site round: receive the next broadcast payload frame.
+    pub fn down(&mut self, tag: &str) -> io::Result<Vec<Matrix>> {
+        let f = self.t.recv_broadcast()?;
+        if matches!(f.body, Body::Mats(_)) {
+            self.ledger.record(&f.tag, Direction::AggToSite, f.wire_len());
+        }
+        expect_mats(f, tag)
+    }
+
+    /// Site round: receive a single-matrix broadcast payload frame.
+    pub fn down1(&mut self, tag: &str) -> io::Result<Matrix> {
+        one_mat(self.down(tag)?)
+    }
+
+    /// Aggregator round: receive the next payload frame `site` sent up.
+    pub fn gather(&mut self, site: usize, tag: &str) -> io::Result<Vec<Matrix>> {
+        let f = self.t.recv_from_site(site)?;
+        if matches!(f.body, Body::Mats(_)) {
+            self.ledger.record(&f.tag, Direction::SiteToAgg, f.wire_len());
+        }
+        expect_mats(f, tag)
+    }
+
+    /// Aggregator round: receive a single-matrix uplink frame from `site`.
+    pub fn gather1(&mut self, site: usize, tag: &str) -> io::Result<Matrix> {
+        one_mat(self.gather(site, tag)?)
+    }
+
+    /// Aggregator round: broadcast a tagged payload frame to every site
+    /// (counted once — the down-link is a shared multicast).
+    pub fn bcast(&mut self, tag: &str, mats: &[&Matrix]) -> io::Result<()> {
+        let n = self.t.ship(Direction::AggToSite, tag, mats)?;
+        self.ledger.record(tag, Direction::AggToSite, n);
+        Ok(())
+    }
+
+    /// All-to-all round, site half: ship a payload frame to every one of
+    /// the S-1 peers (relayed through the hub on a star fabric; priced as
+    /// S-1 direct unicasts either way).
+    pub fn p2p(&mut self, tag: &str, mats: &[&Matrix]) -> io::Result<()> {
+        let n = self.t.ship(Direction::PeerToPeer, tag, mats)?;
+        self.ledger.record(tag, Direction::PeerToPeer, n);
+        Ok(())
+    }
+
+    /// All-to-all round, site half: receive one relayed peer frame. Not
+    /// ledger-recorded — the exchange is priced once on the sending side,
+    /// matching the loopback convention.
+    pub fn p2p_recv(&mut self, tag: &str) -> io::Result<Vec<Matrix>> {
+        expect_mats(self.t.recv_broadcast()?, tag)
+    }
+
+    /// Single-matrix form of [`Endpoint::p2p_recv`].
+    pub fn p2p_recv1(&mut self, tag: &str) -> io::Result<Matrix> {
+        one_mat(self.p2p_recv(tag)?)
+    }
+
+    /// All-to-all round, hub half, phase 1: pull one p2p frame off
+    /// `site`'s uplink *without forwarding yet*, recording it as S-1
+    /// direct unicasts under [`Direction::PeerToPeer`]. Draining every
+    /// uplink before any [`Endpoint::p2p_forward`] write is what keeps a
+    /// blocking single-threaded hub deadlock-free at any payload size.
+    pub fn p2p_pull(&mut self, site: usize) -> io::Result<Frame> {
+        let f = self.t.recv_from_site(site)?;
+        if matches!(f.body, Body::Mats(_)) {
+            let peers = self.t.n_sites().saturating_sub(1) as u64;
+            self.ledger.record(&f.tag, Direction::PeerToPeer, f.wire_len() * peers);
+        }
+        Ok(f)
+    }
+
+    /// All-to-all round, hub half, phase 2: forward one site's pulled
+    /// frames to every other site (bytes were already recorded by
+    /// [`Endpoint::p2p_pull`]; the transport flushes once per link).
+    pub fn p2p_forward(&mut self, from_site: usize, frames: &[Frame]) -> io::Result<()> {
+        self.t.forward_p2p(from_site, frames)
+    }
+
+    /// Site control round: ship a control frame up (ledger-exempt).
+    pub fn ctrl_up(&mut self, tag: &str, body: &[u8]) -> io::Result<()> {
+        self.t.ship_control(Direction::SiteToAgg, tag, body)?;
+        Ok(())
+    }
+
+    /// Site control round: receive a broadcast control frame.
+    pub fn ctrl_down(&mut self, tag: &str) -> io::Result<Vec<u8>> {
+        expect_ctrl(self.t.recv_broadcast()?, tag)
+    }
+
+    /// Aggregator control round: broadcast a control frame (ledger-exempt).
+    pub fn ctrl_bcast(&mut self, tag: &str, body: &[u8]) -> io::Result<()> {
+        self.t.ship_control(Direction::AggToSite, tag, body)?;
+        Ok(())
+    }
+
+    /// Aggregator control round: receive a control frame from `site`.
+    pub fn ctrl_from(&mut self, site: usize, tag: &str) -> io::Result<Vec<u8>> {
+        expect_ctrl(self.t.recv_from_site(site)?, tag)
+    }
+}
+
+pub(crate) fn expect_mats(f: Frame, want: &str) -> io::Result<Vec<Matrix>> {
+    match f.body {
+        Body::Mats(m) if f.tag == want => Ok(m),
+        _ => Err(proto_err(format!("expected payload frame {want:?}, got {:?}", f.tag))),
+    }
+}
+
+pub(crate) fn expect_ctrl(f: Frame, want: &str) -> io::Result<Vec<u8>> {
+    match f.body {
+        Body::Control(b) if f.tag == want => Ok(b),
+        _ => Err(proto_err(format!("expected control frame {want:?}, got {:?}", f.tag))),
+    }
+}
+
+pub(crate) fn one_mat(mats: Vec<Matrix>) -> io::Result<Matrix> {
+    let mut mats = mats;
+    if mats.len() != 1 {
+        return Err(proto_err(format!("expected exactly 1 matrix, got {}", mats.len())));
+    }
+    Ok(mats.pop().expect("checked non-empty"))
+}
+
+/// Per-step uplink metadata (the prologue's `step-meta` control frame):
+/// the site's loss and row count plus the parameter-index layout of its
+/// stats entries, so the aggregator can drive any algorithm's gather
+/// rounds without holding data.
+#[derive(Clone, Debug)]
+pub struct StepMeta {
+    /// Mean loss over the site's batch.
+    pub loss: f32,
+    /// Output-delta rows (the site's contribution to the global batch).
+    pub rows: u32,
+    /// Per stats entry: (weight param index, bias param index or u32::MAX).
+    pub entries: Vec<(u32, u32)>,
+    /// Param indices of direct (non-outer-product) gradients.
+    pub direct_idx: Vec<u32>,
+    /// Number of edAD aux-activation matrices the site will ship.
+    pub n_aux: u16,
+}
+
+impl StepMeta {
+    /// Describe one site's [`LocalStats`] for the wire.
+    pub fn of(stats: &LocalStats) -> StepMeta {
+        StepMeta {
+            loss: stats.loss,
+            rows: stats.entries.last().map(|e| e.d.rows()).unwrap_or(0) as u32,
+            entries: stats
+                .entries
+                .iter()
+                .map(|e| (e.w_idx as u32, e.b_idx.map(|b| b as u32).unwrap_or(u32::MAX)))
+                .collect(),
+            direct_idx: stats.direct.iter().map(|&(i, _)| i as u32).collect(),
+            n_aux: stats.aux.len() as u16,
+        }
+    }
+
+    /// Serialize as a control-frame body.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.push_f32(self.loss);
+        w.push_u32(self.rows);
+        w.push_u16(self.entries.len() as u16);
+        for &(wi, bi) in &self.entries {
+            w.push_u32(wi);
+            w.push_u32(bi);
+        }
+        w.push_u16(self.direct_idx.len() as u16);
+        for &i in &self.direct_idx {
+            w.push_u32(i);
+        }
+        w.push_u16(self.n_aux);
+        w.finish()
+    }
+
+    /// Parse a control-frame body (every read bounds-checked).
+    pub fn decode(body: &[u8]) -> io::Result<StepMeta> {
+        let mut r = ByteReader::new(body);
+        let loss = r.read_f32()?;
+        let rows = r.read_u32()?;
+        let n_entries = r.read_u16()? as usize;
+        let mut entries = Vec::with_capacity(n_entries);
+        for _ in 0..n_entries {
+            let wi = r.read_u32()?;
+            let bi = r.read_u32()?;
+            entries.push((wi, bi));
+        }
+        let n_direct = r.read_u16()? as usize;
+        let mut direct_idx = Vec::with_capacity(n_direct);
+        for _ in 0..n_direct {
+            direct_idx.push(r.read_u32()?);
+        }
+        let n_aux = r.read_u16()?;
+        Ok(StepMeta { loss, rows, entries, direct_idx, n_aux })
+    }
+}
+
+/// The prologue's `step-sync` broadcast: everything a site needs before
+/// its exchange rounds — the global row count (which fixes the 1/N
+/// gradient scale), the batch-size-weighted global loss, and the per-site
+/// row counts (edAD's delta recomputation needs them).
+#[derive(Clone, Debug)]
+pub struct StepSync {
+    /// Σ per-site output-delta rows (the global batch size).
+    pub total_rows: usize,
+    /// Batch-size-weighted mean training loss across sites.
+    pub loss: f32,
+    /// Per-site output-delta rows, in canonical site order.
+    pub site_rows: Vec<usize>,
+}
+
+impl StepSync {
+    /// Derive the sync frame from the gathered metas. For the pooled
+    /// oracle every site computed the identical union batch, so the global
+    /// count is any single site's (they are checked to agree) and the loss
+    /// is the union loss, not a weighted mean.
+    pub fn from_metas(metas: &[StepMeta], oracle: bool) -> io::Result<StepSync> {
+        if metas.is_empty() {
+            return Err(proto_err("step-sync needs at least one site meta".into()));
+        }
+        let site_rows: Vec<usize> = metas.iter().map(|m| m.rows as usize).collect();
+        if oracle {
+            if site_rows.iter().any(|&r| r != site_rows[0]) {
+                return Err(proto_err("pooled oracle sites disagree on the union batch".into()));
+            }
+            return Ok(StepSync { total_rows: site_rows[0], loss: metas[0].loss, site_rows });
+        }
+        let total_rows: usize = site_rows.iter().sum();
+        let num: f64 = metas.iter().map(|m| m.loss as f64 * m.rows as f64).sum();
+        let loss = (num / total_rows.max(1) as f64) as f32;
+        Ok(StepSync { total_rows, loss, site_rows })
+    }
+
+    /// The 1/(global batch) gradient scale every algorithm applies.
+    pub fn scale(&self) -> f32 {
+        1.0 / self.total_rows as f32
+    }
+
+    /// Serialize as a control-frame body.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.push_u32(self.total_rows as u32);
+        w.push_f32(self.loss);
+        w.push_u16(self.site_rows.len() as u16);
+        for &r in &self.site_rows {
+            w.push_u32(r as u32);
+        }
+        w.finish()
+    }
+
+    /// Parse a control-frame body.
+    pub fn decode(body: &[u8]) -> io::Result<StepSync> {
+        let mut r = ByteReader::new(body);
+        let total_rows = r.read_u32()? as usize;
+        let loss = r.read_f32()?;
+        let n = r.read_u16()? as usize;
+        let mut site_rows = Vec::with_capacity(n);
+        for _ in 0..n {
+            site_rows.push(r.read_u32()? as usize);
+        }
+        Ok(StepSync { total_rows, loss, site_rows })
+    }
+}
+
+/// The aggregator half's result: the synchronized gradient (for the
+/// lockstep eval replica) plus rank-dAD's effective-rank telemetry,
+/// `eff_ranks[entry][site]` (empty for every other algorithm).
+pub struct AggExchange {
+    /// Synchronized global gradient, aligned with the param list.
+    pub grads: Vec<Matrix>,
+    /// rank-dAD effective ranks per stats entry, per site.
+    pub eff_ranks: Vec<Vec<usize>>,
+}
+
+/// One algorithm's wire protocol: the site and aggregator halves of the
+/// per-step exchange, as typed rounds over an [`Endpoint`]. Implementations
+/// are state machines — `&mut self` carries cross-step compressor state
+/// (PowerSGD's warm start + error feedback stays site-local by
+/// construction: each process owns one protocol value).
+///
+/// The meta/sync prologue has already run when either half is called, so
+/// the global row count, weighted loss and per-site rows are available in
+/// `sync`. Both halves must ship/gather payload frames with exactly the
+/// tags, shapes and order the simulated algorithm prices through the
+/// loopback transport — that equivalence is asserted per algorithm by
+/// `tests/transport_e2e.rs`.
+pub trait StepProtocol<M: DistModel>: Send {
+    /// Protocol name for diagnostics (matches the algorithm name).
+    fn name(&self) -> &'static str;
+
+    /// True for the pooled oracle: every process computes the union batch
+    /// locally and the exchange ships no payload frames. The drivers give
+    /// oracle protocols the union batch instead of a shard batch and run
+    /// the site half on the aggregator too.
+    fn oracle(&self) -> bool {
+        false
+    }
+
+    /// Site half of the exchange. `stats` are this site's local statistics
+    /// for the step's batch; returns the synchronized global gradient
+    /// (identical on every endpoint, up to the algorithm's compression).
+    fn site_exchange(
+        &mut self,
+        ep: &mut Endpoint<'_>,
+        model: &M,
+        stats: &LocalStats,
+        site_id: usize,
+        sync: &StepSync,
+    ) -> io::Result<Vec<Matrix>>;
+
+    /// Aggregator half of the exchange: drive the gather/broadcast (or
+    /// relay) rounds described by the gathered `metas` and return the same
+    /// synchronized gradient the sites assemble.
+    fn agg_exchange(
+        &mut self,
+        ep: &mut Endpoint<'_>,
+        model: &M,
+        metas: &[StepMeta],
+        sync: &StepSync,
+    ) -> io::Result<AggExchange>;
+}
+
+/// Site half of the direct-gradient round shared by dAD, edAD, rank-dAD
+/// and PowerSGD: ship the raw local direct grads up, receive the
+/// already-scaled global mean back. Returns `(param_idx, mean_grad)`
+/// pairs ready for gradient assembly with `direct_scale = 1.0`.
+pub fn site_direct_exchange(
+    ep: &mut Endpoint<'_>,
+    stats: &LocalStats,
+) -> io::Result<Vec<(usize, Matrix)>> {
+    if stats.direct.is_empty() {
+        return Ok(vec![]);
+    }
+    let refs: Vec<&Matrix> = stats.direct.iter().map(|(_, g)| g).collect();
+    ep.up("direct-grad", &refs)?;
+    let mats = ep.down("direct-grad")?;
+    if mats.len() != stats.direct.len() {
+        return Err(proto_err("direct-grad broadcast arity mismatch".into()));
+    }
+    Ok(stats.direct.iter().map(|&(i, _)| i).zip(mats).collect())
+}
+
+/// Gather one single-matrix payload frame per site under `tag` and sum
+/// them **in site order** — the reduction-order contract every aggregator
+/// mean/sum shares with the simulation (f32 addition is not associative,
+/// so the order is part of the loopback/TCP equivalence).
+pub fn gather_sum(ep: &mut Endpoint<'_>, n_sites: usize, tag: &str) -> io::Result<Matrix> {
+    let mut acc: Option<Matrix> = None;
+    for site in 0..n_sites {
+        let m = ep.gather1(site, tag)?;
+        acc = Some(match acc {
+            None => m,
+            Some(mut a) => {
+                a.axpy(1.0, &m);
+                a
+            }
+        });
+    }
+    acc.ok_or_else(|| proto_err(format!("{tag}: gather over zero sites")))
+}
+
+/// Mean the per-site raw direct gradients: sum in **site order**, then
+/// scale — the reduction core shared by the star direct-grad round and
+/// dad-p2p's all-to-all (both halves). `idxs[di]` is the param index of
+/// the di-th direct gradient.
+pub(crate) fn mean_direct(
+    per_site: &[Vec<Matrix>],
+    idxs: &[usize],
+    scale: f32,
+) -> Vec<(usize, Matrix)> {
+    let mut out = Vec::with_capacity(idxs.len());
+    for (di, &idx) in idxs.iter().enumerate() {
+        let mut sum = per_site[0][di].clone();
+        for s in &per_site[1..] {
+            sum.axpy(1.0, &s[di]);
+        }
+        sum.scale_inplace(scale);
+        out.push((idx, sum));
+    }
+    out
+}
+
+/// Aggregator half of the direct-gradient round: gather every site's raw
+/// direct grads, mean them (sum in site order, then scale — the simulated
+/// reduction order), broadcast the mean, and return the pairs.
+pub fn agg_direct_exchange(
+    ep: &mut Endpoint<'_>,
+    metas: &[StepMeta],
+    scale: f32,
+) -> io::Result<Vec<(usize, Matrix)>> {
+    let idxs: Vec<usize> = metas[0].direct_idx.iter().map(|&i| i as usize).collect();
+    if idxs.is_empty() {
+        return Ok(vec![]);
+    }
+    let mut per_site: Vec<Vec<Matrix>> = Vec::with_capacity(metas.len());
+    for site in 0..metas.len() {
+        let mats = ep.gather(site, "direct-grad")?;
+        if mats.len() != idxs.len() {
+            return Err(proto_err(format!("site {site} direct-grad arity mismatch")));
+        }
+        per_site.push(mats);
+    }
+    let out = mean_direct(&per_site, &idxs, scale);
+    let refs: Vec<&Matrix> = out.iter().map(|(_, g)| g).collect();
+    ep.bcast("direct-grad", &refs)?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_meta_roundtrips() {
+        let meta = StepMeta {
+            loss: 1.25,
+            rows: 32,
+            entries: vec![(0, 1), (2, u32::MAX)],
+            direct_idx: vec![7],
+            n_aux: 3,
+        };
+        let got = StepMeta::decode(&meta.encode()).unwrap();
+        assert_eq!(got.loss, 1.25);
+        assert_eq!(got.rows, 32);
+        assert_eq!(got.entries, vec![(0, 1), (2, u32::MAX)]);
+        assert_eq!(got.direct_idx, vec![7]);
+        assert_eq!(got.n_aux, 3);
+    }
+
+    #[test]
+    fn step_sync_roundtrips_and_weights_losses() {
+        let metas = [
+            StepMeta { loss: 1.0, rows: 10, entries: vec![], direct_idx: vec![], n_aux: 0 },
+            StepMeta { loss: 3.0, rows: 30, entries: vec![], direct_idx: vec![], n_aux: 0 },
+        ];
+        let sync = StepSync::from_metas(&metas, false).unwrap();
+        assert_eq!(sync.total_rows, 40);
+        assert_eq!(sync.site_rows, vec![10, 30]);
+        assert!((sync.loss - 2.5).abs() < 1e-6, "weighted loss {}", sync.loss);
+        let got = StepSync::decode(&sync.encode()).unwrap();
+        assert_eq!(got.total_rows, 40);
+        assert_eq!(got.site_rows, vec![10, 30]);
+        assert_eq!(got.loss, sync.loss);
+    }
+
+    #[test]
+    fn oracle_sync_uses_union_rows_and_rejects_disagreement() {
+        let mk = |rows| StepMeta { loss: 0.5, rows, entries: vec![], direct_idx: vec![], n_aux: 0 };
+        let sync = StepSync::from_metas(&[mk(12), mk(12)], true).unwrap();
+        assert_eq!(sync.total_rows, 12);
+        assert_eq!(sync.loss, 0.5);
+        assert!(StepSync::from_metas(&[mk(12), mk(8)], true).is_err());
+    }
+}

@@ -8,9 +8,10 @@ pub mod trainer;
 
 pub use experiments::Scale;
 pub use remote::{
-    ensure_remote_supported, join_training, serve_training, RemoteConfig, RemoteStep,
+    join_training, remote_agg_step, remote_site_step, serve_training, validate_remote,
+    RemoteConfig, RemoteStep,
 };
 pub use trainer::{
-    build_task, epoch_plan, evaluate, fold_mean_auc, train, DataSource, Schedule, TrainLog,
-    TrainSpec, TrainTask,
+    build_task, epoch_plan, evaluate, fold_mean_auc, local_update, train, DataSource, Schedule,
+    TrainLog, TrainSpec, TrainTask,
 };

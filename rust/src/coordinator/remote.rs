@@ -6,37 +6,45 @@
 //! module runs the *same* synchronized optimization with the aggregator and
 //! each site as separate OS processes exchanging [`crate::dist::wire`]
 //! frames over a [`Transport`] (in practice [`crate::dist::TcpAgg`] /
-//! [`crate::dist::TcpSite`]). Three invariants tie the two modes together,
-//! asserted by `tests/transport_e2e.rs`:
+//! [`crate::dist::TcpSite`]).
 //!
-//! 1. **Same math.** Both modes funnel through `nn::stats::concat_stats` +
-//!    `assemble_grads`, with sites concatenated in canonical id order, so a
-//!    TCP run reproduces the loopback run's loss trajectory bit-for-bit
-//!    (modulo nothing: the arithmetic is identical).
+//! The drivers here are **algorithm-agnostic**: every `DistAlgorithm`
+//! exposes its per-step exchange as a [`StepProtocol`] — a state machine of
+//! typed rounds (see [`crate::algos::protocol`]) — and [`remote_site_step`]
+//! / [`remote_agg_step`] run the shared meta/sync prologue plus whichever
+//! rounds the protocol describes. The whole family — `pooled | dsgd | dad |
+//! dad-p2p | edad | rank-dad[:r] | powersgd[:r]` — therefore runs under
+//! `dad serve` / `dad join`, with `Schedule::Periodic` local phases
+//! replayed deterministically in every process. Three invariants tie the
+//! two modes together, asserted per algorithm by `tests/transport_e2e.rs`:
+//!
+//! 1. **Same math.** Both modes funnel through the same per-algorithm
+//!    reduction code with sites in canonical id order, so a TCP run
+//!    reproduces the loopback run's loss trajectory bit-for-bit.
 //! 2. **Same schedule.** Every process reseeds `Rng::new(seed)` and replays
-//!    `trainer::epoch_plan`, so site i draws the same batches it would in
-//!    simulation without any index traffic on the wire.
+//!    `trainer::epoch_plan` (and the same `step % k` sync decision), so
+//!    site i draws the same batches it would in simulation without any
+//!    index traffic on the wire.
 //! 3. **Same bytes.** Payload frames are encoded by the shared codec and
-//!    recorded per direction on the aggregator, so `dad serve`'s ledger
-//!    equals `dad train`'s for the same seed — the acceptance check for the
+//!    recorded per (tag, direction), so `dad serve`'s ledger equals
+//!    `dad train`'s for the same seed — the acceptance check for the
 //!    paper's bandwidth claims holding on a real wire.
 //!
-//! Control frames (`step-meta` uplink, `step-sync` downlink, the initial
-//! `config` broadcast) carry losses, row counts and parameter indices; they
-//! are protocol overhead and never enter the ledger. Currently `dad` and
-//! `dsgd` are wired for remote execution; the remaining algorithms run
-//! loopback-only (see `ensure_remote_supported`).
+//! Control frames (`config`, `step-meta`, `step-sync`, `eff-rank`,
+//! `local-loss`) carry protocol metadata and never enter the ledger.
 
 use std::io;
 
-use crate::algos::AlgoSpec;
+use crate::algos::protocol::{expect_ctrl, AggExchange, Endpoint, StepMeta, StepProtocol, StepSync};
+use crate::algos::{concat_batches, AlgoSpec};
 use crate::coordinator::trainer::{
-    epoch_plan, evaluate, DataSource, EpochLog, Schedule, TrainLog, TrainSpec,
+    epoch_plan, evaluate, local_update, DataSource, EpochLog, Schedule, TrainLog, TrainSpec,
 };
-use crate::dist::wire::{Body, ByteReader, ByteWriter, Frame};
+use crate::data::BatchIter;
+use crate::dist::wire::{proto_err, ByteReader, ByteWriter};
 use crate::dist::{Direction, Ledger, Transport};
 use crate::nn::model::{Batch, DistModel};
-use crate::nn::stats::{assemble_grads, concat_stats, StatsEntry};
+use crate::nn::stats::LocalStats;
 use crate::nn::Adam;
 use crate::tensor::{Matrix, Rng, Workspace};
 
@@ -44,21 +52,26 @@ use crate::tensor::{Matrix, Rng, Workspace};
 /// `grads` is identical on every endpoint (the dAD invariant); the byte
 /// counters cover only the traffic this endpoint's ledger observed — the
 /// aggregator sees everything, a site sees its own uplink plus the shared
-/// broadcast.
+/// broadcast. Peer-to-peer traffic (dad-p2p) is folded into `bytes_up`,
+/// matching the simulated trainer's reporting.
 pub struct RemoteStep {
     /// Batch-size-weighted global mean training loss for the step.
     pub loss: f32,
     /// The synchronized global gradient (aligned with the param list).
     pub grads: Vec<Matrix>,
-    /// Site->aggregator payload bytes recorded locally this step.
+    /// rank-dAD effective-rank telemetry, `[entry][site]` (aggregator
+    /// side only; empty otherwise).
+    pub eff_ranks: Vec<Vec<usize>>,
+    /// Site->aggregator (+ peer-to-peer) payload bytes recorded locally.
     pub bytes_up: u64,
     /// Aggregator->site payload bytes recorded locally this step.
     pub bytes_down: u64,
 }
 
-/// Everything a joining site needs to reconstruct the run: training spec,
-/// dataset name, and scale preset. Broadcast once, right after the
-/// transport handshake, as the `config` control frame.
+/// Everything a joining site needs to reconstruct the run: training spec
+/// (algorithm, schedule, seed, ...), dataset name, and scale preset.
+/// Broadcast once, right after the transport handshake, as the `config`
+/// control frame.
 #[derive(Clone, Debug)]
 pub struct RemoteConfig {
     /// The run's training specification (algorithm, sites, epochs, ...).
@@ -80,6 +93,7 @@ impl RemoteConfig {
         w.push_u32(self.spec.epochs as u32);
         w.push_f32(self.spec.lr);
         w.push_u64(self.spec.seed);
+        w.push_u32(self.spec.schedule.sync_every() as u32);
         w.finish()
     }
 
@@ -93,8 +107,15 @@ impl RemoteConfig {
         let epochs = r.read_u32()? as usize;
         let lr = r.read_f32()?;
         let seed = r.read_u64()?;
+        let sync_every = r.read_u32()? as usize;
+        if r.remaining() != 0 {
+            return Err(proto_err(format!(
+                "config frame has {} trailing bytes (version skew between serve and join?)",
+                r.remaining()
+            )));
+        }
         let algo = AlgoSpec::parse(&algo_s)
-            .ok_or_else(|| proto(format!("unknown algo {algo_s:?} in config frame")))?;
+            .map_err(|e| proto_err(format!("bad algo in config frame: {e}")))?;
         Ok(RemoteConfig {
             spec: TrainSpec {
                 algo,
@@ -103,7 +124,7 @@ impl RemoteConfig {
                 epochs,
                 lr,
                 seed,
-                schedule: Schedule::EveryBatch,
+                schedule: Schedule::from_sync_every(sync_every),
             },
             dataset,
             scale,
@@ -123,413 +144,243 @@ impl RemoteConfig {
     }
 }
 
-/// Per-step uplink metadata: the site's loss/rows plus the parameter-index
-/// layout of its stats entries (so the aggregator never needs a model).
-struct StepMeta {
-    loss: f32,
-    rows: u32,
-    /// Per entry: (weight param index, bias param index or u32::MAX).
-    entries: Vec<(u32, u32)>,
-    /// Param indices of direct (non-outer-product) gradients.
-    direct_idx: Vec<u32>,
-}
-
-impl StepMeta {
-    fn encode(&self) -> Vec<u8> {
-        let mut w = ByteWriter::new();
-        w.push_f32(self.loss);
-        w.push_u32(self.rows);
-        w.push_u16(self.entries.len() as u16);
-        for &(wi, bi) in &self.entries {
-            w.push_u32(wi);
-            w.push_u32(bi);
-        }
-        w.push_u16(self.direct_idx.len() as u16);
-        for &i in &self.direct_idx {
-            w.push_u32(i);
-        }
-        w.finish()
-    }
-
-    fn decode(body: &[u8]) -> io::Result<StepMeta> {
-        let mut r = ByteReader::new(body);
-        let loss = r.read_f32()?;
-        let rows = r.read_u32()?;
-        let n_entries = r.read_u16()? as usize;
-        let mut entries = Vec::with_capacity(n_entries);
-        for _ in 0..n_entries {
-            let wi = r.read_u32()?;
-            let bi = r.read_u32()?;
-            entries.push((wi, bi));
-        }
-        let n_direct = r.read_u16()? as usize;
-        let mut direct_idx = Vec::with_capacity(n_direct);
-        for _ in 0..n_direct {
-            direct_idx.push(r.read_u32()?);
-        }
-        Ok(StepMeta { loss, rows, entries, direct_idx })
-    }
-}
-
-fn proto(msg: String) -> io::Error {
-    io::Error::new(io::ErrorKind::InvalidData, msg)
-}
-
-fn expect_mats(f: Frame, want: &str) -> io::Result<Vec<Matrix>> {
-    match f.body {
-        Body::Mats(m) if f.tag == want => Ok(m),
-        _ => Err(proto(format!("expected payload frame {want:?}, got {:?}", f.tag))),
-    }
-}
-
-fn expect_ctrl(f: Frame, want: &str) -> io::Result<Vec<u8>> {
-    match f.body {
-        Body::Control(b) if f.tag == want => Ok(b),
-        _ => Err(proto(format!("expected control frame {want:?}, got {:?}", f.tag))),
-    }
-}
-
-fn one_mat(mats: Vec<Matrix>) -> io::Result<Matrix> {
-    let mut mats = mats;
-    if mats.len() != 1 {
-        return Err(proto(format!("expected exactly 1 matrix, got {}", mats.len())));
-    }
-    Ok(mats.pop().unwrap())
-}
-
+/// This endpoint's cumulative (up, down) ledger view; peer-to-peer traffic
+/// counts as "up" (the exchange has no shared down-link), matching the
+/// simulated trainer's `StepOutcome` reporting for dad-p2p.
 fn dirs(l: &Ledger) -> (u64, u64) {
-    (l.total_dir(Direction::SiteToAgg), l.total_dir(Direction::AggToSite))
-}
-
-/// Ship a payload frame and record its serialized bytes.
-fn ship(
-    t: &mut dyn Transport,
-    ledger: &mut Ledger,
-    dir: Direction,
-    tag: &str,
-    mats: &[&Matrix],
-) -> io::Result<()> {
-    let n = t.ship(dir, tag, mats)?;
-    ledger.record(tag, dir, n);
-    Ok(())
-}
-
-/// Receive one broadcast frame (site side), recording payload bytes.
-fn recv_down(t: &mut dyn Transport, ledger: &mut Ledger, want: &str) -> io::Result<Vec<Matrix>> {
-    let f = t.recv_broadcast()?;
-    if matches!(f.body, Body::Mats(_)) {
-        ledger.record(&f.tag, Direction::AggToSite, f.wire_len());
-    }
-    expect_mats(f, want)
-}
-
-/// Receive one uplink frame from `site` (aggregator side), recording
-/// payload bytes.
-fn recv_up(
-    t: &mut dyn Transport,
-    ledger: &mut Ledger,
-    site: usize,
-    want: &str,
-) -> io::Result<Vec<Matrix>> {
-    let f = t.recv_from_site(site)?;
-    if matches!(f.body, Body::Mats(_)) {
-        ledger.record(&f.tag, Direction::SiteToAgg, f.wire_len());
-    }
-    expect_mats(f, want)
+    (
+        l.total_dir(Direction::SiteToAgg) + l.total_dir(Direction::PeerToPeer),
+        l.total_dir(Direction::AggToSite),
+    )
 }
 
 // ---------------------------------------------------------------------------
-// dAD over the wire (Algorithm 1, star topology)
+// Generic per-step drivers
 // ---------------------------------------------------------------------------
 
-/// Site half of one remote dAD step: compute local statistics, ship
-/// per-entry (A, Δ) frames up, receive the concatenated (Â, Δ̂) broadcast,
-/// and assemble the exact global gradient locally.
-pub fn dad_site_step<M: DistModel>(
+/// Site half of one synchronized remote step, for *any* algorithm: compute
+/// local statistics, run the meta/sync prologue, then drive the protocol's
+/// typed exchange rounds. For the pooled oracle, `batch` must be the union
+/// batch (the join driver handles this).
+pub fn remote_site_step<M: DistModel>(
+    proto: &mut dyn StepProtocol<M>,
     t: &mut dyn Transport,
     ledger: &mut Ledger,
     model: &M,
     batch: &Batch,
+    site_id: usize,
     ws: &mut Workspace,
 ) -> io::Result<RemoteStep> {
-    let (up0, down0) = dirs(ledger);
     let stats = model.local_stats_ws(batch, ws);
-    let rows = stats.entries.last().expect("no stats entries").d.rows();
-    let meta = StepMeta {
-        loss: stats.loss,
-        rows: rows as u32,
-        entries: stats
-            .entries
-            .iter()
-            .map(|e| (e.w_idx as u32, e.b_idx.map(|b| b as u32).unwrap_or(u32::MAX)))
-            .collect(),
-        direct_idx: stats.direct.iter().map(|&(i, _)| i as u32).collect(),
+    let (up0, down0) = dirs(ledger);
+    let (grads, loss) = {
+        let mut ep = Endpoint::new(&mut *t, &mut *ledger);
+        ep.ctrl_up("step-meta", &StepMeta::of(&stats).encode())?;
+        let sync = StepSync::decode(&ep.ctrl_down("step-sync")?)?;
+        let grads = proto.site_exchange(&mut ep, model, &stats, site_id, &sync)?;
+        (grads, sync.loss)
     };
-    t.ship_control(Direction::SiteToAgg, "step-meta", &meta.encode())?;
-    for e in &stats.entries {
-        ship(t, ledger, Direction::SiteToAgg, "acts", &[&e.a])?;
-        ship(t, ledger, Direction::SiteToAgg, "deltas", &[&e.d])?;
-    }
-    if !stats.direct.is_empty() {
-        let refs: Vec<&Matrix> = stats.direct.iter().map(|(_, g)| g).collect();
-        ship(t, ledger, Direction::SiteToAgg, "direct-grad", &refs)?;
-    }
-
-    let sync = expect_ctrl(t.recv_broadcast()?, "step-sync")?;
-    let mut rd = ByteReader::new(&sync);
-    let total_rows = rd.read_u32()? as usize;
-    let loss = rd.read_f32()?;
-    let scale = 1.0 / total_rows as f32;
-    let mut cat: Vec<StatsEntry> = Vec::with_capacity(stats.entries.len());
-    for e in &stats.entries {
-        let a = one_mat(recv_down(t, ledger, "acts")?)?;
-        let d = one_mat(recv_down(t, ledger, "deltas")?)?;
-        cat.push(StatsEntry { w_idx: e.w_idx, b_idx: e.b_idx, a, d });
-    }
-    let direct: Vec<(usize, Matrix)> = if stats.direct.is_empty() {
-        vec![]
-    } else {
-        let mats = recv_down(t, ledger, "direct-grad")?;
-        if mats.len() != stats.direct.len() {
-            return Err(proto("direct-grad broadcast arity mismatch".into()));
-        }
-        stats.direct.iter().map(|&(i, _)| i).zip(mats).collect()
-    };
-    let shapes = model.param_shapes();
-    let grads = assemble_grads(&shapes, &cat, &direct, scale, 1.0);
     let (up1, down1) = dirs(ledger);
-    Ok(RemoteStep { loss, grads, bytes_up: up1 - up0, bytes_down: down1 - down0 })
+    Ok(RemoteStep {
+        loss,
+        grads,
+        eff_ranks: vec![],
+        bytes_up: up1 - up0,
+        bytes_down: down1 - down0,
+    })
 }
 
-/// Aggregator half of one remote dAD step: collect every site's (A, Δ)
-/// stacks, vertcat in site order, broadcast the concatenation, and return
-/// the same global gradient the sites assemble.
-pub fn dad_agg_step(
+/// Aggregator half of one synchronized remote step, for *any* algorithm:
+/// gather every site's step metadata, broadcast the sync frame (global row
+/// count, weighted loss, per-site rows), then drive the protocol's
+/// gather/broadcast (or relay) rounds. For the pooled oracle the
+/// aggregator runs the *site* half on `oracle_stats` — the union-batch
+/// statistics the serve driver computes — since the oracle ships nothing.
+pub fn remote_agg_step<M: DistModel>(
+    proto: &mut dyn StepProtocol<M>,
     t: &mut dyn Transport,
     ledger: &mut Ledger,
-    shapes: &[(usize, usize)],
+    model: &M,
+    oracle_stats: Option<&LocalStats>,
 ) -> io::Result<RemoteStep> {
-    let (up0, down0) = dirs(ledger);
     let n_sites = t.n_sites();
-    let mut metas: Vec<StepMeta> = Vec::with_capacity(n_sites);
-    let mut per_site: Vec<Vec<StatsEntry>> = Vec::with_capacity(n_sites);
-    let mut per_site_direct: Vec<Vec<Matrix>> = Vec::with_capacity(n_sites);
-    for site in 0..n_sites {
-        let meta = StepMeta::decode(&expect_ctrl(t.recv_from_site(site)?, "step-meta")?)?;
-        let mut entries = Vec::with_capacity(meta.entries.len());
-        for &(w_idx, b_idx) in &meta.entries {
-            let a = one_mat(recv_up(t, ledger, site, "acts")?)?;
-            let d = one_mat(recv_up(t, ledger, site, "deltas")?)?;
-            entries.push(StatsEntry {
-                w_idx: w_idx as usize,
-                b_idx: (b_idx != u32::MAX).then_some(b_idx as usize),
-                a,
-                d,
-            });
+    let (up0, down0) = dirs(ledger);
+    let (out, loss) = {
+        let mut ep = Endpoint::new(&mut *t, &mut *ledger);
+        let mut metas: Vec<StepMeta> = Vec::with_capacity(n_sites);
+        for site in 0..n_sites {
+            metas.push(StepMeta::decode(&ep.ctrl_from(site, "step-meta")?)?);
         }
-        let direct = if meta.direct_idx.is_empty() {
-            vec![]
+        let sync = StepSync::from_metas(&metas, proto.oracle())?;
+        ep.ctrl_bcast("step-sync", &sync.encode())?;
+        let out = if proto.oracle() {
+            let stats = oracle_stats.ok_or_else(|| {
+                proto_err(
+                    "the pooled oracle needs the aggregator to hold the union batch \
+                     (serve_training supplies it)"
+                        .into(),
+                )
+            })?;
+            let grads = proto.site_exchange(&mut ep, model, stats, 0, &sync)?;
+            AggExchange { grads, eff_ranks: vec![] }
         } else {
-            let mats = recv_up(t, ledger, site, "direct-grad")?;
-            if mats.len() != meta.direct_idx.len() {
-                return Err(proto(format!("site {site} direct-grad arity mismatch")));
-            }
-            mats
+            proto.agg_exchange(&mut ep, model, &metas, &sync)?
         };
-        metas.push(meta);
-        per_site.push(entries);
-        per_site_direct.push(direct);
-    }
-    let total_rows: usize = metas.iter().map(|m| m.rows as usize).sum();
-    let scale = 1.0 / total_rows as f32;
-    let loss = weighted_loss_of(&metas, total_rows);
-
-    let mut w = ByteWriter::new();
-    w.push_u32(total_rows as u32);
-    w.push_f32(loss);
-    t.ship_control(Direction::AggToSite, "step-sync", &w.finish())?;
-
-    let entry_refs: Vec<&[StatsEntry]> = per_site.iter().map(|e| &e[..]).collect();
-    let cat = concat_stats(&entry_refs);
-    for e in &cat {
-        ship(t, ledger, Direction::AggToSite, "acts", &[&e.a])?;
-        ship(t, ledger, Direction::AggToSite, "deltas", &[&e.d])?;
-    }
-    let direct: Vec<(usize, Matrix)> = if metas[0].direct_idx.is_empty() {
-        vec![]
-    } else {
-        let mut out = Vec::with_capacity(metas[0].direct_idx.len());
-        for (di, &idx) in metas[0].direct_idx.iter().enumerate() {
-            let mut sum = per_site_direct[0][di].clone();
-            for s in &per_site_direct[1..] {
-                sum.axpy(1.0, &s[di]);
-            }
-            sum.scale_inplace(scale);
-            out.push((idx as usize, sum));
-        }
-        let refs: Vec<&Matrix> = out.iter().map(|(_, g)| g).collect();
-        ship(t, ledger, Direction::AggToSite, "direct-grad", &refs)?;
-        out
+        (out, sync.loss)
     };
-    let grads = assemble_grads(shapes, &cat, &direct, scale, 1.0);
     let (up1, down1) = dirs(ledger);
-    Ok(RemoteStep { loss, grads, bytes_up: up1 - up0, bytes_down: down1 - down0 })
-}
-
-// ---------------------------------------------------------------------------
-// dSGD over the wire (gradient averaging baseline)
-// ---------------------------------------------------------------------------
-
-/// Site half of one remote dSGD step: exchange row counts, ship the full
-/// scaled local gradient, receive the global mean.
-pub fn dsgd_site_step<M: DistModel>(
-    t: &mut dyn Transport,
-    ledger: &mut Ledger,
-    model: &M,
-    batch: &Batch,
-    ws: &mut Workspace,
-) -> io::Result<RemoteStep> {
-    let (up0, down0) = dirs(ledger);
-    let stats = model.local_stats_ws(batch, ws);
-    let rows = stats.entries.last().expect("no stats entries").d.rows();
-    let meta =
-        StepMeta { loss: stats.loss, rows: rows as u32, entries: vec![], direct_idx: vec![] };
-    t.ship_control(Direction::SiteToAgg, "step-meta", &meta.encode())?;
-    // The gradient scale needs the *global* row count, so the sync frame
-    // comes back before the gradient goes up (unlike dAD, where scaling
-    // happens after the broadcast).
-    let sync = expect_ctrl(t.recv_broadcast()?, "step-sync")?;
-    let mut rd = ByteReader::new(&sync);
-    let total_rows = rd.read_u32()? as usize;
-    let loss = rd.read_f32()?;
-    let scale = 1.0 / total_rows as f32;
-    let shapes = model.param_shapes();
-    let local = stats.assemble_grads(&shapes, scale, scale);
-    let refs: Vec<&Matrix> = local.iter().collect();
-    ship(t, ledger, Direction::SiteToAgg, "grad", &refs)?;
-    let grads = recv_down(t, ledger, "grad")?;
-    if grads.len() != shapes.len() {
-        return Err(proto("grad broadcast arity mismatch".into()));
-    }
-    let (up1, down1) = dirs(ledger);
-    Ok(RemoteStep { loss, grads, bytes_up: up1 - up0, bytes_down: down1 - down0 })
-}
-
-/// Aggregator half of one remote dSGD step: sum the per-site scaled
-/// gradients (their sum is the global mean) and broadcast the result.
-pub fn dsgd_agg_step(
-    t: &mut dyn Transport,
-    ledger: &mut Ledger,
-    shapes: &[(usize, usize)],
-) -> io::Result<RemoteStep> {
-    let (up0, down0) = dirs(ledger);
-    let n_sites = t.n_sites();
-    let mut metas: Vec<StepMeta> = Vec::with_capacity(n_sites);
-    for site in 0..n_sites {
-        metas.push(StepMeta::decode(&expect_ctrl(t.recv_from_site(site)?, "step-meta")?)?);
-    }
-    let total_rows: usize = metas.iter().map(|m| m.rows as usize).sum();
-    let loss = weighted_loss_of(&metas, total_rows);
-    let mut w = ByteWriter::new();
-    w.push_u32(total_rows as u32);
-    w.push_f32(loss);
-    t.ship_control(Direction::AggToSite, "step-sync", &w.finish())?;
-
-    let mut acc: Option<Vec<Matrix>> = None;
-    for site in 0..n_sites {
-        let g = recv_up(t, ledger, site, "grad")?;
-        if g.len() != shapes.len() {
-            return Err(proto(format!("site {site} grad arity mismatch")));
-        }
-        acc = Some(match acc {
-            None => g,
-            Some(mut a) => {
-                for (x, y) in a.iter_mut().zip(&g) {
-                    x.axpy(1.0, y);
-                }
-                a
-            }
-        });
-    }
-    let grads = acc.expect("at least one site");
-    let refs: Vec<&Matrix> = grads.iter().collect();
-    ship(t, ledger, Direction::AggToSite, "grad", &refs)?;
-    let (up1, down1) = dirs(ledger);
-    Ok(RemoteStep { loss, grads, bytes_up: up1 - up0, bytes_down: down1 - down0 })
-}
-
-fn weighted_loss_of(metas: &[StepMeta], total_rows: usize) -> f32 {
-    let num: f64 = metas.iter().map(|m| m.loss as f64 * m.rows as f64).sum();
-    (num / total_rows.max(1) as f64) as f32
-}
-
-/// Which algorithms have a remote protocol. The rest run loopback-only for
-/// now; extending them is a matter of adding a `*_site_step`/`*_agg_step`
-/// pair above. `dad serve` calls this *before* binding so an unsupported
-/// spec fails on the operator's terminal instead of stranding join
-/// processes mid-handshake.
-pub fn ensure_remote_supported(spec: &TrainSpec) -> io::Result<()> {
-    if !matches!(spec.algo, AlgoSpec::Dad | AlgoSpec::Dsgd) {
-        return Err(io::Error::new(
-            io::ErrorKind::Unsupported,
-            format!(
-                "--algo {} is not wired over TCP yet; run it with `dad train` (loopback)",
-                spec.algo.name()
-            ),
-        ));
-    }
-    if spec.schedule != Schedule::EveryBatch {
-        return Err(io::Error::new(
-            io::ErrorKind::Unsupported,
-            "periodic sync schedules are loopback-only for now".to_string(),
-        ));
-    }
-    Ok(())
+    Ok(RemoteStep {
+        loss,
+        grads: out.grads,
+        eff_ranks: out.eff_ranks,
+        bytes_up: up1 - up0,
+        bytes_down: down1 - down0,
+    })
 }
 
 // ---------------------------------------------------------------------------
 // Full training loops
 // ---------------------------------------------------------------------------
 
-/// Aggregator training loop (`dad serve`): drive one remote step per batch,
-/// keep a model replica in lockstep for per-epoch evaluation, and log the
-/// ledger's per-direction byte deltas per epoch.
+/// Validate a spec for multi-process execution. Every algorithm runs
+/// remotely, with one schedule restriction: edAD's delta recomputation
+/// (eq. 5) uses the *model weights*, and during `Schedule::Periodic`
+/// off-sync phases every site's weights drift differently — each endpoint
+/// would recompute different aggregated deltas and the replicas would
+/// desync silently. The simulated trainer is immune (it recomputes once,
+/// on site 0's replica), so the periodic edAD ablation stays available
+/// through `dad train`. `dad serve` calls this *before* binding so a bad
+/// spec fails on the operator's terminal instead of stranding joins.
+pub fn validate_remote(spec: &TrainSpec) -> io::Result<()> {
+    if matches!(spec.algo, AlgoSpec::Edad) && spec.schedule != Schedule::EveryBatch {
+        return Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            "edad over the wire requires --sync-every 1: its delta recomputation depends on \
+             model weights, which drift per site during periodic local phases (use `dad train` \
+             for the simulated periodic edAD ablation)",
+        ));
+    }
+    Ok(())
+}
+
+/// Assemble one site's batch for this step from its shard and the step's
+/// within-shard indices.
+fn shard_batch<D: DataSource>(data: &D, shard: &[usize], local: &[usize]) -> Batch {
+    let idx: Vec<usize> = local.iter().map(|&i| shard[i]).collect();
+    data.make_batch(&idx)
+}
+
+/// Assemble the pooled oracle's union batch, drawing every site's batch
+/// iterator once in canonical site order (the simulated trainer's exact
+/// iterator consumption).
+fn union_batch<D: DataSource>(data: &D, shards: &[Vec<usize>], plan: &mut [BatchIter]) -> Batch {
+    let batches: Vec<Batch> = plan
+        .iter_mut()
+        .zip(shards)
+        .map(|(it, shard)| {
+            let local = it.next().expect("batch iterator exhausted");
+            shard_batch(data, shard, &local)
+        })
+        .collect();
+    concat_batches(&batches)
+}
+
+/// Aggregator training loop (`dad serve`): drive one remote step per batch
+/// through the algorithm's wire protocol, keep a model replica in lockstep
+/// for per-epoch evaluation, and log the ledger's per-direction byte
+/// deltas per epoch.
 ///
-/// `shard_sizes` are the per-site shard lengths — the aggregator never sees
-/// data, but needs them to replay the deterministic batch schedule
-/// ([`epoch_plan`]) that fixes the per-epoch step count.
+/// `data`/`shards` are the full deterministic training set and per-site
+/// index shards (every process rebuilds them from the seed). The
+/// aggregator needs them for two things only: replaying site 0's local
+/// updates during `Schedule::Periodic` off-sync phases (so the evaluation
+/// replica tracks the simulated trainer's site-0 model exactly) and
+/// computing the union batch for the pooled oracle. For every other
+/// algorithm no data-derived values are read — statistics arrive over the
+/// wire.
 pub fn serve_training<M: DistModel, D: DataSource>(
     t: &mut dyn Transport,
     ledger: &mut Ledger,
     spec: &TrainSpec,
     mut model: M,
-    shard_sizes: &[usize],
+    data: &D,
+    shards: &[Vec<usize>],
     test: &D,
 ) -> io::Result<TrainLog> {
-    ensure_remote_supported(spec)?;
+    validate_remote(spec)?;
+    let mut proto = spec.algo.build::<M>().protocol();
+    let oracle = proto.oracle();
     let shapes = model.param_shapes();
     let mut params: Vec<Matrix> = model.params().into_iter().cloned().collect();
     let mut opt = Adam::new(spec.lr, &shapes);
     let mut rng = Rng::new(spec.seed);
+    let mut ws = Workspace::new();
     let entry_names = model.entry_names();
+    let n_entries = model.local_stats_entry_count();
+    let n_sites = t.n_sites();
+    let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
     let mut epochs = Vec::with_capacity(spec.epochs);
     for epoch in 0..spec.epochs {
-        let plan = epoch_plan(shard_sizes, spec.batch_per_site, &mut rng);
+        let mut plan = epoch_plan(&sizes, spec.batch_per_site, &mut rng);
         let n_steps = plan.iter().map(|i| i.n_batches()).min().unwrap_or(0);
         let (up0, down0) = dirs(ledger);
         let mut loss_sum = 0.0f64;
-        for _ in 0..n_steps {
-            let out = match spec.algo {
-                AlgoSpec::Dad => dad_agg_step(t, ledger, &shapes)?,
-                AlgoSpec::Dsgd => dsgd_agg_step(t, ledger, &shapes)?,
-                _ => unreachable!("guarded by ensure_remote_supported"),
+        let mut rank_sums = vec![0.0f64; n_entries];
+        let mut rank_count = 0usize;
+        for step in 0..n_steps {
+            // Iterator discipline: the oracle draws every site's iterator
+            // (it trains the union batch); otherwise only site 0's is
+            // drawn — each `BatchIter` is self-contained, so skipping the
+            // others cannot desync anything, and site 0's draw must happen
+            // every step so periodic local phases see the step-t batch.
+            let (union_stats, local0) = if oracle {
+                let stats = model.local_stats_ws(&union_batch(data, shards, &mut plan), &mut ws);
+                (Some(stats), None)
+            } else {
+                (None, Some(plan[0].next().expect("batch iterator exhausted")))
             };
-            loss_sum += out.loss as f64;
-            opt.step(&mut params, &out.grads);
-            model.set_params(&params);
+            if oracle || spec.schedule.is_sync_step(step) {
+                let out = remote_agg_step(
+                    proto.as_mut(),
+                    &mut *t,
+                    &mut *ledger,
+                    &model,
+                    union_stats.as_ref(),
+                )?;
+                loss_sum += out.loss as f64;
+                if !out.eff_ranks.is_empty() {
+                    for (ei, per_site) in out.eff_ranks.iter().enumerate() {
+                        let mean: f64 = per_site.iter().map(|&r| r as f64).sum::<f64>()
+                            / per_site.len() as f64;
+                        rank_sums[ei] += mean;
+                    }
+                    rank_count += 1;
+                }
+                opt.step(&mut params, &out.grads);
+                model.set_params(&params);
+            } else {
+                // Off-sync phase: no payload traffic. Mirror site 0's local
+                // update so the evaluation replica matches the simulated
+                // trainer's site-0 model, and average the sites' reported
+                // local losses (tiny ledger-exempt control frames).
+                let local0 = local0.expect("non-oracle step draws site 0");
+                let batch = shard_batch(data, &shards[0], &local0);
+                local_update(&mut model, &batch, &shapes, &mut ws);
+                let mut ep = Endpoint::new(&mut *t, &mut *ledger);
+                let mut loss = 0.0f32;
+                for site in 0..n_sites {
+                    let body = ep.ctrl_from(site, "local-loss")?;
+                    loss += ByteReader::new(&body).read_f32()?;
+                }
+                loss_sum += (loss / n_sites as f32) as f64;
+            }
         }
         let (test_auc, test_acc) = evaluate(&model, test);
         let (up1, down1) = dirs(ledger);
+        let mean_eff_rank: Vec<f32> = rank_sums
+            .iter()
+            .map(|&s| if rank_count == 0 { f32::NAN } else { (s / rank_count as f64) as f32 })
+            .collect();
         epochs.push(EpochLog {
             epoch,
             train_loss: (loss_sum / n_steps.max(1) as f64) as f32,
@@ -537,17 +388,21 @@ pub fn serve_training<M: DistModel, D: DataSource>(
             test_acc,
             bytes_up: up1 - up0,
             bytes_down: down1 - down0,
-            mean_eff_rank: vec![],
+            mean_eff_rank,
         });
     }
     Ok(TrainLog { algo: spec.algo.name(), epochs, sim_time_s: 0.0, entry_names })
 }
 
-/// Site training loop (`dad join`): replay the deterministic batch schedule
-/// for this site's shard, run one remote site step per batch, and apply the
-/// synchronized gradient locally — the replica never diverges from the
-/// aggregator's. No evaluation happens on sites (`test_auc`/`test_acc` are
-/// NaN in the returned log); the serving process owns reporting.
+/// Site training loop (`dad join`): replay the deterministic batch
+/// schedule for this site's shard, run one remote step per batch through
+/// the algorithm's wire protocol, and apply the synchronized gradient
+/// locally — the replica never diverges from the aggregator's. During
+/// `Schedule::Periodic` off-sync phases the site applies its own local
+/// update (identical math to the simulated trainer) and ships only its
+/// loss as a ledger-exempt control frame. No evaluation happens on sites
+/// (`test_auc`/`test_acc` are NaN in the returned log); the serving
+/// process owns reporting.
 pub fn join_training<M: DistModel, D: DataSource>(
     t: &mut dyn Transport,
     ledger: &mut Ledger,
@@ -557,37 +412,56 @@ pub fn join_training<M: DistModel, D: DataSource>(
     shards: &[Vec<usize>],
     site_id: usize,
 ) -> io::Result<TrainLog> {
-    ensure_remote_supported(spec)?;
+    validate_remote(spec)?;
     if site_id >= shards.len() {
-        return Err(proto(format!("site id {site_id} out of range for {} shards", shards.len())));
+        return Err(proto_err(format!(
+            "site id {site_id} out of range for {} shards",
+            shards.len()
+        )));
     }
+    let mut proto = spec.algo.build::<M>().protocol();
+    let oracle = proto.oracle();
     let shapes = model.param_shapes();
     let mut params: Vec<Matrix> = model.params().into_iter().cloned().collect();
     let mut opt = Adam::new(spec.lr, &shapes);
     let mut rng = Rng::new(spec.seed);
     let mut ws = Workspace::new();
     let entry_names = model.entry_names();
-    let shard = &shards[site_id];
     let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
     let mut epochs = Vec::with_capacity(spec.epochs);
     for epoch in 0..spec.epochs {
         let mut plan = epoch_plan(&sizes, spec.batch_per_site, &mut rng);
         let n_steps = plan.iter().map(|i| i.n_batches()).min().unwrap_or(0);
-        let it = &mut plan[site_id];
         let (up0, down0) = dirs(ledger);
         let mut loss_sum = 0.0f64;
-        for _ in 0..n_steps {
-            let local = it.next().expect("batch iterator exhausted");
-            let idx: Vec<usize> = local.iter().map(|&i| shard[i]).collect();
-            let batch = data.make_batch(&idx);
-            let out = match spec.algo {
-                AlgoSpec::Dad => dad_site_step(t, ledger, &model, &batch, &mut ws)?,
-                AlgoSpec::Dsgd => dsgd_site_step(t, ledger, &model, &batch, &mut ws)?,
-                _ => unreachable!("guarded by ensure_remote_supported"),
+        for step in 0..n_steps {
+            let batch = if oracle {
+                // The pooled oracle trains the union batch in every process.
+                union_batch(data, shards, &mut plan)
+            } else {
+                let local = plan[site_id].next().expect("batch iterator exhausted");
+                shard_batch(data, &shards[site_id], &local)
             };
-            loss_sum += out.loss as f64;
-            opt.step(&mut params, &out.grads);
-            model.set_params(&params);
+            if oracle || spec.schedule.is_sync_step(step) {
+                let out = remote_site_step(
+                    proto.as_mut(),
+                    &mut *t,
+                    &mut *ledger,
+                    &model,
+                    &batch,
+                    site_id,
+                    &mut ws,
+                )?;
+                loss_sum += out.loss as f64;
+                opt.step(&mut params, &out.grads);
+                model.set_params(&params);
+            } else {
+                let loss = local_update(&mut model, &batch, &shapes, &mut ws);
+                let mut w = ByteWriter::new();
+                w.push_f32(loss);
+                Endpoint::new(&mut *t, &mut *ledger).ctrl_up("local-loss", &w.finish())?;
+                loss_sum += loss as f64;
+            }
         }
         let (up1, down1) = dirs(ledger);
         epochs.push(EpochLog {

@@ -15,7 +15,7 @@ use crate::dist::Cluster;
 use crate::metrics::{accuracy, multiclass_auc};
 use crate::nn::model::{Batch, DistModel};
 use crate::nn::{Activation, Adam, GruClassifier, Mlp};
-use crate::tensor::{Matrix, Rng};
+use crate::tensor::{Matrix, Rng, Workspace};
 
 /// Synchronization schedule (section 2's "update schedules are orthogonal
 /// to the shared statistic" — exercised by the ablation bench).
@@ -27,6 +27,36 @@ pub enum Schedule {
     /// algorithm (statistics can reconstruct gradients at any point, so the
     /// payload is unchanged — only the frequency drops).
     Periodic(usize),
+}
+
+impl Schedule {
+    /// Whether `step` is a synchronized step — **the** cross-process
+    /// lockstep decision. The simulated trainer, `dad serve` and every
+    /// `dad join` call this single implementation with the same step
+    /// index; a divergent copy anywhere would silently desync TCP runs
+    /// from loopback runs.
+    pub fn is_sync_step(&self, step: usize) -> bool {
+        match *self {
+            Schedule::EveryBatch => true,
+            Schedule::Periodic(k) => step % k.max(1) == 0,
+        }
+    }
+
+    /// Canonical `--sync-every` / config-frame encoding (1 = every batch).
+    pub fn sync_every(&self) -> usize {
+        match *self {
+            Schedule::EveryBatch => 1,
+            Schedule::Periodic(k) => k,
+        }
+    }
+
+    /// Inverse of [`Schedule::sync_every`]: 0 and 1 both mean every batch.
+    pub fn from_sync_every(k: usize) -> Schedule {
+        match k {
+            0 | 1 => Schedule::EveryBatch,
+            k => Schedule::Periodic(k),
+        }
+    }
 }
 
 /// Training configuration for one run.
@@ -105,6 +135,28 @@ impl TrainLog {
     /// Total payload bytes across all epochs and both directions.
     pub fn total_bytes(&self) -> u64 {
         self.epochs.iter().map(|e| e.bytes_up + e.bytes_down).sum()
+    }
+
+    /// Write the per-epoch log as a CSV file (the CLI's `--csv` option;
+    /// the CI remote-matrix job asserts this is non-empty for every
+    /// algorithm). Directories are created as needed.
+    pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
+        let mut w = crate::metrics::CsvWriter::create(
+            path,
+            &["epoch", "algo", "train_loss", "test_auc", "test_acc", "bytes_up", "bytes_down"],
+        )?;
+        for e in &self.epochs {
+            w.row(&[
+                e.epoch.to_string(),
+                self.algo.clone(),
+                format!("{}", e.train_loss),
+                format!("{}", e.test_auc),
+                format!("{}", e.test_acc),
+                e.bytes_up.to_string(),
+                e.bytes_down.to_string(),
+            ])?;
+        }
+        w.flush()
     }
 }
 
@@ -289,10 +341,7 @@ pub fn train<M: DistModel + Clone, D: DataSource>(
                     data.make_batch(&idx)
                 })
                 .collect();
-            let synchronize = match spec.schedule {
-                Schedule::EveryBatch => true,
-                Schedule::Periodic(k) => step % k.max(1) == 0,
-            };
+            let synchronize = spec.schedule.is_sync_step(step);
             let outcome = if synchronize || pooled {
                 algo.step(&mut cluster, &batches)
             } else {
@@ -345,6 +394,28 @@ pub fn train<M: DistModel + Clone, D: DataSource>(
     }
 }
 
+/// One site-local SGD step — the off-sync phase of [`Schedule::Periodic`].
+/// Shared verbatim between the simulated trainer and the remote drivers
+/// (`coordinator::remote`), so replicas drift identically between syncs in
+/// both modes; the fixed 1e-4 step size is part of that contract. Returns
+/// the batch loss.
+pub fn local_update<M: DistModel>(
+    model: &mut M,
+    batch: &Batch,
+    shapes: &[(usize, usize)],
+    ws: &mut Workspace,
+) -> f32 {
+    let stats = model.local_stats_ws(batch, ws);
+    let rows = stats.entries.last().expect("no stats entries").d.rows();
+    let grads = stats.assemble_grads(shapes, 1.0 / rows as f32, 1.0 / rows as f32);
+    let mut params: Vec<Matrix> = model.params().into_iter().cloned().collect();
+    for (p, g) in params.iter_mut().zip(&grads) {
+        p.axpy(-1e-4, g);
+    }
+    model.set_params(&params);
+    stats.loss
+}
+
 /// A purely local step (periodic schedule's off-sync phase): each site
 /// applies its own gradient with a site-local one-step SGD at the Adam lr
 /// scale. No communication.
@@ -355,15 +426,7 @@ fn local_step<M: DistModel>(
 ) -> crate::algos::StepOutcome {
     let mut losses = 0.0f32;
     for (site, batch) in cluster.sites.iter_mut().zip(batches) {
-        let stats = site.model.local_stats_ws(batch, site.ws.get_mut());
-        let rows = stats.entries.last().unwrap().d.rows();
-        let grads = stats.assemble_grads(shapes, 1.0 / rows as f32, 1.0 / rows as f32);
-        let mut params: Vec<Matrix> = site.model.params().into_iter().cloned().collect();
-        for (p, g) in params.iter_mut().zip(&grads) {
-            p.axpy(-1e-4, g);
-        }
-        site.model.set_params(&params);
-        losses += stats.loss;
+        losses += local_update(&mut site.model, batch, shapes, site.ws.get_mut());
     }
     crate::algos::StepOutcome {
         loss: losses / batches.len() as f32,
@@ -493,6 +556,47 @@ mod tests {
         let periodic = train(small_mlp(4), &p, &train_ds, &shards, &test_ds);
         assert!(periodic.total_bytes() < every.total_bytes());
         assert!(periodic.total_bytes() > 0);
+    }
+
+    /// Shard sizes not divisible by the batch size drop the ragged tail;
+    /// uneven shards lockstep on the minimum batch count (possibly zero).
+    #[test]
+    fn epoch_plan_uneven_shards_and_ragged_tail() {
+        let mut rng = Rng::new(9);
+        let plan = epoch_plan(&[10, 7, 3], 4, &mut rng);
+        let counts: Vec<usize> = plan.iter().map(|p| p.n_batches()).collect();
+        assert_eq!(counts, vec![2, 1, 0]);
+        // The trainers lockstep on the minimum across sites.
+        assert_eq!(counts.iter().min().copied(), Some(0));
+    }
+
+    /// A single-site cluster partitions its whole shard into full batches.
+    #[test]
+    fn epoch_plan_single_site() {
+        let mut rng = Rng::new(10);
+        let mut plan = epoch_plan(&[9], 3, &mut rng);
+        assert_eq!(plan.len(), 1);
+        let batches: Vec<Vec<usize>> = plan.pop().unwrap().collect();
+        assert_eq!(batches.len(), 3);
+        let mut all: Vec<usize> = batches.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..9).collect::<Vec<_>>());
+    }
+
+    /// Two independently-seeded processes (fresh `Rng`s from the same
+    /// seed) derive bit-identical plans — the property remote mode's
+    /// "no index traffic on the wire" rests on.
+    #[test]
+    fn epoch_plan_identical_across_processes() {
+        let draw = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            epoch_plan(&[12, 8], 4, &mut rng)
+                .into_iter()
+                .map(|it| it.collect::<Vec<Vec<usize>>>())
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(draw(123), draw(123));
+        assert_ne!(draw(123), draw(124), "different seeds should shuffle differently");
     }
 
     #[test]

@@ -74,4 +74,19 @@ pub trait Transport: Send {
     fn recv_broadcast(&mut self) -> io::Result<Frame> {
         Err(unsupported(self.name(), "recv_broadcast"))
     }
+
+    /// Forward one site's peer-to-peer frames through a star hub: write
+    /// `frames` verbatim to every site *except* `from_site` (aggregator-
+    /// role endpoints only), flushing once per link. The hub reads p2p
+    /// uplinks with [`Transport::recv_from_site`] and forwards with this
+    /// method in two separate phases — drain every uplink first, then
+    /// forward — so a blocking single-threaded hub can never deadlock
+    /// against a site that is still flushing its own uplink. The caller
+    /// prices each forwarded frame as `n_sites - 1` direct unicasts —
+    /// what a true mesh would ship — so the ledger stays topology-honest
+    /// even though the bytes physically transit the hub.
+    fn forward_p2p(&mut self, from_site: usize, frames: &[Frame]) -> io::Result<()> {
+        let _ = (from_site, frames);
+        Err(unsupported(self.name(), "forward_p2p"))
+    }
 }

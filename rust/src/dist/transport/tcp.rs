@@ -136,6 +136,19 @@ impl Transport for TcpAgg {
     fn recv_from_site(&mut self, site: usize) -> io::Result<Frame> {
         wire::decode(&mut self.links[site].r)
     }
+
+    fn forward_p2p(&mut self, from_site: usize, frames: &[Frame]) -> io::Result<()> {
+        for (i, l) in self.links.iter_mut().enumerate() {
+            if i == from_site {
+                continue;
+            }
+            for f in frames {
+                wire::encode_frame(&mut l.w, f)?;
+            }
+            l.w.flush()?;
+        }
+        Ok(())
+    }
 }
 
 /// Site endpoint: a single socket to the aggregator plus the identity the
@@ -165,6 +178,32 @@ impl TcpSite {
     pub fn site_id(&self) -> usize {
         self.site_id
     }
+
+    /// [`TcpSite::connect`] with retries: launcher scripts (and the CI
+    /// remote-matrix job) start the aggregator and the sites concurrently,
+    /// so the first dials can land before the listener is bound. Retries
+    /// connection-refused/reset every 200 ms until `timeout` elapses;
+    /// protocol errors still fail immediately.
+    pub fn connect_retry(addr: &str, timeout: std::time::Duration) -> io::Result<TcpSite> {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            match TcpSite::connect(addr) {
+                Ok(site) => return Ok(site),
+                Err(e)
+                    if std::time::Instant::now() < deadline
+                        && matches!(
+                            e.kind(),
+                            io::ErrorKind::ConnectionRefused
+                                | io::ErrorKind::ConnectionReset
+                                | io::ErrorKind::AddrNotAvailable
+                        ) =>
+                {
+                    std::thread::sleep(std::time::Duration::from_millis(200));
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
 }
 
 impl Transport for TcpSite {
@@ -183,7 +222,16 @@ impl Transport for TcpSite {
                 self.link.w.flush()?;
                 Ok(n)
             }
-            _ => Err(unsupported("tcp-site", "non-uplink ship")),
+            Direction::PeerToPeer => {
+                // Physically one uplink to the hub, which relays the frame
+                // to the other S-1 sites; the returned count prices what a
+                // true mesh would ship (one unicast per receiving peer),
+                // matching the loopback fan-out convention.
+                let n = wire::encode_payload(&mut self.link.w, tag, mats)?;
+                self.link.w.flush()?;
+                Ok(n * self.n_sites.saturating_sub(1) as u64)
+            }
+            Direction::AggToSite => Err(unsupported("tcp-site", "non-uplink ship")),
         }
     }
 

@@ -25,13 +25,34 @@
 //! exact encoded size arithmetically, so the loopback backend stays as fast
 //! as the old ledger-increment path while reporting identical byte counts to
 //! a real TCP run.
+//!
+//! ## Tag vocabulary
+//!
+//! Tags are free-form, but both training modes must spell them identically
+//! for the per-(tag, direction) ledger equivalence to hold. The full set:
+//!
+//! | tag | kind | carried by |
+//! |---|---|---|
+//! | `acts`, `deltas` | payload | dAD / dad-p2p (A, Δ) stacks |
+//! | `aux-acts`, `delta-L` | payload | edAD aux activations + output delta |
+//! | `grad` | payload | dSGD full gradients |
+//! | `lowrank-q`, `lowrank-g` | payload | rank-dAD factor pairs |
+//! | `psgd-p`, `psgd-q` | payload | PowerSGD factor pairs (P, Q) |
+//! | `bias-grad`, `direct-grad` | payload | non-outer-product gradients |
+//! | `hello`, `welcome`, `config` | control | transport + run handshake |
+//! | `step-meta`, `step-sync` | control | per-step prologue |
+//! | `eff-rank` | control | rank-dAD effective-rank telemetry |
+//! | `local-loss` | control | periodic-schedule local-phase losses |
 
 use std::io::{self, Read, Write};
 
 use crate::tensor::Matrix;
 
-/// Codec version byte; both ends of a connection must agree.
-pub const WIRE_VERSION: u8 = 1;
+/// Codec version byte; both ends of a connection must agree. Bumped to 2
+/// when the `config` control frame gained the sync-schedule field (and
+/// the step prologue gained `step-meta.n_aux`): a v1 peer dialing a v2
+/// endpoint now fails cleanly at the handshake instead of mid-run.
+pub const WIRE_VERSION: u8 = 2;
 
 /// Upper bound on one frame's post-prefix length (1 GiB): a decoder sanity
 /// check against corrupt or hostile length prefixes.
@@ -143,6 +164,19 @@ pub fn encode_control<W: Write>(w: &mut W, tag: &str, body: &[u8]) -> io::Result
     w.write_all(tag.as_bytes())?;
     w.write_all(body)?;
     Ok(total)
+}
+
+/// Re-encode a decoded [`Frame`] into `w` (the aggregator's peer-to-peer
+/// relay path); returns the bytes written. Round-trips exactly: the f32 LE
+/// body is lossless, so a relayed frame is bit-identical to the original.
+pub fn encode_frame<W: Write>(w: &mut W, f: &Frame) -> io::Result<u64> {
+    match &f.body {
+        Body::Control(b) => encode_control(w, &f.tag, b),
+        Body::Mats(ms) => {
+            let refs: Vec<&Matrix> = ms.iter().collect();
+            encode_payload(w, &f.tag, &refs)
+        }
+    }
 }
 
 /// Decode the next frame from `r`, validating version, kind and sizes.

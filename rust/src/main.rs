@@ -22,8 +22,8 @@ use dad::algos::AlgoSpec;
 use dad::config::{Args, TomlLite};
 use dad::coordinator::experiments::{self, Scale};
 use dad::coordinator::{
-    build_task, ensure_remote_supported, join_training, serve_training, train, RemoteConfig,
-    Schedule, TrainLog, TrainSpec, TrainTask,
+    build_task, join_training, serve_training, train, validate_remote, RemoteConfig, Schedule,
+    TrainLog, TrainSpec, TrainTask,
 };
 use dad::dist::{Direction, Ledger, TcpAgg, TcpSite};
 
@@ -48,14 +48,15 @@ fn print_help() {
            dad exp <table2|fig1|fig2|fig3|fig4|fig5|fig6|bandwidth|all> [--scale quick|default|paper]\n\
            dad train [--algo pooled|dsgd|dad|dad-p2p|edad|rank-dad:R|powersgd:R] [--dataset mnist|arabic]\n\
                      [--epochs N] [--batch B] [--sites S] [--lr F] [--seed N] [--sync-every K]\n\
-                     [--scale quick|default|paper] [--config path.toml]\n\
-           dad serve [--addr HOST:PORT] [--sites S] [--algo dad|dsgd] [train options]\n\
-           dad join  [HOST:PORT]\n\
+                     [--scale quick|default|paper] [--config path.toml] [--csv PATH]\n\
+           dad serve [--addr HOST:PORT] [--sites S] [--csv PATH] [train options]\n\
+           dad join  [HOST:PORT] [--csv PATH]\n\
            dad info\n\
          \n\
          `train` simulates all sites in one process over the loopback transport;\n\
          `serve`/`join` run the same optimization as separate OS processes over\n\
          TCP, with identical losses and ledger byte counts for the same seed.\n\
+         Every --algo (and --sync-every schedule) runs in both modes.\n\
          Experiment outputs land in results/*.csv; see EXPERIMENTS.md."
     );
 }
@@ -175,7 +176,10 @@ fn train_spec_from(args: &Args) -> (TrainSpec, String) {
         .opt("algo")
         .map(str::to_string)
         .unwrap_or_else(|| cfg.str_or("train", "algo", "dad").to_string());
-    let algo = AlgoSpec::parse(&algo_s).unwrap_or_else(|| panic!("unknown algo {algo_s:?}"));
+    let algo = AlgoSpec::parse(&algo_s).unwrap_or_else(|e| {
+        eprintln!("--algo {algo_s:?}: {e}");
+        std::process::exit(2)
+    });
     let dataset = args
         .opt("dataset")
         .map(str::to_string)
@@ -187,12 +191,19 @@ fn train_spec_from(args: &Args) -> (TrainSpec, String) {
         epochs: args.usize_or("epochs", cfg.int_or("train", "epochs", 10) as usize),
         lr: args.f32_or("lr", cfg.float_or("train", "lr", 1e-4) as f32),
         seed: args.usize_or("seed", cfg.int_or("train", "seed", 13) as usize) as u64,
-        schedule: match args.usize_or("sync-every", 1) {
-            0 | 1 => Schedule::EveryBatch,
-            k => Schedule::Periodic(k),
-        },
+        schedule: Schedule::from_sync_every(args.usize_or("sync-every", 1)),
     };
     (spec, dataset)
+}
+
+/// Honor `--csv PATH`: write the per-epoch metrics log (shared by train,
+/// serve and join — the CI remote-matrix job asserts the file is
+/// non-empty for every algorithm).
+fn maybe_write_csv(args: &Args, log: &TrainLog) {
+    if let Some(path) = args.opt("csv") {
+        log.write_csv(path).unwrap_or_else(|e| panic!("writing {path}: {e}"));
+        println!("metrics written to {path}");
+    }
 }
 
 fn print_epochs(log: &TrainLog) {
@@ -229,6 +240,7 @@ fn cmd_train(args: &Args) {
         Err(e) => panic!("{e}"),
     };
     print_epochs(&log);
+    maybe_write_csv(args, &log);
     let up: u64 = log.epochs.iter().map(|e| e.bytes_up).sum();
     let down: u64 = log.epochs.iter().map(|e| e.bytes_down).sum();
     println!(
@@ -241,7 +253,7 @@ fn cmd_train(args: &Args) {
 fn cmd_serve(args: &Args) {
     let (spec, dataset) = train_spec_from(args);
     // Fail fast on the operator's terminal, before any site can connect.
-    ensure_remote_supported(&spec).unwrap_or_else(|e| panic!("{e}"));
+    validate_remote(&spec).unwrap_or_else(|e| panic!("{e}"));
     let scale_s = args.opt_or("scale", "default").to_string();
     let scale = Scale::parse(&scale_s).unwrap_or(Scale::Default);
     let addr = args.opt_or("addr", "127.0.0.1:7009").to_string();
@@ -260,18 +272,17 @@ fn cmd_serve(args: &Args) {
     let mut ledger = Ledger::new();
     let t0 = std::time::Instant::now();
     let log = match build_task(&dataset, scale, spec.n_sites, spec.seed) {
-        Ok(TrainTask::Dense { test_ds, shards, model, .. }) => {
-            let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
-            serve_training(&mut agg, &mut ledger, &spec, model, &sizes, &test_ds)
+        Ok(TrainTask::Dense { train_ds, test_ds, shards, model }) => {
+            serve_training(&mut agg, &mut ledger, &spec, model, &train_ds, &shards, &test_ds)
         }
-        Ok(TrainTask::Seq { test_ds, shards, model, .. }) => {
-            let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
-            serve_training(&mut agg, &mut ledger, &spec, model, &sizes, &test_ds)
+        Ok(TrainTask::Seq { train_ds, test_ds, shards, model }) => {
+            serve_training(&mut agg, &mut ledger, &spec, model, &train_ds, &shards, &test_ds)
         }
         Err(e) => panic!("{e}"),
     }
     .unwrap_or_else(|e| panic!("serve: {e}"));
     print_epochs(&log);
+    maybe_write_csv(args, &log);
     println!(
         "done in {:.1}s wall; measured wire bytes: up {} down {}",
         t0.elapsed().as_secs_f32(),
@@ -286,7 +297,10 @@ fn cmd_serve(args: &Args) {
 fn cmd_join(args: &Args) {
     let addr =
         args.positional.get(1).map(|s| s.as_str()).unwrap_or("127.0.0.1:7009").to_string();
-    let mut site = TcpSite::connect(&addr).unwrap_or_else(|e| panic!("connect {addr}: {e}"));
+    // Retry the dial briefly: launcher scripts (and CI) start serve and
+    // joins concurrently, so the listener may not be bound yet.
+    let mut site = TcpSite::connect_retry(&addr, std::time::Duration::from_secs(10))
+        .unwrap_or_else(|e| panic!("connect {addr}: {e}"));
     let site_id = site.site_id();
     let cfg = RemoteConfig::recv(&mut site).unwrap_or_else(|e| panic!("config: {e}"));
     let scale = Scale::parse(&cfg.scale).unwrap_or(Scale::Default);
@@ -314,6 +328,7 @@ fn cmd_join(args: &Args) {
             e.epoch, e.train_loss, e.bytes_up, e.bytes_down
         );
     }
+    maybe_write_csv(args, &log);
     println!(
         "done in {:.1}s; this site shipped {} B up, received {} B down",
         t0.elapsed().as_secs_f32(),

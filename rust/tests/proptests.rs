@@ -241,6 +241,47 @@ fn prop_ledger_counts_framing_overhead() {
     });
 }
 
+/// `trainer::epoch_plan` is a permutation-free partition, and it is
+/// bit-identical across independently-seeded processes — the property the
+/// multi-process mode's "no index traffic on the wire" rests on. For every
+/// shard: exactly `n / batch` full batches, all indices in range, no index
+/// repeated within the epoch (the ragged tail is dropped, never recycled).
+#[test]
+fn prop_epoch_plan_is_deterministic_partition() {
+    forall(40, 0x9_1A27, |seed, rng| {
+        let n_sites = 1 + rng.below(4);
+        let batch = 1 + rng.below(8);
+        let sizes: Vec<usize> = (0..n_sites).map(|_| rng.below(40)).collect();
+        let draw = |s: u64| {
+            let mut r = Rng::new(s);
+            dad::coordinator::epoch_plan(&sizes, batch, &mut r)
+                .into_iter()
+                .map(|it| it.collect::<Vec<Vec<usize>>>())
+                .collect::<Vec<_>>()
+        };
+        let plan = draw(seed);
+        // Two independently-seeded "processes" agree on every batch.
+        assert_eq!(plan, draw(seed), "seed {seed:#x}: cross-process determinism");
+        for (shard, batches) in plan.iter().enumerate() {
+            let n = sizes[shard];
+            assert_eq!(batches.len(), n / batch, "seed {seed:#x} shard {shard}: batch count");
+            let mut seen = vec![false; n];
+            for b in batches {
+                assert_eq!(b.len(), batch, "seed {seed:#x} shard {shard}: full batches only");
+                for &i in b {
+                    assert!(i < n, "seed {seed:#x} shard {shard}: index {i} out of range");
+                    assert!(!seen[i], "seed {seed:#x} shard {shard}: index {i} repeated");
+                    seen[i] = true;
+                }
+            }
+            // Partition, not just disjointness: exactly (n/batch)*batch
+            // distinct indices are covered.
+            let covered = seen.iter().filter(|&&s| s).count();
+            assert_eq!(covered, (n / batch) * batch, "seed {seed:#x} shard {shard}: coverage");
+        }
+    });
+}
+
 /// Per-site stats wire size never exceeds dSGD's gradient wire size by the
 /// paper's bound when N < min(h_i): the premise of the whole method.
 #[test]
