@@ -1,30 +1,69 @@
 #!/usr/bin/env bash
-# Smoke-run one --algo spelling through the multi-process TCP mode:
-# `dad serve --sites 2` plus two `dad join`s on localhost, asserting that
-# every process exits 0 and that the serve process wrote a non-empty
+# Smoke-run one (--algo, --dataset) pair through the multi-process TCP
+# mode: `dad serve --sites 2` plus two `dad join`s on localhost, asserting
+# that every process exits 0 and that the serve process wrote a non-empty
 # per-epoch metrics CSV. `dad join` retries its dial for up to 10 s, so
 # the three processes can be launched concurrently.
 #
-# Usage: remote_smoke.sh <algo>   (run from the repository root)
+# Special cases enforced here:
+#   * edad + lm must be REJECTED up front (`dad serve` exits non-zero
+#     with a clear error before binding) — the transformer's attention
+#     has no edAD delta recomputation.
+#   * rank-dad:* runs must emit per-entry eff_rank_* CSV columns with
+#     finite values (the adaptive-bandwidth telemetry).
+#
+# Usage: remote_smoke.sh <algo> [dataset]   (run from the repository root)
 set -euo pipefail
 
-ALGO="${1:?usage: remote_smoke.sh <algo>}"
+ALGO="${1:?usage: remote_smoke.sh <algo> [dataset]}"
+DATASET="${2:-mnist}"
 BIN="${BIN:-rust/target/release/dad}"
 PORT="${PORT:-7411}"
-CSV="results/remote_smoke_${ALGO//[:]/_}.csv"
+CSV="results/remote_smoke_${ALGO//[:]/_}_${DATASET}.csv"
 
 rm -f "$CSV"
-
-# Kill any survivors if one process fails: an orphaned blocking serve
-# would otherwise hang the CI step until the job timeout.
-trap 'kill $serve_pid $join1_pid $join2_pid 2>/dev/null || true' EXIT
 
 # `timeout` bounds every process: a protocol hang (the exact regression
 # class this job exists to catch) becomes a fast red job, not a 6-hour
 # runner stall.
 LIMIT="${LIMIT:-300}"
+
+# The one combination that must fail fast instead of training.
+if [ "$ALGO" = "edad" ] && [ "$DATASET" = "lm" ]; then
+    err_log=$(mktemp)
+    if timeout "$LIMIT" "$BIN" serve --addr "127.0.0.1:${PORT}" --sites 2 --algo "$ALGO" \
+        --dataset "$DATASET" --scale quick --epochs 2 --batch 8 --seed 7 --csv "$CSV" \
+        2>"$err_log"; then
+        echo "FAIL(edad,lm): serve must reject edad for the transformer LM"
+        exit 1
+    fi
+    grep -qi "edad" "$err_log" || {
+        echo "FAIL(edad,lm): rejection error does not mention edad:"
+        cat "$err_log"
+        exit 1
+    }
+    if [ -s "$CSV" ]; then
+        echo "FAIL(edad,lm): rejected run must not write metrics"
+        exit 1
+    fi
+    echo "ok(edad,$DATASET): rejected up front with a clear error"
+    exit 0
+fi
+
+# Kill any survivors if one process fails: an orphaned blocking serve
+# would otherwise hang the CI step until the job timeout.
+serve_pid=""
+join1_pid=""
+join2_pid=""
+cleanup() {
+    for pid in "$serve_pid" "$join1_pid" "$join2_pid"; do
+        [ -n "$pid" ] && kill "$pid" 2>/dev/null || true
+    done
+}
+trap cleanup EXIT
+
 timeout "$LIMIT" "$BIN" serve --addr "127.0.0.1:${PORT}" --sites 2 --algo "$ALGO" \
-    --dataset mnist --scale quick --epochs 2 --batch 8 --seed 7 --csv "$CSV" &
+    --dataset "$DATASET" --scale quick --epochs 2 --batch 8 --seed 7 --csv "$CSV" &
 serve_pid=$!
 timeout "$LIMIT" "$BIN" join "127.0.0.1:${PORT}" &
 join1_pid=$!
@@ -38,11 +77,31 @@ wait "$join2_pid"
 wait "$serve_pid"
 
 # Non-empty metrics CSV: a header line plus one row per epoch.
-test -s "$CSV" || { echo "FAIL($ALGO): metrics CSV missing or empty: $CSV"; exit 1; }
+test -s "$CSV" || { echo "FAIL($ALGO,$DATASET): metrics CSV missing or empty: $CSV"; exit 1; }
 rows=$(wc -l <"$CSV")
 if [ "$rows" -lt 3 ]; then
-    echo "FAIL($ALGO): metrics CSV too short ($rows lines):"
+    echo "FAIL($ALGO,$DATASET): metrics CSV too short ($rows lines):"
     cat "$CSV"
     exit 1
 fi
-echo "ok($ALGO): serve + 2 joins exited 0; $rows CSV lines in $CSV"
+
+# rank-dAD telemetry: the per-entry eff_rank_* columns (after the 8 fixed
+# columns) must exist and carry finite values — this is the adaptive-rank
+# telemetry the transformer bandwidth analysis reads.
+case "$ALGO" in
+rank-dad*|rankdad*)
+    awk -F, '
+        NR == 1 {
+            if ($0 !~ /eff_rank_/) { print "missing eff_rank_ columns"; exit 1 }
+        }
+        NR == 2 {
+            if (NF < 9) { print "no rank columns in data row"; exit 1 }
+            for (i = 9; i <= NF; i++)
+                if ($i == "NaN") { print "rank column " i " is NaN"; exit 1 }
+            exit 0
+        }
+    ' "$CSV" || { echo "FAIL($ALGO,$DATASET): eff_rank columns bad:"; head -2 "$CSV"; exit 1; }
+    ;;
+esac
+
+echo "ok($ALGO,$DATASET): serve + 2 joins exited 0; $rows CSV lines in $CSV"

@@ -1,155 +1,76 @@
-//! END-TO-END DRIVER: train a ~12.8M-parameter decoder-only transformer LM
-//! with distributed auto-differentiation on a 2-site cluster for a few
-//! hundred steps over a synthetic token corpus, logging the loss curve and
-//! communication ledger (results/e2e_loss.csv + EXPERIMENTS.md §E2E).
+//! Transformer LM demo — a thin driver over the first-class `lm` task.
 //!
-//! This exercises every layer of the system at once: the from-scratch
-//! tensor/NN stack (attention fwd+bwd), the AD-statistics interface on a
-//! non-trivial architecture (20 stats entries + direct grads for
-//! embeddings/LayerNorms), the dAD exchange with exact byte accounting,
-//! Adam, and the data pipeline.
+//! The transformer is no longer reachable only through this example: it is
+//! a first-class `--dataset lm` workload, so the full pipeline runs from
+//! the CLI in both execution modes:
 //!
-//! A 100M-parameter model at a few hundred steps is ~2 TFLOP/step — days on
-//! this CPU-only testbed's native engine — so the driver defaults to the
-//! 12.8M configuration (same depth-to-width regime, documented in
-//! EXPERIMENTS.md); pass --big for the full 100M shape if you have the
-//! patience.
+//! ```text
+//! dad train --dataset lm --algo dad   --scale quick|default|paper
+//! dad serve --dataset lm --algo dad --sites 2   (+ 2x `dad join ADDR`)
+//! dad exp lm --scale quick            # dSGD/dAD/rank-dAD/PowerSGD sweep
+//! ```
 //!
-//! Run: cargo run --release --example transformer_e2e [-- --steps 300]
+//! This example keeps the old headline — dAD vs dSGD bytes/step on the
+//! transformer — as a two-run comparison through the same `build_task` /
+//! `train` path the CLI uses (`--scale default` is the ~12.8M-parameter
+//! e2e configuration; see EXPERIMENTS.md §LM for the crossover math).
+//!
+//! Run: cargo run --release --example transformer_e2e [-- --scale quick]
 
-use dad::algos::common::DistAlgorithm;
-use dad::algos::{Dad, Dsgd};
+use dad::algos::AlgoSpec;
 use dad::config::Args;
-use dad::data::token_corpus;
-use dad::metrics::CsvWriter;
-use dad::nn::model::{Batch, DistModel};
-use dad::nn::transformer::{Transformer, TransformerConfig};
-use dad::nn::Adam;
-use dad::dist::Cluster;
-use dad::tensor::{Matrix, Rng};
+use dad::coordinator::{build_task, default_lm_lr, train, Scale, TrainSpec, TrainTask};
 
 fn main() {
     let args = Args::from_env();
-    let steps = args.usize_or("steps", 250);
-    let b_per_site = args.usize_or("batch", 2);
-    let log_every = args.usize_or("log-every", 10);
-    let cfg = if args.has_flag("big") {
-        TransformerConfig { vocab: 32_000, d_model: 768, n_heads: 12, n_layers: 12, d_ff: 3072, max_t: 128 }
-    } else {
-        TransformerConfig::e2e()
-    };
-    let t_len = cfg.max_t;
+    let scale = Scale::parse(args.opt_or("scale", "quick")).unwrap_or(Scale::Quick);
+    let epochs = args.usize_or("epochs", 2);
+    let batch = args.usize_or("batch", 8);
+    let seed = args.usize_or("seed", 17) as u64;
 
-    println!("== transformer_e2e: decoder-only LM trained with dAD ==");
-    println!(
-        "config: vocab {} d_model {} heads {} layers {} d_ff {} T {}  => {:.1}M params",
-        cfg.vocab,
-        cfg.d_model,
-        cfg.n_heads,
-        cfg.n_layers,
-        cfg.d_ff,
-        t_len,
-        cfg.n_params() as f64 / 1e6
-    );
-
-    // Synthetic corpus with learnable structure; one disjoint shard per site.
-    let mut rng = Rng::new(17);
-    let corpus: Vec<Vec<u32>> = (0..2)
-        .map(|_| token_corpus(400_000, cfg.vocab, &mut rng))
-        .collect();
-
-    let mut mrng = Rng::new(42);
-    let model = Transformer::new(cfg.clone(), &mut mrng);
-    let shapes = model.param_shapes();
-    let mut params: Vec<Matrix> = model.params().into_iter().cloned().collect();
-    let mut cluster = Cluster::replicate(model, 2);
-    let mut algo = Dad;
-    let mut opt = Adam::new(3e-4, &shapes);
-    let mut csv = CsvWriter::create(
-        "results/e2e_loss.csv",
-        &["step", "loss", "bytes_up", "bytes_down", "wall_s"],
-    )
-    .unwrap();
-
-    let mut rng_b = Rng::new(5);
-    let t_start = std::time::Instant::now();
-    let mut loss_first = None;
-    let mut loss_last = 0.0f32;
-    for step in 0..steps {
-        // Sample site batches from their private shards.
-        let batches: Vec<Batch> = corpus
-            .iter()
-            .map(|shard| {
-                let mut ids = Vec::with_capacity(b_per_site * t_len);
-                let mut targets = Vec::with_capacity(b_per_site * t_len);
-                for _ in 0..b_per_site {
-                    let start = rng_b.below(shard.len() - t_len - 1);
-                    ids.extend_from_slice(&shard[start..start + t_len]);
-                    targets.extend_from_slice(&shard[start + 1..start + t_len + 1]);
-                }
-                Batch::Tokens { b: b_per_site, t: t_len, ids, targets }
-            })
-            .collect();
-        let out = algo.step(&mut cluster, &batches);
-        opt.step(&mut params, &out.grads);
-        for site in &mut cluster.sites {
-            site.model.set_params(&params);
-        }
-        loss_first.get_or_insert(out.loss);
-        loss_last = out.loss;
-        if step % log_every == 0 || step + 1 == steps {
-            let wall = t_start.elapsed().as_secs_f32();
-            println!(
-                "step {step:>4}  loss {:.4}  up {:>10} B  down {:>10} B  ({:.1}s, {:.2}s/step)",
-                out.loss,
-                out.bytes_up,
-                out.bytes_down,
-                wall,
-                wall / (step + 1) as f32
-            );
-            csv.row_f32(&[step as f32, out.loss, out.bytes_up as f32, out.bytes_down as f32, wall])
-                .unwrap();
-        }
-    }
-    csv.flush().unwrap();
-
-    // One dSGD step for the bandwidth comparison headline.
-    let batches: Vec<Batch> = corpus
-        .iter()
-        .map(|shard| {
-            let mut ids = Vec::with_capacity(b_per_site * t_len);
-            let mut targets = Vec::with_capacity(b_per_site * t_len);
-            for _ in 0..b_per_site {
-                let start = rng_b.below(shard.len() - t_len - 1);
-                ids.extend_from_slice(&shard[start..start + t_len]);
-                targets.extend_from_slice(&shard[start + 1..start + t_len + 1]);
+    println!("== transformer_e2e: the `--dataset lm` workload, dAD vs dSGD ==");
+    let mut summary: Vec<(String, f32, f32, u64)> = Vec::new();
+    for algo in [AlgoSpec::Dad, AlgoSpec::Dsgd] {
+        let (train_ds, test_ds, shards, model) = match build_task("lm", scale, 2, seed) {
+            Ok(TrainTask::Tokens { train_ds, test_ds, shards, model }) => {
+                (train_ds, test_ds, shards, model)
             }
-            Batch::Tokens { b: b_per_site, t: t_len, ids, targets }
-        })
-        .collect();
-    let dsgd_out = Dsgd.step(&mut cluster, &batches);
+            Ok(_) => unreachable!("lm builds a token task"),
+            Err(e) => panic!("{e}"),
+        };
+        let spec = TrainSpec {
+            algo: algo.clone(),
+            n_sites: 2,
+            batch_per_site: batch,
+            epochs,
+            lr: default_lm_lr(scale),
+            seed,
+            ..Default::default()
+        };
+        println!("-- {} --", algo.name());
+        let log = train(model, &spec, &train_ds, &shards, &test_ds);
+        for e in &log.epochs {
+            println!(
+                "epoch {:>2}  loss {:.4}  ppl {:.3}  up {:>12} B  down {:>12} B",
+                e.epoch, e.train_loss, e.test_ppl, e.bytes_up, e.bytes_down
+            );
+        }
+        let last = log.epochs.last().expect("at least one epoch");
+        summary.push((algo.name(), last.train_loss, last.test_ppl, log.total_bytes()));
+    }
+    let (dad_bytes, dsgd_bytes) = (summary[0].3, summary[1].3);
+    println!("\n{:<8} {:>10} {:>10} {:>14}", "algo", "loss", "ppl", "total bytes");
+    for (name, loss, ppl, bytes) in &summary {
+        println!("{name:<8} {loss:>10.4} {ppl:>10.3} {bytes:>14}");
+    }
     println!(
-        "\nloss: {:.4} -> {:.4} over {} steps ({} tokens/step global)",
-        loss_first.unwrap_or(0.0),
-        loss_last,
-        steps,
-        2 * b_per_site * t_len
-    );
-    let dad_bytes = {
-        let mut c2 = Cluster::replicate(cluster.sites[0].model.clone(), 2);
-        Dad.step(&mut c2, &batches).bytes_up
-    };
-    println!(
-        "bytes/step up: dSGD {} vs dAD {}  ({:.2}x reduction; N*T={} vs h<= {})",
-        dsgd_out.bytes_up,
-        dad_bytes,
-        dsgd_out.bytes_up as f64 / dad_bytes.max(1) as f64,
-        b_per_site * t_len,
-        cfg.d_ff,
-    );
-    println!("loss curve written to results/e2e_loss.csv");
-    assert!(
-        loss_last < loss_first.unwrap_or(f32::MAX),
-        "loss did not decrease — e2e training failed"
+        "dAD ships {:.2}x {} bytes than dSGD at this batch (crossover at B*T ~ mean layer \
+         width; see EXPERIMENTS.md)",
+        if dad_bytes <= dsgd_bytes {
+            dsgd_bytes as f64 / dad_bytes.max(1) as f64
+        } else {
+            dad_bytes as f64 / dsgd_bytes.max(1) as f64
+        },
+        if dad_bytes <= dsgd_bytes { "fewer" } else { "more" },
     );
 }

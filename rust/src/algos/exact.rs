@@ -195,7 +195,10 @@ impl<M: DistModel> DistAlgorithm<M> for Edad {
         let recomputed = cluster.sites[0]
             .model
             .edad_recompute(&a_hats, &aux_hats, &delta_l, &stats.site_rows)
-            .expect("model does not support edAD (use dAD)");
+            .expect(
+                "model does not support edAD (DistModel::supports_edad is false) — \
+                 the coordinators reject this combination up front; use dad",
+            );
         let direct = exchange_direct(cluster, &stats);
         let grads = assemble_grads(&shapes, &recomputed, &direct, scale, 1.0);
         let (up1, down1) = step_bytes(cluster);

@@ -300,6 +300,41 @@ mod tests {
         assert_eq!(AlgoSpec::parse("power-sgd:2"), AlgoSpec::parse("powersgd:2"));
     }
 
+    /// Transformer path: dAD == pooled on token batches with **uneven**
+    /// per-site window counts. The cross-site weighting rides on the
+    /// output-delta row count being `b * t` per site (one prediction per
+    /// position) — the contract `Batch::len` documents — so a site with 2
+    /// windows must weigh 10/25ths of a 5-token-window step, not 2/5ths.
+    #[test]
+    fn transformer_dad_matches_pooled_with_uneven_token_batches() {
+        use crate::nn::{Transformer, TransformerConfig};
+        let cfg = TransformerConfig::tiny();
+        let t = 5usize;
+        let mut rng = Rng::new(17);
+        let model = Transformer::new(cfg.clone(), &mut rng);
+        let mut mk = |b: usize| {
+            let ids: Vec<u32> = (0..b * t).map(|_| rng.below(cfg.vocab) as u32).collect();
+            let targets: Vec<u32> = (0..b * t).map(|_| rng.below(cfg.vocab) as u32).collect();
+            Batch::Tokens { b, t, ids, targets }
+        };
+        let batches = vec![mk(2), mk(3)];
+        assert_eq!(batches[0].len(), 10, "token batch len counts b*t rows");
+        assert_eq!(batches[1].len(), 15);
+        let mut c1 = Cluster::replicate(model.clone(), 2);
+        let pooled = Pooled.step(&mut c1, &batches);
+        let mut c2 = Cluster::replicate(model.clone(), 2);
+        let dad = Dad.step(&mut c2, &batches);
+        let mut c3 = Cluster::replicate(model, 2);
+        let p2p = DadP2p.step(&mut c3, &batches);
+        for (i, pg) in pooled.grads.iter().enumerate() {
+            assert!(pg.max_abs_diff(&dad.grads[i]) < 1e-5, "dad param {i}");
+            assert!(pg.max_abs_diff(&p2p.grads[i]) < 1e-5, "p2p param {i}");
+        }
+        // Loss weighting: the batch-size-weighted mean equals the union
+        // batch's mean only when sites weigh by b*t.
+        assert!((pooled.loss - dad.loss).abs() < 1e-5, "{} vs {}", pooled.loss, dad.loss);
+    }
+
     /// GRU path: dAD == pooled on sequence batches too (paper §4.1.2).
     #[test]
     fn gru_dad_matches_pooled() {

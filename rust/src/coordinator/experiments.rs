@@ -12,7 +12,10 @@
 //! scale produced each committed number.
 
 use crate::algos::AlgoSpec;
-use crate::coordinator::trainer::{fold_mean_auc, train, DataSource, Schedule, TrainLog, TrainSpec};
+use crate::coordinator::trainer::{
+    build_task, default_lm_lr, fold_mean_auc, train, DataSource, Schedule, TrainLog, TrainSpec,
+    TrainTask,
+};
 use crate::data::{
     arabic_digits_like, kfold, mnist_like, natops_like, pems_sf_like, pen_digits_like,
     split_by_label, DenseDataset, SeqDataset,
@@ -467,6 +470,93 @@ pub fn fig5(scale: Scale) -> Vec<(&'static str, RankCurves)> {
             (name, curves)
         })
         .collect()
+}
+
+// ---------------------------------------------------------------------------
+// LM comparison — the transformer workload (§5.3.2) across algorithms.
+// ---------------------------------------------------------------------------
+
+/// One algorithm's endpoint on the LM task (results/lm_bandwidth.csv holds
+/// the full per-epoch series).
+pub struct LmRow {
+    /// Algorithm name.
+    pub algo: String,
+    /// Final epoch's mean training loss.
+    pub final_loss: f32,
+    /// Final epoch's test perplexity.
+    pub final_ppl: f32,
+    /// Total payload bytes, site->aggregator, across the run.
+    pub bytes_up: u64,
+    /// Total payload bytes, aggregator->site, across the run.
+    pub bytes_down: u64,
+}
+
+/// The paper's §5.3.2 transformer claim, measured in the ledger: train the
+/// decoder-only LM with the gradient-centric baselines (dSGD full
+/// gradients; PowerSGD compressed gradients, Vogels et al. 2019) and the
+/// statistics-shipping family (dAD; rank-dAD), and record loss/perplexity
+/// next to the *actual serialized bytes* each ships. dAD ships
+/// (B·T)×(h_in+h_out) stacks per projection vs. dSGD's h_in·h_out weight
+/// gradients, so its advantage is exactly the `B·T < layer width` regime
+/// — see EXPERIMENTS.md §LM for the per-config crossover math.
+pub fn lm_comparison(scale: Scale) -> Vec<LmRow> {
+    let epochs = match scale {
+        Scale::Quick => 2,
+        Scale::Default => 2,
+        Scale::Paper => 3,
+    };
+    let algos = [
+        AlgoSpec::Dsgd,
+        AlgoSpec::Dad,
+        AlgoSpec::RankDad { max_rank: 4, n_iters: 10, theta: 1e-3 },
+        AlgoSpec::PowerSgd { rank: 4 },
+    ];
+    let mut csv = CsvWriter::create(
+        "results/lm_bandwidth.csv",
+        &["algo", "epoch", "train_loss", "test_ppl", "bytes_up", "bytes_down"],
+    )
+    .unwrap();
+    let mut rows = Vec::new();
+    for algo in algos {
+        let (train_ds, test_ds, shards, model) =
+            match build_task("lm", scale, 2, 97).expect("lm task") {
+                TrainTask::Tokens { train_ds, test_ds, shards, model } => {
+                    (train_ds, test_ds, shards, model)
+                }
+                _ => unreachable!("lm builds a token task"),
+            };
+        let spec = TrainSpec {
+            algo: algo.clone(),
+            n_sites: 2,
+            batch_per_site: 8,
+            epochs,
+            lr: default_lm_lr(scale),
+            seed: 97,
+            schedule: Schedule::EveryBatch,
+        };
+        let log = train(model, &spec, &train_ds, &shards, &test_ds);
+        for e in &log.epochs {
+            csv.row(&[
+                algo.name(),
+                e.epoch.to_string(),
+                e.train_loss.to_string(),
+                e.test_ppl.to_string(),
+                e.bytes_up.to_string(),
+                e.bytes_down.to_string(),
+            ])
+            .unwrap();
+        }
+        let last = log.epochs.last().expect("at least one epoch");
+        rows.push(LmRow {
+            algo: algo.name(),
+            final_loss: last.train_loss,
+            final_ppl: last.test_ppl,
+            bytes_up: log.epochs.iter().map(|e| e.bytes_up).sum(),
+            bytes_down: log.epochs.iter().map(|e| e.bytes_down).sum(),
+        });
+    }
+    csv.flush().unwrap();
+    rows
 }
 
 // ---------------------------------------------------------------------------

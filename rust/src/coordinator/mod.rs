@@ -12,6 +12,6 @@ pub use remote::{
     RemoteConfig, RemoteStep,
 };
 pub use trainer::{
-    build_task, epoch_plan, evaluate, fold_mean_auc, local_update, train, DataSource, Schedule,
-    TrainLog, TrainSpec, TrainTask,
+    build_task, default_lm_lr, epoch_plan, evaluate, fold_mean_auc, local_update, train,
+    validate_dataset_algo, DataSource, EvalMetrics, Schedule, TrainLog, TrainSpec, TrainTask,
 };

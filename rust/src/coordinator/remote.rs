@@ -263,6 +263,24 @@ pub fn validate_remote(spec: &TrainSpec) -> io::Result<()> {
     Ok(())
 }
 
+/// The model-aware half of remote validation: edAD is only runnable on
+/// architectures whose `edad_recompute` is defined (the transformer's
+/// attention mixes rows, so it is not). Both training loops call this
+/// before touching the transport, mirroring [`validate_remote`]'s
+/// fail-fast contract — without it the combination would panic (or
+/// protocol-error) deep inside the first step.
+fn validate_model_algo<M: DistModel>(spec: &TrainSpec, model: &M) -> io::Result<()> {
+    if matches!(spec.algo, AlgoSpec::Edad) && !model.supports_edad() {
+        return Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            "edad is not defined for this architecture (its delta recomputation needs the \
+             activation-derivative recurrence, which attention does not admit) — use dad, \
+             rank-dad:R or powersgd:R instead",
+        ));
+    }
+    Ok(())
+}
+
 /// Assemble one site's batch for this step from its shard and the step's
 /// within-shard indices.
 fn shard_batch<D: DataSource>(data: &D, shard: &[usize], local: &[usize]) -> Batch {
@@ -308,6 +326,7 @@ pub fn serve_training<M: DistModel, D: DataSource>(
     test: &D,
 ) -> io::Result<TrainLog> {
     validate_remote(spec)?;
+    validate_model_algo(spec, &model)?;
     let mut proto = spec.algo.build::<M>().protocol();
     let oracle = proto.oracle();
     let shapes = model.param_shapes();
@@ -365,7 +384,7 @@ pub fn serve_training<M: DistModel, D: DataSource>(
                 // local losses (tiny ledger-exempt control frames).
                 let local0 = local0.expect("non-oracle step draws site 0");
                 let batch = shard_batch(data, &shards[0], &local0);
-                local_update(&mut model, &batch, &shapes, &mut ws);
+                local_update(&mut model, &batch, &shapes, spec.lr, &mut ws);
                 let mut ep = Endpoint::new(&mut *t, &mut *ledger);
                 let mut loss = 0.0f32;
                 for site in 0..n_sites {
@@ -375,7 +394,7 @@ pub fn serve_training<M: DistModel, D: DataSource>(
                 loss_sum += (loss / n_sites as f32) as f64;
             }
         }
-        let (test_auc, test_acc) = evaluate(&model, test);
+        let eval = evaluate(&model, test);
         let (up1, down1) = dirs(ledger);
         let mean_eff_rank: Vec<f32> = rank_sums
             .iter()
@@ -384,8 +403,9 @@ pub fn serve_training<M: DistModel, D: DataSource>(
         epochs.push(EpochLog {
             epoch,
             train_loss: (loss_sum / n_steps.max(1) as f64) as f32,
-            test_auc,
-            test_acc,
+            test_auc: eval.auc,
+            test_acc: eval.acc,
+            test_ppl: eval.ppl,
             bytes_up: up1 - up0,
             bytes_down: down1 - down0,
             mean_eff_rank,
@@ -413,6 +433,7 @@ pub fn join_training<M: DistModel, D: DataSource>(
     site_id: usize,
 ) -> io::Result<TrainLog> {
     validate_remote(spec)?;
+    validate_model_algo(spec, &model)?;
     if site_id >= shards.len() {
         return Err(proto_err(format!(
             "site id {site_id} out of range for {} shards",
@@ -456,7 +477,7 @@ pub fn join_training<M: DistModel, D: DataSource>(
                 opt.step(&mut params, &out.grads);
                 model.set_params(&params);
             } else {
-                let loss = local_update(&mut model, &batch, &shapes, &mut ws);
+                let loss = local_update(&mut model, &batch, &shapes, spec.lr, &mut ws);
                 let mut w = ByteWriter::new();
                 w.push_f32(loss);
                 Endpoint::new(&mut *t, &mut *ledger).ctrl_up("local-loss", &w.finish())?;
@@ -469,6 +490,7 @@ pub fn join_training<M: DistModel, D: DataSource>(
             train_loss: (loss_sum / n_steps.max(1) as f64) as f32,
             test_auc: f32::NAN,
             test_acc: f32::NAN,
+            test_ppl: f32::NAN,
             bytes_up: up1 - up0,
             bytes_down: down1 - down0,
             mean_eff_rank: vec![],

@@ -1,11 +1,14 @@
 //! Datasets and partitioning: synthetic MNIST/UEA analogs (DESIGN.md
-//! "Substitutions"), non-IID label sharding, k-fold CV and batching.
+//! "Substitutions"), the LM token-stream dataset, non-IID label sharding,
+//! contiguous stream sharding, k-fold CV and batching.
 
 pub mod partition;
 pub mod synth;
+pub mod tokens;
 
 pub use partition::{kfold, split_by_label, split_iid, BatchIter};
 pub use synth::{
     arabic_digits_like, mnist_like, natops_like, pems_sf_like, pen_digits_like, token_corpus,
     DenseDataset, SeqDataset,
 };
+pub use tokens::TokenDataset;

@@ -1,0 +1,175 @@
+//! Token-stream dataset for the transformer LM workload.
+//!
+//! A [`TokenDataset`] views one contiguous token stream (from
+//! [`crate::data::token_corpus`]) as fixed-length next-token-prediction
+//! windows: example `i` is the `seq_len` tokens starting at `i * seq_len`,
+//! with targets shifted one position right. Windows never overlap, so the
+//! per-site shards produced by [`TokenDataset::stream_shards`] are disjoint
+//! contiguous slices of the stream — the token analog of the paper's
+//! "sites never pool data" setting, and deterministic (no RNG) so every
+//! process in a multi-process run derives identical shards from the seed.
+
+use crate::nn::model::Batch;
+
+/// Next-token-prediction dataset over one contiguous token stream.
+///
+/// `len()` counts windows (examples); [`TokenDataset::labels`] is the
+/// *per-token* target stream (`len() * seq_len` entries, window-major) —
+/// aligned row-for-row with the `(len * seq_len, vocab)` score matrix the
+/// transformer's `predict` produces, which is what lets the generic
+/// evaluation path compute per-token accuracy/AUC/perplexity over it.
+#[derive(Clone)]
+pub struct TokenDataset {
+    /// The backing token stream (`n_windows * seq_len + 1` tokens used).
+    pub tokens: Vec<u32>,
+    /// Vocabulary size (every token id is `< vocab`).
+    pub vocab: usize,
+    /// Tokens per window (the trained sequence length T).
+    pub seq_len: usize,
+    /// Number of full windows the stream supports.
+    n_windows: usize,
+    /// Flattened next-token targets, window-major: entry `w * seq_len + k`
+    /// is window `w`'s target at position `k`.
+    labels: Vec<usize>,
+    /// Dataset name for logs/CSVs.
+    pub name: &'static str,
+}
+
+impl TokenDataset {
+    /// Wrap a token stream as non-overlapping `seq_len`-token windows.
+    /// The last `(tokens.len() - 1) % seq_len` tokens (if any) are unused:
+    /// every window needs `seq_len` inputs plus one lookahead target.
+    pub fn new(tokens: Vec<u32>, vocab: usize, seq_len: usize) -> TokenDataset {
+        assert!(seq_len >= 1, "token windows need at least one position");
+        assert!(
+            tokens.len() > seq_len,
+            "stream of {} tokens cannot fill a {}-token window plus target",
+            tokens.len(),
+            seq_len
+        );
+        let n_windows = (tokens.len() - 1) / seq_len;
+        let mut labels = Vec::with_capacity(n_windows * seq_len);
+        for w in 0..n_windows {
+            for k in 0..seq_len {
+                labels.push(tokens[w * seq_len + k + 1] as usize);
+            }
+        }
+        TokenDataset { tokens, vocab, seq_len, n_windows, labels, name: "token-stream" }
+    }
+
+    /// Number of windows (examples).
+    pub fn len(&self) -> usize {
+        self.n_windows
+    }
+
+    /// True when the stream holds no full window.
+    pub fn is_empty(&self) -> bool {
+        self.n_windows == 0
+    }
+
+    /// Per-token next-token targets, window-major (`len() * seq_len`
+    /// entries) — the label stream evaluation scores rows against.
+    pub fn labels(&self) -> &[usize] {
+        &self.labels
+    }
+
+    /// Assemble a token batch from window indices: ids/targets are
+    /// `(|idx|, seq_len)` row-major, targets shifted one token right.
+    pub fn batch(&self, idx: &[usize]) -> Batch {
+        let t = self.seq_len;
+        let mut ids = Vec::with_capacity(idx.len() * t);
+        let mut targets = Vec::with_capacity(idx.len() * t);
+        for &w in idx {
+            assert!(w < self.n_windows, "window {w} out of range ({})", self.n_windows);
+            let start = w * t;
+            ids.extend_from_slice(&self.tokens[start..start + t]);
+            targets.extend_from_slice(&self.tokens[start + 1..start + t + 1]);
+        }
+        Batch::Tokens { b: idx.len(), t, ids, targets }
+    }
+
+    /// Deterministic contiguous stream-sharding: site `s` owns a contiguous
+    /// run of windows, sizes as equal as possible (earlier sites take the
+    /// remainder). No RNG is consumed, so `dad train`, `dad serve` and
+    /// every `dad join` derive bit-identical shards from the same stream.
+    pub fn stream_shards(&self, n_sites: usize) -> Vec<Vec<usize>> {
+        assert!(n_sites >= 1, "sharding needs at least one site");
+        let per = self.n_windows / n_sites;
+        let rem = self.n_windows % n_sites;
+        let mut shards = Vec::with_capacity(n_sites);
+        let mut start = 0usize;
+        for s in 0..n_sites {
+            let size = per + usize::from(s < rem);
+            shards.push((start..start + size).collect());
+            start += size;
+        }
+        shards
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::token_corpus;
+    use crate::tensor::Rng;
+
+    fn ds(n_tokens: usize, vocab: usize, t: usize, seed: u64) -> TokenDataset {
+        let mut rng = Rng::new(seed);
+        TokenDataset::new(token_corpus(n_tokens, vocab, &mut rng), vocab, t)
+    }
+
+    #[test]
+    fn windows_and_labels_align() {
+        let d = ds(61, 16, 6, 1);
+        assert_eq!(d.len(), 10); // (61 - 1) / 6
+        assert_eq!(d.labels().len(), 60);
+        // Window 3's label at position 2 is the token after input (3,2).
+        assert_eq!(d.labels()[3 * 6 + 2], d.tokens[3 * 6 + 3] as usize);
+    }
+
+    #[test]
+    fn batch_targets_are_shifted_inputs() {
+        let d = ds(100, 8, 5, 2);
+        match d.batch(&[0, 7]) {
+            Batch::Tokens { b, t, ids, targets } => {
+                assert_eq!((b, t), (2, 5));
+                assert_eq!(ids.len(), 10);
+                // Within a window the target at k equals the input at k+1.
+                for row in 0..2 {
+                    for k in 0..4 {
+                        assert_eq!(targets[row * 5 + k], ids[row * 5 + k + 1]);
+                    }
+                }
+                assert_eq!(&ids[5..10], &d.tokens[35..40]);
+            }
+            _ => panic!("expected Tokens"),
+        }
+    }
+
+    #[test]
+    fn stream_shards_are_contiguous_disjoint_and_deterministic() {
+        let d = ds(200, 16, 4, 3);
+        let shards = d.stream_shards(3);
+        assert_eq!(shards.len(), 3);
+        let total: usize = shards.iter().map(|s| s.len()).sum();
+        assert_eq!(total, d.len());
+        // Sizes within one window of each other, earlier sites bigger.
+        for w in shards.windows(2) {
+            assert!(w[0].len() >= w[1].len());
+            assert!(w[0].len() - w[1].len() <= 1);
+        }
+        // Contiguity and global order: concatenation is 0..len.
+        let flat: Vec<usize> = shards.concat();
+        assert_eq!(flat, (0..d.len()).collect::<Vec<_>>());
+        // Determinism: same stream, same shards.
+        assert_eq!(d.stream_shards(3), shards);
+    }
+
+    #[test]
+    fn ragged_tail_is_dropped() {
+        // 23 tokens, T=5: windows at 0..5, 5..10, 10..15, 15..20 (+1 target
+        // lookahead each); tokens 20..23 cannot fill a fifth window.
+        let d = ds(23, 8, 5, 4);
+        assert_eq!(d.len(), 4);
+    }
+}

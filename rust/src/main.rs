@@ -5,7 +5,7 @@
 //! ```text
 //! exp <id> [--scale quick|default|paper]
 //!     regenerate a paper table/figure: table2, fig1, fig2, fig3, fig4,
-//!     fig5, fig6, bandwidth, all
+//!     fig5, fig6, lm, bandwidth, all
 //! train [--algo A] [--dataset D] [--epochs N] [--batch B] [--sites S]
 //!       [--scale SC] [--config path.toml]
 //!     one training run with full telemetry (in-process loopback cluster)
@@ -22,8 +22,8 @@ use dad::algos::AlgoSpec;
 use dad::config::{Args, TomlLite};
 use dad::coordinator::experiments::{self, Scale};
 use dad::coordinator::{
-    build_task, join_training, serve_training, train, validate_remote, RemoteConfig, Schedule,
-    TrainLog, TrainSpec, TrainTask,
+    build_task, join_training, serve_training, train, validate_dataset_algo, validate_remote,
+    RemoteConfig, Schedule, TrainLog, TrainSpec, TrainTask,
 };
 use dad::dist::{Direction, Ledger, TcpAgg, TcpSite};
 
@@ -45,8 +45,8 @@ fn print_help() {
         "dad — distributed auto-differentiation (dAD / edAD / rank-dAD)\n\
          \n\
          USAGE:\n\
-           dad exp <table2|fig1|fig2|fig3|fig4|fig5|fig6|bandwidth|all> [--scale quick|default|paper]\n\
-           dad train [--algo pooled|dsgd|dad|dad-p2p|edad|rank-dad:R|powersgd:R] [--dataset mnist|arabic]\n\
+           dad exp <table2|fig1|fig2|fig3|fig4|fig5|fig6|lm|bandwidth|all> [--scale quick|default|paper]\n\
+           dad train [--algo pooled|dsgd|dad|dad-p2p|edad|rank-dad:R|powersgd:R] [--dataset mnist|arabic|lm]\n\
                      [--epochs N] [--batch B] [--sites S] [--lr F] [--seed N] [--sync-every K]\n\
                      [--scale quick|default|paper] [--config path.toml] [--csv PATH]\n\
            dad serve [--addr HOST:PORT] [--sites S] [--csv PATH] [train options]\n\
@@ -56,7 +56,9 @@ fn print_help() {
          `train` simulates all sites in one process over the loopback transport;\n\
          `serve`/`join` run the same optimization as separate OS processes over\n\
          TCP, with identical losses and ledger byte counts for the same seed.\n\
-         Every --algo (and --sync-every schedule) runs in both modes.\n\
+         Every --algo (and --sync-every schedule) runs in both modes, on every\n\
+         dataset: mnist (MLP), arabic (GRU), lm (decoder-only transformer;\n\
+         edad is rejected up front — attention has no delta recomputation).\n\
          Experiment outputs land in results/*.csv; see EXPERIMENTS.md."
     );
 }
@@ -100,6 +102,7 @@ fn cmd_exp(args: &Args) {
             }
         }
         "fig6" => run_curves("fig6 (GRU ranks)", experiments::fig3_arabic(scale)),
+        "lm" => run_lm(scale),
         "bandwidth" => run_bandwidth(),
         "all" => {
             run_table2(scale);
@@ -112,6 +115,21 @@ fn cmd_exp(args: &Args) {
                 run_rank_curves(&format!("fig5 {name}"), &curves);
             }
             run_bandwidth();
+            if scale == Scale::Quick {
+                run_lm(scale);
+            } else {
+                // Deliberately excluded at default/paper scale: the LM sweep
+                // trains the 12.8M/100M transformer four times (hours of
+                // CPU); surface that instead of silently skipping it.
+                println!(
+                    "[lm sweep skipped at {scale:?} scale — run `dad exp lm --scale {}` \
+                     explicitly; it trains the transformer 4x]",
+                    match scale {
+                        Scale::Default => "default",
+                        _ => "paper",
+                    }
+                );
+            }
         }
         other => {
             eprintln!("unknown experiment {other:?}");
@@ -145,6 +163,18 @@ fn run_rank_curves(tag: &str, curves: &experiments::RankCurves) {
         let first = curves.per_epoch.first().map(|e| e[i]).unwrap_or(f32::NAN);
         let last = curves.per_epoch.last().map(|e| e[i]).unwrap_or(f32::NAN);
         println!("  {:<28} {:>6.2} -> {:>6.2}", name, first, last);
+    }
+}
+
+fn run_lm(scale: Scale) {
+    let rows = experiments::lm_comparison(scale);
+    println!("LM (decoder-only transformer, 2 sites): final loss/ppl and total payload bytes:");
+    println!("{:<14} {:>10} {:>10} {:>14} {:>14}", "algo", "loss", "ppl", "bytes_up", "bytes_down");
+    for r in rows {
+        println!(
+            "{:<14} {:>10.4} {:>10.3} {:>14} {:>14}",
+            r.algo, r.final_loss, r.final_ppl, r.bytes_up, r.bytes_down
+        );
     }
 }
 
@@ -209,11 +239,16 @@ fn maybe_write_csv(args: &Args, log: &TrainLog) {
 fn print_epochs(log: &TrainLog) {
     for e in &log.epochs {
         println!(
-            "epoch {:>3}  loss {:.4}  auc {:.4}  acc {:.4}  up {:>10}B  down {:>10}B{}",
+            "epoch {:>3}  loss {:.4}  auc {:.4}  acc {:.4}{}  up {:>10}B  down {:>10}B{}",
             e.epoch,
             e.train_loss,
             e.test_auc,
             e.test_acc,
+            if e.test_ppl.is_finite() {
+                format!("  ppl {:.3}", e.test_ppl)
+            } else {
+                String::new()
+            },
             e.bytes_up,
             e.bytes_down,
             if e.mean_eff_rank.iter().any(|r| r.is_finite()) {
@@ -227,6 +262,12 @@ fn print_epochs(log: &TrainLog) {
 
 fn cmd_train(args: &Args) {
     let (spec, dataset) = train_spec_from(args);
+    // Fail fast with a clear error on combinations that cannot train
+    // (edad + lm), before any dataset/model construction.
+    validate_dataset_algo(&dataset, &spec.algo).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    });
     let scale = scale_of(args);
     println!("training {} on {dataset} ({:?})", spec.algo.name(), scale);
     let t0 = std::time::Instant::now();
@@ -235,6 +276,9 @@ fn cmd_train(args: &Args) {
             train(model, &spec, &train_ds, &shards, &test_ds)
         }
         Ok(TrainTask::Seq { train_ds, test_ds, shards, model }) => {
+            train(model, &spec, &train_ds, &shards, &test_ds)
+        }
+        Ok(TrainTask::Tokens { train_ds, test_ds, shards, model }) => {
             train(model, &spec, &train_ds, &shards, &test_ds)
         }
         Err(e) => panic!("{e}"),
@@ -252,7 +296,13 @@ fn cmd_train(args: &Args) {
 
 fn cmd_serve(args: &Args) {
     let (spec, dataset) = train_spec_from(args);
-    // Fail fast on the operator's terminal, before any site can connect.
+    // Fail fast on the operator's terminal, before any site can connect:
+    // first the dataset/algorithm pairing (edad + lm), then the remote
+    // schedule restriction (edad + periodic).
+    validate_dataset_algo(&dataset, &spec.algo).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    });
     validate_remote(&spec).unwrap_or_else(|e| panic!("{e}"));
     let scale_s = args.opt_or("scale", "default").to_string();
     let scale = Scale::parse(&scale_s).unwrap_or(Scale::Default);
@@ -276,6 +326,9 @@ fn cmd_serve(args: &Args) {
             serve_training(&mut agg, &mut ledger, &spec, model, &train_ds, &shards, &test_ds)
         }
         Ok(TrainTask::Seq { train_ds, test_ds, shards, model }) => {
+            serve_training(&mut agg, &mut ledger, &spec, model, &train_ds, &shards, &test_ds)
+        }
+        Ok(TrainTask::Tokens { train_ds, test_ds, shards, model }) => {
             serve_training(&mut agg, &mut ledger, &spec, model, &train_ds, &shards, &test_ds)
         }
         Err(e) => panic!("{e}"),
@@ -317,6 +370,9 @@ fn cmd_join(args: &Args) {
             join_training(&mut site, &mut ledger, &cfg.spec, model, &train_ds, &shards, site_id)
         }
         Ok(TrainTask::Seq { train_ds, shards, model, .. }) => {
+            join_training(&mut site, &mut ledger, &cfg.spec, model, &train_ds, &shards, site_id)
+        }
+        Ok(TrainTask::Tokens { train_ds, shards, model, .. }) => {
             join_training(&mut site, &mut ledger, &cfg.spec, model, &train_ds, &shards, site_id)
         }
         Err(e) => panic!("{e}"),

@@ -55,8 +55,35 @@ pub fn multiclass_auc(scores: &Matrix, labels: &[usize]) -> f32 {
     }
 }
 
-/// Top-1 accuracy.
-pub fn accuracy(scores: &Matrix, labels: &[usize]) -> f32 {
+/// Summed negative log-likelihood of the targets: `Σ -ln p[target]`.
+///
+/// The chunk-accumulable core of [`perplexity`]: evaluation loops sum it
+/// over score chunks without ever stacking them. Probabilities are
+/// floored at 1e-12 so a confidently-wrong model yields a large finite
+/// value, not inf.
+pub fn nll_sum(probs: &Matrix, targets: &[usize]) -> f64 {
+    let mut nll = 0.0f64;
+    for (i, &t) in targets.iter().enumerate() {
+        nll -= (probs[(i, t)].max(1e-12) as f64).ln();
+    }
+    nll
+}
+
+/// Perplexity from class probabilities: `exp(mean -ln p[target])`.
+///
+/// `probs` is `(N, C)` softmax probabilities (one row per prediction),
+/// `targets` the true class per row — for the LM workload, one row per
+/// token position and `C = vocab`.
+pub fn perplexity(probs: &Matrix, targets: &[usize]) -> f32 {
+    if targets.is_empty() {
+        return f32::NAN;
+    }
+    (nll_sum(probs, targets) / targets.len() as f64).exp() as f32
+}
+
+/// Number of rows whose argmax matches the label (the chunk-accumulable
+/// core of [`accuracy`]).
+pub fn correct_count(scores: &Matrix, labels: &[usize]) -> usize {
     let mut correct = 0usize;
     for (i, &l) in labels.iter().enumerate() {
         let row = scores.row(i);
@@ -70,7 +97,12 @@ pub fn accuracy(scores: &Matrix, labels: &[usize]) -> f32 {
             correct += 1;
         }
     }
-    correct as f32 / labels.len().max(1) as f32
+    correct
+}
+
+/// Top-1 accuracy.
+pub fn accuracy(scores: &Matrix, labels: &[usize]) -> f32 {
+    correct_count(scores, labels) as f32 / labels.len().max(1) as f32
 }
 
 #[cfg(test)]
@@ -127,6 +159,23 @@ mod tests {
         let want = (num / den) as f32;
         let got = binary_auc(&scores, &pos).unwrap();
         assert!((got - want).abs() < 1e-6, "got {got} want {want}");
+    }
+
+    #[test]
+    fn perplexity_matches_hand_computation() {
+        // Rows: p[target] = 0.5 and 0.25 -> mean nll = (ln2 + ln4)/2,
+        // ppl = exp(1.5 ln 2) = 2^1.5.
+        let probs = Matrix::from_vec(2, 2, vec![0.5, 0.5, 0.75, 0.25]);
+        let ppl = perplexity(&probs, &[0, 1]);
+        assert!((ppl - 2f32.powf(1.5)).abs() < 1e-5, "ppl {ppl}");
+        // A uniform model over C classes has perplexity C.
+        let uniform = Matrix::filled(4, 8, 1.0 / 8.0);
+        let ppl_u = perplexity(&uniform, &[0, 3, 5, 7]);
+        assert!((ppl_u - 8.0).abs() < 1e-4, "uniform ppl {ppl_u}");
+        // Zero probability is floored, not inf.
+        let bad = Matrix::from_vec(1, 2, vec![0.0, 1.0]);
+        assert!(perplexity(&bad, &[0]).is_finite());
+        assert!(perplexity(&bad, &[]).is_nan());
     }
 
     #[test]

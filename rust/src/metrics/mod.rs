@@ -1,8 +1,9 @@
 //! Evaluation metrics and experiment telemetry: multiclass OvR AUC (the
-//! paper's headline metric), accuracy, and CSV emission for the figures.
+//! paper's headline metric), accuracy, LM perplexity, and CSV emission
+//! for the figures.
 
 pub mod auc;
 pub mod csv;
 
-pub use auc::{accuracy, multiclass_auc};
+pub use auc::{accuracy, correct_count, multiclass_auc, nll_sum, perplexity};
 pub use csv::CsvWriter;

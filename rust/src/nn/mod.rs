@@ -19,4 +19,4 @@ pub use mlp::Mlp;
 pub use model::{Batch, DistModel};
 pub use optimizer::{Adam, Sgd};
 pub use stats::{LocalStats, StatsEntry};
-pub use transformer::Transformer;
+pub use transformer::{Transformer, TransformerConfig};

@@ -22,12 +22,16 @@ pub enum Batch {
 }
 
 impl Batch {
-    /// Number of examples (rows of the eventual output delta).
+    /// Number of rows of the eventual output delta — the batch's weight in
+    /// every cross-site reduction (loss weighting, the 1/N gradient scale,
+    /// `StepMeta::rows`). For dense/sequence batches that is the example
+    /// count; a token batch predicts at every position, so its delta has
+    /// `b * t` rows, not `b`.
     pub fn len(&self) -> usize {
         match self {
             Batch::Dense { x, .. } => x.rows(),
             Batch::Seq { y, .. } => y.rows(),
-            Batch::Tokens { b, .. } => *b,
+            Batch::Tokens { b, t, .. } => b * t,
         }
     }
 
@@ -92,6 +96,16 @@ pub trait DistModel {
         site_rows: &[usize],
     ) -> Option<Vec<StatsEntry>>;
 
+    /// Whether the architecture supports edAD's delta recomputation
+    /// (Algorithm 2) — i.e. whether [`DistModel::edad_recompute`] can
+    /// return `Some`. Coordinators use this to reject `edad` for
+    /// unsupported architectures (attention mixes rows, so the transformer
+    /// returns false) *before* any training step runs, instead of
+    /// panicking mid-step.
+    fn supports_edad(&self) -> bool {
+        true
+    }
+
     /// Human-readable per-entry layer names (for Table-2 / effective-rank
     /// reporting). Default: entry indices.
     fn entry_names(&self) -> Vec<String> {
@@ -120,5 +134,26 @@ pub trait Replicate: Sized {
 impl<T: Clone> Replicate for T {
     fn replicate(&self) -> T {
         self.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// `Batch::len` is the output-delta row count for every layout: a token
+    /// batch contributes `b * t` rows (one prediction per position), not
+    /// `b` — the weight the cross-site loss/gradient reductions use.
+    #[test]
+    fn batch_len_counts_delta_rows() {
+        let dense = Batch::Dense { x: Matrix::zeros(7, 3), y: Matrix::zeros(7, 2) };
+        assert_eq!(dense.len(), 7);
+        let seq = Batch::Seq { xs: vec![Matrix::zeros(4, 2); 5], y: Matrix::zeros(4, 2) };
+        assert_eq!(seq.len(), 4);
+        let tok = Batch::Tokens { b: 3, t: 6, ids: vec![0; 18], targets: vec![0; 18] };
+        assert_eq!(tok.len(), 18);
+        assert!(!tok.is_empty());
+        let empty = Batch::Tokens { b: 0, t: 6, ids: vec![], targets: vec![] };
+        assert!(empty.is_empty());
     }
 }

@@ -39,11 +39,25 @@ impl TransformerConfig {
         TransformerConfig { vocab: 11, d_model: 8, n_heads: 2, n_layers: 2, d_ff: 16, max_t: 6 }
     }
 
-    /// ~12.8M parameters: the end-to-end training driver's scale
-    /// (examples/transformer_e2e.rs; see EXPERIMENTS.md for why the session
-    /// substitutes this for a 100M model on a CPU-only testbed).
+    /// ~12.8M parameters: the `--dataset lm` default scale (see
+    /// EXPERIMENTS.md for why the session substitutes this for a 100M
+    /// model on a CPU-only testbed).
     pub fn e2e() -> Self {
         TransformerConfig { vocab: 512, d_model: 320, n_heads: 8, n_layers: 10, d_ff: 1280, max_t: 64 }
+    }
+
+    /// ~100M parameters (GPT-2-small shape): the `--dataset lm --scale
+    /// paper` configuration. Hours per epoch on a CPU-only testbed — use
+    /// it deliberately.
+    pub fn big() -> Self {
+        TransformerConfig {
+            vocab: 32_000,
+            d_model: 768,
+            n_heads: 12,
+            n_layers: 12,
+            d_ff: 3072,
+            max_t: 128,
+        }
     }
 
     /// Total scalar parameter count implied by the config.
@@ -471,6 +485,10 @@ impl DistModel for Transformer {
         _site_rows: &[usize],
     ) -> Option<Vec<StatsEntry>> {
         None // attention mixes rows; the activation-derivative trick does not apply
+    }
+
+    fn supports_edad(&self) -> bool {
+        false // see edad_recompute: coordinators reject edad up front
     }
 
     fn local_stats_entry_count(&self) -> usize {

@@ -2,24 +2,27 @@
 //! indistinguishable — in gradients, losses and ledger byte counts — from
 //! the in-process loopback simulation with the same seed, for **every**
 //! algorithm in the family (`pooled | dsgd | dad | dad-p2p | edad |
-//! rank-dad | powersgd`) and for periodic sync schedules. The aggregator
-//! and site "processes" run as threads here, but every frame crosses a
-//! real localhost socket through the same algorithm-agnostic protocol
-//! drivers `dad serve` / `dad join` use.
+//! rank-dad | powersgd`), for periodic sync schedules, and for every
+//! batch layout — dense (MLP) *and* token (transformer LM) batches both
+//! run through the same generic drivers. The aggregator and site
+//! "processes" run as threads here, but every frame crosses a real
+//! localhost socket through the same algorithm-agnostic protocol drivers
+//! `dad serve` / `dad join` use.
 
 use std::thread;
 
 use dad::algos::common::DistAlgorithm;
 use dad::algos::{concat_batches, AlgoSpec, StepOutcome};
 use dad::coordinator::{
-    join_training, remote_agg_step, remote_site_step, serve_training, train, validate_remote,
-    RemoteStep, Schedule, TrainSpec,
+    build_task, join_training, remote_agg_step, remote_site_step, serve_training, train,
+    validate_dataset_algo, validate_remote, DataSource, RemoteStep, Scale, Schedule, TrainSpec,
+    TrainTask,
 };
-use dad::data::{mnist_like, split_by_label};
-use dad::dist::{Cluster, Direction, Ledger, TcpAgg, TcpSite};
+use dad::data::{mnist_like, split_by_label, TokenDataset};
+use dad::dist::{Cluster, Direction, Ledger, Loopback, TcpAgg, TcpSite};
 use dad::nn::loss::one_hot;
 use dad::nn::model::{Batch, DistModel};
-use dad::nn::{Activation, Mlp};
+use dad::nn::{Activation, Mlp, Transformer, TransformerConfig};
 use dad::tensor::{Matrix, Rng, Workspace};
 
 fn mk_model(seed: u64, dims: &[usize]) -> Mlp {
@@ -39,16 +42,28 @@ fn mk_batches(n_sites: usize, rows: usize, in_dim: usize, classes: usize, seed: 
         .collect()
 }
 
+/// Per-site token batches with (possibly uneven) window counts `bs[s]`.
+fn mk_token_batches(bs: &[usize], t: usize, vocab: usize, seed: u64) -> Vec<Batch> {
+    let mut rng = Rng::new(seed);
+    bs.iter()
+        .map(|&b| {
+            let ids: Vec<u32> = (0..b * t).map(|_| rng.below(vocab) as u32).collect();
+            let targets: Vec<u32> = (0..b * t).map(|_| rng.below(vocab) as u32).collect();
+            Batch::Tokens { b, t, ids, targets }
+        })
+        .collect()
+}
+
 /// `steps` simulated synchronized steps on a loopback cluster; returns the
 /// per-step outcomes and the cluster's final ledger.
-fn sim_steps(
+fn sim_steps<M: DistModel + Clone>(
     spec: &AlgoSpec,
-    mlp: &Mlp,
+    model: &M,
     batches: &[Batch],
     steps: usize,
 ) -> (Vec<StepOutcome>, Ledger) {
-    let mut cluster = Cluster::replicate(mlp.clone(), batches.len());
-    let mut algo = spec.build::<Mlp>();
+    let mut cluster = Cluster::replicate(model.clone(), batches.len());
+    let mut algo = spec.build::<M>();
     let outs: Vec<StepOutcome> = (0..steps).map(|_| algo.step(&mut cluster, batches)).collect();
     let ledger = cluster.ledger.clone();
     (outs, ledger)
@@ -60,9 +75,9 @@ fn sim_steps(
 /// per-site (outs, ledger)).
 type SiteRun = (Vec<RemoteStep>, Ledger);
 
-fn tcp_steps(
+fn tcp_steps<M: DistModel + Clone + Send + 'static>(
     spec: &AlgoSpec,
-    mlp: &Mlp,
+    model: &M,
     batches: &[Batch],
     steps: usize,
 ) -> (Vec<RemoteStep>, Ledger, Vec<SiteRun>) {
@@ -73,13 +88,13 @@ fn tcp_steps(
     let handles: Vec<_> = (0..n_sites)
         .map(|_| {
             let addr = addr.clone();
-            let model = mlp.clone();
+            let model = model.clone();
             let batches = batches.to_vec();
             let spec = spec.clone();
             thread::spawn(move || {
                 let mut t = TcpSite::connect(&addr).expect("connect");
                 let site_id = t.site_id();
-                let mut proto = spec.build::<Mlp>().protocol();
+                let mut proto = spec.build::<M>().protocol();
                 let mut ledger = Ledger::new();
                 let mut ws = Workspace::new();
                 // The oracle trains the union batch in every process; the
@@ -109,11 +124,11 @@ fn tcp_steps(
         .collect();
     let mut agg = listener.accept_sites().expect("accept");
     let mut ledger = Ledger::new();
-    let mut proto = spec.build::<Mlp>().protocol();
-    let union_stats = oracle.then(|| mlp.local_stats(&concat_batches(batches)));
+    let mut proto = spec.build::<M>().protocol();
+    let union_stats = oracle.then(|| model.local_stats(&concat_batches(batches)));
     let agg_outs: Vec<RemoteStep> = (0..steps)
         .map(|_| {
-            remote_agg_step(proto.as_mut(), &mut agg, &mut ledger, mlp, union_stats.as_ref())
+            remote_agg_step(proto.as_mut(), &mut agg, &mut ledger, model, union_stats.as_ref())
                 .expect("agg step")
         })
         .collect();
@@ -153,10 +168,40 @@ fn tcp_step_matches_loopback_for_every_algorithm() {
     check_step_equivalence(&AlgoSpec::DadP2p, &mlp, &batches3, 2);
 }
 
-fn check_step_equivalence(spec: &AlgoSpec, mlp: &Mlp, batches: &[Batch], steps: usize) {
+/// The same step-granularity equivalence on **token batches** through the
+/// transformer LM, with *uneven* per-site window counts (2 vs 3 windows):
+/// every supported algorithm must produce identical grads, losses and
+/// per-(tag, direction) ledger bytes over real sockets as over loopback.
+/// (edAD is excluded by design: the transformer rejects it up front —
+/// covered by `remote_drivers_reject_edad_for_transformer`.)
+#[test]
+fn tcp_step_matches_loopback_for_token_batches() {
+    let specs = [
+        AlgoSpec::Pooled,
+        AlgoSpec::Dsgd,
+        AlgoSpec::Dad,
+        AlgoSpec::DadP2p,
+        AlgoSpec::RankDad { max_rank: 4, n_iters: 6, theta: 1e-3 },
+        AlgoSpec::PowerSgd { rank: 4 },
+    ];
+    let cfg = TransformerConfig::tiny();
+    let mut rng = Rng::new(91);
+    let model = Transformer::new(cfg.clone(), &mut rng);
+    let batches = mk_token_batches(&[2, 3], 5, cfg.vocab, 92);
+    for spec in &specs {
+        check_step_equivalence(spec, &model, &batches, 2);
+    }
+}
+
+fn check_step_equivalence<M: DistModel + Clone + Send + 'static>(
+    spec: &AlgoSpec,
+    model: &M,
+    batches: &[Batch],
+    steps: usize,
+) {
     let name = spec.name();
-    let (sim_outs, sim_ledger) = sim_steps(spec, mlp, batches, steps);
-    let (agg_outs, agg_ledger, sites) = tcp_steps(spec, mlp, batches, steps);
+    let (sim_outs, sim_ledger) = sim_steps(spec, model, batches, steps);
+    let (agg_outs, agg_ledger, sites) = tcp_steps(spec, model, batches, steps);
     assert_eq!(agg_outs.len(), sim_outs.len());
     for (s, (sim, tcp)) in sim_outs.iter().zip(&agg_outs).enumerate() {
         assert!(
@@ -212,9 +257,15 @@ fn build_task_200(
 
 /// A full multi-epoch TCP training run (serve + 2 joins) must reproduce
 /// the simulated `train()` run: same loss trajectory, same per-epoch
-/// ledger bytes, same evaluation — for the given spec.
-fn check_training_equivalence(spec: &TrainSpec) {
-    let (train_ds, test_ds, shards, model) = build_task_200(spec.seed);
+/// ledger bytes, same evaluation — for the given spec and any task the
+/// `build` closure constructs (dense MLP, token transformer, ...).
+fn check_training_equivalence_with<M, D, F>(spec: &TrainSpec, build: F)
+where
+    M: DistModel + Clone + Send + 'static,
+    D: DataSource,
+    F: Fn() -> (D, D, Vec<Vec<usize>>, M) + Send + Clone + 'static,
+{
+    let (train_ds, test_ds, shards, model) = build();
     let sim_log = train(model, spec, &train_ds, &shards, &test_ds);
 
     let listener = TcpAgg::bind("127.0.0.1:0", 2).expect("bind");
@@ -223,10 +274,11 @@ fn check_training_equivalence(spec: &TrainSpec) {
         .map(|_| {
             let addr = addr.clone();
             let spec = spec.clone();
+            let build = build.clone();
             thread::spawn(move || {
                 let mut t = TcpSite::connect(&addr).expect("connect");
                 let site_id = t.site_id();
-                let (train_ds, _test_ds, shards, model) = build_task_200(spec.seed);
+                let (train_ds, _test_ds, shards, model) = build();
                 let mut ledger = Ledger::new();
                 join_training(&mut t, &mut ledger, &spec, model, &train_ds, &shards, site_id)
                     .expect("join")
@@ -235,7 +287,7 @@ fn check_training_equivalence(spec: &TrainSpec) {
         .collect();
     let mut agg = listener.accept_sites().expect("accept");
     let mut ledger = Ledger::new();
-    let (train_ds, test_ds, shards, model) = build_task_200(spec.seed);
+    let (train_ds, test_ds, shards, model) = build();
     let serve_log =
         serve_training(&mut agg, &mut ledger, spec, model, &train_ds, &shards, &test_ds)
             .expect("serve");
@@ -270,6 +322,97 @@ fn check_training_equivalence(spec: &TrainSpec) {
             }
         }
     }
+}
+
+/// [`check_training_equivalence_with`] on the standard 200-example dense
+/// task.
+fn check_training_equivalence(spec: &TrainSpec) {
+    let seed = spec.seed;
+    check_training_equivalence_with(spec, move || build_task_200(seed));
+}
+
+/// Deterministic LM task shared by the sim run, the serve thread and both
+/// join threads — the exact construction `dad serve --dataset lm --scale
+/// quick` and its joins perform.
+fn build_lm_task(seed: u64) -> (TokenDataset, TokenDataset, Vec<Vec<usize>>, Transformer) {
+    match build_task("lm", Scale::Quick, 2, seed).expect("lm task") {
+        TrainTask::Tokens { train_ds, test_ds, shards, model } => {
+            (train_ds, test_ds, shards, model)
+        }
+        _ => panic!("lm must build a token task"),
+    }
+}
+
+/// The ISSUE's token acceptance criterion at training granularity: a full
+/// multi-epoch `dad serve`/`dad join` run on the LM task reproduces the
+/// simulated run — losses, per-epoch ledger bytes, and the token-aware
+/// evaluation (AUC over the vocab, per-token accuracy, perplexity).
+#[test]
+fn tcp_lm_training_run_matches_simulated_run() {
+    let spec = TrainSpec {
+        algo: AlgoSpec::Dad,
+        n_sites: 2,
+        batch_per_site: 8,
+        epochs: 2,
+        lr: 1e-3,
+        seed: 41,
+        schedule: Schedule::EveryBatch,
+    };
+    check_training_equivalence_with(&spec, move || build_lm_task(41));
+}
+
+/// Periodic schedules on token batches: the off-sync local phases must
+/// apply the spec's lr identically in every process (the lr used to be
+/// hardcoded at 1e-4 in the local phase — a desync-in-waiting once any
+/// run used a different `--lr`), so TCP == loopback still holds with
+/// `--lr 1e-3 --sync-every 3`.
+#[test]
+fn tcp_lm_periodic_schedule_matches_simulated_run() {
+    let spec = TrainSpec {
+        algo: AlgoSpec::Dad,
+        n_sites: 2,
+        batch_per_site: 8,
+        epochs: 2,
+        lr: 1e-3,
+        seed: 43,
+        schedule: Schedule::Periodic(3),
+    };
+    check_training_equivalence_with(&spec, move || build_lm_task(43));
+}
+
+/// `edad` + the transformer is rejected *before* any frame moves, in both
+/// CLI spellings: the `dad train`/`dad serve` argument validation
+/// (`validate_dataset_algo`) and the model-aware guard inside the remote
+/// training loops that `dad serve`/`dad join` run.
+#[test]
+fn remote_drivers_reject_edad_for_transformer() {
+    // The shared CLI validation (`dad train --dataset lm --algo edad` and
+    // `dad serve --dataset lm --algo edad` both route through it).
+    let err = validate_dataset_algo("lm", &AlgoSpec::Edad).unwrap_err();
+    assert!(err.contains("edad"), "unclear CLI error: {err}");
+    assert!(validate_dataset_algo("mnist", &AlgoSpec::Edad).is_ok());
+
+    // Defense in depth: the serve/join loops reject the combination from
+    // the model itself, before touching the transport.
+    let spec = TrainSpec {
+        algo: AlgoSpec::Edad,
+        n_sites: 2,
+        batch_per_site: 8,
+        epochs: 1,
+        lr: 1e-3,
+        seed: 5,
+        schedule: Schedule::EveryBatch,
+    };
+    let (train_ds, test_ds, shards, model) = build_lm_task(5);
+    let mut t = Loopback::new(2);
+    let mut ledger = Ledger::new();
+    let err =
+        serve_training(&mut t, &mut ledger, &spec, model.clone(), &train_ds, &shards, &test_ds)
+            .expect_err("serve must reject edad for the transformer");
+    assert!(err.to_string().contains("edad") || err.to_string().contains("architecture"));
+    let err = join_training(&mut t, &mut ledger, &spec, model, &train_ds, &shards, 0)
+        .expect_err("join must reject edad for the transformer");
+    assert!(err.to_string().contains("edad") || err.to_string().contains("architecture"));
 }
 
 /// The ISSUE's acceptance criterion at training granularity, for dAD.
