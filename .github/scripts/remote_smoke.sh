@@ -12,21 +12,116 @@
 #   * rank-dad:* runs must emit per-entry eff_rank_* CSV columns with
 #     finite values (the adaptive-bandwidth telemetry).
 #
-# Usage: remote_smoke.sh <algo> [dataset]   (run from the repository root)
+# Usage (run from the repository root):
+#   remote_smoke.sh <algo> [dataset]
+#       serve + 2 joins as separate OS processes (above)
+#   remote_smoke.sh recipe <name> <converge|degrade:<k>|fail>
+#       run one named chaos recipe (`dad chaos --recipe`) over localhost
+#       sockets; convergence recipes must exit 0 with a metrics CSV,
+#       degrade:<k> recipes must additionally log k surviving sites in
+#       the CSV's sites_live column, and fail recipes must exit non-zero
+#       with an error message on stderr — never hang, never panic.
+#   remote_smoke.sh strict <name>
+#       the same recipe under --strict must exit non-zero with a clean
+#       error naming the lost site instead of degrading.
 set -euo pipefail
 
-ALGO="${1:?usage: remote_smoke.sh <algo> [dataset]}"
+ALGO="${1:?usage: remote_smoke.sh <algo|recipe|strict> [args]}"
 DATASET="${2:-mnist}"
 BIN="${BIN:-rust/target/release/dad}"
 PORT="${PORT:-7411}"
-CSV="results/remote_smoke_${ALGO//[:]/_}_${DATASET}.csv"
-
-rm -f "$CSV"
 
 # `timeout` bounds every process: a protocol hang (the exact regression
 # class this job exists to catch) becomes a fast red job, not a 6-hour
 # runner stall.
 LIMIT="${LIMIT:-300}"
+
+# --- chaos recipe modes ----------------------------------------------------
+
+if [ "$ALGO" = "recipe" ]; then
+    NAME="${2:?usage: remote_smoke.sh recipe <name> <converge|degrade:<k>|fail>}"
+    EXPECT="${3:-converge}"
+    CSV="results/chaos_${NAME}.csv"
+    rm -f "$CSV"
+    err_log=$(mktemp)
+    status=0
+    timeout "$LIMIT" "$BIN" chaos --recipe "$NAME" --csv "$CSV" 2>"$err_log" || status=$?
+    if [ "$EXPECT" = "fail" ]; then
+        # Clean failure: exit code 1 (not a timeout's 124, not the
+        # expectation-mismatch 3, never a panic's 101) plus a cause on
+        # stderr, and no metrics.
+        if [ "$status" -ne 1 ]; then
+            echo "FAIL(recipe $NAME): expected clean-failure exit 1, got $status"
+            cat "$err_log"
+            exit 1
+        fi
+        grep -q "chaos run failed" "$err_log" || {
+            echo "FAIL(recipe $NAME): no clean error message on stderr:"
+            cat "$err_log"
+            exit 1
+        }
+        if [ -s "$CSV" ]; then
+            echo "FAIL(recipe $NAME): failing recipe must not write metrics"
+            exit 1
+        fi
+        echo "ok(recipe $NAME): failed cleanly — $(grep 'chaos run failed' "$err_log" | head -1)"
+        exit 0
+    fi
+    if [ "$status" -ne 0 ]; then
+        echo "FAIL(recipe $NAME): expected exit 0, got $status"
+        cat "$err_log"
+        exit 1
+    fi
+    test -s "$CSV" || { echo "FAIL(recipe $NAME): metrics CSV missing or empty: $CSV"; exit 1; }
+    case "$EXPECT" in
+    degrade:*)
+        want="${EXPECT#degrade:}"
+        # sites_live is CSV field 9; the last epoch must report exactly
+        # the expected survivor count.
+        got=$(awk -F, 'END { print $9 }' "$CSV")
+        if [ "$got" != "$want" ]; then
+            echo "FAIL(recipe $NAME): expected $want surviving sites in the CSV, got '$got':"
+            cat "$CSV"
+            exit 1
+        fi
+        echo "ok(recipe $NAME): degraded to $got site(s), metrics in $CSV"
+        ;;
+    *)
+        echo "ok(recipe $NAME): converged, metrics in $CSV"
+        ;;
+    esac
+    exit 0
+fi
+
+if [ "$ALGO" = "strict" ]; then
+    NAME="${2:?usage: remote_smoke.sh strict <name>}"
+    err_log=$(mktemp)
+    status=0
+    timeout "$LIMIT" "$BIN" chaos --recipe "$NAME" --strict 2>"$err_log" || status=$?
+    if [ "$status" -ne 1 ]; then
+        echo "FAIL(strict $NAME): expected clean-failure exit 1, got $status"
+        cat "$err_log"
+        exit 1
+    fi
+    grep -q "lost site" "$err_log" || {
+        echo "FAIL(strict $NAME): error does not name the lost site:"
+        cat "$err_log"
+        exit 1
+    }
+    grep -q "strict mode" "$err_log" || {
+        echo "FAIL(strict $NAME): error does not say strict mode failed the run:"
+        cat "$err_log"
+        exit 1
+    }
+    echo "ok(strict $NAME): $(grep 'chaos run failed' "$err_log" | head -1)"
+    exit 0
+fi
+
+# --- multi-process serve/join mode -----------------------------------------
+
+CSV="results/remote_smoke_${ALGO//[:]/_}_${DATASET}.csv"
+
+rm -f "$CSV"
 
 # The one combination that must fail fast instead of training.
 if [ "$ALGO" = "edad" ] && [ "$DATASET" = "lm" ]; then
@@ -85,9 +180,10 @@ if [ "$rows" -lt 3 ]; then
     exit 1
 fi
 
-# rank-dAD telemetry: the per-entry eff_rank_* columns (after the 8 fixed
-# columns) must exist and carry finite values — this is the adaptive-rank
-# telemetry the transformer bandwidth analysis reads.
+# rank-dAD telemetry: the per-entry eff_rank_* columns (after the 9 fixed
+# columns, the last of which is sites_live) must exist and carry finite
+# values — this is the adaptive-rank telemetry the transformer bandwidth
+# analysis reads.
 case "$ALGO" in
 rank-dad*|rankdad*)
     awk -F, '
@@ -95,8 +191,8 @@ rank-dad*|rankdad*)
             if ($0 !~ /eff_rank_/) { print "missing eff_rank_ columns"; exit 1 }
         }
         NR == 2 {
-            if (NF < 9) { print "no rank columns in data row"; exit 1 }
-            for (i = 9; i <= NF; i++)
+            if (NF < 10) { print "no rank columns in data row"; exit 1 }
+            for (i = 10; i <= NF; i++)
                 if ($i == "NaN") { print "rank column " i " is NaN"; exit 1 }
             exit 0
         }

@@ -299,6 +299,12 @@ impl<M: DistModel> StepProtocol<M> for RankDadProtocol {
         "rank-dad"
     }
 
+    fn supports_degrade(&self) -> bool {
+        // The factored concat (Q̂, Ĝ) and the 1/N scale follow the sync
+        // frame; the site half never reads the startup site count.
+        true
+    }
+
     fn site_exchange(
         &mut self,
         ep: &mut Endpoint<'_>,

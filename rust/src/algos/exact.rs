@@ -242,6 +242,12 @@ impl<M: DistModel> StepProtocol<M> for PooledProtocol {
         true
     }
 
+    fn supports_degrade(&self) -> bool {
+        // Every process rebuilds the union batch from the seed, so a lost
+        // site changes nothing about the survivors' math.
+        true
+    }
+
     fn site_exchange(
         &mut self,
         _ep: &mut Endpoint<'_>,
@@ -277,6 +283,12 @@ pub struct DsgdProtocol;
 impl<M: DistModel> StepProtocol<M> for DsgdProtocol {
     fn name(&self) -> &'static str {
         "dsgd"
+    }
+
+    fn supports_degrade(&self) -> bool {
+        // The 1/N scale comes from the sync frame's surviving row total,
+        // so the degraded mean is the mean over the survivors.
+        true
     }
 
     fn site_exchange(
@@ -338,6 +350,12 @@ pub struct DadProtocol;
 impl<M: DistModel> StepProtocol<M> for DadProtocol {
     fn name(&self) -> &'static str {
         "dad"
+    }
+
+    fn supports_degrade(&self) -> bool {
+        // (Â, Δ̂) concatenation and the 1/N scale are both shaped by the
+        // sync frame, so the exchange shrinks with the survivor set.
+        true
     }
 
     fn site_exchange(

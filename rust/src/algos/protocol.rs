@@ -162,6 +162,19 @@ impl<'a> Endpoint<'a> {
     pub fn ctrl_from(&mut self, site: usize, tag: &str) -> io::Result<Vec<u8>> {
         expect_ctrl(self.t.recv_from_site(site)?, tag)
     }
+
+    /// Operator-facing label for live link index `site` (the originally
+    /// assigned id, even after retirements compacted the links).
+    pub fn site_label(&self, site: usize) -> String {
+        self.t.site_label(site)
+    }
+
+    /// Permanently drop live link `site` from the fabric — the degradation
+    /// seam `coordinator::remote` uses to continue a round with the
+    /// surviving sites (see [`Transport::retire_site`]).
+    pub fn retire_site(&mut self, site: usize) -> io::Result<()> {
+        self.t.retire_site(site)
+    }
 }
 
 pub(crate) fn expect_mats(f: Frame, want: &str) -> io::Result<Vec<Matrix>> {
@@ -358,6 +371,18 @@ pub trait StepProtocol<M: DistModel>: Send {
     /// oracle protocols the union batch instead of a shard batch and run
     /// the site half on the aggregator too.
     fn oracle(&self) -> bool {
+        false
+    }
+
+    /// True when the aggregator half can keep driving this protocol after
+    /// sites were retired mid-run (the degraded mode of
+    /// `coordinator::remote::serve_training`). Requires the site half to be
+    /// shaped only by the sync frame — never by a site count captured at
+    /// startup. dAD, dSGD, rank-dAD and the pooled oracle qualify; edAD
+    /// (weight-coupled delta recomputation), dad-p2p (mesh membership) and
+    /// PowerSGD (site half scales means by the startup `n_sites`) do not,
+    /// so a lost site fails those runs cleanly instead.
+    fn supports_degrade(&self) -> bool {
         false
     }
 

@@ -9,7 +9,7 @@ pub mod trainer;
 pub use experiments::Scale;
 pub use remote::{
     join_training, remote_agg_step, remote_site_step, serve_training, validate_remote,
-    RemoteConfig, RemoteStep,
+    FaultPolicy, RemoteConfig, RemoteStep,
 };
 pub use trainer::{
     build_task, default_lm_lr, epoch_plan, evaluate, fold_mean_auc, local_update, train,

@@ -32,6 +32,31 @@
 //!
 //! Control frames (`config`, `step-meta`, `step-sync`, `eff-rank`,
 //! `local-loss`) carry protocol metadata and never enter the ledger.
+//!
+//! # Fault policy and degradation
+//!
+//! Real deployments lose sites mid-run. The aggregator driver detects a
+//! lost site **only at step prologues** (the `step-meta` gather and the
+//! off-sync `local-loss` gather), where a link failure
+//! ([`crate::dist::is_link_failure`]: timeout, reset, EOF, ...) is
+//! attributable to one site and the survivors' state is still consistent.
+//! What happens next is the [`FaultPolicy`]'s choice:
+//!
+//! * **strict** — fail the whole run with a clean `io::Error` naming the
+//!   lost site (never a hang, never a panic);
+//! * **degrade** (default) — retire the lost links
+//!   ([`Transport::retire_site`]) and continue the round with the
+//!   survivors, provided the protocol's exchange is shaped purely by the
+//!   sync frame ([`StepProtocol::supports_degrade`]) and at least one
+//!   site survives. The per-epoch survivor count lands in
+//!   [`EpochLog::sites_live`].
+//!
+//! A failure *inside* an exchange (after the sync broadcast) is never
+//! absorbed: the surviving replicas could have applied partial state, so
+//! the driver propagates a clean error instead. Stragglers are detected by
+//! arming a per-frame receive deadline on the aggregator links
+//! (`TcpAgg::set_recv_timeout`) — an armed deadline turns a slow site into
+//! the same link-failure path as a dead one.
 
 use std::io;
 
@@ -40,9 +65,9 @@ use crate::algos::{concat_batches, AlgoSpec};
 use crate::coordinator::trainer::{
     epoch_plan, evaluate, local_update, DataSource, EpochLog, Schedule, TrainLog, TrainSpec,
 };
-use crate::data::BatchIter;
+use crate::data::{BatchIter, Partition};
 use crate::dist::wire::{proto_err, ByteReader, ByteWriter};
-use crate::dist::{Direction, Ledger, Transport};
+use crate::dist::{is_link_failure, Direction, Ledger, Transport};
 use crate::nn::model::{Batch, DistModel};
 use crate::nn::stats::LocalStats;
 use crate::nn::Adam;
@@ -66,6 +91,30 @@ pub struct RemoteStep {
     pub bytes_up: u64,
     /// Aggregator->site payload bytes recorded locally this step.
     pub bytes_down: u64,
+    /// Labels of sites retired at this step's prologue (aggregator side,
+    /// degrade mode only; empty otherwise).
+    pub lost: Vec<String>,
+}
+
+/// What the aggregator does when a site stops answering at a step
+/// prologue (see the module docs' degradation state machine).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultPolicy {
+    /// Fail the run on the first lost site — naming it in the error —
+    /// instead of degrading to the survivors.
+    pub strict: bool,
+}
+
+impl FaultPolicy {
+    /// The degrade-by-default policy.
+    pub fn degrade() -> FaultPolicy {
+        FaultPolicy { strict: false }
+    }
+
+    /// Fail-fast policy: any lost site aborts the run cleanly.
+    pub fn strict() -> FaultPolicy {
+        FaultPolicy { strict: true }
+    }
 }
 
 /// Everything a joining site needs to reconstruct the run: training spec
@@ -80,6 +129,14 @@ pub struct RemoteConfig {
     pub dataset: String,
     /// Scale preset string ("quick" | "default" | "paper").
     pub scale: String,
+    /// Per-frame broadcast-read deadline every site arms
+    /// (`TcpSite::set_recv_timeout`), in milliseconds; 0 blocks forever.
+    /// A dead aggregator then surfaces as a clean timeout on the sites
+    /// instead of a wedged process.
+    pub recv_timeout_ms: u32,
+    /// Partition override every process applies to its shards (from the
+    /// shared seed, so the lockstep batch schedule is preserved).
+    pub partition: Partition,
 }
 
 impl RemoteConfig {
@@ -94,6 +151,8 @@ impl RemoteConfig {
         w.push_f32(self.spec.lr);
         w.push_u64(self.spec.seed);
         w.push_u32(self.spec.schedule.sync_every() as u32);
+        w.push_u32(self.recv_timeout_ms);
+        w.push_str(&self.partition.name());
         w.finish()
     }
 
@@ -108,6 +167,8 @@ impl RemoteConfig {
         let lr = r.read_f32()?;
         let seed = r.read_u64()?;
         let sync_every = r.read_u32()? as usize;
+        let recv_timeout_ms = r.read_u32()?;
+        let partition_s = r.read_str()?;
         if r.remaining() != 0 {
             return Err(proto_err(format!(
                 "config frame has {} trailing bytes (version skew between serve and join?)",
@@ -116,6 +177,8 @@ impl RemoteConfig {
         }
         let algo = AlgoSpec::parse(&algo_s)
             .map_err(|e| proto_err(format!("bad algo in config frame: {e}")))?;
+        let partition = Partition::parse(&partition_s)
+            .map_err(|e| proto_err(format!("bad partition in config frame: {e}")))?;
         Ok(RemoteConfig {
             spec: TrainSpec {
                 algo,
@@ -128,6 +191,8 @@ impl RemoteConfig {
             },
             dataset,
             scale,
+            recv_timeout_ms,
+            partition,
         })
     }
 
@@ -187,7 +252,56 @@ pub fn remote_site_step<M: DistModel>(
         eff_ranks: vec![],
         bytes_up: up1 - up0,
         bytes_down: down1 - down0,
+        lost: vec![],
     })
+}
+
+/// Decide what to do about the sites lost during a prologue gather:
+/// nothing (none lost), fail cleanly (strict policy, no survivors, or a
+/// protocol whose exchange cannot shrink), or retire the lost links in
+/// descending index order and return their labels. Centralizing the
+/// decision keeps the `step-meta` and `local-loss` prologues on the same
+/// state machine.
+fn handle_lost(
+    ep: &mut Endpoint<'_>,
+    proto_name: &str,
+    supports_degrade: bool,
+    policy: FaultPolicy,
+    survivors: usize,
+    lost: Vec<(usize, String, io::Error)>,
+) -> io::Result<Vec<String>> {
+    if lost.is_empty() {
+        return Ok(vec![]);
+    }
+    let (_, label0, e0) = &lost[0];
+    if policy.strict {
+        return Err(io::Error::new(
+            e0.kind(),
+            format!("lost site {label0} ({e0}); strict mode fails the run instead of degrading"),
+        ));
+    }
+    if survivors == 0 {
+        return Err(io::Error::new(
+            io::ErrorKind::ConnectionAborted,
+            format!(
+                "every remaining site was lost in the same step (first: site {label0}, {e0})"
+            ),
+        ));
+    }
+    if !supports_degrade {
+        return Err(io::Error::new(
+            e0.kind(),
+            format!(
+                "lost site {label0} ({e0}), and {proto_name} cannot continue with survivors \
+                 (its exchange is shaped by the full site count) — rerun under dad, dsgd, \
+                 rank-dad or pooled, or fix the link"
+            ),
+        ));
+    }
+    for (site, _, _) in lost.iter().rev() {
+        ep.retire_site(*site)?;
+    }
+    Ok(lost.into_iter().map(|(_, label, _)| label).collect())
 }
 
 /// Aggregator half of one synchronized remote step, for *any* algorithm:
@@ -196,23 +310,60 @@ pub fn remote_site_step<M: DistModel>(
 /// gather/broadcast (or relay) rounds. For the pooled oracle the
 /// aggregator runs the *site* half on `oracle_stats` — the union-batch
 /// statistics the serve driver computes — since the oracle ships nothing.
+///
+/// Link failures during the `step-meta` gather are the degradation point:
+/// `policy` decides between failing cleanly and retiring the lost sites
+/// (see the module docs). Failures after the sync broadcast always
+/// propagate — partial exchanges are not recoverable.
 pub fn remote_agg_step<M: DistModel>(
     proto: &mut dyn StepProtocol<M>,
     t: &mut dyn Transport,
     ledger: &mut Ledger,
     model: &M,
     oracle_stats: Option<&LocalStats>,
+    policy: FaultPolicy,
 ) -> io::Result<RemoteStep> {
-    let n_sites = t.n_sites();
     let (up0, down0) = dirs(ledger);
-    let (out, loss) = {
+    let (out, loss, lost) = {
         let mut ep = Endpoint::new(&mut *t, &mut *ledger);
+        let n_sites = ep.n_sites();
         let mut metas: Vec<StepMeta> = Vec::with_capacity(n_sites);
+        let mut gone: Vec<(usize, String, io::Error)> = Vec::new();
         for site in 0..n_sites {
-            metas.push(StepMeta::decode(&ep.ctrl_from(site, "step-meta")?)?);
+            match ep.ctrl_from(site, "step-meta") {
+                Ok(body) => metas.push(StepMeta::decode(&body)?),
+                Err(e) if is_link_failure(&e) => {
+                    let label = ep.site_label(site);
+                    gone.push((site, label, e));
+                }
+                Err(e) => return Err(e),
+            }
         }
+        let lost = handle_lost(
+            &mut ep,
+            proto.name(),
+            proto.supports_degrade(),
+            policy,
+            metas.len(),
+            gone,
+        )?;
         let sync = StepSync::from_metas(&metas, proto.oracle())?;
-        ep.ctrl_bcast("step-sync", &sync.encode())?;
+        // Past this point the step is committed: every live site has been
+        // promised a sync frame, so a link failure leaves survivors blocked
+        // inside the exchange — it must fail the run, never degrade. Tag
+        // such errors so operators (and the chaos recipes) can tell a
+        // recoverable prologue loss from an unrecoverable mid-step one.
+        let mid_exchange = |e: io::Error| {
+            if is_link_failure(&e) {
+                io::Error::new(
+                    e.kind(),
+                    format!("link failed mid-exchange (cannot degrade mid-step): {e}"),
+                )
+            } else {
+                e
+            }
+        };
+        ep.ctrl_bcast("step-sync", &sync.encode()).map_err(mid_exchange)?;
         let out = if proto.oracle() {
             let stats = oracle_stats.ok_or_else(|| {
                 proto_err(
@@ -221,12 +372,13 @@ pub fn remote_agg_step<M: DistModel>(
                         .into(),
                 )
             })?;
-            let grads = proto.site_exchange(&mut ep, model, stats, 0, &sync)?;
+            let grads =
+                proto.site_exchange(&mut ep, model, stats, 0, &sync).map_err(mid_exchange)?;
             AggExchange { grads, eff_ranks: vec![] }
         } else {
-            proto.agg_exchange(&mut ep, model, &metas, &sync)?
+            proto.agg_exchange(&mut ep, model, &metas, &sync).map_err(mid_exchange)?
         };
-        (out, sync.loss)
+        (out, sync.loss, lost)
     };
     let (up1, down1) = dirs(ledger);
     Ok(RemoteStep {
@@ -235,6 +387,7 @@ pub fn remote_agg_step<M: DistModel>(
         eff_ranks: out.eff_ranks,
         bytes_up: up1 - up0,
         bytes_down: down1 - down0,
+        lost,
     })
 }
 
@@ -288,19 +441,34 @@ fn shard_batch<D: DataSource>(data: &D, shard: &[usize], local: &[usize]) -> Bat
     data.make_batch(&idx)
 }
 
+/// A site's batch iterator ran dry before the lockstep step count — the
+/// processes disagree on the epoch plan (seed, shard or partition
+/// mismatch). A clean error instead of a panic: the fail-fast contract of
+/// the remote drivers covers bad data layouts too.
+fn short_shard(site: usize) -> io::Error {
+    io::Error::new(
+        io::ErrorKind::InvalidData,
+        format!(
+            "site {site}'s batch iterator exhausted before the lockstep step count \
+             (seed, shard or partition mismatch between processes)"
+        ),
+    )
+}
+
 /// Assemble the pooled oracle's union batch, drawing every site's batch
 /// iterator once in canonical site order (the simulated trainer's exact
 /// iterator consumption).
-fn union_batch<D: DataSource>(data: &D, shards: &[Vec<usize>], plan: &mut [BatchIter]) -> Batch {
-    let batches: Vec<Batch> = plan
-        .iter_mut()
-        .zip(shards)
-        .map(|(it, shard)| {
-            let local = it.next().expect("batch iterator exhausted");
-            shard_batch(data, shard, &local)
-        })
-        .collect();
-    concat_batches(&batches)
+fn union_batch<D: DataSource>(
+    data: &D,
+    shards: &[Vec<usize>],
+    plan: &mut [BatchIter],
+) -> io::Result<Batch> {
+    let mut batches: Vec<Batch> = Vec::with_capacity(plan.len());
+    for (site, (it, shard)) in plan.iter_mut().zip(shards).enumerate() {
+        let local = it.next().ok_or_else(|| short_shard(site))?;
+        batches.push(shard_batch(data, shard, &local));
+    }
+    Ok(concat_batches(&batches))
 }
 
 /// Aggregator training loop (`dad serve`): drive one remote step per batch
@@ -316,6 +484,15 @@ fn union_batch<D: DataSource>(data: &D, shards: &[Vec<usize>], plan: &mut [Batch
 /// computing the union batch for the pooled oracle. For every other
 /// algorithm no data-derived values are read — statistics arrive over the
 /// wire.
+///
+/// `policy` governs lost sites (module docs): degrade mode retires them
+/// and keeps going — the survivor count lands in `EpochLog::sites_live`
+/// and each loss is announced on stderr — while strict mode returns a
+/// clean error naming the first lost site. In degrade mode with a
+/// periodic schedule the off-sync mirror keeps replaying original site
+/// 0's batches even if site 0 was lost; the evaluation replica re-enters
+/// exact lockstep at the next sync step, which resets it to the canonical
+/// Adam trajectory.
 pub fn serve_training<M: DistModel, D: DataSource>(
     t: &mut dyn Transport,
     ledger: &mut Ledger,
@@ -324,6 +501,7 @@ pub fn serve_training<M: DistModel, D: DataSource>(
     data: &D,
     shards: &[Vec<usize>],
     test: &D,
+    policy: FaultPolicy,
 ) -> io::Result<TrainLog> {
     validate_remote(spec)?;
     validate_model_algo(spec, &model)?;
@@ -336,7 +514,6 @@ pub fn serve_training<M: DistModel, D: DataSource>(
     let mut ws = Workspace::new();
     let entry_names = model.entry_names();
     let n_entries = model.local_stats_entry_count();
-    let n_sites = t.n_sites();
     let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
     let mut epochs = Vec::with_capacity(spec.epochs);
     for epoch in 0..spec.epochs {
@@ -353,10 +530,10 @@ pub fn serve_training<M: DistModel, D: DataSource>(
             // others cannot desync anything, and site 0's draw must happen
             // every step so periodic local phases see the step-t batch.
             let (union_stats, local0) = if oracle {
-                let stats = model.local_stats_ws(&union_batch(data, shards, &mut plan), &mut ws);
+                let stats = model.local_stats_ws(&union_batch(data, shards, &mut plan)?, &mut ws);
                 (Some(stats), None)
             } else {
-                (None, Some(plan[0].next().expect("batch iterator exhausted")))
+                (None, Some(plan[0].next().ok_or_else(|| short_shard(0))?))
             };
             if oracle || spec.schedule.is_sync_step(step) {
                 let out = remote_agg_step(
@@ -365,7 +542,14 @@ pub fn serve_training<M: DistModel, D: DataSource>(
                     &mut *ledger,
                     &model,
                     union_stats.as_ref(),
+                    policy,
                 )?;
+                for label in &out.lost {
+                    eprintln!(
+                        "[degrade] lost site {label}; continuing with {} site(s)",
+                        t.n_sites()
+                    );
+                }
                 loss_sum += out.loss as f64;
                 if !out.eff_ranks.is_empty() {
                     for (ei, per_site) in out.eff_ranks.iter().enumerate() {
@@ -381,17 +565,50 @@ pub fn serve_training<M: DistModel, D: DataSource>(
                 // Off-sync phase: no payload traffic. Mirror site 0's local
                 // update so the evaluation replica matches the simulated
                 // trainer's site-0 model, and average the sites' reported
-                // local losses (tiny ledger-exempt control frames).
-                let local0 = local0.expect("non-oracle step draws site 0");
+                // local losses (tiny ledger-exempt control frames). The
+                // loss gather is a prologue too: a link failure here goes
+                // through the same degrade-or-fail decision as `step-meta`.
+                let local0 = local0.ok_or_else(|| {
+                    proto_err("internal invariant broken: non-oracle step must draw site 0".into())
+                })?;
                 let batch = shard_batch(data, &shards[0], &local0);
                 local_update(&mut model, &batch, &shapes, spec.lr, &mut ws);
-                let mut ep = Endpoint::new(&mut *t, &mut *ledger);
-                let mut loss = 0.0f32;
-                for site in 0..n_sites {
-                    let body = ep.ctrl_from(site, "local-loss")?;
-                    loss += ByteReader::new(&body).read_f32()?;
+                let (mean_loss, retired) = {
+                    let mut ep = Endpoint::new(&mut *t, &mut *ledger);
+                    let n_live = ep.n_sites();
+                    let mut loss = 0.0f32;
+                    let mut gathered = 0usize;
+                    let mut gone: Vec<(usize, String, io::Error)> = Vec::new();
+                    for site in 0..n_live {
+                        match ep.ctrl_from(site, "local-loss") {
+                            Ok(body) => {
+                                loss += ByteReader::new(&body).read_f32()?;
+                                gathered += 1;
+                            }
+                            Err(e) if is_link_failure(&e) => {
+                                let label = ep.site_label(site);
+                                gone.push((site, label, e));
+                            }
+                            Err(e) => return Err(e),
+                        }
+                    }
+                    let retired = handle_lost(
+                        &mut ep,
+                        proto.name(),
+                        proto.supports_degrade(),
+                        policy,
+                        gathered,
+                        gone,
+                    )?;
+                    (loss / gathered.max(1) as f32, retired)
+                };
+                for label in &retired {
+                    eprintln!(
+                        "[degrade] lost site {label} in a local phase; continuing with {} site(s)",
+                        t.n_sites()
+                    );
                 }
-                loss_sum += (loss / n_sites as f32) as f64;
+                loss_sum += mean_loss as f64;
             }
         }
         let eval = evaluate(&model, test);
@@ -408,6 +625,7 @@ pub fn serve_training<M: DistModel, D: DataSource>(
             test_ppl: eval.ppl,
             bytes_up: up1 - up0,
             bytes_down: down1 - down0,
+            sites_live: t.n_sites(),
             mean_eff_rank,
         });
     }
@@ -458,9 +676,9 @@ pub fn join_training<M: DistModel, D: DataSource>(
         for step in 0..n_steps {
             let batch = if oracle {
                 // The pooled oracle trains the union batch in every process.
-                union_batch(data, shards, &mut plan)
+                union_batch(data, shards, &mut plan)?
             } else {
-                let local = plan[site_id].next().expect("batch iterator exhausted");
+                let local = plan[site_id].next().ok_or_else(|| short_shard(site_id))?;
                 shard_batch(data, &shards[site_id], &local)
             };
             if oracle || spec.schedule.is_sync_step(step) {
@@ -493,6 +711,9 @@ pub fn join_training<M: DistModel, D: DataSource>(
             test_ppl: f32::NAN,
             bytes_up: up1 - up0,
             bytes_down: down1 - down0,
+            // Sites do not observe peer retirements; the serving process
+            // owns degraded-run reporting.
+            sites_live: spec.n_sites,
             mean_eff_rank: vec![],
         });
     }

@@ -10,7 +10,7 @@ use crate::algos::AlgoSpec;
 use crate::coordinator::experiments::Scale;
 use crate::data::{
     arabic_digits_like, mnist_like, split_by_label, token_corpus, BatchIter, DenseDataset,
-    SeqDataset, TokenDataset,
+    Partition, SeqDataset, TokenDataset,
 };
 use crate::dist::Cluster;
 use crate::metrics::multiclass_auc;
@@ -113,6 +113,11 @@ pub struct EpochLog {
     pub bytes_up: u64,
     /// Aggregator->site payload bytes this epoch.
     pub bytes_down: u64,
+    /// Sites still participating when the epoch ended. Equals the spec's
+    /// site count unless a degraded remote run retired stragglers or
+    /// disconnected sites mid-run (`coordinator::remote`'s fault policy) —
+    /// the per-epoch survivor count the chaos recipes assert on.
+    pub sites_live: usize,
     /// Mean effective rank per stats entry (rank-dAD only; NaN otherwise).
     pub mean_eff_rank: Vec<f32>,
 }
@@ -159,6 +164,7 @@ impl TrainLog {
             "test_ppl",
             "bytes_up",
             "bytes_down",
+            "sites_live",
         ]
         .iter()
         .map(|s| s.to_string())
@@ -178,6 +184,7 @@ impl TrainLog {
                 format!("{}", e.test_ppl),
                 e.bytes_up.to_string(),
                 e.bytes_down.to_string(),
+                e.sites_live.to_string(),
             ];
             // Pad with NaN where telemetry is absent (join sites log an
             // empty rank vector), so the row width always matches.
@@ -309,6 +316,36 @@ pub enum TrainTask {
         /// Seeded model (identical for every process given the same args).
         model: Transformer,
     },
+}
+
+impl TrainTask {
+    /// Re-deal the task's shards under a [`Partition`] override (identity
+    /// for `Partition::Default`). Deterministic in `seed`, so every
+    /// process of a remote run applies the same override and the lockstep
+    /// batch schedule is preserved — this is the "partition skew" axis of
+    /// the chaos recipes.
+    pub fn repartition(self, partition: Partition, seed: u64) -> TrainTask {
+        match self {
+            TrainTask::Dense { train_ds, test_ds, shards, model } => TrainTask::Dense {
+                train_ds,
+                test_ds,
+                shards: partition.apply(shards, seed),
+                model,
+            },
+            TrainTask::Seq { train_ds, test_ds, shards, model } => TrainTask::Seq {
+                train_ds,
+                test_ds,
+                shards: partition.apply(shards, seed),
+                model,
+            },
+            TrainTask::Tokens { train_ds, test_ds, shards, model } => TrainTask::Tokens {
+                train_ds,
+                test_ds,
+                shards: partition.apply(shards, seed),
+                model,
+            },
+        }
+    }
 }
 
 /// Deterministically construct dataset + shards + model for a named task.
@@ -509,6 +546,7 @@ pub fn train<M: DistModel + Clone, D: DataSource>(
             test_ppl: eval.ppl,
             bytes_up,
             bytes_down,
+            sites_live: cluster.n_sites(),
             mean_eff_rank,
         });
     }
@@ -801,6 +839,7 @@ mod tests {
                 test_ppl: f32::NAN,
                 bytes_up: 0,
                 bytes_down: 0,
+                sites_live: 2,
                 mean_eff_rank: vec![],
             }],
             sim_time_s: 0.0,
@@ -903,6 +942,7 @@ mod tests {
                 test_ppl: 12.5,
                 bytes_up: 10,
                 bytes_down: 20,
+                sites_live: 2,
                 mean_eff_rank: vec![2.5], // shorter than entry_names: pad NaN
             }],
             sim_time_s: 0.0,
@@ -917,10 +957,10 @@ mod tests {
         assert_eq!(
             header,
             "epoch,algo,train_loss,test_auc,test_acc,test_ppl,bytes_up,bytes_down,\
-             eff_rank_l0,eff_rank_l1"
+             sites_live,eff_rank_l0,eff_rank_l1"
         );
         let row = lines.next().unwrap();
-        assert_eq!(row, "0,rank-dad:4,1.5,0.9,0.8,12.5,10,20,2.5,NaN");
+        assert_eq!(row, "0,rank-dad:4,1.5,0.9,0.8,12.5,10,20,2,2.5,NaN");
         let _ = std::fs::remove_dir_all(dir);
     }
 

@@ -6,7 +6,9 @@ pub mod partition;
 pub mod synth;
 pub mod tokens;
 
-pub use partition::{kfold, split_by_label, split_iid, BatchIter};
+pub use partition::{
+    kfold, split_by_label, split_iid, split_quantity_skew, BatchIter, Partition,
+};
 pub use synth::{
     arabic_digits_like, mnist_like, natops_like, pems_sf_like, pen_digits_like, token_corpus,
     DenseDataset, SeqDataset,

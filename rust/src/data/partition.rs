@@ -16,6 +16,109 @@ pub fn split_by_label(labels: &[usize], classes: usize, n_sites: usize) -> Vec<V
     shards
 }
 
+/// Quantity-skewed split: shuffle, then deal geometrically shrinking
+/// shards — site i receives a fraction proportional to `ratio^i` of the
+/// examples. `ratio = 1` is a balanced IID split; `ratio = 0.5` halves
+/// each successive site's share. This is the "quantity shift" axis of the
+/// chaos recipes (`crate::scenario`): heterogeneous shard sizes stress the
+/// row-weighted loss/gradient averaging and shrink the lockstep step count
+/// to the smallest shard's batch budget.
+pub fn split_quantity_skew(
+    n: usize,
+    n_sites: usize,
+    ratio: f32,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    assert!(n_sites >= 1, "a split needs at least one site");
+    assert!(ratio > 0.0, "quantity-skew ratio must be positive, got {ratio}");
+    let perm = rng.permutation(n);
+    let weights: Vec<f64> = (0..n_sites).map(|i| (ratio as f64).powi(i as i32)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut shards = Vec::with_capacity(n_sites);
+    let mut cum = 0.0f64;
+    let mut start = 0usize;
+    for (i, w) in weights.iter().enumerate() {
+        cum += w / total;
+        let end = if i + 1 == n_sites { n } else { (cum * n as f64).round() as usize };
+        let end = end.clamp(start, n);
+        shards.push(perm[start..end].to_vec());
+        start = end;
+    }
+    shards
+}
+
+/// How training examples are dealt across sites — the partition axis a
+/// chaos recipe (or `--partition`) can override on top of a task's native
+/// sharding. Applied identically in every process from the run seed, so
+/// the lockstep batch schedule survives the override.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Partition {
+    /// The task's native split (label-disjoint for classification tasks,
+    /// contiguous token streams for the LM).
+    Default,
+    /// Shuffle and deal round-robin ([`split_iid`]).
+    Iid,
+    /// Geometrically shrinking shards ([`split_quantity_skew`]) with the
+    /// given per-site ratio.
+    QuantitySkew(f32),
+}
+
+/// Deterministic stream tag for the partition override's RNG: every
+/// process derives the identical deal from the run seed without touching
+/// the training RNG sequence.
+const PARTITION_STREAM: u64 = 0x7061_7274;
+
+impl Partition {
+    /// Parse the CLI/recipe spelling: `default | iid | skew:<ratio>`.
+    pub fn parse(s: &str) -> Result<Partition, String> {
+        if s == "default" {
+            return Ok(Partition::Default);
+        }
+        if s == "iid" {
+            return Ok(Partition::Iid);
+        }
+        if let Some(r) = s.strip_prefix("skew:") {
+            let ratio: f32 = r
+                .parse()
+                .map_err(|_| format!("bad quantity-skew ratio {r:?} (want e.g. skew:0.5)"))?;
+            if !(ratio > 0.0) {
+                return Err(format!("quantity-skew ratio must be positive, got {ratio}"));
+            }
+            return Ok(Partition::QuantitySkew(ratio));
+        }
+        Err(format!("unknown partition {s:?} (default | iid | skew:<ratio>)"))
+    }
+
+    /// The canonical spelling [`Partition::parse`] round-trips.
+    pub fn name(&self) -> String {
+        match self {
+            Partition::Default => "default".into(),
+            Partition::Iid => "iid".into(),
+            Partition::QuantitySkew(r) => format!("skew:{r}"),
+        }
+    }
+
+    /// Re-deal the examples held by `shards` under this partition. The
+    /// example set is preserved exactly (flattened, sorted, re-dealt);
+    /// `Default` is the identity. Deterministic in `seed` — every process
+    /// in a remote run applies the same override and stays in lockstep.
+    pub fn apply(&self, shards: Vec<Vec<usize>>, seed: u64) -> Vec<Vec<usize>> {
+        let n_sites = shards.len();
+        if matches!(self, Partition::Default) || n_sites == 0 {
+            return shards;
+        }
+        let mut all: Vec<usize> = shards.into_iter().flatten().collect();
+        all.sort_unstable();
+        let mut rng = Rng::with_stream(seed, PARTITION_STREAM);
+        let dealt = match self {
+            Partition::Default => unreachable!("handled above"),
+            Partition::Iid => split_iid(all.len(), n_sites, &mut rng),
+            Partition::QuantitySkew(r) => split_quantity_skew(all.len(), n_sites, *r, &mut rng),
+        };
+        dealt.into_iter().map(|shard| shard.into_iter().map(|p| all[p]).collect()).collect()
+    }
+}
+
 /// IID split: shuffle and deal round-robin.
 pub fn split_iid(n: usize, n_sites: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
     let perm = rng.permutation(n);
@@ -124,6 +227,48 @@ mod tests {
         }
         // Every example is tested exactly once.
         assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn quantity_skew_shrinks_geometrically_and_partitions() {
+        let mut rng = Rng::new(9);
+        let shards = split_quantity_skew(100, 3, 0.5, &mut rng);
+        let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 100);
+        assert!(sizes[0] > sizes[1] && sizes[1] > sizes[2], "not shrinking: {sizes:?}");
+        // Roughly 4:2:1 proportions.
+        assert!((55..=60).contains(&sizes[0]), "{sizes:?}");
+        let mut all: Vec<usize> = shards.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+        // ratio = 1 is balanced.
+        let even = split_quantity_skew(99, 3, 1.0, &mut Rng::new(9));
+        assert!(even.iter().all(|s| (32..=34).contains(&s.len())));
+    }
+
+    #[test]
+    fn partition_parse_roundtrips_and_apply_is_deterministic() {
+        assert_eq!(Partition::parse("default").unwrap(), Partition::Default);
+        assert_eq!(Partition::parse("iid").unwrap(), Partition::Iid);
+        assert_eq!(Partition::parse("skew:0.5").unwrap(), Partition::QuantitySkew(0.5));
+        assert!(Partition::parse("skew:-1").is_err());
+        assert!(Partition::parse("zipf").is_err());
+        for s in ["default", "iid", "skew:0.5"] {
+            assert_eq!(Partition::parse(s).unwrap().name(), s);
+        }
+        let labels: Vec<usize> = (0..60).map(|i| i % 6).collect();
+        let native = split_by_label(&labels, 6, 3);
+        assert_eq!(Partition::Default.apply(native.clone(), 7), native);
+        let a = Partition::QuantitySkew(0.5).apply(native.clone(), 7);
+        let b = Partition::QuantitySkew(0.5).apply(native.clone(), 7);
+        assert_eq!(a, b, "same seed must re-deal identically");
+        let c = Partition::QuantitySkew(0.5).apply(native.clone(), 8);
+        assert_ne!(a, c, "different seeds should re-deal differently");
+        // The example set is preserved exactly.
+        let mut all: Vec<usize> = a.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..60).collect::<Vec<_>>());
+        assert!(a[0].len() > a[2].len());
     }
 
     #[test]

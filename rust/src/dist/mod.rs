@@ -25,7 +25,10 @@ pub mod transport;
 pub mod wire;
 
 pub use ledger::{Direction, Ledger};
-pub use transport::{Loopback, TcpAgg, TcpAggListener, TcpSite, Transport};
+pub use transport::{
+    is_link_failure, ChaosSpec, ChaosTransport, FaultEvent, Loopback, TcpAgg, TcpAggListener,
+    TcpSite, Transport,
+};
 
 use std::cell::RefCell;
 
@@ -52,6 +55,33 @@ impl CostModel {
     /// uplinks with ~30 ms latency between institutions.
     pub fn wan_federated() -> Self {
         CostModel { latency_s: 30e-3, bytes_per_s: 100e6 / 8.0 }
+    }
+
+    /// Congested last-mile uplink (the degraded regime the compression
+    /// rivals target): ~5 Mbit/s with ~20 ms latency.
+    pub fn dsl_uplink() -> Self {
+        CostModel { latency_s: 20e-3, bytes_per_s: 5e6 / 8.0 }
+    }
+
+    /// Geostationary satellite hop: ~300 ms one-way, ~10 Mbit/s.
+    pub fn satellite() -> Self {
+        CostModel { latency_s: 300e-3, bytes_per_s: 10e6 / 8.0 }
+    }
+
+    /// Arbitrary link class (chaos recipes compose their own).
+    pub fn custom(latency_s: f64, bytes_per_s: f64) -> Self {
+        CostModel { latency_s, bytes_per_s }
+    }
+
+    /// Parse a named preset: `lan | wan | dsl | sat`.
+    pub fn parse(name: &str) -> Result<CostModel, String> {
+        match name {
+            "lan" => Ok(CostModel::lan_10gbe()),
+            "wan" => Ok(CostModel::wan_federated()),
+            "dsl" => Ok(CostModel::dsl_uplink()),
+            "sat" => Ok(CostModel::satellite()),
+            other => Err(format!("unknown link preset {other:?} (lan|wan|dsl|sat)")),
+        }
     }
 
     /// Seconds to move `bytes` in `n_messages` transmissions.
@@ -234,6 +264,16 @@ mod tests {
         let wan = CostModel::wan_federated();
         let bytes = 1_000_000;
         assert!(lan.time_for(bytes, 1) < wan.time_for(bytes, 1));
+        // The degraded-link presets are strictly worse than the WAN one,
+        // and the named-preset parser round-trips all four classes.
+        assert!(wan.time_for(bytes, 1) < CostModel::dsl_uplink().time_for(bytes, 1));
+        assert!(wan.time_for(bytes, 1) < CostModel::satellite().time_for(bytes, 1));
+        for name in ["lan", "wan", "dsl", "sat"] {
+            assert!(CostModel::parse(name).is_ok(), "{name}");
+        }
+        assert!(CostModel::parse("carrier-pigeon").is_err());
+        let c = CostModel::custom(1.0, 8.0);
+        assert!((c.time_for(8, 1) - 2.0).abs() < 1e-9);
         // Latency dominates small messages, bandwidth dominates big ones.
         assert!(wan.time_for(1, 1) > 0.9 * wan.latency_s);
         assert!(wan.time_for(10 * bytes, 1) > 5.0 * wan.time_for(bytes, 1));

@@ -1,0 +1,498 @@
+//! Deterministic fault injection: a decorator that wraps any [`Transport`]
+//! with a seeded schedule of added latency, jitter, bandwidth caps, frame
+//! drops and disconnects.
+//!
+//! Chaos is a *pure function of the spec*: the per-frame fault decisions
+//! come from a [`crate::tensor::Rng`] stream keyed by `(seed, link)` and
+//! the frame index, never from wall clock or OS state. Two runs of the
+//! same recipe therefore produce byte-identical fault schedules — on the
+//! loopback simulator and over real TCP sockets alike — which is what
+//! keeps chaos experiments replayable (`tests/chaos_recipes.rs` asserts
+//! this).
+//!
+//! Two fault families exist:
+//!
+//! * **Frame-level** (modeled by [`ChaosSpec::schedule`], the pure
+//!   schedule function): per-frame delay from an added [`CostModel`]
+//!   (latency + bandwidth cap) plus uniform jitter, every-k-th frame
+//!   drops, and a hard disconnect after N frames. These key off the
+//!   endpoint's monotone frame counter.
+//! * **Step-level** (protocol-aware): a stall or disconnect gated on the
+//!   k-th `step-meta` control ship — i.e. "die (or straggle) at training
+//!   step k". Frame counts per step depend on the model architecture;
+//!   step gates make fault placement model-independent, so a disconnect
+//!   lands exactly on a step boundary where the aggregator's degradation
+//!   state machine (see `coordinator::remote`) can retire the site and
+//!   continue with the survivors.
+//!
+//! Delay pacing: on a real socket backend the decorator genuinely sleeps
+//! (`pace = true`); on loopback it only accounts the simulated seconds in
+//! [`ChaosTransport::chaos_time_s`], keeping tests fast while the
+//! *schedule* stays bit-identical. A dropped frame never reaches the inner
+//! transport but still returns the bytes the sender put on the lossy wire,
+//! so ledger accounting stays send-side honest. A disconnect drops the
+//! inner transport entirely (closing its socket, for TCP), and every
+//! later operation fails with `ErrorKind::ConnectionAborted`.
+
+use std::io;
+use std::time::Duration;
+
+use super::Transport;
+use crate::dist::ledger::Direction;
+use crate::dist::wire::{self, Frame};
+use crate::dist::CostModel;
+use crate::tensor::{Matrix, Rng};
+
+/// One seeded fault schedule for one link. The default spec is quiet
+/// (no delay, no drops, no disconnect): `ChaosTransport` with a default
+/// spec is behaviorally identical to the bare inner transport.
+#[derive(Debug, Clone, Copy)]
+pub struct ChaosSpec {
+    /// Seed of the fault schedule (combined with the link id).
+    pub seed: u64,
+    /// Added per-frame link cost (latency + bandwidth cap); `None` adds
+    /// no deterministic base delay.
+    pub link_cost: Option<CostModel>,
+    /// Upper bound of the per-frame uniform jitter (seconds; 0 = none).
+    pub jitter_s: f64,
+    /// Drop every k-th *shipped* frame (0 = never). Received frames are
+    /// never dropped — loss happens on the sender's wire.
+    pub drop_every: usize,
+    /// Hard-disconnect once this many frames have crossed (0 = never).
+    pub disconnect_after_frames: usize,
+    /// Disconnect immediately before shipping the k-th `step-meta`
+    /// control frame, 1-based (0 = never) — "die at training step k".
+    pub disconnect_at_step: usize,
+    /// Stall (sleep `stall_s`) immediately before shipping the k-th
+    /// `step-meta`, 1-based (0 = never) — "straggle at training step k".
+    pub stall_at_step: usize,
+    /// Stall duration in seconds (used with `stall_at_step`).
+    pub stall_s: f64,
+}
+
+impl Default for ChaosSpec {
+    fn default() -> Self {
+        ChaosSpec {
+            seed: 0,
+            link_cost: None,
+            jitter_s: 0.0,
+            drop_every: 0,
+            disconnect_after_frames: 0,
+            disconnect_at_step: 0,
+            stall_at_step: 0,
+            stall_s: 0.0,
+        }
+    }
+}
+
+/// One frame's fault decision, as recorded in the live event log and
+/// produced by the pure [`ChaosSpec::schedule`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Monotone per-endpoint frame index the decision applies to.
+    pub frame: u32,
+    /// Injected delay in microseconds (base link cost + jitter).
+    pub delay_us: u64,
+    /// The frame was dropped (never reached the inner transport).
+    pub drop: bool,
+    /// The link was severed at this frame.
+    pub disconnect: bool,
+}
+
+impl FaultEvent {
+    fn push_bytes(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.frame.to_le_bytes());
+        out.extend_from_slice(&self.delay_us.to_le_bytes());
+        out.push(u8::from(self.drop) | (u8::from(self.disconnect) << 1));
+    }
+}
+
+impl ChaosSpec {
+    /// Spec with only a deterministic link cost (pure-delay chaos).
+    pub fn delay_only(seed: u64, cost: CostModel, jitter_s: f64) -> Self {
+        ChaosSpec { seed, link_cost: Some(cost), jitter_s, ..ChaosSpec::default() }
+    }
+
+    /// True when the spec injects no faults at all.
+    pub fn is_quiet(&self) -> bool {
+        self.link_cost.is_none()
+            && self.jitter_s == 0.0
+            && self.drop_every == 0
+            && self.disconnect_after_frames == 0
+            && self.disconnect_at_step == 0
+            && self.stall_at_step == 0
+    }
+
+    /// True when the spec only delays frames (never drops or severs):
+    /// such chaos must leave grads, losses and ledger bytes exactly equal
+    /// to the clean run — asserted by `tests/transport_e2e.rs`.
+    pub fn is_pure_delay(&self) -> bool {
+        self.drop_every == 0
+            && self.disconnect_after_frames == 0
+            && self.disconnect_at_step == 0
+            && self.stall_at_step == 0
+    }
+
+    fn rng_for(&self, link: u64) -> Rng {
+        Rng::with_stream(self.seed, link.wrapping_mul(2).wrapping_add(0x6368616f73))
+    }
+
+    /// One frame's fault decision: pure in `(spec, link-stream rng state,
+    /// frame, bytes)`. Exactly one rng draw per frame keeps the stream
+    /// aligned whatever the spec's fields are.
+    fn event_at(&self, rng: &mut Rng, frame: usize, bytes: u64) -> FaultEvent {
+        let base = self.link_cost.map(|c| c.time_for(bytes, 1)).unwrap_or(0.0);
+        let jitter = rng.uniform() as f64 * self.jitter_s;
+        FaultEvent {
+            frame: frame as u32,
+            delay_us: ((base + jitter) * 1e6) as u64,
+            drop: self.drop_every > 0 && (frame + 1) % self.drop_every == 0,
+            disconnect: self.disconnect_after_frames > 0
+                && frame >= self.disconnect_after_frames,
+        }
+    }
+
+    /// The frame-level fault schedule for a link carrying frames of the
+    /// given wire sizes — a pure function of `(self, link, frame_bytes)`.
+    /// This is what "identical schedules over loopback and TCP" means
+    /// mechanically: any backend moving the same frame sequence draws the
+    /// same events. (Step-level gates are protocol-driven and appear only
+    /// in the live event log.)
+    pub fn schedule(&self, link: u64, frame_bytes: &[u64]) -> Vec<FaultEvent> {
+        let mut rng = self.rng_for(link);
+        frame_bytes
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| self.event_at(&mut rng, i, b))
+            .collect()
+    }
+
+    /// Canonical byte encoding of [`ChaosSpec::schedule`] — what the
+    /// determinism proptest compares across runs.
+    pub fn schedule_bytes(&self, link: u64, frame_bytes: &[u64]) -> Vec<u8> {
+        let mut out = Vec::new();
+        for ev in self.schedule(link, frame_bytes) {
+            ev.push_bytes(&mut out);
+        }
+        out
+    }
+}
+
+fn severed(label: &str, why: &str) -> io::Error {
+    io::Error::new(
+        io::ErrorKind::ConnectionAborted,
+        format!("chaos[{label}]: injected disconnect ({why})"),
+    )
+}
+
+/// The decorator: wraps any transport endpoint with one [`ChaosSpec`]'s
+/// fault schedule. Construct with [`ChaosTransport::new`] (accounting
+/// only) or [`ChaosTransport::paced`] (really sleeps — for real-socket
+/// runs where delay must be wall-clock-visible to the peer's timeouts).
+pub struct ChaosTransport {
+    inner: Option<Box<dyn Transport>>,
+    spec: ChaosSpec,
+    rng: Rng,
+    label: String,
+    n_sites: usize,
+    pace: bool,
+    frames_done: usize,
+    steps_seen: usize,
+    events: Vec<FaultEvent>,
+    sever_why: Option<String>,
+    /// Simulated seconds of injected delay accumulated so far (also
+    /// accumulated when pacing).
+    pub chaos_time_s: f64,
+}
+
+impl ChaosTransport {
+    /// Wrap `inner` under `spec`; `link` keys this endpoint's rng stream
+    /// (use the site id, or 0 for a single all-roles endpoint). Delays are
+    /// accounted in [`ChaosTransport::chaos_time_s`] but not slept.
+    pub fn new(inner: Box<dyn Transport>, spec: ChaosSpec, link: u64) -> Self {
+        let n_sites = inner.n_sites();
+        ChaosTransport {
+            inner: Some(inner),
+            rng: spec.rng_for(link),
+            label: format!("link{link}"),
+            spec,
+            n_sites,
+            pace: false,
+            frames_done: 0,
+            steps_seen: 0,
+            events: Vec::new(),
+            sever_why: None,
+            chaos_time_s: 0.0,
+        }
+    }
+
+    /// [`ChaosTransport::new`] that also genuinely sleeps each injected
+    /// delay — required on real sockets so the peer's recv deadlines see
+    /// the straggle.
+    pub fn paced(inner: Box<dyn Transport>, spec: ChaosSpec, link: u64) -> Self {
+        let mut t = ChaosTransport::new(inner, spec, link);
+        t.pace = true;
+        t
+    }
+
+    /// The live fault-event log, in frame order.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Canonical byte encoding of [`ChaosTransport::events`] (mirrors
+    /// [`ChaosSpec::schedule_bytes`]).
+    pub fn events_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        for ev in &self.events {
+            ev.push_bytes(&mut out);
+        }
+        out
+    }
+
+    fn alive(&self) -> io::Result<()> {
+        match &self.sever_why {
+            Some(why) => Err(severed(&self.label, why)),
+            None => Ok(()),
+        }
+    }
+
+    fn sever(&mut self, why: String) -> io::Error {
+        let e = severed(&self.label, &why);
+        self.sever_why = Some(why);
+        self.inner = None; // dropping a TcpSite/TcpAgg closes its sockets
+        self.events.push(FaultEvent {
+            frame: self.frames_done as u32,
+            delay_us: 0,
+            drop: false,
+            disconnect: true,
+        });
+        e
+    }
+
+    fn delay(&mut self, seconds: f64) {
+        self.chaos_time_s += seconds;
+        if self.pace && seconds > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(seconds));
+        }
+    }
+
+    /// Per-frame gate: sever when the frame budget is exhausted, otherwise
+    /// draw (and apply) this frame's fault event.
+    fn frame_event(&mut self, bytes: u64) -> io::Result<FaultEvent> {
+        self.alive()?;
+        let frame = self.frames_done;
+        self.frames_done += 1;
+        if self.spec.disconnect_after_frames > 0 && frame >= self.spec.disconnect_after_frames {
+            return Err(self.sever(format!(
+                "after {} frames",
+                self.spec.disconnect_after_frames
+            )));
+        }
+        let ev = self.spec.event_at(&mut self.rng, frame, bytes);
+        self.delay(ev.delay_us as f64 * 1e-6);
+        self.events.push(ev);
+        Ok(ev)
+    }
+
+    /// Step gate, fired when a `step-meta` control frame is about to ship:
+    /// step-indexed stalls and disconnects land exactly on training-step
+    /// boundaries (where the aggregator can degrade instead of failing).
+    fn step_gate(&mut self) -> io::Result<()> {
+        self.steps_seen += 1;
+        if self.spec.stall_at_step > 0 && self.steps_seen == self.spec.stall_at_step {
+            self.delay(self.spec.stall_s);
+        }
+        if self.spec.disconnect_at_step > 0 && self.steps_seen == self.spec.disconnect_at_step {
+            return Err(self.sever(format!("at step {}", self.spec.disconnect_at_step)));
+        }
+        Ok(())
+    }
+
+    fn inner_mut(&mut self) -> io::Result<&mut dyn Transport> {
+        match self.inner.as_deref_mut() {
+            Some(t) => Ok(t),
+            // Unreachable after an `alive` check, but never panic here.
+            None => Err(severed(&self.label, "link already severed")),
+        }
+    }
+}
+
+impl Transport for ChaosTransport {
+    fn name(&self) -> &'static str {
+        "chaos"
+    }
+
+    fn n_sites(&self) -> usize {
+        self.n_sites
+    }
+
+    fn ship(&mut self, dir: Direction, tag: &str, mats: &[&Matrix]) -> io::Result<u64> {
+        let bytes = wire::payload_wire_len(tag, mats);
+        let ev = self.frame_event(bytes)?;
+        if ev.drop {
+            // The sender paid for the frame; the wire lost it. Return the
+            // priced bytes so send-side ledgers stay honest.
+            return Ok(match dir {
+                Direction::PeerToPeer => bytes * self.n_sites.saturating_sub(1) as u64,
+                _ => bytes,
+            });
+        }
+        self.inner_mut()?.ship(dir, tag, mats)
+    }
+
+    fn ship_control(&mut self, dir: Direction, tag: &str, body: &[u8]) -> io::Result<u64> {
+        if tag == "step-meta" {
+            self.step_gate()?;
+        }
+        let bytes = wire::control_wire_len(tag, body);
+        let ev = self.frame_event(bytes)?;
+        if ev.drop {
+            return Ok(bytes);
+        }
+        self.inner_mut()?.ship_control(dir, tag, body)
+    }
+
+    fn recv_from_site(&mut self, site: usize) -> io::Result<Frame> {
+        self.alive()?;
+        let f = self.inner_mut()?.recv_from_site(site)?;
+        let bytes = f.wire_len();
+        self.frame_event(bytes)?;
+        Ok(f)
+    }
+
+    fn recv_broadcast(&mut self) -> io::Result<Frame> {
+        self.alive()?;
+        let f = self.inner_mut()?.recv_broadcast()?;
+        let bytes = f.wire_len();
+        self.frame_event(bytes)?;
+        Ok(f)
+    }
+
+    fn forward_p2p(&mut self, from_site: usize, frames: &[Frame]) -> io::Result<()> {
+        for f in frames {
+            let bytes = f.wire_len();
+            self.frame_event(bytes)?;
+        }
+        self.inner_mut()?.forward_p2p(from_site, frames)
+    }
+
+    fn retire_site(&mut self, site: usize) -> io::Result<()> {
+        self.alive()?;
+        self.inner_mut()?.retire_site(site)?;
+        self.n_sites = self.inner.as_ref().map(|t| t.n_sites()).unwrap_or(0);
+        Ok(())
+    }
+
+    fn site_label(&self, site: usize) -> String {
+        match &self.inner {
+            Some(t) => t.site_label(site),
+            None => site.to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::transport::Loopback;
+
+    fn quiet_wrap(n: usize, spec: ChaosSpec) -> ChaosTransport {
+        ChaosTransport::new(Box::new(Loopback::new(n)), spec, 0)
+    }
+
+    #[test]
+    fn quiet_spec_is_transparent() {
+        let spec = ChaosSpec::default();
+        assert!(spec.is_quiet() && spec.is_pure_delay());
+        let mut t = quiet_wrap(2, spec);
+        let m = Matrix::filled(2, 2, 1.0);
+        let direct = wire::payload_wire_len("acts", &[&m]);
+        assert_eq!(t.ship(Direction::SiteToAgg, "acts", &[&m]).unwrap(), direct);
+        assert_eq!(t.chaos_time_s, 0.0);
+        assert_eq!(t.events().len(), 1);
+        assert!(!t.events()[0].drop && !t.events()[0].disconnect);
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_seed_sensitive() {
+        let spec = ChaosSpec {
+            seed: 9,
+            link_cost: Some(CostModel::wan_federated()),
+            jitter_s: 0.01,
+            drop_every: 5,
+            ..ChaosSpec::default()
+        };
+        let sizes: Vec<u64> = (0..64).map(|i| 100 + i * 37).collect();
+        assert_eq!(spec.schedule_bytes(1, &sizes), spec.schedule_bytes(1, &sizes));
+        assert_ne!(spec.schedule_bytes(1, &sizes), spec.schedule_bytes(2, &sizes));
+        let other = ChaosSpec { seed: 10, ..spec };
+        assert_ne!(spec.schedule_bytes(1, &sizes), other.schedule_bytes(1, &sizes));
+        // Every 5th frame drops, nothing disconnects.
+        let evs = spec.schedule(1, &sizes);
+        for (i, ev) in evs.iter().enumerate() {
+            assert_eq!(ev.drop, (i + 1) % 5 == 0);
+            assert!(!ev.disconnect);
+            assert!(ev.delay_us > 0, "wan cost must delay every frame");
+        }
+    }
+
+    #[test]
+    fn live_events_match_pure_schedule() {
+        let spec = ChaosSpec {
+            seed: 4,
+            link_cost: Some(CostModel::lan_10gbe()),
+            jitter_s: 0.002,
+            ..ChaosSpec::default()
+        };
+        let mut t = ChaosTransport::new(Box::new(Loopback::new(2)), spec, 3);
+        let m = Matrix::filled(4, 4, 0.5);
+        let mut sizes = Vec::new();
+        for _ in 0..10 {
+            t.ship(Direction::SiteToAgg, "acts", &[&m]).unwrap();
+            sizes.push(wire::payload_wire_len("acts", &[&m]));
+        }
+        assert_eq!(t.events_bytes(), spec.schedule_bytes(3, &sizes));
+        assert!(t.chaos_time_s > 0.0);
+    }
+
+    #[test]
+    fn disconnect_after_frames_severs_with_clean_error() {
+        let spec = ChaosSpec { disconnect_after_frames: 3, ..ChaosSpec::default() };
+        let mut t = quiet_wrap(2, spec);
+        let m = Matrix::filled(1, 1, 0.0);
+        for _ in 0..3 {
+            t.ship(Direction::SiteToAgg, "acts", &[&m]).unwrap();
+        }
+        let e = t.ship(Direction::SiteToAgg, "acts", &[&m]).unwrap_err();
+        assert_eq!(e.kind(), io::ErrorKind::ConnectionAborted);
+        assert!(e.to_string().contains("injected disconnect"), "{e}");
+        // Every later op fails identically instead of panicking.
+        let e2 = t.recv_broadcast().unwrap_err();
+        assert_eq!(e2.kind(), io::ErrorKind::ConnectionAborted);
+        assert!(t.events().last().unwrap().disconnect);
+    }
+
+    #[test]
+    fn disconnect_at_step_fires_before_the_kth_step_meta() {
+        let spec = ChaosSpec { disconnect_at_step: 2, ..ChaosSpec::default() };
+        let mut t = quiet_wrap(2, spec);
+        // Step 1's meta ships fine; step 2's meta is where the site dies.
+        t.ship_control(Direction::SiteToAgg, "step-meta", &[]).unwrap();
+        t.ship_control(Direction::SiteToAgg, "other", &[]).unwrap();
+        let e = t.ship_control(Direction::SiteToAgg, "step-meta", &[]).unwrap_err();
+        assert_eq!(e.kind(), io::ErrorKind::ConnectionAborted);
+        assert!(e.to_string().contains("at step 2"), "{e}");
+    }
+
+    #[test]
+    fn dropped_frames_still_price_send_side_bytes() {
+        let spec = ChaosSpec { drop_every: 1, ..ChaosSpec::default() };
+        let mut t = quiet_wrap(3, spec);
+        let m = Matrix::filled(2, 2, 1.0);
+        let one = wire::payload_wire_len("acts", &[&m]);
+        assert_eq!(t.ship(Direction::SiteToAgg, "acts", &[&m]).unwrap(), one);
+        assert_eq!(t.ship(Direction::PeerToPeer, "acts", &[&m]).unwrap(), 2 * one);
+        assert!(t.events().iter().all(|e| e.drop));
+    }
+}

@@ -22,11 +22,13 @@
 //! loopback endpoint plays every role at once and the drivers in
 //! `coordinator::remote` only call the half that matches their role.
 
+pub mod chaos;
 pub mod loopback;
 pub mod tcp;
 
+pub use chaos::{ChaosSpec, ChaosTransport, FaultEvent};
 pub use loopback::Loopback;
-pub use tcp::{TcpAgg, TcpAggListener, TcpSite};
+pub use tcp::{is_link_failure, TcpAgg, TcpAggListener, TcpSite};
 
 use std::io;
 
@@ -73,6 +75,25 @@ pub trait Transport: Send {
     /// (site-role endpoints only).
     fn recv_broadcast(&mut self) -> io::Result<Frame> {
         Err(unsupported(self.name(), "recv_broadcast"))
+    }
+
+    /// Permanently remove live link `site` from the fabric (aggregator-
+    /// role endpoints only): close the link, compact the remaining links,
+    /// and shrink `n_sites`. Later live-link indices shift down by one;
+    /// [`Transport::site_label`] keeps reporting original handshake ids.
+    /// This is the degradation seam `coordinator::remote` uses to continue
+    /// a round with the surviving sites after a straggler deadline or a
+    /// disconnect.
+    fn retire_site(&mut self, site: usize) -> io::Result<()> {
+        let _ = site;
+        Err(unsupported(self.name(), "retire_site"))
+    }
+
+    /// Operator-facing label for live link index `site` — the originally
+    /// assigned site id even after earlier retirements compacted the
+    /// links. Endpoints without retirement report the index itself.
+    fn site_label(&self, site: usize) -> String {
+        site.to_string()
     }
 
     /// Forward one site's peer-to-peer frames through a star hub: write

@@ -15,10 +15,18 @@
 //! Blocking I/O is deliberate: the training protocol is phase-ordered
 //! (all uplinks, then the broadcast), so each endpoint always knows which
 //! frame comes next and the kernel's socket buffers absorb the skew between
-//! faster and slower sites.
+//! faster and slower sites. Robustness against *absent* peers is bounded
+//! explicitly instead: [`TcpAggListener::accept_sites_deadline`] puts a
+//! deadline on the whole handshake phase (naming the site that wedged it),
+//! [`TcpAgg::set_recv_timeout`] / [`TcpSite::set_recv_timeout`] bound every
+//! later frame read, and [`TcpAgg::retire_site`] (via
+//! [`Transport::retire_site`]) removes a dead site so the surviving
+//! sub-fabric keeps training — the seams `coordinator::remote`'s
+//! degradation state machine is built on.
 
 use std::io::{self, BufReader, BufWriter, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::time::{Duration, Instant};
 
 use super::{unsupported, Transport};
 use crate::dist::ledger::Direction;
@@ -63,27 +71,109 @@ impl TcpAggListener {
 
     /// Block until all `n_sites` sites have connected and completed the
     /// `hello`/`welcome` handshake; site ids are assigned in accept order.
+    /// Blocks forever if a site never shows — use
+    /// [`TcpAggListener::accept_sites_deadline`] for a bounded wait.
     pub fn accept_sites(self) -> io::Result<TcpAgg> {
+        self.accept_sites_deadline(None)
+    }
+
+    /// [`TcpAggListener::accept_sites`] with a deadline over the whole
+    /// handshake phase. A site that never connects, or connects but never
+    /// completes its `hello`, turns into a `TimedOut` error naming the
+    /// offending site and how many sites made it — instead of wedging
+    /// `dad serve` forever. `None` waits indefinitely (the historical
+    /// behavior).
+    pub fn accept_sites_deadline(self, timeout: Option<Duration>) -> io::Result<TcpAgg> {
+        let deadline = timeout.map(|t| Instant::now() + t);
+        if deadline.is_some() {
+            self.listener.set_nonblocking(true)?;
+        }
         let mut links = Vec::with_capacity(self.n_sites);
         for site_id in 0..self.n_sites {
-            let (stream, _) = self.listener.accept()?;
+            let stream = loop {
+                match self.listener.accept() {
+                    Ok((stream, _)) => break stream,
+                    Err(e)
+                        if matches!(
+                            e.kind(),
+                            io::ErrorKind::WouldBlock | io::ErrorKind::Interrupted
+                        ) =>
+                    {
+                        if let Some(d) = deadline {
+                            if Instant::now() >= d {
+                                return Err(io::Error::new(
+                                    io::ErrorKind::TimedOut,
+                                    format!(
+                                        "handshake deadline: accepted {site_id}/{} sites; \
+                                         site {site_id} never connected",
+                                        self.n_sites
+                                    ),
+                                ));
+                            }
+                        }
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(e) => return Err(e),
+                }
+            };
+            stream.set_nonblocking(false)?;
+            if let Some(d) = deadline {
+                let left = d.saturating_duration_since(Instant::now());
+                // Zero would mean "no timeout"; keep at least a tick.
+                stream.set_read_timeout(Some(left.max(Duration::from_millis(1))))?;
+            }
             let mut l = link(stream)?;
-            let hello = wire::decode(&mut l.r)?;
+            let hello = wire::decode(&mut l.r).map_err(|e| {
+                if is_link_failure(&e) {
+                    io::Error::new(
+                        e.kind(),
+                        format!(
+                            "handshake deadline: site {site_id} connected but never \
+                             completed its hello ({e})"
+                        ),
+                    )
+                } else {
+                    e
+                }
+            })?;
             expect_control(&hello, "hello")?;
             let mut w = ByteWriter::new();
             w.push_u32(site_id as u32);
             w.push_u32(self.n_sites as u32);
             wire::encode_control(&mut l.w, "welcome", &w.finish())?;
             l.w.flush()?;
+            // Back to unbounded reads; training timeouts are opted into
+            // separately via `TcpAgg::set_recv_timeout`.
+            l.r.get_ref().set_read_timeout(None)?;
             links.push(l);
         }
-        Ok(TcpAgg { links })
+        Ok(TcpAgg { links, ids: (0..self.n_sites).collect() })
     }
 }
 
-/// Aggregator endpoint: one socket per site, star topology.
+/// Error kinds that mean "the peer is gone or silent" — the degradation
+/// triggers — as opposed to protocol corruption (`InvalidData`), which
+/// always fails the run. `WouldBlock` appears because platforms disagree
+/// on which kind a socket read timeout surfaces as.
+pub fn is_link_failure(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::TimedOut
+            | io::ErrorKind::WouldBlock
+            | io::ErrorKind::UnexpectedEof
+            | io::ErrorKind::ConnectionReset
+            | io::ErrorKind::ConnectionAborted
+            | io::ErrorKind::BrokenPipe
+    )
+}
+
+/// Aggregator endpoint: one socket per site, star topology. `links` holds
+/// the *live* sites in handshake order; `ids` remembers each live link's
+/// originally assigned site id so diagnostics stay stable after
+/// [`TcpAgg::retire_site`] compacts the fabric.
 pub struct TcpAgg {
     links: Vec<Link>,
+    ids: Vec<usize>,
 }
 
 impl TcpAgg {
@@ -93,6 +183,18 @@ impl TcpAgg {
     pub fn bind(addr: &str, n_sites: usize) -> io::Result<TcpAggListener> {
         assert!(n_sites >= 1, "a fabric needs at least one site");
         Ok(TcpAggListener { listener: TcpListener::bind(addr)?, n_sites })
+    }
+
+    /// Bound every frame read on every live link (`None` restores
+    /// unbounded blocking reads). This is the straggler deadline's
+    /// mechanism: a site that stays silent past the timeout surfaces as a
+    /// `TimedOut`/`WouldBlock` read error, which the remote driver either
+    /// degrades on or fails cleanly — never a hang.
+    pub fn set_recv_timeout(&self, timeout: Option<Duration>) -> io::Result<()> {
+        for l in &self.links {
+            l.r.get_ref().set_read_timeout(timeout)?;
+        }
+        Ok(())
     }
 }
 
@@ -149,6 +251,29 @@ impl Transport for TcpAgg {
         }
         Ok(())
     }
+
+    fn retire_site(&mut self, site: usize) -> io::Result<()> {
+        if site >= self.links.len() {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!("retire_site {site}: only {} live links", self.links.len()),
+            ));
+        }
+        let l = self.links.remove(site);
+        self.ids.remove(site);
+        // Best effort: wake the site (or its stalled kernel buffers) so it
+        // fails fast on its side instead of blocking on a broadcast that
+        // will never come.
+        let _ = l.r.get_ref().shutdown(Shutdown::Both);
+        Ok(())
+    }
+
+    fn site_label(&self, site: usize) -> String {
+        match self.ids.get(site) {
+            Some(id) => id.to_string(),
+            None => site.to_string(),
+        }
+    }
 }
 
 /// Site endpoint: a single socket to the aggregator plus the identity the
@@ -179,30 +304,52 @@ impl TcpSite {
         self.site_id
     }
 
-    /// [`TcpSite::connect`] with retries: launcher scripts (and the CI
-    /// remote-matrix job) start the aggregator and the sites concurrently,
-    /// so the first dials can land before the listener is bound. Retries
-    /// connection-refused/reset every 200 ms until `timeout` elapses;
-    /// protocol errors still fail immediately.
-    pub fn connect_retry(addr: &str, timeout: std::time::Duration) -> io::Result<TcpSite> {
-        let deadline = std::time::Instant::now() + timeout;
+    /// [`TcpSite::connect`] with bounded exponential backoff: launcher
+    /// scripts (and the CI remote-matrix job) start the aggregator and the
+    /// sites concurrently, so the first dials can land before the listener
+    /// is bound. Retries connection-refused/reset with a doubling delay
+    /// (50 ms up to a 1.6 s cap) until `timeout` elapses; protocol errors
+    /// still fail immediately, and the final error reports how long the
+    /// site tried.
+    pub fn connect_retry(addr: &str, timeout: Duration) -> io::Result<TcpSite> {
+        let start = Instant::now();
+        let deadline = start + timeout;
+        let mut backoff = Duration::from_millis(50);
         loop {
             match TcpSite::connect(addr) {
                 Ok(site) => return Ok(site),
                 Err(e)
-                    if std::time::Instant::now() < deadline
-                        && matches!(
-                            e.kind(),
-                            io::ErrorKind::ConnectionRefused
-                                | io::ErrorKind::ConnectionReset
-                                | io::ErrorKind::AddrNotAvailable
-                        ) =>
+                    if matches!(
+                        e.kind(),
+                        io::ErrorKind::ConnectionRefused
+                            | io::ErrorKind::ConnectionReset
+                            | io::ErrorKind::AddrNotAvailable
+                    ) =>
                 {
-                    std::thread::sleep(std::time::Duration::from_millis(200));
+                    if Instant::now() >= deadline {
+                        return Err(io::Error::new(
+                            e.kind(),
+                            format!(
+                                "no aggregator at {addr} after retrying for {:.1}s: {e}",
+                                start.elapsed().as_secs_f32()
+                            ),
+                        ));
+                    }
+                    std::thread::sleep(backoff.min(deadline.saturating_duration_since(
+                        Instant::now(),
+                    )));
+                    backoff = (backoff * 2).min(Duration::from_millis(1600));
                 }
                 Err(e) => return Err(e),
             }
         }
+    }
+
+    /// Bound every broadcast read from the aggregator (`None` restores
+    /// blocking reads): a dead or wedged aggregator surfaces as a
+    /// `TimedOut`/`WouldBlock` error instead of hanging the join process.
+    pub fn set_recv_timeout(&self, timeout: Option<Duration>) -> io::Result<()> {
+        self.link.r.get_ref().set_read_timeout(timeout)
     }
 }
 
@@ -299,5 +446,93 @@ mod tests {
         for s in sites {
             assert_eq!(s.join().unwrap(), 1.0);
         }
+    }
+
+    /// Nobody connects: the handshake deadline errors out naming the
+    /// missing site instead of blocking `accept_sites` forever.
+    #[test]
+    fn handshake_deadline_names_absent_site() {
+        let listener = TcpAgg::bind("127.0.0.1:0", 2).unwrap();
+        let e = listener
+            .accept_sites_deadline(Some(Duration::from_millis(150)))
+            .unwrap_err();
+        assert_eq!(e.kind(), io::ErrorKind::TimedOut);
+        let msg = e.to_string();
+        assert!(msg.contains("0/2") && msg.contains("site 0"), "{msg}");
+    }
+
+    /// A site connects but never sends its hello: the deadline still
+    /// fires, attributing the wedge to that site.
+    #[test]
+    fn handshake_deadline_names_silent_site() {
+        let listener = TcpAgg::bind("127.0.0.1:0", 1).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let _mute = TcpStream::connect(addr).unwrap();
+        let e = listener
+            .accept_sites_deadline(Some(Duration::from_millis(150)))
+            .unwrap_err();
+        assert!(is_link_failure(&e), "unexpected kind: {e}");
+        assert!(e.to_string().contains("site 0"), "{e}");
+    }
+
+    /// Retiring a site compacts the live links but `site_label` keeps
+    /// reporting original handshake ids; the retired site's socket is shut
+    /// down so its next read fails fast instead of blocking.
+    #[test]
+    fn retire_site_compacts_and_keeps_labels() {
+        let listener = TcpAgg::bind("127.0.0.1:0", 3).unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let sites: Vec<_> = (0..3)
+            .map(|_| {
+                let addr = addr.clone();
+                thread::spawn(move || TcpSite::connect(&addr).unwrap())
+            })
+            .collect();
+        let mut agg = listener.accept_sites().unwrap();
+        let mut sites: Vec<TcpSite> = sites.into_iter().map(|t| t.join().unwrap()).collect();
+        sites.sort_by_key(|s| s.site_id());
+        agg.retire_site(1).unwrap();
+        assert_eq!(agg.n_sites(), 2);
+        assert_eq!(agg.site_label(0), "0");
+        assert_eq!(agg.site_label(1), "2");
+        // The survivors still hear broadcasts; the retired site errors.
+        let m = Matrix::filled(1, 1, 7.0);
+        agg.ship(Direction::AggToSite, "sum", &[&m]).unwrap();
+        assert_eq!(sites[0].recv_broadcast().unwrap().tag, "sum");
+        assert_eq!(sites[2].recv_broadcast().unwrap().tag, "sum");
+        assert!(sites[1].recv_broadcast().is_err(), "retired site must fail fast");
+        // Out-of-range retirement is a clean error, not a panic.
+        assert!(agg.retire_site(5).is_err());
+    }
+
+    /// A silent peer trips the recv timeout with a link-failure kind —
+    /// the primitive the aggregator's straggler deadline is built from.
+    #[test]
+    fn recv_timeout_surfaces_as_link_failure() {
+        let listener = TcpAgg::bind("127.0.0.1:0", 1).unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let t = thread::spawn(move || {
+            let s = TcpSite::connect(&addr).unwrap();
+            thread::sleep(Duration::from_millis(400));
+            s
+        });
+        let mut agg = listener.accept_sites().unwrap();
+        agg.set_recv_timeout(Some(Duration::from_millis(100))).unwrap();
+        let e = agg.recv_from_site(0).unwrap_err();
+        assert!(is_link_failure(&e), "unexpected kind: {e}");
+        t.join().unwrap();
+    }
+
+    /// The bounded backoff dial gives up with an error that reports the
+    /// retry window instead of spinning forever.
+    #[test]
+    fn connect_retry_reports_the_window() {
+        // Reserve a port, then close it so the dial is refused.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let e = TcpSite::connect_retry(&addr, Duration::from_millis(200)).unwrap_err();
+        assert!(e.to_string().contains("after retrying"), "{e}");
     }
 }

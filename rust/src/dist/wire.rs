@@ -50,9 +50,11 @@ use crate::tensor::Matrix;
 
 /// Codec version byte; both ends of a connection must agree. Bumped to 2
 /// when the `config` control frame gained the sync-schedule field (and
-/// the step prologue gained `step-meta.n_aux`): a v1 peer dialing a v2
-/// endpoint now fails cleanly at the handshake instead of mid-run.
-pub const WIRE_VERSION: u8 = 2;
+/// the step prologue gained `step-meta.n_aux`); to 3 when `config` gained
+/// the site recv-timeout and partition-override fields (the chaos/fault
+/// layer). A peer from an older build dialing a newer endpoint fails
+/// cleanly at the handshake instead of mid-run.
+pub const WIRE_VERSION: u8 = 3;
 
 /// Upper bound on one frame's post-prefix length (1 GiB): a decoder sanity
 /// check against corrupt or hostile length prefixes.

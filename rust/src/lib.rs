@@ -34,4 +34,5 @@ pub mod lowrank;
 pub mod metrics;
 pub mod nn;
 pub mod runtime;
+pub mod scenario;
 pub mod tensor;

@@ -9,23 +9,31 @@
 //! train [--algo A] [--dataset D] [--epochs N] [--batch B] [--sites S]
 //!       [--scale SC] [--config path.toml]
 //!     one training run with full telemetry (in-process loopback cluster)
-//! serve [--sites S] [--addr HOST:PORT] [train options]
+//! serve [--sites S] [--addr HOST:PORT] [--strict] [--partition P] [train options]
 //!     run the aggregator for a multi-process TCP run and wait for S
-//!     `dad join` processes
+//!     `dad join` processes; lost sites degrade the run (or fail it,
+//!     under --strict) instead of hanging it
 //! join [HOST:PORT]
 //!     run one training site against a serving aggregator
+//! chaos --list | --recipe NAME [--strict] | --recipe-file PATH
+//!     run a named fault-injection scenario over real TCP sockets and
+//!     assert its convergence-or-clean-failure expectation
 //! info
 //!     platform, artifact and thread-pool status
 //! ```
+
+use std::time::Duration;
 
 use dad::algos::AlgoSpec;
 use dad::config::{Args, TomlLite};
 use dad::coordinator::experiments::{self, Scale};
 use dad::coordinator::{
     build_task, join_training, serve_training, train, validate_dataset_algo, validate_remote,
-    RemoteConfig, Schedule, TrainLog, TrainSpec, TrainTask,
+    FaultPolicy, RemoteConfig, Schedule, TrainLog, TrainSpec, TrainTask,
 };
+use dad::data::Partition;
 use dad::dist::{Direction, Ledger, TcpAgg, TcpSite};
+use dad::scenario::{find_recipe, named_recipes, run_recipe, Recipe};
 
 fn main() {
     let args = Args::from_env();
@@ -35,6 +43,7 @@ fn main() {
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
         "join" => cmd_join(&args),
+        "chaos" => cmd_chaos(&args),
         "info" => cmd_info(),
         _ => print_help(),
     }
@@ -49,8 +58,11 @@ fn print_help() {
            dad train [--algo pooled|dsgd|dad|dad-p2p|edad|rank-dad:R|powersgd:R] [--dataset mnist|arabic|lm]\n\
                      [--epochs N] [--batch B] [--sites S] [--lr F] [--seed N] [--sync-every K]\n\
                      [--scale quick|default|paper] [--config path.toml] [--csv PATH]\n\
-           dad serve [--addr HOST:PORT] [--sites S] [--csv PATH] [train options]\n\
+           dad serve [--addr HOST:PORT] [--sites S] [--csv PATH] [--strict]\n\
+                     [--partition default|iid|skew:R] [--straggler-deadline SECS]\n\
+                     [--handshake-timeout SECS] [--recv-timeout SECS] [train options]\n\
            dad join  [HOST:PORT] [--csv PATH]\n\
+           dad chaos --list | --recipe NAME [--strict] [--csv PATH] | --recipe-file PATH\n\
            dad info\n\
          \n\
          `train` simulates all sites in one process over the loopback transport;\n\
@@ -59,6 +71,9 @@ fn print_help() {
          Every --algo (and --sync-every schedule) runs in both modes, on every\n\
          dataset: mnist (MLP), arabic (GRU), lm (decoder-only transformer;\n\
          edad is rejected up front — attention has no delta recomputation).\n\
+         A site lost at a step boundary degrades the run to the survivors\n\
+         (logged as sites_live in the CSV); --strict fails it cleanly instead.\n\
+         `chaos` replays named deterministic fault scenarios (see README).\n\
          Experiment outputs land in results/*.csv; see EXPERIMENTS.md."
     );
 }
@@ -303,37 +318,104 @@ fn cmd_serve(args: &Args) {
         eprintln!("{e}");
         std::process::exit(2)
     });
-    validate_remote(&spec).unwrap_or_else(|e| panic!("{e}"));
+    validate_remote(&spec).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    });
+    let partition = Partition::parse(args.opt_or("partition", "default")).unwrap_or_else(|e| {
+        eprintln!("--partition: {e}");
+        std::process::exit(2)
+    });
+    let policy =
+        if args.has_flag("strict") { FaultPolicy::strict() } else { FaultPolicy::degrade() };
+    // Robustness deadlines, in whole seconds (0 disarms): the handshake
+    // deadline bounds `accept_sites`, the straggler deadline bounds every
+    // per-frame aggregator read, and the recv timeout is shipped to the
+    // sites so a dead aggregator can't wedge them either.
+    let secs = |key: &str, default: usize| -> Option<Duration> {
+        let s = args.usize_or(key, default);
+        (s > 0).then(|| Duration::from_secs(s as u64))
+    };
+    let handshake = secs("handshake-timeout", 120);
+    let straggler = secs("straggler-deadline", 300);
+    let recv_timeout_ms = secs("recv-timeout", 600).map(|d| d.as_millis() as u32).unwrap_or(0);
     let scale_s = args.opt_or("scale", "default").to_string();
     let scale = Scale::parse(&scale_s).unwrap_or(Scale::Default);
     let addr = args.opt_or("addr", "127.0.0.1:7009").to_string();
-    let listener =
-        TcpAgg::bind(&addr, spec.n_sites).unwrap_or_else(|e| panic!("bind {addr}: {e}"));
+    let listener = TcpAgg::bind(&addr, spec.n_sites).unwrap_or_else(|e| {
+        eprintln!("bind {addr}: {e}");
+        std::process::exit(1)
+    });
     let shown = listener.local_addr().map(|a| a.to_string()).unwrap_or_else(|_| addr.clone());
     println!(
         "serving {} on {dataset} ({scale:?}) at {shown}; waiting for {} x `dad join {shown}`",
         spec.algo.name(),
         spec.n_sites
     );
-    let mut agg = listener.accept_sites().unwrap_or_else(|e| panic!("handshake: {e}"));
-    RemoteConfig { spec: spec.clone(), dataset: dataset.clone(), scale: scale_s }
-        .send(&mut agg)
-        .unwrap_or_else(|e| panic!("config broadcast: {e}"));
+    let mut agg = listener.accept_sites_deadline(handshake).unwrap_or_else(|e| {
+        eprintln!("handshake: {e}");
+        std::process::exit(1)
+    });
+    agg.set_recv_timeout(straggler).unwrap_or_else(|e| {
+        eprintln!("arming straggler deadline: {e}");
+        std::process::exit(1)
+    });
+    RemoteConfig {
+        spec: spec.clone(),
+        dataset: dataset.clone(),
+        scale: scale_s,
+        recv_timeout_ms,
+        partition,
+    }
+    .send(&mut agg)
+    .unwrap_or_else(|e| {
+        eprintln!("config broadcast: {e}");
+        std::process::exit(1)
+    });
     let mut ledger = Ledger::new();
     let t0 = std::time::Instant::now();
-    let log = match build_task(&dataset, scale, spec.n_sites, spec.seed) {
-        Ok(TrainTask::Dense { train_ds, test_ds, shards, model }) => {
-            serve_training(&mut agg, &mut ledger, &spec, model, &train_ds, &shards, &test_ds)
-        }
-        Ok(TrainTask::Seq { train_ds, test_ds, shards, model }) => {
-            serve_training(&mut agg, &mut ledger, &spec, model, &train_ds, &shards, &test_ds)
-        }
-        Ok(TrainTask::Tokens { train_ds, test_ds, shards, model }) => {
-            serve_training(&mut agg, &mut ledger, &spec, model, &train_ds, &shards, &test_ds)
-        }
-        Err(e) => panic!("{e}"),
+    let task = build_task(&dataset, scale, spec.n_sites, spec.seed)
+        .unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2)
+        })
+        .repartition(partition, spec.seed);
+    let log = match task {
+        TrainTask::Dense { train_ds, test_ds, shards, model } => serve_training(
+            &mut agg,
+            &mut ledger,
+            &spec,
+            model,
+            &train_ds,
+            &shards,
+            &test_ds,
+            policy,
+        ),
+        TrainTask::Seq { train_ds, test_ds, shards, model } => serve_training(
+            &mut agg,
+            &mut ledger,
+            &spec,
+            model,
+            &train_ds,
+            &shards,
+            &test_ds,
+            policy,
+        ),
+        TrainTask::Tokens { train_ds, test_ds, shards, model } => serve_training(
+            &mut agg,
+            &mut ledger,
+            &spec,
+            model,
+            &train_ds,
+            &shards,
+            &test_ds,
+            policy,
+        ),
     }
-    .unwrap_or_else(|e| panic!("serve: {e}"));
+    .unwrap_or_else(|e| {
+        eprintln!("serve: {e}");
+        std::process::exit(1)
+    });
     print_epochs(&log);
     maybe_write_csv(args, &log);
     println!(
@@ -352,10 +434,24 @@ fn cmd_join(args: &Args) {
         args.positional.get(1).map(|s| s.as_str()).unwrap_or("127.0.0.1:7009").to_string();
     // Retry the dial briefly: launcher scripts (and CI) start serve and
     // joins concurrently, so the listener may not be bound yet.
-    let mut site = TcpSite::connect_retry(&addr, std::time::Duration::from_secs(10))
-        .unwrap_or_else(|e| panic!("connect {addr}: {e}"));
+    let mut site = TcpSite::connect_retry(&addr, Duration::from_secs(10)).unwrap_or_else(|e| {
+        eprintln!("connect {addr}: {e}");
+        std::process::exit(1)
+    });
     let site_id = site.site_id();
-    let cfg = RemoteConfig::recv(&mut site).unwrap_or_else(|e| panic!("config: {e}"));
+    let cfg = RemoteConfig::recv(&mut site).unwrap_or_else(|e| {
+        eprintln!("config: {e}");
+        std::process::exit(1)
+    });
+    // Arm the read deadline the aggregator asked for: if the aggregator
+    // dies mid-run this process fails with a clean timeout, not a wedge.
+    if cfg.recv_timeout_ms > 0 {
+        site.set_recv_timeout(Some(Duration::from_millis(u64::from(cfg.recv_timeout_ms))))
+            .unwrap_or_else(|e| {
+                eprintln!("arming recv timeout: {e}");
+                std::process::exit(1)
+            });
+    }
     let scale = Scale::parse(&cfg.scale).unwrap_or(Scale::Default);
     println!(
         "joined {addr} as site {site_id}/{}: {} on {} ({scale:?})",
@@ -365,19 +461,27 @@ fn cmd_join(args: &Args) {
     );
     let mut ledger = Ledger::new();
     let t0 = std::time::Instant::now();
-    let log = match build_task(&cfg.dataset, scale, cfg.spec.n_sites, cfg.spec.seed) {
-        Ok(TrainTask::Dense { train_ds, shards, model, .. }) => {
+    let task = build_task(&cfg.dataset, scale, cfg.spec.n_sites, cfg.spec.seed)
+        .unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2)
+        })
+        .repartition(cfg.partition, cfg.spec.seed);
+    let log = match task {
+        TrainTask::Dense { train_ds, shards, model, .. } => {
             join_training(&mut site, &mut ledger, &cfg.spec, model, &train_ds, &shards, site_id)
         }
-        Ok(TrainTask::Seq { train_ds, shards, model, .. }) => {
+        TrainTask::Seq { train_ds, shards, model, .. } => {
             join_training(&mut site, &mut ledger, &cfg.spec, model, &train_ds, &shards, site_id)
         }
-        Ok(TrainTask::Tokens { train_ds, shards, model, .. }) => {
+        TrainTask::Tokens { train_ds, shards, model, .. } => {
             join_training(&mut site, &mut ledger, &cfg.spec, model, &train_ds, &shards, site_id)
         }
-        Err(e) => panic!("{e}"),
     }
-    .unwrap_or_else(|e| panic!("join: {e}"));
+    .unwrap_or_else(|e| {
+        eprintln!("join: {e}");
+        std::process::exit(1)
+    });
     for e in &log.epochs {
         println!(
             "epoch {:>3}  loss {:.4}  up {:>10}B  down {:>10}B",
@@ -391,4 +495,83 @@ fn cmd_join(args: &Args) {
         ledger.total_dir(Direction::SiteToAgg),
         ledger.total_dir(Direction::AggToSite),
     );
+}
+
+/// `dad chaos`: run one deterministic fault-injection recipe end-to-end
+/// over real TCP sockets (aggregator + site threads in this process) and
+/// check its convergence-or-clean-failure expectation.
+///
+/// Exit codes: 0 = the run completed (converged or degraded, metrics
+/// printed); 1 = the run failed cleanly (error printed — the *expected*
+/// outcome for `fail:` recipes, which CI asserts as a nonzero exit);
+/// 2 = bad usage; 3 = the run's outcome contradicted the recipe's
+/// expectation.
+fn cmd_chaos(args: &Args) {
+    if args.has_flag("list") {
+        println!("{:<22} {:<28} summary", "recipe", "expectation");
+        for r in named_recipes() {
+            println!("{:<22} {:<28} {}", r.name, r.expect.name(), r.summary);
+        }
+        return;
+    }
+    let recipe = if let Some(path) = args.opt("recipe-file") {
+        let text = std::fs::read_to_string(path).unwrap_or_else(|e| {
+            eprintln!("{path}: {e}");
+            std::process::exit(2)
+        });
+        Recipe::from_toml(&text).unwrap_or_else(|e| {
+            eprintln!("{path}: {e}");
+            std::process::exit(2)
+        })
+    } else if let Some(name) = args.opt("recipe") {
+        find_recipe(name).unwrap_or_else(|| {
+            eprintln!("unknown recipe {name:?}; `dad chaos --list` shows the registry");
+            std::process::exit(2)
+        })
+    } else {
+        eprintln!(
+            "usage: dad chaos --list | --recipe NAME [--strict] [--csv PATH] | --recipe-file PATH"
+        );
+        std::process::exit(2)
+    };
+    let strict = args.has_flag("strict");
+    println!(
+        "chaos recipe {} ({}{}): {}",
+        recipe.name,
+        recipe.expect.name(),
+        if strict { ", --strict" } else { "" },
+        recipe.summary
+    );
+    let t0 = std::time::Instant::now();
+    let report = run_recipe(&recipe, strict);
+    for (site, err) in &report.site_errors {
+        if *site == usize::MAX {
+            eprintln!("[site] pre-handshake failure: {err}");
+        } else {
+            eprintln!("[site {site}] {err}");
+        }
+    }
+    if let Some(log) = &report.log {
+        print_epochs(log);
+        maybe_write_csv(args, log);
+    }
+    println!("[{} finished in {:.1}s]", recipe.name, t0.elapsed().as_secs_f32());
+    let mut code = 0;
+    if let Some(e) = &report.error {
+        eprintln!("chaos run failed: {e}");
+        code = 1;
+    }
+    // --strict deliberately changes the outcome (degrade recipes become
+    // clean failures), so the recipe's own expectation only binds the
+    // default policy.
+    if !strict {
+        match report.check(&recipe) {
+            Ok(()) => println!("[expectation met: {}]", recipe.expect.name()),
+            Err(msg) => {
+                eprintln!("[expectation mismatch] {msg}");
+                code = 3;
+            }
+        }
+    }
+    std::process::exit(code);
 }

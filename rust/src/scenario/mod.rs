@@ -1,0 +1,425 @@
+//! Declarative chaos recipes: named fault/heterogeneity scenarios that
+//! compose a training spec (algorithm × sync schedule × site count), a
+//! partition override (`crate::data::Partition`), per-site
+//! [`ChaosSpec`]s, and an expected outcome — runnable as
+//! `dad chaos --recipe <name>` and asserted end-to-end by
+//! `tests/chaos_recipes.rs`.
+//!
+//! A recipe's contract is **convergence or clean failure**: the run either
+//! completes with metrics (possibly degraded to the surviving sites — see
+//! `coordinator::remote`'s fault policy) or returns a clean `io::Error`
+//! whose message names the cause. Never a hang, never a panic. The
+//! [`Expectation`] encodes which of the three outcomes the recipe is
+//! *supposed* to produce:
+//!
+//! | expectation        | meaning                                          |
+//! |--------------------|--------------------------------------------------|
+//! | `converge`         | completes with every site still alive            |
+//! | `degrade:<k>`      | completes with exactly `k` surviving sites       |
+//! | `fail:<substring>` | returns an error whose message contains the text |
+//!
+//! Recipes are deterministic: chaos schedules are seeded pure functions
+//! (`dist::transport::chaos`), batch schedules replay from the run seed,
+//! and step-gated disconnects land on step boundaries — so two runs of
+//! the same recipe produce the same losses, the same ledger bytes and the
+//! same survivor trajectory. Custom recipes load from TOML files
+//! (`config::toml_lite` subset) with the same fields the named registry
+//! uses; see `Recipe::from_toml`.
+
+pub mod runner;
+
+pub use runner::{run_recipe, RecipeReport};
+
+use crate::algos::AlgoSpec;
+use crate::config::TomlLite;
+use crate::coordinator::{Schedule, TrainSpec};
+use crate::data::Partition;
+use crate::dist::{ChaosSpec, CostModel};
+
+/// What a recipe is supposed to do — the assertion target for the CI
+/// recipe matrix and `tests/chaos_recipes.rs`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expectation {
+    /// The run completes with every site alive.
+    Converge,
+    /// The run completes with exactly this many surviving sites in the
+    /// final epoch's `sites_live`.
+    Degrade(usize),
+    /// The run fails cleanly with an error containing this substring.
+    Fail(String),
+}
+
+impl Expectation {
+    /// Parse the recipe-file spelling: `converge | degrade:<k> | fail:<text>`.
+    pub fn parse(s: &str) -> Result<Expectation, String> {
+        if s == "converge" {
+            return Ok(Expectation::Converge);
+        }
+        if let Some(k) = s.strip_prefix("degrade:") {
+            let k: usize = k.parse().map_err(|_| format!("bad survivor count in {s:?}"))?;
+            return Ok(Expectation::Degrade(k));
+        }
+        if let Some(text) = s.strip_prefix("fail:") {
+            return Ok(Expectation::Fail(text.to_string()));
+        }
+        Err(format!("unknown expectation {s:?} (converge | degrade:<k> | fail:<substring>)"))
+    }
+
+    /// The canonical spelling [`Expectation::parse`] round-trips.
+    pub fn name(&self) -> String {
+        match self {
+            Expectation::Converge => "converge".into(),
+            Expectation::Degrade(k) => format!("degrade:{k}"),
+            Expectation::Fail(text) => format!("fail:{text}"),
+        }
+    }
+}
+
+/// One named chaos scenario: everything needed to reproduce a fault run.
+#[derive(Debug, Clone)]
+pub struct Recipe {
+    /// Recipe name (`dad chaos --recipe <name>`).
+    pub name: String,
+    /// One-line description for `--list` and the README recipe table.
+    pub summary: String,
+    /// Training spec (algorithm, sites, schedule, seed, ...).
+    pub spec: TrainSpec,
+    /// Dataset name (`trainer::build_task`).
+    pub dataset: String,
+    /// Scale preset string (recipes default to "quick").
+    pub scale: String,
+    /// Partition override applied identically in every process.
+    pub partition: Partition,
+    /// Per-site fault schedule, indexed by site id (missing = quiet).
+    pub site_chaos: Vec<ChaosSpec>,
+    /// Fail the run on the first lost site instead of degrading
+    /// (overridable from the CLI with `--strict`).
+    pub strict: bool,
+    /// Aggregator per-frame recv deadline (straggler detection), ms;
+    /// 0 disarms it.
+    pub straggler_deadline_ms: u64,
+    /// Handshake deadline for `accept_sites`, ms.
+    pub handshake_timeout_ms: u64,
+    /// Site-side per-frame recv deadline (shipped in the config frame), ms.
+    pub recv_timeout_ms: u32,
+    /// The outcome this recipe is supposed to produce.
+    pub expect: Expectation,
+}
+
+impl Recipe {
+    /// A quiet baseline recipe every scenario starts from: 3 sites on
+    /// quick-scale mnist, 2 epochs, every-batch sync, generous deadlines.
+    fn base(name: &str, summary: &str, algo: AlgoSpec) -> Recipe {
+        Recipe {
+            name: name.to_string(),
+            summary: summary.to_string(),
+            spec: TrainSpec {
+                algo,
+                n_sites: 3,
+                batch_per_site: 16,
+                epochs: 2,
+                lr: 1e-4,
+                seed: 13,
+                schedule: Schedule::EveryBatch,
+            },
+            dataset: "mnist".into(),
+            scale: "quick".into(),
+            partition: Partition::Default,
+            site_chaos: vec![],
+            strict: false,
+            straggler_deadline_ms: 30_000,
+            handshake_timeout_ms: 30_000,
+            recv_timeout_ms: 60_000,
+            expect: Expectation::Converge,
+        }
+    }
+
+    /// The chaos spec for `site` (quiet when the recipe leaves it unset).
+    pub fn chaos_for(&self, site: usize) -> ChaosSpec {
+        self.site_chaos.get(site).copied().unwrap_or_default()
+    }
+
+    /// Parse a recipe from TOML text. Layout (all keys optional except
+    /// `name`; defaults mirror the named-recipe baseline):
+    ///
+    /// ```toml
+    /// name = "my-scenario"
+    /// summary = "what it stresses"
+    /// expect = "degrade:2"          # converge | degrade:<k> | fail:<text>
+    /// strict = false
+    /// straggler_deadline_ms = 2000
+    /// handshake_timeout_ms = 30000
+    /// recv_timeout_ms = 60000
+    ///
+    /// [train]
+    /// algo = "dad"                  # any AlgoSpec spelling
+    /// dataset = "mnist"
+    /// sites = 3
+    /// batch = 16
+    /// epochs = 2
+    /// lr = 1e-4
+    /// seed = 13
+    /// sync_every = 1
+    /// partition = "default"         # default | iid | skew:<ratio>
+    ///
+    /// [chaos.site.1]                # one section per faulty site
+    /// seed = 7
+    /// link = "wan"                  # lan | wan | dsl | sat
+    /// jitter_ms = 5
+    /// drop_every = 0
+    /// disconnect_after_frames = 0
+    /// disconnect_at_step = 3
+    /// stall_at_step = 0
+    /// stall_ms = 0
+    /// ```
+    pub fn from_toml(text: &str) -> Result<Recipe, String> {
+        let cfg = TomlLite::parse(text)?;
+        let name = cfg.str_or("", "name", "");
+        if name.is_empty() {
+            return Err("recipe file needs a root-level name = \"...\"".into());
+        }
+        let algo_s = cfg.str_or("train", "algo", "dad").to_string();
+        let algo = AlgoSpec::parse(&algo_s).map_err(|e| format!("train.algo: {e}"))?;
+        let mut r = Recipe::base(name, cfg.str_or("", "summary", "custom recipe"), algo);
+        r.dataset = cfg.str_or("train", "dataset", "mnist").to_string();
+        r.spec.n_sites = cfg.int_or("train", "sites", 3) as usize;
+        r.spec.batch_per_site = cfg.int_or("train", "batch", 16) as usize;
+        r.spec.epochs = cfg.int_or("train", "epochs", 2) as usize;
+        r.spec.lr = cfg.float_or("train", "lr", 1e-4) as f32;
+        r.spec.seed = cfg.int_or("train", "seed", 13) as u64;
+        r.spec.schedule = Schedule::from_sync_every(cfg.int_or("train", "sync_every", 1) as usize);
+        r.partition = Partition::parse(cfg.str_or("train", "partition", "default"))
+            .map_err(|e| format!("train.partition: {e}"))?;
+        r.strict = cfg.bool_or("", "strict", false);
+        r.straggler_deadline_ms = cfg.int_or("", "straggler_deadline_ms", 30_000) as u64;
+        r.handshake_timeout_ms = cfg.int_or("", "handshake_timeout_ms", 30_000) as u64;
+        r.recv_timeout_ms = cfg.int_or("", "recv_timeout_ms", 60_000) as u32;
+        r.expect = Expectation::parse(cfg.str_or("", "expect", "converge"))?;
+        let mut site_chaos = vec![ChaosSpec::default(); r.spec.n_sites];
+        for (site, chaos) in site_chaos.iter_mut().enumerate() {
+            let sec = format!("chaos.site.{site}");
+            if !cfg.sections.contains_key(&sec) {
+                continue;
+            }
+            chaos.seed = cfg.int_or(&sec, "seed", 0) as u64;
+            let link = cfg.str_or(&sec, "link", "");
+            if !link.is_empty() {
+                chaos.link_cost =
+                    Some(CostModel::parse(link).map_err(|e| format!("{sec}.link: {e}"))?);
+            }
+            chaos.jitter_s = cfg.float_or(&sec, "jitter_ms", 0.0) * 1e-3;
+            chaos.drop_every = cfg.int_or(&sec, "drop_every", 0) as usize;
+            chaos.disconnect_after_frames = cfg.int_or(&sec, "disconnect_after_frames", 0) as usize;
+            chaos.disconnect_at_step = cfg.int_or(&sec, "disconnect_at_step", 0) as usize;
+            chaos.stall_at_step = cfg.int_or(&sec, "stall_at_step", 0) as usize;
+            chaos.stall_s = cfg.float_or(&sec, "stall_ms", 0.0) * 1e-3;
+        }
+        r.site_chaos = site_chaos;
+        Ok(r)
+    }
+}
+
+/// A site that dies at training step 3 of an otherwise quiet 3-site run.
+fn mid_drop(name: &str, algo: AlgoSpec, algo_label: &str) -> Recipe {
+    let mut r = Recipe::base(
+        name,
+        &format!("site 2 disconnects at step 3; {algo_label} continues with 2 survivors"),
+        algo,
+    );
+    let mut chaos = vec![ChaosSpec::default(); 3];
+    chaos[2] = ChaosSpec { seed: 23, disconnect_at_step: 3, ..ChaosSpec::default() };
+    r.site_chaos = chaos;
+    r.straggler_deadline_ms = 5_000;
+    r.expect = Expectation::Degrade(2);
+    r
+}
+
+/// The named recipe registry — every scenario the CI recipe matrix runs.
+pub fn named_recipes() -> Vec<Recipe> {
+    let mut recipes = vec![];
+
+    recipes.push(Recipe::base(
+        "clean-dad",
+        "fault-free 3-site dAD baseline; the matrix's control group",
+        AlgoSpec::Dad,
+    ));
+
+    let mut r = Recipe::base(
+        "slow-link-dad",
+        "every site behind a jittery WAN link; pure delay must not change the math",
+        AlgoSpec::Dad,
+    );
+    r.site_chaos = (0..3)
+        .map(|s| {
+            let mut c = ChaosSpec::delay_only(40 + s, CostModel::wan_federated(), 0.002);
+            // Scale the deterministic base cost down so a quick-scale CI
+            // run stays fast while every frame still pays a nonzero delay.
+            c.link_cost = Some(CostModel::custom(1e-4, 1e9));
+            c
+        })
+        .collect();
+    recipes.push(r);
+
+    let mut r = Recipe::base(
+        "slow-link-rank-dad",
+        "rank-dAD over congested uplinks: compression earns its keep on slow links",
+        AlgoSpec::RankDad { max_rank: 4, n_iters: 10, theta: 1e-3 },
+    );
+    r.site_chaos = (0..3)
+        .map(|s| ChaosSpec::delay_only(50 + s, CostModel::custom(1e-4, 1e9), 0.001))
+        .collect();
+    recipes.push(r);
+
+    recipes.push(mid_drop("mid-drop-dad", AlgoSpec::Dad, "dAD"));
+    recipes.push(mid_drop("mid-drop-dsgd", AlgoSpec::Dsgd, "dSGD"));
+    recipes.push(mid_drop(
+        "mid-drop-rank-dad",
+        AlgoSpec::RankDad { max_rank: 2, n_iters: 10, theta: 1e-3 },
+        "rank-dAD",
+    ));
+
+    let mut r = Recipe::base(
+        "straggler-dad",
+        "site 1 stalls past the straggler deadline at step 2 and is retired",
+        AlgoSpec::Dad,
+    );
+    let mut chaos = vec![ChaosSpec::default(); 3];
+    chaos[1] = ChaosSpec { seed: 31, stall_at_step: 2, stall_s: 4.0, ..ChaosSpec::default() };
+    r.site_chaos = chaos;
+    r.straggler_deadline_ms = 1_000;
+    r.expect = Expectation::Degrade(2);
+    recipes.push(r);
+
+    let mut r = Recipe::base(
+        "skew-quantity-dad",
+        "geometric quantity skew (ratio 0.5): row-weighted averaging under unequal shards",
+        AlgoSpec::Dad,
+    );
+    r.partition = Partition::QuantitySkew(0.5);
+    recipes.push(r);
+
+    let mut r = Recipe::base(
+        "drop-uplink-dsgd",
+        "a lossy uplink drops a payload frame mid-exchange: clean failure, not a hang",
+        AlgoSpec::Dsgd,
+    );
+    let mut chaos = vec![ChaosSpec::default(); 3];
+    // Site 1's third frame (after the step-meta ship and step-sync recv)
+    // is the first step's gradient uplink: the aggregator times out inside
+    // the exchange, where degradation is not sound.
+    chaos[1] = ChaosSpec { seed: 77, drop_every: 3, ..ChaosSpec::default() };
+    r.site_chaos = chaos;
+    r.straggler_deadline_ms = 1_500;
+    r.expect = Expectation::Fail("mid-exchange".into());
+    recipes.push(r);
+
+    let mut r = Recipe::base(
+        "mid-drop-dad-p2p",
+        "dad-p2p cannot shrink its mesh: a lost site must fail cleanly, naming it",
+        AlgoSpec::DadP2p,
+    );
+    let mut chaos = vec![ChaosSpec::default(); 3];
+    chaos[2] = ChaosSpec { seed: 23, disconnect_at_step: 2, ..ChaosSpec::default() };
+    r.site_chaos = chaos;
+    r.straggler_deadline_ms = 5_000;
+    r.expect = Expectation::Fail("cannot continue with survivors".into());
+    recipes.push(r);
+
+    let mut r = Recipe::base(
+        "edad-periodic-reject",
+        "the documented edAD desync: periodic schedules are rejected up front",
+        AlgoSpec::Edad,
+    );
+    r.spec.schedule = Schedule::from_sync_every(3);
+    r.expect = Expectation::Fail("edad over the wire requires --sync-every 1".into());
+    recipes.push(r);
+
+    let mut r = Recipe::base(
+        "edad-lm-reject",
+        "edAD has no delta recomputation for attention: the LM pairing is rejected up front",
+        AlgoSpec::Edad,
+    );
+    r.dataset = "lm".into();
+    r.expect = Expectation::Fail("edad".into());
+    recipes.push(r);
+
+    recipes
+}
+
+/// Look up a named recipe.
+pub fn find_recipe(name: &str) -> Option<Recipe> {
+    named_recipes().into_iter().find(|r| r.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_findable() {
+        let recipes = named_recipes();
+        assert!(recipes.len() >= 10, "registry shrank to {}", recipes.len());
+        let mut names: Vec<&str> = recipes.iter().map(|r| r.name.as_str()).collect();
+        names.sort_unstable();
+        let n = names.len();
+        names.dedup();
+        assert_eq!(names.len(), n, "duplicate recipe names");
+        for r in &recipes {
+            assert!(find_recipe(&r.name).is_some(), "{} not findable", r.name);
+            assert!(!r.summary.is_empty());
+            // Per-site chaos never indexes out of range.
+            assert!(r.site_chaos.len() <= r.spec.n_sites, "{}", r.name);
+        }
+        assert!(find_recipe("no-such-recipe").is_none());
+    }
+
+    #[test]
+    fn expectation_spellings_roundtrip() {
+        for s in ["converge", "degrade:2", "fail:boom"] {
+            assert_eq!(Expectation::parse(s).unwrap().name(), s);
+        }
+        assert!(Expectation::parse("degrade:x").is_err());
+        assert!(Expectation::parse("explode").is_err());
+    }
+
+    #[test]
+    fn recipe_parses_from_toml_with_site_chaos() {
+        let text = r#"
+name = "custom-drop"
+summary = "one flaky site"
+expect = "degrade:1"
+strict = false
+straggler_deadline_ms = 750
+
+[train]
+algo = "dsgd"
+dataset = "mnist"
+sites = 2
+batch = 8
+epochs = 1
+sync_every = 1
+partition = "skew:0.5"
+
+[chaos.site.1]
+seed = 5
+link = "wan"
+jitter_ms = 2
+disconnect_at_step = 4
+"#;
+        let r = Recipe::from_toml(text).unwrap();
+        assert_eq!(r.name, "custom-drop");
+        assert_eq!(r.spec.n_sites, 2);
+        assert!(matches!(r.spec.algo, AlgoSpec::Dsgd));
+        assert_eq!(r.partition, Partition::QuantitySkew(0.5));
+        assert_eq!(r.straggler_deadline_ms, 750);
+        assert_eq!(r.expect, Expectation::Degrade(1));
+        assert!(r.chaos_for(0).is_quiet());
+        let c1 = r.chaos_for(1);
+        assert_eq!(c1.seed, 5);
+        assert_eq!(c1.disconnect_at_step, 4);
+        assert!(c1.link_cost.is_some());
+        // Unknown fields fail loudly, not silently.
+        assert!(Recipe::from_toml("name = \"x\"\nexpect = \"explode\"").is_err());
+        assert!(Recipe::from_toml("summary = \"missing name\"").is_err());
+    }
+}

@@ -1,0 +1,230 @@
+//! Execute a [`Recipe`](super::Recipe) end-to-end over real TCP sockets:
+//! one aggregator plus `n_sites` in-process site threads, each wrapped in
+//! its own [`ChaosTransport`] — the same topology `dad serve` / `dad join`
+//! run as separate OS processes, compressed into one process so recipes
+//! are runnable from `dad chaos` and from `cargo test` without launcher
+//! scripts. (The CI recipe matrix additionally re-runs recipes through the
+//! real multi-process path via `.github/scripts/remote_smoke.sh`.)
+//!
+//! The runner never hangs: the handshake, every aggregator read and every
+//! site read are bounded by the recipe's deadlines, and when the serve
+//! side finishes (cleanly or not) its sockets close, which unblocks any
+//! surviving site thread with a clean link error.
+
+use std::io;
+use std::thread;
+use std::time::Duration;
+
+use super::{Expectation, Recipe};
+use crate::coordinator::{
+    build_task, join_training, serve_training, validate_dataset_algo, validate_remote,
+    FaultPolicy, RemoteConfig, Scale, TrainLog, TrainTask,
+};
+use crate::dist::{ChaosTransport, Ledger, TcpAgg, TcpAggListener, TcpSite, Transport};
+
+/// What one recipe run produced: at most one of `log` / `error`, plus the
+/// per-site outcomes (informational — a degraded run *expects* the retired
+/// sites to report link errors).
+#[derive(Debug)]
+pub struct RecipeReport {
+    /// The aggregator's per-epoch metrics when the run completed.
+    pub log: Option<TrainLog>,
+    /// The aggregator's clean failure when it did not.
+    pub error: Option<io::Error>,
+    /// `(site id, error)` for every site thread that ended with an error;
+    /// `usize::MAX` marks a site that failed before the handshake assigned
+    /// it an id.
+    pub site_errors: Vec<(usize, String)>,
+}
+
+impl RecipeReport {
+    /// Assert the run matched `recipe.expect`; `Err` carries a diagnostic
+    /// naming what diverged. This is the single assertion the CLI
+    /// (`dad chaos`) and `tests/chaos_recipes.rs` both apply.
+    pub fn check(&self, recipe: &Recipe) -> Result<(), String> {
+        match &recipe.expect {
+            Expectation::Fail(text) => match &self.error {
+                None => Err(format!(
+                    "{}: expected a clean failure containing {text:?}, but the run completed",
+                    recipe.name
+                )),
+                Some(e) if !e.to_string().contains(text.as_str()) => Err(format!(
+                    "{}: error does not mention {text:?}: {e}",
+                    recipe.name
+                )),
+                Some(_) => Ok(()),
+            },
+            expect => {
+                if let Some(e) = &self.error {
+                    return Err(format!("{}: expected completion, got: {e}", recipe.name));
+                }
+                let log = self
+                    .log
+                    .as_ref()
+                    .ok_or_else(|| format!("{}: run produced no log", recipe.name))?;
+                let last = log
+                    .epochs
+                    .last()
+                    .ok_or_else(|| format!("{}: log has no epochs", recipe.name))?;
+                if !last.train_loss.is_finite() {
+                    return Err(format!(
+                        "{}: final loss is not finite ({})",
+                        recipe.name, last.train_loss
+                    ));
+                }
+                let want = match expect {
+                    Expectation::Converge => recipe.spec.n_sites,
+                    Expectation::Degrade(k) => *k,
+                    Expectation::Fail(_) => unreachable!(),
+                };
+                if last.sites_live != want {
+                    return Err(format!(
+                        "{}: expected {want} surviving site(s), final epoch reports {}",
+                        recipe.name, last.sites_live
+                    ));
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+fn invalid(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidInput, msg)
+}
+
+fn millis(ms: u64) -> Option<Duration> {
+    (ms > 0).then(|| Duration::from_millis(ms))
+}
+
+/// One site process, compressed into a thread: dial, learn the handshake
+/// id, arm the read deadline, receive the config, wrap the socket in this
+/// site's chaos schedule, and train.
+fn site_main(addr: String, recipe: Recipe) -> (usize, io::Result<TrainLog>) {
+    let site = match TcpSite::connect_retry(&addr, Duration::from_secs(10)) {
+        Ok(s) => s,
+        Err(e) => return (usize::MAX, Err(e)),
+    };
+    // The handshake assigns ids in accept order, so which *thread* this is
+    // says nothing about which *site* it is — the chaos spec must be
+    // selected by the wire-assigned id or the schedule would be
+    // nondeterministic across runs.
+    let site_id = site.site_id();
+    (site_id, site_run(site, site_id, &recipe))
+}
+
+fn site_run(site: TcpSite, site_id: usize, recipe: &Recipe) -> io::Result<TrainLog> {
+    if let Some(t) = millis(u64::from(recipe.recv_timeout_ms)) {
+        site.set_recv_timeout(Some(t))?;
+    }
+    let mut t: Box<dyn Transport> = Box::new(site);
+    let cfg = RemoteConfig::recv(t.as_mut())?;
+    let chaos = recipe.chaos_for(site_id);
+    if !chaos.is_quiet() {
+        // `paced`: over real sockets the injected delay must be wall-clock
+        // visible or the aggregator's straggler deadline could never fire.
+        t = Box::new(ChaosTransport::paced(t, chaos, site_id as u64));
+    }
+    let scale = Scale::parse(&cfg.scale).unwrap_or(Scale::Quick);
+    let task = build_task(&cfg.dataset, scale, cfg.spec.n_sites, cfg.spec.seed)
+        .map_err(invalid)?
+        .repartition(cfg.partition, cfg.spec.seed);
+    let mut ledger = Ledger::new();
+    match task {
+        TrainTask::Dense { train_ds, shards, model, .. } => {
+            join_training(t.as_mut(), &mut ledger, &cfg.spec, model, &train_ds, &shards, site_id)
+        }
+        TrainTask::Seq { train_ds, shards, model, .. } => {
+            join_training(t.as_mut(), &mut ledger, &cfg.spec, model, &train_ds, &shards, site_id)
+        }
+        TrainTask::Tokens { train_ds, shards, model, .. } => {
+            join_training(t.as_mut(), &mut ledger, &cfg.spec, model, &train_ds, &shards, site_id)
+        }
+    }
+}
+
+/// The aggregator half: bounded handshake, straggler deadline, config
+/// broadcast, then the standard serve loop under the recipe's fault
+/// policy. Owns `agg`, so returning (cleanly or not) closes every site
+/// socket and unblocks the site threads.
+fn serve_main(listener: TcpAggListener, recipe: &Recipe, strict: bool) -> io::Result<TrainLog> {
+    let mut agg: TcpAgg = listener.accept_sites_deadline(millis(recipe.handshake_timeout_ms))?;
+    agg.set_recv_timeout(millis(recipe.straggler_deadline_ms))?;
+    RemoteConfig {
+        spec: recipe.spec.clone(),
+        dataset: recipe.dataset.clone(),
+        scale: recipe.scale.clone(),
+        recv_timeout_ms: recipe.recv_timeout_ms,
+        partition: recipe.partition,
+    }
+    .send(&mut agg)?;
+    let scale = Scale::parse(&recipe.scale).unwrap_or(Scale::Quick);
+    let task = build_task(&recipe.dataset, scale, recipe.spec.n_sites, recipe.spec.seed)
+        .map_err(invalid)?
+        .repartition(recipe.partition, recipe.spec.seed);
+    let policy = if strict { FaultPolicy::strict() } else { FaultPolicy::degrade() };
+    let spec = &recipe.spec;
+    let mut ledger = Ledger::new();
+    match task {
+        TrainTask::Dense { train_ds, test_ds, shards, model } => {
+            serve_training(&mut agg, &mut ledger, spec, model, &train_ds, &shards, &test_ds, policy)
+        }
+        TrainTask::Seq { train_ds, test_ds, shards, model } => {
+            serve_training(&mut agg, &mut ledger, spec, model, &train_ds, &shards, &test_ds, policy)
+        }
+        TrainTask::Tokens { train_ds, test_ds, shards, model } => {
+            serve_training(&mut agg, &mut ledger, spec, model, &train_ds, &shards, &test_ds, policy)
+        }
+    }
+}
+
+/// Run `recipe` start to finish and report what happened — completion
+/// with metrics, or a clean error; never a hang or a panic. `strict`
+/// overrides the recipe's own fault policy (the CLI's `--strict`).
+///
+/// The edAD rejection recipes return their clean error here, *before* any
+/// socket is opened — mirroring `dad serve`'s fail-on-the-operator's-
+/// terminal contract.
+pub fn run_recipe(recipe: &Recipe, strict: bool) -> RecipeReport {
+    let fail = |error: io::Error| RecipeReport {
+        log: None,
+        error: Some(error),
+        site_errors: vec![],
+    };
+    if let Err(e) = validate_dataset_algo(&recipe.dataset, &recipe.spec.algo) {
+        return fail(io::Error::new(io::ErrorKind::Unsupported, e));
+    }
+    if let Err(e) = validate_remote(&recipe.spec) {
+        return fail(e);
+    }
+    let listener = match TcpAgg::bind("127.0.0.1:0", recipe.spec.n_sites) {
+        Ok(l) => l,
+        Err(e) => return fail(e),
+    };
+    let addr = match listener.local_addr() {
+        Ok(a) => a.to_string(),
+        Err(e) => return fail(e),
+    };
+    let handles: Vec<_> = (0..recipe.spec.n_sites)
+        .map(|_| {
+            let addr = addr.clone();
+            let r = recipe.clone();
+            thread::spawn(move || site_main(addr, r))
+        })
+        .collect();
+    let served = serve_main(listener, recipe, strict || recipe.strict);
+    // serve_main dropped the aggregator: surviving site threads now see
+    // closed sockets (or their own recv deadline) and terminate promptly.
+    let mut site_errors = Vec::new();
+    for h in handles {
+        match h.join() {
+            Ok((_, Ok(_))) => {}
+            Ok((site, Err(e))) => site_errors.push((site, e.to_string())),
+            Err(_) => site_errors.push((usize::MAX, "site thread panicked".to_string())),
+        }
+    }
+    match served {
+        Ok(log) => RecipeReport { log: Some(log), error: None, site_errors },
+        Err(e) => RecipeReport { log: None, error: Some(e), site_errors },
+    }
+}

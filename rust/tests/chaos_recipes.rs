@@ -1,0 +1,123 @@
+//! Convergence-or-clean-failure over the whole chaos-recipe registry:
+//! every named scenario runs end-to-end over real localhost sockets and
+//! must land exactly on its declared expectation — completion with all
+//! sites, completion degraded to the declared survivor count, or a clean
+//! `io::Error` naming the cause. No recipe may hang or panic.
+//!
+//! Also covered here: `--strict` turning a degradable loss into a clean
+//! failure that names the lost site, and end-to-end chaos determinism —
+//! two same-seed runs of a fault recipe produce identical loss
+//! trajectories, byte counts and survivor schedules.
+
+use dad::scenario::{find_recipe, named_recipes, run_recipe, Expectation, RecipeReport};
+
+fn run_checked(name: &str) -> RecipeReport {
+    let recipe = find_recipe(name).unwrap_or_else(|| panic!("recipe {name} not in registry"));
+    let report = run_recipe(&recipe, false);
+    if let Err(msg) = report.check(&recipe) {
+        panic!(
+            "{msg}\n  aggregator error: {:?}\n  site errors: {:?}",
+            report.error, report.site_errors
+        );
+    }
+    report
+}
+
+/// Fault-free and delay-only recipes complete with every site alive; the
+/// partition-skew recipe additionally proves uneven shards keep lockstep.
+#[test]
+fn converge_recipes_complete_with_all_sites() {
+    for name in ["clean-dad", "slow-link-dad", "slow-link-rank-dad", "skew-quantity-dad"] {
+        let report = run_checked(name);
+        assert!(
+            report.site_errors.is_empty(),
+            "{name}: healthy run had site errors: {:?}",
+            report.site_errors
+        );
+    }
+}
+
+/// A site disconnecting at a step boundary degrades the run to the
+/// survivors for every algorithm whose exchange follows the sync frame —
+/// the ISSUE's mid-training disconnect acceptance criterion.
+#[test]
+fn mid_drop_recipes_degrade_to_survivors() {
+    for name in ["mid-drop-dad", "mid-drop-dsgd", "mid-drop-rank-dad"] {
+        let report = run_checked(name);
+        // The severed site reports its injected disconnect; survivors
+        // finish without errors, so exactly one site errored.
+        assert_eq!(
+            report.site_errors.len(),
+            1,
+            "{name}: expected exactly the severed site to error: {:?}",
+            report.site_errors
+        );
+        let (site, err) = &report.site_errors[0];
+        assert_eq!(*site, 2, "{name}: wrong site was lost");
+        assert!(err.contains("injected disconnect"), "{name}: {err}");
+    }
+}
+
+/// A site stalling past the aggregator's straggler deadline is retired
+/// and the run continues with the survivors.
+#[test]
+fn straggler_past_deadline_is_retired() {
+    let report = run_checked("straggler-dad");
+    assert!(
+        report.site_errors.iter().any(|(site, _)| *site == 1),
+        "the stalled site should have errored after retirement: {:?}",
+        report.site_errors
+    );
+}
+
+/// Non-recoverable faults fail cleanly — mid-exchange frame loss, a lost
+/// site under an algorithm that cannot shrink its topology, and the two
+/// documented edAD rejections (which fail before any socket opens).
+#[test]
+fn failure_recipes_fail_cleanly_with_named_cause() {
+    for name in ["drop-uplink-dsgd", "mid-drop-dad-p2p", "edad-periodic-reject", "edad-lm-reject"] {
+        let report = run_checked(name);
+        assert!(report.log.is_none(), "{name}: a failing recipe must not produce metrics");
+    }
+    // The topology-bound failure must name the lost site and suggest the
+    // degradable algorithms.
+    let recipe = find_recipe("mid-drop-dad-p2p").unwrap();
+    let report = run_recipe(&recipe, false);
+    let err = report.error.expect("dad-p2p must fail on a lost site").to_string();
+    assert!(err.contains("lost site 2"), "error must name the site: {err}");
+    assert!(err.contains("rank-dad"), "error must point at degradable algorithms: {err}");
+}
+
+/// `--strict` converts a degradable site loss into a clean failure naming
+/// the lost site — the run must not silently continue with survivors.
+#[test]
+fn strict_mode_fails_instead_of_degrading() {
+    let recipe = find_recipe("mid-drop-dad").unwrap();
+    assert_eq!(recipe.expect, Expectation::Degrade(2), "precondition");
+    let report = run_recipe(&recipe, true);
+    assert!(report.log.is_none(), "strict run must not complete");
+    let err = report.error.expect("strict run must fail").to_string();
+    assert!(err.contains("lost site 2"), "strict error must name the site: {err}");
+    assert!(err.contains("strict mode"), "strict error must say why it failed: {err}");
+}
+
+/// End-to-end chaos determinism over real sockets: two runs of the same
+/// fault recipe produce identical loss trajectories, identical uplink /
+/// downlink byte counts, and the identical survivor schedule.
+#[test]
+fn same_seed_fault_runs_are_identical() {
+    let recipe = find_recipe("mid-drop-dad").unwrap();
+    let a = run_recipe(&recipe, false).log.expect("run a");
+    let b = run_recipe(&recipe, false).log.expect("run b");
+    assert_eq!(a.epochs.len(), b.epochs.len());
+    for (e, (x, y)) in a.epochs.iter().zip(&b.epochs).enumerate() {
+        assert_eq!(x.train_loss, y.train_loss, "epoch {e}: loss not reproducible");
+        assert_eq!(x.bytes_up, y.bytes_up, "epoch {e}: uplink bytes not reproducible");
+        assert_eq!(x.bytes_down, y.bytes_down, "epoch {e}: downlink bytes not reproducible");
+        assert_eq!(x.sites_live, y.sites_live, "epoch {e}: survivor schedule not reproducible");
+    }
+    // The degrade happened mid-run, not at the start: epoch 0 already ran
+    // with the survivors (the disconnect lands at step 3 of ~8), and the
+    // CSV's sites_live column records it.
+    assert_eq!(a.epochs.last().unwrap().sites_live, 2);
+}

@@ -15,11 +15,13 @@ use dad::algos::common::DistAlgorithm;
 use dad::algos::{concat_batches, AlgoSpec, StepOutcome};
 use dad::coordinator::{
     build_task, join_training, remote_agg_step, remote_site_step, serve_training, train,
-    validate_dataset_algo, validate_remote, DataSource, RemoteStep, Scale, Schedule, TrainSpec,
-    TrainTask,
+    validate_dataset_algo, validate_remote, DataSource, FaultPolicy, RemoteStep, Scale, Schedule,
+    TrainSpec, TrainTask,
 };
 use dad::data::{mnist_like, split_by_label, TokenDataset};
-use dad::dist::{Cluster, Direction, Ledger, Loopback, TcpAgg, TcpSite};
+use dad::dist::{
+    ChaosSpec, ChaosTransport, Cluster, CostModel, Direction, Ledger, Loopback, TcpAgg, TcpSite,
+};
 use dad::nn::loss::one_hot;
 use dad::nn::model::{Batch, DistModel};
 use dad::nn::{Activation, Mlp, Transformer, TransformerConfig};
@@ -128,8 +130,15 @@ fn tcp_steps<M: DistModel + Clone + Send + 'static>(
     let union_stats = oracle.then(|| model.local_stats(&concat_batches(batches)));
     let agg_outs: Vec<RemoteStep> = (0..steps)
         .map(|_| {
-            remote_agg_step(proto.as_mut(), &mut agg, &mut ledger, model, union_stats.as_ref())
-                .expect("agg step")
+            remote_agg_step(
+                proto.as_mut(),
+                &mut agg,
+                &mut ledger,
+                model,
+                union_stats.as_ref(),
+                FaultPolicy::default(),
+            )
+            .expect("agg step")
         })
         .collect();
     let sites: Vec<SiteRun> = handles.into_iter().map(|h| h.join().expect("site thread")).collect();
@@ -288,9 +297,17 @@ where
     let mut agg = listener.accept_sites().expect("accept");
     let mut ledger = Ledger::new();
     let (train_ds, test_ds, shards, model) = build();
-    let serve_log =
-        serve_training(&mut agg, &mut ledger, spec, model, &train_ds, &shards, &test_ds)
-            .expect("serve");
+    let serve_log = serve_training(
+        &mut agg,
+        &mut ledger,
+        spec,
+        model,
+        &train_ds,
+        &shards,
+        &test_ds,
+        FaultPolicy::default(),
+    )
+    .expect("serve");
 
     let name = spec.algo.name();
     assert_eq!(serve_log.epochs.len(), sim_log.epochs.len());
@@ -406,9 +423,17 @@ fn remote_drivers_reject_edad_for_transformer() {
     let (train_ds, test_ds, shards, model) = build_lm_task(5);
     let mut t = Loopback::new(2);
     let mut ledger = Ledger::new();
-    let err =
-        serve_training(&mut t, &mut ledger, &spec, model.clone(), &train_ds, &shards, &test_ds)
-            .expect_err("serve must reject edad for the transformer");
+    let err = serve_training(
+        &mut t,
+        &mut ledger,
+        &spec,
+        model.clone(),
+        &train_ds,
+        &shards,
+        &test_ds,
+        FaultPolicy::default(),
+    )
+    .expect_err("serve must reject edad for the transformer");
     assert!(err.to_string().contains("edad") || err.to_string().contains("architecture"));
     let err = join_training(&mut t, &mut ledger, &spec, model, &train_ds, &shards, 0)
         .expect_err("join must reject edad for the transformer");
@@ -495,4 +520,193 @@ fn tcp_periodic_schedule_matches_simulated_run() {
     );
     assert!(periodic.total_bytes() < every.total_bytes());
     assert!(periodic.total_bytes() > 0);
+}
+
+// ---------------------------------------------------------------------------
+// Chaos: deterministic fault schedules and pure-delay invisibility
+// ---------------------------------------------------------------------------
+
+/// Property sweep (in-repo forall idiom): for randomized specs and frame
+/// sequences, the fault schedule is a pure function of `(spec, link)` —
+/// byte-identical on every evaluation, and divergent whenever the seed or
+/// the link changes.
+#[test]
+fn chaos_fault_schedules_are_byte_identical_per_seed() {
+    let mut rng = Rng::new(0x5EED_CAFE);
+    for case in 0..32u64 {
+        let seed = rng.next_u64();
+        let spec = ChaosSpec {
+            seed,
+            link_cost: Some(CostModel::custom(1e-3, 1e6 + rng.below(1_000_000) as f64)),
+            jitter_s: 1e-4 + rng.uniform() as f64 * 0.01,
+            drop_every: rng.below(5),
+            ..ChaosSpec::default()
+        };
+        let sizes: Vec<u64> = (0..48).map(|_| 64 + rng.below(1 << 16) as u64).collect();
+        // Same seed, same link, same frames: byte-identical — including
+        // through an independently reconstructed spec value.
+        let twin = spec;
+        assert_eq!(
+            spec.schedule_bytes(case, &sizes),
+            twin.schedule_bytes(case, &sizes),
+            "case {case}: same-seed schedules diverged"
+        );
+        // Seed or link changes re-key the stream: the jittered delays
+        // cannot survive 48 frames unchanged.
+        let reseeded = ChaosSpec { seed: seed ^ 1, ..spec };
+        assert_ne!(
+            spec.schedule_bytes(case, &sizes),
+            reseeded.schedule_bytes(case, &sizes),
+            "case {case}: reseeded schedule did not diverge"
+        );
+        assert_ne!(
+            spec.schedule_bytes(case, &sizes),
+            spec.schedule_bytes(case + 1, &sizes),
+            "case {case}: link id did not re-key the stream"
+        );
+    }
+}
+
+/// Pure-delay chaos (link cost + jitter, no drops or disconnects) wrapped
+/// around the loopback transport must leave the math untouched: grads,
+/// losses, telemetry and the per-(tag, direction) ledger exactly equal to
+/// the clean simulation, with only `chaos_time_s` recording the injected
+/// wire time.
+#[test]
+fn pure_delay_chaos_is_invisible_on_loopback() {
+    let mlp = mk_model(31, &[12, 18, 6]);
+    let batches = mk_batches(2, 5, 12, 6, 77);
+    let chaos = ChaosSpec::delay_only(7, CostModel::wan_federated(), 0.004);
+    assert!(chaos.is_pure_delay() && !chaos.is_quiet());
+    for algo in [
+        AlgoSpec::Dsgd,
+        AlgoSpec::Dad,
+        AlgoSpec::RankDad { max_rank: 4, n_iters: 10, theta: 1e-3 },
+    ] {
+        let name = algo.name();
+        let (clean_outs, clean_ledger) = sim_steps(&algo, &mlp, &batches, 2);
+        let mut cluster = Cluster::replicate(mlp.clone(), 2)
+            .with_transport(Box::new(ChaosTransport::new(Box::new(Loopback::new(2)), chaos, 0)));
+        let mut a = algo.build::<Mlp>();
+        let outs: Vec<StepOutcome> = (0..2).map(|_| a.step(&mut cluster, &batches)).collect();
+        for (s, (clean, delayed)) in clean_outs.iter().zip(&outs).enumerate() {
+            assert_eq!(clean.loss, delayed.loss, "{name} step {s}: loss changed under delay");
+            for (i, g) in clean.grads.iter().enumerate() {
+                assert_eq!(
+                    g.max_abs_diff(&delayed.grads[i]),
+                    0.0,
+                    "{name} step {s}: grad {i} changed under delay"
+                );
+            }
+            assert_eq!(clean.eff_ranks, delayed.eff_ranks, "{name} step {s}: telemetry");
+        }
+        assert_eq!(
+            sorted_rows(&clean_ledger),
+            sorted_rows(&cluster.ledger),
+            "{name}: ledger breakdown changed under pure delay"
+        );
+    }
+}
+
+/// [`tcp_steps`] with every *site* endpoint wrapped in the same pure-delay
+/// [`ChaosSpec`] (accounting mode — the schedule is what matters, not the
+/// sleep). Returns per-site results keyed by handshake id plus each site's
+/// live fault-event byte log.
+fn tcp_steps_delayed<M: DistModel + Clone + Send + 'static>(
+    spec: &AlgoSpec,
+    model: &M,
+    batches: &[Batch],
+    steps: usize,
+    chaos: ChaosSpec,
+) -> (Vec<RemoteStep>, Ledger, Vec<(usize, SiteRun, Vec<u8>)>) {
+    let n_sites = batches.len();
+    let listener = TcpAgg::bind("127.0.0.1:0", n_sites).expect("bind");
+    let addr = listener.local_addr().expect("addr").to_string();
+    let handles: Vec<_> = (0..n_sites)
+        .map(|_| {
+            let addr = addr.clone();
+            let model = model.clone();
+            let batches = batches.to_vec();
+            let spec = spec.clone();
+            thread::spawn(move || {
+                let site = TcpSite::connect(&addr).expect("connect");
+                let site_id = site.site_id();
+                let mut t = ChaosTransport::new(Box::new(site), chaos, site_id as u64);
+                let mut proto = spec.build::<M>().protocol();
+                let mut ledger = Ledger::new();
+                let mut ws = Workspace::new();
+                let batch = batches[site_id].clone();
+                let outs: Vec<RemoteStep> = (0..steps)
+                    .map(|_| {
+                        remote_site_step(
+                            proto.as_mut(),
+                            &mut t,
+                            &mut ledger,
+                            &model,
+                            &batch,
+                            site_id,
+                            &mut ws,
+                        )
+                        .expect("site step")
+                    })
+                    .collect();
+                assert!(t.chaos_time_s > 0.0, "site {site_id}: no delay was accounted");
+                (site_id, (outs, ledger), t.events_bytes())
+            })
+        })
+        .collect();
+    let mut agg = listener.accept_sites().expect("accept");
+    let mut ledger = Ledger::new();
+    let mut proto = spec.build::<M>().protocol();
+    let agg_outs: Vec<RemoteStep> = (0..steps)
+        .map(|_| {
+            remote_agg_step(
+                proto.as_mut(),
+                &mut agg,
+                &mut ledger,
+                model,
+                None,
+                FaultPolicy::default(),
+            )
+            .expect("agg step")
+        })
+        .collect();
+    let mut sites: Vec<(usize, SiteRun, Vec<u8>)> =
+        handles.into_iter().map(|h| h.join().expect("site thread")).collect();
+    sites.sort_by_key(|(id, _, _)| *id);
+    (agg_outs, ledger, sites)
+}
+
+/// The same invisibility guarantee over real TCP sockets, plus schedule
+/// determinism at the live-endpoint level: two identical chaos runs
+/// produce byte-identical per-site fault-event logs, and both match the
+/// clean (chaos-free) run's grads, losses and ledger exactly.
+#[test]
+fn pure_delay_chaos_is_invisible_and_deterministic_over_tcp() {
+    let mlp = mk_model(31, &[12, 18, 6]);
+    let batches = mk_batches(2, 5, 12, 6, 77);
+    let algo = AlgoSpec::Dad;
+    let chaos = ChaosSpec::delay_only(11, CostModel::custom(5e-4, 1e8), 0.002);
+    let (clean_agg, clean_ledger, _) = tcp_steps(&algo, &mlp, &batches, 2);
+    let (agg_a, ledger_a, sites_a) = tcp_steps_delayed(&algo, &mlp, &batches, 2, chaos);
+    let (agg_b, _, sites_b) = tcp_steps_delayed(&algo, &mlp, &batches, 2, chaos);
+    for (s, (clean, delayed)) in clean_agg.iter().zip(&agg_a).enumerate() {
+        assert_eq!(clean.loss, delayed.loss, "step {s}: loss changed under delay");
+        for (i, g) in clean.grads.iter().enumerate() {
+            assert_eq!(g.max_abs_diff(&delayed.grads[i]), 0.0, "step {s}: grad {i}");
+        }
+        assert!(delayed.lost.is_empty(), "pure delay must never retire a site");
+    }
+    assert_eq!(sorted_rows(&clean_ledger), sorted_rows(&ledger_a), "agg ledger breakdown");
+    for ((id_a, (outs_a, l_a), ev_a), (id_b, (outs_b, l_b), ev_b)) in sites_a.iter().zip(&sites_b) {
+        assert_eq!(id_a, id_b);
+        assert!(!ev_a.is_empty(), "site {id_a}: empty fault-event log");
+        assert_eq!(ev_a, ev_b, "site {id_a}: fault schedule not reproducible over TCP");
+        assert_eq!(sorted_rows(l_a), sorted_rows(l_b), "site {id_a}: ledger not reproducible");
+        for (s, (a, b)) in outs_a.iter().zip(outs_b).enumerate() {
+            assert_eq!(a.loss, b.loss, "site {id_a} step {s}: loss not reproducible");
+        }
+    }
+    // Both chaos runs also equal the two per-step losses of the clean
+    // site runs by transitivity through the aggregator checks above.
 }
