@@ -9,6 +9,8 @@
 #   * edad + lm must be REJECTED up front (`dad serve` exits non-zero
 #     with a clear error before binding) — the transformer's attention
 #     has no edAD delta recomputation.
+#   * dgc:abc (a malformed sparse-density argument) must be rejected at
+#     argument parsing on every dataset, before any socket binds.
 #   * rank-dad:* runs must emit per-entry eff_rank_* CSV columns with
 #     finite values (the adaptive-bandwidth telemetry).
 #
@@ -142,6 +144,29 @@ if [ "$ALGO" = "edad" ] && [ "$DATASET" = "lm" ]; then
         exit 1
     fi
     echo "ok(edad,$DATASET): rejected up front with a clear error"
+    exit 0
+fi
+
+# Malformed algorithm arguments must fail fast at parsing — no bind, no
+# training, no metrics — with an error naming the bad spelling.
+if [ "$ALGO" = "dgc:abc" ]; then
+    err_log=$(mktemp)
+    if timeout "$LIMIT" "$BIN" serve --addr "127.0.0.1:${PORT}" --sites 2 --algo "$ALGO" \
+        --dataset "$DATASET" --scale quick --epochs 2 --batch 8 --seed 7 --csv "$CSV" \
+        2>"$err_log"; then
+        echo "FAIL($ALGO,$DATASET): serve must reject a malformed dgc density"
+        exit 1
+    fi
+    grep -qi "dgc" "$err_log" || {
+        echo "FAIL($ALGO,$DATASET): rejection error does not mention dgc:"
+        cat "$err_log"
+        exit 1
+    }
+    if [ -s "$CSV" ]; then
+        echo "FAIL($ALGO,$DATASET): rejected run must not write metrics"
+        exit 1
+    fi
+    echo "ok($ALGO,$DATASET): malformed density rejected up front with a clear error"
     exit 0
 fi
 

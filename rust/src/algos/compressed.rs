@@ -251,8 +251,9 @@ impl<M: DistModel> DistAlgorithm<M> for PowerSgd {
     }
 }
 
-/// Bias-gradient exchange shared by the compressed algorithms.
-fn exchange_bias<M>(
+/// Bias-gradient exchange shared by the compressed and sparsified
+/// algorithms.
+pub(crate) fn exchange_bias<M>(
     cluster: &mut Cluster<M>,
     per_site: &[crate::nn::stats::LocalStats],
     ei: usize,
@@ -270,7 +271,7 @@ fn exchange_bias<M>(
     bsum
 }
 
-fn bytes_now<M>(cluster: &Cluster<M>) -> (u64, u64) {
+pub(crate) fn bytes_now<M>(cluster: &Cluster<M>) -> (u64, u64) {
     use crate::dist::Direction;
     (
         cluster.ledger.total_dir(Direction::SiteToAgg),

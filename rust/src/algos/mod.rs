@@ -11,6 +11,12 @@
 //! | `edad`      | exact (Algorithm 2)       | N h_i (+ Δ_L once) |
 //! | `rank-dad`  | low-rank, adaptive (§3.4) | r_eff (h_i + h_{i+1}), r_eff <= r |
 //! | `powersgd`  | low-rank, fixed (baseline)| r (h_i + h_{i+1}) |
+//! | `dgc:k`     | sparse top-k + momentum-corrected error feedback | 2 (k/100) h_i h_{i+1} |
+//! | `vbc`       | sparse, variance-gated + error feedback          | 2 k_t h_i h_{i+1}, k_t adaptive |
+//! | `adacomp`   | sparse, bin-thresholded + error feedback         | 2 k_t h_i h_{i+1}, k_t adaptive |
+//!
+//! (The sparse rows' factor 2 is the honest u32-index overhead: each
+//! transmitted element ships 8 wire bytes, two f32-equivalents.)
 //!
 //! Every spelling accepted by [`AlgoSpec::parse`] (and therefore by the
 //! CLI's `--algo`) appears above; keep the three in sync.
@@ -20,6 +26,7 @@ pub mod compressed;
 pub mod exact;
 pub mod p2p;
 pub mod protocol;
+pub mod sparsified;
 
 pub use common::{concat_batches, DistAlgorithm, StepOutcome};
 pub use compressed::{PowerSgd, PowerSgdProtocol, RankDad, RankDadConfig, RankDadProtocol};
@@ -28,6 +35,7 @@ pub use exact::{
 };
 pub use p2p::{DadP2p, DadP2pProtocol};
 pub use protocol::{AggExchange, Endpoint, StepMeta, StepProtocol, StepSync};
+pub use sparsified::{SparseAlgo, SparseProtocol, SparseRule};
 
 use crate::nn::model::DistModel;
 
@@ -57,6 +65,21 @@ pub enum AlgoSpec {
     PowerSgd {
         /// Compression rank.
         rank: usize,
+    },
+    /// Deep Gradient Compression: momentum-corrected top-k sparsification.
+    Dgc {
+        /// Transmitted percentage of elements per entry, in (0, 100].
+        density: f32,
+    },
+    /// Variance-based compression: transmit batch-significant elements.
+    Vbc {
+        /// Significance threshold λ >= 0 (0 transmits everything).
+        lambda: f32,
+    },
+    /// AdaComp: bin-local self-adjusting sparsification threshold.
+    AdaComp {
+        /// Bin size in elements (1 = per-element bins = full density).
+        bin: usize,
     },
 }
 
@@ -96,9 +119,55 @@ impl AlgoSpec {
                 Ok(AlgoSpec::RankDad { max_rank: rank(10)?, n_iters: 10, theta: 1e-3 })
             }
             "powersgd" | "power-sgd" => Ok(AlgoSpec::PowerSgd { rank: rank(10)? }),
+            "dgc" => {
+                let density = match arg {
+                    None => 1.0,
+                    Some(a) => match a.parse::<f32>() {
+                        Ok(d) if d > 0.0 && d <= 100.0 => d,
+                        _ => {
+                            return Err(format!(
+                                "density argument {a:?} for \"dgc\" must be a percentage \
+                                 in (0, 100] (e.g. dgc:25)"
+                            ))
+                        }
+                    },
+                };
+                Ok(AlgoSpec::Dgc { density })
+            }
+            "vbc" => {
+                let lambda = match arg {
+                    None => 2.0,
+                    Some(a) => match a.parse::<f32>() {
+                        Ok(l) if l >= 0.0 && l.is_finite() => l,
+                        _ => {
+                            return Err(format!(
+                                "lambda argument {a:?} for \"vbc\" must be a finite \
+                                 non-negative number (e.g. vbc:2)"
+                            ))
+                        }
+                    },
+                };
+                Ok(AlgoSpec::Vbc { lambda })
+            }
+            "adacomp" | "ada-comp" => {
+                let bin = match arg {
+                    None => 512,
+                    Some(a) => match a.parse::<usize>() {
+                        Ok(b) if b >= 1 => b,
+                        _ => {
+                            return Err(format!(
+                                "bin argument {a:?} for {name:?} must be a positive \
+                                 integer bin size (e.g. adacomp:512)"
+                            ))
+                        }
+                    },
+                };
+                Ok(AlgoSpec::AdaComp { bin })
+            }
             other => Err(format!(
                 "unknown algorithm {other:?} \
-                 (pooled | dsgd | dad | dad-p2p | edad | rank-dad[:r] | powersgd[:r])"
+                 (pooled | dsgd | dad | dad-p2p | edad | rank-dad[:r] | powersgd[:r] | \
+                 dgc[:k%] | vbc[:lambda] | adacomp[:bin])"
             )),
         }
     }
@@ -115,6 +184,9 @@ impl AlgoSpec {
                 Box::new(RankDad { cfg: RankDadConfig { max_rank, n_iters, theta } })
             }
             AlgoSpec::PowerSgd { rank } => Box::new(PowerSgd::new(rank)),
+            AlgoSpec::Dgc { density } => Box::new(SparseAlgo::dgc(density)),
+            AlgoSpec::Vbc { lambda } => Box::new(SparseAlgo::vbc(lambda)),
+            AlgoSpec::AdaComp { bin } => Box::new(SparseAlgo::adacomp(bin)),
         }
     }
 
@@ -128,6 +200,9 @@ impl AlgoSpec {
             AlgoSpec::Edad => "edad".into(),
             AlgoSpec::RankDad { max_rank, .. } => format!("rank-dad:{max_rank}"),
             AlgoSpec::PowerSgd { rank } => format!("powersgd:{rank}"),
+            AlgoSpec::Dgc { density } => format!("dgc:{density}"),
+            AlgoSpec::Vbc { lambda } => format!("vbc:{lambda}"),
+            AlgoSpec::AdaComp { bin } => format!("adacomp:{bin}"),
         }
     }
 }
@@ -280,6 +355,20 @@ mod tests {
         assert_eq!(AlgoSpec::parse("powersgd:2"), Ok(AlgoSpec::PowerSgd { rank: 2 }));
         assert!(AlgoSpec::parse("nope").is_err());
         assert_eq!(AlgoSpec::parse("rank-dad:4").unwrap().name(), "rank-dad:4");
+        // The sparse family, with and without arguments (defaults: DGC at
+        // 1% density, VBC at λ=2, AdaComp with 512-element bins).
+        assert_eq!(AlgoSpec::parse("dgc"), Ok(AlgoSpec::Dgc { density: 1.0 }));
+        assert_eq!(AlgoSpec::parse("dgc:25"), Ok(AlgoSpec::Dgc { density: 25.0 }));
+        assert_eq!(AlgoSpec::parse("dgc:0.5"), Ok(AlgoSpec::Dgc { density: 0.5 }));
+        assert_eq!(AlgoSpec::parse("vbc"), Ok(AlgoSpec::Vbc { lambda: 2.0 }));
+        assert_eq!(AlgoSpec::parse("vbc:0"), Ok(AlgoSpec::Vbc { lambda: 0.0 }));
+        assert_eq!(AlgoSpec::parse("adacomp"), Ok(AlgoSpec::AdaComp { bin: 512 }));
+        assert_eq!(AlgoSpec::parse("adacomp:64"), Ok(AlgoSpec::AdaComp { bin: 64 }));
+        // Canonical names round-trip through parse.
+        for spelling in ["dgc:25", "dgc:0.5", "vbc:2", "adacomp:512"] {
+            let spec = AlgoSpec::parse(spelling).unwrap();
+            assert_eq!(AlgoSpec::parse(&spec.name()), Ok(spec));
+        }
     }
 
     /// Malformed `:rank` arguments are parse errors, not a silent fallback
@@ -298,6 +387,21 @@ mod tests {
         assert_eq!(AlgoSpec::parse("dadp2p"), Ok(AlgoSpec::DadP2p));
         assert_eq!(AlgoSpec::parse("rankdad:3"), AlgoSpec::parse("rank-dad:3"));
         assert_eq!(AlgoSpec::parse("power-sgd:2"), AlgoSpec::parse("powersgd:2"));
+        assert_eq!(AlgoSpec::parse("ada-comp:64"), AlgoSpec::parse("adacomp:64"));
+        // Sparse-family malformed arguments are hard errors too: `dgc:abc`
+        // must refuse to train, not fall back to the default density.
+        assert!(AlgoSpec::parse("dgc:abc").is_err());
+        assert!(AlgoSpec::parse("dgc:0").is_err());
+        assert!(AlgoSpec::parse("dgc:-5").is_err());
+        assert!(AlgoSpec::parse("dgc:101").is_err());
+        assert!(AlgoSpec::parse("dgc:").is_err());
+        assert!(AlgoSpec::parse("vbc:-1").is_err());
+        assert!(AlgoSpec::parse("vbc:nan").is_err());
+        assert!(AlgoSpec::parse("vbc:inf").is_err());
+        assert!(AlgoSpec::parse("vbc:x").is_err());
+        assert!(AlgoSpec::parse("adacomp:0").is_err());
+        assert!(AlgoSpec::parse("adacomp:1.5").is_err());
+        assert!(AlgoSpec::parse("adacomp:abc").is_err());
     }
 
     /// Transformer path: dAD == pooled on token batches with **uneven**

@@ -30,7 +30,7 @@
 
 use std::io;
 
-use crate::dist::wire::{proto_err, Body, ByteReader, ByteWriter, Frame};
+use crate::dist::wire::{proto_err, Body, ByteReader, ByteWriter, Frame, SparseMat};
 use crate::dist::{Direction, Ledger, Transport};
 use crate::nn::model::DistModel;
 use crate::nn::stats::LocalStats;
@@ -63,13 +63,30 @@ impl<'a> Endpoint<'a> {
         Ok(())
     }
 
+    /// Site round: ship a tagged sparse payload frame up to the aggregator
+    /// (priced with its u32-index overhead).
+    pub fn up_sparse(&mut self, tag: &str, mats: &[&SparseMat]) -> io::Result<()> {
+        let n = self.t.ship_sparse(Direction::SiteToAgg, tag, mats)?;
+        self.ledger.record(tag, Direction::SiteToAgg, n);
+        Ok(())
+    }
+
     /// Site round: receive the next broadcast payload frame.
     pub fn down(&mut self, tag: &str) -> io::Result<Vec<Matrix>> {
         let f = self.t.recv_broadcast()?;
-        if matches!(f.body, Body::Mats(_)) {
+        if f.kind() == crate::dist::wire::FrameKind::Payload {
             self.ledger.record(&f.tag, Direction::AggToSite, f.wire_len());
         }
         expect_mats(f, tag)
+    }
+
+    /// Site round: receive the next broadcast sparse payload frame.
+    pub fn down_sparse(&mut self, tag: &str) -> io::Result<Vec<SparseMat>> {
+        let f = self.t.recv_broadcast()?;
+        if f.kind() == crate::dist::wire::FrameKind::Payload {
+            self.ledger.record(&f.tag, Direction::AggToSite, f.wire_len());
+        }
+        expect_sparse(f, tag)
     }
 
     /// Site round: receive a single-matrix broadcast payload frame.
@@ -80,10 +97,19 @@ impl<'a> Endpoint<'a> {
     /// Aggregator round: receive the next payload frame `site` sent up.
     pub fn gather(&mut self, site: usize, tag: &str) -> io::Result<Vec<Matrix>> {
         let f = self.t.recv_from_site(site)?;
-        if matches!(f.body, Body::Mats(_)) {
+        if f.kind() == crate::dist::wire::FrameKind::Payload {
             self.ledger.record(&f.tag, Direction::SiteToAgg, f.wire_len());
         }
         expect_mats(f, tag)
+    }
+
+    /// Aggregator round: receive the next sparse payload frame from `site`.
+    pub fn gather_sparse(&mut self, site: usize, tag: &str) -> io::Result<Vec<SparseMat>> {
+        let f = self.t.recv_from_site(site)?;
+        if f.kind() == crate::dist::wire::FrameKind::Payload {
+            self.ledger.record(&f.tag, Direction::SiteToAgg, f.wire_len());
+        }
+        expect_sparse(f, tag)
     }
 
     /// Aggregator round: receive a single-matrix uplink frame from `site`.
@@ -95,6 +121,14 @@ impl<'a> Endpoint<'a> {
     /// (counted once — the down-link is a shared multicast).
     pub fn bcast(&mut self, tag: &str, mats: &[&Matrix]) -> io::Result<()> {
         let n = self.t.ship(Direction::AggToSite, tag, mats)?;
+        self.ledger.record(tag, Direction::AggToSite, n);
+        Ok(())
+    }
+
+    /// Aggregator round: broadcast a tagged sparse payload frame to every
+    /// site (counted once, index overhead included).
+    pub fn bcast_sparse(&mut self, tag: &str, mats: &[&SparseMat]) -> io::Result<()> {
+        let n = self.t.ship_sparse(Direction::AggToSite, tag, mats)?;
         self.ledger.record(tag, Direction::AggToSite, n);
         Ok(())
     }
@@ -127,7 +161,7 @@ impl<'a> Endpoint<'a> {
     /// blocking single-threaded hub deadlock-free at any payload size.
     pub fn p2p_pull(&mut self, site: usize) -> io::Result<Frame> {
         let f = self.t.recv_from_site(site)?;
-        if matches!(f.body, Body::Mats(_)) {
+        if f.kind() == crate::dist::wire::FrameKind::Payload {
             let peers = self.t.n_sites().saturating_sub(1) as u64;
             self.ledger.record(&f.tag, Direction::PeerToPeer, f.wire_len() * peers);
         }
@@ -181,6 +215,13 @@ pub(crate) fn expect_mats(f: Frame, want: &str) -> io::Result<Vec<Matrix>> {
     match f.body {
         Body::Mats(m) if f.tag == want => Ok(m),
         _ => Err(proto_err(format!("expected payload frame {want:?}, got {:?}", f.tag))),
+    }
+}
+
+pub(crate) fn expect_sparse(f: Frame, want: &str) -> io::Result<Vec<SparseMat>> {
+    match f.body {
+        Body::Sparse(m) if f.tag == want => Ok(m),
+        _ => Err(proto_err(format!("expected sparse frame {want:?}, got {:?}", f.tag))),
     }
 }
 
@@ -378,7 +419,9 @@ pub trait StepProtocol<M: DistModel>: Send {
     /// sites were retired mid-run (the degraded mode of
     /// `coordinator::remote::serve_training`). Requires the site half to be
     /// shaped only by the sync frame — never by a site count captured at
-    /// startup. dAD, dSGD, rank-dAD and the pooled oracle qualify; edAD
+    /// startup. dAD, dSGD, rank-dAD, the pooled oracle and the sparse
+    /// family (DGC / VBC / AdaComp, whose residual state is per-site and
+    /// whose scale comes from the sync frame) qualify; edAD
     /// (weight-coupled delta recomputation), dad-p2p (mesh membership) and
     /// PowerSGD (site half scales means by the startup `n_sites`) do not,
     /// so a lost site fails those runs cleanly instead.

@@ -493,9 +493,12 @@ pub struct LmRow {
 
 /// The paper's §5.3.2 transformer claim, measured in the ledger: train the
 /// decoder-only LM with the gradient-centric baselines (dSGD full
-/// gradients; PowerSGD compressed gradients, Vogels et al. 2019) and the
-/// statistics-shipping family (dAD; rank-dAD), and record loss/perplexity
-/// next to the *actual serialized bytes* each ships. dAD ships
+/// gradients; PowerSGD compressed gradients, Vogels et al. 2019; the
+/// sparse top-k family — DGC, Lin et al. 2017; variance-based, Tsuzuku et
+/// al. 2018; AdaComp, Chen et al. 2017) and the statistics-shipping family
+/// (dAD; rank-dAD), and record loss/perplexity next to the *actual
+/// serialized bytes* each ships — sparse frames priced at 8 bytes per
+/// transmitted element (u32 index + f32 value). dAD ships
 /// (B·T)×(h_in+h_out) stacks per projection vs. dSGD's h_in·h_out weight
 /// gradients, so its advantage is exactly the `B·T < layer width` regime
 /// — see EXPERIMENTS.md §LM for the per-config crossover math.
@@ -510,6 +513,9 @@ pub fn lm_comparison(scale: Scale) -> Vec<LmRow> {
         AlgoSpec::Dad,
         AlgoSpec::RankDad { max_rank: 4, n_iters: 10, theta: 1e-3 },
         AlgoSpec::PowerSgd { rank: 4 },
+        AlgoSpec::Dgc { density: 25.0 },
+        AlgoSpec::Vbc { lambda: 2.0 },
+        AlgoSpec::AdaComp { bin: 512 },
     ];
     let mut csv = CsvWriter::create(
         "results/lm_bandwidth.csv",

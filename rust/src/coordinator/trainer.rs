@@ -887,6 +887,39 @@ mod tests {
         }
     }
 
+    /// lr = 0 must be a no-op for the sparse error-feedback protocols
+    /// too: their residual (and, for DGC, momentum) state may churn
+    /// internally, but with a zero step size the evaluated parameters
+    /// never move, so every epoch reports bit-identical test metrics on
+    /// the frozen model. (train_loss can drift slightly with the epoch's
+    /// shuffled batch grouping; the test metrics cannot.)
+    #[test]
+    fn sparse_protocols_with_zero_lr_freeze_the_model() {
+        let mut rng = Rng::new(12);
+        let full = mnist_like(260, &mut rng);
+        let train_ds = full.subset(&(0..200).collect::<Vec<_>>());
+        let test_ds = full.subset(&(200..260).collect::<Vec<_>>());
+        let shards = split_by_label(&train_ds.labels, 10, 2);
+        for algo in [
+            AlgoSpec::Dgc { density: 25.0 },
+            AlgoSpec::Vbc { lambda: 2.0 },
+            AlgoSpec::AdaComp { bin: 64 },
+        ] {
+            let name = algo.name();
+            let mut s = spec(algo, 3);
+            s.lr = 0.0;
+            let log = train(small_mlp(5), &s, &train_ds, &shards, &test_ds);
+            let first = &log.epochs[0];
+            for e in &log.epochs[1..] {
+                assert_eq!(e.test_auc, first.test_auc, "{name} moved params under lr=0");
+                assert_eq!(e.test_acc, first.test_acc, "{name} moved params under lr=0");
+            }
+            // The no-op is an optimizer property, not silence on the wire:
+            // the protocols still exchange their sparse frames every step.
+            assert!(log.epochs.iter().all(|e| e.bytes_up > 0), "{name} shipped nothing");
+        }
+    }
+
     /// The lm task trains end-to-end through the generic trainer: loss
     /// falls and the token-aware evaluation reports finite per-token
     /// accuracy and perplexity (better than the uniform model's = vocab).

@@ -196,6 +196,28 @@ impl<M> Cluster<M> {
         self.sim_time_s += self.cost.time_for(bytes, 1);
     }
 
+    /// One site ships a sparse `payload` (u32 index + f32 value pairs) up
+    /// to the aggregator; ledger bytes include the index overhead.
+    pub fn send_to_agg_sparse(&mut self, tag: &str, payload: &[&wire::SparseMat]) {
+        let bytes = self
+            .transport
+            .ship_sparse(Direction::SiteToAgg, tag, payload)
+            .expect("transport failed on the site->aggregator link");
+        self.ledger.record(tag, Direction::SiteToAgg, bytes);
+        self.sim_time_s += self.cost.time_for(bytes, 1);
+    }
+
+    /// The aggregator broadcasts a sparse `payload` to every site; like
+    /// [`Cluster::broadcast`], counted and timed once (shared multicast).
+    pub fn broadcast_sparse(&mut self, tag: &str, payload: &[&wire::SparseMat]) {
+        let bytes = self
+            .transport
+            .ship_sparse(Direction::AggToSite, tag, payload)
+            .expect("transport failed on the aggregator->site link");
+        self.ledger.record(tag, Direction::AggToSite, bytes);
+        self.sim_time_s += self.cost.time_for(bytes, 1);
+    }
+
     /// One site ships `payload` to each of its S-1 peers (no aggregator).
     /// Bytes scale with the peer count; simulated time does not, because the
     /// S-1 unicasts leave on independent links in parallel.

@@ -341,6 +341,23 @@ impl Transport for ChaosTransport {
         self.inner_mut()?.ship(dir, tag, mats)
     }
 
+    fn ship_sparse(
+        &mut self,
+        dir: Direction,
+        tag: &str,
+        mats: &[&wire::SparseMat],
+    ) -> io::Result<u64> {
+        let bytes = wire::sparse_wire_len(tag, mats);
+        let ev = self.frame_event(bytes)?;
+        if ev.drop {
+            return Ok(match dir {
+                Direction::PeerToPeer => bytes * self.n_sites.saturating_sub(1) as u64,
+                _ => bytes,
+            });
+        }
+        self.inner_mut()?.ship_sparse(dir, tag, mats)
+    }
+
     fn ship_control(&mut self, dir: Direction, tag: &str, body: &[u8]) -> io::Result<u64> {
         if tag == "step-meta" {
             self.step_gate()?;

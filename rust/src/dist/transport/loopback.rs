@@ -50,6 +50,15 @@ impl Transport for Loopback {
         Ok(wire::payload_wire_len(tag, mats) * self.fanout(dir))
     }
 
+    fn ship_sparse(
+        &mut self,
+        dir: Direction,
+        tag: &str,
+        mats: &[&wire::SparseMat],
+    ) -> io::Result<u64> {
+        Ok(wire::sparse_wire_len(tag, mats) * self.fanout(dir))
+    }
+
     fn ship_control(&mut self, dir: Direction, tag: &str, body: &[u8]) -> io::Result<u64> {
         Ok(wire::control_wire_len(tag, body) * self.fanout(dir))
     }

@@ -33,7 +33,7 @@ pub use tcp::{is_link_failure, TcpAgg, TcpAggListener, TcpSite};
 use std::io;
 
 use crate::dist::ledger::Direction;
-use crate::dist::wire::Frame;
+use crate::dist::wire::{Frame, SparseMat};
 use crate::tensor::Matrix;
 
 fn unsupported(endpoint: &'static str, op: &'static str) -> io::Error {
@@ -59,6 +59,14 @@ pub trait Transport: Send {
 
     /// Move a tagged payload frame along `dir`; returns ledger bytes.
     fn ship(&mut self, dir: Direction, tag: &str, mats: &[&Matrix]) -> io::Result<u64>;
+
+    /// Move a tagged sparse payload frame (u32 index + f32 value pairs)
+    /// along `dir`; returns ledger bytes including the index overhead.
+    /// Backends that predate the sparse family refuse with `Unsupported`.
+    fn ship_sparse(&mut self, dir: Direction, tag: &str, mats: &[&SparseMat]) -> io::Result<u64> {
+        let _ = (dir, tag, mats);
+        Err(unsupported(self.name(), "ship_sparse"))
+    }
 
     /// Move a control frame along `dir`; returns wire bytes (control
     /// traffic is protocol overhead and is *not* recorded in the ledger).

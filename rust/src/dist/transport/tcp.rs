@@ -221,6 +221,25 @@ impl Transport for TcpAgg {
         }
     }
 
+    fn ship_sparse(
+        &mut self,
+        dir: Direction,
+        tag: &str,
+        mats: &[&wire::SparseMat],
+    ) -> io::Result<u64> {
+        match dir {
+            Direction::AggToSite => {
+                let mut counted = 0;
+                for l in &mut self.links {
+                    counted = wire::encode_sparse(&mut l.w, tag, mats)?;
+                    l.w.flush()?;
+                }
+                Ok(counted) // multicast down-link: counted once
+            }
+            _ => Err(unsupported("tcp-agg", "non-broadcast ship_sparse")),
+        }
+    }
+
     fn ship_control(&mut self, dir: Direction, tag: &str, body: &[u8]) -> io::Result<u64> {
         match dir {
             Direction::AggToSite => {
@@ -382,6 +401,22 @@ impl Transport for TcpSite {
         }
     }
 
+    fn ship_sparse(
+        &mut self,
+        dir: Direction,
+        tag: &str,
+        mats: &[&wire::SparseMat],
+    ) -> io::Result<u64> {
+        match dir {
+            Direction::SiteToAgg => {
+                let n = wire::encode_sparse(&mut self.link.w, tag, mats)?;
+                self.link.w.flush()?;
+                Ok(n)
+            }
+            _ => Err(unsupported("tcp-site", "non-uplink ship_sparse")),
+        }
+    }
+
     fn ship_control(&mut self, dir: Direction, tag: &str, body: &[u8]) -> io::Result<u64> {
         match dir {
             Direction::SiteToAgg => {
@@ -421,7 +456,7 @@ mod tests {
                     assert_eq!(down.tag, "sum");
                     match down.body {
                         Body::Mats(ms) => ms[0][(0, 0)],
-                        Body::Control(_) => panic!("wrong kind"),
+                        _ => panic!("wrong kind"),
                     }
                 })
             })
@@ -438,7 +473,7 @@ mod tests {
                     assert_eq!(ms[0][(0, 0)], site as f32);
                     total += ms[0][(0, 0)];
                 }
-                Body::Control(_) => panic!("wrong kind"),
+                _ => panic!("wrong kind"),
             }
         }
         let sum = Matrix::filled(1, 1, total);

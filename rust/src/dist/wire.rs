@@ -6,10 +6,13 @@
 //! ```text
 //! u32  frame length (little-endian; bytes after this prefix)
 //! u8   codec version (WIRE_VERSION)
-//! u8   frame kind    (0 = control, 1 = payload)
+//! u8   frame kind    (0 = control, 1 = payload, 2 = sparse payload)
 //! u8   tag length; tag bytes (UTF-8: "acts", "deltas", "direct-grad", ...)
 //! kind = payload: u16 matrix count, then per matrix
 //!                 u32 rows, u32 cols, rows*cols f32 little-endian values
+//! kind = sparse:  u16 matrix count, then per matrix
+//!                 u32 rows, u32 cols, u32 nnz, nnz u32 element indices
+//!                 (row-major, strictly increasing), nnz f32 values
 //! kind = control: raw body bytes (ByteWriter/ByteReader field streams)
 //! ```
 //!
@@ -38,6 +41,7 @@
 //! | `grad` | payload | dSGD full gradients |
 //! | `lowrank-q`, `lowrank-g` | payload | rank-dAD factor pairs |
 //! | `psgd-p`, `psgd-q` | payload | PowerSGD factor pairs (P, Q) |
+//! | `sparse-grad` | sparse | DGC / VBC / AdaComp top-k weight updates |
 //! | `bias-grad`, `direct-grad` | payload | non-outer-product gradients |
 //! | `hello`, `welcome`, `config` | control | transport + run handshake |
 //! | `step-meta`, `step-sync` | control | per-step prologue |
@@ -52,9 +56,11 @@ use crate::tensor::Matrix;
 /// when the `config` control frame gained the sync-schedule field (and
 /// the step prologue gained `step-meta.n_aux`); to 3 when `config` gained
 /// the site recv-timeout and partition-override fields (the chaos/fault
-/// layer). A peer from an older build dialing a newer endpoint fails
-/// cleanly at the handshake instead of mid-run.
-pub const WIRE_VERSION: u8 = 3;
+/// layer); to 4 when frame kind 2 (sparse payload: u32 index + f32 value
+/// pairs for DGC/VBC/AdaComp) was added. A peer from an older build
+/// dialing a newer endpoint fails cleanly at the handshake instead of
+/// mid-run.
+pub const WIRE_VERSION: u8 = 4;
 
 /// Upper bound on one frame's post-prefix length (1 GiB): a decoder sanity
 /// check against corrupt or hostile length prefixes.
@@ -76,6 +82,98 @@ pub enum Body {
     Control(Vec<u8>),
     /// Payload body: the matrices that crossed the link.
     Mats(Vec<Matrix>),
+    /// Sparse payload body: (index, value) pairs over a dense shape.
+    Sparse(Vec<SparseMat>),
+}
+
+/// A sparse matrix on the wire: explicit (element index, value) pairs over
+/// a dense `rows x cols` shape. Indices are row-major element offsets and
+/// must be strictly increasing — the decoder rejects out-of-range,
+/// duplicate and unsorted indices as `InvalidData`, so a frame that decodes
+/// is always safe to scatter. Each nonzero costs 8 bytes (u32 index + f32
+/// value): the index overhead the Ledger charges so sparse bandwidth
+/// numbers are honest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseMat {
+    /// Dense row count of the matrix this sparsifies.
+    pub rows: usize,
+    /// Dense column count.
+    pub cols: usize,
+    /// Row-major element offsets of the nonzeros, strictly increasing.
+    pub idx: Vec<u32>,
+    /// The nonzero values, parallel to `idx`.
+    pub vals: Vec<f32>,
+}
+
+impl SparseMat {
+    /// Collect every element of `m` whose row-major offset is in `keep`
+    /// (which must be strictly increasing — the protocol builders produce
+    /// sorted index sets).
+    pub fn from_dense(m: &Matrix, keep: &[u32]) -> Self {
+        let data = m.data();
+        let vals = keep.iter().map(|&i| data[i as usize]).collect();
+        SparseMat { rows: m.rows(), cols: m.cols(), idx: keep.to_vec(), vals }
+    }
+
+    /// Number of transmitted nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.idx.len()
+    }
+
+    /// Serialized body bytes for this matrix: dims + nnz header plus
+    /// 8 bytes per nonzero.
+    pub fn wire_bytes(&self) -> u64 {
+        12 + 8 * self.idx.len() as u64
+    }
+
+    /// Materialize as a dense matrix (zeros at untransmitted positions).
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.rows, self.cols);
+        self.scatter_add(&mut m);
+        m
+    }
+
+    /// Add each nonzero into the matching element of `dst` (shape must
+    /// agree). The aggregator reduces per-site sparse contributions this
+    /// way, in site order, so the f32 add sequence is deterministic.
+    pub fn scatter_add(&self, dst: &mut Matrix) {
+        assert_eq!(dst.shape(), (self.rows, self.cols), "sparse scatter shape mismatch");
+        let data = dst.data_mut();
+        for (&i, &v) in self.idx.iter().zip(&self.vals) {
+            data[i as usize] += v;
+        }
+    }
+
+    /// Decode-side structural checks: parallel arrays, strictly increasing
+    /// indices (no duplicates), everything inside `rows * cols`.
+    fn validate(&self) -> io::Result<()> {
+        if self.idx.len() != self.vals.len() {
+            return Err(proto_err(format!(
+                "sparse frame: {} indices but {} values",
+                self.idx.len(),
+                self.vals.len()
+            )));
+        }
+        let numel = self.rows * self.cols;
+        let mut last: Option<u32> = None;
+        for &i in &self.idx {
+            if i as usize >= numel {
+                return Err(proto_err(format!(
+                    "sparse index {i} out of range for {}x{} matrix",
+                    self.rows, self.cols
+                )));
+            }
+            if let Some(prev) = last {
+                if i <= prev {
+                    return Err(proto_err(format!(
+                        "sparse indices not strictly increasing: {prev} then {i}"
+                    )));
+                }
+            }
+            last = Some(i);
+        }
+        Ok(())
+    }
 }
 
 /// One decoded frame, as produced by [`decode`].
@@ -88,11 +186,12 @@ pub struct Frame {
 }
 
 impl Frame {
-    /// Which frame family this is.
+    /// Which frame family this is. Sparse frames are payload: they carry
+    /// model statistics and enter the ledger like dense payload frames.
     pub fn kind(&self) -> FrameKind {
         match self.body {
             Body::Control(_) => FrameKind::Control,
-            Body::Mats(_) => FrameKind::Payload,
+            Body::Mats(_) | Body::Sparse(_) => FrameKind::Payload,
         }
     }
 
@@ -104,6 +203,10 @@ impl Frame {
             Body::Mats(ms) => {
                 let refs: Vec<&Matrix> = ms.iter().collect();
                 payload_wire_len(&self.tag, &refs)
+            }
+            Body::Sparse(ms) => {
+                let refs: Vec<&SparseMat> = ms.iter().collect();
+                sparse_wire_len(&self.tag, &refs)
             }
         }
     }
@@ -118,6 +221,15 @@ fn header_len(tag: &str) -> u64 {
 /// without serializing — the loopback backend's whole cost model.
 pub fn payload_wire_len(tag: &str, mats: &[&Matrix]) -> u64 {
     let bodies: u64 = mats.iter().map(|m| 8 + m.wire_bytes()).sum();
+    header_len(tag) + 2 + bodies
+}
+
+/// Exact encoded size of a sparse payload frame (prefix included),
+/// computed without serializing — the loopback backend's cost model for
+/// sparse shipments. Counts the u32 index alongside each f32 value, so
+/// the "compressed" byte totals include their addressing overhead.
+pub fn sparse_wire_len(tag: &str, mats: &[&SparseMat]) -> u64 {
+    let bodies: u64 = mats.iter().map(|m| m.wire_bytes()).sum();
     header_len(tag) + 2 + bodies
 }
 
@@ -156,6 +268,40 @@ pub fn encode_payload<W: Write>(w: &mut W, tag: &str, mats: &[&Matrix]) -> io::R
     Ok(total)
 }
 
+/// Encode one sparse payload frame into `w`; returns the bytes written
+/// (which always equals [`sparse_wire_len`]). Callers must hand over
+/// strictly increasing in-range indices — the same invariant `decode`
+/// enforces — so loopback and TCP runs ship identical frames.
+pub fn encode_sparse<W: Write>(w: &mut W, tag: &str, mats: &[&SparseMat]) -> io::Result<u64> {
+    assert!(tag.len() <= u8::MAX as usize, "frame tag too long: {tag:?}");
+    assert!(mats.len() <= u16::MAX as usize, "too many matrices in one frame");
+    let total = sparse_wire_len(tag, mats);
+    w.write_all(&((total - 4) as u32).to_le_bytes())?;
+    w.write_all(&[WIRE_VERSION, 2, tag.len() as u8])?;
+    w.write_all(tag.as_bytes())?;
+    w.write_all(&(mats.len() as u16).to_le_bytes())?;
+    let mut chunk = [0u8; 4096];
+    for m in mats {
+        debug_assert!(m.validate().is_ok(), "encoding an invalid sparse matrix");
+        w.write_all(&(m.rows as u32).to_le_bytes())?;
+        w.write_all(&(m.cols as u32).to_le_bytes())?;
+        w.write_all(&(m.idx.len() as u32).to_le_bytes())?;
+        for part in m.idx.chunks(chunk.len() / 4) {
+            for (dst, &i) in chunk.chunks_exact_mut(4).zip(part) {
+                dst.copy_from_slice(&i.to_le_bytes());
+            }
+            w.write_all(&chunk[..part.len() * 4])?;
+        }
+        for part in m.vals.chunks(chunk.len() / 4) {
+            for (dst, &v) in chunk.chunks_exact_mut(4).zip(part) {
+                dst.copy_from_slice(&v.to_le_bytes());
+            }
+            w.write_all(&chunk[..part.len() * 4])?;
+        }
+    }
+    Ok(total)
+}
+
 /// Encode one control frame into `w`; returns the bytes written (which
 /// always equals [`control_wire_len`]).
 pub fn encode_control<W: Write>(w: &mut W, tag: &str, body: &[u8]) -> io::Result<u64> {
@@ -177,6 +323,10 @@ pub fn encode_frame<W: Write>(w: &mut W, f: &Frame) -> io::Result<u64> {
         Body::Mats(ms) => {
             let refs: Vec<&Matrix> = ms.iter().collect();
             encode_payload(w, &f.tag, &refs)
+        }
+        Body::Sparse(ms) => {
+            let refs: Vec<&SparseMat> = ms.iter().collect();
+            encode_sparse(w, &f.tag, &refs)
         }
     }
 }
@@ -224,6 +374,41 @@ pub fn decode<R: Read>(r: &mut R) -> io::Result<Frame> {
                 return Err(proto_err("trailing bytes after payload frame".into()));
             }
             Ok(Frame { tag, body: Body::Mats(mats) })
+        }
+        2 => {
+            let n_mats = rd.read_u16()? as usize;
+            let mut mats = Vec::with_capacity(n_mats);
+            for _ in 0..n_mats {
+                let rows = rd.read_u32()? as usize;
+                let cols = rd.read_u32()? as usize;
+                let nnz = rd.read_u32()? as usize;
+                let numel = rows
+                    .checked_mul(cols)
+                    .filter(|&n| n.checked_mul(4).is_some())
+                    .ok_or_else(|| proto_err(format!("matrix {rows}x{cols} overflows")))?;
+                if nnz > numel {
+                    return Err(proto_err(format!(
+                        "sparse frame claims {nnz} nonzeros in a {rows}x{cols} matrix"
+                    )));
+                }
+                let raw_idx = rd.take(nnz * 4)?;
+                let mut idx = Vec::with_capacity(nnz);
+                for c in raw_idx.chunks_exact(4) {
+                    idx.push(u32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+                }
+                let raw_vals = rd.take(nnz * 4)?;
+                let mut vals = Vec::with_capacity(nnz);
+                for c in raw_vals.chunks_exact(4) {
+                    vals.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+                }
+                let m = SparseMat { rows, cols, idx, vals };
+                m.validate()?;
+                mats.push(m);
+            }
+            if rd.remaining() != 0 {
+                return Err(proto_err("trailing bytes after sparse frame".into()));
+            }
+            Ok(Frame { tag, body: Body::Sparse(mats) })
         }
         k => Err(proto_err(format!("unknown frame kind {k}"))),
     }
@@ -379,7 +564,7 @@ mod tests {
                 assert_eq!(ms[0], a);
                 assert_eq!(ms[1], b);
             }
-            Body::Control(_) => panic!("wrong kind"),
+            _ => panic!("wrong kind"),
         }
     }
 
@@ -399,7 +584,7 @@ mod tests {
         assert_eq!(f.tag, "config");
         let got = match f.body {
             Body::Control(b) => b,
-            Body::Mats(_) => panic!("wrong kind"),
+            _ => panic!("wrong kind"),
         };
         let mut r = ByteReader::new(&got);
         assert_eq!(r.read_u8().unwrap(), 7);
@@ -418,8 +603,91 @@ mod tests {
         let f = decode(&mut buf.as_slice()).unwrap();
         match f.body {
             Body::Mats(ms) => assert_eq!(ms[0].shape(), (0, 5)),
-            Body::Control(_) => panic!("wrong kind"),
+            _ => panic!("wrong kind"),
         }
+    }
+
+    #[test]
+    fn sparse_roundtrip_preserves_pairs() {
+        let a = SparseMat {
+            rows: 4,
+            cols: 5,
+            idx: vec![0, 3, 7, 19],
+            vals: vec![1.5, -2.25, 0.0, f32::MIN_POSITIVE],
+        };
+        let b = SparseMat { rows: 2, cols: 2, idx: vec![], vals: vec![] };
+        let mut buf = Vec::new();
+        let n = encode_sparse(&mut buf, "sparse-grad", &[&a, &b]).unwrap();
+        assert_eq!(n as usize, buf.len());
+        assert_eq!(n, sparse_wire_len("sparse-grad", &[&a, &b]));
+        let f = decode(&mut buf.as_slice()).unwrap();
+        assert_eq!(f.tag, "sparse-grad");
+        assert_eq!(f.kind(), FrameKind::Payload);
+        assert_eq!(f.wire_len(), n);
+        match f.body {
+            Body::Sparse(ms) => {
+                assert_eq!(ms.len(), 2);
+                assert_eq!(ms[0], a);
+                assert_eq!(ms[1], b);
+            }
+            _ => panic!("wrong kind"),
+        }
+    }
+
+    #[test]
+    fn sparse_scatter_matches_dense() {
+        let mut rng = Rng::new(7);
+        let dense = Matrix::randn(3, 4, 1.0, &mut rng);
+        let all: Vec<u32> = (0..12).collect();
+        let s = SparseMat::from_dense(&dense, &all);
+        assert_eq!(s.to_dense(), dense);
+        let some = SparseMat::from_dense(&dense, &[1, 6, 11]);
+        let d = some.to_dense();
+        assert_eq!(d.data()[1], dense.data()[1]);
+        assert_eq!(d.data()[0], 0.0);
+    }
+
+    #[test]
+    fn sparse_bad_indices_rejected() {
+        let encode_one = |m: &SparseMat| {
+            let mut buf = Vec::new();
+            // Bypass the encoder's debug assertion by writing the frame
+            // by hand from a valid template, then corrupting the index.
+            let good = SparseMat {
+                rows: m.rows,
+                cols: m.cols,
+                idx: (0..m.idx.len() as u32).collect(),
+                vals: m.vals.clone(),
+            };
+            encode_sparse(&mut buf, "sparse-grad", &[&good]).unwrap();
+            // Indices start after prefix(4)+ver+kind+taglen+tag(11)+count(2)+dims(12).
+            let base = 4 + 3 + "sparse-grad".len() + 2 + 12;
+            for (k, &i) in m.idx.iter().enumerate() {
+                buf[base + 4 * k..base + 4 * k + 4].copy_from_slice(&i.to_le_bytes());
+            }
+            decode(&mut buf.as_slice())
+        };
+        // Out of range: index 20 in a 4x5 matrix.
+        let oor = SparseMat { rows: 4, cols: 5, idx: vec![20], vals: vec![1.0] };
+        assert!(encode_one(&oor).unwrap_err().to_string().contains("out of range"));
+        // Duplicate index.
+        let dup = SparseMat { rows: 4, cols: 5, idx: vec![3, 3], vals: vec![1.0, 2.0] };
+        assert!(encode_one(&dup).unwrap_err().to_string().contains("strictly increasing"));
+        // Unsorted.
+        let uns = SparseMat { rows: 4, cols: 5, idx: vec![7, 2], vals: vec![1.0, 2.0] };
+        assert!(encode_one(&uns).unwrap_err().to_string().contains("strictly increasing"));
+    }
+
+    #[test]
+    fn sparse_nnz_overflow_rejected() {
+        // A frame claiming more nonzeros than elements must fail cleanly
+        // before any allocation of nnz size.
+        let good = SparseMat { rows: 2, cols: 2, idx: vec![0], vals: vec![1.0] };
+        let mut buf = Vec::new();
+        encode_sparse(&mut buf, "s", &[&good]).unwrap();
+        let nnz_at = 4 + 3 + 1 + 2 + 8;
+        buf[nnz_at..nnz_at + 4].copy_from_slice(&100u32.to_le_bytes());
+        assert!(decode(&mut buf.as_slice()).is_err());
     }
 
     #[test]

@@ -55,7 +55,8 @@ fn print_help() {
          \n\
          USAGE:\n\
            dad exp <table2|fig1|fig2|fig3|fig4|fig5|fig6|lm|bandwidth|all> [--scale quick|default|paper]\n\
-           dad train [--algo pooled|dsgd|dad|dad-p2p|edad|rank-dad:R|powersgd:R] [--dataset mnist|arabic|lm]\n\
+           dad train [--algo pooled|dsgd|dad|dad-p2p|edad|rank-dad:R|powersgd:R|dgc:K%|vbc:L|adacomp:B]\n\
+                     [--dataset mnist|arabic|lm]\n\
                      [--epochs N] [--batch B] [--sites S] [--lr F] [--seed N] [--sync-every K]\n\
                      [--scale quick|default|paper] [--config path.toml] [--csv PATH]\n\
            dad serve [--addr HOST:PORT] [--sites S] [--csv PATH] [--strict]\n\

@@ -277,6 +277,10 @@ pub fn named_recipes() -> Vec<Recipe> {
         AlgoSpec::RankDad { max_rank: 2, n_iters: 10, theta: 1e-3 },
         "rank-dAD",
     ));
+    // Residual-carrying sparse protocol: the dead site's error-feedback
+    // state dies with it; the survivors' residuals are per-site, so the
+    // protocol degrades rather than refusing.
+    recipes.push(mid_drop("dgc-mid-drop", AlgoSpec::Dgc { density: 25.0 }, "DGC"));
 
     let mut r = Recipe::base(
         "straggler-dad",

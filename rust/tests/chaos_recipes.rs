@@ -42,7 +42,7 @@ fn converge_recipes_complete_with_all_sites() {
 /// the ISSUE's mid-training disconnect acceptance criterion.
 #[test]
 fn mid_drop_recipes_degrade_to_survivors() {
-    for name in ["mid-drop-dad", "mid-drop-dsgd", "mid-drop-rank-dad"] {
+    for name in ["mid-drop-dad", "mid-drop-dsgd", "mid-drop-rank-dad", "dgc-mid-drop"] {
         let report = run_checked(name);
         // The severed site reports its injected disconnect; survivors
         // finish without errors, so exactly one site errored.
@@ -120,4 +120,25 @@ fn same_seed_fault_runs_are_identical() {
     // with the survivors (the disconnect lands at step 3 of ~8), and the
     // CSV's sites_live column records it.
     assert_eq!(a.epochs.last().unwrap().sites_live, 2);
+}
+
+/// The residual-carrying sparse family makes the same determinism
+/// guarantee under faults: losing a site mid-run discards only that
+/// site's error-feedback state (residual + DGC momentum are site-local),
+/// so two same-seed `dgc-mid-drop` runs degrade identically — same loss
+/// trajectory, same sparse-frame byte counts, same survivor schedule.
+#[test]
+fn same_seed_sparse_fault_runs_are_identical() {
+    let recipe = find_recipe("dgc-mid-drop").unwrap();
+    assert_eq!(recipe.expect, Expectation::Degrade(2), "precondition: degrade, not refuse");
+    let a = run_recipe(&recipe, false).log.expect("run a");
+    let b = run_recipe(&recipe, false).log.expect("run b");
+    assert_eq!(a.epochs.len(), b.epochs.len());
+    for (e, (x, y)) in a.epochs.iter().zip(&b.epochs).enumerate() {
+        assert_eq!(x.train_loss, y.train_loss, "epoch {e}: loss not reproducible");
+        assert_eq!(x.bytes_up, y.bytes_up, "epoch {e}: uplink bytes not reproducible");
+        assert_eq!(x.bytes_down, y.bytes_down, "epoch {e}: downlink bytes not reproducible");
+        assert_eq!(x.sites_live, y.sites_live, "epoch {e}: survivor schedule not reproducible");
+    }
+    assert_eq!(a.epochs.last().unwrap().sites_live, 2, "run must end degraded to 2 survivors");
 }

@@ -4,8 +4,8 @@
 //! — failures print the seed for exact reproduction.
 
 use dad::algos::common::DistAlgorithm;
-use dad::algos::{Dad, Dsgd, Edad, Pooled, RankDad, RankDadConfig};
-use dad::dist::wire::{self, Body};
+use dad::algos::{Dad, Dsgd, Edad, Pooled, RankDad, RankDadConfig, SparseAlgo};
+use dad::dist::wire::{self, Body, SparseMat};
 use dad::dist::Cluster;
 use dad::nn::loss::one_hot;
 use dad::nn::model::{Batch, DistModel};
@@ -172,7 +172,7 @@ fn prop_wire_payload_roundtrip() {
                     assert_eq!(g, m, "seed {seed:#x}: bit-exact f32 round trip");
                 }
             }
-            Body::Control(_) => panic!("seed {seed:#x}: payload decoded as control"),
+            other => panic!("seed {seed:#x}: payload decoded as {other:?}"),
         }
     });
 }
@@ -197,7 +197,7 @@ fn prop_wire_control_roundtrip_and_streaming() {
             assert_eq!(&f.tag, tag, "seed {seed:#x}");
             match f.body {
                 Body::Control(b) => assert_eq!(&b, body, "seed {seed:#x}"),
-                Body::Mats(_) => panic!("seed {seed:#x}: control decoded as payload"),
+                other => panic!("seed {seed:#x}: control decoded as {other:?}"),
             }
         }
         assert!(rd.is_empty(), "seed {seed:#x}: stream fully consumed");
@@ -238,6 +238,123 @@ fn prop_ledger_counts_framing_overhead() {
             + n_deltas * (per_frame_hdr("deltas") + per_mat);
         assert_eq!(frames, n_acts + n_deltas, "seed {seed:#x}: frame census");
         assert_eq!(measured, raw + overhead, "seed {seed:#x}: measured = raw + framing");
+    });
+}
+
+/// Sparse wire-codec round trip: random shapes and transmit sets —
+/// including empty, singleton and dense-limit index sets — decode to the
+/// exact bits encoded, and the encoder's byte count always equals the
+/// arithmetic `sparse_wire_len` the loopback backend charges the ledger.
+#[test]
+fn prop_wire_sparse_roundtrip() {
+    forall(40, 0x5BA23E, |seed, rng| {
+        let tags = ["sparse-grad", "sg", "top-k"];
+        let tag = tags[rng.below(tags.len())];
+        let n_mats = 1 + rng.below(3);
+        let mats: Vec<SparseMat> = (0..n_mats)
+            .map(|_| {
+                let r = rng.below(12);
+                let c = rng.below(40);
+                let numel = r * c;
+                let m = Matrix::randn(r, c, 1.0, rng);
+                let keep: Vec<u32> = match rng.below(4) {
+                    0 => vec![],                                     // empty
+                    1 if numel > 0 => vec![rng.below(numel) as u32], // singleton
+                    2 => (0..numel as u32).collect(),                // dense limit
+                    _ => (0..numel as u32).filter(|_| rng.below(3) == 0).collect(),
+                };
+                SparseMat::from_dense(&m, &keep)
+            })
+            .collect();
+        let refs: Vec<&SparseMat> = mats.iter().collect();
+        let mut buf = Vec::new();
+        let written = wire::encode_sparse(&mut buf, tag, &refs).unwrap();
+        assert_eq!(written as usize, buf.len(), "seed {seed:#x}: length bookkeeping");
+        assert_eq!(written, wire::sparse_wire_len(tag, &refs), "seed {seed:#x}: arithmetic len");
+        // Framing overhead, reconstructed independently: frame header +
+        // per-matrix dims/nnz header + 8 bytes (u32 idx + f32 val) per
+        // transmitted element — the index overhead must be on the wire.
+        let arith = (4 + 3 + tag.len() as u64 + 2)
+            + mats.iter().map(|m| 12 + 8 * m.nnz() as u64).sum::<u64>();
+        assert_eq!(written, arith, "seed {seed:#x}: index overhead accounting");
+        let frame = wire::decode(&mut buf.as_slice()).unwrap();
+        assert_eq!(frame.tag, tag, "seed {seed:#x}");
+        assert_eq!(frame.wire_len(), written, "seed {seed:#x}");
+        match frame.body {
+            Body::Sparse(got) => {
+                assert_eq!(got, mats, "seed {seed:#x}: bit-exact sparse round trip")
+            }
+            other => panic!("seed {seed:#x}: sparse decoded as {other:?}"),
+        }
+    });
+}
+
+/// Corrupt sparse frames are rejected as clean protocol errors, never
+/// panics: an out-of-range index and a non-increasing (duplicate) index
+/// each fail decode with `InvalidData` for arbitrary shapes.
+#[test]
+fn prop_wire_sparse_rejects_bad_indices() {
+    forall(30, 0xBAD5EED, |seed, rng| {
+        let r = 1 + rng.below(8);
+        let c = 2 + rng.below(16);
+        let numel = (r * c) as u32;
+        let m = Matrix::randn(r, c, 1.0, rng);
+        let keep: Vec<u32> = (0..numel).collect();
+        let sm = SparseMat::from_dense(&m, &keep);
+        let tag = "sparse-grad";
+        let mut good = Vec::new();
+        wire::encode_sparse(&mut good, tag, &[&sm]).unwrap();
+        // Byte layout: prefix(4) ver/kind/taglen(3) tag n_mats(2)
+        // rows/cols/nnz(12), then the index array.
+        let base = 4 + 3 + tag.len() + 2 + 12;
+
+        // (a) Out of range: overwrite the last index with numel.
+        let mut bad = good.clone();
+        let off = base + (sm.nnz() - 1) * 4;
+        bad[off..off + 4].copy_from_slice(&numel.to_le_bytes());
+        let err = wire::decode(&mut bad.as_slice()).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "seed {seed:#x}: {err}");
+        assert!(err.to_string().contains("out of range"), "seed {seed:#x}: {err}");
+
+        // (b) Duplicate: make the second index equal the first.
+        let mut bad = good.clone();
+        bad[base + 4..base + 8].copy_from_slice(&sm.idx[0].to_le_bytes());
+        let err = wire::decode(&mut bad.as_slice()).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData, "seed {seed:#x}: {err}");
+        assert!(err.to_string().contains("strictly increasing"), "seed {seed:#x}: {err}");
+    });
+}
+
+/// The ledger's sparse accounting includes the u32 index overhead: a
+/// full-density VBC step (λ=0 transmits every element) charges, per
+/// entry, exactly two uplinked and one broadcast `sparse-grad` frame at
+/// 8 bytes per element plus headers — alongside the dense dSGD-style
+/// bias frames — for arbitrary architectures.
+#[test]
+fn prop_sparse_ledger_counts_index_overhead() {
+    forall(10, 0x1DE7EC7, |seed, rng| {
+        let mlp = random_mlp(rng);
+        let batches = random_batches(&mlp, 2, rng);
+        let mut cluster = Cluster::replicate(mlp.clone(), 2);
+        let mut algo = SparseAlgo::vbc(0.0);
+        let _ = algo.step(&mut cluster, &batches);
+        let measured = cluster.ledger.total();
+        let stats = mlp.local_stats(&batches[0]);
+        let shapes = mlp.param_shapes();
+        let hdr = |tag: &str| 4 + 3 + tag.len() as u64 + 2;
+        let mut expect = 0u64;
+        for e in &stats.entries {
+            let (wr, wc) = shapes[e.w_idx];
+            // 2 uplinks + 1 broadcast; λ=0 keeps every element, so each
+            // frame ships numel (index, value) pairs after a 12-byte
+            // dims/nnz header.
+            expect += 3 * (hdr("sparse-grad") + 12 + 8 * (wr * wc) as u64);
+            if let Some(bi) = e.b_idx {
+                let (br, bc) = shapes[bi];
+                expect += 3 * (hdr("bias-grad") + 8 + (br * bc * 4) as u64);
+            }
+        }
+        assert_eq!(measured, expect, "seed {seed:#x}: sparse ledger census");
     });
 }
 

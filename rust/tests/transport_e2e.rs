@@ -2,7 +2,8 @@
 //! indistinguishable — in gradients, losses and ledger byte counts — from
 //! the in-process loopback simulation with the same seed, for **every**
 //! algorithm in the family (`pooled | dsgd | dad | dad-p2p | edad |
-//! rank-dad | powersgd`), for periodic sync schedules, and for every
+//! rank-dad | powersgd | dgc | vbc | adacomp`), for periodic sync
+//! schedules, and for every
 //! batch layout — dense (MLP) *and* token (transformer LM) batches both
 //! run through the same generic drivers. The aggregator and site
 //! "processes" run as threads here, but every frame crosses a real
@@ -166,6 +167,9 @@ fn tcp_step_matches_loopback_for_every_algorithm() {
         AlgoSpec::Edad,
         AlgoSpec::RankDad { max_rank: 4, n_iters: 10, theta: 1e-3 },
         AlgoSpec::PowerSgd { rank: 4 },
+        AlgoSpec::Dgc { density: 25.0 },
+        AlgoSpec::Vbc { lambda: 2.0 },
+        AlgoSpec::AdaComp { bin: 64 },
     ];
     let mlp = mk_model(31, &[12, 18, 6]);
     let batches = mk_batches(2, 5, 12, 6, 77);
@@ -192,6 +196,9 @@ fn tcp_step_matches_loopback_for_token_batches() {
         AlgoSpec::DadP2p,
         AlgoSpec::RankDad { max_rank: 4, n_iters: 6, theta: 1e-3 },
         AlgoSpec::PowerSgd { rank: 4 },
+        AlgoSpec::Dgc { density: 25.0 },
+        AlgoSpec::Vbc { lambda: 2.0 },
+        AlgoSpec::AdaComp { bin: 64 },
     ];
     let cfg = TransformerConfig::tiny();
     let mut rng = Rng::new(91);
@@ -490,6 +497,25 @@ fn remote_validation_rejects_edad_periodic_only() {
     assert!(validate_remote(&edad_every).is_ok());
     let dad_periodic = TrainSpec { algo: AlgoSpec::Dad, ..base };
     assert!(validate_remote(&dad_periodic).is_ok());
+}
+
+/// Periodic schedules with cross-step error-feedback state: the sparse
+/// compressors' residuals only advance on sync steps, the off-sync local
+/// phases must drift every replica identically, and the site-local DGC
+/// momentum/velocity tables must stay in lockstep between the loopback
+/// twin and the per-process protocol — TCP == loopback for
+/// `--algo dgc:25 --sync-every 2`.
+#[test]
+fn tcp_sparse_periodic_schedule_matches_simulated_run() {
+    check_training_equivalence(&TrainSpec {
+        algo: AlgoSpec::Dgc { density: 25.0 },
+        n_sites: 2,
+        batch_per_site: 8,
+        epochs: 2,
+        lr: 1e-3,
+        seed: 37,
+        schedule: Schedule::Periodic(2),
+    });
 }
 
 /// Periodic sync schedules replay deterministically across processes: the
