@@ -1,0 +1,97 @@
+#!/usr/bin/env bash
+# Checkpoint + serving smoke, end-to-end from the shell the way a user
+# would drive it:
+#
+#   1. `dad train --checkpoint` an uninterrupted 4-epoch run;
+#   2. train 2 epochs, `--resume` to 4, and assert the resumed run lands
+#      on the IDENTICAL final loss (string-equal CSV field) and writes a
+#      byte-identical checkpoint file;
+#   3. boot `dad infer --serve` on the checkpoint, drive it with the
+#      `dad infer --bench` load generator (+ --shutdown), and gate on a
+#      non-empty, well-formed BENCH_serving.json (p50/p99/qps).
+#
+# Usage (from the repository root): serve_smoke.sh
+set -euo pipefail
+
+BIN="${BIN:-rust/target/release/dad}"
+PORT="${PORT:-7413}"
+LIMIT="${LIMIT:-300}"
+OUT="results"
+mkdir -p "$OUT"
+
+FULL_CSV="$OUT/serve_smoke_full.csv"
+RES_CSV="$OUT/serve_smoke_resumed.csv"
+FULL_CKPT="$OUT/serve_smoke_full.ckpt"
+PART_CKPT="$OUT/serve_smoke_part.ckpt"
+RES_CKPT="$OUT/serve_smoke_resumed.ckpt"
+rm -f "$FULL_CSV" "$RES_CSV" "$FULL_CKPT" "$PART_CKPT" "$RES_CKPT" BENCH_serving.json
+
+common=(--algo dad --dataset mnist --scale quick --batch 8 --seed 7)
+
+# --- 1. the uninterrupted reference run ------------------------------------
+timeout "$LIMIT" "$BIN" train "${common[@]}" --epochs 4 \
+    --csv "$FULL_CSV" --checkpoint "$FULL_CKPT"
+
+# --- 2. interrupt at epoch 2, resume to 4 ----------------------------------
+timeout "$LIMIT" "$BIN" train "${common[@]}" --epochs 2 --checkpoint "$PART_CKPT"
+timeout "$LIMIT" "$BIN" train "${common[@]}" --epochs 4 \
+    --resume "$PART_CKPT" --csv "$RES_CSV" --checkpoint "$RES_CKPT"
+
+test -s "$FULL_CSV" || { echo "FAIL: reference CSV missing or empty"; exit 1; }
+test -s "$RES_CSV" || { echo "FAIL: resumed CSV missing or empty"; exit 1; }
+
+# The final epoch's train_loss (CSV field 3) must match exactly — not
+# within a tolerance: resume is bit-identical, so the printed decimals
+# are too.
+full_loss=$(awk -F, 'END { print $3 }' "$FULL_CSV")
+res_loss=$(awk -F, 'END { print $3 }' "$RES_CSV")
+if [ -z "$full_loss" ] || [ "$full_loss" != "$res_loss" ]; then
+    echo "FAIL: resumed final loss '$res_loss' != uninterrupted '$full_loss'"
+    echo "--- $FULL_CSV"; cat "$FULL_CSV"
+    echo "--- $RES_CSV"; cat "$RES_CSV"
+    exit 1
+fi
+cmp -s "$FULL_CKPT" "$RES_CKPT" || {
+    echo "FAIL: resumed checkpoint differs from the uninterrupted one"
+    exit 1
+}
+echo "ok(resume): final loss $res_loss reproduced, checkpoints byte-identical"
+
+# --- 3. serve the checkpoint, benchmark it, shut it down -------------------
+serve_pid=""
+cleanup() { [ -n "$serve_pid" ] && kill "$serve_pid" 2>/dev/null || true; }
+trap cleanup EXIT
+
+timeout "$LIMIT" "$BIN" infer --serve "127.0.0.1:${PORT}" --checkpoint "$FULL_CKPT" &
+serve_pid=$!
+
+# The bench connects without retrying, so poll until the server is up
+# (it binds after rebuilding the model from the checkpoint meta).
+bench_ok=1
+for _ in $(seq 1 40); do
+    if timeout 60 "$BIN" infer --bench --addr "127.0.0.1:${PORT}" \
+        --requests 64 --concurrency 4 --seed 13 \
+        --json BENCH_serving.json --shutdown; then
+        bench_ok=0
+        break
+    fi
+    sleep 0.5
+done
+if [ "$bench_ok" -ne 0 ]; then
+    echo "FAIL: bench never completed against the server"
+    exit 1
+fi
+
+# --shutdown drains the server: it must exit 0 on its own.
+wait "$serve_pid"
+serve_pid=""
+
+test -s BENCH_serving.json || { echo "FAIL: BENCH_serving.json missing or empty"; exit 1; }
+for key in '"p50_ms"' '"p99_ms"' '"qps"' '"requests"'; do
+    grep -q "$key" BENCH_serving.json || {
+        echo "FAIL: BENCH_serving.json is missing $key:"
+        cat BENCH_serving.json
+        exit 1
+    }
+done
+echo "ok(serving): $(cat BENCH_serving.json)"

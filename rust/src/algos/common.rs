@@ -39,6 +39,24 @@ pub trait DistAlgorithm<M: DistModel> {
     /// per-(tag, direction) ledger bytes — is asserted by
     /// `tests/transport_e2e.rs`.
     fn protocol(&self) -> Box<dyn StepProtocol<M>>;
+    /// Flattened cross-step compressor state for checkpointing (residuals,
+    /// momenta, warm starts, ...), in a stable order the paired
+    /// [`DistAlgorithm::load_state`] understands. Stateless algorithms
+    /// return an empty list (the default).
+    fn state_mats(&self) -> Vec<Matrix> {
+        vec![]
+    }
+    /// Restore cross-step compressor state saved by
+    /// [`DistAlgorithm::state_mats`]. The default accepts only an empty
+    /// list: handing state to a stateless algorithm is a checkpoint
+    /// mismatch, reported as an error rather than silently dropped.
+    fn load_state(&mut self, mats: &[Matrix]) -> Result<(), String> {
+        if mats.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("algorithm {} is stateless but the checkpoint carries state", self.name()))
+        }
+    }
 }
 
 /// Per-site local statistics + the global row count (Σ output-delta rows),

@@ -136,13 +136,15 @@ pub struct PowerSgd {
     pub rank: usize,
     /// `states[site][entry]` — per-site error feedback, shared warm start.
     states: Vec<Vec<PowerSgdState>>,
+    /// Checkpointed `(q, err)` pairs waiting for the lazy init.
+    pending: Vec<Matrix>,
 }
 
 impl PowerSgd {
     /// Fresh compressor state at rank `rank` (lazy-initialized on first
     /// step, when the entry shapes are known).
     pub fn new(rank: usize) -> Self {
-        PowerSgd { rank, states: vec![] }
+        PowerSgd { rank, states: vec![], pending: vec![] }
     }
 }
 
@@ -153,6 +155,28 @@ impl<M: DistModel> DistAlgorithm<M> for PowerSgd {
 
     fn protocol(&self) -> Box<dyn StepProtocol<M>> {
         Box::new(PowerSgdProtocol::new(self.rank))
+    }
+
+    fn state_mats(&self) -> Vec<Matrix> {
+        // Stable flattening: per site, per entry, warm-start Q then the
+        // error-feedback accumulator. `load_state` consumes the same order.
+        let mut out = Vec::new();
+        for site in &self.states {
+            for st in site {
+                let (q, err) = st.state_mats();
+                out.push(q.clone());
+                out.push(err.clone());
+            }
+        }
+        out
+    }
+
+    fn load_state(&mut self, mats: &[Matrix]) -> Result<(), String> {
+        if mats.len() % 2 != 0 {
+            return Err("powersgd checkpoint state must be (q, err) pairs".into());
+        }
+        self.pending = mats.to_vec();
+        Ok(())
     }
 
     fn step(&mut self, cluster: &mut Cluster<M>, batches: &[Batch]) -> StepOutcome {
@@ -180,6 +204,21 @@ impl<M: DistModel> DistAlgorithm<M> for PowerSgd {
                         .collect()
                 })
                 .collect();
+            if !self.pending.is_empty() {
+                assert_eq!(
+                    self.pending.len(),
+                    n_sites * n_entries * 2,
+                    "checkpointed powersgd state arity mismatch"
+                );
+                let mut it = std::mem::take(&mut self.pending).into_iter();
+                for site in self.states.iter_mut() {
+                    for st in site.iter_mut() {
+                        let q = it.next().expect("arity checked");
+                        let err = it.next().expect("arity checked");
+                        *st = PowerSgdState::from_state(self.rank, q, err);
+                    }
+                }
+            }
         }
 
         let mut grads: Vec<Matrix> = shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect();

@@ -190,6 +190,24 @@ impl AlgoSpec {
         }
     }
 
+    /// Whether `dad serve --resume` can restore this algorithm's cross-step
+    /// state from an aggregator-side checkpoint. The sparse compressors and
+    /// PowerSGD keep **site-local** protocol state (residuals, momenta,
+    /// error feedback) inside each `dad join` process; an aggregator
+    /// checkpoint cannot rehydrate a remote process's private state, so TCP
+    /// resume refuses those algorithms up front instead of silently
+    /// desyncing. Loopback (`dad train --resume`) restores every algorithm,
+    /// because the simulation owns all site state.
+    pub fn remote_resumable(&self) -> bool {
+        !matches!(
+            self,
+            AlgoSpec::PowerSgd { .. }
+                | AlgoSpec::Dgc { .. }
+                | AlgoSpec::Vbc { .. }
+                | AlgoSpec::AdaComp { .. }
+        )
+    }
+
     /// Canonical spelling (round-trips through [`AlgoSpec::parse`]).
     pub fn name(&self) -> String {
         match self {

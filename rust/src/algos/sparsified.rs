@@ -235,13 +235,16 @@ pub struct SparseAlgo {
     /// The transmit rule (which of dgc / vbc / adacomp this is).
     pub rule: SparseRule,
     states: Vec<Vec<EntryState>>,
+    /// Checkpointed state waiting for the lazy shape-discovering init
+    /// (`load_state` may run before the entry shapes are known).
+    pending: Vec<Matrix>,
 }
 
 impl SparseAlgo {
     /// Fresh compressor for `rule` (residuals are lazily shaped on the
     /// first step, when the entry shapes are known).
     pub fn new(rule: SparseRule) -> Self {
-        SparseAlgo { rule, states: vec![] }
+        SparseAlgo { rule, states: vec![], pending: vec![] }
     }
 
     /// DGC at `density` percent.
@@ -269,6 +272,28 @@ impl<M: DistModel> DistAlgorithm<M> for SparseAlgo {
         Box::new(SparseProtocol::new(self.rule.clone()))
     }
 
+    fn state_mats(&self) -> Vec<Matrix> {
+        // Stable flattening: per site, per entry, residual then (DGC only)
+        // momentum. `load_state` consumes the same order.
+        let mut out = Vec::new();
+        for site in &self.states {
+            for st in site {
+                out.push(st.residual.clone());
+                if let Some(m) = &st.momentum {
+                    out.push(m.clone());
+                }
+            }
+        }
+        out
+    }
+
+    fn load_state(&mut self, mats: &[Matrix]) -> Result<(), String> {
+        // Residual shapes are only known after the first step's lazy init;
+        // stash the checkpointed state and splice it in at init time.
+        self.pending = mats.to_vec();
+        Ok(())
+    }
+
     fn step(&mut self, cluster: &mut Cluster<M>, batches: &[Batch]) -> StepOutcome {
         cluster.next_step();
         let (up0, down0) = bytes_now(cluster);
@@ -292,6 +317,28 @@ impl<M: DistModel> DistAlgorithm<M> for SparseAlgo {
                         .collect()
                 })
                 .collect();
+            if !self.pending.is_empty() {
+                let per_entry = 1 + self.rule.needs_momentum() as usize;
+                assert_eq!(
+                    self.pending.len(),
+                    n_sites * n_entries * per_entry,
+                    "checkpointed {} state arity mismatch",
+                    self.rule.algo_name()
+                );
+                let mut it = std::mem::take(&mut self.pending).into_iter();
+                for site in self.states.iter_mut() {
+                    for st in site.iter_mut() {
+                        let r = it.next().expect("arity checked");
+                        assert_eq!(r.shape(), st.residual.shape(), "residual shape mismatch");
+                        st.residual = r;
+                        if let Some(m) = st.momentum.as_mut() {
+                            let mm = it.next().expect("arity checked");
+                            assert_eq!(mm.shape(), m.shape(), "momentum shape mismatch");
+                            *m = mm;
+                        }
+                    }
+                }
+            }
         }
 
         let mut grads: Vec<Matrix> = shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect();

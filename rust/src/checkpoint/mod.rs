@@ -1,0 +1,507 @@
+//! Versioned on-disk checkpoint container: save/resume mid-training with
+//! optimizer state, RNG cursors and epoch-plan position.
+//!
+//! The container reuses the wire codec's framing ([`crate::dist::wire`])
+//! verbatim, behind a small magic header:
+//!
+//! ```text
+//! 8 bytes  magic "DADCKPT\0"
+//! u8       checkpoint container version (CKPT_VERSION)
+//! u8       embedded wire codec version (WIRE_VERSION)
+//! frame    control "ckpt-meta"   run identity + resume cursors
+//! frame    payload "ckpt-params" model parameters, trainer order
+//! frame    payload "ckpt-adam-m" Adam first moments, parallel to params
+//! frame    payload "ckpt-adam-v" Adam second moments, parallel to params
+//! frame    payload "ckpt-algo"   algorithm compressor state (may be empty)
+//! frame    control "ckpt-end"    u64 FNV-1a over every preceding byte
+//! ```
+//!
+//! A resumed run restores the parameters, both Adam moment tables and the
+//! step counter, the epoch-plan RNG cursor and the next epoch index, so it
+//! continues bit-for-bit where the interrupted run left off — asserted by
+//! `tests/checkpoint_roundtrip.rs` (loopback) and `tests/remote_resume.rs`
+//! (TCP). The byte layout is specified normatively in `rust/docs/FORMATS.md`
+//! and cross-checked against these constants by `tests/format_spec.rs`.
+//!
+//! Decoding is strict: bad magic, unknown container or wire versions,
+//! truncation, out-of-order frames, non-parallel moment tables and checksum
+//! mismatches each fail with a clean named `InvalidData` error — never a
+//! panic — so a half-written or corrupted file cannot silently poison a
+//! resumed run. [`Checkpoint::save`] writes through a temp file and renames,
+//! so a crash mid-save leaves any previous checkpoint intact.
+
+use std::fs;
+use std::io::{self, Cursor};
+use std::path::Path;
+
+use crate::dist::wire::{
+    decode, encode_control, encode_payload, proto_err, Body, ByteReader, ByteWriter, Frame,
+    WIRE_VERSION,
+};
+use crate::tensor::{Matrix, Rng};
+
+/// Leading magic bytes of every checkpoint file.
+pub const CKPT_MAGIC: [u8; 8] = *b"DADCKPT\0";
+
+/// Container version byte; bump when the frame sequence or the `ckpt-meta`
+/// field layout changes. Independent of [`WIRE_VERSION`], which versions
+/// the embedded frame encoding itself.
+pub const CKPT_VERSION: u8 = 1;
+
+/// Run identity and resume cursors frozen into a checkpoint's `ckpt-meta`
+/// frame. The identity fields let [`CkptMeta::check_resume`] refuse to
+/// resume under a different run configuration; the cursor fields
+/// (`next_epoch`, `adam_t`, `rng_*`) are what make the continuation
+/// bit-identical.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CkptMeta {
+    /// Canonical algorithm spelling (`AlgoSpec::name()`).
+    pub algo: String,
+    /// Dataset key the run was built from (`mnist`, `arabic`, `lm`).
+    pub dataset: String,
+    /// Scale key (`quick`, `default`, `paper`) used by `build_task`.
+    pub scale: String,
+    /// Simulated/remote site count.
+    pub n_sites: u32,
+    /// Per-site batch size.
+    pub batch_per_site: u32,
+    /// Total epochs of the original run plan.
+    pub epochs: u32,
+    /// Adam learning rate.
+    pub lr: f32,
+    /// Run seed (drives data shards, model init and the epoch-plan RNG).
+    pub seed: u64,
+    /// Sync schedule in the canonical `--sync-every` encoding
+    /// (`Schedule::sync_every()`: 1 = every batch, k > 1 = periodic every
+    /// k steps; 0 is accepted as a synonym for 1 on decode).
+    pub sync_every: u32,
+    /// First epoch the resumed run should execute (epochs before it are
+    /// already folded into the parameters).
+    pub next_epoch: u32,
+    /// Adam updates applied so far.
+    pub adam_t: u64,
+    /// Epoch-plan RNG cursor: PCG state word.
+    pub rng_state: u64,
+    /// Epoch-plan RNG cursor: PCG increment word.
+    pub rng_inc: u64,
+    /// Epoch-plan RNG cursor: cached Box-Muller spare, if any.
+    pub rng_spare: Option<f32>,
+}
+
+impl CkptMeta {
+    /// Restore the epoch-plan RNG exactly where the checkpointed run left
+    /// it.
+    pub fn restore_rng(&self) -> Rng {
+        Rng::from_parts(self.rng_state, self.rng_inc, self.rng_spare)
+    }
+
+    /// Refuse to resume under a different run identity: every field that
+    /// feeds the deterministic replay (algorithm, sharding, batch size,
+    /// lr, seed, schedule) must match the checkpoint, and the checkpoint
+    /// must not already be complete for the requested epoch count.
+    pub fn check_resume(
+        &self,
+        algo: &str,
+        n_sites: u32,
+        batch_per_site: u32,
+        epochs: u32,
+        lr: f32,
+        seed: u64,
+        sync_every: u32,
+    ) -> io::Result<()> {
+        let mut mismatch = |field: &str, want: String, have: String| {
+            Err(proto_err(format!(
+                "checkpoint resume mismatch: {field} is {want} in the checkpoint but {have} in this run"
+            )))
+        };
+        if self.algo != algo {
+            return mismatch("algo", self.algo.clone(), algo.to_string());
+        }
+        if self.n_sites != n_sites {
+            return mismatch("n_sites", self.n_sites.to_string(), n_sites.to_string());
+        }
+        if self.batch_per_site != batch_per_site {
+            return mismatch(
+                "batch_per_site",
+                self.batch_per_site.to_string(),
+                batch_per_site.to_string(),
+            );
+        }
+        if self.lr != lr {
+            return mismatch("lr", self.lr.to_string(), lr.to_string());
+        }
+        if self.seed != seed {
+            return mismatch("seed", self.seed.to_string(), seed.to_string());
+        }
+        if self.sync_every != sync_every {
+            return mismatch("sync_every", self.sync_every.to_string(), sync_every.to_string());
+        }
+        if self.next_epoch >= epochs {
+            return Err(proto_err(format!(
+                "checkpoint is already at epoch {} of a {} epoch run: nothing to resume",
+                self.next_epoch, epochs
+            )));
+        }
+        Ok(())
+    }
+
+    fn encode_body(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.push_str(&self.algo);
+        w.push_str(&self.dataset);
+        w.push_str(&self.scale);
+        w.push_u32(self.n_sites);
+        w.push_u32(self.batch_per_site);
+        w.push_u32(self.epochs);
+        w.push_f32(self.lr);
+        w.push_u64(self.seed);
+        w.push_u32(self.sync_every);
+        w.push_u32(self.next_epoch);
+        w.push_u64(self.adam_t);
+        w.push_u64(self.rng_state);
+        w.push_u64(self.rng_inc);
+        w.push_u8(self.rng_spare.is_some() as u8);
+        w.push_f32(self.rng_spare.unwrap_or(0.0));
+        w.finish()
+    }
+
+    fn decode_body(body: &[u8]) -> io::Result<CkptMeta> {
+        let mut r = ByteReader::new(body);
+        let meta = CkptMeta {
+            algo: r.read_str()?,
+            dataset: r.read_str()?,
+            scale: r.read_str()?,
+            n_sites: r.read_u32()?,
+            batch_per_site: r.read_u32()?,
+            epochs: r.read_u32()?,
+            lr: r.read_f32()?,
+            seed: r.read_u64()?,
+            sync_every: r.read_u32()?,
+            next_epoch: r.read_u32()?,
+            adam_t: r.read_u64()?,
+            rng_state: r.read_u64()?,
+            rng_inc: r.read_u64()?,
+            rng_spare: {
+                let has = r.read_u8()? != 0;
+                let v = r.read_f32()?;
+                has.then_some(v)
+            },
+        };
+        if r.remaining() != 0 {
+            return Err(proto_err(format!(
+                "ckpt-meta frame has {} trailing bytes (container version skew?)",
+                r.remaining()
+            )));
+        }
+        Ok(meta)
+    }
+}
+
+/// Where and how often a training run checkpoints. The default plan
+/// (no path) disables checkpointing entirely, which is how the plain
+/// `train()` entry point runs.
+#[derive(Clone, Debug, Default)]
+pub struct CheckpointPlan {
+    /// Save target (`--checkpoint PATH`); `None` disables checkpointing.
+    pub save_path: Option<String>,
+    /// Save every N epochs (`--checkpoint-every N`; 0 = only at the end).
+    /// Whenever a path is set, the final epoch always saves.
+    pub every: usize,
+    /// Dataset key recorded in the checkpoint meta (so `dad infer` can
+    /// rebuild the model without extra flags).
+    pub dataset: String,
+    /// Scale key recorded in the checkpoint meta.
+    pub scale: String,
+}
+
+impl CheckpointPlan {
+    /// Whether this plan saves anything at all.
+    pub fn enabled(&self) -> bool {
+        self.save_path.is_some()
+    }
+
+    /// Whether a save is due once `done_epochs` of `total_epochs` have
+    /// completed.
+    pub fn due(&self, done_epochs: usize, total_epochs: usize) -> bool {
+        self.save_path.is_some()
+            && (done_epochs == total_epochs || (self.every > 0 && done_epochs % self.every == 0))
+    }
+}
+
+/// A full training snapshot: everything needed to continue a run
+/// bit-identically, or to serve its weights for inference.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// Run identity + resume cursors.
+    pub meta: CkptMeta,
+    /// Model parameters in trainer order (`DistModel::params`).
+    pub params: Vec<Matrix>,
+    /// Adam first moments, parallel to `params`.
+    pub adam_m: Vec<Matrix>,
+    /// Adam second moments, parallel to `params`.
+    pub adam_v: Vec<Matrix>,
+    /// Flattened algorithm compressor state (`DistAlgorithm::state_mats`);
+    /// empty for stateless algorithms.
+    pub algo_state: Vec<Matrix>,
+}
+
+/// FNV-1a 64 over `bytes` — the `ckpt-end` integrity checksum. Not
+/// cryptographic: it catches truncation and bit rot, not tampering.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+/// Serialize a matrix list into a control-frame field stream: u16 count,
+/// then per matrix u32 rows, u32 cols, rows*cols f32 LE values. Used by the
+/// ledger-exempt `resume` broadcast (`dad serve --resume`); the checkpoint
+/// file itself uses full payload frames instead.
+pub fn push_mats(w: &mut ByteWriter, mats: &[Matrix]) {
+    assert!(mats.len() <= u16::MAX as usize, "too many matrices in one field stream");
+    w.push_u16(mats.len() as u16);
+    for m in mats {
+        w.push_u32(m.rows() as u32);
+        w.push_u32(m.cols() as u32);
+        for &v in m.data() {
+            w.push_f32(v);
+        }
+    }
+}
+
+/// Inverse of [`push_mats`]; every read is bounds-checked.
+pub fn read_mats(r: &mut ByteReader) -> io::Result<Vec<Matrix>> {
+    let n = r.read_u16()? as usize;
+    let mut mats = Vec::with_capacity(n);
+    for _ in 0..n {
+        let rows = r.read_u32()? as usize;
+        let cols = r.read_u32()? as usize;
+        let numel = rows
+            .checked_mul(cols)
+            .filter(|&n| n.checked_mul(4).is_some())
+            .ok_or_else(|| proto_err(format!("matrix {rows}x{cols} overflows")))?;
+        let mut data = Vec::with_capacity(numel);
+        for _ in 0..numel {
+            data.push(r.read_f32()?);
+        }
+        mats.push(Matrix::from_vec(rows, cols, data));
+    }
+    Ok(mats)
+}
+
+fn expect_control(f: Frame, want: &str) -> io::Result<Vec<u8>> {
+    if f.tag != want {
+        return Err(proto_err(format!("expected {want} frame, found {:?}", f.tag)));
+    }
+    match f.body {
+        Body::Control(b) => Ok(b),
+        _ => Err(proto_err(format!("{want} must be a control frame"))),
+    }
+}
+
+fn expect_payload(f: Frame, want: &str) -> io::Result<Vec<Matrix>> {
+    if f.tag != want {
+        return Err(proto_err(format!("expected {want} frame, found {:?}", f.tag)));
+    }
+    match f.body {
+        Body::Mats(ms) => Ok(ms),
+        _ => Err(proto_err(format!("{want} must be a dense payload frame"))),
+    }
+}
+
+impl Checkpoint {
+    /// Encode the full container into bytes (the exact on-disk image).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&CKPT_MAGIC);
+        buf.push(CKPT_VERSION);
+        buf.push(WIRE_VERSION);
+        encode_control(&mut buf, "ckpt-meta", &self.meta.encode_body()).expect("vec write");
+        let refs = |ms: &[Matrix]| ms.iter().collect::<Vec<&Matrix>>();
+        encode_payload(&mut buf, "ckpt-params", &refs(&self.params)).expect("vec write");
+        encode_payload(&mut buf, "ckpt-adam-m", &refs(&self.adam_m)).expect("vec write");
+        encode_payload(&mut buf, "ckpt-adam-v", &refs(&self.adam_v)).expect("vec write");
+        encode_payload(&mut buf, "ckpt-algo", &refs(&self.algo_state)).expect("vec write");
+        let mut end = ByteWriter::new();
+        end.push_u64(fnv1a64(&buf));
+        encode_control(&mut buf, "ckpt-end", &end.finish()).expect("vec write");
+        buf
+    }
+
+    /// Decode a full container image, validating magic, versions, frame
+    /// order, moment-table parallelism and the trailing checksum.
+    pub fn decode_bytes(buf: &[u8]) -> io::Result<Checkpoint> {
+        if buf.len() < CKPT_MAGIC.len() + 2 {
+            return Err(proto_err(format!(
+                "checkpoint truncated: {} bytes is smaller than the header",
+                buf.len()
+            )));
+        }
+        if buf[..CKPT_MAGIC.len()] != CKPT_MAGIC {
+            return Err(proto_err("not a dad checkpoint (bad magic bytes)".into()));
+        }
+        let ckpt_version = buf[CKPT_MAGIC.len()];
+        if ckpt_version != CKPT_VERSION {
+            return Err(proto_err(format!(
+                "checkpoint container version {ckpt_version}, this build reads {CKPT_VERSION}"
+            )));
+        }
+        let wire_version = buf[CKPT_MAGIC.len() + 1];
+        if wire_version != WIRE_VERSION {
+            return Err(proto_err(format!(
+                "checkpoint embeds wire version {wire_version}, this build speaks {WIRE_VERSION}"
+            )));
+        }
+        let body = &buf[CKPT_MAGIC.len() + 2..];
+        let mut cur = Cursor::new(body);
+        let meta = CkptMeta::decode_body(&expect_control(decode(&mut cur)?, "ckpt-meta")?)?;
+        let params = expect_payload(decode(&mut cur)?, "ckpt-params")?;
+        let adam_m = expect_payload(decode(&mut cur)?, "ckpt-adam-m")?;
+        let adam_v = expect_payload(decode(&mut cur)?, "ckpt-adam-v")?;
+        let algo_state = expect_payload(decode(&mut cur)?, "ckpt-algo")?;
+        let hashed = CKPT_MAGIC.len() + 2 + cur.position() as usize;
+        let end = expect_control(decode(&mut cur)?, "ckpt-end")?;
+        let mut r = ByteReader::new(&end);
+        let want = r.read_u64()?;
+        let got = fnv1a64(&buf[..hashed]);
+        if want != got {
+            return Err(proto_err(format!(
+                "checkpoint checksum mismatch: file says {want:#018x}, content hashes to {got:#018x}"
+            )));
+        }
+        if (cur.position() as usize) != body.len() {
+            return Err(proto_err(format!(
+                "{} trailing bytes after ckpt-end frame",
+                body.len() - cur.position() as usize
+            )));
+        }
+        for (name, mats) in [("adam-m", &adam_m), ("adam-v", &adam_v)] {
+            if mats.len() != params.len()
+                || mats.iter().zip(&params).any(|(a, p)| a.shape() != p.shape())
+            {
+                return Err(proto_err(format!(
+                    "checkpoint {name} moment table is not parallel to the parameter list"
+                )));
+            }
+        }
+        Ok(Checkpoint { meta, params, adam_m, adam_v, algo_state })
+    }
+
+    /// Write the container to `path` atomically: a temp file in the same
+    /// directory is written, flushed and renamed over the target, so a
+    /// crash mid-save never leaves a half-written checkpoint at `path`.
+    pub fn save(&self, path: &Path) -> io::Result<()> {
+        let bytes = self.encode();
+        let tmp = path.with_extension("ckpt.tmp");
+        fs::write(&tmp, &bytes)
+            .map_err(|e| io::Error::new(e.kind(), format!("writing {}: {e}", tmp.display())))?;
+        fs::rename(&tmp, path)
+            .map_err(|e| io::Error::new(e.kind(), format!("renaming into {}: {e}", path.display())))
+    }
+
+    /// Read and validate a checkpoint file; every failure mode (missing
+    /// file, bad magic, version skew, truncation, corruption) is a named
+    /// `io::Error` mentioning the path.
+    pub fn load(path: &Path) -> io::Result<Checkpoint> {
+        let bytes = fs::read(path)
+            .map_err(|e| io::Error::new(e.kind(), format!("reading {}: {e}", path.display())))?;
+        Self::decode_bytes(&bytes)
+            .map_err(|e| io::Error::new(e.kind(), format!("checkpoint {}: {e}", path.display())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        let mut rng = Rng::new(3);
+        let shapes = [(4, 3), (1, 3)];
+        let mk = |rng: &mut Rng| {
+            shapes.iter().map(|&(r, c)| Matrix::randn(r, c, 1.0, rng)).collect::<Vec<_>>()
+        };
+        Checkpoint {
+            meta: CkptMeta {
+                algo: "dad".into(),
+                dataset: "mnist".into(),
+                scale: "quick".into(),
+                n_sites: 2,
+                batch_per_site: 8,
+                epochs: 5,
+                lr: 1e-3,
+                seed: 41,
+                sync_every: 0,
+                next_epoch: 2,
+                adam_t: 40,
+                rng_state: 0xDEAD_BEEF_0BAD_CAFE,
+                rng_inc: 0x1234_5678_9ABC_DEF1,
+                rng_spare: Some(-0.75),
+            },
+            params: mk(&mut rng),
+            adam_m: mk(&mut rng),
+            adam_v: mk(&mut rng),
+            algo_state: vec![Matrix::randn(2, 2, 1.0, &mut rng)],
+        }
+    }
+
+    #[test]
+    fn container_roundtrips_bit_identically() {
+        let ck = sample();
+        let bytes = ck.encode();
+        let back = Checkpoint::decode_bytes(&bytes).unwrap();
+        assert_eq!(back.meta, ck.meta);
+        assert_eq!(back.params, ck.params);
+        assert_eq!(back.adam_m, ck.adam_m);
+        assert_eq!(back.adam_v, ck.adam_v);
+        assert_eq!(back.algo_state, ck.algo_state);
+        // Re-encoding the decoded checkpoint reproduces the exact image.
+        assert_eq!(back.encode(), bytes);
+    }
+
+    #[test]
+    fn restore_rng_continues_cursor() {
+        let mut rng = Rng::new(99);
+        for _ in 0..10 {
+            rng.normal();
+        }
+        let (state, inc, spare) = rng.state_parts();
+        let meta =
+            CkptMeta { rng_state: state, rng_inc: inc, rng_spare: spare, ..sample().meta };
+        let mut restored = meta.restore_rng();
+        for _ in 0..32 {
+            assert_eq!(rng.next_u64(), restored.next_u64());
+        }
+    }
+
+    #[test]
+    fn mats_field_stream_roundtrips() {
+        let mut rng = Rng::new(5);
+        let mats =
+            vec![Matrix::randn(3, 4, 1.0, &mut rng), Matrix::zeros(0, 7), Matrix::zeros(2, 0)];
+        let mut w = ByteWriter::new();
+        push_mats(&mut w, &mats);
+        let body = w.finish();
+        let mut r = ByteReader::new(&body);
+        let back = read_mats(&mut r).unwrap();
+        assert_eq!(back, mats);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn check_resume_names_the_mismatched_field() {
+        let meta = sample().meta;
+        assert!(meta.check_resume("dad", 2, 8, 5, 1e-3, 41, 0).is_ok());
+        let err = meta.check_resume("dsgd", 2, 8, 5, 1e-3, 41, 0).unwrap_err();
+        assert!(err.to_string().contains("algo"), "{err}");
+        let err = meta.check_resume("dad", 3, 8, 5, 1e-3, 41, 0).unwrap_err();
+        assert!(err.to_string().contains("n_sites"), "{err}");
+        let err = meta.check_resume("dad", 2, 8, 5, 1e-3, 42, 0).unwrap_err();
+        assert!(err.to_string().contains("seed"), "{err}");
+        // Already complete: next_epoch == requested epochs.
+        let err = meta.check_resume("dad", 2, 8, 2, 1e-3, 41, 0).unwrap_err();
+        assert!(err.to_string().contains("nothing to resume"), "{err}");
+    }
+}

@@ -8,10 +8,12 @@ pub mod trainer;
 
 pub use experiments::Scale;
 pub use remote::{
-    join_training, remote_agg_step, remote_site_step, serve_training, validate_remote,
-    FaultPolicy, RemoteConfig, RemoteStep,
+    join_training, join_training_resumable, remote_agg_step, remote_site_step, serve_training,
+    serve_training_checkpointed, validate_remote, FaultPolicy, RemoteConfig, RemoteStep,
+    ResumeState,
 };
 pub use trainer::{
-    build_task, default_lm_lr, epoch_plan, evaluate, fold_mean_auc, local_update, train,
-    validate_dataset_algo, DataSource, EvalMetrics, Schedule, TrainLog, TrainSpec, TrainTask,
+    build_task, default_lm_lr, epoch_plan, evaluate, fold_mean_auc, local_update,
+    snapshot_checkpoint, train, train_checkpointed, validate_dataset_algo, DataSource,
+    EvalMetrics, Schedule, TrainLog, TrainSpec, TrainTask,
 };

@@ -62,8 +62,10 @@ use std::io;
 
 use crate::algos::protocol::{expect_ctrl, AggExchange, Endpoint, StepMeta, StepProtocol, StepSync};
 use crate::algos::{concat_batches, AlgoSpec};
+use crate::checkpoint::{push_mats, read_mats, Checkpoint, CheckpointPlan};
 use crate::coordinator::trainer::{
-    epoch_plan, evaluate, local_update, DataSource, EpochLog, Schedule, TrainLog, TrainSpec,
+    epoch_plan, evaluate, local_update, snapshot_checkpoint, DataSource, EpochLog, Schedule,
+    TrainLog, TrainSpec,
 };
 use crate::data::{BatchIter, Partition};
 use crate::dist::wire::{proto_err, ByteReader, ByteWriter};
@@ -137,6 +139,10 @@ pub struct RemoteConfig {
     /// Partition override every process applies to its shards (from the
     /// shared seed, so the lockstep batch schedule is preserved).
     pub partition: Partition,
+    /// True when the aggregator resumes from a checkpoint: immediately
+    /// after this config frame it broadcasts one `resume` control frame
+    /// ([`ResumeState`]) every site must apply before its first step.
+    pub resume: bool,
 }
 
 impl RemoteConfig {
@@ -153,6 +159,7 @@ impl RemoteConfig {
         w.push_u32(self.spec.schedule.sync_every() as u32);
         w.push_u32(self.recv_timeout_ms);
         w.push_str(&self.partition.name());
+        w.push_u8(self.resume as u8);
         w.finish()
     }
 
@@ -169,6 +176,7 @@ impl RemoteConfig {
         let sync_every = r.read_u32()? as usize;
         let recv_timeout_ms = r.read_u32()?;
         let partition_s = r.read_str()?;
+        let resume = r.read_u8()? != 0;
         if r.remaining() != 0 {
             return Err(proto_err(format!(
                 "config frame has {} trailing bytes (version skew between serve and join?)",
@@ -193,6 +201,7 @@ impl RemoteConfig {
             scale,
             recv_timeout_ms,
             partition,
+            resume,
         })
     }
 
@@ -206,6 +215,94 @@ impl RemoteConfig {
     pub fn recv(t: &mut dyn Transport) -> io::Result<RemoteConfig> {
         let body = expect_ctrl(t.recv_broadcast()?, "config")?;
         RemoteConfig::decode(&body)
+    }
+}
+
+/// The `resume` control frame a resuming aggregator broadcasts right after
+/// the config: everything a site needs to continue the interrupted run in
+/// lockstep — canonical parameters, both Adam moment tables and the step
+/// counter, the epoch-plan RNG cursor, and the first epoch to execute.
+/// Control frames are ledger-exempt by design, so the one-off resume
+/// broadcast does not perturb the per-step bandwidth accounting the
+/// equivalence tests assert on.
+#[derive(Debug, Clone)]
+pub struct ResumeState {
+    /// Canonical model parameters, trainer order.
+    pub params: Vec<Matrix>,
+    /// Adam first moments, parallel to `params`.
+    pub adam_m: Vec<Matrix>,
+    /// Adam second moments, parallel to `params`.
+    pub adam_v: Vec<Matrix>,
+    /// Adam updates applied so far.
+    pub adam_t: u64,
+    /// Epoch-plan RNG cursor: PCG state word.
+    pub rng_state: u64,
+    /// Epoch-plan RNG cursor: PCG increment word.
+    pub rng_inc: u64,
+    /// Epoch-plan RNG cursor: cached Box-Muller spare, if any.
+    pub rng_spare: Option<f32>,
+    /// First epoch the resumed run executes.
+    pub next_epoch: u32,
+}
+
+impl ResumeState {
+    /// Lift the broadcastable subset out of a loaded checkpoint. The
+    /// algorithm compressor state is deliberately absent: remote resume is
+    /// limited to algorithms without site-local protocol state
+    /// ([`AlgoSpec::remote_resumable`]), whose checkpoints carry none.
+    pub fn from_checkpoint(ck: &Checkpoint) -> ResumeState {
+        ResumeState {
+            params: ck.params.clone(),
+            adam_m: ck.adam_m.clone(),
+            adam_v: ck.adam_v.clone(),
+            adam_t: ck.meta.adam_t,
+            rng_state: ck.meta.rng_state,
+            rng_inc: ck.meta.rng_inc,
+            rng_spare: ck.meta.rng_spare,
+            next_epoch: ck.meta.next_epoch,
+        }
+    }
+
+    fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        push_mats(&mut w, &self.params);
+        push_mats(&mut w, &self.adam_m);
+        push_mats(&mut w, &self.adam_v);
+        w.push_u64(self.adam_t);
+        w.push_u64(self.rng_state);
+        w.push_u64(self.rng_inc);
+        w.push_u8(self.rng_spare.is_some() as u8);
+        w.push_f32(self.rng_spare.unwrap_or(0.0));
+        w.push_u32(self.next_epoch);
+        w.finish()
+    }
+
+    fn decode(body: &[u8]) -> io::Result<ResumeState> {
+        let mut r = ByteReader::new(body);
+        let params = read_mats(&mut r)?;
+        let adam_m = read_mats(&mut r)?;
+        let adam_v = read_mats(&mut r)?;
+        let adam_t = r.read_u64()?;
+        let rng_state = r.read_u64()?;
+        let rng_inc = r.read_u64()?;
+        let rng_spare = {
+            let has = r.read_u8()? != 0;
+            let v = r.read_f32()?;
+            has.then_some(v)
+        };
+        let next_epoch = r.read_u32()?;
+        if r.remaining() != 0 {
+            return Err(proto_err(format!(
+                "resume frame has {} trailing bytes (version skew between serve and join?)",
+                r.remaining()
+            )));
+        }
+        if adam_m.len() != params.len() || adam_v.len() != params.len() {
+            return Err(proto_err(
+                "resume frame moment tables are not parallel to the parameter list".into(),
+            ));
+        }
+        Ok(ResumeState { params, adam_m, adam_v, adam_t, rng_state, rng_inc, rng_spare, next_epoch })
     }
 }
 
@@ -497,14 +594,82 @@ pub fn serve_training<M: DistModel, D: DataSource>(
     t: &mut dyn Transport,
     ledger: &mut Ledger,
     spec: &TrainSpec,
-    mut model: M,
+    model: M,
     data: &D,
     shards: &[Vec<usize>],
     test: &D,
     policy: FaultPolicy,
 ) -> io::Result<TrainLog> {
+    serve_training_checkpointed(
+        t,
+        ledger,
+        spec,
+        model,
+        data,
+        shards,
+        test,
+        policy,
+        &CheckpointPlan::default(),
+        None,
+    )
+}
+
+/// Gate shared by checkpoint save *and* resume in remote mode: the v1
+/// container freezes only the canonical (aggregator-side) state, so it is
+/// sound exactly when no training state lives outside it — every replica
+/// on the canonical parameters (`--sync-every 1`) and no site-local
+/// compressor state ([`AlgoSpec::remote_resumable`]).
+fn validate_remote_checkpoint(spec: &TrainSpec) -> io::Result<()> {
+    if spec.schedule != Schedule::EveryBatch {
+        return Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            "remote checkpointing requires --sync-every 1: periodic local phases leave each \
+             site's replica drifted off the canonical parameters, state the checkpoint does \
+             not carry",
+        ));
+    }
+    if !spec.algo.remote_resumable() {
+        return Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            format!(
+                "{} keeps per-site compressor state (error feedback / warm starts) inside each \
+                 join process, which an aggregator-side checkpoint cannot capture — remote \
+                 checkpoint/resume supports the stateless algorithms (pooled, dsgd, dad, \
+                 dad-p2p, edad, rank-dad); use `dad train` for checkpointed {} runs",
+                spec.algo.name(),
+                spec.algo.name()
+            ),
+        ));
+    }
+    Ok(())
+}
+
+/// [`serve_training`] plus checkpoint save/resume (the `dad serve
+/// --checkpoint/--resume` path). Saving freezes the canonical state at the
+/// epoch boundaries `ckpt` selects, exactly as the simulated trainer
+/// would — the two modes produce byte-identical checkpoint files for the
+/// same trajectory. Resuming broadcasts a `resume` control frame right
+/// after the config so every site restores the same cursors before its
+/// first step; `tests/remote_resume.rs` asserts the continuation matches
+/// the uninterrupted TCP run bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+pub fn serve_training_checkpointed<M: DistModel, D: DataSource>(
+    t: &mut dyn Transport,
+    ledger: &mut Ledger,
+    spec: &TrainSpec,
+    mut model: M,
+    data: &D,
+    shards: &[Vec<usize>],
+    test: &D,
+    policy: FaultPolicy,
+    ckpt: &CheckpointPlan,
+    resume: Option<Checkpoint>,
+) -> io::Result<TrainLog> {
     validate_remote(spec)?;
     validate_model_algo(spec, &model)?;
+    if ckpt.enabled() || resume.is_some() {
+        validate_remote_checkpoint(spec)?;
+    }
     let mut proto = spec.algo.build::<M>().protocol();
     let oracle = proto.oracle();
     let shapes = model.param_shapes();
@@ -515,8 +680,47 @@ pub fn serve_training<M: DistModel, D: DataSource>(
     let entry_names = model.entry_names();
     let n_entries = model.local_stats_entry_count();
     let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
-    let mut epochs = Vec::with_capacity(spec.epochs);
-    for epoch in 0..spec.epochs {
+
+    let mut start_epoch = 0usize;
+    let mut meta_dataset = ckpt.dataset.clone();
+    let mut meta_scale = ckpt.scale.clone();
+    if let Some(ck) = resume {
+        ck.meta.check_resume(
+            &spec.algo.name(),
+            spec.n_sites as u32,
+            spec.batch_per_site as u32,
+            spec.epochs as u32,
+            spec.lr,
+            spec.seed,
+            spec.schedule.sync_every() as u32,
+        )?;
+        let fits = |mats: &[Matrix]| {
+            mats.len() == shapes.len()
+                && mats.iter().zip(&shapes).all(|(m, &(r, c))| m.rows() == r && m.cols() == c)
+        };
+        if !fits(&ck.params) || !fits(&ck.adam_m) || !fits(&ck.adam_v) {
+            return Err(proto_err(format!(
+                "checkpoint does not fit this model: expected {} parameter/moment matrices \
+                 shaped {:?}",
+                shapes.len(),
+                shapes
+            )));
+        }
+        // One ledger-exempt broadcast restores every site; must precede the
+        // first step so the whole cluster enters epoch `next_epoch` as one.
+        let rs = ResumeState::from_checkpoint(&ck);
+        t.ship_control(Direction::AggToSite, "resume", &rs.encode())?;
+        params = ck.params;
+        model.set_params(&params);
+        opt = Adam::from_state(spec.lr, ck.meta.adam_t, ck.adam_m, ck.adam_v);
+        rng = ck.meta.restore_rng();
+        start_epoch = ck.meta.next_epoch as usize;
+        meta_dataset = ck.meta.dataset;
+        meta_scale = ck.meta.scale;
+    }
+
+    let mut epochs = Vec::with_capacity(spec.epochs.saturating_sub(start_epoch));
+    for epoch in start_epoch..spec.epochs {
         let mut plan = epoch_plan(&sizes, spec.batch_per_site, &mut rng);
         let n_steps = plan.iter().map(|i| i.n_batches()).min().unwrap_or(0);
         let (up0, down0) = dirs(ledger);
@@ -628,6 +832,23 @@ pub fn serve_training<M: DistModel, D: DataSource>(
             sites_live: t.n_sites(),
             mean_eff_rank,
         });
+        if ckpt.due(epoch + 1, spec.epochs) {
+            let path = ckpt.save_path.as_ref().expect("due implies a save path");
+            // Remote-resumable algorithms are stateless by construction
+            // (validated above), so the compressor-state frame is empty —
+            // matching what the simulated trainer writes for them.
+            let ck = snapshot_checkpoint(
+                spec,
+                &meta_dataset,
+                &meta_scale,
+                epoch + 1,
+                &params,
+                &opt,
+                &rng,
+                vec![],
+            );
+            ck.save(std::path::Path::new(path))?;
+        }
     }
     Ok(TrainLog { algo: spec.algo.name(), epochs, sim_time_s: 0.0, entry_names })
 }
@@ -645,10 +866,28 @@ pub fn join_training<M: DistModel, D: DataSource>(
     t: &mut dyn Transport,
     ledger: &mut Ledger,
     spec: &TrainSpec,
+    model: M,
+    data: &D,
+    shards: &[Vec<usize>],
+    site_id: usize,
+) -> io::Result<TrainLog> {
+    join_training_resumable(t, ledger, spec, model, data, shards, site_id, false)
+}
+
+/// [`join_training`] for a run whose config frame announced a resume
+/// (`RemoteConfig::resume`): before the first step the site blocks for the
+/// aggregator's `resume` broadcast and restores the shared cursors from
+/// it, entering epoch `next_epoch` in lockstep with everyone else.
+#[allow(clippy::too_many_arguments)]
+pub fn join_training_resumable<M: DistModel, D: DataSource>(
+    t: &mut dyn Transport,
+    ledger: &mut Ledger,
+    spec: &TrainSpec,
     mut model: M,
     data: &D,
     shards: &[Vec<usize>],
     site_id: usize,
+    resume: bool,
 ) -> io::Result<TrainLog> {
     validate_remote(spec)?;
     validate_model_algo(spec, &model)?;
@@ -657,6 +896,9 @@ pub fn join_training<M: DistModel, D: DataSource>(
             "site id {site_id} out of range for {} shards",
             shards.len()
         )));
+    }
+    if resume {
+        validate_remote_checkpoint(spec)?;
     }
     let mut proto = spec.algo.build::<M>().protocol();
     let oracle = proto.oracle();
@@ -667,8 +909,37 @@ pub fn join_training<M: DistModel, D: DataSource>(
     let mut ws = Workspace::new();
     let entry_names = model.entry_names();
     let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
-    let mut epochs = Vec::with_capacity(spec.epochs);
-    for epoch in 0..spec.epochs {
+
+    let mut start_epoch = 0usize;
+    if resume {
+        let rs = ResumeState::decode(&expect_ctrl(t.recv_broadcast()?, "resume")?)?;
+        let fits = |mats: &[Matrix]| {
+            mats.len() == shapes.len()
+                && mats.iter().zip(&shapes).all(|(m, &(r, c))| m.rows() == r && m.cols() == c)
+        };
+        if !fits(&rs.params) || !fits(&rs.adam_m) || !fits(&rs.adam_v) {
+            return Err(proto_err(format!(
+                "resume frame does not fit this model: expected {} parameter/moment matrices \
+                 shaped {:?} (dataset/scale mismatch between serve and join?)",
+                shapes.len(),
+                shapes
+            )));
+        }
+        params = rs.params;
+        model.set_params(&params);
+        opt = Adam::from_state(spec.lr, rs.adam_t, rs.adam_m, rs.adam_v);
+        rng = Rng::from_parts(rs.rng_state, rs.rng_inc, rs.rng_spare);
+        start_epoch = rs.next_epoch as usize;
+        if start_epoch >= spec.epochs {
+            return Err(proto_err(format!(
+                "resume frame says epoch {start_epoch} of a {} epoch run: nothing to do",
+                spec.epochs
+            )));
+        }
+    }
+
+    let mut epochs = Vec::with_capacity(spec.epochs.saturating_sub(start_epoch));
+    for epoch in start_epoch..spec.epochs {
         let mut plan = epoch_plan(&sizes, spec.batch_per_site, &mut rng);
         let n_steps = plan.iter().map(|i| i.n_batches()).min().unwrap_or(0);
         let (up0, down0) = dirs(ledger);

@@ -7,6 +7,7 @@
 //! Figures 1-6; `kfold_mean` aggregates the 5-fold averages the paper plots.
 
 use crate::algos::AlgoSpec;
+use crate::checkpoint::{Checkpoint, CheckpointPlan, CkptMeta};
 use crate::coordinator::experiments::Scale;
 use crate::data::{
     arabic_digits_like, mnist_like, split_by_label, token_corpus, BatchIter, DenseDataset,
@@ -461,7 +462,8 @@ pub fn validate_dataset_algo(dataset: &str, algo: &AlgoSpec) -> Result<(), Strin
 }
 
 /// Train `model` under `spec` on per-site index shards of `data`,
-/// evaluating on `test` after every epoch.
+/// evaluating on `test` after every epoch. Checkpointing is disabled on
+/// this path; [`train_checkpointed`] is the save/resume-capable variant.
 pub fn train<M: DistModel + Clone, D: DataSource>(
     model: M,
     spec: &TrainSpec,
@@ -469,6 +471,44 @@ pub fn train<M: DistModel + Clone, D: DataSource>(
     shards: &[Vec<usize>],
     test: &D,
 ) -> TrainLog {
+    train_checkpointed(model, spec, data, shards, test, &CheckpointPlan::default(), None)
+        .expect("training without checkpoint io cannot fail")
+}
+
+/// [`train`] plus checkpoint save/resume. When `plan` carries a path, the
+/// canonical run state — parameters, Adam moments and step count, the
+/// epoch-plan RNG cursor, the next epoch index and the algorithm's
+/// cross-step compressor state — is written atomically at every epoch
+/// boundary the plan selects (and always after the final epoch). Passing
+/// a loaded [`Checkpoint`] as `resume` continues that run where it left
+/// off: the remaining epochs reproduce what the uninterrupted run would
+/// have logged bit-for-bit (`tests/checkpoint_roundtrip.rs` asserts the
+/// final checkpoint files are byte-identical).
+///
+/// Checkpoints are defined at epoch boundaries under
+/// [`Schedule::EveryBatch`] only. A periodic schedule leaves replicas
+/// drifted away from the canonical parameters between syncs — state the
+/// v1 container does not carry — so both saving and resuming reject
+/// periodic schedules with a named error instead of resuming wrong.
+pub fn train_checkpointed<M: DistModel + Clone, D: DataSource>(
+    model: M,
+    spec: &TrainSpec,
+    data: &D,
+    shards: &[Vec<usize>],
+    test: &D,
+    plan: &CheckpointPlan,
+    resume: Option<Checkpoint>,
+) -> std::io::Result<TrainLog> {
+    let invalid =
+        |msg: String| std::io::Error::new(std::io::ErrorKind::InvalidData, msg);
+    if (plan.enabled() || resume.is_some()) && spec.schedule != Schedule::EveryBatch {
+        return Err(invalid(format!(
+            "checkpointing requires --sync-every 1: a periodic schedule leaves replicas \
+             drifted off the canonical parameters between syncs, which the v1 checkpoint \
+             format does not capture (got sync-every {})",
+            spec.schedule.sync_every()
+        )));
+    }
     let pooled = spec.algo == AlgoSpec::Pooled;
     let n_replicas = if pooled { 1 } else { spec.n_sites };
     let mut cluster = Cluster::replicate(model, n_replicas);
@@ -481,8 +521,48 @@ pub fn train<M: DistModel + Clone, D: DataSource>(
     let entry_names = cluster.sites[0].model.entry_names();
     let n_entries = cluster.sites[0].model.local_stats_entry_count();
 
-    let mut epochs = Vec::with_capacity(spec.epochs);
-    for epoch in 0..spec.epochs {
+    // Dataset/scale keys recorded in saved checkpoints so `dad infer` and
+    // `dad train --resume` can rebuild the model without extra flags; a
+    // resumed run inherits them from the checkpoint it came from.
+    let mut start_epoch = 0usize;
+    let mut meta_dataset = plan.dataset.clone();
+    let mut meta_scale = plan.scale.clone();
+    if let Some(ck) = resume {
+        ck.meta.check_resume(
+            &spec.algo.name(),
+            spec.n_sites as u32,
+            spec.batch_per_site as u32,
+            spec.epochs as u32,
+            spec.lr,
+            spec.seed,
+            spec.schedule.sync_every() as u32,
+        )?;
+        let fits = |mats: &[Matrix]| {
+            mats.len() == shapes.len()
+                && mats.iter().zip(&shapes).all(|(m, &(r, c))| m.rows() == r && m.cols() == c)
+        };
+        if !fits(&ck.params) || !fits(&ck.adam_m) || !fits(&ck.adam_v) {
+            return Err(invalid(format!(
+                "checkpoint does not fit this model: expected {} parameter/moment \
+                 matrices shaped {:?}",
+                shapes.len(),
+                shapes
+            )));
+        }
+        params = ck.params;
+        for site in &mut cluster.sites {
+            site.model.set_params(&params);
+        }
+        opt = Adam::from_state(spec.lr, ck.meta.adam_t, ck.adam_m, ck.adam_v);
+        rng = ck.meta.restore_rng();
+        algo.load_state(&ck.algo_state).map_err(invalid)?;
+        start_epoch = ck.meta.next_epoch as usize;
+        meta_dataset = ck.meta.dataset;
+        meta_scale = ck.meta.scale;
+    }
+
+    let mut epochs = Vec::with_capacity(spec.epochs.saturating_sub(start_epoch));
+    for epoch in start_epoch..spec.epochs {
         // Per-site shuffled batch iterators; lockstep over the minimum
         // number of batches (paper: equal shards, equal batch counts).
         let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
@@ -549,12 +629,69 @@ pub fn train<M: DistModel + Clone, D: DataSource>(
             sites_live: cluster.n_sites(),
             mean_eff_rank,
         });
+        if plan.due(epoch + 1, spec.epochs) {
+            let path = plan.save_path.as_ref().expect("due implies a save path");
+            let ck = snapshot_checkpoint(
+                spec,
+                &meta_dataset,
+                &meta_scale,
+                epoch + 1,
+                &params,
+                &opt,
+                &rng,
+                algo.state_mats(),
+            );
+            ck.save(std::path::Path::new(path))?;
+        }
     }
-    TrainLog {
+    Ok(TrainLog {
         algo: spec.algo.name(),
         epochs,
         sim_time_s: cluster.sim_time_s,
         entry_names,
+    })
+}
+
+/// Freeze the canonical run state at an epoch boundary into a
+/// [`Checkpoint`]. `next_epoch` is the first epoch a resumed run should
+/// execute; `params`/`opt`/`rng` are the canonical parameters, optimizer
+/// and epoch-plan RNG exactly as they stand after that many epochs.
+/// Shared by the simulated trainer and `dad serve` so a checkpoint is
+/// byte-identical whichever mode wrote it (given the same trajectory).
+#[allow(clippy::too_many_arguments)]
+pub fn snapshot_checkpoint(
+    spec: &TrainSpec,
+    dataset: &str,
+    scale: &str,
+    next_epoch: usize,
+    params: &[Matrix],
+    opt: &Adam,
+    rng: &Rng,
+    algo_state: Vec<Matrix>,
+) -> Checkpoint {
+    let (rng_state, rng_inc, rng_spare) = rng.state_parts();
+    let (m, v) = opt.moments();
+    Checkpoint {
+        meta: CkptMeta {
+            algo: spec.algo.name(),
+            dataset: dataset.to_string(),
+            scale: scale.to_string(),
+            n_sites: spec.n_sites as u32,
+            batch_per_site: spec.batch_per_site as u32,
+            epochs: spec.epochs as u32,
+            lr: spec.lr,
+            seed: spec.seed,
+            sync_every: spec.schedule.sync_every() as u32,
+            next_epoch: next_epoch as u32,
+            adam_t: opt.step_count(),
+            rng_state,
+            rng_inc,
+            rng_spare,
+        },
+        params: params.to_vec(),
+        adam_m: m.to_vec(),
+        adam_v: v.to_vec(),
+        algo_state,
     }
 }
 

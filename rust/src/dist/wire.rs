@@ -47,6 +47,15 @@
 //! | `step-meta`, `step-sync` | control | per-step prologue |
 //! | `eff-rank` | control | rank-dAD effective-rank telemetry |
 //! | `local-loss` | control | periodic-schedule local-phase losses |
+//! | `resume` | control | checkpoint state broadcast on `--resume` |
+//! | `infer-hello`, `infer-welcome` | control | inference-server handshake |
+//! | `infer-req`, `infer-res` | control | batched inference request/response |
+//! | `infer-shutdown` | control | clean inference-server stop |
+//!
+//! The same framing is reused verbatim as the on-disk checkpoint container
+//! (`ckpt-meta` / `ckpt-params` / `ckpt-adam-m` / `ckpt-adam-v` /
+//! `ckpt-algo` / `ckpt-end` frames behind a magic header) — see
+//! [`crate::checkpoint`] and `rust/docs/FORMATS.md` for the normative spec.
 
 use std::io::{self, Read, Write};
 
@@ -57,10 +66,12 @@ use crate::tensor::Matrix;
 /// the step prologue gained `step-meta.n_aux`); to 3 when `config` gained
 /// the site recv-timeout and partition-override fields (the chaos/fault
 /// layer); to 4 when frame kind 2 (sparse payload: u32 index + f32 value
-/// pairs for DGC/VBC/AdaComp) was added. A peer from an older build
-/// dialing a newer endpoint fails cleanly at the handshake instead of
-/// mid-run.
-pub const WIRE_VERSION: u8 = 4;
+/// pairs for DGC/VBC/AdaComp) was added; to 5 when `config` gained the
+/// resume flag (followed by a `resume` control frame carrying checkpoint
+/// state) and the `infer-*` serving handshake was added. A peer from an
+/// older build dialing a newer endpoint fails cleanly at the handshake
+/// instead of mid-run.
+pub const WIRE_VERSION: u8 = 5;
 
 /// Upper bound on one frame's post-prefix length (1 GiB): a decoder sanity
 /// check against corrupt or hostile length prefixes.

@@ -1,0 +1,830 @@
+//! Batched inference serving from a checkpoint: `dad infer`.
+//!
+//! [`InferServer`] loads a [`Checkpoint`](crate::checkpoint::Checkpoint),
+//! rebuilds the model it describes (via the same deterministic
+//! [`build_task`] every training process uses), installs the checkpointed
+//! parameters, and serves predictions over the zero-dependency TCP stack.
+//! Requests are coalesced: concurrent in-flight requests are drained into
+//! one forward pass per batch window — row batches for the MLP, token
+//! batches (bucketed by sequence length) for the transformer LM — so
+//! throughput scales with concurrency instead of paying one matmul per
+//! request.
+//!
+//! The protocol is four control frames over the shared wire codec
+//! ([`crate::dist::wire`]; the codec's version check covers the handshake):
+//!
+//! ```text
+//! client -> server   infer-hello     (empty body)
+//! server -> client   infer-welcome   model kind, dataset, scale,
+//!                                    in_dim, out_dim, max_t
+//! client -> server   infer-req       u64 req id, u8 kind,
+//!                                    kind 0: u32 d,  d  f32 features
+//!                                    kind 1: u32 t,  t  u32 token ids
+//! server -> client   infer-res       u64 req id, u8 status,
+//!                                    status 0: u32 argmax, f32 prob
+//!                                    status 1: str error
+//! client -> server   infer-shutdown  (empty body; drains, then stops)
+//! ```
+//!
+//! Byte layouts are specified normatively in `rust/docs/FORMATS.md`;
+//! operational usage (flags, exit behavior, the bench loop) in
+//! `rust/docs/OPERATIONS.md`. `tests/infer_serving.rs` drives a live
+//! server end-to-end for both model kinds.
+//!
+//! [`run_bench`] is the closed-loop load generator behind `dad infer
+//! --bench`: N client threads issue requests back-to-back and the merged
+//! latency distribution is reported as p50/p99/QPS (the `BENCH_serving.json`
+//! schema EXPERIMENTS.md defines).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::checkpoint::Checkpoint;
+use crate::coordinator::experiments::Scale;
+use crate::coordinator::trainer::{build_task, TrainTask};
+use crate::dist::wire::{decode, encode_control, proto_err, Body, ByteReader, ByteWriter};
+use crate::nn::model::{Batch, DistModel};
+use crate::nn::{Mlp, Transformer};
+use crate::tensor::{Matrix, Rng};
+
+/// Server-side batching knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct InferOpts {
+    /// Largest number of requests folded into one forward pass.
+    pub max_batch: usize,
+    /// How long the batcher waits after the first queued request before
+    /// running the pass, to let concurrent requests coalesce.
+    pub window: Duration,
+}
+
+impl Default for InferOpts {
+    fn default() -> Self {
+        InferOpts { max_batch: 64, window: Duration::from_millis(2) }
+    }
+}
+
+/// What the server tells every client in the `infer-welcome` frame.
+#[derive(Clone, Debug)]
+pub struct ServerInfo {
+    /// Model kind: `"mlp"` (row requests) or `"lm"` (token requests).
+    pub model: String,
+    /// Dataset key the checkpoint was trained on.
+    pub dataset: String,
+    /// Scale key the checkpoint was trained at.
+    pub scale: String,
+    /// Expected feature count per row request (0 for the LM).
+    pub in_dim: usize,
+    /// Classes (MLP) or vocabulary size (LM) — the score-row width.
+    pub out_dim: usize,
+    /// Longest accepted token sequence (0 for the MLP).
+    pub max_t: usize,
+}
+
+impl ServerInfo {
+    fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.push_str(&self.model);
+        w.push_str(&self.dataset);
+        w.push_str(&self.scale);
+        w.push_u32(self.in_dim as u32);
+        w.push_u32(self.out_dim as u32);
+        w.push_u32(self.max_t as u32);
+        w.finish()
+    }
+
+    fn decode(body: &[u8]) -> io::Result<ServerInfo> {
+        let mut r = ByteReader::new(body);
+        let info = ServerInfo {
+            model: r.read_str()?,
+            dataset: r.read_str()?,
+            scale: r.read_str()?,
+            in_dim: r.read_u32()? as usize,
+            out_dim: r.read_u32()? as usize,
+            max_t: r.read_u32()? as usize,
+        };
+        if r.remaining() != 0 {
+            return Err(proto_err(format!(
+                "infer-welcome frame has {} trailing bytes (version skew?)",
+                r.remaining()
+            )));
+        }
+        Ok(info)
+    }
+}
+
+/// The model a server answers with. The GRU classifier is deliberately
+/// absent: its per-timestep matrix input has no compact request encoding,
+/// so `arabic` checkpoints are rejected at load time with a named error.
+enum ServedModel {
+    /// MLP over dense feature rows (`mnist` checkpoints).
+    Dense(Mlp),
+    /// Decoder-only transformer over token windows (`lm` checkpoints).
+    Tokens(Transformer),
+}
+
+/// A parsed, validated request waiting for the batcher.
+enum ReqInput {
+    /// One dense feature row (already length-checked).
+    Row(Vec<f32>),
+    /// One token window (already range-checked).
+    Ids(Vec<u32>),
+}
+
+struct Pending {
+    req_id: u64,
+    input: ReqInput,
+    out: Arc<Mutex<TcpStream>>,
+}
+
+/// State shared between the accept loop, per-connection readers and the
+/// batcher.
+struct Shared {
+    queue: Mutex<VecDeque<Pending>>,
+    ready: Condvar,
+    stop: AtomicBool,
+    served: AtomicU64,
+}
+
+impl Shared {
+    fn new() -> Shared {
+        Shared {
+            queue: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+            stop: AtomicBool::new(false),
+            served: AtomicU64::new(0),
+        }
+    }
+}
+
+/// A batched inference server bound to a TCP address, ready to
+/// [`run`](InferServer::run).
+pub struct InferServer {
+    listener: TcpListener,
+    model: ServedModel,
+    info: ServerInfo,
+    opts: InferOpts,
+}
+
+fn invalid(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+fn check_fit(params: &[Matrix], shapes: &[(usize, usize)]) -> io::Result<()> {
+    if params.len() != shapes.len()
+        || params.iter().zip(shapes).any(|(p, &(r, c))| p.rows() != r || p.cols() != c)
+    {
+        return Err(invalid(format!(
+            "checkpoint does not fit the model its meta describes: expected {} matrices \
+             shaped {:?}",
+            shapes.len(),
+            shapes
+        )));
+    }
+    Ok(())
+}
+
+impl InferServer {
+    /// Rebuild the checkpointed model (deterministically, from the
+    /// dataset/scale/seed recorded in its meta), install the parameters,
+    /// and bind `addr`. Fails with named errors on unservable checkpoints
+    /// (the `arabic` GRU) or parameters that do not fit the architecture.
+    pub fn bind(addr: &str, ck: Checkpoint, opts: InferOpts) -> io::Result<InferServer> {
+        let scale = Scale::parse(&ck.meta.scale).ok_or_else(|| {
+            invalid(format!("checkpoint records unknown scale {:?}", ck.meta.scale))
+        })?;
+        let task = build_task(&ck.meta.dataset, scale, ck.meta.n_sites as usize, ck.meta.seed)
+            .map_err(invalid)?;
+        let (model, in_dim, out_dim, max_t, kind) = match task {
+            TrainTask::Dense { mut model, .. } => {
+                check_fit(&ck.params, &model.param_shapes())?;
+                model.set_params(&ck.params);
+                let in_dim = model.dims[0];
+                let out_dim = *model.dims.last().expect("mlp has layers");
+                (ServedModel::Dense(model), in_dim, out_dim, 0, "mlp")
+            }
+            TrainTask::Tokens { mut model, .. } => {
+                check_fit(&ck.params, &model.param_shapes())?;
+                model.set_params(&ck.params);
+                let (vocab, max_t) = (model.cfg.vocab, model.cfg.max_t);
+                (ServedModel::Tokens(model), 0, vocab, max_t, "lm")
+            }
+            TrainTask::Seq { .. } => {
+                return Err(io::Error::new(
+                    io::ErrorKind::Unsupported,
+                    "the arabic GRU classifier is not servable: its per-timestep matrix \
+                     input has no inference request encoding (serve mnist or lm checkpoints)",
+                ));
+            }
+        };
+        let info = ServerInfo {
+            model: kind.to_string(),
+            dataset: ck.meta.dataset.clone(),
+            scale: ck.meta.scale.clone(),
+            in_dim,
+            out_dim,
+            max_t,
+        };
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| io::Error::new(e.kind(), format!("bind {addr}: {e}")))?;
+        Ok(InferServer { listener, model, info, opts })
+    }
+
+    /// The bound address (useful with `:0` ephemeral ports in tests).
+    pub fn local_addr(&self) -> io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// What this server will announce in `infer-welcome`.
+    pub fn info(&self) -> &ServerInfo {
+        &self.info
+    }
+
+    /// Serve until a client sends `infer-shutdown`: accept connections,
+    /// coalesce their requests into batched forward passes, answer each
+    /// request on its own connection. Returns the number of requests
+    /// served. Never panics on malformed input — bad requests get a
+    /// status-1 `infer-res` (or, for undecodable frames, a dropped
+    /// connection with a note on stderr).
+    pub fn run(self) -> io::Result<u64> {
+        let InferServer { listener, model, info, opts } = self;
+        let self_addr = listener.local_addr()?;
+        let shared = Arc::new(Shared::new());
+        let batcher = {
+            let shared = Arc::clone(&shared);
+            thread::spawn(move || batch_loop(model, &shared, opts))
+        };
+        for conn in listener.incoming() {
+            if shared.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            let stream = match conn {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("[infer] accept failed: {e}");
+                    continue;
+                }
+            };
+            let shared = Arc::clone(&shared);
+            let info = info.clone();
+            thread::spawn(move || connection_loop(stream, &info, &shared, self_addr));
+        }
+        // Wake the batcher so it drains the queue and observes the stop
+        // flag even if no request arrives after shutdown.
+        shared.ready.notify_all();
+        batcher.join().map_err(|_| {
+            io::Error::new(io::ErrorKind::Other, "inference batcher thread panicked")
+        })?;
+        Ok(shared.served.load(Ordering::SeqCst))
+    }
+}
+
+/// Serialize + send one `infer-res` under the connection's write lock (so
+/// batched responses to the same client never interleave mid-frame).
+fn send_res(out: &Mutex<TcpStream>, req_id: u64, result: Result<(u32, f32), &str>) {
+    let mut w = ByteWriter::new();
+    w.push_u64(req_id);
+    match result {
+        Ok((argmax, prob)) => {
+            w.push_u8(0);
+            w.push_u32(argmax);
+            w.push_f32(prob);
+        }
+        Err(msg) => {
+            w.push_u8(1);
+            w.push_str(msg);
+        }
+    }
+    let mut frame = Vec::new();
+    encode_control(&mut frame, "infer-res", &w.finish()).expect("vec write");
+    let stream = out.lock().expect("infer writer lock poisoned");
+    if let Err(e) = io::Write::write_all(&mut &*stream, &frame) {
+        eprintln!("[infer] dropping response {req_id}: {e}");
+    }
+}
+
+/// Parse + validate one `infer-req` body against the served model's
+/// expectations. `Err` carries the client-facing message.
+fn parse_req(body: &[u8], info: &ServerInfo) -> Result<(u64, ReqInput), (u64, String)> {
+    let mut r = ByteReader::new(body);
+    let req_id = r.read_u64().map_err(|e| (0, e.to_string()))?;
+    let fail = |msg: String| (req_id, msg);
+    let kind = r.read_u8().map_err(|e| fail(e.to_string()))?;
+    match kind {
+        0 => {
+            if info.model != "mlp" {
+                return Err(fail(format!(
+                    "this server serves a {} model; send token requests (kind 1)",
+                    info.model
+                )));
+            }
+            let d = r.read_u32().map_err(|e| fail(e.to_string()))? as usize;
+            if d != info.in_dim {
+                return Err(fail(format!(
+                    "row request has {d} features, the model takes {}",
+                    info.in_dim
+                )));
+            }
+            let mut row = Vec::with_capacity(d);
+            for _ in 0..d {
+                row.push(r.read_f32().map_err(|e| fail(e.to_string()))?);
+            }
+            if r.remaining() != 0 {
+                return Err(fail(format!("{} trailing bytes in infer-req", r.remaining())));
+            }
+            Ok((req_id, ReqInput::Row(row)))
+        }
+        1 => {
+            if info.model != "lm" {
+                return Err(fail(format!(
+                    "this server serves a {} model; send row requests (kind 0)",
+                    info.model
+                )));
+            }
+            let t = r.read_u32().map_err(|e| fail(e.to_string()))? as usize;
+            if t == 0 || t > info.max_t {
+                return Err(fail(format!(
+                    "sequence length {t} outside the model's 1..={} window",
+                    info.max_t
+                )));
+            }
+            let mut ids = Vec::with_capacity(t);
+            for _ in 0..t {
+                let id = r.read_u32().map_err(|e| fail(e.to_string()))?;
+                if id as usize >= info.out_dim {
+                    return Err(fail(format!(
+                        "token id {id} outside the {} entry vocabulary",
+                        info.out_dim
+                    )));
+                }
+                ids.push(id);
+            }
+            if r.remaining() != 0 {
+                return Err(fail(format!("{} trailing bytes in infer-req", r.remaining())));
+            }
+            Ok((req_id, ReqInput::Ids(ids)))
+        }
+        k => Err(fail(format!("unknown infer-req kind {k}"))),
+    }
+}
+
+/// One connection's reader: answer the hello, enqueue valid requests,
+/// reject invalid ones inline, and translate `infer-shutdown` into the
+/// server-wide stop (plus a self-dial that unblocks the accept loop).
+fn connection_loop(stream: TcpStream, info: &ServerInfo, shared: &Shared, self_addr: SocketAddr) {
+    let out = Arc::new(Mutex::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("[infer] cannot clone connection for writes: {e}");
+            return;
+        }
+    }));
+    let mut rd = &stream;
+    loop {
+        let frame = match decode(&mut rd) {
+            Ok(f) => f,
+            Err(e) => {
+                // EOF after the last response is the normal client
+                // hang-up; anything else is worth a note.
+                if e.kind() != io::ErrorKind::UnexpectedEof {
+                    eprintln!("[infer] dropping connection: {e}");
+                }
+                return;
+            }
+        };
+        let body = match frame.body {
+            Body::Control(b) => b,
+            _ => {
+                eprintln!("[infer] dropping connection: payload frame {:?}", frame.tag);
+                return;
+            }
+        };
+        match frame.tag.as_str() {
+            "infer-hello" => {
+                let mut buf = Vec::new();
+                encode_control(&mut buf, "infer-welcome", &info.encode()).expect("vec write");
+                let w = out.lock().expect("infer writer lock poisoned");
+                if io::Write::write_all(&mut &*w, &buf).is_err() {
+                    return;
+                }
+            }
+            "infer-req" => match parse_req(&body, info) {
+                Ok((req_id, input)) => {
+                    let mut q = shared.queue.lock().expect("infer queue lock poisoned");
+                    q.push_back(Pending { req_id, input, out: Arc::clone(&out) });
+                    drop(q);
+                    shared.ready.notify_all();
+                }
+                Err((req_id, msg)) => send_res(&out, req_id, Err(&msg)),
+            },
+            "infer-shutdown" => {
+                shared.stop.store(true, Ordering::SeqCst);
+                shared.ready.notify_all();
+                // Unblock the accept loop so `run` can return.
+                let _ = TcpStream::connect(self_addr);
+                return;
+            }
+            other => {
+                eprintln!("[infer] dropping connection: unexpected frame {other:?}");
+                return;
+            }
+        }
+    }
+}
+
+/// The batcher: wait for work, let the window fill, drain up to
+/// `max_batch` requests, run one forward pass per shape group, answer.
+/// Exits once the stop flag is set *and* the queue is drained — queued
+/// requests are answered even when shutdown races them.
+fn batch_loop(model: ServedModel, shared: &Shared, opts: InferOpts) {
+    loop {
+        let mut q = shared.queue.lock().expect("infer queue lock poisoned");
+        while q.is_empty() && !shared.stop.load(Ordering::SeqCst) {
+            q = shared
+                .ready
+                .wait_timeout(q, Duration::from_millis(50))
+                .expect("infer queue lock poisoned")
+                .0;
+        }
+        if q.is_empty() {
+            return; // stopped and drained
+        }
+        drop(q);
+        // Coalescing window: let concurrent clients land in this batch.
+        thread::sleep(opts.window);
+        let batch: Vec<Pending> = {
+            let mut q = shared.queue.lock().expect("infer queue lock poisoned");
+            let n = q.len().min(opts.max_batch);
+            q.drain(..n).collect()
+        };
+        run_batch(&model, batch, shared);
+    }
+}
+
+/// Row-major argmax + probability of one score row.
+fn row_argmax(scores: &Matrix, row: usize) -> (u32, f32) {
+    let cols = scores.cols();
+    let data = &scores.data()[row * cols..(row + 1) * cols];
+    let mut best = 0usize;
+    for (i, &v) in data.iter().enumerate() {
+        if v > data[best] {
+            best = i;
+        }
+    }
+    (best as u32, data[best])
+}
+
+/// One drained batch -> grouped forward passes -> responses.
+fn run_batch(model: &ServedModel, batch: Vec<Pending>, shared: &Shared) {
+    match model {
+        ServedModel::Dense(mlp) => {
+            let (d, c) = (mlp.dims[0], *mlp.dims.last().expect("mlp has layers"));
+            let mut flat = Vec::with_capacity(batch.len() * d);
+            for p in &batch {
+                match &p.input {
+                    ReqInput::Row(row) => flat.extend_from_slice(row),
+                    ReqInput::Ids(_) => unreachable!("parse_req rejects tokens for mlp"),
+                }
+            }
+            let x = Matrix::from_vec(batch.len(), d, flat);
+            let scores =
+                mlp.predict(&Batch::Dense { x, y: Matrix::zeros(batch.len(), c) });
+            for (i, p) in batch.iter().enumerate() {
+                let (argmax, prob) = row_argmax(&scores, i);
+                send_res(&p.out, p.req_id, Ok((argmax, prob)));
+                shared.served.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        ServedModel::Tokens(tf) => {
+            // Bucket by sequence length: one forward pass per distinct T,
+            // in deterministic (ascending) order.
+            let mut groups: BTreeMap<usize, Vec<&Pending>> = BTreeMap::new();
+            for p in &batch {
+                match &p.input {
+                    ReqInput::Ids(ids) => groups.entry(ids.len()).or_default().push(p),
+                    ReqInput::Row(_) => unreachable!("parse_req rejects rows for lm"),
+                }
+            }
+            for (t, group) in groups {
+                let b = group.len();
+                let mut ids = Vec::with_capacity(b * t);
+                for p in &group {
+                    match &p.input {
+                        ReqInput::Ids(w) => ids.extend_from_slice(w),
+                        ReqInput::Row(_) => unreachable!(),
+                    }
+                }
+                let scores =
+                    tf.predict(&Batch::Tokens { b, t, ids, targets: vec![0; b * t] });
+                for (i, p) in group.iter().enumerate() {
+                    // The next-token distribution lives on the window's
+                    // last position: row i*t + (t-1) of the (b*t, vocab)
+                    // score matrix.
+                    let (argmax, prob) = row_argmax(&scores, i * t + (t - 1));
+                    send_res(&p.out, p.req_id, Ok((argmax, prob)));
+                    shared.served.fetch_add(1, Ordering::SeqCst);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client + load generator
+// ---------------------------------------------------------------------------
+
+/// A synchronous inference client: one connection, one request in flight.
+pub struct InferClient {
+    stream: TcpStream,
+    info: ServerInfo,
+    next_id: u64,
+}
+
+impl InferClient {
+    /// Dial the server and complete the hello/welcome handshake.
+    pub fn connect(addr: &str) -> io::Result<InferClient> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| io::Error::new(e.kind(), format!("connect {addr}: {e}")))?;
+        encode_control(&mut &stream, "infer-hello", &[])?;
+        let frame = decode(&mut &stream)?;
+        if frame.tag != "infer-welcome" {
+            return Err(proto_err(format!("expected infer-welcome, got {:?}", frame.tag)));
+        }
+        let body = match frame.body {
+            Body::Control(b) => b,
+            _ => return Err(proto_err("infer-welcome must be a control frame".into())),
+        };
+        Ok(InferClient { stream, info: ServerInfo::decode(&body)?, next_id: 1 })
+    }
+
+    /// What the server announced about itself.
+    pub fn info(&self) -> &ServerInfo {
+        &self.info
+    }
+
+    /// Classify one dense feature row; returns `(class, probability)`.
+    pub fn classify(&mut self, row: &[f32]) -> io::Result<(usize, f32)> {
+        let mut w = ByteWriter::new();
+        let id = self.next_id;
+        w.push_u64(id);
+        w.push_u8(0);
+        w.push_u32(row.len() as u32);
+        for &v in row {
+            w.push_f32(v);
+        }
+        self.roundtrip(id, &w.finish())
+    }
+
+    /// Predict the next token after `ids`; returns `(token, probability)`.
+    pub fn next_token(&mut self, ids: &[u32]) -> io::Result<(usize, f32)> {
+        let mut w = ByteWriter::new();
+        let id = self.next_id;
+        w.push_u64(id);
+        w.push_u8(1);
+        w.push_u32(ids.len() as u32);
+        for &t in ids {
+            w.push_u32(t);
+        }
+        self.roundtrip(id, &w.finish())
+    }
+
+    fn roundtrip(&mut self, id: u64, body: &[u8]) -> io::Result<(usize, f32)> {
+        self.next_id += 1;
+        encode_control(&mut &self.stream, "infer-req", body)?;
+        let frame = decode(&mut &self.stream)?;
+        if frame.tag != "infer-res" {
+            return Err(proto_err(format!("expected infer-res, got {:?}", frame.tag)));
+        }
+        let res = match frame.body {
+            Body::Control(b) => b,
+            _ => return Err(proto_err("infer-res must be a control frame".into())),
+        };
+        let mut r = ByteReader::new(&res);
+        let got_id = r.read_u64()?;
+        if got_id != id {
+            return Err(proto_err(format!("response for request {got_id}, expected {id}")));
+        }
+        match r.read_u8()? {
+            0 => Ok((r.read_u32()? as usize, r.read_f32()?)),
+            1 => Err(proto_err(format!("server rejected request: {}", r.read_str()?))),
+            s => Err(proto_err(format!("unknown infer-res status {s}"))),
+        }
+    }
+
+    /// Ask the server to drain its queue and stop accepting.
+    pub fn shutdown(self) -> io::Result<()> {
+        encode_control(&mut &self.stream, "infer-shutdown", &[])?;
+        Ok(())
+    }
+}
+
+/// One `dad infer --bench` run's results — the `BENCH_serving.json` schema
+/// (EXPERIMENTS.md §serving).
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    /// Model kind the server announced ("mlp" | "lm").
+    pub model: String,
+    /// Total requests completed.
+    pub requests: usize,
+    /// Closed-loop client threads.
+    pub concurrency: usize,
+    /// Wall-clock seconds for the whole run.
+    pub wall_s: f64,
+    /// Median request latency, milliseconds.
+    pub p50_ms: f64,
+    /// 99th-percentile request latency, milliseconds.
+    pub p99_ms: f64,
+    /// Completed requests per wall-clock second.
+    pub qps: f64,
+}
+
+impl BenchReport {
+    /// Hand-rolled JSON (no serializer dependency), one flat object.
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"model\":\"{}\",\"requests\":{},\"concurrency\":{},\"wall_s\":{:.6},\
+             \"p50_ms\":{:.3},\"p99_ms\":{:.3},\"qps\":{:.1}}}",
+            self.model, self.requests, self.concurrency, self.wall_s, self.p50_ms,
+            self.p99_ms, self.qps
+        )
+    }
+}
+
+/// Sorted-latency percentile (nearest-rank on the merged distribution).
+fn percentile_ms(sorted: &[f64], pct: usize) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let idx = (sorted.len() * pct / 100).min(sorted.len() - 1);
+    sorted[idx]
+}
+
+/// Closed-loop load generator: `concurrency` threads each dial `addr`,
+/// issue deterministic (seeded) requests back-to-back until the shared
+/// total reaches `requests`, and record per-request wall latency. Inputs
+/// are synthesized to match the served model — standard-normal rows for
+/// the MLP, uniform token windows for the LM.
+pub fn run_bench(
+    addr: &str,
+    requests: usize,
+    concurrency: usize,
+    seed: u64,
+) -> io::Result<BenchReport> {
+    let concurrency = concurrency.max(1);
+    let requests = requests.max(1);
+    let model = InferClient::connect(addr)?.info().model.clone();
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(concurrency);
+    for worker in 0..concurrency {
+        // Spread the remainder so thread totals sum exactly to `requests`.
+        let n = requests / concurrency + usize::from(worker < requests % concurrency);
+        let addr = addr.to_string();
+        handles.push(thread::spawn(move || -> io::Result<Vec<f64>> {
+            let mut client = InferClient::connect(&addr)?;
+            let info = client.info().clone();
+            let mut rng = Rng::new(seed.wrapping_add(worker as u64));
+            let mut lats = Vec::with_capacity(n);
+            for _ in 0..n {
+                let start = Instant::now();
+                if info.model == "lm" {
+                    let t = info.max_t.min(8).max(1);
+                    let ids: Vec<u32> =
+                        (0..t).map(|_| rng.next_u32() % info.out_dim as u32).collect();
+                    client.next_token(&ids)?;
+                } else {
+                    let row: Vec<f32> = (0..info.in_dim).map(|_| rng.normal()).collect();
+                    client.classify(&row)?;
+                }
+                lats.push(start.elapsed().as_secs_f64() * 1e3);
+            }
+            Ok(lats)
+        }));
+    }
+    let mut lats: Vec<f64> = Vec::with_capacity(requests);
+    for h in handles {
+        let worker_lats = h
+            .join()
+            .map_err(|_| io::Error::new(io::ErrorKind::Other, "bench worker panicked"))??;
+        lats.extend(worker_lats);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    lats.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    Ok(BenchReport {
+        model,
+        requests: lats.len(),
+        concurrency,
+        wall_s,
+        p50_ms: percentile_ms(&lats, 50),
+        p99_ms: percentile_ms(&lats, 99),
+        qps: lats.len() as f64 / wall_s.max(1e-9),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn server_info_roundtrips() {
+        let info = ServerInfo {
+            model: "lm".into(),
+            dataset: "lm".into(),
+            scale: "quick".into(),
+            in_dim: 0,
+            out_dim: 50,
+            max_t: 16,
+        };
+        let back = ServerInfo::decode(&info.encode()).unwrap();
+        assert_eq!(back.model, info.model);
+        assert_eq!(back.out_dim, 50);
+        assert_eq!(back.max_t, 16);
+        assert!(ServerInfo::decode(&info.encode()[..5]).is_err());
+    }
+
+    #[test]
+    fn parse_req_validates_against_model() {
+        let mlp = ServerInfo {
+            model: "mlp".into(),
+            dataset: "mnist".into(),
+            scale: "quick".into(),
+            in_dim: 3,
+            out_dim: 10,
+            max_t: 0,
+        };
+        let mut w = ByteWriter::new();
+        w.push_u64(7);
+        w.push_u8(0);
+        w.push_u32(3);
+        for v in [0.1f32, 0.2, 0.3] {
+            w.push_f32(v);
+        }
+        let (id, input) = parse_req(&w.finish(), &mlp).unwrap();
+        assert_eq!(id, 7);
+        assert!(matches!(input, ReqInput::Row(ref r) if r.len() == 3));
+
+        // Wrong feature count -> named rejection carrying the request id.
+        let mut w = ByteWriter::new();
+        w.push_u64(8);
+        w.push_u8(0);
+        w.push_u32(2);
+        w.push_f32(0.0);
+        w.push_f32(0.0);
+        let (id, msg) = parse_req(&w.finish(), &mlp).unwrap_err();
+        assert_eq!(id, 8);
+        assert!(msg.contains("features"), "{msg}");
+
+        // Token request against an MLP server -> kind mismatch.
+        let mut w = ByteWriter::new();
+        w.push_u64(9);
+        w.push_u8(1);
+        w.push_u32(1);
+        w.push_u32(0);
+        let (_, msg) = parse_req(&w.finish(), &mlp).unwrap_err();
+        assert!(msg.contains("kind 0"), "{msg}");
+
+        let lm = ServerInfo { model: "lm".into(), in_dim: 0, out_dim: 10, max_t: 4, ..mlp };
+        // Out-of-vocab token id.
+        let mut w = ByteWriter::new();
+        w.push_u64(10);
+        w.push_u8(1);
+        w.push_u32(2);
+        w.push_u32(3);
+        w.push_u32(99);
+        let (_, msg) = parse_req(&w.finish(), &lm).unwrap_err();
+        assert!(msg.contains("vocabulary"), "{msg}");
+        // Over-long window.
+        let mut w = ByteWriter::new();
+        w.push_u64(11);
+        w.push_u8(1);
+        w.push_u32(9);
+        for _ in 0..9 {
+            w.push_u32(0);
+        }
+        let (_, msg) = parse_req(&w.finish(), &lm).unwrap_err();
+        assert!(msg.contains("window"), "{msg}");
+    }
+
+    #[test]
+    fn percentiles_and_json_shape() {
+        let lats: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile_ms(&lats, 50), 51.0);
+        assert_eq!(percentile_ms(&lats, 99), 100.0);
+        let report = BenchReport {
+            model: "mlp".into(),
+            requests: 100,
+            concurrency: 4,
+            wall_s: 0.5,
+            p50_ms: 1.25,
+            p99_ms: 4.5,
+            qps: 200.0,
+        };
+        let json = report.to_json();
+        for key in ["\"model\"", "\"requests\"", "\"p50_ms\"", "\"p99_ms\"", "\"qps\""] {
+            assert!(json.contains(key), "{json}");
+        }
+    }
+}

@@ -26,13 +26,23 @@
 
 pub mod algos;
 pub mod bench;
+pub mod checkpoint;
 pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod dist;
+pub mod infer;
 pub mod lowrank;
 pub mod metrics;
 pub mod nn;
 pub mod runtime;
 pub mod scenario;
 pub mod tensor;
+
+/// The normative wire-protocol and checkpoint-container specification,
+/// embedded verbatim from `rust/docs/FORMATS.md` so the `cargo doc`
+/// CI job (which denies warnings) fails on broken intra-doc links in the
+/// spec, and so the spec ships inside the rendered rustdoc.
+pub mod specs {
+    #![doc = include_str!("../docs/FORMATS.md")]
+}

@@ -94,6 +94,19 @@ impl PowerSgdState {
     pub fn wire_bytes(&self, rows: usize, cols: usize) -> u64 {
         ((rows + cols) * self.rank * 4) as u64
     }
+
+    /// Checkpoint view of the mutable state: the warm-start `Q`
+    /// (cols x rank) and the error-feedback accumulator (rows x cols).
+    pub fn state_mats(&self) -> (&Matrix, &Matrix) {
+        (&self.q, &self.err)
+    }
+
+    /// Rebuild a compressor mid-run from checkpointed `(q, err)` state.
+    pub fn from_state(rank: usize, q: Matrix, err: Matrix) -> Self {
+        assert_eq!(q.cols(), rank, "warm-start Q must be cols x rank");
+        assert_eq!(q.rows(), err.cols(), "Q rows must match gradient cols");
+        PowerSgdState { rank, q, err }
+    }
 }
 
 #[cfg(test)]

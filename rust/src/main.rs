@@ -18,19 +18,32 @@
 //! chaos --list | --recipe NAME [--strict] | --recipe-file PATH
 //!     run a named fault-injection scenario over real TCP sockets and
 //!     assert its convergence-or-clean-failure expectation
+//! infer --serve ADDR --checkpoint PATH | --bench --addr ADDR
+//!     serve batched predictions from a checkpoint over TCP, or drive a
+//!     running server with the closed-loop load generator
 //! info
 //!     platform, artifact and thread-pool status
 //! ```
+//!
+//! `train` and `serve` both accept `--checkpoint PATH`
+//! (+ `--checkpoint-every N`) to save resumable state at epoch
+//! boundaries, and `--resume PATH` to continue a saved run; see
+//! `docs/OPERATIONS.md` for the runbook and `docs/FORMATS.md` for the
+//! container layout.
 
+use std::path::Path;
 use std::time::Duration;
 
 use dad::algos::AlgoSpec;
+use dad::checkpoint::{Checkpoint, CheckpointPlan};
 use dad::config::{Args, TomlLite};
 use dad::coordinator::experiments::{self, Scale};
 use dad::coordinator::{
-    build_task, join_training, serve_training, train, validate_dataset_algo, validate_remote,
-    FaultPolicy, RemoteConfig, Schedule, TrainLog, TrainSpec, TrainTask,
+    build_task, join_training_resumable, serve_training_checkpointed, train_checkpointed,
+    validate_dataset_algo, validate_remote, FaultPolicy, RemoteConfig, Schedule, TrainLog,
+    TrainSpec, TrainTask,
 };
+use dad::infer::{run_bench, InferClient, InferOpts, InferServer};
 use dad::data::Partition;
 use dad::dist::{Direction, Ledger, TcpAgg, TcpSite};
 use dad::scenario::{find_recipe, named_recipes, run_recipe, Recipe};
@@ -44,6 +57,7 @@ fn main() {
         "serve" => cmd_serve(&args),
         "join" => cmd_join(&args),
         "chaos" => cmd_chaos(&args),
+        "infer" => cmd_infer(&args),
         "info" => cmd_info(),
         _ => print_help(),
     }
@@ -59,11 +73,16 @@ fn print_help() {
                      [--dataset mnist|arabic|lm]\n\
                      [--epochs N] [--batch B] [--sites S] [--lr F] [--seed N] [--sync-every K]\n\
                      [--scale quick|default|paper] [--config path.toml] [--csv PATH]\n\
+                     [--checkpoint PATH] [--checkpoint-every N] [--resume PATH]\n\
            dad serve [--addr HOST:PORT] [--sites S] [--csv PATH] [--strict]\n\
                      [--partition default|iid|skew:R] [--straggler-deadline SECS]\n\
-                     [--handshake-timeout SECS] [--recv-timeout SECS] [train options]\n\
+                     [--handshake-timeout SECS] [--recv-timeout SECS]\n\
+                     [--checkpoint PATH] [--checkpoint-every N] [--resume PATH] [train options]\n\
            dad join  [HOST:PORT] [--csv PATH]\n\
            dad chaos --list | --recipe NAME [--strict] [--csv PATH] | --recipe-file PATH\n\
+           dad infer --serve HOST:PORT --checkpoint PATH [--max-batch N] [--batch-window-ms MS]\n\
+           dad infer --bench --addr HOST:PORT [--requests N] [--concurrency C]\n\
+                     [--json PATH] [--shutdown]\n\
            dad info\n\
          \n\
          `train` simulates all sites in one process over the loopback transport;\n\
@@ -75,6 +94,11 @@ fn print_help() {
          A site lost at a step boundary degrades the run to the survivors\n\
          (logged as sites_live in the CSV); --strict fails it cleanly instead.\n\
          `chaos` replays named deterministic fault scenarios (see README).\n\
+         --checkpoint saves resumable state (model, Adam moments, RNG cursor,\n\
+         epoch position) at epoch boundaries; --resume continues a saved run\n\
+         bit-for-bit (requires --sync-every 1; see docs/OPERATIONS.md).\n\
+         `infer` serves batched predictions from a checkpoint over TCP and\n\
+         benchmarks a running server into BENCH_serving.json.\n\
          Experiment outputs land in results/*.csv; see EXPERIMENTS.md."
     );
 }
@@ -276,29 +300,71 @@ fn print_epochs(log: &TrainLog) {
     }
 }
 
+/// `--resume PATH`: load the checkpoint, or exit with its named error.
+fn load_resume(args: &Args) -> Option<Checkpoint> {
+    args.opt("resume").map(|p| {
+        Checkpoint::load(Path::new(p)).unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(1)
+        })
+    })
+}
+
+/// `--checkpoint PATH` / `--checkpoint-every N` into a save plan carrying
+/// the dataset/scale keys the checkpoint meta records.
+fn ckpt_plan(args: &Args, dataset: &str, scale_s: &str) -> CheckpointPlan {
+    CheckpointPlan {
+        save_path: args.opt("checkpoint").map(str::to_string),
+        every: args.usize_or("checkpoint-every", 0),
+        dataset: dataset.to_string(),
+        scale: scale_s.to_string(),
+    }
+}
+
 fn cmd_train(args: &Args) {
-    let (spec, dataset) = train_spec_from(args);
+    let (spec, mut dataset) = train_spec_from(args);
+    let mut scale_s = args.opt_or("scale", "default").to_string();
+    let resume = load_resume(args);
+    if let Some(ck) = &resume {
+        // The checkpoint records what it was trained on; CLI dataset/scale
+        // flags would rebuild a different model than the saved parameters,
+        // so the meta wins.
+        dataset = ck.meta.dataset.clone();
+        scale_s = ck.meta.scale.clone();
+    }
+    let scale = Scale::parse(&scale_s).unwrap_or(Scale::Default);
     // Fail fast with a clear error on combinations that cannot train
     // (edad + lm), before any dataset/model construction.
     validate_dataset_algo(&dataset, &spec.algo).unwrap_or_else(|e| {
         eprintln!("{e}");
         std::process::exit(2)
     });
-    let scale = scale_of(args);
-    println!("training {} on {dataset} ({:?})", spec.algo.name(), scale);
+    let plan = ckpt_plan(args, &dataset, &scale_s);
+    println!(
+        "training {} on {dataset} ({scale:?}){}",
+        spec.algo.name(),
+        if resume.is_some() { " [resumed]" } else { "" }
+    );
     let t0 = std::time::Instant::now();
     let log = match build_task(&dataset, scale, spec.n_sites, spec.seed) {
         Ok(TrainTask::Dense { train_ds, test_ds, shards, model }) => {
-            train(model, &spec, &train_ds, &shards, &test_ds)
+            train_checkpointed(model, &spec, &train_ds, &shards, &test_ds, &plan, resume)
         }
         Ok(TrainTask::Seq { train_ds, test_ds, shards, model }) => {
-            train(model, &spec, &train_ds, &shards, &test_ds)
+            train_checkpointed(model, &spec, &train_ds, &shards, &test_ds, &plan, resume)
         }
         Ok(TrainTask::Tokens { train_ds, test_ds, shards, model }) => {
-            train(model, &spec, &train_ds, &shards, &test_ds)
+            train_checkpointed(model, &spec, &train_ds, &shards, &test_ds, &plan, resume)
         }
         Err(e) => panic!("{e}"),
-    };
+    }
+    .unwrap_or_else(|e| {
+        eprintln!("train: {e}");
+        std::process::exit(1)
+    });
+    if let Some(path) = &plan.save_path {
+        println!("checkpoint written to {path}");
+    }
     print_epochs(&log);
     maybe_write_csv(args, &log);
     let up: u64 = log.epochs.iter().map(|e| e.bytes_up).sum();
@@ -311,7 +377,15 @@ fn cmd_train(args: &Args) {
 }
 
 fn cmd_serve(args: &Args) {
-    let (spec, dataset) = train_spec_from(args);
+    let (spec, mut dataset) = train_spec_from(args);
+    let mut scale_arg = args.opt_or("scale", "default").to_string();
+    let resume = load_resume(args);
+    if let Some(ck) = &resume {
+        // As in `train`: the checkpoint meta fixes the task; the joining
+        // sites learn it from the broadcast config.
+        dataset = ck.meta.dataset.clone();
+        scale_arg = ck.meta.scale.clone();
+    }
     // Fail fast on the operator's terminal, before any site can connect:
     // first the dataset/algorithm pairing (edad + lm), then the remote
     // schedule restriction (edad + periodic).
@@ -340,8 +414,9 @@ fn cmd_serve(args: &Args) {
     let handshake = secs("handshake-timeout", 120);
     let straggler = secs("straggler-deadline", 300);
     let recv_timeout_ms = secs("recv-timeout", 600).map(|d| d.as_millis() as u32).unwrap_or(0);
-    let scale_s = args.opt_or("scale", "default").to_string();
+    let scale_s = scale_arg;
     let scale = Scale::parse(&scale_s).unwrap_or(Scale::Default);
+    let plan = ckpt_plan(args, &dataset, &scale_s);
     let addr = args.opt_or("addr", "127.0.0.1:7009").to_string();
     let listener = TcpAgg::bind(&addr, spec.n_sites).unwrap_or_else(|e| {
         eprintln!("bind {addr}: {e}");
@@ -367,6 +442,7 @@ fn cmd_serve(args: &Args) {
         scale: scale_s,
         recv_timeout_ms,
         partition,
+        resume: resume.is_some(),
     }
     .send(&mut agg)
     .unwrap_or_else(|e| {
@@ -382,7 +458,7 @@ fn cmd_serve(args: &Args) {
         })
         .repartition(partition, spec.seed);
     let log = match task {
-        TrainTask::Dense { train_ds, test_ds, shards, model } => serve_training(
+        TrainTask::Dense { train_ds, test_ds, shards, model } => serve_training_checkpointed(
             &mut agg,
             &mut ledger,
             &spec,
@@ -391,8 +467,10 @@ fn cmd_serve(args: &Args) {
             &shards,
             &test_ds,
             policy,
+            &plan,
+            resume,
         ),
-        TrainTask::Seq { train_ds, test_ds, shards, model } => serve_training(
+        TrainTask::Seq { train_ds, test_ds, shards, model } => serve_training_checkpointed(
             &mut agg,
             &mut ledger,
             &spec,
@@ -401,8 +479,10 @@ fn cmd_serve(args: &Args) {
             &shards,
             &test_ds,
             policy,
+            &plan,
+            resume,
         ),
-        TrainTask::Tokens { train_ds, test_ds, shards, model } => serve_training(
+        TrainTask::Tokens { train_ds, test_ds, shards, model } => serve_training_checkpointed(
             &mut agg,
             &mut ledger,
             &spec,
@@ -411,12 +491,17 @@ fn cmd_serve(args: &Args) {
             &shards,
             &test_ds,
             policy,
+            &plan,
+            resume,
         ),
     }
     .unwrap_or_else(|e| {
         eprintln!("serve: {e}");
         std::process::exit(1)
     });
+    if let Some(path) = &plan.save_path {
+        println!("checkpoint written to {path}");
+    }
     print_epochs(&log);
     maybe_write_csv(args, &log);
     println!(
@@ -455,10 +540,11 @@ fn cmd_join(args: &Args) {
     }
     let scale = Scale::parse(&cfg.scale).unwrap_or(Scale::Default);
     println!(
-        "joined {addr} as site {site_id}/{}: {} on {} ({scale:?})",
+        "joined {addr} as site {site_id}/{}: {} on {} ({scale:?}){}",
         cfg.spec.n_sites,
         cfg.spec.algo.name(),
         cfg.dataset,
+        if cfg.resume { " [resumed]" } else { "" }
     );
     let mut ledger = Ledger::new();
     let t0 = std::time::Instant::now();
@@ -469,15 +555,36 @@ fn cmd_join(args: &Args) {
         })
         .repartition(cfg.partition, cfg.spec.seed);
     let log = match task {
-        TrainTask::Dense { train_ds, shards, model, .. } => {
-            join_training(&mut site, &mut ledger, &cfg.spec, model, &train_ds, &shards, site_id)
-        }
-        TrainTask::Seq { train_ds, shards, model, .. } => {
-            join_training(&mut site, &mut ledger, &cfg.spec, model, &train_ds, &shards, site_id)
-        }
-        TrainTask::Tokens { train_ds, shards, model, .. } => {
-            join_training(&mut site, &mut ledger, &cfg.spec, model, &train_ds, &shards, site_id)
-        }
+        TrainTask::Dense { train_ds, shards, model, .. } => join_training_resumable(
+            &mut site,
+            &mut ledger,
+            &cfg.spec,
+            model,
+            &train_ds,
+            &shards,
+            site_id,
+            cfg.resume,
+        ),
+        TrainTask::Seq { train_ds, shards, model, .. } => join_training_resumable(
+            &mut site,
+            &mut ledger,
+            &cfg.spec,
+            model,
+            &train_ds,
+            &shards,
+            site_id,
+            cfg.resume,
+        ),
+        TrainTask::Tokens { train_ds, shards, model, .. } => join_training_resumable(
+            &mut site,
+            &mut ledger,
+            &cfg.spec,
+            model,
+            &train_ds,
+            &shards,
+            site_id,
+            cfg.resume,
+        ),
     }
     .unwrap_or_else(|e| {
         eprintln!("join: {e}");
@@ -575,4 +682,78 @@ fn cmd_chaos(args: &Args) {
         }
     }
     std::process::exit(code);
+}
+
+/// `dad infer`: either serve batched predictions from a checkpoint
+/// (`--serve ADDR --checkpoint PATH`) or benchmark a running server
+/// (`--bench --addr ADDR`), writing the latency report to
+/// `BENCH_serving.json` (or `--json PATH`).
+fn cmd_infer(args: &Args) {
+    if args.has_flag("bench") || args.opt("addr").is_some() {
+        let addr = args.opt_or("addr", "127.0.0.1:7010").to_string();
+        let requests = args.usize_or("requests", 200);
+        let concurrency = args.usize_or("concurrency", 4);
+        let seed = args.usize_or("seed", 13) as u64;
+        println!("bench: {requests} requests x {concurrency} client(s) against {addr}");
+        let report = run_bench(&addr, requests, concurrency, seed).unwrap_or_else(|e| {
+            eprintln!("bench: {e}");
+            std::process::exit(1)
+        });
+        println!(
+            "{} model: p50 {:.3} ms  p99 {:.3} ms  {:.1} req/s over {:.2}s",
+            report.model, report.p50_ms, report.p99_ms, report.qps, report.wall_s
+        );
+        let path = args.opt_or("json", "BENCH_serving.json");
+        std::fs::write(path, report.to_json()).unwrap_or_else(|e| {
+            eprintln!("writing {path}: {e}");
+            std::process::exit(1)
+        });
+        println!("report written to {path}");
+        if args.has_flag("shutdown") {
+            InferClient::connect(&addr)
+                .and_then(InferClient::shutdown)
+                .unwrap_or_else(|e| {
+                    eprintln!("shutdown: {e}");
+                    std::process::exit(1)
+                });
+            println!("server asked to shut down");
+        }
+        return;
+    }
+    let ckpt_path = args.opt("checkpoint").unwrap_or_else(|| {
+        eprintln!(
+            "usage: dad infer --serve HOST:PORT --checkpoint PATH [--max-batch N] \
+             [--batch-window-ms MS]\n       dad infer --bench --addr HOST:PORT \
+             [--requests N] [--concurrency C] [--json PATH] [--shutdown]"
+        );
+        std::process::exit(2)
+    });
+    let ck = Checkpoint::load(Path::new(ckpt_path)).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(1)
+    });
+    let addr = args.opt_or("serve", "127.0.0.1:7010");
+    let opts = InferOpts {
+        max_batch: args.usize_or("max-batch", 64).max(1),
+        window: Duration::from_millis(args.usize_or("batch-window-ms", 2) as u64),
+    };
+    let server = InferServer::bind(addr, ck, opts).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(1)
+    });
+    let info = server.info().clone();
+    let shown = server
+        .local_addr()
+        .map(|a| a.to_string())
+        .unwrap_or_else(|_| addr.to_string());
+    println!(
+        "serving {} checkpoint ({} @ {}) at {shown}; stop with \
+         `dad infer --bench --addr {shown} --shutdown`",
+        info.model, info.dataset, info.scale
+    );
+    let served = server.run().unwrap_or_else(|e| {
+        eprintln!("infer: {e}");
+        std::process::exit(1)
+    });
+    println!("served {served} request(s)");
 }

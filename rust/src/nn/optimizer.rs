@@ -44,6 +44,21 @@ impl Adam {
         self.t
     }
 
+    /// Moment tables `(m, v)` for checkpointing; together with
+    /// [`Adam::step_count`] this is the optimizer's entire mutable state.
+    pub fn moments(&self) -> (&[Matrix], &[Matrix]) {
+        (&self.m, &self.v)
+    }
+
+    /// Rebuild an optimizer mid-run from checkpointed state. `m` and `v`
+    /// must be parallel per-parameter moment tables, `t` the number of
+    /// updates already applied. Hyperparameters are the defaults (override
+    /// the public fields afterwards if a run customized them).
+    pub fn from_state(lr: f32, t: u64, m: Vec<Matrix>, v: Vec<Matrix>) -> Self {
+        assert_eq!(m.len(), v.len(), "moment tables must be parallel");
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, t, m, v }
+    }
+
     /// One update step. `params[i] -= lr * mhat / (sqrt(vhat)+eps)`.
     pub fn step(&mut self, params: &mut [Matrix], grads: &[Matrix]) {
         assert_eq!(params.len(), grads.len());
@@ -149,6 +164,28 @@ mod tests {
             o2.step(&mut p2, std::slice::from_ref(&g));
         }
         assert_eq!(p1[0], p2[0]);
+    }
+
+    #[test]
+    fn adam_from_state_continues_bit_identically() {
+        let g = Matrix::from_vec(1, 2, vec![0.5, -0.25]);
+        let mut p_full = vec![Matrix::zeros(1, 2)];
+        let mut o_full = Adam::paper(&[(1, 2)]);
+        for _ in 0..10 {
+            o_full.step(&mut p_full, std::slice::from_ref(&g));
+        }
+        // Split run: 4 steps, snapshot, restore, 6 more.
+        let mut p = vec![Matrix::zeros(1, 2)];
+        let mut o = Adam::paper(&[(1, 2)]);
+        for _ in 0..4 {
+            o.step(&mut p, std::slice::from_ref(&g));
+        }
+        let (m, v) = o.moments();
+        let mut o2 = Adam::from_state(o.lr, o.step_count(), m.to_vec(), v.to_vec());
+        for _ in 0..6 {
+            o2.step(&mut p, std::slice::from_ref(&g));
+        }
+        assert_eq!(p[0], p_full[0]);
     }
 
     #[test]

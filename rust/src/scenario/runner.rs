@@ -156,6 +156,7 @@ fn serve_main(listener: TcpAggListener, recipe: &Recipe, strict: bool) -> io::Re
         scale: recipe.scale.clone(),
         recv_timeout_ms: recipe.recv_timeout_ms,
         partition: recipe.partition,
+        resume: false,
     }
     .send(&mut agg)?;
     let scale = Scale::parse(&recipe.scale).unwrap_or(Scale::Quick);

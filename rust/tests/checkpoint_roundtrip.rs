@@ -1,0 +1,277 @@
+//! Checkpoint/resume acceptance, loopback side: a run interrupted at
+//! epoch k and resumed must be **bit-identical** to a run that was never
+//! interrupted — same per-epoch losses (to the bit), same ledger bytes,
+//! and the checkpoint file each writes at the end must match byte for
+//! byte. Also the robustness contract: truncated, corrupted and
+//! version-skewed files are rejected with clean named errors, never
+//! panics.
+
+use std::path::{Path, PathBuf};
+
+use dad::algos::AlgoSpec;
+use dad::checkpoint::{Checkpoint, CheckpointPlan, CkptMeta, CKPT_VERSION};
+use dad::coordinator::{build_task, train_checkpointed, Scale, Schedule, TrainLog, TrainSpec, TrainTask};
+use dad::dist::wire::WIRE_VERSION;
+use dad::tensor::{Matrix, Rng};
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dad-ckpt-tests-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    dir.join(name)
+}
+
+fn plan_at(path: &Path, dataset: &str) -> CheckpointPlan {
+    CheckpointPlan {
+        save_path: Some(path.to_string_lossy().into_owned()),
+        every: 0,
+        dataset: dataset.to_string(),
+        scale: "quick".to_string(),
+    }
+}
+
+fn spec_for(algo: AlgoSpec, epochs: usize) -> TrainSpec {
+    TrainSpec {
+        algo,
+        n_sites: 2,
+        batch_per_site: 8,
+        epochs,
+        lr: 1e-3,
+        seed: 23,
+        schedule: Schedule::EveryBatch,
+    }
+}
+
+/// One checkpointed loopback run on the quick-scale task for `dataset`.
+fn run(
+    dataset: &str,
+    spec: &TrainSpec,
+    plan: &CheckpointPlan,
+    resume: Option<Checkpoint>,
+) -> std::io::Result<TrainLog> {
+    match build_task(dataset, Scale::Quick, spec.n_sites, spec.seed).expect("task") {
+        TrainTask::Dense { train_ds, test_ds, shards, model } => {
+            train_checkpointed(model, spec, &train_ds, &shards, &test_ds, plan, resume)
+        }
+        TrainTask::Seq { train_ds, test_ds, shards, model } => {
+            train_checkpointed(model, spec, &train_ds, &shards, &test_ds, plan, resume)
+        }
+        TrainTask::Tokens { train_ds, test_ds, shards, model } => {
+            train_checkpointed(model, spec, &train_ds, &shards, &test_ds, plan, resume)
+        }
+    }
+}
+
+/// The acceptance criterion: interrupt at epoch 2, resume to 4, compare
+/// against an uninterrupted 4-epoch run — logs bit-equal on the resumed
+/// tail, final checkpoint files byte-equal.
+fn resume_matches_uninterrupted(algo: AlgoSpec, dataset: &str, tag: &str) {
+    let name = algo.name();
+    let (a, b, c) =
+        (tmp(&format!("{tag}-a.ckpt")), tmp(&format!("{tag}-b.ckpt")), tmp(&format!("{tag}-c.ckpt")));
+    run(dataset, &spec_for(algo.clone(), 2), &plan_at(&a, dataset), None).expect("interrupted run");
+    // Atomic save: the temp file must not survive a successful rename.
+    assert!(!a.with_extension("ckpt.tmp").exists(), "{name}: stale save temp file");
+    let ck = Checkpoint::load(&a).expect("load interrupted checkpoint");
+    assert_eq!(ck.meta.next_epoch, 2, "{name}: wrong resume cursor");
+    assert_eq!(ck.meta.algo, name, "{name}: wrong algo in meta");
+
+    let log_b =
+        run(dataset, &spec_for(algo.clone(), 4), &plan_at(&b, dataset), Some(ck)).expect("resumed run");
+    let log_c =
+        run(dataset, &spec_for(algo, 4), &plan_at(&c, dataset), None).expect("uninterrupted run");
+
+    assert_eq!(log_b.epochs.len(), 2, "{name}: resumed run must execute epochs 3..4 only");
+    assert_eq!(log_c.epochs.len(), 4);
+    for (rb, rc) in log_b.epochs.iter().zip(&log_c.epochs[2..]) {
+        assert_eq!(rb.epoch, rc.epoch, "{name}: epoch numbering diverged");
+        assert_eq!(
+            rb.train_loss.to_bits(),
+            rc.train_loss.to_bits(),
+            "{name} epoch {}: resumed loss {} vs uninterrupted {}",
+            rb.epoch,
+            rb.train_loss,
+            rc.train_loss
+        );
+        assert_eq!(rb.test_auc.to_bits(), rc.test_auc.to_bits(), "{name}: AUC diverged");
+        assert_eq!(rb.test_acc.to_bits(), rc.test_acc.to_bits(), "{name}: accuracy diverged");
+        assert_eq!(rb.bytes_up, rc.bytes_up, "{name}: uplink bytes diverged");
+        assert_eq!(rb.bytes_down, rc.bytes_down, "{name}: downlink bytes diverged");
+    }
+    let bytes_b = std::fs::read(&b).expect("read resumed checkpoint");
+    let bytes_c = std::fs::read(&c).expect("read uninterrupted checkpoint");
+    assert_eq!(
+        bytes_b, bytes_c,
+        "{name}: resumed and uninterrupted runs wrote different checkpoint files"
+    );
+}
+
+#[test]
+fn resume_is_bit_identical_for_dad_on_mnist() {
+    resume_matches_uninterrupted(AlgoSpec::Dad, "mnist", "dad-mnist");
+}
+
+/// DGC keeps per-site momentum/velocity/residual tables across steps —
+/// the `ckpt-algo` frame must carry them or the resumed trajectory
+/// diverges from the uninterrupted one.
+#[test]
+fn resume_is_bit_identical_for_dgc_on_mnist() {
+    resume_matches_uninterrupted(AlgoSpec::Dgc { density: 25.0 }, "mnist", "dgc-mnist");
+}
+
+/// PowerSGD warm-starts its Q factors and accumulates error feedback —
+/// cross-step state the checkpoint must restore exactly.
+#[test]
+fn resume_is_bit_identical_for_powersgd_on_mnist() {
+    resume_matches_uninterrupted(AlgoSpec::PowerSgd { rank: 4 }, "mnist", "psgd-mnist");
+}
+
+#[test]
+fn resume_is_bit_identical_for_dad_on_lm() {
+    resume_matches_uninterrupted(AlgoSpec::Dad, "lm", "dad-lm");
+}
+
+#[test]
+fn checkpointing_requires_every_batch_schedule() {
+    let spec = TrainSpec { schedule: Schedule::Periodic(2), ..spec_for(AlgoSpec::Dad, 2) };
+    let path = tmp("periodic.ckpt");
+    let err = run("mnist", &spec, &plan_at(&path, "mnist"), None)
+        .expect_err("periodic + checkpoint must be rejected");
+    assert!(err.to_string().contains("sync-every"), "unclear error: {err}");
+}
+
+#[test]
+fn resume_refuses_changed_run_identity() {
+    let path = tmp("identity.ckpt");
+    run("mnist", &spec_for(AlgoSpec::Dad, 2), &plan_at(&path, "mnist"), None).expect("seed run");
+    let load = || Checkpoint::load(&path).expect("load");
+    let none = CheckpointPlan::default();
+
+    let lr_changed = TrainSpec { lr: 5e-4, ..spec_for(AlgoSpec::Dad, 4) };
+    let err = run("mnist", &lr_changed, &none, Some(load())).expect_err("lr change must be refused");
+    assert!(err.to_string().contains("lr"), "error does not name the field: {err}");
+
+    let algo_changed = spec_for(AlgoSpec::Dsgd, 4);
+    let err = run("mnist", &algo_changed, &none, Some(load())).expect_err("algo change");
+    assert!(err.to_string().contains("algo"), "error does not name the field: {err}");
+
+    // Same epoch count the checkpoint already completed: nothing to do.
+    let err = run("mnist", &spec_for(AlgoSpec::Dad, 2), &none, Some(load()))
+        .expect_err("completed checkpoint must not resume");
+    assert!(err.to_string().contains("nothing to resume"), "unclear error: {err}");
+}
+
+// ---------------------------------------------------------------------------
+// Robustness: malformed files are rejected cleanly
+// ---------------------------------------------------------------------------
+
+fn small_checkpoint() -> Checkpoint {
+    let mut rng = Rng::new(7);
+    let shapes = [(4, 3), (1, 3)];
+    let mk = |rng: &mut Rng| {
+        shapes.iter().map(|&(r, c)| Matrix::randn(r, c, 1.0, rng)).collect::<Vec<_>>()
+    };
+    Checkpoint {
+        meta: CkptMeta {
+            algo: "dad".into(),
+            dataset: "mnist".into(),
+            scale: "quick".into(),
+            n_sites: 2,
+            batch_per_site: 8,
+            epochs: 4,
+            lr: 1e-3,
+            seed: 23,
+            sync_every: 1,
+            next_epoch: 2,
+            adam_t: 50,
+            rng_state: 0x0123_4567_89AB_CDEF,
+            rng_inc: 0xFEDC_BA98_7654_3211,
+            rng_spare: None,
+        },
+        params: mk(&mut rng),
+        adam_m: mk(&mut rng),
+        adam_v: mk(&mut rng),
+        algo_state: vec![],
+    }
+}
+
+/// Proptest-style exhaustive sweeps: every possible truncation and every
+/// single-byte corruption of a valid container must decode to a clean
+/// `Err` — the checksum (or an earlier structural check) catches all of
+/// them, and nothing panics.
+#[test]
+fn every_truncation_and_byte_flip_is_rejected() {
+    let bytes = small_checkpoint().encode();
+    assert!(Checkpoint::decode_bytes(&bytes).is_ok(), "baseline image must decode");
+    for k in 0..bytes.len() {
+        assert!(
+            Checkpoint::decode_bytes(&bytes[..k]).is_err(),
+            "truncation to {k} of {} bytes decoded successfully",
+            bytes.len()
+        );
+    }
+    for i in 0..bytes.len() {
+        let mut corrupt = bytes.clone();
+        corrupt[i] ^= 0xFF;
+        assert!(
+            Checkpoint::decode_bytes(&corrupt).is_err(),
+            "flipping byte {i} of {} went undetected",
+            bytes.len()
+        );
+    }
+    // Trailing garbage after a valid image is also rejected.
+    let mut padded = bytes.clone();
+    padded.push(0);
+    let err = Checkpoint::decode_bytes(&padded).unwrap_err();
+    assert!(err.to_string().contains("trailing"), "unclear error: {err}");
+}
+
+#[test]
+fn rejection_errors_name_the_failure() {
+    let bytes = small_checkpoint().encode();
+
+    let mut bad_magic = bytes.clone();
+    bad_magic[0] ^= 1;
+    let err = Checkpoint::decode_bytes(&bad_magic).unwrap_err();
+    assert!(err.to_string().contains("magic"), "unclear error: {err}");
+
+    let mut bad_ckpt = bytes.clone();
+    bad_ckpt[8] = CKPT_VERSION + 1;
+    let err = Checkpoint::decode_bytes(&bad_ckpt).unwrap_err();
+    assert!(err.to_string().contains("container version"), "unclear error: {err}");
+
+    let mut bad_wire = bytes.clone();
+    bad_wire[9] = WIRE_VERSION + 1;
+    let err = Checkpoint::decode_bytes(&bad_wire).unwrap_err();
+    assert!(err.to_string().contains("wire version"), "unclear error: {err}");
+
+    // Flipping the stored checksum (the file's final bytes) trips the
+    // integrity check by name.
+    let mut bad_sum = bytes.clone();
+    let last = bad_sum.len() - 1;
+    bad_sum[last] ^= 0xFF;
+    let err = Checkpoint::decode_bytes(&bad_sum).unwrap_err();
+    assert!(err.to_string().contains("checksum"), "unclear error: {err}");
+
+    // Load errors mention the path.
+    let missing = tmp("does-not-exist.ckpt");
+    let err = Checkpoint::load(&missing).unwrap_err();
+    assert!(err.to_string().contains("does-not-exist"), "unclear error: {err}");
+}
+
+#[test]
+fn plan_due_schedule() {
+    let plan = CheckpointPlan {
+        save_path: Some("x.ckpt".into()),
+        every: 2,
+        dataset: "mnist".into(),
+        scale: "quick".into(),
+    };
+    assert!(!plan.due(1, 5));
+    assert!(plan.due(2, 5));
+    assert!(!plan.due(3, 5));
+    assert!(plan.due(4, 5));
+    assert!(plan.due(5, 5), "the final epoch always saves");
+    let disabled = CheckpointPlan::default();
+    assert!(!disabled.enabled());
+    assert!(!disabled.due(5, 5));
+}

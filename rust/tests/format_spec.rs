@@ -1,0 +1,98 @@
+//! The format spec (`docs/FORMATS.md`) is normative: these tests parse
+//! the version constants and pricing claims out of the document and
+//! assert they equal what the crate actually compiles, so the spec
+//! cannot silently drift from the code.
+
+use dad::checkpoint::{fnv1a64, CKPT_MAGIC, CKPT_VERSION};
+use dad::dist::wire::{sparse_wire_len, SparseMat, MAX_FRAME_LEN, WIRE_VERSION};
+
+const SPEC: &str = include_str!("../docs/FORMATS.md");
+
+/// Extract the integer documented on a `NAME = value` line.
+fn documented(name: &str) -> u64 {
+    let line = SPEC
+        .lines()
+        .map(str::trim)
+        .find(|l| l.starts_with(name))
+        .unwrap_or_else(|| panic!("FORMATS.md documents no `{name} = ...` line"));
+    let value = line
+        .split('=')
+        .nth(1)
+        .unwrap_or_else(|| panic!("malformed spec line {line:?}"))
+        .trim();
+    value.parse().unwrap_or_else(|_| panic!("non-integer spec value in {line:?}"))
+}
+
+#[test]
+fn documented_versions_match_compiled_constants() {
+    assert_eq!(
+        documented("WIRE_VERSION"),
+        u64::from(WIRE_VERSION),
+        "docs/FORMATS.md documents a different wire version than the codec compiles; \
+         update the spec (frame table + version history) alongside the constant"
+    );
+    assert_eq!(
+        documented("CKPT_VERSION"),
+        u64::from(CKPT_VERSION),
+        "docs/FORMATS.md documents a different checkpoint container version than the \
+         crate compiles; update §3 alongside the constant"
+    );
+}
+
+#[test]
+fn version_history_covers_the_current_version() {
+    // The §1.4 history table must have a row for the version we speak.
+    let row = format!("| {WIRE_VERSION} |");
+    assert!(
+        SPEC.contains(&row),
+        "FORMATS.md §1.4 version history has no row for wire version {WIRE_VERSION}"
+    );
+}
+
+#[test]
+fn documented_magic_and_frame_limit_match() {
+    assert_eq!(&CKPT_MAGIC[..7], b"DADCKPT");
+    assert_eq!(CKPT_MAGIC[7], 0);
+    assert!(SPEC.contains("DADCKPT"), "FORMATS.md does not document the magic bytes");
+    // §1 documents the 2^30 frame-length ceiling.
+    assert_eq!(MAX_FRAME_LEN, 1 << 30);
+    assert!(SPEC.contains("2^30"), "FORMATS.md does not document MAX_FRAME_LEN");
+}
+
+#[test]
+fn documented_sparse_pricing_matches_codec() {
+    // §1.2: 8 bytes per nonzero over a 12-byte per-matrix header.
+    assert!(SPEC.contains("8 bytes"), "FORMATS.md does not state the per-nonzero price");
+    let m = SparseMat { rows: 4, cols: 5, idx: vec![0, 3, 17], vals: vec![1.0, -2.0, 0.5] };
+    assert_eq!(m.wire_bytes(), 12 + 8 * 3);
+    // Whole-frame size: 4 len + 1 version + 1 kind + 1 tag len + tag
+    // + u16 count + per-matrix body, exactly as the §1 table lays out.
+    let tag = "sparse-grad";
+    assert_eq!(sparse_wire_len(tag, &[&m]), 4 + 3 + tag.len() as u64 + 2 + m.wire_bytes());
+}
+
+#[test]
+fn documented_checksum_parameters_match() {
+    // §3 names the FNV-1a 64 offset basis and prime; hashing nothing
+    // returns the basis, and one NUL byte exercises the prime.
+    assert!(SPEC.contains("0xcbf29ce484222325"), "spec lost the FNV offset basis");
+    assert!(SPEC.contains("0x100000001b3"), "spec lost the FNV prime");
+    assert_eq!(fnv1a64(&[]), 0xcbf2_9ce4_8422_2325);
+    assert_eq!(fnv1a64(&[0]), 0xcbf2_9ce4_8422_2325_u64.wrapping_mul(0x0100_0000_01b3));
+}
+
+#[test]
+fn spec_documents_every_live_tag() {
+    // §2: a frame tag used by the protocols must appear in the spec's tag
+    // vocabulary. Spot-check the full set, including the serving and
+    // checkpoint families added with wire version 5.
+    for tag in [
+        "acts", "deltas", "aux-acts", "delta-L", "grad", "lowrank-q", "lowrank-g", "psgd-p",
+        "psgd-q", "sparse-grad", "bias-grad", "direct-grad", "hello", "welcome", "config",
+        "step-meta", "step-sync", "eff-rank", "local-loss", "resume", "infer-hello",
+        "infer-welcome", "infer-req", "infer-res", "infer-shutdown", "ckpt-meta", "ckpt-params",
+        "ckpt-adam-m", "ckpt-adam-v", "ckpt-algo", "ckpt-end",
+    ] {
+        assert!(SPEC.contains(&format!("`{tag}`")), "FORMATS.md tag table is missing `{tag}`");
+    }
+}

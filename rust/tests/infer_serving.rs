@@ -1,0 +1,303 @@
+//! End-to-end inference serving: train one epoch, checkpoint, boot
+//! `InferServer` on an ephemeral port, and drive it over real TCP —
+//! answers must match a direct `predict` on the same parameters, for
+//! serial clients, concurrent (batched) clients, the MLP and the LM.
+//! Plus request validation, the load generator, clean shutdown, and
+//! unservable-checkpoint rejection.
+
+use std::path::PathBuf;
+use std::thread;
+use std::time::Duration;
+
+use dad::algos::AlgoSpec;
+use dad::checkpoint::{Checkpoint, CheckpointPlan, CkptMeta};
+use dad::coordinator::{build_task, train_checkpointed, Scale, Schedule, TrainSpec, TrainTask};
+use dad::infer::{run_bench, InferClient, InferOpts, InferServer};
+use dad::nn::model::{Batch, DistModel};
+use dad::nn::{Mlp, Transformer};
+use dad::tensor::Matrix;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dad-infer-tests-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    dir.join(name)
+}
+
+fn spec_1_epoch() -> TrainSpec {
+    TrainSpec {
+        algo: AlgoSpec::Dad,
+        n_sites: 2,
+        batch_per_site: 8,
+        epochs: 1,
+        lr: 1e-3,
+        seed: 17,
+        schedule: Schedule::EveryBatch,
+    }
+}
+
+/// Train one quick epoch on `dataset`, checkpoint it, load it back.
+fn train_ckpt(dataset: &str, file: &str) -> Checkpoint {
+    let path = tmp(file);
+    let spec = spec_1_epoch();
+    let plan = CheckpointPlan {
+        save_path: Some(path.to_string_lossy().into_owned()),
+        every: 0,
+        dataset: dataset.to_string(),
+        scale: "quick".to_string(),
+    };
+    match build_task(dataset, Scale::Quick, spec.n_sites, spec.seed).expect("task") {
+        TrainTask::Dense { train_ds, test_ds, shards, model } => {
+            train_checkpointed(model, &spec, &train_ds, &shards, &test_ds, &plan, None)
+        }
+        TrainTask::Tokens { train_ds, test_ds, shards, model } => {
+            train_checkpointed(model, &spec, &train_ds, &shards, &test_ds, &plan, None)
+        }
+        TrainTask::Seq { .. } => unreachable!("only mnist/lm checkpoints are served"),
+    }
+    .expect("training run");
+    Checkpoint::load(&path).expect("load checkpoint")
+}
+
+/// Bind an ephemeral port and run the server on its own thread.
+fn spawn_server(
+    ck: Checkpoint,
+    opts: InferOpts,
+) -> (String, thread::JoinHandle<std::io::Result<u64>>) {
+    let server = InferServer::bind("127.0.0.1:0", ck, opts).expect("bind");
+    let addr = server.local_addr().expect("addr").to_string();
+    (addr, thread::spawn(move || server.run()))
+}
+
+/// The checkpointed MLP, rebuilt exactly as the server rebuilds it.
+fn mlp_from(ck: &Checkpoint) -> Mlp {
+    match build_task("mnist", Scale::Quick, 2, ck.meta.seed).expect("task") {
+        TrainTask::Dense { mut model, .. } => {
+            model.set_params(&ck.params);
+            model
+        }
+        _ => unreachable!(),
+    }
+}
+
+/// What the server must answer for one dense row: argmax + its score.
+fn expect_row(model: &Mlp, row: &[f32]) -> (usize, f32) {
+    let c = *model.dims.last().expect("mlp has layers");
+    let x = Matrix::from_vec(1, row.len(), row.to_vec());
+    let scores = model.predict(&Batch::Dense { x, y: Matrix::zeros(1, c) });
+    argmax_of(&scores, 0)
+}
+
+fn argmax_of(scores: &Matrix, row: usize) -> (usize, f32) {
+    let cols = scores.cols();
+    let data = &scores.data()[row * cols..(row + 1) * cols];
+    let mut best = 0usize;
+    for (i, &v) in data.iter().enumerate() {
+        if v > data[best] {
+            best = i;
+        }
+    }
+    (best, data[best])
+}
+
+#[test]
+fn mlp_serving_matches_direct_predict() {
+    let ck = train_ckpt("mnist", "mlp.ckpt");
+    let model = mlp_from(&ck);
+    let (test_x, rows) = {
+        match build_task("mnist", Scale::Quick, 2, ck.meta.seed).expect("task") {
+            TrainTask::Dense { test_ds, .. } => {
+                let n = test_ds.x.rows().min(8);
+                (test_ds.x, n)
+            }
+            _ => unreachable!(),
+        }
+    };
+    let (addr, handle) = spawn_server(ck, InferOpts::default());
+
+    let mut client = InferClient::connect(&addr).expect("connect");
+    let info = client.info().clone();
+    assert_eq!(info.model, "mlp");
+    assert_eq!(info.in_dim, 784);
+    assert_eq!(info.out_dim, 10);
+    assert_eq!(info.max_t, 0, "the MLP accepts no token windows");
+
+    // Serial requests are batches of one: bit-identical to direct predict.
+    let d = test_x.cols();
+    for i in 0..rows {
+        let row = &test_x.data()[i * d..(i + 1) * d];
+        let (cls, score) = client.classify(row).expect("classify");
+        let (want_cls, want_score) = expect_row(&model, row);
+        assert_eq!(cls, want_cls, "row {i}: served class diverged");
+        assert_eq!(
+            score.to_bits(),
+            want_score.to_bits(),
+            "row {i}: served score {score} vs direct {want_score}"
+        );
+    }
+
+    // A malformed request is rejected by name without dropping the
+    // connection; the next valid request still answers.
+    let err = client.classify(&[0.0; 5]).expect_err("wrong width must be rejected");
+    assert!(err.to_string().contains("features"), "unclear error: {err}");
+    let row = &test_x.data()[0..d];
+    assert_eq!(client.classify(row).expect("post-rejection request").0, expect_row(&model, row).0);
+
+    client.shutdown().expect("shutdown");
+    let served = handle.join().expect("server thread").expect("server run");
+    assert!(served >= rows as u64 + 1, "server under-counted: served {served}");
+}
+
+/// Concurrent clients land in shared batches (small window, small cap —
+/// the batcher must split and regroup). Every response must still be the
+/// right one for *that* request.
+#[test]
+fn concurrent_clients_get_their_own_answers() {
+    let ck = train_ckpt("mnist", "mlp-conc.ckpt");
+    let model = mlp_from(&ck);
+    let test_x = match build_task("mnist", Scale::Quick, 2, ck.meta.seed).expect("task") {
+        TrainTask::Dense { test_ds, .. } => test_ds.x,
+        _ => unreachable!(),
+    };
+    let opts = InferOpts { max_batch: 4, window: Duration::from_millis(1) };
+    let (addr, handle) = spawn_server(ck, opts);
+
+    let d = test_x.cols();
+    let n_threads = 6usize;
+    let per_thread = 5usize;
+    let workers: Vec<_> = (0..n_threads)
+        .map(|w| {
+            let addr = addr.clone();
+            // Each worker gets its own row set, staggered across the pool.
+            let rows: Vec<(Vec<f32>, usize)> = (0..per_thread)
+                .map(|k| {
+                    let i = (w * per_thread + k) % test_x.rows();
+                    let row = test_x.data()[i * d..(i + 1) * d].to_vec();
+                    let want = expect_row(&model, &row).0;
+                    (row, want)
+                })
+                .collect();
+            thread::spawn(move || {
+                let mut client = InferClient::connect(&addr).expect("connect");
+                for (row, want) in rows {
+                    let (cls, _score) = client.classify(&row).expect("classify");
+                    assert_eq!(cls, want, "batched answer routed to the wrong request");
+                }
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().expect("worker");
+    }
+
+    InferClient::connect(&addr).expect("connect").shutdown().expect("shutdown");
+    let served = handle.join().expect("server thread").expect("server run");
+    assert_eq!(served, (n_threads * per_thread) as u64);
+}
+
+#[test]
+fn lm_serving_matches_direct_predict() {
+    let ck = train_ckpt("lm", "lm.ckpt");
+    let tf: Transformer = match build_task("lm", Scale::Quick, 2, ck.meta.seed).expect("task") {
+        TrainTask::Tokens { mut model, .. } => {
+            model.set_params(&ck.params);
+            model
+        }
+        _ => unreachable!(),
+    };
+    let (addr, handle) = spawn_server(ck, InferOpts::default());
+
+    let mut client = InferClient::connect(&addr).expect("connect");
+    let info = client.info().clone();
+    assert_eq!(info.model, "lm");
+    assert_eq!(info.in_dim, 0, "the LM accepts no dense rows");
+    assert_eq!(info.out_dim, tf.cfg.vocab);
+    assert_eq!(info.max_t, tf.cfg.max_t);
+
+    for t in 1..=info.max_t {
+        let ids: Vec<u32> = (0..t).map(|k| (k % info.out_dim) as u32).collect();
+        let (tok, score) = client.next_token(&ids).expect("next_token");
+        let scores = tf.predict(&Batch::Tokens {
+            b: 1,
+            t,
+            ids: ids.clone(),
+            targets: vec![0; t],
+        });
+        let (want_tok, want_score) = argmax_of(&scores, t - 1);
+        assert_eq!(tok, want_tok, "t={t}: served next token diverged");
+        assert_eq!(score.to_bits(), want_score.to_bits(), "t={t}: served score diverged");
+    }
+
+    // Validation: out-of-vocabulary id and over-long window, by name.
+    let err = client.next_token(&[9999]).expect_err("oov id must be rejected");
+    assert!(err.to_string().contains("vocabulary"), "unclear error: {err}");
+    let long: Vec<u32> = vec![0; info.max_t + 1];
+    let err = client.next_token(&long).expect_err("over-long window must be rejected");
+    assert!(err.to_string().contains("window"), "unclear error: {err}");
+
+    client.shutdown().expect("shutdown");
+    handle.join().expect("server thread").expect("server run");
+}
+
+#[test]
+fn bench_reports_sane_numbers() {
+    let ck = train_ckpt("mnist", "mlp-bench.ckpt");
+    let (addr, handle) = spawn_server(ck, InferOpts::default());
+
+    let report = run_bench(&addr, 16, 2, 5).expect("bench");
+    assert_eq!(report.requests, 16);
+    assert_eq!(report.concurrency, 2);
+    assert!(report.qps > 0.0, "qps must be positive, got {}", report.qps);
+    assert!(
+        report.p50_ms <= report.p99_ms,
+        "p50 {} above p99 {}",
+        report.p50_ms,
+        report.p99_ms
+    );
+    let json = report.to_json();
+    for key in ["\"model\"", "\"requests\"", "\"p50_ms\"", "\"p99_ms\"", "\"qps\"", "\"wall_s\""] {
+        assert!(json.contains(key), "BENCH_serving.json is missing {key}: {json}");
+    }
+
+    InferClient::connect(&addr).expect("connect").shutdown().expect("shutdown");
+    let served = handle.join().expect("server thread").expect("server run");
+    assert_eq!(served, 16, "bench issued 16 ok requests");
+}
+
+#[test]
+fn unservable_checkpoints_are_rejected_by_name() {
+    // The arabic GRU has no request encoding: rejected before any socket.
+    let meta = CkptMeta {
+        algo: "dad".into(),
+        dataset: "arabic".into(),
+        scale: "quick".into(),
+        n_sites: 2,
+        batch_per_site: 8,
+        epochs: 1,
+        lr: 1e-3,
+        seed: 17,
+        sync_every: 1,
+        next_epoch: 1,
+        adam_t: 10,
+        rng_state: 1,
+        rng_inc: 3,
+        rng_spare: None,
+    };
+    let gru_ck = Checkpoint {
+        meta,
+        params: vec![],
+        adam_m: vec![],
+        adam_v: vec![],
+        algo_state: vec![],
+    };
+    let err = InferServer::bind("127.0.0.1:0", gru_ck, InferOpts::default())
+        .expect_err("arabic checkpoint must be rejected");
+    assert!(err.to_string().contains("not servable"), "unclear error: {err}");
+
+    // A checkpoint whose parameters do not fit the model its meta
+    // describes is rejected before serving garbage.
+    let mut bad = train_ckpt("mnist", "mlp-bad.ckpt");
+    bad.params.pop();
+    let err = InferServer::bind("127.0.0.1:0", bad, InferOpts::default())
+        .expect_err("shape-mismatched checkpoint must be rejected");
+    assert!(err.to_string().contains("fit"), "unclear error: {err}");
+}

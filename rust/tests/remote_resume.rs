@@ -1,0 +1,219 @@
+//! Checkpoint/resume acceptance, TCP side: a `dad serve` checkpoint is
+//! byte-identical to the loopback `dad train` checkpoint of the same
+//! trajectory, and a serve/join run resumed from it is bit-identical to
+//! an uninterrupted serve/join run — closing the loop with the loopback
+//! guarantees in `tests/checkpoint_roundtrip.rs`. Plus the remote-mode
+//! restrictions (stateless algorithms, `--sync-every 1`) as named
+//! errors.
+
+use std::path::{Path, PathBuf};
+use std::thread;
+
+use dad::algos::AlgoSpec;
+use dad::checkpoint::{Checkpoint, CheckpointPlan};
+use dad::coordinator::{
+    build_task, join_training_resumable, serve_training_checkpointed, train_checkpointed,
+    FaultPolicy, Scale, Schedule, TrainLog, TrainSpec, TrainTask,
+};
+use dad::data::DenseDataset;
+use dad::dist::{Ledger, Loopback, TcpAgg, TcpSite};
+use dad::nn::Mlp;
+
+type MnistTask = (DenseDataset, DenseDataset, Vec<Vec<usize>>, Mlp);
+
+fn mnist_task(seed: u64) -> MnistTask {
+    match build_task("mnist", Scale::Quick, 2, seed).expect("task") {
+        TrainTask::Dense { train_ds, test_ds, shards, model } => (train_ds, test_ds, shards, model),
+        _ => unreachable!("mnist builds a dense task"),
+    }
+}
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("dad-remote-resume-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    dir.join(name)
+}
+
+fn plan_at(path: &Path) -> CheckpointPlan {
+    CheckpointPlan {
+        save_path: Some(path.to_string_lossy().into_owned()),
+        every: 0,
+        dataset: "mnist".to_string(),
+        scale: "quick".to_string(),
+    }
+}
+
+fn spec_for(epochs: usize) -> TrainSpec {
+    TrainSpec {
+        algo: AlgoSpec::Dad,
+        n_sites: 2,
+        batch_per_site: 8,
+        epochs,
+        lr: 1e-3,
+        seed: 31,
+        schedule: Schedule::EveryBatch,
+    }
+}
+
+/// One checkpointed serve + 2-join run over real TCP sockets.
+fn tcp_run(spec: &TrainSpec, plan: &CheckpointPlan, resume: Option<Checkpoint>) -> TrainLog {
+    let listener = TcpAgg::bind("127.0.0.1:0", 2).expect("bind");
+    let addr = listener.local_addr().expect("addr").to_string();
+    let resume_flag = resume.is_some();
+    let joins: Vec<_> = (0..2)
+        .map(|_| {
+            let addr = addr.clone();
+            let spec = spec.clone();
+            thread::spawn(move || {
+                let mut t = TcpSite::connect(&addr).expect("connect");
+                let site_id = t.site_id();
+                let (train_ds, _test_ds, shards, model) = mnist_task(spec.seed);
+                let mut ledger = Ledger::new();
+                join_training_resumable(
+                    &mut t, &mut ledger, &spec, model, &train_ds, &shards, site_id, resume_flag,
+                )
+                .expect("join")
+            })
+        })
+        .collect();
+    let mut agg = listener.accept_sites().expect("accept");
+    let mut ledger = Ledger::new();
+    let (train_ds, test_ds, shards, model) = mnist_task(spec.seed);
+    let log = serve_training_checkpointed(
+        &mut agg,
+        &mut ledger,
+        spec,
+        model,
+        &train_ds,
+        &shards,
+        &test_ds,
+        FaultPolicy::default(),
+        plan,
+        resume,
+    )
+    .expect("serve");
+    for j in joins {
+        j.join().expect("join thread");
+    }
+    log
+}
+
+/// Loopback run of the same spec through the simulated trainer.
+fn loopback_run(spec: &TrainSpec, plan: &CheckpointPlan, resume: Option<Checkpoint>) -> TrainLog {
+    let (train_ds, test_ds, shards, model) = mnist_task(spec.seed);
+    train_checkpointed(model, spec, &train_ds, &shards, &test_ds, plan, resume).expect("loopback")
+}
+
+/// The full acceptance chain in one scenario: serve checkpoints equal
+/// loopback checkpoints byte-for-byte; a TCP run resumed from one is
+/// bit-identical to the uninterrupted TCP run; and the resumed TCP run
+/// lands on the same final state as the uninterrupted loopback run.
+#[test]
+fn tcp_resume_is_bit_identical_and_matches_loopback() {
+    let (a_loop, a_tcp) = (tmp("a-loop.ckpt"), tmp("a-tcp.ckpt"));
+    let (b_tcp, c_loop, d_tcp) = (tmp("b-tcp.ckpt"), tmp("c-loop.ckpt"), tmp("d-tcp.ckpt"));
+
+    // Interrupted prefix (2 epochs), both modes.
+    loopback_run(&spec_for(2), &plan_at(&a_loop), None);
+    tcp_run(&spec_for(2), &plan_at(&a_tcp), None);
+    assert_eq!(
+        std::fs::read(&a_loop).expect("read loopback ckpt"),
+        std::fs::read(&a_tcp).expect("read serve ckpt"),
+        "a `dad serve` checkpoint must be byte-identical to the loopback checkpoint \
+         of the same trajectory"
+    );
+
+    // Uninterrupted 4-epoch references, both modes.
+    let log_c = loopback_run(&spec_for(4), &plan_at(&c_loop), None);
+    let log_d = tcp_run(&spec_for(4), &plan_at(&d_tcp), None);
+    assert_eq!(
+        std::fs::read(&c_loop).expect("read"),
+        std::fs::read(&d_tcp).expect("read"),
+        "uninterrupted serve and loopback runs diverged"
+    );
+
+    // Resume the TCP checkpoint over TCP and finish to 4 epochs.
+    let ck = Checkpoint::load(&a_tcp).expect("load");
+    assert_eq!(ck.meta.next_epoch, 2);
+    let log_b = tcp_run(&spec_for(4), &plan_at(&b_tcp), Some(ck));
+
+    assert_eq!(log_b.epochs.len(), 2, "resumed run must execute epochs 3..4 only");
+    for (rb, rd) in log_b.epochs.iter().zip(&log_d.epochs[2..]) {
+        assert_eq!(rb.epoch, rd.epoch, "epoch numbering diverged");
+        assert_eq!(
+            rb.train_loss.to_bits(),
+            rd.train_loss.to_bits(),
+            "epoch {}: resumed TCP loss {} vs uninterrupted TCP {}",
+            rb.epoch,
+            rb.train_loss,
+            rd.train_loss
+        );
+        assert_eq!(rb.test_auc.to_bits(), rd.test_auc.to_bits(), "AUC diverged");
+        assert_eq!(rb.bytes_up, rd.bytes_up, "uplink bytes diverged");
+        assert_eq!(rb.bytes_down, rd.bytes_down, "downlink bytes diverged");
+    }
+    // Cross-mode: the resumed TCP run lands on the loopback losses too.
+    for (rb, rc) in log_b.epochs.iter().zip(&log_c.epochs[2..]) {
+        assert_eq!(rb.train_loss.to_bits(), rc.train_loss.to_bits(), "TCP vs loopback loss");
+    }
+    assert_eq!(
+        std::fs::read(&b_tcp).expect("read"),
+        std::fs::read(&c_loop).expect("read"),
+        "the checkpoint written by the resumed TCP run differs from the uninterrupted \
+         loopback run's checkpoint"
+    );
+}
+
+#[test]
+fn remote_checkpoint_rejects_stateful_algorithms() {
+    let spec = TrainSpec { algo: AlgoSpec::Dgc { density: 25.0 }, ..spec_for(2) };
+    let path = tmp("dgc.ckpt");
+    let (train_ds, test_ds, shards, model) = mnist_task(spec.seed);
+    let mut t = Loopback::new(2);
+    let mut ledger = Ledger::new();
+    let err = serve_training_checkpointed(
+        &mut t,
+        &mut ledger,
+        &spec,
+        model,
+        &train_ds,
+        &shards,
+        &test_ds,
+        FaultPolicy::default(),
+        &plan_at(&path),
+        None,
+    )
+    .expect_err("dgc + remote checkpoint must be rejected");
+    assert!(err.to_string().contains("compressor state"), "unclear error: {err}");
+
+    // The join side guards resume with the same gate.
+    let (train_ds, _test_ds, shards, model) = mnist_task(spec.seed);
+    let err = join_training_resumable(
+        &mut t, &mut ledger, &spec, model, &train_ds, &shards, 0, true,
+    )
+    .expect_err("dgc join resume must be rejected");
+    assert!(err.to_string().contains("compressor state"), "unclear error: {err}");
+}
+
+#[test]
+fn remote_checkpoint_rejects_periodic_schedules() {
+    let spec = TrainSpec { schedule: Schedule::Periodic(2), ..spec_for(2) };
+    let path = tmp("periodic.ckpt");
+    let (train_ds, test_ds, shards, model) = mnist_task(spec.seed);
+    let mut t = Loopback::new(2);
+    let mut ledger = Ledger::new();
+    let err = serve_training_checkpointed(
+        &mut t,
+        &mut ledger,
+        &spec,
+        model,
+        &train_ds,
+        &shards,
+        &test_ds,
+        FaultPolicy::default(),
+        &plan_at(&path),
+        None,
+    )
+    .expect_err("periodic + remote checkpoint must be rejected");
+    assert!(err.to_string().contains("--sync-every 1"), "unclear error: {err}");
+}
