@@ -6,9 +6,15 @@
 #   2. train 2 epochs, `--resume` to 4, and assert the resumed run lands
 #      on the IDENTICAL final loss (string-equal CSV field) and writes a
 #      byte-identical checkpoint file;
-#   3. boot `dad infer --serve` on the checkpoint, drive it with the
-#      `dad infer --bench` load generator (+ --shutdown), and gate on a
-#      non-empty, well-formed BENCH_serving.json (p50/p99/qps).
+#   3. run `dad serve` + 2x `dad join` with `--metrics` and `--trace`,
+#      polling /metrics live: every scrape must be well-formed Prometheus
+#      text and the dad_step gauge must never go backwards; afterwards
+#      the JSONL trace must be sealed and `dad trace summarize` must read
+#      it (the trace is uploaded as a CI artifact);
+#   4. boot `dad infer --serve` (also with `--metrics`/`--trace`) on the
+#      checkpoint, assert /metrics answers while it serves, drive it with
+#      the `dad infer --bench` load generator (+ --shutdown), and gate on
+#      a non-empty, well-formed BENCH_serving.json (p50/p99/qps).
 #
 # Usage (from the repository root): serve_smoke.sh
 set -euo pipefail
@@ -18,6 +24,16 @@ PORT="${PORT:-7413}"
 LIMIT="${LIMIT:-300}"
 OUT="results"
 mkdir -p "$OUT"
+
+# GET /metrics over bash's /dev/tcp (no curl dependency in the runner's
+# PATH assumptions); prints the full HTTP response, fails if refused.
+scrape() {
+    local host="${1%:*}" port="${1##*:}"
+    exec 3<>"/dev/tcp/${host}/${port}" || return 1
+    printf 'GET /metrics HTTP/1.0\r\n\r\n' >&3
+    cat <&3
+    exec 3<&- 3>&-
+}
 
 FULL_CSV="$OUT/serve_smoke_full.csv"
 RES_CSV="$OUT/serve_smoke_resumed.csv"
@@ -57,13 +73,101 @@ cmp -s "$FULL_CKPT" "$RES_CKPT" || {
 }
 echo "ok(resume): final loss $res_loss reproduced, checkpoints byte-identical"
 
-# --- 3. serve the checkpoint, benchmark it, shut it down -------------------
+# --- 3. multi-process training with live /metrics + trace ------------------
+SPORT=$((PORT + 1))
+MPORT=$((PORT + 2))
+TRACE="$OUT/serve_smoke_trace.jsonl"
+rm -f "$TRACE"
+
 serve_pid=""
-cleanup() { [ -n "$serve_pid" ] && kill "$serve_pid" 2>/dev/null || true; }
+join1_pid=""
+join2_pid=""
+cleanup() {
+    for pid in "$serve_pid" "$join1_pid" "$join2_pid"; do
+        [ -n "$pid" ] && kill "$pid" 2>/dev/null || true
+    done
+}
 trap cleanup EXIT
 
-timeout "$LIMIT" "$BIN" infer --serve "127.0.0.1:${PORT}" --checkpoint "$FULL_CKPT" &
+timeout "$LIMIT" "$BIN" serve "${common[@]}" --epochs 3 --sites 2 \
+    --addr "127.0.0.1:${SPORT}" \
+    --metrics "127.0.0.1:${MPORT}" --trace "$TRACE" &
 serve_pid=$!
+timeout "$LIMIT" "$BIN" join "127.0.0.1:${SPORT}" &
+join1_pid=$!
+timeout "$LIMIT" "$BIN" join "127.0.0.1:${SPORT}" &
+join2_pid=$!
+
+# Poll /metrics while the run is live: every response must be well-formed
+# Prometheus text, and the step gauge must be monotone non-decreasing.
+samples=0
+prev=-1
+for _ in $(seq 1 600); do
+    if ! body=$(scrape "127.0.0.1:${MPORT}" 2>/dev/null); then
+        # Not up yet, or the run (and its endpoint) already finished.
+        if [ "$samples" -gt 0 ]; then break; fi
+        kill -0 "$serve_pid" 2>/dev/null || break
+        sleep 0.1
+        continue
+    fi
+    echo "$body" | grep -q '^# TYPE dad_step gauge' || {
+        echo "FAIL: /metrics response is not well-formed:"; echo "$body"; exit 1
+    }
+    echo "$body" | grep -q '^# TYPE dad_step_latency_seconds histogram' || {
+        echo "FAIL: /metrics is missing the latency histogram:"; echo "$body"; exit 1
+    }
+    step=$(echo "$body" | awk '$1 == "dad_step" { print $2 }')
+    [ -n "$step" ] || { echo "FAIL: no dad_step sample in response"; exit 1; }
+    if [ "$step" -lt "$prev" ]; then
+        echo "FAIL: dad_step went backwards: $prev -> $step"; exit 1
+    fi
+    prev=$step
+    samples=$((samples + 1))
+    sleep 0.1
+done
+
+wait "$serve_pid"; serve_pid=""
+wait "$join1_pid"; join1_pid=""
+wait "$join2_pid"; join2_pid=""
+
+[ "$samples" -ge 1 ] || { echo "FAIL: never scraped a live /metrics sample"; exit 1; }
+[ "$prev" -ge 1 ] || { echo "FAIL: dad_step never advanced (last sample: $prev)"; exit 1; }
+echo "ok(metrics): $samples scrapes, dad_step monotone to $prev"
+
+# The trace must be sealed (footer present) and readable by the CLI.
+test -s "$TRACE" || { echo "FAIL: trace $TRACE missing or empty"; exit 1; }
+grep -q '"name":"_meta"' "$TRACE" || { echo "FAIL: trace has no _meta footer"; exit 1; }
+grep -q '"dur_ns"' "$TRACE" || { echo "FAIL: trace recorded no spans"; exit 1; }
+grep -q '"name":"adam"' "$TRACE" || { echo "FAIL: aggregator optimizer span missing"; exit 1; }
+summary=$("$BIN" trace summarize "$TRACE")
+[ -n "$summary" ] || { echo "FAIL: trace summarize printed nothing"; exit 1; }
+echo "ok(trace): $(wc -l < "$TRACE") spans in $TRACE"
+echo "$summary"
+
+# --- 4. serve the checkpoint, benchmark it, shut it down -------------------
+IMPORT=$((PORT + 3))
+ITRACE="$OUT/serve_smoke_infer_trace.jsonl"
+rm -f "$ITRACE"
+
+timeout "$LIMIT" "$BIN" infer --serve "127.0.0.1:${PORT}" --checkpoint "$FULL_CKPT" \
+    --metrics "127.0.0.1:${IMPORT}" --trace "$ITRACE" &
+serve_pid=$!
+
+# The inference server's endpoint must answer (well-formed, batcher gauge
+# present) while it serves.
+infer_metrics_ok=1
+for _ in $(seq 1 100); do
+    if body=$(scrape "127.0.0.1:${IMPORT}" 2>/dev/null); then
+        echo "$body" | grep -q '^# TYPE dad_batcher_queue_depth gauge' || {
+            echo "FAIL: infer /metrics is missing the batcher gauge:"; echo "$body"; exit 1
+        }
+        infer_metrics_ok=0
+        break
+    fi
+    sleep 0.2
+done
+[ "$infer_metrics_ok" -eq 0 ] || { echo "FAIL: infer /metrics never answered"; exit 1; }
+echo "ok(infer-metrics): endpoint live under dad infer --serve"
 
 # The bench connects without retrying, so poll until the server is up
 # (it binds after rebuilding the model from the checkpoint meta).
@@ -85,6 +189,12 @@ fi
 # --shutdown drains the server: it must exit 0 on its own.
 wait "$serve_pid"
 serve_pid=""
+
+# The inference trace is sealed on exit and carries the forward-pass
+# kernels the batcher ran.
+test -s "$ITRACE" || { echo "FAIL: infer trace $ITRACE missing or empty"; exit 1; }
+grep -q '"name":"_meta"' "$ITRACE" || { echo "FAIL: infer trace has no _meta footer"; exit 1; }
+grep -q '"name":"gemm-' "$ITRACE" || { echo "FAIL: infer trace has no forward-pass spans"; exit 1; }
 
 test -s BENCH_serving.json || { echo "FAIL: BENCH_serving.json missing or empty"; exit 1; }
 for key in '"p50_ms"' '"p99_ms"' '"qps"' '"requests"'; do

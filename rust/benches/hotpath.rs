@@ -244,16 +244,29 @@ fn main() {
     sink.add("mlp local_stats allocating", t_alloc);
     sink.add_vs_baseline("mlp local_stats workspace", t_ws, t_alloc, None);
 
-    // Full synchronized steps (2 sites, incl. replica clone).
+    // Full synchronized steps (2 sites, incl. replica clone). The span
+    // clock runs without --trace, so draining it around the dAD bench
+    // yields the step's phase breakdown for the JSON summary.
     use dad::algos::common::DistAlgorithm;
     let (wu3, ns3) = if fast { (1, 3) } else { (1, 8) };
     let batches = vec![batch.clone(), batch.clone()];
+    let _ = dad::obs::trace::take_step_timing(); // discard pre-bench residue
     let t = bench(wu3, ns3, || {
         let mut cluster = dad::dist::Cluster::replicate(mlp.clone(), 2);
         dad::algos::Dad.step(&mut cluster, &batches)
     });
     report("full dAD step (2 sites, incl. clone)", t);
     sink.add("full dAD step", t);
+    let phases = dad::obs::trace::take_step_timing();
+    println!(
+        "  phase breakdown (all dAD runs): compute {:.4}s, comms {:.4}s, \
+         stall {:.4}s, compress {:.4}s",
+        phases.compute_s, phases.comms_s, phases.stall_s, phases.compress_s
+    );
+    sink.meta("dad_step_compute_s", &format!("{:.6}", phases.compute_s));
+    sink.meta("dad_step_comms_s", &format!("{:.6}", phases.comms_s));
+    sink.meta("dad_step_stall_s", &format!("{:.6}", phases.stall_s));
+    sink.meta("dad_step_compress_s", &format!("{:.6}", phases.compress_s));
     let t = bench(wu3, ns3, || {
         let mut cluster = dad::dist::Cluster::replicate(mlp.clone(), 2);
         dad::algos::Dsgd.step(&mut cluster, &batches)

@@ -34,6 +34,7 @@ use crate::dist::wire::{proto_err, Body, ByteReader, ByteWriter, Frame, SparseMa
 use crate::dist::{Direction, Ledger, Transport};
 use crate::nn::model::DistModel;
 use crate::nn::stats::LocalStats;
+use crate::obs::trace::{tagged_span, Phase};
 use crate::tensor::Matrix;
 
 /// One endpoint of the star fabric during one remote step: the transport
@@ -58,6 +59,7 @@ impl<'a> Endpoint<'a> {
 
     /// Site round: ship a tagged payload frame up to the aggregator.
     pub fn up(&mut self, tag: &str, mats: &[&Matrix]) -> io::Result<()> {
+        let _s = tagged_span("round-up", tag, Phase::Comms);
         let n = self.t.ship(Direction::SiteToAgg, tag, mats)?;
         self.ledger.record(tag, Direction::SiteToAgg, n);
         Ok(())
@@ -66,6 +68,7 @@ impl<'a> Endpoint<'a> {
     /// Site round: ship a tagged sparse payload frame up to the aggregator
     /// (priced with its u32-index overhead).
     pub fn up_sparse(&mut self, tag: &str, mats: &[&SparseMat]) -> io::Result<()> {
+        let _s = tagged_span("round-up-sparse", tag, Phase::Comms);
         let n = self.t.ship_sparse(Direction::SiteToAgg, tag, mats)?;
         self.ledger.record(tag, Direction::SiteToAgg, n);
         Ok(())
@@ -73,6 +76,7 @@ impl<'a> Endpoint<'a> {
 
     /// Site round: receive the next broadcast payload frame.
     pub fn down(&mut self, tag: &str) -> io::Result<Vec<Matrix>> {
+        let _s = tagged_span("round-down", tag, Phase::Stall);
         let f = self.t.recv_broadcast()?;
         if f.kind() == crate::dist::wire::FrameKind::Payload {
             self.ledger.record(&f.tag, Direction::AggToSite, f.wire_len());
@@ -82,6 +86,7 @@ impl<'a> Endpoint<'a> {
 
     /// Site round: receive the next broadcast sparse payload frame.
     pub fn down_sparse(&mut self, tag: &str) -> io::Result<Vec<SparseMat>> {
+        let _s = tagged_span("round-down-sparse", tag, Phase::Stall);
         let f = self.t.recv_broadcast()?;
         if f.kind() == crate::dist::wire::FrameKind::Payload {
             self.ledger.record(&f.tag, Direction::AggToSite, f.wire_len());
@@ -96,6 +101,7 @@ impl<'a> Endpoint<'a> {
 
     /// Aggregator round: receive the next payload frame `site` sent up.
     pub fn gather(&mut self, site: usize, tag: &str) -> io::Result<Vec<Matrix>> {
+        let _s = tagged_span("round-gather", tag, Phase::Stall);
         let f = self.t.recv_from_site(site)?;
         if f.kind() == crate::dist::wire::FrameKind::Payload {
             self.ledger.record(&f.tag, Direction::SiteToAgg, f.wire_len());
@@ -105,6 +111,7 @@ impl<'a> Endpoint<'a> {
 
     /// Aggregator round: receive the next sparse payload frame from `site`.
     pub fn gather_sparse(&mut self, site: usize, tag: &str) -> io::Result<Vec<SparseMat>> {
+        let _s = tagged_span("round-gather-sparse", tag, Phase::Stall);
         let f = self.t.recv_from_site(site)?;
         if f.kind() == crate::dist::wire::FrameKind::Payload {
             self.ledger.record(&f.tag, Direction::SiteToAgg, f.wire_len());
@@ -120,6 +127,7 @@ impl<'a> Endpoint<'a> {
     /// Aggregator round: broadcast a tagged payload frame to every site
     /// (counted once — the down-link is a shared multicast).
     pub fn bcast(&mut self, tag: &str, mats: &[&Matrix]) -> io::Result<()> {
+        let _s = tagged_span("round-bcast", tag, Phase::Comms);
         let n = self.t.ship(Direction::AggToSite, tag, mats)?;
         self.ledger.record(tag, Direction::AggToSite, n);
         Ok(())
@@ -128,6 +136,7 @@ impl<'a> Endpoint<'a> {
     /// Aggregator round: broadcast a tagged sparse payload frame to every
     /// site (counted once, index overhead included).
     pub fn bcast_sparse(&mut self, tag: &str, mats: &[&SparseMat]) -> io::Result<()> {
+        let _s = tagged_span("round-bcast-sparse", tag, Phase::Comms);
         let n = self.t.ship_sparse(Direction::AggToSite, tag, mats)?;
         self.ledger.record(tag, Direction::AggToSite, n);
         Ok(())
@@ -137,6 +146,7 @@ impl<'a> Endpoint<'a> {
     /// the S-1 peers (relayed through the hub on a star fabric; priced as
     /// S-1 direct unicasts either way).
     pub fn p2p(&mut self, tag: &str, mats: &[&Matrix]) -> io::Result<()> {
+        let _s = tagged_span("round-p2p", tag, Phase::Comms);
         let n = self.t.ship(Direction::PeerToPeer, tag, mats)?;
         self.ledger.record(tag, Direction::PeerToPeer, n);
         Ok(())
@@ -146,6 +156,7 @@ impl<'a> Endpoint<'a> {
     /// ledger-recorded — the exchange is priced once on the sending side,
     /// matching the loopback convention.
     pub fn p2p_recv(&mut self, tag: &str) -> io::Result<Vec<Matrix>> {
+        let _s = tagged_span("round-p2p-recv", tag, Phase::Stall);
         expect_mats(self.t.recv_broadcast()?, tag)
     }
 
@@ -160,6 +171,7 @@ impl<'a> Endpoint<'a> {
     /// uplink before any [`Endpoint::p2p_forward`] write is what keeps a
     /// blocking single-threaded hub deadlock-free at any payload size.
     pub fn p2p_pull(&mut self, site: usize) -> io::Result<Frame> {
+        let _s = tagged_span("round-p2p-pull", "p2p", Phase::Stall);
         let f = self.t.recv_from_site(site)?;
         if f.kind() == crate::dist::wire::FrameKind::Payload {
             let peers = self.t.n_sites().saturating_sub(1) as u64;
@@ -172,28 +184,36 @@ impl<'a> Endpoint<'a> {
     /// frames to every other site (bytes were already recorded by
     /// [`Endpoint::p2p_pull`]; the transport flushes once per link).
     pub fn p2p_forward(&mut self, from_site: usize, frames: &[Frame]) -> io::Result<()> {
+        let _s = tagged_span("round-p2p-forward", "p2p", Phase::Comms);
         self.t.forward_p2p(from_site, frames)
     }
 
     /// Site control round: ship a control frame up (ledger-exempt).
     pub fn ctrl_up(&mut self, tag: &str, body: &[u8]) -> io::Result<()> {
+        let _s = tagged_span("ctrl-up", tag, Phase::Comms);
         self.t.ship_control(Direction::SiteToAgg, tag, body)?;
         Ok(())
     }
 
-    /// Site control round: receive a broadcast control frame.
+    /// Site control round: receive a broadcast control frame. Blocked
+    /// time here is where a site waits out the aggregator's gather of the
+    /// slowest peer, so the span is attributed to the stall phase.
     pub fn ctrl_down(&mut self, tag: &str) -> io::Result<Vec<u8>> {
+        let _s = tagged_span("ctrl-down", tag, Phase::Stall);
         expect_ctrl(self.t.recv_broadcast()?, tag)
     }
 
     /// Aggregator control round: broadcast a control frame (ledger-exempt).
     pub fn ctrl_bcast(&mut self, tag: &str, body: &[u8]) -> io::Result<()> {
+        let _s = tagged_span("ctrl-bcast", tag, Phase::Comms);
         self.t.ship_control(Direction::AggToSite, tag, body)?;
         Ok(())
     }
 
     /// Aggregator control round: receive a control frame from `site`.
+    /// Blocked time here is the aggregator's straggler stall.
     pub fn ctrl_from(&mut self, site: usize, tag: &str) -> io::Result<Vec<u8>> {
+        let _s = tagged_span("ctrl-from", tag, Phase::Stall);
         expect_ctrl(self.t.recv_from_site(site)?, tag)
     }
 

@@ -105,6 +105,7 @@ impl EntryState {
 /// update into the residual state, pick the transmit set per `rule`,
 /// return it as a sparse matrix and keep the rest as next step's residual.
 fn compress(rule: &SparseRule, st: &mut EntryState, e: &StatsEntry, scale: f32) -> SparseMat {
+    let _s = crate::obs::trace::phase_span("sparse-compress", crate::obs::trace::Phase::Compress);
     let u = e.weight_grad(scale);
     match *rule {
         SparseRule::Dgc { density } => {

@@ -394,6 +394,7 @@ impl Checkpoint {
     /// directory is written, flushed and renamed over the target, so a
     /// crash mid-save never leaves a half-written checkpoint at `path`.
     pub fn save(&self, path: &Path) -> io::Result<()> {
+        let _s = crate::obs::trace::span("ckpt-save");
         let bytes = self.encode();
         let tmp = path.with_extension("ckpt.tmp");
         fs::write(&tmp, &bytes)
@@ -406,6 +407,7 @@ impl Checkpoint {
     /// file, bad magic, version skew, truncation, corruption) is a named
     /// `io::Error` mentioning the path.
     pub fn load(path: &Path) -> io::Result<Checkpoint> {
+        let _s = crate::obs::trace::span("ckpt-load");
         let bytes = fs::read(path)
             .map_err(|e| io::Error::new(e.kind(), format!("reading {}: {e}", path.display())))?;
         Self::decode_bytes(&bytes)

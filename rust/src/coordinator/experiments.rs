@@ -489,6 +489,10 @@ pub struct LmRow {
     pub bytes_up: u64,
     /// Total payload bytes, aggregator->site, across the run.
     pub bytes_down: u64,
+    /// Wall-clock seconds the whole training run took — the honest
+    /// companion to the byte columns: compression that saves bytes but
+    /// burns compute shows up here.
+    pub wall_s: f64,
 }
 
 /// The paper's §5.3.2 transformer claim, measured in the ledger: train the
@@ -519,7 +523,7 @@ pub fn lm_comparison(scale: Scale) -> Vec<LmRow> {
     ];
     let mut csv = CsvWriter::create(
         "results/lm_bandwidth.csv",
-        &["algo", "epoch", "train_loss", "test_ppl", "bytes_up", "bytes_down"],
+        &["algo", "epoch", "train_loss", "test_ppl", "bytes_up", "bytes_down", "wall_s"],
     )
     .unwrap();
     let mut rows = Vec::new();
@@ -540,7 +544,13 @@ pub fn lm_comparison(scale: Scale) -> Vec<LmRow> {
             seed: 97,
             schedule: Schedule::EveryBatch,
         };
+        let t0 = std::time::Instant::now();
         let log = train(model, &spec, &train_ds, &shards, &test_ds);
+        let wall_s = t0.elapsed().as_secs_f64();
+        // Per-epoch rows share the run's wall clock: epoch-resolution
+        // timing lives in the compute/comms/stall/compress CSV columns
+        // (`TrainLog::write_csv`); this column answers "which algorithm
+        // is cheapest end-to-end on this hardware".
         for e in &log.epochs {
             csv.row(&[
                 algo.name(),
@@ -549,6 +559,7 @@ pub fn lm_comparison(scale: Scale) -> Vec<LmRow> {
                 e.test_ppl.to_string(),
                 e.bytes_up.to_string(),
                 e.bytes_down.to_string(),
+                format!("{wall_s:.3}"),
             ])
             .unwrap();
         }
@@ -559,6 +570,7 @@ pub fn lm_comparison(scale: Scale) -> Vec<LmRow> {
             final_ppl: last.test_ppl,
             bytes_up: log.epochs.iter().map(|e| e.bytes_up).sum(),
             bytes_down: log.epochs.iter().map(|e| e.bytes_down).sum(),
+            wall_s,
         });
     }
     csv.flush().unwrap();

@@ -59,6 +59,7 @@
 //! the same link-failure path as a dead one.
 
 use std::io;
+use std::time::Instant;
 
 use crate::algos::protocol::{expect_ctrl, AggExchange, Endpoint, StepMeta, StepProtocol, StepSync};
 use crate::algos::{concat_batches, AlgoSpec};
@@ -73,6 +74,8 @@ use crate::dist::{is_link_failure, Direction, Ledger, Transport};
 use crate::nn::model::{Batch, DistModel};
 use crate::nn::stats::LocalStats;
 use crate::nn::Adam;
+use crate::obs::metrics;
+use crate::obs::trace::{self, Phase, StepTiming};
 use crate::tensor::{Matrix, Rng, Workspace};
 
 /// Result of one synchronized remote step, as seen from one endpoint.
@@ -333,7 +336,10 @@ pub fn remote_site_step<M: DistModel>(
     site_id: usize,
     ws: &mut Workspace,
 ) -> io::Result<RemoteStep> {
-    let stats = model.local_stats_ws(batch, ws);
+    let stats = {
+        let _s = trace::phase_span("local-stats", Phase::Compute);
+        model.local_stats_ws(batch, ws)
+    };
     let (up0, down0) = dirs(ledger);
     let (grads, loss) = {
         let mut ep = Endpoint::new(&mut *t, &mut *ledger);
@@ -720,6 +726,7 @@ pub fn serve_training_checkpointed<M: DistModel, D: DataSource>(
     }
 
     let mut epochs = Vec::with_capacity(spec.epochs.saturating_sub(start_epoch));
+    let mut global_step = 0u64;
     for epoch in start_epoch..spec.epochs {
         let mut plan = epoch_plan(&sizes, spec.batch_per_site, &mut rng);
         let n_steps = plan.iter().map(|i| i.n_batches()).min().unwrap_or(0);
@@ -727,14 +734,21 @@ pub fn serve_training_checkpointed<M: DistModel, D: DataSource>(
         let mut loss_sum = 0.0f64;
         let mut rank_sums = vec![0.0f64; n_entries];
         let mut rank_count = 0usize;
+        let mut timing = StepTiming::default();
+        let _ = trace::take_step_timing(); // discard pre-epoch residue
         for step in 0..n_steps {
+            let step_t0 = Instant::now();
             // Iterator discipline: the oracle draws every site's iterator
             // (it trains the union batch); otherwise only site 0's is
             // drawn — each `BatchIter` is self-contained, so skipping the
             // others cannot desync anything, and site 0's draw must happen
             // every step so periodic local phases see the step-t batch.
             let (union_stats, local0) = if oracle {
-                let stats = model.local_stats_ws(&union_batch(data, shards, &mut plan)?, &mut ws);
+                let union = union_batch(data, shards, &mut plan)?;
+                let stats = {
+                    let _s = trace::phase_span("local-stats", Phase::Compute);
+                    model.local_stats_ws(&union, &mut ws)
+                };
                 (Some(stats), None)
             } else {
                 (None, Some(plan[0].next().ok_or_else(|| short_shard(0))?))
@@ -814,6 +828,13 @@ pub fn serve_training_checkpointed<M: DistModel, D: DataSource>(
                 }
                 loss_sum += mean_loss as f64;
             }
+            timing.accumulate(&trace::take_step_timing());
+            global_step += 1;
+            metrics::STEP.set(global_step);
+            metrics::SITES_LIVE.set(t.n_sites() as u64);
+            let (up_now, down_now) = dirs(ledger);
+            metrics::record_bytes(up_now, down_now);
+            metrics::STEP_LATENCY.observe(step_t0.elapsed().as_secs_f64());
         }
         let eval = evaluate(&model, test);
         let (up1, down1) = dirs(ledger);
@@ -830,8 +851,12 @@ pub fn serve_training_checkpointed<M: DistModel, D: DataSource>(
             bytes_up: up1 - up0,
             bytes_down: down1 - down0,
             sites_live: t.n_sites(),
+            timing,
             mean_eff_rank,
         });
+        if trace::enabled() {
+            let _ = trace::flush();
+        }
         if ckpt.due(epoch + 1, spec.epochs) {
             let path = ckpt.save_path.as_ref().expect("due implies a save path");
             // Remote-resumable algorithms are stateless by construction
@@ -939,12 +964,16 @@ pub fn join_training_resumable<M: DistModel, D: DataSource>(
     }
 
     let mut epochs = Vec::with_capacity(spec.epochs.saturating_sub(start_epoch));
+    let mut global_step = 0u64;
     for epoch in start_epoch..spec.epochs {
         let mut plan = epoch_plan(&sizes, spec.batch_per_site, &mut rng);
         let n_steps = plan.iter().map(|i| i.n_batches()).min().unwrap_or(0);
         let (up0, down0) = dirs(ledger);
         let mut loss_sum = 0.0f64;
+        let mut timing = StepTiming::default();
+        let _ = trace::take_step_timing(); // discard pre-epoch residue
         for step in 0..n_steps {
+            let step_t0 = Instant::now();
             let batch = if oracle {
                 // The pooled oracle trains the union batch in every process.
                 union_batch(data, shards, &mut plan)?
@@ -972,6 +1001,13 @@ pub fn join_training_resumable<M: DistModel, D: DataSource>(
                 Endpoint::new(&mut *t, &mut *ledger).ctrl_up("local-loss", &w.finish())?;
                 loss_sum += loss as f64;
             }
+            timing.accumulate(&trace::take_step_timing());
+            global_step += 1;
+            metrics::STEP.set(global_step);
+            metrics::SITES_LIVE.set(t.n_sites() as u64);
+            let (up_now, down_now) = dirs(ledger);
+            metrics::record_bytes(up_now, down_now);
+            metrics::STEP_LATENCY.observe(step_t0.elapsed().as_secs_f64());
         }
         let (up1, down1) = dirs(ledger);
         epochs.push(EpochLog {
@@ -985,8 +1021,12 @@ pub fn join_training_resumable<M: DistModel, D: DataSource>(
             // Sites do not observe peer retirements; the serving process
             // owns degraded-run reporting.
             sites_live: spec.n_sites,
+            timing,
             mean_eff_rank: vec![],
         });
+        if trace::enabled() {
+            let _ = trace::flush();
+        }
     }
     Ok(TrainLog { algo: spec.algo.name(), epochs, sim_time_s: 0.0, entry_names })
 }

@@ -17,6 +17,7 @@ use crate::dist::Cluster;
 use crate::metrics::multiclass_auc;
 use crate::nn::model::{Batch, DistModel};
 use crate::nn::{Activation, Adam, GruClassifier, Mlp, Transformer, TransformerConfig};
+use crate::obs::trace::{self, Phase, StepTiming};
 use crate::tensor::{Matrix, Rng, Workspace};
 
 /// Synchronization schedule (section 2's "update schedules are orthogonal
@@ -119,6 +120,11 @@ pub struct EpochLog {
     /// disconnected sites mid-run (`coordinator::remote`'s fault policy) —
     /// the per-epoch survivor count the chaos recipes assert on.
     pub sites_live: usize,
+    /// Wall-clock phase breakdown accumulated over the epoch's steps on
+    /// this process's training thread (compute / comms / stall /
+    /// compress seconds — see `obs::trace`). All zeros when the process
+    /// recorded no phase spans.
+    pub timing: StepTiming,
     /// Mean effective rank per stats entry (rank-dAD only; NaN otherwise).
     pub mean_eff_rank: Vec<f32>,
 }
@@ -150,11 +156,16 @@ impl TrainLog {
 
     /// Write the per-epoch log as a CSV file (the CLI's `--csv` option;
     /// the CI remote-matrix job asserts this is non-empty for every
-    /// algorithm). After the fixed columns come one `eff_rank_<entry>`
-    /// column per stats entry (finite for rank-dAD runs, NaN otherwise —
-    /// the CI smoke asserts finiteness for `rank-dad:4`), so 20+-entry
-    /// transformer rank runs stay analyzable instead of being dropped.
-    /// Directories are created as needed.
+    /// algorithm). The fixed columns are `epoch,algo,train_loss,test_auc,
+    /// test_acc,test_ppl,bytes_up,bytes_down,sites_live` followed by the
+    /// wall-clock phase breakdown `compute_s,comms_s,stall_s,compress_s`
+    /// (see `obs::trace::StepTiming`); after them come one
+    /// `eff_rank_<entry>` column per stats entry (finite for rank-dAD
+    /// runs, NaN otherwise — the CI smoke asserts finiteness for
+    /// `rank-dad:4`), so 20+-entry transformer rank runs stay analyzable
+    /// instead of being dropped. Column positions are golden-tested
+    /// (`csv_header_column_positions_are_stable`); downstream consumers
+    /// key on them. Directories are created as needed.
     pub fn write_csv(&self, path: &str) -> std::io::Result<()> {
         let mut header: Vec<String> = [
             "epoch",
@@ -166,6 +177,10 @@ impl TrainLog {
             "bytes_up",
             "bytes_down",
             "sites_live",
+            "compute_s",
+            "comms_s",
+            "stall_s",
+            "compress_s",
         ]
         .iter()
         .map(|s| s.to_string())
@@ -186,6 +201,10 @@ impl TrainLog {
                 e.bytes_up.to_string(),
                 e.bytes_down.to_string(),
                 e.sites_live.to_string(),
+                format!("{:.6}", e.timing.compute_s),
+                format!("{:.6}", e.timing.comms_s),
+                format!("{:.6}", e.timing.stall_s),
+                format!("{:.6}", e.timing.compress_s),
             ];
             // Pad with NaN where telemetry is absent (join sites log an
             // empty rank vector), so the row width always matches.
@@ -573,6 +592,11 @@ pub fn train_checkpointed<M: DistModel + Clone, D: DataSource>(
         let mut bytes_down = 0u64;
         let mut rank_sums = vec![0.0f64; n_entries];
         let mut rank_count = 0usize;
+        let mut timing = StepTiming::default();
+        // Discard phase time accrued outside the step loop (previous
+        // epoch's evaluation, checkpoint I/O) so the per-epoch breakdown
+        // covers training steps only.
+        let _ = trace::take_step_timing();
         for step in 0..n_steps {
             let batches: Vec<Batch> = iters
                 .iter_mut()
@@ -610,6 +634,10 @@ pub fn train_checkpointed<M: DistModel + Clone, D: DataSource>(
                     site.model.set_params(&params);
                 }
             }
+            // Drain this thread's phase buckets into the epoch breakdown
+            // (simulated sites all run on this thread, so the sum covers
+            // every replica's compute plus the loopback wire work).
+            timing.accumulate(&trace::take_step_timing());
         }
         // Evaluation (site 0's replica; all replicas are identical under
         // EveryBatch).
@@ -627,8 +655,14 @@ pub fn train_checkpointed<M: DistModel + Clone, D: DataSource>(
             bytes_up,
             bytes_down,
             sites_live: cluster.n_sites(),
+            timing,
             mean_eff_rank,
         });
+        // Epoch boundary: safe point to drain span buffers to the JSONL
+        // sink (formatting allocates; the hot path never does).
+        if trace::enabled() {
+            let _ = trace::flush();
+        }
         if plan.due(epoch + 1, spec.epochs) {
             let path = plan.save_path.as_ref().expect("due implies a save path");
             let ck = snapshot_checkpoint(
@@ -710,6 +744,7 @@ pub fn local_update<M: DistModel>(
     lr: f32,
     ws: &mut Workspace,
 ) -> f32 {
+    let _span = trace::phase_span("local-update", Phase::Compute);
     let stats = model.local_stats_ws(batch, ws);
     let rows = stats.entries.last().expect("no stats entries").d.rows();
     let grads = stats.assemble_grads(shapes, 1.0 / rows as f32, 1.0 / rows as f32);
@@ -977,6 +1012,7 @@ mod tests {
                 bytes_up: 0,
                 bytes_down: 0,
                 sites_live: 2,
+                timing: StepTiming::default(),
                 mean_eff_rank: vec![],
             }],
             sim_time_s: 0.0,
@@ -1113,6 +1149,12 @@ mod tests {
                 bytes_up: 10,
                 bytes_down: 20,
                 sites_live: 2,
+                timing: StepTiming {
+                    compute_s: 1.5,
+                    comms_s: 0.25,
+                    stall_s: 0.125,
+                    compress_s: 0.0625,
+                },
                 mean_eff_rank: vec![2.5], // shorter than entry_names: pad NaN
             }],
             sim_time_s: 0.0,
@@ -1127,10 +1169,58 @@ mod tests {
         assert_eq!(
             header,
             "epoch,algo,train_loss,test_auc,test_acc,test_ppl,bytes_up,bytes_down,\
-             sites_live,eff_rank_l0,eff_rank_l1"
+             sites_live,compute_s,comms_s,stall_s,compress_s,eff_rank_l0,eff_rank_l1"
         );
         let row = lines.next().unwrap();
-        assert_eq!(row, "0,rank-dad:4,1.5,0.9,0.8,12.5,10,20,2,2.5,NaN");
+        assert_eq!(
+            row,
+            "0,rank-dad:4,1.5,0.9,0.8,12.5,10,20,2,1.500000,0.250000,0.125000,0.062500,2.5,NaN"
+        );
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    /// Golden header: downstream CSV consumers (the CI smoke scripts, the
+    /// EXPERIMENTS notebooks) key on column *positions* — `sites_live`
+    /// must stay at column 9 (1-based) and the `StepTiming` breakdown at
+    /// columns 10-13, with the variable `eff_rank_*` tail strictly after
+    /// every fixed column. Renaming or reordering anything here is a
+    /// breaking change that must be made deliberately, in lockstep with
+    /// those consumers.
+    #[test]
+    fn csv_header_column_positions_are_stable() {
+        let log = TrainLog {
+            algo: "dad".into(),
+            epochs: vec![],
+            sim_time_s: 0.0,
+            entry_names: vec!["l0".into()],
+        };
+        let dir = std::env::temp_dir().join("dad_trainlog_header_test");
+        let path = dir.join("header.csv");
+        log.write_csv(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let cols: Vec<&str> = text.lines().next().unwrap().split(',').collect();
+        let fixed = [
+            "epoch",
+            "algo",
+            "train_loss",
+            "test_auc",
+            "test_acc",
+            "test_ppl",
+            "bytes_up",
+            "bytes_down",
+            "sites_live",
+            "compute_s",
+            "comms_s",
+            "stall_s",
+            "compress_s",
+        ];
+        assert_eq!(&cols[..fixed.len()], &fixed, "fixed CSV columns drifted");
+        assert_eq!(cols[8], "sites_live", "sites_live left column 9");
+        assert_eq!(
+            &cols[fixed.len()..],
+            &["eff_rank_l0"],
+            "eff_rank_* tail must start right after the fixed columns"
+        );
         let _ = std::fs::remove_dir_all(dir);
     }
 

@@ -19,24 +19,51 @@ pub enum Direction {
 }
 
 /// Accumulated bytes per (tag, direction) pair.
+///
+/// `entries` is the source of truth for [`Ledger::breakdown`]'s
+/// first-recorded row order; `index` maps a tag to its (up to three)
+/// per-direction entry slots so the hot-path [`Ledger::record`] — called
+/// for every frame on every link — is one hash lookup instead of a linear
+/// scan over all tags ever seen.
 #[derive(Debug, Clone, Default)]
 pub struct Ledger {
     entries: Vec<(String, Direction, u64)>,
+    index: std::collections::HashMap<String, [Option<u32>; 3]>,
+}
+
+/// Array slot for a direction in the ledger's per-tag index.
+fn dir_slot(dir: Direction) -> usize {
+    match dir {
+        Direction::SiteToAgg => 0,
+        Direction::AggToSite => 1,
+        Direction::PeerToPeer => 2,
+    }
 }
 
 impl Ledger {
     /// Empty ledger.
     pub fn new() -> Self {
-        Ledger { entries: Vec::new() }
+        Ledger::default()
     }
 
-    /// Add `bytes` under (tag, dir), merging with an existing row.
+    /// Add `bytes` under (tag, dir), merging with an existing row. The
+    /// merge path (every frame after a tag's first) allocates nothing:
+    /// the `&str` keys the index directly via `Borrow<str>`.
     pub fn record(&mut self, tag: &str, dir: Direction, bytes: u64) {
-        if let Some(e) = self.entries.iter_mut().find(|e| e.1 == dir && e.0 == tag) {
-            e.2 += bytes;
-        } else {
-            self.entries.push((tag.to_string(), dir, bytes));
+        let slot = dir_slot(dir);
+        if let Some(slots) = self.index.get_mut(tag) {
+            if let Some(i) = slots[slot] {
+                self.entries[i as usize].2 += bytes;
+            } else {
+                slots[slot] = Some(self.entries.len() as u32);
+                self.entries.push((tag.to_string(), dir, bytes));
+            }
+            return;
         }
+        let mut slots = [None; 3];
+        slots[slot] = Some(self.entries.len() as u32);
+        self.entries.push((tag.to_string(), dir, bytes));
+        self.index.insert(tag.to_string(), slots);
     }
 
     /// Total bytes across all tags and directions.
@@ -58,6 +85,7 @@ impl Ledger {
     /// Forget everything (per-run reuse).
     pub fn reset(&mut self) {
         self.entries.clear();
+        self.index.clear();
     }
 }
 
@@ -93,5 +121,51 @@ mod tests {
         l.reset();
         assert_eq!(l.total(), 0);
         assert!(l.breakdown().is_empty());
+    }
+
+    /// Census: the indexed `record` must agree exactly with the
+    /// reference semantics — per-(tag, direction) sums, directional and
+    /// grand totals, and `breakdown()`'s first-recorded row order — over
+    /// an interleaved many-tag sequence, including after a reset.
+    #[test]
+    fn indexed_record_preserves_totals_and_row_order() {
+        // Reference: the old O(tags) linear-scan merge.
+        fn reference(seq: &[(&str, Direction, u64)]) -> Vec<(String, Direction, u64)> {
+            let mut rows: Vec<(String, Direction, u64)> = Vec::new();
+            for &(tag, dir, b) in seq {
+                match rows.iter_mut().find(|e| e.1 == dir && e.0 == tag) {
+                    Some(e) => e.2 += b,
+                    None => rows.push((tag.to_string(), dir, b)),
+                }
+            }
+            rows
+        }
+        use Direction::{AggToSite, PeerToPeer, SiteToAgg};
+        // Deterministic interleaving: 60 records over 10 tags x 3 dirs,
+        // revisiting tags out of first-seen order.
+        let tags =
+            ["acts", "deltas", "grad", "lowrank-q", "psgd-p", "t5", "t6", "t7", "t8", "t9"];
+        let dirs = [SiteToAgg, AggToSite, PeerToPeer];
+        let seq: Vec<(&str, Direction, u64)> = (0..60)
+            .map(|i| (tags[(i * 7) % 10], dirs[(i * 5) % 3], (i as u64 + 1) * 3))
+            .collect();
+        let mut l = Ledger::new();
+        for &(tag, dir, b) in &seq {
+            l.record(tag, dir, b);
+        }
+        let want = reference(&seq);
+        assert_eq!(l.breakdown(), &want[..], "row order or sums diverged from reference");
+        assert_eq!(l.total(), want.iter().map(|e| e.2).sum::<u64>());
+        for dir in dirs {
+            let want_dir: u64 = want.iter().filter(|e| e.1 == dir).map(|e| e.2).sum();
+            assert_eq!(l.total_dir(dir), want_dir, "{dir:?} total diverged");
+        }
+        // The index must not survive a reset: re-recording after reset
+        // rebuilds identical rows from scratch.
+        l.reset();
+        for &(tag, dir, b) in &seq {
+            l.record(tag, dir, b);
+        }
+        assert_eq!(l.breakdown(), &want[..], "post-reset rows diverged");
     }
 }

@@ -273,6 +273,11 @@ impl ChaosTransport {
     fn delay(&mut self, seconds: f64) {
         self.chaos_time_s += seconds;
         if self.pace && seconds > 0.0 {
+            // The sleep runs inside the surrounding ship/recv span, so the
+            // injected latency lands in the sender's comms_s (and surfaces
+            // as the peer's stall_s); the dedicated span makes the injected
+            // share separable in `dad trace summarize`.
+            let _s = crate::obs::trace::span("chaos-delay");
             std::thread::sleep(Duration::from_secs_f64(seconds));
         }
     }

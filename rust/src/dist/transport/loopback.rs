@@ -13,6 +13,7 @@ use std::io;
 use super::Transport;
 use crate::dist::ledger::Direction;
 use crate::dist::wire;
+use crate::obs::trace::{tagged_span, Phase};
 use crate::tensor::Matrix;
 
 /// Byte-accounting loopback endpoint for an `n_sites` fabric.
@@ -47,6 +48,7 @@ impl Transport for Loopback {
     }
 
     fn ship(&mut self, dir: Direction, tag: &str, mats: &[&Matrix]) -> io::Result<u64> {
+        let _s = tagged_span("loopback-ship", tag, Phase::Comms);
         Ok(wire::payload_wire_len(tag, mats) * self.fanout(dir))
     }
 
@@ -56,10 +58,12 @@ impl Transport for Loopback {
         tag: &str,
         mats: &[&wire::SparseMat],
     ) -> io::Result<u64> {
+        let _s = tagged_span("loopback-ship", tag, Phase::Comms);
         Ok(wire::sparse_wire_len(tag, mats) * self.fanout(dir))
     }
 
     fn ship_control(&mut self, dir: Direction, tag: &str, body: &[u8]) -> io::Result<u64> {
+        let _s = tagged_span("loopback-ship", tag, Phase::Comms);
         Ok(wire::control_wire_len(tag, body) * self.fanout(dir))
     }
 }

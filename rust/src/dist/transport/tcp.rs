@@ -31,6 +31,7 @@ use std::time::{Duration, Instant};
 use super::{unsupported, Transport};
 use crate::dist::ledger::Direction;
 use crate::dist::wire::{self, Body, ByteReader, ByteWriter, Frame};
+use crate::obs::trace::{phase_span, tagged_span, Phase};
 use crate::tensor::Matrix;
 
 /// One established connection: buffered reader + writer over the same
@@ -208,6 +209,7 @@ impl Transport for TcpAgg {
     }
 
     fn ship(&mut self, dir: Direction, tag: &str, mats: &[&Matrix]) -> io::Result<u64> {
+        let _s = tagged_span("tcp-ship", tag, Phase::Comms);
         match dir {
             Direction::AggToSite => {
                 let mut counted = 0;
@@ -227,6 +229,7 @@ impl Transport for TcpAgg {
         tag: &str,
         mats: &[&wire::SparseMat],
     ) -> io::Result<u64> {
+        let _s = tagged_span("tcp-ship", tag, Phase::Comms);
         match dir {
             Direction::AggToSite => {
                 let mut counted = 0;
@@ -241,6 +244,7 @@ impl Transport for TcpAgg {
     }
 
     fn ship_control(&mut self, dir: Direction, tag: &str, body: &[u8]) -> io::Result<u64> {
+        let _s = tagged_span("tcp-ship", tag, Phase::Comms);
         match dir {
             Direction::AggToSite => {
                 let mut counted = 0;
@@ -255,10 +259,12 @@ impl Transport for TcpAgg {
     }
 
     fn recv_from_site(&mut self, site: usize) -> io::Result<Frame> {
+        let _s = phase_span("tcp-recv", Phase::Stall);
         wire::decode(&mut self.links[site].r)
     }
 
     fn forward_p2p(&mut self, from_site: usize, frames: &[Frame]) -> io::Result<()> {
+        let _s = phase_span("tcp-forward", Phase::Comms);
         for (i, l) in self.links.iter_mut().enumerate() {
             if i == from_site {
                 continue;
@@ -382,6 +388,7 @@ impl Transport for TcpSite {
     }
 
     fn ship(&mut self, dir: Direction, tag: &str, mats: &[&Matrix]) -> io::Result<u64> {
+        let _s = tagged_span("tcp-ship", tag, Phase::Comms);
         match dir {
             Direction::SiteToAgg => {
                 let n = wire::encode_payload(&mut self.link.w, tag, mats)?;
@@ -407,6 +414,7 @@ impl Transport for TcpSite {
         tag: &str,
         mats: &[&wire::SparseMat],
     ) -> io::Result<u64> {
+        let _s = tagged_span("tcp-ship", tag, Phase::Comms);
         match dir {
             Direction::SiteToAgg => {
                 let n = wire::encode_sparse(&mut self.link.w, tag, mats)?;
@@ -418,6 +426,7 @@ impl Transport for TcpSite {
     }
 
     fn ship_control(&mut self, dir: Direction, tag: &str, body: &[u8]) -> io::Result<u64> {
+        let _s = tagged_span("tcp-ship", tag, Phase::Comms);
         match dir {
             Direction::SiteToAgg => {
                 let n = wire::encode_control(&mut self.link.w, tag, body)?;
@@ -429,6 +438,7 @@ impl Transport for TcpSite {
     }
 
     fn recv_broadcast(&mut self) -> io::Result<Frame> {
+        let _s = phase_span("tcp-recv", Phase::Stall);
         wire::decode(&mut self.link.r)
     }
 }

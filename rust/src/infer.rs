@@ -458,10 +458,12 @@ fn batch_loop(model: ServedModel, shared: &Shared, opts: InferOpts) {
         thread::sleep(opts.window);
         let batch: Vec<Pending> = {
             let mut q = shared.queue.lock().expect("infer queue lock poisoned");
+            crate::obs::metrics::BATCHER_QUEUE_DEPTH.set(q.len() as u64);
             let n = q.len().min(opts.max_batch);
             q.drain(..n).collect()
         };
         run_batch(&model, batch, shared);
+        crate::obs::metrics::STEP.set(shared.served.load(Ordering::SeqCst) as u64);
     }
 }
 

@@ -35,6 +35,7 @@ pub mod infer;
 pub mod lowrank;
 pub mod metrics;
 pub mod nn;
+pub mod obs;
 pub mod runtime;
 pub mod scenario;
 pub mod tensor;

@@ -145,6 +145,7 @@ fn norm(v: &[f32]) -> f32 {
 /// effective rank. `n_iters` is the paper's fixed per-vector iteration
 /// budget (10 in all experiments); theta = 1e-3.
 pub fn rankdad_factors(a: &Matrix, d: &Matrix, max_rank: usize, n_iters: usize, theta: f32) -> Factors {
+    let _s = crate::obs::trace::phase_span("power-iter", crate::obs::trace::Phase::Compress);
     let h_in = a.cols();
     let h_out = d.cols();
     let mut q_t = Matrix::zeros(max_rank, h_in);

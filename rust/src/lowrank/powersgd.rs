@@ -8,6 +8,7 @@
 //! (O(h²r) work per step, fixed rank r); rank-dAD factors the gradient's AD
 //! constituents directly (O(hNr) work, adaptive effective rank <= r).
 
+use crate::obs::trace::{phase_span, Phase};
 use crate::tensor::{matmul, matmul_tn, Matrix, Rng};
 
 /// Orthonormalize the columns of `m` in place (modified Gram-Schmidt).
@@ -69,6 +70,7 @@ impl PowerSgdState {
     /// Compress the local gradient into P (rows x r): the first half of the
     /// all-reduce. Adds the error-feedback memory first.
     pub fn compress_p(&mut self, grad: &Matrix) -> Matrix {
+        let _s = phase_span("psgd-compress", Phase::Compress);
         let m = grad.add(&self.err);
         self.err = m.clone(); // provisional: finalized in `finish`
         matmul(&m, &self.q)

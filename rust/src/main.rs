@@ -21,6 +21,9 @@
 //! infer --serve ADDR --checkpoint PATH | --bench --addr ADDR
 //!     serve batched predictions from a checkpoint over TCP, or drive a
 //!     running server with the closed-loop load generator
+//! trace summarize PATH
+//!     aggregate a JSONL span trace (written via --trace) into a
+//!     per-span table with a per-phase rollup
 //! info
 //!     platform, artifact and thread-pool status
 //! ```
@@ -29,7 +32,10 @@
 //! (+ `--checkpoint-every N`) to save resumable state at epoch
 //! boundaries, and `--resume PATH` to continue a saved run; see
 //! `docs/OPERATIONS.md` for the runbook and `docs/FORMATS.md` for the
-//! container layout.
+//! container layout. Every run command accepts `--trace PATH` (JSONL
+//! span trace); `serve`, `join` and `infer --serve` accept
+//! `--metrics HOST:PORT` (live Prometheus text endpoint at `/metrics`);
+//! see `docs/OPERATIONS.md` §Observability.
 
 use std::path::Path;
 use std::time::Duration;
@@ -58,8 +64,61 @@ fn main() {
         "join" => cmd_join(&args),
         "chaos" => cmd_chaos(&args),
         "infer" => cmd_infer(&args),
+        "trace" => cmd_trace(&args),
         "info" => cmd_info(),
         _ => print_help(),
+    }
+}
+
+/// Arm the run-wide observability the common flags ask for: `--trace PATH`
+/// starts the JSONL span trace, `--metrics HOST:PORT` serves live
+/// Prometheus text at `/metrics`. Returns the server guard — it must stay
+/// alive for the run's duration — and is paired with [`obs_finish`].
+fn obs_setup(args: &Args) -> Option<dad::obs::serve::MetricsServer> {
+    if let Some(path) = args.opt("trace") {
+        dad::obs::trace::enable(Path::new(path)).unwrap_or_else(|e| {
+            eprintln!("--trace {path}: {e}");
+            std::process::exit(1)
+        });
+        println!("tracing spans to {path}");
+    }
+    args.opt("metrics").map(|addr| {
+        dad::obs::metrics::reset_all();
+        let srv = dad::obs::serve::MetricsServer::start(addr).unwrap_or_else(|e| {
+            eprintln!("--metrics {addr}: {e}");
+            std::process::exit(1)
+        });
+        println!("metrics at http://{}/metrics", srv.addr());
+        srv
+    })
+}
+
+/// Seal the trace file (final flush + footer); errors are reported, not
+/// fatal — the run itself already succeeded.
+fn obs_finish() {
+    if dad::obs::trace::enabled() {
+        if let Err(e) = dad::obs::trace::finish() {
+            eprintln!("finishing trace: {e}");
+        }
+    }
+}
+
+/// `dad trace summarize PATH`: per-span aggregate table for a JSONL trace.
+fn cmd_trace(args: &Args) {
+    let sub = args.positional.get(1).map(|s| s.as_str()).unwrap_or("");
+    let path = args.positional.get(2).map(|s| s.as_str());
+    match (sub, path) {
+        ("summarize", Some(p)) => {
+            let table = dad::obs::summarize_trace(Path::new(p)).unwrap_or_else(|e| {
+                eprintln!("{p}: {e}");
+                std::process::exit(1)
+            });
+            print!("{table}");
+        }
+        _ => {
+            eprintln!("usage: dad trace summarize PATH");
+            std::process::exit(2);
+        }
     }
 }
 
@@ -83,6 +142,7 @@ fn print_help() {
            dad infer --serve HOST:PORT --checkpoint PATH [--max-batch N] [--batch-window-ms MS]\n\
            dad infer --bench --addr HOST:PORT [--requests N] [--concurrency C]\n\
                      [--json PATH] [--shutdown]\n\
+           dad trace summarize PATH\n\
            dad info\n\
          \n\
          `train` simulates all sites in one process over the loopback transport;\n\
@@ -99,6 +159,11 @@ fn print_help() {
          bit-for-bit (requires --sync-every 1; see docs/OPERATIONS.md).\n\
          `infer` serves batched predictions from a checkpoint over TCP and\n\
          benchmarks a running server into BENCH_serving.json.\n\
+         Observability: train/serve/join/chaos/infer accept --trace PATH\n\
+         (JSONL span trace; read it with `dad trace summarize PATH`), and\n\
+         serve/join/infer --serve accept --metrics HOST:PORT (a live\n\
+         Prometheus text endpoint at /metrics). The per-epoch CSV carries\n\
+         the compute/comms/stall/compress seconds breakdown.\n\
          Experiment outputs land in results/*.csv; see EXPERIMENTS.md."
     );
 }
@@ -126,6 +191,7 @@ fn cmd_exp(args: &Args) {
     let id = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
     let scale = scale_of(args);
     println!("== experiment {id} (scale {scale:?}) ==");
+    let _obs = obs_setup(args);
     let t0 = std::time::Instant::now();
     match id {
         "table2" => run_table2(scale),
@@ -178,6 +244,7 @@ fn cmd_exp(args: &Args) {
         }
     }
     println!("[{} done in {:.1}s]", id, t0.elapsed().as_secs_f32());
+    obs_finish();
 }
 
 fn run_table2(scale: Scale) {
@@ -208,12 +275,15 @@ fn run_rank_curves(tag: &str, curves: &experiments::RankCurves) {
 
 fn run_lm(scale: Scale) {
     let rows = experiments::lm_comparison(scale);
-    println!("LM (decoder-only transformer, 2 sites): final loss/ppl and total payload bytes:");
-    println!("{:<14} {:>10} {:>10} {:>14} {:>14}", "algo", "loss", "ppl", "bytes_up", "bytes_down");
+    println!("LM (decoder-only transformer, 2 sites): final loss/ppl, total payload bytes, wall:");
+    println!(
+        "{:<14} {:>10} {:>10} {:>14} {:>14} {:>9}",
+        "algo", "loss", "ppl", "bytes_up", "bytes_down", "wall_s"
+    );
     for r in rows {
         println!(
-            "{:<14} {:>10.4} {:>10.3} {:>14} {:>14}",
-            r.algo, r.final_loss, r.final_ppl, r.bytes_up, r.bytes_down
+            "{:<14} {:>10.4} {:>10.3} {:>14} {:>14} {:>9.3}",
+            r.algo, r.final_loss, r.final_ppl, r.bytes_up, r.bytes_down, r.wall_s
         );
     }
 }
@@ -345,6 +415,7 @@ fn cmd_train(args: &Args) {
         spec.algo.name(),
         if resume.is_some() { " [resumed]" } else { "" }
     );
+    let _obs = obs_setup(args);
     let t0 = std::time::Instant::now();
     let log = match build_task(&dataset, scale, spec.n_sites, spec.seed) {
         Ok(TrainTask::Dense { train_ds, test_ds, shards, model }) => {
@@ -374,6 +445,7 @@ fn cmd_train(args: &Args) {
         t0.elapsed().as_secs_f32(),
         log.sim_time_s,
     );
+    obs_finish();
 }
 
 fn cmd_serve(args: &Args) {
@@ -417,6 +489,7 @@ fn cmd_serve(args: &Args) {
     let scale_s = scale_arg;
     let scale = Scale::parse(&scale_s).unwrap_or(Scale::Default);
     let plan = ckpt_plan(args, &dataset, &scale_s);
+    let _obs = obs_setup(args);
     let addr = args.opt_or("addr", "127.0.0.1:7009").to_string();
     let listener = TcpAgg::bind(&addr, spec.n_sites).unwrap_or_else(|e| {
         eprintln!("bind {addr}: {e}");
@@ -513,6 +586,7 @@ fn cmd_serve(args: &Args) {
     for (tag, dir, bytes) in ledger.breakdown() {
         println!("  {dir:?} {tag:<12} {bytes:>12} B");
     }
+    obs_finish();
 }
 
 fn cmd_join(args: &Args) {
@@ -547,6 +621,7 @@ fn cmd_join(args: &Args) {
         if cfg.resume { " [resumed]" } else { "" }
     );
     let mut ledger = Ledger::new();
+    let _obs = obs_setup(args);
     let t0 = std::time::Instant::now();
     let task = build_task(&cfg.dataset, scale, cfg.spec.n_sites, cfg.spec.seed)
         .unwrap_or_else(|e| {
@@ -603,6 +678,7 @@ fn cmd_join(args: &Args) {
         ledger.total_dir(Direction::SiteToAgg),
         ledger.total_dir(Direction::AggToSite),
     );
+    obs_finish();
 }
 
 /// `dad chaos`: run one deterministic fault-injection recipe end-to-end
@@ -650,6 +726,7 @@ fn cmd_chaos(args: &Args) {
         if strict { ", --strict" } else { "" },
         recipe.summary
     );
+    let _obs = obs_setup(args);
     let t0 = std::time::Instant::now();
     let report = run_recipe(&recipe, strict);
     for (site, err) in &report.site_errors {
@@ -681,6 +758,7 @@ fn cmd_chaos(args: &Args) {
             }
         }
     }
+    obs_finish();
     std::process::exit(code);
 }
 
@@ -733,6 +811,7 @@ fn cmd_infer(args: &Args) {
         std::process::exit(1)
     });
     let addr = args.opt_or("serve", "127.0.0.1:7010");
+    let _obs = obs_setup(args);
     let opts = InferOpts {
         max_batch: args.usize_or("max-batch", 64).max(1),
         window: Duration::from_millis(args.usize_or("batch-window-ms", 2) as u64),
@@ -756,4 +835,5 @@ fn cmd_infer(args: &Args) {
         std::process::exit(1)
     });
     println!("served {served} request(s)");
+    obs_finish();
 }

@@ -61,6 +61,7 @@ impl Adam {
 
     /// One update step. `params[i] -= lr * mhat / (sqrt(vhat)+eps)`.
     pub fn step(&mut self, params: &mut [Matrix], grads: &[Matrix]) {
+        let _s = crate::obs::trace::phase_span("adam", crate::obs::trace::Phase::Compute);
         assert_eq!(params.len(), grads.len());
         assert_eq!(params.len(), self.m.len());
         self.t += 1;

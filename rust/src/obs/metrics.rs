@@ -1,0 +1,335 @@
+//! Process-wide metrics registry: counters, gauges and a fixed-bucket
+//! latency histogram over `AtomicU64`, rendered in Prometheus text
+//! exposition format by [`render`].
+//!
+//! The registry is a fixed set of statics rather than a dynamic map: the
+//! hot path (a counter add, a gauge store, a histogram observe) is a
+//! handful of relaxed atomic ops with zero allocation, and the exposition
+//! walk in [`render`] is a compile-time list that [`METRIC_NAMES`] (and
+//! the `docs/FORMATS.md` drift gate in `tests/format_spec.rs`) can mirror
+//! exactly.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// A monotonically increasing counter.
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// A zeroed counter (const so it can live in a static).
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    /// Add `n` to the counter.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// Reset to zero (tests and fresh runs only — Prometheus semantics
+    /// treat resets as a restart).
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+/// An instantaneous integer gauge (step counter, live-site census, queue
+/// depth).
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// A zeroed gauge (const so it can live in a static).
+    pub const fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    /// Replace the gauge value.
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Upper bounds (seconds) of the step-latency histogram buckets; a final
+/// `+Inf` bucket is implicit. Spanning 0.5 ms – 10 s covers a quick-scale
+/// sim step through a chaos-delayed wide-area round.
+pub const LATENCY_BUCKETS_S: [f64; 14] = [
+    0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0,
+];
+
+const NB: usize = LATENCY_BUCKETS_S.len();
+
+/// Fixed-bucket latency histogram. `observe` is a linear bucket scan plus
+/// three relaxed atomic adds — allocation-free and lock-free.
+pub struct Histogram {
+    buckets: [AtomicU64; NB],
+    /// `+Inf` overflow bucket.
+    inf: AtomicU64,
+    sum_ns: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    /// A zeroed histogram (const so it can live in a static).
+    pub const fn new() -> Histogram {
+        // `AtomicU64` is not Copy, so the bucket array is spelled out —
+        // one zeroed cell per entry of `LATENCY_BUCKETS_S`.
+        Histogram {
+            buckets: [
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+            ],
+            inf: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation of `seconds`.
+    pub fn observe(&self, seconds: f64) {
+        let mut placed = false;
+        for (i, ub) in LATENCY_BUCKETS_S.iter().enumerate() {
+            if seconds <= *ub {
+                self.buckets[i].fetch_add(1, Ordering::Relaxed);
+                placed = true;
+                break;
+            }
+        }
+        if !placed {
+            self.inf.fetch_add(1, Ordering::Relaxed);
+        }
+        self.sum_ns.fetch_add((seconds * 1e9) as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Observations recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Estimate the `q`-quantile (0..=1) as the upper bound of the bucket
+    /// containing it; observations past the last bound report that bound.
+    /// Returns 0 with no observations.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= target {
+                return LATENCY_BUCKETS_S[i];
+            }
+        }
+        LATENCY_BUCKETS_S[NB - 1]
+    }
+
+    /// Reset all buckets (tests and fresh runs only).
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.inf.store(0, Ordering::Relaxed);
+        self.sum_ns.store(0, Ordering::Relaxed);
+        self.count.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Global training-step gauge (`dad_step`): epochs×steps completed by the
+/// training loops, or requests served by the inference batcher.
+pub static STEP: Gauge = Gauge::new();
+
+/// Live-site census gauge (`dad_sites_live`), updated by the aggregator.
+pub static SITES_LIVE: Gauge = Gauge::new();
+
+/// Total site→aggregator (plus peer) bytes (`dad_bytes_up_total`).
+pub static BYTES_UP: Counter = Counter::new();
+
+/// Total aggregator→site bytes (`dad_bytes_down_total`).
+pub static BYTES_DOWN: Counter = Counter::new();
+
+/// Step wall-clock latency histogram (`dad_step_latency_seconds`).
+pub static STEP_LATENCY: Histogram = Histogram::new();
+
+/// Inference batcher queue depth at drain time
+/// (`dad_batcher_queue_depth`).
+pub static BATCHER_QUEUE_DEPTH: Gauge = Gauge::new();
+
+/// Every metric name the `/metrics` endpoint exposes, in exposition
+/// order. `tests/format_spec.rs` asserts each appears (backticked) in the
+/// `docs/FORMATS.md` inventory so the spec cannot drift from the code.
+pub const METRIC_NAMES: [&str; 8] = [
+    "dad_step",
+    "dad_sites_live",
+    "dad_bytes_up_total",
+    "dad_bytes_down_total",
+    "dad_step_latency_seconds",
+    "dad_step_latency_p50_seconds",
+    "dad_step_latency_p99_seconds",
+    "dad_batcher_queue_depth",
+];
+
+/// Set the byte counters from a ledger census: counters are monotone, so
+/// this records the *delta* since the last call per direction.
+pub fn record_bytes(up_total: u64, down_total: u64) {
+    let prev_up = BYTES_UP.get();
+    if up_total > prev_up {
+        BYTES_UP.add(up_total - prev_up);
+    }
+    let prev_down = BYTES_DOWN.get();
+    if down_total > prev_down {
+        BYTES_DOWN.add(down_total - prev_down);
+    }
+}
+
+/// Reset every registered metric (test isolation and fresh serve runs).
+pub fn reset_all() {
+    STEP.set(0);
+    SITES_LIVE.set(0);
+    BYTES_UP.reset();
+    BYTES_DOWN.reset();
+    STEP_LATENCY.reset();
+    BATCHER_QUEUE_DEPTH.set(0);
+}
+
+/// Render every metric in Prometheus text exposition format (version
+/// 0.0.4): `# TYPE` headers, histogram `_bucket{le=...}` / `_sum` /
+/// `_count` series, and derived p50/p99 gauges.
+pub fn render() -> String {
+    use std::fmt::Write as _;
+    let mut out = String::with_capacity(1024);
+    let _ = writeln!(out, "# TYPE dad_step gauge\ndad_step {}", STEP.get());
+    let _ = writeln!(out, "# TYPE dad_sites_live gauge\ndad_sites_live {}", SITES_LIVE.get());
+    let _ =
+        writeln!(out, "# TYPE dad_bytes_up_total counter\ndad_bytes_up_total {}", BYTES_UP.get());
+    let _ = writeln!(
+        out,
+        "# TYPE dad_bytes_down_total counter\ndad_bytes_down_total {}",
+        BYTES_DOWN.get()
+    );
+    let _ = writeln!(out, "# TYPE dad_step_latency_seconds histogram");
+    let mut cum = 0u64;
+    for (i, ub) in LATENCY_BUCKETS_S.iter().enumerate() {
+        cum += STEP_LATENCY.buckets[i].load(Ordering::Relaxed);
+        let _ = writeln!(out, "dad_step_latency_seconds_bucket{{le=\"{ub}\"}} {cum}");
+    }
+    cum += STEP_LATENCY.inf.load(Ordering::Relaxed);
+    let _ = writeln!(out, "dad_step_latency_seconds_bucket{{le=\"+Inf\"}} {cum}");
+    let sum_s = STEP_LATENCY.sum_ns.load(Ordering::Relaxed) as f64 * 1e-9;
+    let _ = writeln!(out, "dad_step_latency_seconds_sum {sum_s}");
+    let _ = writeln!(out, "dad_step_latency_seconds_count {}", STEP_LATENCY.count());
+    let _ = writeln!(
+        out,
+        "# TYPE dad_step_latency_p50_seconds gauge\ndad_step_latency_p50_seconds {}",
+        STEP_LATENCY.quantile(0.50)
+    );
+    let _ = writeln!(
+        out,
+        "# TYPE dad_step_latency_p99_seconds gauge\ndad_step_latency_p99_seconds {}",
+        STEP_LATENCY.quantile(0.99)
+    );
+    let _ = writeln!(
+        out,
+        "# TYPE dad_batcher_queue_depth gauge\ndad_batcher_queue_depth {}",
+        BATCHER_QUEUE_DEPTH.get()
+    );
+    out
+}
+
+impl Default for Counter {
+    fn default() -> Counter {
+        Counter::new()
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Gauge {
+        Gauge::new()
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_land_in_the_right_bucket() {
+        let h = Histogram::new();
+        for _ in 0..98 {
+            h.observe(0.002); // ≤ 0.0025 bucket
+        }
+        h.observe(0.3); // ≤ 0.5
+        h.observe(20.0); // +Inf
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.quantile(0.50), 0.0025);
+        assert_eq!(h.quantile(0.99), 0.5);
+    }
+
+    #[test]
+    fn render_is_well_formed_and_covers_every_name() {
+        let text = render();
+        for name in METRIC_NAMES {
+            assert!(
+                text.lines().any(|l| l.starts_with(name)),
+                "render() emits no sample for {name}:\n{text}"
+            );
+        }
+        // Every non-comment line is `name[{labels}] value` with a
+        // parseable numeric value.
+        for line in text.lines() {
+            if line.starts_with('#') {
+                let mut parts = line.splitn(4, ' ');
+                assert_eq!(parts.next(), Some("#"));
+                assert_eq!(parts.next(), Some("TYPE"));
+                assert!(parts.next().is_some_and(|n| n.starts_with("dad_")));
+                assert!(matches!(parts.next(), Some("gauge" | "counter" | "histogram")));
+                continue;
+            }
+            let (name, value) = line.rsplit_once(' ').expect("sample line has no value");
+            assert!(name.starts_with("dad_"), "unexpected metric family: {line}");
+            assert!(value.parse::<f64>().is_ok(), "unparseable sample value: {line}");
+        }
+    }
+
+    #[test]
+    fn record_bytes_is_delta_based_and_monotone() {
+        // Not reset-isolated from other tests, so assert on deltas only.
+        let before_up = BYTES_UP.get();
+        let before_down = BYTES_DOWN.get();
+        record_bytes(before_up + 100, before_down + 40);
+        record_bytes(before_up + 100, before_down + 40); // same census: no-op
+        assert_eq!(BYTES_UP.get(), before_up + 100);
+        assert_eq!(BYTES_DOWN.get(), before_down + 40);
+        record_bytes(before_up + 150, before_down + 41);
+        assert_eq!(BYTES_UP.get(), before_up + 150);
+        assert_eq!(BYTES_DOWN.get(), before_down + 41);
+    }
+}

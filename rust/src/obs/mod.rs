@@ -1,0 +1,173 @@
+//! Time-domain observability: where does a training step's wall-clock go?
+//!
+//! The [`crate::dist::ledger::Ledger`] answers the *bytes* question; this
+//! module answers the *seconds* question with three zero-dependency
+//! layers, matching the repo's no-crates TCP/wire ethos:
+//!
+//! 1. [`trace`] — RAII span guards over per-thread collectors, emitting a
+//!    JSONL event log per run (`--trace PATH`) and accruing per-phase
+//!    nanoseconds (compute / comms / stall / compress) into the
+//!    [`trace::StepTiming`] breakdown that `TrainLog::write_csv` records
+//!    per epoch. Spans are wired through the GEMM entry points, every
+//!    `StepProtocol` round, the transports, Adam, and checkpoint I/O —
+//!    comms spans carry the Ledger's `(tag, direction)` keys so bytes and
+//!    seconds join on the same identity.
+//! 2. [`metrics`] — an allocation-free registry of counters, gauges and a
+//!    fixed-bucket step-latency histogram, rendered in Prometheus text
+//!    format.
+//! 3. [`serve`] — a `/metrics` endpoint over `std::net` exposed by
+//!    `dad serve`, `dad join` and `dad infer --serve` (`--metrics ADDR`),
+//!    plus [`summarize_trace`] behind `dad trace summarize PATH`.
+//!
+//! The metric-name inventory and trace-file schema are normative in
+//! `docs/FORMATS.md` (§5) and drift-gated by `tests/format_spec.rs`.
+
+pub mod metrics;
+pub mod serve;
+pub mod trace;
+
+use std::io::{self, BufRead};
+use std::path::Path;
+
+/// Per-span-name aggregate used by the `dad trace summarize` table.
+#[derive(Clone, Debug)]
+pub struct SpanStat {
+    /// Span name as recorded (e.g. `round-up`, `gemm-nn`).
+    pub name: String,
+    /// Phase attribution, if the span carried one.
+    pub phase: String,
+    /// Occurrence count.
+    pub count: u64,
+    /// Total duration across occurrences, seconds.
+    pub total_s: f64,
+    /// p50 duration, seconds.
+    pub p50_s: f64,
+    /// p99 duration, seconds.
+    pub p99_s: f64,
+}
+
+/// Pull `"key":<integer>` out of a flat JSONL trace line.
+fn json_u64(line: &str, key: &str) -> Option<u64> {
+    let pat = format!("\"{key}\":");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    let end = rest.find(|c: char| !c.is_ascii_digit()).unwrap_or(rest.len());
+    rest[..end].parse().ok()
+}
+
+/// Pull `"key":"value"` out of a flat JSONL trace line.
+fn json_str<'a>(line: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":\"");
+    let start = line.find(&pat)? + pat.len();
+    let rest = &line[start..];
+    Some(&rest[..rest.find('"')?])
+}
+
+/// Parse a JSONL trace written by [`trace::flush`] and aggregate per span
+/// name: count, total, p50 and p99 durations, sorted by total descending.
+/// Lines whose name starts with `_` (the footer) are skipped.
+pub fn trace_stats(path: &Path) -> io::Result<Vec<SpanStat>> {
+    let file = std::fs::File::open(path)?;
+    // name → (phase, durations in ns)
+    let mut by_name: Vec<(String, String, Vec<u64>)> = Vec::new();
+    for line in io::BufReader::new(file).lines() {
+        let line = line?;
+        let Some(name) = json_str(&line, "name") else { continue };
+        if name.starts_with('_') {
+            continue;
+        }
+        let Some(dur) = json_u64(&line, "dur_ns") else { continue };
+        let phase = json_str(&line, "phase").unwrap_or("-");
+        match by_name.iter_mut().find(|(n, ..)| n == name) {
+            Some((_, _, durs)) => durs.push(dur),
+            None => by_name.push((name.to_string(), phase.to_string(), vec![dur])),
+        }
+    }
+    let mut stats: Vec<SpanStat> = by_name
+        .into_iter()
+        .map(|(name, phase, mut durs)| {
+            durs.sort_unstable();
+            let total: u64 = durs.iter().sum();
+            let pct = |q: f64| {
+                let idx = ((q * durs.len() as f64).ceil() as usize).max(1) - 1;
+                durs[idx.min(durs.len() - 1)] as f64 * 1e-9
+            };
+            SpanStat {
+                name,
+                phase,
+                count: durs.len() as u64,
+                total_s: total as f64 * 1e-9,
+                p50_s: pct(0.50),
+                p99_s: pct(0.99),
+            }
+        })
+        .collect();
+    stats.sort_by(|a, b| b.total_s.total_cmp(&a.total_s));
+    Ok(stats)
+}
+
+/// Render the `dad trace summarize PATH` table: one row per span name
+/// (sorted by total time), with a per-phase rollup footer.
+pub fn summarize_trace(path: &Path) -> io::Result<String> {
+    use std::fmt::Write as _;
+    let stats = trace_stats(path)?;
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "{:<22} {:>9} {:>10} {:>12} {:>12} {:>12}",
+        "span", "phase", "count", "total_s", "p50_s", "p99_s"
+    );
+    let mut phase_totals: Vec<(String, f64)> = Vec::new();
+    for s in &stats {
+        let _ = writeln!(
+            out,
+            "{:<22} {:>9} {:>10} {:>12.6} {:>12.6} {:>12.6}",
+            s.name, s.phase, s.count, s.total_s, s.p50_s, s.p99_s
+        );
+        if s.phase != "-" {
+            match phase_totals.iter_mut().find(|(p, _)| *p == s.phase) {
+                Some((_, t)) => *t += s.total_s,
+                None => phase_totals.push((s.phase.clone(), s.total_s)),
+            }
+        }
+    }
+    if !phase_totals.is_empty() {
+        let _ = writeln!(out, "--");
+        for (phase, total) in &phase_totals {
+            let _ = writeln!(out, "{phase:<22} {total:>12.6} s");
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summarize_aggregates_a_round_trip_trace() {
+        let dir = std::env::temp_dir().join(format!("dad-trace-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("unit.jsonl");
+        std::fs::write(
+            &path,
+            "{\"name\":\"round-up\",\"tag\":\"acts\",\"phase\":\"comms\",\"ts_ns\":0,\"dur_ns\":2000000,\"tid\":0,\"thread\":\"main\"}\n\
+             {\"name\":\"round-up\",\"tag\":\"acts\",\"phase\":\"comms\",\"ts_ns\":9,\"dur_ns\":4000000,\"tid\":0,\"thread\":\"main\"}\n\
+             {\"name\":\"gemm-nn\",\"ts_ns\":5,\"dur_ns\":1000000,\"tid\":1,\"thread\":\"dad-worker-0\"}\n\
+             {\"name\":\"_meta\",\"dropped\":0}\n",
+        )
+        .unwrap();
+        let stats = trace_stats(&path).unwrap();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].name, "round-up");
+        assert_eq!(stats[0].count, 2);
+        assert!((stats[0].total_s - 0.006).abs() < 1e-9);
+        assert_eq!(stats[0].phase, "comms");
+        assert_eq!(stats[1].name, "gemm-nn");
+        assert_eq!(stats[1].phase, "-");
+        let table = summarize_trace(&path).unwrap();
+        assert!(table.contains("round-up"), "{table}");
+        assert!(table.contains("comms"), "{table}");
+        std::fs::remove_file(&path).ok();
+    }
+}

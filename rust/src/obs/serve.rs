@@ -1,0 +1,125 @@
+//! A minimal `/metrics` HTTP endpoint over `std::net` — the same
+//! zero-dependency TCP stack the wire protocol uses. One listener thread
+//! answers each connection with a single Prometheus text-format response
+//! and closes; there is no keep-alive, no routing beyond `/metrics`, and
+//! no request body handling, which is exactly enough for a scraper or a
+//! `curl` in CI.
+
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::metrics;
+
+/// Handle to a running metrics listener; dropping it stops the thread.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9100`; port 0 picks a free port) and
+    /// serve [`metrics::render`] on `GET /metrics` from a background
+    /// thread until [`stop`](MetricsServer::stop) or drop.
+    pub fn start(addr: &str) -> io::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("dad-metrics".to_string())
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if stop2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    if let Ok(stream) = conn {
+                        // A slow or stuck client must not wedge the
+                        // listener: bound both directions.
+                        let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+                        let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
+                        let _ = answer(stream);
+                    }
+                }
+            })?;
+        Ok(MetricsServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The actual bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the listener thread and wait for it to exit.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Read the request head (best effort) and write one response.
+fn answer(mut stream: TcpStream) -> io::Result<()> {
+    let mut head = [0u8; 1024];
+    let n = stream.read(&mut head).unwrap_or(0);
+    let request_line = std::str::from_utf8(&head[..n])
+        .ok()
+        .and_then(|s| s.lines().next())
+        .unwrap_or("");
+    let path = request_line.split_whitespace().nth(1).unwrap_or("");
+    if path == "/metrics" || path.starts_with("/metrics?") {
+        let body = metrics::render();
+        write!(
+            stream,
+            "HTTP/1.0 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        )?;
+    } else {
+        let body = "see /metrics\n";
+        write!(
+            stream,
+            "HTTP/1.0 404 Not Found\r\nContent-Type: text/plain\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        )?;
+    }
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn http_get(addr: SocketAddr, path: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET {path} HTTP/1.0\r\nHost: test\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_metrics_and_404s_elsewhere() {
+        let mut srv = MetricsServer::start("127.0.0.1:0").unwrap();
+        let res = http_get(srv.addr(), "/metrics");
+        assert!(res.starts_with("HTTP/1.0 200 OK"), "bad status: {res}");
+        assert!(res.contains("# TYPE dad_step gauge"), "missing exposition body: {res}");
+        let res = http_get(srv.addr(), "/other");
+        assert!(res.starts_with("HTTP/1.0 404"), "bad status: {res}");
+        srv.stop();
+    }
+}

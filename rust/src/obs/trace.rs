@@ -1,0 +1,373 @@
+//! Lightweight structured tracing: RAII span guards over per-thread event
+//! buffers, plus thread-local phase accounting that survives even when the
+//! JSONL event log is disabled.
+//!
+//! Design constraints (see `docs/OPERATIONS.md` §Observability):
+//!
+//! * **Allocation-free hot path.** A span records its name as a `&'static
+//!   str`, copies an optional tag into an inline `[u8; 24]`, and on drop
+//!   pushes a fixed-size [`Event`] into a per-thread `Vec` whose capacity
+//!   was reserved when the thread recorded its first span (i.e. during
+//!   warm-up). When the buffer fills, events are *dropped and counted* —
+//!   never reallocated or flushed from the hot path. `tests/alloc_free.rs`
+//!   arms a counting allocator around a traced steady-state step to keep
+//!   this honest.
+//! * **Thread-local phase buckets.** `scenario::runner` runs the aggregator
+//!   and every simulated site in one process, so global accumulators would
+//!   mix their timings. Each thread accrues nanoseconds into its own
+//!   `[u64; 4]` (compute / comms / stall / compress); each training loop
+//!   drains *its own* thread's buckets once per step via
+//!   [`take_step_timing`]. Only the outermost phase-carrying span on a
+//!   thread accrues, so nested spans (a GEMM inside `local_stats`) are not
+//!   double counted.
+//! * **Phases always accrue.** `Instant::now` is cheap, so the
+//!   `StepTiming` CSV columns are populated even without `--trace PATH`;
+//!   the JSONL event log is the opt-in part.
+
+use std::cell::{Cell, RefCell};
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Inline tag capacity: the longest live wire tag (`infer-shutdown`, 14
+/// bytes) fits with slack; longer tags are truncated, never allocated.
+const TAG_CAP: usize = 24;
+
+/// Per-thread event-buffer capacity, reserved up front on the thread's
+/// first span so steady-state pushes never reallocate.
+const BUF_CAP: usize = 1 << 16;
+
+/// The wall-clock phase a span's duration is attributed to in the
+/// per-step [`StepTiming`] breakdown.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Local math: forward/backward stats, optimizer update.
+    Compute,
+    /// Actively shipping bytes (serialize + socket write).
+    Comms,
+    /// Blocked waiting on a peer's frame (straggler / latency stall).
+    Stall,
+    /// Gradient compression: top-k selection, power iterations, encoding.
+    Compress,
+}
+
+impl Phase {
+    fn index(self) -> usize {
+        match self {
+            Phase::Compute => 0,
+            Phase::Comms => 1,
+            Phase::Stall => 2,
+            Phase::Compress => 3,
+        }
+    }
+
+    fn as_str(self) -> &'static str {
+        match self {
+            Phase::Compute => "compute",
+            Phase::Comms => "comms",
+            Phase::Stall => "stall",
+            Phase::Compress => "compress",
+        }
+    }
+}
+
+/// Per-step (or per-epoch, when accumulated) wall-clock breakdown in
+/// seconds, drained from the calling thread's phase buckets.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct StepTiming {
+    /// Seconds spent in local math (stats, optimizer).
+    pub compute_s: f64,
+    /// Seconds spent actively shipping bytes.
+    pub comms_s: f64,
+    /// Seconds spent blocked on a peer's frame.
+    pub stall_s: f64,
+    /// Seconds spent compressing gradients.
+    pub compress_s: f64,
+}
+
+impl StepTiming {
+    /// Accumulate another breakdown into this one (per-step → per-epoch).
+    pub fn accumulate(&mut self, other: &StepTiming) {
+        self.compute_s += other.compute_s;
+        self.comms_s += other.comms_s;
+        self.stall_s += other.stall_s;
+        self.compress_s += other.compress_s;
+    }
+
+    /// Total attributed seconds across all four phases.
+    pub fn total_s(&self) -> f64 {
+        self.compute_s + self.comms_s + self.stall_s + self.compress_s
+    }
+}
+
+/// One recorded span occurrence. Fixed-size so the per-thread buffer is a
+/// flat `Vec` with no per-event allocation.
+#[derive(Clone, Copy)]
+struct Event {
+    name: &'static str,
+    tag: [u8; TAG_CAP],
+    tag_len: u8,
+    phase: Option<Phase>,
+    start_ns: u64,
+    dur_ns: u64,
+}
+
+/// A thread's registered event buffer. The mutex is uncontended on the
+/// hot path (only `flush` takes it from another thread).
+struct ThreadBuf {
+    tid: u32,
+    name: String,
+    events: Mutex<Vec<Event>>,
+    dropped: AtomicU64,
+}
+
+static REGISTRY: Mutex<Vec<Arc<ThreadBuf>>> = Mutex::new(Vec::new());
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SINK: Mutex<Option<BufWriter<File>>> = Mutex::new(None);
+
+/// Process-relative time origin for all span timestamps.
+fn origin() -> Instant {
+    static ORIGIN: OnceLock<Instant> = OnceLock::new();
+    *ORIGIN.get_or_init(Instant::now)
+}
+
+thread_local! {
+    static TBUF: RefCell<Option<Arc<ThreadBuf>>> = const { RefCell::new(None) };
+    static PHASE_NS: Cell<[u64; 4]> = const { Cell::new([0; 4]) };
+    static PHASE_DEPTH: Cell<u32> = const { Cell::new(0) };
+}
+
+/// Run `f` with this thread's buffer, creating and registering it on
+/// first use (an allocation, which is why warm-up iterations must record
+/// at least one span before an allocation-sensitive region is armed).
+fn with_thread_buf(f: impl FnOnce(&ThreadBuf)) {
+    TBUF.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            let mut reg = REGISTRY.lock().unwrap();
+            let buf = Arc::new(ThreadBuf {
+                tid: reg.len() as u32,
+                name: std::thread::current().name().unwrap_or("?").to_string(),
+                events: Mutex::new(Vec::with_capacity(BUF_CAP)),
+                dropped: AtomicU64::new(0),
+            });
+            reg.push(Arc::clone(&buf));
+            *slot = Some(buf);
+        }
+        f(slot.as_ref().unwrap());
+    });
+}
+
+/// RAII span guard: construct at the top of the region, measurement ends
+/// when the guard drops. Phase-carrying spans additionally accrue their
+/// duration into the thread's [`StepTiming`] buckets (outermost only).
+pub struct Span {
+    start: Instant,
+    name: &'static str,
+    tag: [u8; TAG_CAP],
+    tag_len: u8,
+    phase: Option<Phase>,
+    accrue: bool,
+}
+
+impl Span {
+    fn begin(name: &'static str, tag: &str, phase: Option<Phase>) -> Span {
+        let mut accrue = false;
+        if phase.is_some() {
+            let d = PHASE_DEPTH.with(|c| {
+                let d = c.get();
+                c.set(d + 1);
+                d
+            });
+            accrue = d == 0;
+        }
+        let mut buf = [0u8; TAG_CAP];
+        let n = tag.len().min(TAG_CAP);
+        buf[..n].copy_from_slice(&tag.as_bytes()[..n]);
+        Span { start: Instant::now(), name, tag: buf, tag_len: n as u8, phase, accrue }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let dur_ns = self.start.elapsed().as_nanos() as u64;
+        if let Some(p) = self.phase {
+            PHASE_DEPTH.with(|c| c.set(c.get() - 1));
+            if self.accrue {
+                PHASE_NS.with(|c| {
+                    let mut ns = c.get();
+                    ns[p.index()] += dur_ns;
+                    c.set(ns);
+                });
+            }
+        }
+        if ENABLED.load(Ordering::Relaxed) {
+            let start_ns = self.start.duration_since(origin()).as_nanos() as u64;
+            let ev = Event {
+                name: self.name,
+                tag: self.tag,
+                tag_len: self.tag_len,
+                phase: self.phase,
+                start_ns,
+                dur_ns,
+            };
+            with_thread_buf(|buf| {
+                let mut events = buf.events.lock().unwrap();
+                if events.len() < events.capacity() {
+                    events.push(ev);
+                } else {
+                    buf.dropped.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+    }
+}
+
+/// Open an untagged, phase-less span (pure trace detail, e.g. a GEMM).
+pub fn span(name: &'static str) -> Span {
+    Span::begin(name, "", None)
+}
+
+/// Open a span whose duration accrues into `phase`'s bucket.
+pub fn phase_span(name: &'static str, phase: Phase) -> Span {
+    Span::begin(name, "", Some(phase))
+}
+
+/// Open a phase span tagged with a wire/ledger key, so bytes (Ledger) and
+/// seconds (trace) join on the same `(tag, direction)` identity.
+pub fn tagged_span(name: &'static str, tag: &str, phase: Phase) -> Span {
+    Span::begin(name, tag, Some(phase))
+}
+
+/// Drain and reset the *calling thread's* phase buckets. Each training
+/// loop calls this once per step on its own thread; in-process site
+/// threads and the aggregator therefore never mix.
+pub fn take_step_timing() -> StepTiming {
+    let ns = PHASE_NS.with(|c| c.replace([0; 4]));
+    StepTiming {
+        compute_s: ns[0] as f64 * 1e-9,
+        comms_s: ns[1] as f64 * 1e-9,
+        stall_s: ns[2] as f64 * 1e-9,
+        compress_s: ns[3] as f64 * 1e-9,
+    }
+}
+
+/// Begin writing a JSONL trace to `path` and start collecting span
+/// events. Until this is called, spans cost two `Instant::now` reads and
+/// a phase-bucket add; no buffers exist and nothing is retained.
+pub fn enable(path: &Path) -> io::Result<()> {
+    origin(); // pin the time origin before any event is recorded
+    let file = File::create(path)?;
+    *SINK.lock().unwrap() = Some(BufWriter::new(file));
+    ENABLED.store(true, Ordering::SeqCst);
+    Ok(())
+}
+
+/// True when a JSONL sink is active (spans are being retained).
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Drain every registered thread buffer into the JSONL sink. Formatting
+/// allocates freely — call this at epoch boundaries or run end, never
+/// from an allocation-sensitive region.
+pub fn flush() -> io::Result<()> {
+    let mut sink = SINK.lock().unwrap();
+    let Some(out) = sink.as_mut() else { return Ok(()) };
+    let bufs: Vec<Arc<ThreadBuf>> = REGISTRY.lock().unwrap().clone();
+    let mut line = String::with_capacity(160);
+    for buf in bufs {
+        let mut events = buf.events.lock().unwrap();
+        for ev in events.drain(..) {
+            line.clear();
+            line.push_str("{\"name\":\"");
+            line.push_str(ev.name);
+            line.push('"');
+            if ev.tag_len > 0 {
+                line.push_str(",\"tag\":\"");
+                line.push_str(std::str::from_utf8(&ev.tag[..ev.tag_len as usize]).unwrap_or("?"));
+                line.push('"');
+            }
+            if let Some(p) = ev.phase {
+                line.push_str(",\"phase\":\"");
+                line.push_str(p.as_str());
+                line.push('"');
+            }
+            use std::fmt::Write as _;
+            let _ = write!(
+                line,
+                ",\"ts_ns\":{},\"dur_ns\":{},\"tid\":{},\"thread\":\"{}\"}}",
+                ev.start_ns, ev.dur_ns, buf.tid, buf.name
+            );
+            writeln!(out, "{line}")?;
+        }
+    }
+    out.flush()
+}
+
+/// Flush remaining events, append a `_meta` footer line (dropped-event
+/// census), close the sink, and stop retaining spans.
+pub fn finish() -> io::Result<()> {
+    flush()?;
+    ENABLED.store(false, Ordering::SeqCst);
+    let mut sink = SINK.lock().unwrap();
+    if let Some(mut out) = sink.take() {
+        let dropped: u64 = REGISTRY
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|b| b.dropped.load(Ordering::Relaxed))
+            .sum();
+        writeln!(out, "{{\"name\":\"_meta\",\"dropped\":{dropped}}}")?;
+        out.flush()?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outermost_phase_span_accrues_once() {
+        let _ = take_step_timing(); // reset this thread
+        {
+            let _outer = phase_span("outer", Phase::Compute);
+            let _inner = phase_span("inner", Phase::Comms);
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        let t = take_step_timing();
+        assert!(t.compute_s >= 0.004, "outer span did not accrue: {t:?}");
+        assert_eq!(t.comms_s, 0.0, "nested span double-counted: {t:?}");
+        // Buckets reset after the take.
+        assert_eq!(take_step_timing(), StepTiming::default());
+    }
+
+    #[test]
+    fn phaseless_spans_do_not_touch_buckets() {
+        let _ = take_step_timing();
+        {
+            let _g = span("gemm");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert_eq!(take_step_timing(), StepTiming::default());
+    }
+
+    #[test]
+    fn sibling_threads_keep_separate_buckets() {
+        let handle = std::thread::spawn(|| {
+            let _g = phase_span("peer", Phase::Stall);
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            drop(_g);
+            take_step_timing()
+        });
+        let _ = take_step_timing();
+        let theirs = handle.join().unwrap();
+        assert!(theirs.stall_s >= 0.004);
+        let mine = take_step_timing();
+        assert_eq!(mine.stall_s, 0.0, "another thread's stall leaked into mine");
+    }
+}

@@ -21,6 +21,7 @@
 
 use super::matrix::Matrix;
 use super::parallel::{self, parallel_rows_mut};
+use crate::obs::trace::span;
 use std::cell::RefCell;
 
 /// Minimum FLOPs before a matmul is worth threading. The pool's wake/park
@@ -156,6 +157,7 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
 
 /// C = A B into a caller-owned (m,n) output (contents overwritten).
 pub fn matmul_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    let _s = span("gemm-nn");
     let (m, k) = a.shape();
     let (k2, n) = b.shape();
     assert_eq!(k, k2, "matmul inner dim: {:?} x {:?}", a.shape(), b.shape());
@@ -183,6 +185,7 @@ pub fn matmul_tn(a: &Matrix, b: &Matrix) -> Matrix {
 /// dimension, so the pack is a vanishing fraction of the 2mkn FLOPs — and
 /// then runs the contiguous strip kernel.
 pub fn matmul_tn_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    let _s = span("gemm-tn");
     let (k, m) = a.shape();
     let (k2, n) = b.shape();
     assert_eq!(k, k2, "matmul_tn inner dim: {:?} x {:?}", a.shape(), b.shape());
@@ -222,6 +225,7 @@ pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
 /// fallback that allocated an n x k temporary per call) with one
 /// allocation-free path whose packing cost is O(nk) against 2mnk FLOPs.
 pub fn matmul_nt_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    let _s = span("gemm-nt");
     let (m, k) = a.shape();
     let (n, k2) = b.shape();
     assert_eq!(k, k2, "matmul_nt inner dim: {:?} x {:?}", a.shape(), b.shape());

@@ -3,6 +3,12 @@
 //! ZERO heap allocations — forward activations, backward deltas, the loss
 //! delta, kernel packing scratch and pool dispatch all run on recycled or
 //! pre-warmed storage.
+//!
+//! Tracing is ENABLED for the measured region: the span hot path (GEMM
+//! spans fire inside every `local_stats_into`, plus an explicit tagged
+//! protocol-style span per iteration) must also be allocation-free once
+//! the per-thread event buffer has been registered during warm-up —
+//! JSONL formatting happens only at `flush`, outside the armed window.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -62,23 +68,43 @@ fn mlp_local_stats_steady_state_is_allocation_free() {
     let labels: Vec<usize> = (0..32).map(|i| i % 10).collect();
     let batch = Batch::Dense { x, y: one_hot(&labels, 10) };
 
+    // Arm tracing before warm-up: enable() opens the sink, and the first
+    // span registers this thread's event buffer at full capacity — both
+    // allocate, so they must happen outside the measured region.
+    let trace_path =
+        std::env::temp_dir().join(format!("dad-alloc-free-{}.jsonl", std::process::id()));
+    dad::obs::trace::enable(&trace_path).expect("arming trace sink");
+
     let mut ws = Workspace::new();
     let mut out = LocalStats::empty();
     // Warm-up: spawns the pool (workers pre-size their packing scratch at
     // spawn), grows the workspace to its high-water mark, and settles the
-    // container capacities.
+    // container capacities (including the trace buffer).
     for _ in 0..5 {
+        let _s = dad::obs::trace::tagged_span("round-up", "acts", dad::obs::trace::Phase::Comms);
         mlp.local_stats_into(&batch, &mut ws, &mut out);
     }
 
     ALLOCS.store(0, Ordering::SeqCst);
     ARMED.store(true, Ordering::SeqCst);
     for _ in 0..10 {
+        let _s = dad::obs::trace::tagged_span("round-up", "acts", dad::obs::trace::Phase::Comms);
         mlp.local_stats_into(&batch, &mut ws, &mut out);
     }
     ARMED.store(false, Ordering::SeqCst);
     let n = ALLOCS.load(Ordering::SeqCst);
-    assert_eq!(n, 0, "steady-state local_stats made {n} heap allocations (want 0)");
+    assert_eq!(
+        n, 0,
+        "steady-state local_stats (with tracing enabled) made {n} heap allocations (want 0)"
+    );
+
+    // The armed spans really were recorded: sealing the trace writes the
+    // GEMM and round events gathered above.
+    dad::obs::trace::finish().expect("sealing trace");
+    let trace = std::fs::read_to_string(&trace_path).expect("trace file exists");
+    assert!(trace.contains("\"name\":\"round-up\""), "tagged span missing from trace");
+    assert!(trace.contains("\"name\":\"gemm-"), "gemm spans missing from trace");
+    std::fs::remove_file(&trace_path).ok();
 
     // Sanity: the measured loop actually computed real statistics.
     assert!(out.loss.is_finite() && out.loss > 0.0);

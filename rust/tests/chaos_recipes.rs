@@ -122,6 +122,44 @@ fn same_seed_fault_runs_are_identical() {
     assert_eq!(a.epochs.last().unwrap().sites_live, 2);
 }
 
+/// The time-domain half of the pure-delay contract: `slow-link-dad` is
+/// `clean-dad` plus injected per-frame latency (same seed, same spec, no
+/// drops or disconnects), so its losses and ledger byte counts must stay
+/// byte-identical to the clean run while the injected seconds surface in
+/// the aggregator's `stall_s`/`comms_s` phase breakdown — the wire got
+/// slower, the math did not change.
+#[test]
+fn pure_delay_moves_seconds_not_bytes() {
+    let clean = run_checked("clean-dad").log.expect("clean-dad log");
+    let slow = run_checked("slow-link-dad").log.expect("slow-link-dad log");
+    assert_eq!(clean.epochs.len(), slow.epochs.len());
+    for (e, (c, s)) in clean.epochs.iter().zip(&slow.epochs).enumerate() {
+        assert_eq!(c.train_loss, s.train_loss, "epoch {e}: delay changed the loss");
+        assert_eq!(c.bytes_up, s.bytes_up, "epoch {e}: delay changed uplink bytes");
+        assert_eq!(c.bytes_down, s.bytes_down, "epoch {e}: delay changed downlink bytes");
+    }
+    // Every epoch of the delayed run spends wall-clock blocked on the
+    // paced links, and the run as a whole waits visibly longer than the
+    // clean control: the injected latency must land in the time columns
+    // (stall while gathering, comms while shipping), nowhere else.
+    let wire_s = |log: &dad::coordinator::TrainLog| -> f64 {
+        log.epochs.iter().map(|e| e.timing.stall_s + e.timing.comms_s).sum()
+    };
+    for (e, s) in slow.epochs.iter().enumerate() {
+        assert!(
+            s.timing.stall_s + s.timing.comms_s > 0.0,
+            "epoch {e}: delayed run recorded no wire time at all: {:?}",
+            s.timing
+        );
+    }
+    let (clean_wire, slow_wire) = (wire_s(&clean), wire_s(&slow));
+    assert!(
+        slow_wire > clean_wire && slow_wire > 2e-3,
+        "injected delay must show up in stall_s/comms_s: clean {clean_wire:.6}s, \
+         slow {slow_wire:.6}s"
+    );
+}
+
 /// The residual-carrying sparse family makes the same determinism
 /// guarantee under faults: losing a site mid-run discards only that
 /// site's error-feedback state (residual + DGC momentum are site-local),

@@ -5,6 +5,7 @@
 
 use dad::checkpoint::{fnv1a64, CKPT_MAGIC, CKPT_VERSION};
 use dad::dist::wire::{sparse_wire_len, SparseMat, MAX_FRAME_LEN, WIRE_VERSION};
+use dad::obs::metrics::METRIC_NAMES;
 
 const SPEC: &str = include_str!("../docs/FORMATS.md");
 
@@ -95,4 +96,32 @@ fn spec_documents_every_live_tag() {
     ] {
         assert!(SPEC.contains(&format!("`{tag}`")), "FORMATS.md tag table is missing `{tag}`");
     }
+}
+
+#[test]
+fn spec_documents_every_exposed_metric() {
+    // §6: each name `/metrics` serves must appear (backticked) in the
+    // inventory, so renaming a metric forces a spec update.
+    for name in METRIC_NAMES {
+        assert!(
+            SPEC.contains(&format!("`{name}`")),
+            "FORMATS.md §6 metric inventory is missing `{name}`"
+        );
+    }
+}
+
+#[test]
+fn spec_documents_the_trace_record_schema() {
+    // §6: the JSONL span-record keys and phase vocabulary are normative —
+    // `dad trace summarize` and external tooling parse them.
+    for key in ["name", "tag", "phase", "ts_ns", "dur_ns", "tid", "thread"] {
+        assert!(
+            SPEC.contains(&format!("\"{key}\"")),
+            "FORMATS.md §6 trace schema is missing the \"{key}\" key"
+        );
+    }
+    for phase in ["`compute`", "`comms`", "`stall`", "`compress`"] {
+        assert!(SPEC.contains(phase), "FORMATS.md §6 phase vocabulary is missing {phase}");
+    }
+    assert!(SPEC.contains("`_meta`"), "FORMATS.md §6 does not document the `_meta` footer");
 }
