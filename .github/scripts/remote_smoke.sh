@@ -26,6 +26,14 @@
 #   remote_smoke.sh strict <name>
 #       the same recipe under --strict must exit non-zero with a clean
 #       error naming the lost site instead of degrading.
+#   remote_smoke.sh tree <algo>
+#       2-level aggregation tree as separate OS processes: `dad serve
+#       --topology tree:2 --sites 4` + two `dad relay`s + four `dad
+#       join`s dialing the relays. Every process must exit 0 and the
+#       serve CSV must report sites_live=4. For edad and dad-p2p the
+#       serve must instead be REJECTED before binding (their exchange is
+#       not an associative reduction), with an error naming the
+#       algorithm and the tree topology.
 set -euo pipefail
 
 ALGO="${1:?usage: remote_smoke.sh <algo|recipe|strict> [args]}"
@@ -116,6 +124,91 @@ if [ "$ALGO" = "strict" ]; then
         exit 1
     }
     echo "ok(strict $NAME): $(grep 'chaos run failed' "$err_log" | head -1)"
+    exit 0
+fi
+
+# --- 2-level tree mode ------------------------------------------------------
+
+if [ "$ALGO" = "tree" ]; then
+    TREE_ALGO="${2:?usage: remote_smoke.sh tree <algo>}"
+    CSV="results/tree_smoke_${TREE_ALGO//[:]/_}.csv"
+    rm -f "$CSV"
+    RELAY1_PORT=$((PORT + 1))
+    RELAY2_PORT=$((PORT + 2))
+
+    # Non-associative exchanges must be rejected on `dad serve`'s terminal
+    # before any socket binds — no stranded relays, no stranded joins.
+    case "$TREE_ALGO" in
+    edad|dad-p2p)
+        err_log=$(mktemp)
+        if timeout "$LIMIT" "$BIN" serve --addr "127.0.0.1:${PORT}" --sites 4 \
+            --topology tree:2 --algo "$TREE_ALGO" --dataset mnist --scale quick \
+            --epochs 2 --batch 8 --seed 7 --csv "$CSV" 2>"$err_log"; then
+            echo "FAIL(tree,$TREE_ALGO): serve must reject $TREE_ALGO on a tree topology"
+            exit 1
+        fi
+        grep -q "$TREE_ALGO" "$err_log" || {
+            echo "FAIL(tree,$TREE_ALGO): rejection error does not name the algorithm:"
+            cat "$err_log"
+            exit 1
+        }
+        grep -q "tree topology" "$err_log" || {
+            echo "FAIL(tree,$TREE_ALGO): rejection error does not name the tree topology:"
+            cat "$err_log"
+            exit 1
+        }
+        if [ -s "$CSV" ]; then
+            echo "FAIL(tree,$TREE_ALGO): rejected run must not write metrics"
+            exit 1
+        fi
+        echo "ok(tree,$TREE_ALGO): rejected up front with a clear error"
+        exit 0
+        ;;
+    esac
+
+    pids=()
+    cleanup_tree() {
+        for pid in "${pids[@]}"; do
+            kill "$pid" 2>/dev/null || true
+        done
+    }
+    trap cleanup_tree EXIT
+
+    # All seven processes launch concurrently: the relays retry their
+    # parent dial and the joins retry their relay dial for up to 10 s.
+    timeout "$LIMIT" "$BIN" serve --addr "127.0.0.1:${PORT}" --sites 4 --topology tree:2 \
+        --algo "$TREE_ALGO" --dataset mnist --scale quick --epochs 2 --batch 8 --seed 7 \
+        --csv "$CSV" &
+    pids+=($!)
+    timeout "$LIMIT" "$BIN" relay --parent "127.0.0.1:${PORT}" --sites 2 \
+        --addr "127.0.0.1:${RELAY1_PORT}" &
+    pids+=($!)
+    timeout "$LIMIT" "$BIN" relay --parent "127.0.0.1:${PORT}" --sites 2 \
+        --addr "127.0.0.1:${RELAY2_PORT}" &
+    pids+=($!)
+    for relay_port in "$RELAY1_PORT" "$RELAY1_PORT" "$RELAY2_PORT" "$RELAY2_PORT"; do
+        timeout "$LIMIT" "$BIN" join "127.0.0.1:${relay_port}" &
+        pids+=($!)
+    done
+    for pid in "${pids[@]}"; do
+        wait "$pid"
+    done
+
+    test -s "$CSV" || { echo "FAIL(tree,$TREE_ALGO): metrics CSV missing or empty: $CSV"; exit 1; }
+    rows=$(wc -l <"$CSV")
+    if [ "$rows" -lt 3 ]; then
+        echo "FAIL(tree,$TREE_ALGO): metrics CSV too short ($rows lines):"
+        cat "$CSV"
+        exit 1
+    fi
+    # The root must account for all 4 leaves, not its 2 relay links.
+    live=$(awk -F, 'END { print $9 }' "$CSV")
+    if [ "$live" != "4" ]; then
+        echo "FAIL(tree,$TREE_ALGO): expected sites_live=4 at the root, got '$live':"
+        cat "$CSV"
+        exit 1
+    fi
+    echo "ok(tree,$TREE_ALGO): serve + 2 relays + 4 joins exited 0; $rows CSV lines in $CSV"
     exit 0
 fi
 

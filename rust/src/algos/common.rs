@@ -114,14 +114,25 @@ pub fn exchange_direct<M: DistModel>(
         return vec![];
     }
     let scale = 1.0 / stats.total_rows as f32;
+    // Canonical segment reduction (not a sequential site fold): the same
+    // bracketing every tree level uses, so simulated sums stay bit-equal
+    // to star *and* tree TCP runs (see `crate::algos::reduce`).
+    let leaves: Vec<u32> = (0..stats.per_site.len() as u32).collect();
+    let parts: Vec<Vec<Matrix>> = stats
+        .per_site
+        .iter()
+        .map(|s| {
+            debug_assert_eq!(s.direct.len(), n_direct);
+            s.direct.iter().map(|(_, g)| g.clone()).collect()
+        })
+        .collect();
+    let sums = crate::algos::reduce::reduce_dense(&leaves, parts)
+        .expect("uniform direct-gradient layouts across sites")
+        .expect("at least one site");
     let mut out: Vec<(usize, Matrix)> = Vec::with_capacity(n_direct);
-    for di in 0..n_direct {
+    for (di, mut sum) in sums.into_iter().enumerate() {
         let idx = stats.per_site[0].direct[di].0;
-        let mut sum = stats.per_site[0].direct[di].1.clone();
-        for s in &stats.per_site[1..] {
-            debug_assert_eq!(s.direct[di].0, idx);
-            sum.axpy(1.0, &s.direct[di].1);
-        }
+        debug_assert!(stats.per_site.iter().all(|s| s.direct[di].0 == idx));
         sum.scale_inplace(scale);
         out.push((idx, sum));
     }

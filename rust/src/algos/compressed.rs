@@ -14,8 +14,8 @@ use crate::algos::common::{
     exchange_direct, gather_local_stats, weighted_loss, DistAlgorithm, StepOutcome,
 };
 use crate::algos::protocol::{
-    agg_direct_exchange, gather_sum, site_direct_exchange, AggExchange, Endpoint, StepMeta,
-    StepProtocol, StepSync,
+    agg_direct_exchange, ctrl_from_leaves, gather_stack1, gather_sum, site_direct_exchange,
+    AggExchange, Endpoint, Round, StepMeta, StepPlan, StepProtocol, StepSync,
 };
 use crate::dist::wire::{proto_err, ByteReader, ByteWriter};
 use crate::dist::Cluster;
@@ -231,37 +231,26 @@ impl<M: DistModel> DistAlgorithm<M> for PowerSgd {
                 .iter()
                 .map(|s| s.entries[ei].weight_grad(scale * n_sites as f32))
                 .collect();
-            // Phase 1: P_s = (M_s + err_s) Q ; allreduce-mean; orthonormalize.
-            let mut p_mean: Option<Matrix> = None;
+            // Phase 1: P_s = (M_s + err_s) Q ; allreduce-mean (canonical
+            // segment sum); orthonormalize.
+            let mut p_parts: Vec<Matrix> = Vec::with_capacity(n_sites);
             for (si, m) in locals.iter().enumerate() {
                 let p = self.states[si][ei].compress_p(m);
                 cluster.send_to_agg("psgd-p", &[&p]);
-                p_mean = Some(match p_mean {
-                    None => p,
-                    Some(mut acc) => {
-                        acc.axpy(1.0, &p);
-                        acc
-                    }
-                });
+                p_parts.push(p);
             }
-            let mut p_hat = p_mean.unwrap();
+            let mut p_hat = canonical_sum(p_parts.into_iter());
             p_hat.scale_inplace(1.0 / n_sites as f32);
             orthonormalize_cols(&mut p_hat);
             cluster.broadcast("psgd-p", &[&p_hat]);
             // Phase 2: Q_s = (M_s+err_s)ᵀ P̂ ; allreduce-mean; broadcast.
-            let mut q_mean: Option<Matrix> = None;
+            let mut q_parts: Vec<Matrix> = Vec::with_capacity(n_sites);
             for si in 0..n_sites {
                 let q = self.states[si][ei].compress_q(&p_hat);
                 cluster.send_to_agg("psgd-q", &[&q]);
-                q_mean = Some(match q_mean {
-                    None => q,
-                    Some(mut acc) => {
-                        acc.axpy(1.0, &q);
-                        acc
-                    }
-                });
+                q_parts.push(q);
             }
-            let mut q_hat = q_mean.unwrap();
+            let mut q_hat = canonical_sum(q_parts.into_iter());
             q_hat.scale_inplace(1.0 / n_sites as f32);
             cluster.broadcast("psgd-q", &[&q_hat]);
             // Reconstruct M̂ = P̂ Q̂ᵀ (same everywhere); update per-site
@@ -291,23 +280,32 @@ impl<M: DistModel> DistAlgorithm<M> for PowerSgd {
 }
 
 /// Bias-gradient exchange shared by the compressed and sparsified
-/// algorithms.
+/// algorithms. The sum uses the canonical segment bracketing so it stays
+/// bit-equal to star and tree wire runs (see `crate::algos::reduce`).
 pub(crate) fn exchange_bias<M>(
     cluster: &mut Cluster<M>,
     per_site: &[crate::nn::stats::LocalStats],
     ei: usize,
     scale: f32,
 ) -> Matrix {
-    let mut bsum = per_site[0].entries[ei].bias_grad(scale);
-    for s in &per_site[1..] {
-        bsum.axpy(1.0, &s.entries[ei].bias_grad(scale));
-    }
+    let bsum = canonical_sum(per_site.iter().map(|s| s.entries[ei].bias_grad(scale)));
     for s in per_site {
         let bg = s.entries[ei].bias_grad(scale);
         cluster.send_to_agg("bias-grad", &[&bg]);
     }
     cluster.broadcast("bias-grad", &[&bsum]);
     bsum
+}
+
+/// Canonical segment sum of one matrix per site (site i = leaf i).
+pub(crate) fn canonical_sum(parts: impl Iterator<Item = Matrix>) -> Matrix {
+    let parts: Vec<Vec<Matrix>> = parts.map(|m| vec![m]).collect();
+    let leaves: Vec<u32> = (0..parts.len() as u32).collect();
+    crate::algos::reduce::reduce_dense(&leaves, parts)
+        .expect("uniform shapes across sites")
+        .expect("at least one site")
+        .pop()
+        .expect("exactly one matrix per site")
 }
 
 pub(crate) fn bytes_now<M>(cluster: &Cluster<M>) -> (u64, u64) {
@@ -343,6 +341,31 @@ impl<M: DistModel> StepProtocol<M> for RankDadProtocol {
         // The factored concat (Q̂, Ĝ) and the 1/N scale follow the sync
         // frame; the site half never reads the startup site count.
         true
+    }
+
+    fn plan(&self, metas: &[StepMeta]) -> io::Result<StepPlan> {
+        let meta = metas.first().ok_or_else(|| proto_err("plan needs site metas".into()))?;
+        let mut rounds = Vec::new();
+        for _ in &meta.entries {
+            rounds.push(Round::UpStack { tag: "lowrank-q" });
+            rounds.push(Round::UpStack { tag: "lowrank-g" });
+        }
+        rounds.push(Round::CtrlUp { tag: "eff-rank" });
+        for _ in &meta.entries {
+            rounds.push(Round::Down { tag: "lowrank-q" });
+            rounds.push(Round::Down { tag: "lowrank-g" });
+        }
+        for &(_, b_idx) in &meta.entries {
+            if b_idx != u32::MAX {
+                rounds.push(Round::UpSum { tag: "bias-grad" });
+                rounds.push(Round::Down { tag: "bias-grad" });
+            }
+        }
+        if !meta.direct_idx.is_empty() {
+            rounds.push(Round::UpSum { tag: "direct-grad" });
+            rounds.push(Round::Down { tag: "direct-grad" });
+        }
+        Ok(StepPlan { rounds })
     }
 
     fn site_exchange(
@@ -402,47 +425,51 @@ impl<M: DistModel> StepProtocol<M> for RankDadProtocol {
         let shapes = model.param_shapes();
         let scale = sync.scale();
         let n_entries = metas[0].entries.len();
-        let mut q_parts: Vec<Vec<Matrix>> = vec![Vec::new(); n_entries];
-        let mut g_parts: Vec<Vec<Matrix>> = vec![Vec::new(); n_entries];
-        let mut eff_ranks: Vec<Vec<usize>> = vec![Vec::new(); n_entries];
         for (site, meta) in metas.iter().enumerate() {
             if meta.entries.len() != n_entries {
                 return Err(proto_err(format!("site {site} stats layout mismatch")));
             }
-            for ei in 0..n_entries {
-                q_parts[ei].push(ep.gather1(site, "lowrank-q")?);
-                g_parts[ei].push(ep.gather1(site, "lowrank-g")?);
-            }
-            let body = ep.ctrl_from(site, "eff-rank")?;
-            let mut r = ByteReader::new(&body);
-            if r.read_u16()? as usize != n_entries {
-                return Err(proto_err(format!("site {site} eff-rank arity mismatch")));
-            }
-            for ranks in eff_ranks.iter_mut() {
-                ranks.push(r.read_u16()? as usize);
+        }
+        // Round-major, mirroring plan(): per entry, stack the Q then the G
+        // factors across every link (each link's frames arrive in its FIFO
+        // order, so this consumes exactly the site half's send sequence).
+        let mut q_hats: Vec<Matrix> = Vec::with_capacity(n_entries);
+        let mut g_hats: Vec<Matrix> = Vec::with_capacity(n_entries);
+        for _ in 0..n_entries {
+            q_hats.push(gather_stack1(ep, "lowrank-q")?);
+            g_hats.push(gather_stack1(ep, "lowrank-g")?);
+        }
+        // eff-rank telemetry: one control body per leaf (relay links ship
+        // them batched), expanded in ascending leaf order.
+        let mut eff_ranks: Vec<Vec<usize>> = vec![Vec::new(); n_entries];
+        for link in 0..ep.n_links() {
+            for (leaf, body) in ctrl_from_leaves(ep, link, "eff-rank")? {
+                let mut r = ByteReader::new(&body);
+                if r.read_u16()? as usize != n_entries {
+                    return Err(proto_err(format!("leaf {leaf} eff-rank arity mismatch")));
+                }
+                for ranks in eff_ranks.iter_mut() {
+                    ranks.push(r.read_u16()? as usize);
+                }
             }
         }
         let mut grads: Vec<Matrix> = shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect();
-        for ei in 0..n_entries {
-            let q_refs: Vec<&Matrix> = q_parts[ei].iter().collect();
-            let g_refs: Vec<&Matrix> = g_parts[ei].iter().collect();
-            let q_hat = Matrix::vertcat(&q_refs);
-            let g_hat = Matrix::vertcat(&g_refs);
-            ep.bcast("lowrank-q", &[&q_hat])?;
-            ep.bcast("lowrank-g", &[&g_hat])?;
-            let mut gw = matmul_tn(&q_hat, &g_hat);
+        for (ei, (q_hat, g_hat)) in q_hats.iter().zip(&g_hats).enumerate() {
+            ep.bcast("lowrank-q", &[q_hat])?;
+            ep.bcast("lowrank-g", &[g_hat])?;
+            let mut gw = matmul_tn(q_hat, g_hat);
             gw.scale_inplace(scale);
             grads[metas[0].entries[ei].0 as usize] = gw;
         }
-        // Biases: sum per-site scaled bias grads in site order (the
-        // simulated reduction order), broadcast the sums. Per-socket FIFO
-        // is respected: sites ship their biases in entry order, and each
-        // gather_sum round reads exactly one frame per site.
+        // Biases: canonical segment sums of the per-leaf scaled bias grads,
+        // broadcast per entry. Per-link FIFO is respected: leaves ship
+        // their biases in entry order, and each gather_sum round reads
+        // exactly one frame per link.
         for &(_, b_idx) in &metas[0].entries {
             if b_idx == u32::MAX {
                 continue;
             }
-            let sum = gather_sum(ep, metas.len(), "bias-grad")?;
+            let sum = gather_sum(ep, "bias-grad")?;
             ep.bcast("bias-grad", &[&sum])?;
             grads[b_idx as usize] = sum;
         }
@@ -478,6 +505,26 @@ impl PowerSgdProtocol {
 impl<M: DistModel> StepProtocol<M> for PowerSgdProtocol {
     fn name(&self) -> &'static str {
         "powersgd"
+    }
+
+    fn plan(&self, metas: &[StepMeta]) -> io::Result<StepPlan> {
+        let meta = metas.first().ok_or_else(|| proto_err("plan needs site metas".into()))?;
+        let mut rounds = Vec::new();
+        for &(_, b_idx) in &meta.entries {
+            rounds.push(Round::UpSum { tag: "psgd-p" });
+            rounds.push(Round::Down { tag: "psgd-p" });
+            rounds.push(Round::UpSum { tag: "psgd-q" });
+            rounds.push(Round::Down { tag: "psgd-q" });
+            if b_idx != u32::MAX {
+                rounds.push(Round::UpSum { tag: "bias-grad" });
+                rounds.push(Round::Down { tag: "bias-grad" });
+            }
+        }
+        if !meta.direct_idx.is_empty() {
+            rounds.push(Round::UpSum { tag: "direct-grad" });
+            rounds.push(Round::Down { tag: "direct-grad" });
+        }
+        Ok(StepPlan { rounds })
     }
 
     fn site_exchange(
@@ -541,20 +588,20 @@ impl<M: DistModel> StepProtocol<M> for PowerSgdProtocol {
         let n_sites = metas.len();
         let mut grads: Vec<Matrix> = shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect();
         for &(w_idx, b_idx) in &metas[0].entries {
-            // Phase 1: mean the P factors (gather_sum accumulates in site
-            // order, the simulated reduction order), orthonormalize,
-            // broadcast.
-            let mut p_hat = gather_sum(ep, n_sites, "psgd-p")?;
+            // Phase 1: mean the P factors (canonical segment sum over the
+            // live leaves — the simulated reduction bracketing),
+            // orthonormalize, broadcast.
+            let mut p_hat = gather_sum(ep, "psgd-p")?;
             p_hat.scale_inplace(1.0 / n_sites as f32);
             orthonormalize_cols(&mut p_hat);
             ep.bcast("psgd-p", &[&p_hat])?;
             // Phase 2: mean the Q factors, broadcast, reconstruct.
-            let mut q_hat = gather_sum(ep, n_sites, "psgd-q")?;
+            let mut q_hat = gather_sum(ep, "psgd-q")?;
             q_hat.scale_inplace(1.0 / n_sites as f32);
             ep.bcast("psgd-q", &[&q_hat])?;
             grads[w_idx as usize] = matmul_nt(&p_hat, &q_hat);
             if b_idx != u32::MAX {
-                let bsum = gather_sum(ep, n_sites, "bias-grad")?;
+                let bsum = gather_sum(ep, "bias-grad")?;
                 ep.bcast("bias-grad", &[&bsum])?;
                 grads[b_idx as usize] = bsum;
             }

@@ -10,8 +10,8 @@ use crate::algos::common::{
     exchange_direct, gather_local_stats, weighted_loss, DistAlgorithm, StepOutcome,
 };
 use crate::algos::protocol::{
-    agg_direct_exchange, site_direct_exchange, AggExchange, Endpoint, StepMeta, StepProtocol,
-    StepSync,
+    agg_direct_exchange, gather_seg_sum, gather_stack1, site_direct_exchange, AggExchange,
+    Endpoint, Round, StepMeta, StepPlan, StepProtocol, StepSync,
 };
 use crate::dist::wire::proto_err;
 use crate::dist::Cluster;
@@ -63,24 +63,21 @@ impl<M: DistModel> DistAlgorithm<M> for Dsgd {
         let stats = gather_local_stats(cluster, batches);
         let shapes = cluster.sites[0].model.param_shapes();
         let scale = 1.0 / stats.total_rows as f32;
-        // Per-site full gradients (scaled so the sum is the global mean).
-        let mut grads: Option<Vec<Matrix>> = None;
+        // Per-site full gradients (scaled so the sum is the global mean),
+        // summed in the canonical segment bracketing every aggregation
+        // level shares (see `crate::algos::reduce`).
+        let mut parts: Vec<Vec<Matrix>> = Vec::with_capacity(stats.per_site.len());
         for s in &stats.per_site {
             let g = assemble_grads(&shapes, &s.entries, &s.direct, scale, scale);
             // Wire: the entire gradient (every parameter tensor).
             let refs: Vec<&Matrix> = g.iter().collect();
             cluster.send_to_agg("grad", &refs);
-            grads = Some(match grads {
-                None => g,
-                Some(mut acc) => {
-                    for (a, b) in acc.iter_mut().zip(&g) {
-                        a.axpy(1.0, b);
-                    }
-                    acc
-                }
-            });
+            parts.push(g);
         }
-        let grads = grads.unwrap();
+        let leaves: Vec<u32> = (0..parts.len() as u32).collect();
+        let grads = crate::algos::reduce::reduce_dense(&leaves, parts)
+            .expect("uniform gradient layouts across sites")
+            .expect("at least one site");
         let refs: Vec<&Matrix> = grads.iter().collect();
         cluster.broadcast("grad", &refs);
         let (up1, down1) = step_bytes(cluster);
@@ -248,6 +245,11 @@ impl<M: DistModel> StepProtocol<M> for PooledProtocol {
         true
     }
 
+    fn plan(&self, _metas: &[StepMeta]) -> io::Result<StepPlan> {
+        // The oracle ships no payload frames: nothing to relay.
+        Ok(StepPlan { rounds: vec![] })
+    }
+
     fn site_exchange(
         &mut self,
         _ep: &mut Endpoint<'_>,
@@ -291,6 +293,12 @@ impl<M: DistModel> StepProtocol<M> for DsgdProtocol {
         true
     }
 
+    fn plan(&self, _metas: &[StepMeta]) -> io::Result<StepPlan> {
+        Ok(StepPlan {
+            rounds: vec![Round::UpSum { tag: "grad" }, Round::Down { tag: "grad" }],
+        })
+    }
+
     fn site_exchange(
         &mut self,
         ep: &mut Endpoint<'_>,
@@ -318,24 +326,9 @@ impl<M: DistModel> StepProtocol<M> for DsgdProtocol {
         metas: &[StepMeta],
         _sync: &StepSync,
     ) -> io::Result<AggExchange> {
+        let _ = metas;
         let shapes = model.param_shapes();
-        let mut acc: Option<Vec<Matrix>> = None;
-        for site in 0..metas.len() {
-            let g = ep.gather(site, "grad")?;
-            if g.len() != shapes.len() {
-                return Err(proto_err(format!("site {site} grad arity mismatch")));
-            }
-            acc = Some(match acc {
-                None => g,
-                Some(mut a) => {
-                    for (x, y) in a.iter_mut().zip(&g) {
-                        x.axpy(1.0, y);
-                    }
-                    a
-                }
-            });
-        }
-        let grads = acc.ok_or_else(|| proto_err("dsgd needs at least one site".into()))?;
+        let grads = gather_seg_sum(ep, "grad", shapes.len())?;
         let refs: Vec<&Matrix> = grads.iter().collect();
         ep.bcast("grad", &refs)?;
         Ok(AggExchange { grads, eff_ranks: vec![] })
@@ -356,6 +349,24 @@ impl<M: DistModel> StepProtocol<M> for DadProtocol {
         // (Â, Δ̂) concatenation and the 1/N scale are both shaped by the
         // sync frame, so the exchange shrinks with the survivor set.
         true
+    }
+
+    fn plan(&self, metas: &[StepMeta]) -> io::Result<StepPlan> {
+        let meta = metas.first().ok_or_else(|| proto_err("plan needs site metas".into()))?;
+        let mut rounds = Vec::new();
+        for _ in &meta.entries {
+            rounds.push(Round::UpStack { tag: "acts" });
+            rounds.push(Round::UpStack { tag: "deltas" });
+        }
+        for _ in &meta.entries {
+            rounds.push(Round::Down { tag: "acts" });
+            rounds.push(Round::Down { tag: "deltas" });
+        }
+        if !meta.direct_idx.is_empty() {
+            rounds.push(Round::UpSum { tag: "direct-grad" });
+            rounds.push(Round::Down { tag: "direct-grad" });
+        }
+        Ok(StepPlan { rounds })
     }
 
     fn site_exchange(
@@ -387,23 +398,27 @@ impl<M: DistModel> StepProtocol<M> for DadProtocol {
         metas: &[StepMeta],
         sync: &StepSync,
     ) -> io::Result<AggExchange> {
-        let mut per_site: Vec<Vec<StatsEntry>> = Vec::with_capacity(metas.len());
+        // Round-major, mirroring plan(): one tag's stack is gathered across
+        // every link before the next round starts. Each link's frames still
+        // arrive in its FIFO order, so this consumes exactly the site
+        // half's send sequence.
+        let layout = &metas[0].entries;
         for (site, meta) in metas.iter().enumerate() {
-            let mut entries = Vec::with_capacity(meta.entries.len());
-            for &(w_idx, b_idx) in &meta.entries {
-                let a = ep.gather1(site, "acts")?;
-                let d = ep.gather1(site, "deltas")?;
-                entries.push(StatsEntry {
-                    w_idx: w_idx as usize,
-                    b_idx: (b_idx != u32::MAX).then_some(b_idx as usize),
-                    a,
-                    d,
-                });
+            if meta.entries != *layout {
+                return Err(proto_err(format!("site {site} stats layout mismatch")));
             }
-            per_site.push(entries);
         }
-        let entry_refs: Vec<&[StatsEntry]> = per_site.iter().map(|e| &e[..]).collect();
-        let cat = concat_stats(&entry_refs);
+        let mut cat: Vec<StatsEntry> = Vec::with_capacity(layout.len());
+        for &(w_idx, b_idx) in layout {
+            let a = gather_stack1(ep, "acts")?;
+            let d = gather_stack1(ep, "deltas")?;
+            cat.push(StatsEntry {
+                w_idx: w_idx as usize,
+                b_idx: (b_idx != u32::MAX).then_some(b_idx as usize),
+                a,
+                d,
+            });
+        }
         for e in &cat {
             ep.bcast("acts", &[&e.a])?;
             ep.bcast("deltas", &[&e.d])?;
@@ -424,6 +439,14 @@ pub struct EdadProtocol;
 impl<M: DistModel> StepProtocol<M> for EdadProtocol {
     fn name(&self) -> &'static str {
         "edad"
+    }
+
+    fn plan(&self, _metas: &[StepMeta]) -> io::Result<StepPlan> {
+        Err(proto_err(
+            "edad: weight-coupled delta recomputation is not an associative reduction, \
+             so edad cannot run on a tree topology (use dad, or a flat star)"
+                .into(),
+        ))
     }
 
     fn site_exchange(

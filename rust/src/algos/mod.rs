@@ -26,6 +26,7 @@ pub mod compressed;
 pub mod exact;
 pub mod p2p;
 pub mod protocol;
+pub mod reduce;
 pub mod sparsified;
 
 pub use common::{concat_batches, DistAlgorithm, StepOutcome};
@@ -34,7 +35,7 @@ pub use exact::{
     Dad, DadProtocol, Dsgd, DsgdProtocol, Edad, EdadProtocol, Pooled, PooledProtocol,
 };
 pub use p2p::{DadP2p, DadP2pProtocol};
-pub use protocol::{AggExchange, Endpoint, StepMeta, StepProtocol, StepSync};
+pub use protocol::{AggExchange, Endpoint, Round, StepMeta, StepPlan, StepProtocol, StepSync};
 pub use sparsified::{SparseAlgo, SparseProtocol, SparseRule};
 
 use crate::nn::model::DistModel;

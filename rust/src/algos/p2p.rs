@@ -22,7 +22,8 @@ use crate::algos::common::{
     gather_local_stats, weighted_loss, DistAlgorithm, StepOutcome,
 };
 use crate::algos::protocol::{
-    expect_mats, mean_direct, one_mat, AggExchange, Endpoint, StepMeta, StepProtocol, StepSync,
+    expect_mats, mean_direct, one_mat, AggExchange, Endpoint, StepMeta, StepPlan, StepProtocol,
+    StepSync,
 };
 use crate::dist::wire::proto_err;
 use crate::dist::{Cluster, Direction};
@@ -64,17 +65,16 @@ impl<M: DistModel> DistAlgorithm<M> for DadP2p {
         let entry_refs: Vec<&[StatsEntry]> =
             stats.per_site.iter().map(|s| &s.entries[..]).collect();
         let cat = concat_stats(&entry_refs);
-        // Direct grads: every peer averages the copies it received.
-        let mut direct: Vec<(usize, Matrix)> = Vec::new();
-        for di in 0..stats.per_site[0].direct.len() {
-            let idx = stats.per_site[0].direct[di].0;
-            let mut sum = stats.per_site[0].direct[di].1.clone();
-            for s in &stats.per_site[1..] {
-                sum.axpy(1.0, &s.direct[di].1);
-            }
-            sum.scale_inplace(scale);
-            direct.push((idx, sum));
-        }
+        // Direct grads: every peer averages the copies it received (the
+        // same canonical segment sum the wire protocol computes).
+        let idxs: Vec<usize> = stats.per_site[0].direct.iter().map(|&(i, _)| i).collect();
+        let per_direct: Vec<Vec<Matrix>> = stats
+            .per_site
+            .iter()
+            .map(|s| s.direct.iter().map(|(_, g)| g.clone()).collect())
+            .collect();
+        let direct =
+            mean_direct(per_direct, &idxs, scale).expect("uniform direct layouts across sites");
         let grads = assemble_grads(&shapes, &cat, &direct, scale, 1.0);
         let p2p1 = cluster.ledger.total_dir(Direction::PeerToPeer);
         StepOutcome {
@@ -105,6 +105,14 @@ pub struct DadP2pProtocol;
 impl<M: DistModel> StepProtocol<M> for DadP2pProtocol {
     fn name(&self) -> &'static str {
         "dad-p2p"
+    }
+
+    fn plan(&self, _metas: &[StepMeta]) -> io::Result<StepPlan> {
+        Err(proto_err(
+            "dad-p2p: the all-to-all mesh has no aggregation tree, so dad-p2p cannot \
+             run on a tree topology (use dad, or a flat star)"
+                .into(),
+        ))
     }
 
     fn site_exchange(
@@ -156,7 +164,7 @@ impl<M: DistModel> StepProtocol<M> for DadP2pProtocol {
         let cat = concat_stats(&entry_refs);
         let scale = sync.scale();
         let idxs: Vec<usize> = stats.direct.iter().map(|&(i, _)| i).collect();
-        let direct = mean_direct(&per_direct, &idxs, scale);
+        let direct = mean_direct(per_direct, &idxs, scale)?;
         Ok(assemble_grads(&model.param_shapes(), &cat, &direct, scale, 1.0))
     }
 
@@ -224,7 +232,7 @@ impl<M: DistModel> StepProtocol<M> for DadP2pProtocol {
         let cat = concat_stats(&entry_refs);
         let scale = sync.scale();
         let idxs: Vec<usize> = metas[0].direct_idx.iter().map(|&i| i as usize).collect();
-        let direct = mean_direct(&per_direct, &idxs, scale);
+        let direct = mean_direct(per_direct, &idxs, scale)?;
         let grads = assemble_grads(&model.param_shapes(), &cat, &direct, scale, 1.0);
         Ok(AggExchange { grads, eff_ranks: vec![] })
     }

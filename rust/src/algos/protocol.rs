@@ -30,6 +30,7 @@
 
 use std::io;
 
+use crate::algos::reduce::{self, Segments};
 use crate::dist::wire::{proto_err, Body, ByteReader, ByteWriter, Frame, SparseMat};
 use crate::dist::{Direction, Ledger, Transport};
 use crate::nn::model::DistModel;
@@ -37,24 +38,61 @@ use crate::nn::stats::LocalStats;
 use crate::obs::trace::{tagged_span, Phase};
 use crate::tensor::Matrix;
 
-/// One endpoint of the star fabric during one remote step: the transport
-/// plus the ledger that prices its payload frames. The methods are the
-/// typed rounds the protocols compose; control-frame helpers never touch
-/// the ledger.
+/// One endpoint of the aggregation fabric during one remote step: the
+/// transport plus the ledger that prices its payload frames. The methods
+/// are the typed rounds the protocols compose; control-frame helpers never
+/// touch the ledger.
+///
+/// On a tree fabric an aggregator's links are not leaf sites but entire
+/// subtrees: each link covers a contiguous leaf range assigned at the
+/// handshake ([`Transport::link_leaves`]), and the coordinator narrows it
+/// to the *live* leaves each step via [`Endpoint::set_link_leaves`] so the
+/// gather primitives can place every uplink partial in the canonical
+/// segment reduction (see [`crate::algos::reduce`]).
 pub struct Endpoint<'a> {
     t: &'a mut dyn Transport,
     ledger: &'a mut Ledger,
+    leaves: Option<Vec<Vec<u32>>>,
 }
 
 impl<'a> Endpoint<'a> {
     /// Wrap a transport + ledger for one step's rounds.
     pub fn new(t: &'a mut dyn Transport, ledger: &'a mut Ledger) -> Self {
-        Endpoint { t, ledger }
+        Endpoint { t, ledger, leaves: None }
     }
 
     /// Number of sites on the fabric.
     pub fn n_sites(&self) -> usize {
         self.t.n_sites()
+    }
+
+    /// Number of direct links on this endpoint (= leaf sites on a star,
+    /// child subtrees on a tree aggregator).
+    pub fn n_links(&self) -> usize {
+        self.t.n_sites()
+    }
+
+    /// Handshake-assigned leaf range of link `link`: (first leaf id, count).
+    pub fn link_static_leaves(&self, link: usize) -> (u32, u32) {
+        self.t.link_leaves(link)
+    }
+
+    /// Narrow each link to its live leaves for this step (ascending ids,
+    /// ascending by link). Set by the aggregator driver from the gathered
+    /// step metadata; without it, every handshake-assigned leaf is live.
+    pub fn set_link_leaves(&mut self, leaves: Vec<Vec<u32>>) {
+        self.leaves = Some(leaves);
+    }
+
+    /// The live leaf ids link `link` aggregates, ascending.
+    pub fn link_leaf_ids(&self, link: usize) -> Vec<u32> {
+        match &self.leaves {
+            Some(v) => v[link].clone(),
+            None => {
+                let (start, n) = self.t.link_leaves(link);
+                (start..start + n).collect()
+            }
+        }
     }
 
     /// Site round: ship a tagged payload frame up to the aggregator.
@@ -140,6 +178,39 @@ impl<'a> Endpoint<'a> {
         let n = self.t.ship_sparse(Direction::AggToSite, tag, mats)?;
         self.ledger.record(tag, Direction::AggToSite, n);
         Ok(())
+    }
+
+    /// Relay round, parent side: receive the next broadcast frame of any
+    /// body kind under `tag`, recording payload bytes — the raw form of
+    /// [`Endpoint::down`] a sub-aggregator forwards verbatim down the tree.
+    pub fn down_frame(&mut self, tag: &str) -> io::Result<Frame> {
+        let _s = tagged_span("round-down-frame", tag, Phase::Stall);
+        let f = self.t.recv_broadcast()?;
+        if f.tag != tag {
+            return Err(proto_err(format!("expected broadcast frame {tag:?}, got {:?}", f.tag)));
+        }
+        if f.kind() == crate::dist::wire::FrameKind::Payload {
+            self.ledger.record(&f.tag, Direction::AggToSite, f.wire_len());
+        }
+        Ok(f)
+    }
+
+    /// Relay round, child side: re-broadcast a frame received via
+    /// [`Endpoint::down_frame`] verbatim (encode∘decode is bit-identical,
+    /// so the leaves see exactly the root's bytes), with the same ledger
+    /// accounting the typed broadcast rounds apply.
+    pub fn bcast_frame(&mut self, f: &Frame) -> io::Result<()> {
+        match &f.body {
+            Body::Mats(ms) => {
+                let refs: Vec<&Matrix> = ms.iter().collect();
+                self.bcast(&f.tag, &refs)
+            }
+            Body::Sparse(ms) => {
+                let refs: Vec<&SparseMat> = ms.iter().collect();
+                self.bcast_sparse(&f.tag, &refs)
+            }
+            Body::Control(b) => self.ctrl_bcast(&f.tag, b),
+        }
     }
 
     /// All-to-all round, site half: ship a payload frame to every one of
@@ -449,6 +520,22 @@ pub trait StepProtocol<M: DistModel>: Send {
         false
     }
 
+    /// The ordered, directional wire rounds of one step's exchange, derived
+    /// from the gathered per-leaf `metas`. This is what a sub-aggregator
+    /// (`dad relay`) executes generically — gather + associative combine
+    /// and re-ship for `Up*` rounds, verbatim forwarding for [`Round::Down`]
+    /// — with no per-algorithm code: the combine rule is implied by the
+    /// round type (dense segment sums, leaf-order stacking, sparse
+    /// index-union, per-leaf control batching). The round order must match
+    /// the site half's frame order exactly; both are asserted equivalent by
+    /// `tests/transport_e2e.rs`.
+    ///
+    /// Algorithms whose exchange is not an associative reduction over a
+    /// star — edAD (weight-coupled delta recomputation) and dad-p2p
+    /// (all-to-all mesh) — return a named error here, which is what rejects
+    /// them on tree topologies up front.
+    fn plan(&self, metas: &[StepMeta]) -> io::Result<StepPlan>;
+
     /// Site half of the exchange. `stats` are this site's local statistics
     /// for the step's batch; returns the synchronized global gradient
     /// (identical on every endpoint, up to the algorithm's compression).
@@ -493,49 +580,248 @@ pub fn site_direct_exchange(
     Ok(stats.direct.iter().map(|&(i, _)| i).zip(mats).collect())
 }
 
-/// Gather one single-matrix payload frame per site under `tag` and sum
-/// them **in site order** — the reduction-order contract every aggregator
-/// mean/sum shares with the simulation (f32 addition is not associative,
-/// so the order is part of the loopback/TCP equivalence).
-pub fn gather_sum(ep: &mut Endpoint<'_>, n_sites: usize, tag: &str) -> io::Result<Matrix> {
-    let mut acc: Option<Matrix> = None;
-    for site in 0..n_sites {
-        let m = ep.gather1(site, tag)?;
-        acc = Some(match acc {
-            None => m,
-            Some(mut a) => {
-                a.axpy(1.0, &m);
-                a
-            }
-        });
-    }
-    acc.ok_or_else(|| proto_err(format!("{tag}: gather over zero sites")))
+/// One directional wire round of a step's exchange — the vocabulary of
+/// [`StepProtocol::plan`]. An `Up*` round means every leaf ships one frame
+/// toward the root and each aggregation level combines what its links
+/// delivered; a [`Round::Down`] round means the root broadcasts one frame
+/// which every relay forwards verbatim (bit-identical at every leaf).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Round {
+    /// Dense uplink combined by the canonical segment sum: each link ships
+    /// `n_segments * k` matrices (a leaf ships `1 * k`); siblings merge by
+    /// elementwise addition in the fixed dyadic bracketing.
+    UpSum {
+        /// Frame tag.
+        tag: &'static str,
+    },
+    /// Single-matrix uplink combined by row-stacking in ascending leaf
+    /// order (exactly associative — a memcpy, not an f32 reduction).
+    UpStack {
+        /// Frame tag.
+        tag: &'static str,
+    },
+    /// Sparse uplink combined by the canonical index-union sum: each link
+    /// ships one sparse frame holding `n_segments` matrices.
+    UpSparse {
+        /// Frame tag.
+        tag: &'static str,
+    },
+    /// Control uplink batched per leaf (ledger-exempt): relays re-batch
+    /// their links' bodies under the originating leaf ids.
+    CtrlUp {
+        /// Frame tag.
+        tag: &'static str,
+    },
+    /// Root broadcast of any frame kind, forwarded verbatim down the tree.
+    Down {
+        /// Frame tag.
+        tag: &'static str,
+    },
 }
 
-/// Mean the per-site raw direct gradients: sum in **site order**, then
-/// scale — the reduction core shared by the star direct-grad round and
-/// dad-p2p's all-to-all (both halves). `idxs[di]` is the param index of
-/// the di-th direct gradient.
+/// The ordered round list one step of a protocol's exchange produces —
+/// what [`StepProtocol::plan`] returns and what `dad relay` executes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StepPlan {
+    /// Rounds in exact wire order (up and down rounds interleave for
+    /// protocols like PowerSGD).
+    pub rounds: Vec<Round>,
+}
+
+/// Gather the dense uplink partials of one [`Round::UpSum`] round into the
+/// canonical segment stack *without* collapsing it — the relay half, which
+/// re-ships the surviving segments to its parent. Each link's frame must
+/// carry `n_segments(link) * k` matrices for a consistent `k`.
+pub fn gather_seg_parts(ep: &mut Endpoint<'_>, tag: &str) -> io::Result<Segments<Vec<Matrix>>> {
+    let mut segs = Segments::new();
+    for link in 0..ep.n_links() {
+        let leaves = ep.link_leaf_ids(link);
+        let expect = reduce::segments_of(&leaves);
+        if expect.is_empty() {
+            return Err(proto_err(format!(
+                "{tag}: link {} has no live leaves",
+                ep.site_label(link)
+            )));
+        }
+        let mats = ep.gather(link, tag)?;
+        if mats.is_empty() || mats.len() % expect.len() != 0 {
+            return Err(proto_err(format!(
+                "{tag}: link {} shipped {} matrices for {} segments",
+                ep.site_label(link),
+                mats.len(),
+                expect.len()
+            )));
+        }
+        let k = mats.len() / expect.len();
+        let mut it = mats.into_iter();
+        for (start, len) in expect {
+            let part: Vec<Matrix> = it.by_ref().take(k).collect();
+            segs.push(start, len, part, &mut reduce::merge_mats)?;
+        }
+    }
+    Ok(segs)
+}
+
+/// Root half of a [`Round::UpSum`] round: gather every link's partials and
+/// collapse the canonical segment stack to the global sum of `k` matrices
+/// (bit-equal to the flat loopback reduction over the same live leaves).
+pub fn gather_seg_sum(ep: &mut Endpoint<'_>, tag: &str, k: usize) -> io::Result<Vec<Matrix>> {
+    let segs = gather_seg_parts(ep, tag)?;
+    for s in segs.segs() {
+        if s.val.len() != k {
+            return Err(proto_err(format!(
+                "{tag}: segment at leaf {} carries {} matrices, expected {k}",
+                s.start,
+                s.val.len()
+            )));
+        }
+    }
+    segs.emit(&mut reduce::merge_mats)?
+        .ok_or_else(|| proto_err(format!("{tag}: gather over zero links")))
+}
+
+/// Gather one single-matrix payload frame per link under `tag` and sum
+/// them in the canonical segment bracketing (f32 addition is not
+/// associative, so the bracketing is part of the loopback/TCP/tree
+/// equivalence).
+pub fn gather_sum(ep: &mut Endpoint<'_>, tag: &str) -> io::Result<Matrix> {
+    one_mat(gather_seg_sum(ep, tag, 1)?)
+}
+
+/// Gather the sparse uplink partials of one [`Round::UpSparse`] round into
+/// the canonical segment stack without collapsing it (the relay half).
+/// Each link's frame must carry exactly `n_segments(link)` sparse matrices.
+pub fn gather_sparse_parts(ep: &mut Endpoint<'_>, tag: &str) -> io::Result<Segments<SparseMat>> {
+    let mut segs = Segments::new();
+    for link in 0..ep.n_links() {
+        let leaves = ep.link_leaf_ids(link);
+        let expect = reduce::segments_of(&leaves);
+        if expect.is_empty() {
+            return Err(proto_err(format!(
+                "{tag}: link {} has no live leaves",
+                ep.site_label(link)
+            )));
+        }
+        let mats = ep.gather_sparse(link, tag)?;
+        if mats.len() != expect.len() {
+            return Err(proto_err(format!(
+                "{tag}: link {} shipped {} sparse matrices for {} segments",
+                ep.site_label(link),
+                mats.len(),
+                expect.len()
+            )));
+        }
+        for ((start, len), m) in expect.into_iter().zip(mats) {
+            segs.push(start, len, m, &mut reduce::sparse_union_add)?;
+        }
+    }
+    Ok(segs)
+}
+
+/// Root half of a [`Round::UpSparse`] round: collapse every link's sparse
+/// partials to the canonical index-union with dyadically bracketed sums.
+pub fn gather_sparse_union(ep: &mut Endpoint<'_>, tag: &str) -> io::Result<SparseMat> {
+    gather_sparse_parts(ep, tag)?
+        .emit(&mut reduce::sparse_union_add)?
+        .ok_or_else(|| proto_err(format!("{tag}: gather over zero links")))
+}
+
+/// Aggregator half of a [`Round::UpStack`] round: gather one matrix per
+/// link and row-stack them in link (= ascending leaf) order. Exactly
+/// associative, so a relay's pre-stacked subtree rows splice in bitwise.
+pub fn gather_stack1(ep: &mut Endpoint<'_>, tag: &str) -> io::Result<Matrix> {
+    let mut parts = Vec::with_capacity(ep.n_links());
+    for link in 0..ep.n_links() {
+        parts.push(ep.gather1(link, tag)?);
+    }
+    match parts.first() {
+        None => Err(proto_err(format!("{tag}: stack over zero links"))),
+        Some(first) => {
+            let cols = first.cols();
+            if parts.iter().any(|m| m.cols() != cols) {
+                return Err(proto_err(format!("{tag}: stacked column mismatch")));
+            }
+            let refs: Vec<&Matrix> = parts.iter().collect();
+            Ok(Matrix::vertcat(&refs))
+        }
+    }
+}
+
+/// Encode per-leaf control bodies as one relay-batched control body:
+/// `u16 count`, then per leaf `u32 leaf_id, u32 len, len bytes`.
+pub fn encode_leaf_ctrl(items: &[(u32, Vec<u8>)]) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.push_u16(items.len() as u16);
+    for (leaf, body) in items {
+        w.push_u32(*leaf);
+        w.push_u32(body.len() as u32);
+        for &b in body {
+            w.push_u8(b);
+        }
+    }
+    w.finish()
+}
+
+/// Decode a relay-batched control body produced by [`encode_leaf_ctrl`].
+pub fn decode_leaf_ctrl(body: &[u8]) -> io::Result<Vec<(u32, Vec<u8>)>> {
+    let mut r = ByteReader::new(body);
+    let n = r.read_u16()? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let leaf = r.read_u32()?;
+        let len = r.read_u32()? as usize;
+        let mut item = vec![0u8; len];
+        for b in &mut item {
+            *b = r.read_u8()?;
+        }
+        out.push((leaf, item));
+    }
+    if r.remaining() != 0 {
+        return Err(proto_err("trailing bytes after leaf-batched control body".into()));
+    }
+    Ok(out)
+}
+
+/// Aggregator half of a [`Round::CtrlUp`] round for one link: receive the
+/// control frame and expand it to per-leaf `(leaf_id, body)` pairs. Links
+/// whose handshake declared a single leaf ship the raw body (exactly the
+/// flat-star wire format); multi-leaf links ship the batched form.
+pub fn ctrl_from_leaves(
+    ep: &mut Endpoint<'_>,
+    link: usize,
+    tag: &str,
+) -> io::Result<Vec<(u32, Vec<u8>)>> {
+    let (start, n) = ep.link_static_leaves(link);
+    let body = ep.ctrl_from(link, tag)?;
+    if n <= 1 {
+        return Ok(vec![(start, body)]);
+    }
+    decode_leaf_ctrl(&body)
+}
+
+/// Mean the per-site raw direct gradients: canonical segment sum over the
+/// sites, then scale — the reduction core shared by the star direct-grad
+/// round and dad-p2p's all-to-all (both halves). `idxs[di]` is the param
+/// index of the di-th direct gradient.
 pub(crate) fn mean_direct(
-    per_site: &[Vec<Matrix>],
+    per_site: Vec<Vec<Matrix>>,
     idxs: &[usize],
     scale: f32,
-) -> Vec<(usize, Matrix)> {
+) -> io::Result<Vec<(usize, Matrix)>> {
+    let leaves: Vec<u32> = (0..per_site.len() as u32).collect();
+    let sums = reduce::reduce_dense(&leaves, per_site)?
+        .ok_or_else(|| proto_err("direct-grad: mean over zero sites".into()))?;
     let mut out = Vec::with_capacity(idxs.len());
-    for (di, &idx) in idxs.iter().enumerate() {
-        let mut sum = per_site[0][di].clone();
-        for s in &per_site[1..] {
-            sum.axpy(1.0, &s[di]);
-        }
+    for (&idx, mut sum) in idxs.iter().zip(sums) {
         sum.scale_inplace(scale);
         out.push((idx, sum));
     }
-    out
+    Ok(out)
 }
 
-/// Aggregator half of the direct-gradient round: gather every site's raw
-/// direct grads, mean them (sum in site order, then scale — the simulated
-/// reduction order), broadcast the mean, and return the pairs.
+/// Aggregator half of the direct-gradient round: gather every link's raw
+/// (or pre-combined) direct grads, collapse the canonical segment sum,
+/// scale to the mean, broadcast it, and return the pairs.
 pub fn agg_direct_exchange(
     ep: &mut Endpoint<'_>,
     metas: &[StepMeta],
@@ -545,18 +831,13 @@ pub fn agg_direct_exchange(
     if idxs.is_empty() {
         return Ok(vec![]);
     }
-    let mut per_site: Vec<Vec<Matrix>> = Vec::with_capacity(metas.len());
-    for site in 0..metas.len() {
-        let mats = ep.gather(site, "direct-grad")?;
-        if mats.len() != idxs.len() {
-            return Err(proto_err(format!("site {site} direct-grad arity mismatch")));
-        }
-        per_site.push(mats);
+    let mut sums = gather_seg_sum(ep, "direct-grad", idxs.len())?;
+    for m in &mut sums {
+        m.scale_inplace(scale);
     }
-    let out = mean_direct(&per_site, &idxs, scale);
-    let refs: Vec<&Matrix> = out.iter().map(|(_, g)| g).collect();
+    let refs: Vec<&Matrix> = sums.iter().collect();
     ep.bcast("direct-grad", &refs)?;
-    Ok(out)
+    Ok(idxs.into_iter().zip(sums).collect())
 }
 
 #[cfg(test)]

@@ -1,0 +1,395 @@
+//! Canonical segment reduction — the associative combine surface behind
+//! tree aggregation.
+//!
+//! f32 addition is not associative, so "sum the per-site contributions"
+//! only means one bit pattern if every reducer — the flat simulator, a
+//! star aggregator, and every relay in a deep tree — brackets the adds
+//! identically. This module fixes the bracketing once: a partial sum over
+//! a set of leaves is its *canonical dyadic segment decomposition*, and
+//! two adjacent segments `(s1, n)` and `(s2, n)` merge iff
+//! `s2 == s1 + n && s1 % (2 * n) == 0` — i.e. they are the two halves of
+//! an aligned power-of-two block. Greedy left-to-right construction with
+//! that rule is confluent: any grouping of the leaves into contiguous
+//! child ranges (a tree of relays) reaches the same segments through the
+//! same pairwise merges, so tree-reduced sums are bit-equal to the flat
+//! reduction. Non-contiguous survivor sets after churn simply leave
+//! unmergeable segments side by side; the final emit folds whatever
+//! remains left to right.
+//!
+//! The payload carried per segment is generic: dense matrix lists
+//! ([`merge_mats`]), sparse index-union matrices ([`sparse_union_add`]),
+//! or `()` when only the segment *structure* is needed (a parent
+//! predicting how many segments a child will ship — [`segments_of`]).
+
+use std::io;
+
+use crate::dist::wire::{proto_err, SparseMat};
+use crate::tensor::Matrix;
+
+/// One contiguous, already-reduced run of leaves `[start, start + len)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Seg<T> {
+    /// First leaf id covered by this partial.
+    pub start: u32,
+    /// Number of consecutive leaves covered.
+    pub len: u32,
+    /// The reduced payload for those leaves.
+    pub val: T,
+}
+
+/// Whether `b` is the right sibling of `a` in the canonical dyadic tree.
+fn siblings<T>(a: &Seg<T>, b: &Seg<T>) -> bool {
+    b.start == a.start + a.len && a.len == b.len && a.start % (2 * a.len) == 0
+}
+
+/// A partial reduction over a leaf set: disjoint segments in ascending
+/// leaf order, each the canonical reduction of its range. Pushing keeps
+/// the stack canonical by greedily merging sibling segments, so the same
+/// leaf set always yields the same segments regardless of how it was
+/// split across children.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Segments<T> {
+    segs: Vec<Seg<T>>,
+}
+
+impl<T> Default for Segments<T> {
+    fn default() -> Self {
+        Segments { segs: Vec::new() }
+    }
+}
+
+impl<T> Segments<T> {
+    /// An empty partial (no leaves contributed yet).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of segments currently held.
+    pub fn len(&self) -> usize {
+        self.segs.len()
+    }
+
+    /// True iff no leaf has contributed.
+    pub fn is_empty(&self) -> bool {
+        self.segs.is_empty()
+    }
+
+    /// The segments, ascending by `start`.
+    pub fn segs(&self) -> &[Seg<T>] {
+        &self.segs
+    }
+
+    /// Push the partial for leaves `[start, start + len)` and re-canonicalize
+    /// by merging sibling segments via `merge(left, right)`. Segments must
+    /// arrive in ascending, non-overlapping leaf order.
+    pub fn push(
+        &mut self,
+        start: u32,
+        len: u32,
+        val: T,
+        merge: &mut impl FnMut(&mut T, T) -> io::Result<()>,
+    ) -> io::Result<()> {
+        if len == 0 {
+            return Err(proto_err("segment reduce: zero-length segment".into()));
+        }
+        if let Some(last) = self.segs.last() {
+            if start < last.start + last.len {
+                return Err(proto_err(format!(
+                    "segment reduce: leaf {start} arrived out of order (last range ends at {})",
+                    last.start + last.len
+                )));
+            }
+        }
+        self.segs.push(Seg { start, len, val });
+        while self.segs.len() >= 2 {
+            let n = self.segs.len();
+            if !siblings(&self.segs[n - 2], &self.segs[n - 1]) {
+                break;
+            }
+            let right = self.segs.pop().expect("len >= 2");
+            let left = self.segs.last_mut().expect("len >= 1");
+            merge(&mut left.val, right.val)?;
+            left.len *= 2;
+        }
+        Ok(())
+    }
+
+    /// Absorb another partial (a child's segments), which must cover leaves
+    /// strictly after every leaf already held.
+    pub fn absorb(
+        &mut self,
+        other: Segments<T>,
+        merge: &mut impl FnMut(&mut T, T) -> io::Result<()>,
+    ) -> io::Result<()> {
+        for s in other.segs {
+            self.push(s.start, s.len, s.val, merge)?;
+        }
+        Ok(())
+    }
+
+    /// Collapse to the final reduction: fold the remaining (unmergeable)
+    /// segments left to right. `None` iff no leaf contributed.
+    pub fn emit(
+        self,
+        merge: &mut impl FnMut(&mut T, T) -> io::Result<()>,
+    ) -> io::Result<Option<T>> {
+        let mut it = self.segs.into_iter();
+        let mut acc = match it.next() {
+            Some(s) => s.val,
+            None => return Ok(None),
+        };
+        for s in it {
+            merge(&mut acc, s.val)?;
+        }
+        Ok(Some(acc))
+    }
+}
+
+/// The canonical segment decomposition (start, len) of a live leaf set,
+/// given in ascending order. A parent uses this to predict how many
+/// segment partials a child covering exactly `leaves` will ship.
+pub fn segments_of(leaves: &[u32]) -> Vec<(u32, u32)> {
+    let mut segs: Segments<()> = Segments::new();
+    let mut noop = |_: &mut (), _: ()| Ok(());
+    for &leaf in leaves {
+        segs.push(leaf, 1, (), &mut noop).expect("ascending leaf ids");
+    }
+    segs.segs.iter().map(|s| (s.start, s.len)).collect()
+}
+
+/// Elementwise `left[i] += right[i]` over parallel matrix lists — the
+/// dense merge used for gradient sums. Shapes must agree pairwise.
+// The `&mut Vec` (not `&mut [Matrix]`) is pinned by the generic merge
+// interface `FnMut(&mut T, T)` with `T = Vec<Matrix>`.
+#[allow(clippy::ptr_arg)]
+pub fn merge_mats(left: &mut Vec<Matrix>, right: Vec<Matrix>) -> io::Result<()> {
+    if left.len() != right.len() {
+        return Err(proto_err(format!(
+            "dense combine: {} matrices vs {}",
+            left.len(),
+            right.len()
+        )));
+    }
+    for (a, b) in left.iter_mut().zip(&right) {
+        if a.shape() != b.shape() {
+            return Err(proto_err(format!(
+                "dense combine: shape {:?} vs {:?}",
+                a.shape(),
+                b.shape()
+            )));
+        }
+        for (x, y) in a.data_mut().iter_mut().zip(b.data()) {
+            *x += y;
+        }
+    }
+    Ok(())
+}
+
+/// Canonical pairwise sparse merge: sorted index union with f32 value
+/// adds at collisions (left + right, in that order). The result is a
+/// valid wire `SparseMat` (strictly increasing indices).
+pub fn sparse_union_add(left: &mut SparseMat, right: SparseMat) -> io::Result<()> {
+    if (left.rows, left.cols) != (right.rows, right.cols) {
+        return Err(proto_err(format!(
+            "sparse combine: shape {}x{} vs {}x{}",
+            left.rows, left.cols, right.rows, right.cols
+        )));
+    }
+    let mut idx = Vec::with_capacity(left.idx.len() + right.idx.len());
+    let mut vals = Vec::with_capacity(left.vals.len() + right.vals.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < left.idx.len() && j < right.idx.len() {
+        match left.idx[i].cmp(&right.idx[j]) {
+            std::cmp::Ordering::Less => {
+                idx.push(left.idx[i]);
+                vals.push(left.vals[i]);
+                i += 1;
+            }
+            std::cmp::Ordering::Greater => {
+                idx.push(right.idx[j]);
+                vals.push(right.vals[j]);
+                j += 1;
+            }
+            std::cmp::Ordering::Equal => {
+                idx.push(left.idx[i]);
+                vals.push(left.vals[i] + right.vals[j]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    idx.extend_from_slice(&left.idx[i..]);
+    vals.extend_from_slice(&left.vals[i..]);
+    idx.extend_from_slice(&right.idx[j..]);
+    vals.extend_from_slice(&right.vals[j..]);
+    left.idx = idx;
+    left.vals = vals;
+    Ok(())
+}
+
+/// Reduce one dense contribution per live leaf to the canonical total.
+/// `leaves[i]` is the leaf id of `parts[i]`; ids must be ascending.
+/// Returns `None` for an empty leaf set.
+pub fn reduce_dense(leaves: &[u32], parts: Vec<Vec<Matrix>>) -> io::Result<Option<Vec<Matrix>>> {
+    debug_assert_eq!(leaves.len(), parts.len());
+    let mut segs = Segments::new();
+    for (&leaf, val) in leaves.iter().zip(parts) {
+        segs.push(leaf, 1, val, &mut merge_mats)?;
+    }
+    segs.emit(&mut merge_mats)
+}
+
+/// Reduce one sparse contribution per live leaf to the canonical
+/// union-with-sums. Returns `None` for an empty leaf set.
+pub fn reduce_sparse(leaves: &[u32], parts: Vec<SparseMat>) -> io::Result<Option<SparseMat>> {
+    debug_assert_eq!(leaves.len(), parts.len());
+    let mut segs = Segments::new();
+    for (&leaf, val) in leaves.iter().zip(parts) {
+        segs.push(leaf, 1, val, &mut sparse_union_add)?;
+    }
+    segs.emit(&mut sparse_union_add)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Rng;
+
+    fn mat(rng: &mut Rng) -> Matrix {
+        Matrix::randn(3, 5, 1.0, rng)
+    }
+
+    /// Flat canonical reduction of per-leaf dense parts.
+    fn flat_dense(leaves: &[u32], parts: &[Vec<Matrix>]) -> Vec<Matrix> {
+        reduce_dense(leaves, parts.to_vec()).unwrap().unwrap()
+    }
+
+    /// Tree reduction: split the (ascending) leaves into contiguous child
+    /// ranges per `cuts`, reduce each child to its segments, absorb the
+    /// children in order, emit.
+    fn tree_dense(leaves: &[u32], parts: &[Vec<Matrix>], cuts: &[usize]) -> Vec<Matrix> {
+        let mut root: Segments<Vec<Matrix>> = Segments::new();
+        let mut lo = 0usize;
+        for &hi in cuts.iter().chain(std::iter::once(&leaves.len())) {
+            let mut child: Segments<Vec<Matrix>> = Segments::new();
+            for k in lo..hi {
+                child.push(leaves[k], 1, parts[k].clone(), &mut merge_mats).unwrap();
+            }
+            root.absorb(child, &mut merge_mats).unwrap();
+            lo = hi;
+        }
+        root.emit(&mut merge_mats).unwrap().unwrap()
+    }
+
+    fn bits(ms: &[Matrix]) -> Vec<u32> {
+        ms.iter().flat_map(|m| m.data().iter().map(|v| v.to_bits())).collect()
+    }
+
+    #[test]
+    fn aligned_power_of_two_ranges_collapse_to_one_segment() {
+        assert_eq!(segments_of(&[4, 5, 6, 7]), vec![(4, 4)]);
+        assert_eq!(segments_of(&[0, 1, 2, 3, 4, 5, 6, 7]), vec![(0, 8)]);
+    }
+
+    #[test]
+    fn unaligned_and_gapped_sets_decompose_deterministically() {
+        // 1,2,3: leaf 1 cannot pair left, 2+3 form an aligned block.
+        assert_eq!(segments_of(&[1, 2, 3]), vec![(1, 1), (2, 2)]);
+        // Survivors {0,1,3}: the dead leaf 2 blocks the (2,2) block.
+        assert_eq!(segments_of(&[0, 1, 3]), vec![(0, 2), (3, 1)]);
+        assert_eq!(segments_of(&[]), Vec::<(u32, u32)>::new());
+        assert_eq!(segments_of(&[9]), vec![(9, 1)]);
+    }
+
+    #[test]
+    fn out_of_order_and_overlapping_pushes_are_rejected() {
+        let mut s: Segments<()> = Segments::new();
+        let mut noop = |_: &mut (), _: ()| Ok(());
+        s.push(3, 1, (), &mut noop).unwrap();
+        assert!(s.push(3, 1, (), &mut noop).is_err());
+        assert!(s.push(1, 1, (), &mut noop).is_err());
+        assert!(s.push(4, 0, (), &mut noop).is_err());
+    }
+
+    #[test]
+    fn tree_bracketings_are_bit_equal_to_flat_including_empty_children() {
+        // Property (hand-rolled; the crate is dependency-free): over random
+        // leaf subsets and random contiguous bracketings — including empty
+        // and singleton child ranges — the tree reduction is bit-identical
+        // to the flat canonical reduction.
+        let mut rng = Rng::new(0xbeef);
+        for case in 0..200u32 {
+            let n = 1 + (rng.next_u64() % 24) as usize;
+            // Random survivor subset of 0..n (never empty).
+            let mut leaves: Vec<u32> =
+                (0..n as u32).filter(|_| rng.next_u64() % 4 != 0).collect();
+            if leaves.is_empty() {
+                leaves.push((rng.next_u64() % n as u64) as u32);
+            }
+            let parts: Vec<Vec<Matrix>> = leaves
+                .iter()
+                .map(|_| vec![mat(&mut rng), Matrix::randn(2, 2, 1.0, &mut rng)])
+                .collect();
+            let flat = flat_dense(&leaves, &parts);
+            // Random cut set (sorted positions inside 0..len), duplicates
+            // allowed: a duplicated cut is an empty child.
+            let mut cuts: Vec<usize> = (0..(rng.next_u64() % 4) as usize)
+                .map(|_| (rng.next_u64() as usize) % (leaves.len() + 1))
+                .collect();
+            cuts.sort_unstable();
+            let tree = tree_dense(&leaves, &parts, &cuts);
+            assert_eq!(bits(&flat), bits(&tree), "case {case}: leaves {leaves:?} cuts {cuts:?}");
+        }
+    }
+
+    #[test]
+    fn sparse_tree_bracketings_match_flat_union() {
+        let mut rng = Rng::new(0xfeed);
+        for case in 0..200u32 {
+            let n = 1 + (rng.next_u64() % 12) as usize;
+            let leaves: Vec<u32> = (0..n as u32).collect();
+            let parts: Vec<SparseMat> = leaves
+                .iter()
+                .map(|_| {
+                    let idx: Vec<u32> = (0..20u32).filter(|_| rng.next_u64() % 3 == 0).collect();
+                    let vals: Vec<f32> = idx.iter().map(|_| rng.normal()).collect();
+                    SparseMat { rows: 4, cols: 5, idx, vals }
+                })
+                .collect();
+            let flat = reduce_sparse(&leaves, parts.clone()).unwrap().unwrap();
+            // Split at a random point into two children, reduce each, absorb.
+            let cut = (rng.next_u64() as usize) % (n + 1);
+            let mut root: Segments<SparseMat> = Segments::new();
+            for range in [0..cut, cut..n] {
+                let mut child: Segments<SparseMat> = Segments::new();
+                for k in range {
+                    child.push(leaves[k], 1, parts[k].clone(), &mut sparse_union_add).unwrap();
+                }
+                root.absorb(child, &mut sparse_union_add).unwrap();
+            }
+            let tree = root.emit(&mut sparse_union_add).unwrap().unwrap();
+            assert_eq!(flat.idx, tree.idx, "case {case}");
+            let fb: Vec<u32> = flat.vals.iter().map(|v| v.to_bits()).collect();
+            let tb: Vec<u32> = tree.vals.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(fb, tb, "case {case}");
+        }
+    }
+
+    #[test]
+    fn sparse_union_add_merges_and_sums_collisions() {
+        let mut a = SparseMat { rows: 2, cols: 3, idx: vec![0, 2, 5], vals: vec![1.0, 2.0, 3.0] };
+        let b = SparseMat { rows: 2, cols: 3, idx: vec![2, 4], vals: vec![10.0, 20.0] };
+        sparse_union_add(&mut a, b).unwrap();
+        assert_eq!(a.idx, vec![0, 2, 4, 5]);
+        assert_eq!(a.vals, vec![1.0, 12.0, 20.0, 3.0]);
+        let bad = SparseMat { rows: 3, cols: 3, idx: vec![], vals: vec![] };
+        assert!(sparse_union_add(&mut a, bad).is_err());
+    }
+
+    #[test]
+    fn dense_merge_rejects_mismatched_shapes() {
+        let mut a = vec![Matrix::zeros(2, 2)];
+        assert!(merge_mats(&mut a, vec![Matrix::zeros(2, 3)]).is_err());
+        assert!(merge_mats(&mut a, vec![]).is_err());
+    }
+}

@@ -16,8 +16,9 @@
 //! | `adacomp`   | \|r + 2u\| >= bin-local max \|r + u\|      | residual r |
 //!
 //! The exchange itself is shared: each site ships one `sparse-grad` frame
-//! per stats entry; the aggregator scatter-adds the per-site contributions
-//! into a dense accumulator **in site order** (the f32 reduction-order
+//! per stats entry; the aggregator folds the per-site contributions with
+//! the **canonical segment reduction** (`algos::reduce` — index union,
+//! collisions summed in dyadic leaf order, the same f32 reduction-order
 //! contract every reduction in this repo obeys) and broadcasts the sparse
 //! union. At full density (`dgc:100`, `vbc:0`, `adacomp:1`) every residual
 //! clears each step and the update equals dense dSGD bit for bit — the
@@ -32,8 +33,8 @@ use crate::algos::common::{
 };
 use crate::algos::compressed::{bytes_now, exchange_bias};
 use crate::algos::protocol::{
-    agg_direct_exchange, gather_sum, site_direct_exchange, AggExchange, Endpoint, StepMeta,
-    StepProtocol, StepSync,
+    agg_direct_exchange, gather_sparse_union, gather_sum, site_direct_exchange, AggExchange,
+    Endpoint, Round, StepMeta, StepPlan, StepProtocol, StepSync,
 };
 use crate::dist::wire::{proto_err, SparseMat};
 use crate::dist::Cluster;
@@ -203,32 +204,6 @@ fn clear_at(m: &mut Matrix, idx: &[u32]) {
     }
 }
 
-/// Merge two strictly-increasing index lists into their sorted union.
-fn merge_union(a: &[u32], b: &[u32]) -> Vec<u32> {
-    let mut out = Vec::with_capacity(a.len() + b.len());
-    let (mut i, mut j) = (0, 0);
-    while i < a.len() && j < b.len() {
-        match a[i].cmp(&b[j]) {
-            std::cmp::Ordering::Less => {
-                out.push(a[i]);
-                i += 1;
-            }
-            std::cmp::Ordering::Greater => {
-                out.push(b[j]);
-                j += 1;
-            }
-            std::cmp::Ordering::Equal => {
-                out.push(a[i]);
-                i += 1;
-                j += 1;
-            }
-        }
-    }
-    out.extend_from_slice(&a[i..]);
-    out.extend_from_slice(&b[j..]);
-    out
-}
-
 /// The simulated sparse-compression algorithm: one [`SparseRule`] plus a
 /// god's-eye `states[site][entry]` residual table (the loopback twin of
 /// the wire protocol's site-local state, like [`crate::algos::PowerSgd`]).
@@ -345,20 +320,22 @@ impl<M: DistModel> DistAlgorithm<M> for SparseAlgo {
         let mut grads: Vec<Matrix> = shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect();
         for ei in 0..n_entries {
             let e0 = &stats.per_site[0].entries[ei];
-            let (r, c) = shapes[e0.w_idx];
-            // Sites compress + ship; the aggregator scatter-adds in site
-            // order (the shared f32 reduction-order contract).
-            let mut acc = Matrix::zeros(r, c);
-            let mut union: Vec<u32> = Vec::new();
+            // Sites compress + ship; the aggregator folds the per-site
+            // frames with the canonical segment reduction (index union,
+            // collisions summed in dyadic leaf order — the same pairing a
+            // tree of relays produces).
+            let mut parts: Vec<SparseMat> = Vec::with_capacity(n_sites);
             for (si, s) in stats.per_site.iter().enumerate() {
                 let sm = compress(&self.rule, &mut self.states[si][ei], &s.entries[ei], scale);
                 cluster.send_to_agg_sparse("sparse-grad", &[&sm]);
-                sm.scatter_add(&mut acc);
-                union = merge_union(&union, &sm.idx);
+                parts.push(sm);
             }
             // Broadcast the sparse union of the per-site transmit sets;
             // every endpoint densifies to the same synchronized update.
-            let hat = SparseMat::from_dense(&acc, &union);
+            let leaves: Vec<u32> = (0..parts.len() as u32).collect();
+            let hat = crate::algos::reduce::reduce_sparse(&leaves, parts)
+                .expect("uniform sparse shapes across sites")
+                .expect("at least one site");
             cluster.broadcast_sparse("sparse-grad", &[&hat]);
             grads[e0.w_idx] = hat.to_dense();
             if let Some(bi) = e0.b_idx {
@@ -381,9 +358,10 @@ impl<M: DistModel> DistAlgorithm<M> for SparseAlgo {
 }
 
 /// Wire protocol shared by the sparse family: per entry, each site ships
-/// one `sparse-grad` frame up; the aggregator scatter-adds the per-site
-/// contributions in site order and broadcasts the sparse union; everyone
-/// densifies. The error-feedback residual (and DGC's momentum) lives in
+/// one `sparse-grad` frame up; the aggregator folds the per-leaf
+/// contributions with the canonical segment reduction and broadcasts the
+/// sparse union; everyone densifies. The error-feedback residual (and
+/// DGC's momentum) lives in
 /// this value — **site-local**, one compressor per process, surviving
 /// site retirements because the aggregator half holds no per-site state
 /// and the gradient scale comes from the sync frame.
@@ -410,6 +388,24 @@ impl<M: DistModel> StepProtocol<M> for SparseProtocol {
         // residual state is per-site and needs no cross-site bookkeeping,
         // so survivors keep compressing after a retirement.
         true
+    }
+
+    fn plan(&self, metas: &[StepMeta]) -> io::Result<StepPlan> {
+        let meta = metas.first().ok_or_else(|| proto_err("plan needs site metas".into()))?;
+        let mut rounds = Vec::new();
+        for &(_, b_idx) in &meta.entries {
+            rounds.push(Round::UpSparse { tag: "sparse-grad" });
+            rounds.push(Round::Down { tag: "sparse-grad" });
+            if b_idx != u32::MAX {
+                rounds.push(Round::UpSum { tag: "bias-grad" });
+                rounds.push(Round::Down { tag: "bias-grad" });
+            }
+        }
+        if !meta.direct_idx.is_empty() {
+            rounds.push(Round::UpSum { tag: "direct-grad" });
+            rounds.push(Round::Down { tag: "direct-grad" });
+        }
+        Ok(StepPlan { rounds })
     }
 
     fn site_exchange(
@@ -474,21 +470,17 @@ impl<M: DistModel> StepProtocol<M> for SparseProtocol {
         let mut grads: Vec<Matrix> = shapes.iter().map(|&(r, c)| Matrix::zeros(r, c)).collect();
         for &(w_idx, b_idx) in &metas[0].entries {
             let (r, c) = shapes[w_idx as usize];
-            let mut acc = Matrix::zeros(r, c);
-            let mut union: Vec<u32> = Vec::new();
-            for site in 0..metas.len() {
-                let sm = one_sparse(ep.gather_sparse(site, "sparse-grad")?)?;
-                if (sm.rows, sm.cols) != (r, c) {
-                    return Err(proto_err(format!("site {site} sparse-grad shape mismatch")));
-                }
-                sm.scatter_add(&mut acc);
-                union = merge_union(&union, &sm.idx);
+            let hat = gather_sparse_union(ep, "sparse-grad")?;
+            if (hat.rows, hat.cols) != (r, c) {
+                return Err(proto_err(format!(
+                    "sparse-grad shape mismatch for param {w_idx}: got {}x{}, want {r}x{c}",
+                    hat.rows, hat.cols
+                )));
             }
-            let hat = SparseMat::from_dense(&acc, &union);
             ep.bcast_sparse("sparse-grad", &[&hat])?;
             grads[w_idx as usize] = hat.to_dense();
             if b_idx != u32::MAX {
-                let bsum = gather_sum(ep, metas.len(), "bias-grad")?;
+                let bsum = gather_sum(ep, "bias-grad")?;
                 ep.bcast("bias-grad", &[&bsum])?;
                 grads[b_idx as usize] = bsum;
             }
@@ -694,14 +686,6 @@ mod tests {
             assert!(!proto.oracle());
             assert_eq!(proto.name(), rule.algo_name());
         }
-    }
-
-    #[test]
-    fn merge_union_merges_sorted_sets() {
-        assert_eq!(merge_union(&[], &[]), Vec::<u32>::new());
-        assert_eq!(merge_union(&[1, 3, 5], &[]), vec![1, 3, 5]);
-        assert_eq!(merge_union(&[1, 3, 5], &[0, 3, 9]), vec![0, 1, 3, 5, 9]);
-        assert_eq!(merge_union(&[2], &[2]), vec![2]);
     }
 
     #[test]

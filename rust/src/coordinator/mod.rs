@@ -8,9 +8,10 @@ pub mod trainer;
 
 pub use experiments::Scale;
 pub use remote::{
-    join_training, join_training_resumable, remote_agg_step, remote_site_step, serve_training,
-    serve_training_checkpointed, validate_remote, FaultPolicy, RemoteConfig, RemoteStep,
-    ResumeState,
+    join_training, join_training_resumable, relay_training, remote_agg_step, remote_site_step,
+    reshard_indices, serve_training, serve_training_checkpointed, validate_remote,
+    validate_remote_topology, EpochSync, FaultPolicy, RemoteConfig, RemoteStep, ResumeMode,
+    ResumeState, Topology,
 };
 pub use trainer::{
     build_task, default_lm_lr, epoch_plan, evaluate, fold_mean_auc, local_update,

@@ -57,11 +57,45 @@
 //! arming a per-frame receive deadline on the aggregator links
 //! (`TcpAgg::set_recv_timeout`) — an armed deadline turns a slow site into
 //! the same link-failure path as a dead one.
+//!
+//! # Tree topologies
+//!
+//! The aggregator half is written against *links*, not sites: every link
+//! covers a contiguous leaf range declared at the transport handshake
+//! ([`Transport::link_leaves`]), and the gather primitives combine each
+//! link's pre-reduced partials in the canonical segment bracketing
+//! (`crate::algos::reduce`), so a multi-level tree of [`relay_training`]
+//! sub-aggregators produces bit-identical gradients, losses and
+//! per-(tag, direction) ledger bytes to the flat star and the loopback
+//! simulation. A relay needs no per-algorithm code: it executes the
+//! [`StepProtocol::plan`] rounds generically — gather + associative
+//! combine + re-ship for up rounds, verbatim forwarding for down rounds.
+//! Algorithms whose exchange is not an associative reduction (edAD's
+//! weight-coupled recomputation, dad-p2p's mesh) are rejected by name up
+//! front ([`validate_remote_topology`]).
+//!
+//! # Elastic membership
+//!
+//! Leaving is the degradation path above: a lost subtree is retired in
+//! place and the survivors keep their shards, preserving every degraded
+//! trajectory. Joining is root-gated and happens only at epoch
+//! boundaries: the root polls for queued dials
+//! ([`Transport::admit_joiners`]), hands each admitted leaf its config
+//! (with [`ResumeMode::Elastic`]), and broadcasts an `epoch-sync` frame —
+//! the membership roll-call every process consumes at every non-final
+//! boundary. When a join happened, the roll-call announces a re-shard and
+//! is followed by a full [`ResumeState`] broadcast; every process then
+//! recomputes the same round-robin shard assignment ([`reshard_indices`])
+//! so the next epoch's plan is drawn identically everywhere. All of this
+//! traffic is ledger-exempt control framing.
 
 use std::io;
 use std::time::Instant;
 
-use crate::algos::protocol::{expect_ctrl, AggExchange, Endpoint, StepMeta, StepProtocol, StepSync};
+use crate::algos::protocol::{
+    ctrl_from_leaves, encode_leaf_ctrl, expect_ctrl, gather_seg_parts, gather_sparse_parts,
+    gather_stack1, AggExchange, Endpoint, Round, StepMeta, StepProtocol, StepSync,
+};
 use crate::algos::{concat_batches, AlgoSpec};
 use crate::checkpoint::{push_mats, read_mats, Checkpoint, CheckpointPlan};
 use crate::coordinator::trainer::{
@@ -69,7 +103,7 @@ use crate::coordinator::trainer::{
     TrainLog, TrainSpec,
 };
 use crate::data::{BatchIter, Partition};
-use crate::dist::wire::{proto_err, ByteReader, ByteWriter};
+use crate::dist::wire::{proto_err, ByteReader, ByteWriter, SparseMat};
 use crate::dist::{is_link_failure, Direction, Ledger, Transport};
 use crate::nn::model::{Batch, DistModel};
 use crate::nn::stats::LocalStats;
@@ -99,6 +133,10 @@ pub struct RemoteStep {
     /// Labels of sites retired at this step's prologue (aggregator side,
     /// degrade mode only; empty otherwise).
     pub lost: Vec<String>,
+    /// Global leaf ids that answered this step's prologue, in link order
+    /// (aggregator side only; empty on sites). This is the live
+    /// membership the `epoch-sync` roll-call reports.
+    pub leaves_live: Vec<u32>,
 }
 
 /// What the aggregator does when a site stops answering at a step
@@ -122,6 +160,46 @@ impl FaultPolicy {
     }
 }
 
+/// How a joining process bootstraps its training state — the `resume`
+/// byte of the config frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ResumeMode {
+    /// Fresh run: every process starts from the seeded initialization.
+    #[default]
+    Fresh,
+    /// Checkpoint resume: immediately after the config the aggregator
+    /// broadcasts one `resume` control frame ([`ResumeState`]) every site
+    /// must apply before its first step.
+    Checkpoint,
+    /// Elastic join: this config was unicast to a site admitted at an
+    /// epoch boundary. The site bootstraps from the `epoch-sync` and
+    /// `resume` broadcasts that follow and takes its rank and shard from
+    /// the resharded membership (see the module docs).
+    Elastic,
+}
+
+impl ResumeMode {
+    fn wire_byte(self) -> u8 {
+        match self {
+            ResumeMode::Fresh => 0,
+            ResumeMode::Checkpoint => 1,
+            ResumeMode::Elastic => 2,
+        }
+    }
+
+    fn from_wire(b: u8) -> io::Result<ResumeMode> {
+        match b {
+            0 => Ok(ResumeMode::Fresh),
+            1 => Ok(ResumeMode::Checkpoint),
+            2 => Ok(ResumeMode::Elastic),
+            _ => Err(proto_err(format!(
+                "unknown resume mode byte {b} in config frame (version skew between serve \
+                 and join?)"
+            ))),
+        }
+    }
+}
+
 /// Everything a joining site needs to reconstruct the run: training spec
 /// (algorithm, schedule, seed, ...), dataset name, and scale preset.
 /// Broadcast once, right after the transport handshake, as the `config`
@@ -142,10 +220,9 @@ pub struct RemoteConfig {
     /// Partition override every process applies to its shards (from the
     /// shared seed, so the lockstep batch schedule is preserved).
     pub partition: Partition,
-    /// True when the aggregator resumes from a checkpoint: immediately
-    /// after this config frame it broadcasts one `resume` control frame
-    /// ([`ResumeState`]) every site must apply before its first step.
-    pub resume: bool,
+    /// How the receiving process bootstraps its training state: fresh,
+    /// from a checkpoint broadcast, or as an elastically admitted leaf.
+    pub resume: ResumeMode,
 }
 
 impl RemoteConfig {
@@ -162,7 +239,7 @@ impl RemoteConfig {
         w.push_u32(self.spec.schedule.sync_every() as u32);
         w.push_u32(self.recv_timeout_ms);
         w.push_str(&self.partition.name());
-        w.push_u8(self.resume as u8);
+        w.push_u8(self.resume.wire_byte());
         w.finish()
     }
 
@@ -179,7 +256,7 @@ impl RemoteConfig {
         let sync_every = r.read_u32()? as usize;
         let recv_timeout_ms = r.read_u32()?;
         let partition_s = r.read_str()?;
-        let resume = r.read_u8()? != 0;
+        let resume = ResumeMode::from_wire(r.read_u8()?)?;
         if r.remaining() != 0 {
             return Err(proto_err(format!(
                 "config frame has {} trailing bytes (version skew between serve and join?)",
@@ -217,6 +294,18 @@ impl RemoteConfig {
     /// Site side: block for the aggregator's config broadcast.
     pub fn recv(t: &mut dyn Transport) -> io::Result<RemoteConfig> {
         let body = expect_ctrl(t.recv_broadcast()?, "config")?;
+        RemoteConfig::decode(&body)
+    }
+
+    /// Relay side: block for the parent's config broadcast, forward it to
+    /// the children verbatim (they must see exactly the root's bytes),
+    /// then decode it for this process.
+    pub fn recv_forward(
+        parent: &mut dyn Transport,
+        children: &mut dyn Transport,
+    ) -> io::Result<RemoteConfig> {
+        let body = expect_ctrl(parent.recv_broadcast()?, "config")?;
+        children.ship_control(Direction::AggToSite, "config", &body)?;
         RemoteConfig::decode(&body)
     }
 }
@@ -309,6 +398,74 @@ impl ResumeState {
     }
 }
 
+/// The `epoch-sync` control frame the root broadcasts at every non-final
+/// epoch boundary: the membership roll-call that makes elastic joins
+/// deterministic. Every process (site, relay, root) consumes it at the
+/// same boundary; when `resharded` is set, a [`ResumeState`] broadcast
+/// follows immediately and everyone recomputes the round-robin shard
+/// assignment ([`reshard_indices`]) over `live` before drawing the next
+/// epoch's plan.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct EpochSync {
+    /// The epoch about to start.
+    pub next_epoch: u32,
+    /// Global leaf ids of every live site, in link order (ascending).
+    pub live: Vec<u32>,
+    /// True when this boundary admitted joiners: a `resume` broadcast
+    /// follows and the shard assignment is recomputed over `live`.
+    pub resharded: bool,
+}
+
+impl EpochSync {
+    /// Serialize for the `epoch-sync` control frame.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.push_u32(self.next_epoch);
+        w.push_u32(self.live.len() as u32);
+        for &leaf in &self.live {
+            w.push_u32(leaf);
+        }
+        w.push_u8(self.resharded as u8);
+        w.finish()
+    }
+
+    /// Parse an `epoch-sync` control frame body.
+    pub fn decode(body: &[u8]) -> io::Result<EpochSync> {
+        let mut r = ByteReader::new(body);
+        let next_epoch = r.read_u32()?;
+        let n = r.read_u32()? as usize;
+        let mut live = Vec::with_capacity(n);
+        for _ in 0..n {
+            live.push(r.read_u32()?);
+        }
+        let resharded = r.read_u8()? != 0;
+        if r.remaining() != 0 {
+            return Err(proto_err(format!(
+                "epoch-sync frame has {} trailing bytes (version skew between serve and join?)",
+                r.remaining()
+            )));
+        }
+        Ok(EpochSync { next_epoch, live, resharded })
+    }
+}
+
+/// Deterministic re-sharding over a changed membership: flatten the
+/// original per-site shards in site order and deal the sample indices
+/// round-robin across the `n_live` current ranks. Every process computes
+/// this independently from the config-derived shards and the broadcast
+/// live count, so no index traffic crosses the wire (a relay only ever
+/// reads the resulting lengths).
+pub fn reshard_indices(shards: &[Vec<usize>], n_live: usize) -> Vec<Vec<usize>> {
+    if n_live == 0 {
+        return vec![];
+    }
+    let mut out: Vec<Vec<usize>> = vec![Vec::new(); n_live];
+    for (i, idx) in shards.iter().flatten().enumerate() {
+        out[i % n_live].push(*idx);
+    }
+    out
+}
+
 /// This endpoint's cumulative (up, down) ledger view; peer-to-peer traffic
 /// counts as "up" (the exchange has no shared down-link), matching the
 /// simulated trainer's `StepOutcome` reporting for dad-p2p.
@@ -356,6 +513,7 @@ pub fn remote_site_step<M: DistModel>(
         bytes_up: up1 - up0,
         bytes_down: down1 - down0,
         lost: vec![],
+        leaves_live: vec![],
     })
 }
 
@@ -427,17 +585,25 @@ pub fn remote_agg_step<M: DistModel>(
     policy: FaultPolicy,
 ) -> io::Result<RemoteStep> {
     let (up0, down0) = dirs(ledger);
-    let (out, loss, lost) = {
+    let (out, loss, lost, leaves_live) = {
         let mut ep = Endpoint::new(&mut *t, &mut *ledger);
-        let n_sites = ep.n_sites();
-        let mut metas: Vec<StepMeta> = Vec::with_capacity(n_sites);
+        let n_links = ep.n_links();
+        let mut metas: Vec<StepMeta> = Vec::with_capacity(n_links);
+        let mut leaves_live: Vec<u32> = Vec::with_capacity(n_links);
+        let mut link_leaves: Vec<Vec<u32>> = Vec::with_capacity(n_links);
         let mut gone: Vec<(usize, String, io::Error)> = Vec::new();
-        for site in 0..n_sites {
-            match ep.ctrl_from(site, "step-meta") {
-                Ok(body) => metas.push(StepMeta::decode(&body)?),
+        for link in 0..n_links {
+            match ctrl_from_leaves(&mut ep, link, "step-meta") {
+                Ok(pairs) => {
+                    link_leaves.push(pairs.iter().map(|p| p.0).collect());
+                    for (leaf, body) in pairs {
+                        metas.push(StepMeta::decode(&body)?);
+                        leaves_live.push(leaf);
+                    }
+                }
                 Err(e) if is_link_failure(&e) => {
-                    let label = ep.site_label(site);
-                    gone.push((site, label, e));
+                    let label = ep.site_label(link);
+                    gone.push((link, label, e));
                 }
                 Err(e) => return Err(e),
             }
@@ -450,6 +616,11 @@ pub fn remote_agg_step<M: DistModel>(
             metas.len(),
             gone,
         )?;
+        // The gathers below combine per-link partials over the leaf counts
+        // that *actually answered this step* — a relay whose subtree
+        // degraded mid-run ships fewer per-leaf items than its handshake
+        // declared, and the batched metas above are the ground truth.
+        ep.set_link_leaves(link_leaves);
         let sync = StepSync::from_metas(&metas, proto.oracle())?;
         // Past this point the step is committed: every live site has been
         // promised a sync frame, so a link failure leaves survivors blocked
@@ -481,7 +652,7 @@ pub fn remote_agg_step<M: DistModel>(
         } else {
             proto.agg_exchange(&mut ep, model, &metas, &sync).map_err(mid_exchange)?
         };
-        (out, sync.loss, lost)
+        (out, sync.loss, lost, leaves_live)
     };
     let (up1, down1) = dirs(ledger);
     Ok(RemoteStep {
@@ -491,6 +662,7 @@ pub fn remote_agg_step<M: DistModel>(
         bytes_up: up1 - up0,
         bytes_down: down1 - down0,
         lost,
+        leaves_live,
     })
 }
 
@@ -514,6 +686,90 @@ pub fn validate_remote(spec: &TrainSpec) -> io::Result<()> {
             "edad over the wire requires --sync-every 1: its delta recomputation depends on \
              model weights, which drift per site during periodic local phases (use `dad train` \
              for the simulated periodic edAD ablation)",
+        ));
+    }
+    Ok(())
+}
+
+/// Shape of the aggregation fabric a `dad serve` root expects: the
+/// classic flat star (every join is a direct leaf) or a two-plus-level
+/// tree where the root's links are `dad relay` subtrees.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Topology {
+    /// Every link is a single-leaf site (the default).
+    Flat,
+    /// The root accepts exactly `root_links` children (relays or direct
+    /// leaves) whose declared leaf counts must sum to the spec's site
+    /// count.
+    Tree {
+        /// Number of links the root accepts.
+        root_links: usize,
+    },
+}
+
+impl Topology {
+    /// Parse an operator-facing topology spec: `flat` or `tree:<R>` with
+    /// `R` the root's fan-out.
+    pub fn parse(s: &str) -> io::Result<Topology> {
+        if s == "flat" {
+            return Ok(Topology::Flat);
+        }
+        if let Some(r) = s.strip_prefix("tree:") {
+            let root_links: usize = r.parse().map_err(|_| {
+                io::Error::new(
+                    io::ErrorKind::InvalidInput,
+                    format!("bad tree fan-out {r:?} in topology spec (want tree:<root-links>)"),
+                )
+            })?;
+            return Ok(Topology::Tree { root_links });
+        }
+        Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("unknown topology {s:?} (flat | tree:<root-links>)"),
+        ))
+    }
+
+    /// Operator-facing name, the inverse of [`Topology::parse`].
+    pub fn name(&self) -> String {
+        match self {
+            Topology::Flat => "flat".into(),
+            Topology::Tree { root_links } => format!("tree:{root_links}"),
+        }
+    }
+}
+
+/// Fail-fast topology validation, called before the root binds: a tree
+/// needs a sane fan-out and an algorithm whose exchange is an associative
+/// reduction. edAD and dad-p2p are rejected by name with the same error
+/// their [`StepProtocol::plan`] would raise at the first relay step, so
+/// the operator sees it on `dad serve`'s terminal instead of stranding a
+/// whole fabric of joins.
+pub fn validate_remote_topology(spec: &TrainSpec, topo: &Topology) -> io::Result<()> {
+    let root_links = match *topo {
+        Topology::Flat => return Ok(()),
+        Topology::Tree { root_links } => root_links,
+    };
+    if root_links == 0 || root_links > spec.n_sites {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!(
+                "tree topology wants {root_links} root links for {} sites (need 1..={})",
+                spec.n_sites, spec.n_sites
+            ),
+        ));
+    }
+    if matches!(spec.algo, AlgoSpec::Edad) {
+        return Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            "edad: weight-coupled delta recomputation is not an associative reduction, \
+             so edad cannot run on a tree topology (use dad, or a flat star)",
+        ));
+    }
+    if matches!(spec.algo, AlgoSpec::DadP2p) {
+        return Err(io::Error::new(
+            io::ErrorKind::Unsupported,
+            "dad-p2p: the all-to-all mesh has no aggregation tree, so dad-p2p cannot \
+             run on a tree topology (use dad, or a flat star)",
         ));
     }
     Ok(())
@@ -617,6 +873,7 @@ pub fn serve_training<M: DistModel, D: DataSource>(
         policy,
         &CheckpointPlan::default(),
         None,
+        None,
     )
 }
 
@@ -658,6 +915,13 @@ fn validate_remote_checkpoint(spec: &TrainSpec) -> io::Result<()> {
 /// after the config so every site restores the same cursors before its
 /// first step; `tests/remote_resume.rs` asserts the continuation matches
 /// the uninterrupted TCP run bit-for-bit.
+///
+/// `admit` opens the fabric to elastic joiners: when it carries the run's
+/// config, every non-final epoch boundary polls the transport for queued
+/// dials, hands each admitted leaf the config with
+/// [`ResumeMode::Elastic`], and re-shards (module docs). `None` keeps the
+/// fabric closed, which is what the equivalence tests and the scenario
+/// runner use.
 #[allow(clippy::too_many_arguments)]
 pub fn serve_training_checkpointed<M: DistModel, D: DataSource>(
     t: &mut dyn Transport,
@@ -670,6 +934,7 @@ pub fn serve_training_checkpointed<M: DistModel, D: DataSource>(
     policy: FaultPolicy,
     ckpt: &CheckpointPlan,
     resume: Option<Checkpoint>,
+    admit: Option<&RemoteConfig>,
 ) -> io::Result<TrainLog> {
     validate_remote(spec)?;
     validate_model_algo(spec, &model)?;
@@ -685,7 +950,14 @@ pub fn serve_training_checkpointed<M: DistModel, D: DataSource>(
     let mut ws = Workspace::new();
     let entry_names = model.entry_names();
     let n_entries = model.local_stats_entry_count();
-    let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+    let mut cur_shards: Vec<Vec<usize>> = shards.to_vec();
+    let mut sizes: Vec<usize> = cur_shards.iter().map(|s| s.len()).collect();
+    let mut live: Vec<u32> = (0..t.n_sites())
+        .flat_map(|l| {
+            let (start, n) = t.link_leaves(l);
+            start..start + n
+        })
+        .collect();
 
     let mut start_epoch = 0usize;
     let mut meta_dataset = ckpt.dataset.clone();
@@ -727,6 +999,7 @@ pub fn serve_training_checkpointed<M: DistModel, D: DataSource>(
 
     let mut epochs = Vec::with_capacity(spec.epochs.saturating_sub(start_epoch));
     let mut global_step = 0u64;
+    metrics::TREE_LEVEL.set(0);
     for epoch in start_epoch..spec.epochs {
         let mut plan = epoch_plan(&sizes, spec.batch_per_site, &mut rng);
         let n_steps = plan.iter().map(|i| i.n_batches()).min().unwrap_or(0);
@@ -744,7 +1017,7 @@ pub fn serve_training_checkpointed<M: DistModel, D: DataSource>(
             // others cannot desync anything, and site 0's draw must happen
             // every step so periodic local phases see the step-t batch.
             let (union_stats, local0) = if oracle {
-                let union = union_batch(data, shards, &mut plan)?;
+                let union = union_batch(data, &cur_shards, &mut plan)?;
                 let stats = {
                     let _s = trace::phase_span("local-stats", Phase::Compute);
                     model.local_stats_ws(&union, &mut ws)
@@ -762,10 +1035,11 @@ pub fn serve_training_checkpointed<M: DistModel, D: DataSource>(
                     union_stats.as_ref(),
                     policy,
                 )?;
+                live = out.leaves_live.clone();
                 for label in &out.lost {
                     eprintln!(
                         "[degrade] lost site {label}; continuing with {} site(s)",
-                        t.n_sites()
+                        live.len()
                     );
                 }
                 loss_sum += out.loss as f64;
@@ -789,23 +1063,25 @@ pub fn serve_training_checkpointed<M: DistModel, D: DataSource>(
                 let local0 = local0.ok_or_else(|| {
                     proto_err("internal invariant broken: non-oracle step must draw site 0".into())
                 })?;
-                let batch = shard_batch(data, &shards[0], &local0);
+                let batch = shard_batch(data, &cur_shards[0], &local0);
                 local_update(&mut model, &batch, &shapes, spec.lr, &mut ws);
-                let (mean_loss, retired) = {
+                let (mean_loss, retired, leaves_now) = {
                     let mut ep = Endpoint::new(&mut *t, &mut *ledger);
-                    let n_live = ep.n_sites();
+                    let n_links = ep.n_links();
                     let mut loss = 0.0f32;
-                    let mut gathered = 0usize;
+                    let mut leaves_now: Vec<u32> = Vec::new();
                     let mut gone: Vec<(usize, String, io::Error)> = Vec::new();
-                    for site in 0..n_live {
-                        match ep.ctrl_from(site, "local-loss") {
-                            Ok(body) => {
-                                loss += ByteReader::new(&body).read_f32()?;
-                                gathered += 1;
+                    for link in 0..n_links {
+                        match ctrl_from_leaves(&mut ep, link, "local-loss") {
+                            Ok(pairs) => {
+                                for (leaf, body) in pairs {
+                                    loss += ByteReader::new(&body).read_f32()?;
+                                    leaves_now.push(leaf);
+                                }
                             }
                             Err(e) if is_link_failure(&e) => {
-                                let label = ep.site_label(site);
-                                gone.push((site, label, e));
+                                let label = ep.site_label(link);
+                                gone.push((link, label, e));
                             }
                             Err(e) => return Err(e),
                         }
@@ -815,15 +1091,16 @@ pub fn serve_training_checkpointed<M: DistModel, D: DataSource>(
                         proto.name(),
                         proto.supports_degrade(),
                         policy,
-                        gathered,
+                        leaves_now.len(),
                         gone,
                     )?;
-                    (loss / gathered.max(1) as f32, retired)
+                    (loss / leaves_now.len().max(1) as f32, retired, leaves_now)
                 };
+                live = leaves_now;
                 for label in &retired {
                     eprintln!(
                         "[degrade] lost site {label} in a local phase; continuing with {} site(s)",
-                        t.n_sites()
+                        live.len()
                     );
                 }
                 loss_sum += mean_loss as f64;
@@ -831,7 +1108,8 @@ pub fn serve_training_checkpointed<M: DistModel, D: DataSource>(
             timing.accumulate(&trace::take_step_timing());
             global_step += 1;
             metrics::STEP.set(global_step);
-            metrics::SITES_LIVE.set(t.n_sites() as u64);
+            metrics::SITES_LIVE.set(live.len() as u64);
+            metrics::CHILDREN_LIVE.set(t.n_sites() as u64);
             let (up_now, down_now) = dirs(ledger);
             metrics::record_bytes(up_now, down_now);
             metrics::STEP_LATENCY.observe(step_t0.elapsed().as_secs_f64());
@@ -850,7 +1128,7 @@ pub fn serve_training_checkpointed<M: DistModel, D: DataSource>(
             test_ppl: eval.ppl,
             bytes_up: up1 - up0,
             bytes_down: down1 - down0,
-            sites_live: t.n_sites(),
+            sites_live: live.len(),
             timing,
             mean_eff_rank,
         });
@@ -874,6 +1152,73 @@ pub fn serve_training_checkpointed<M: DistModel, D: DataSource>(
             );
             ck.save(std::path::Path::new(path))?;
         }
+        // Elastic membership: admission plus the epoch-sync roll-call.
+        // Broadcast at every non-final boundary so the whole fabric agrees
+        // on the live set (and, after a join, the resharded assignment)
+        // before anyone draws the next epoch's plan.
+        if epoch + 1 < spec.epochs {
+            let mut resharded = false;
+            if let Some(base) = admit {
+                let admitted = t.admit_joiners()?;
+                if !admitted.is_empty() {
+                    let refusal = validate_remote_checkpoint(spec).err().or_else(|| {
+                        (!proto.supports_degrade()).then(|| {
+                            io::Error::new(
+                                io::ErrorKind::Unsupported,
+                                format!(
+                                    "{} cannot change membership mid-run (its exchange is \
+                                     shaped by the full site count)",
+                                    proto.name()
+                                ),
+                            )
+                        })
+                    });
+                    if let Some(e) = refusal {
+                        eprintln!("[join] refusing {} joiner(s): {e}", admitted.len());
+                        // Reverse order: retiring a link shifts every later
+                        // live index down by one.
+                        for &link in admitted.iter().rev() {
+                            t.retire_site(link)?;
+                        }
+                    } else {
+                        let jcfg = RemoteConfig { resume: ResumeMode::Elastic, ..base.clone() };
+                        let body = jcfg.encode();
+                        for &link in &admitted {
+                            let leaf = t.link_leaves(link).0;
+                            t.ship_control_to(link, "config", &body)?;
+                            live.push(leaf);
+                            resharded = true;
+                            eprintln!(
+                                "[join] admitted site {leaf}; resharding over {} site(s)",
+                                live.len()
+                            );
+                        }
+                    }
+                }
+            }
+            let es =
+                EpochSync { next_epoch: (epoch + 1) as u32, live: live.clone(), resharded };
+            t.ship_control(Direction::AggToSite, "epoch-sync", &es.encode())?;
+            if resharded {
+                cur_shards = reshard_indices(shards, live.len());
+                sizes = cur_shards.iter().map(|s| s.len()).collect();
+                // The joiners need the full cursor state; the incumbents
+                // already hold it, but re-applying an exact snapshot of
+                // their own state is a no-op, so one broadcast serves all.
+                let ck = snapshot_checkpoint(
+                    spec,
+                    &meta_dataset,
+                    &meta_scale,
+                    epoch + 1,
+                    &params,
+                    &opt,
+                    &rng,
+                    vec![],
+                );
+                let rs = ResumeState::from_checkpoint(&ck);
+                t.ship_control(Direction::AggToSite, "resume", &rs.encode())?;
+            }
+        }
     }
     Ok(TrainLog { algo: spec.algo.name(), epochs, sim_time_s: 0.0, entry_names })
 }
@@ -896,13 +1241,42 @@ pub fn join_training<M: DistModel, D: DataSource>(
     shards: &[Vec<usize>],
     site_id: usize,
 ) -> io::Result<TrainLog> {
-    join_training_resumable(t, ledger, spec, model, data, shards, site_id, false)
+    join_training_resumable(t, ledger, spec, model, data, shards, site_id, ResumeMode::Fresh)
 }
 
-/// [`join_training`] for a run whose config frame announced a resume
-/// (`RemoteConfig::resume`): before the first step the site blocks for the
-/// aggregator's `resume` broadcast and restores the shared cursors from
-/// it, entering epoch `next_epoch` in lockstep with everyone else.
+/// Sanity-check a [`ResumeState`] against this process's model shapes
+/// before applying it.
+fn check_resume_fits(shapes: &[(usize, usize)], rs: &ResumeState) -> io::Result<()> {
+    let fits = |mats: &[Matrix]| {
+        mats.len() == shapes.len()
+            && mats.iter().zip(shapes).all(|(m, &(r, c))| m.rows() == r && m.cols() == c)
+    };
+    if !fits(&rs.params) || !fits(&rs.adam_m) || !fits(&rs.adam_v) {
+        return Err(proto_err(format!(
+            "resume frame does not fit this model: expected {} parameter/moment matrices \
+             shaped {:?} (dataset/scale mismatch between serve and join?)",
+            shapes.len(),
+            shapes
+        )));
+    }
+    Ok(())
+}
+
+/// This site's rank (shard index) in the broadcast live membership.
+fn rank_of(leaf: u32, live: &[u32]) -> io::Result<usize> {
+    live.iter()
+        .position(|&l| l == leaf)
+        .ok_or_else(|| proto_err(format!("site {leaf} is not in the live membership {live:?}")))
+}
+
+/// [`join_training`] for a run whose config frame announced a non-fresh
+/// bootstrap (`RemoteConfig::resume`). [`ResumeMode::Checkpoint`] blocks
+/// for the aggregator's `resume` broadcast before the first step and
+/// restores the shared cursors from it, entering epoch `next_epoch` in
+/// lockstep with everyone else. [`ResumeMode::Elastic`] is the admitted
+/// joiner's path: it consumes the admission boundary's `epoch-sync` and
+/// `resume` broadcasts, takes its rank from the live membership and its
+/// shard from the round-robin re-deal, and joins the next epoch.
 #[allow(clippy::too_many_arguments)]
 pub fn join_training_resumable<M: DistModel, D: DataSource>(
     t: &mut dyn Transport,
@@ -912,17 +1286,17 @@ pub fn join_training_resumable<M: DistModel, D: DataSource>(
     data: &D,
     shards: &[Vec<usize>],
     site_id: usize,
-    resume: bool,
+    resume: ResumeMode,
 ) -> io::Result<TrainLog> {
     validate_remote(spec)?;
     validate_model_algo(spec, &model)?;
-    if site_id >= shards.len() {
+    if resume != ResumeMode::Elastic && site_id >= shards.len() {
         return Err(proto_err(format!(
             "site id {site_id} out of range for {} shards",
             shards.len()
         )));
     }
-    if resume {
+    if resume != ResumeMode::Fresh {
         validate_remote_checkpoint(spec)?;
     }
     let mut proto = spec.algo.build::<M>().protocol();
@@ -933,33 +1307,47 @@ pub fn join_training_resumable<M: DistModel, D: DataSource>(
     let mut rng = Rng::new(spec.seed);
     let mut ws = Workspace::new();
     let entry_names = model.entry_names();
-    let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+    let mut my_rank = site_id;
+    let mut cur_shards: Vec<Vec<usize>> = shards.to_vec();
+    let mut sizes: Vec<usize> = cur_shards.iter().map(|s| s.len()).collect();
 
     let mut start_epoch = 0usize;
-    if resume {
-        let rs = ResumeState::decode(&expect_ctrl(t.recv_broadcast()?, "resume")?)?;
-        let fits = |mats: &[Matrix]| {
-            mats.len() == shapes.len()
-                && mats.iter().zip(&shapes).all(|(m, &(r, c))| m.rows() == r && m.cols() == c)
-        };
-        if !fits(&rs.params) || !fits(&rs.adam_m) || !fits(&rs.adam_v) {
-            return Err(proto_err(format!(
-                "resume frame does not fit this model: expected {} parameter/moment matrices \
-                 shaped {:?} (dataset/scale mismatch between serve and join?)",
-                shapes.len(),
-                shapes
-            )));
+    match resume {
+        ResumeMode::Fresh => {}
+        ResumeMode::Checkpoint => {
+            let rs = ResumeState::decode(&expect_ctrl(t.recv_broadcast()?, "resume")?)?;
+            check_resume_fits(&shapes, &rs)?;
+            params = rs.params;
+            model.set_params(&params);
+            opt = Adam::from_state(spec.lr, rs.adam_t, rs.adam_m, rs.adam_v);
+            rng = Rng::from_parts(rs.rng_state, rs.rng_inc, rs.rng_spare);
+            start_epoch = rs.next_epoch as usize;
+            if start_epoch >= spec.epochs {
+                return Err(proto_err(format!(
+                    "resume frame says epoch {start_epoch} of a {} epoch run: nothing to do",
+                    spec.epochs
+                )));
+            }
         }
-        params = rs.params;
-        model.set_params(&params);
-        opt = Adam::from_state(spec.lr, rs.adam_t, rs.adam_m, rs.adam_v);
-        rng = Rng::from_parts(rs.rng_state, rs.rng_inc, rs.rng_spare);
-        start_epoch = rs.next_epoch as usize;
-        if start_epoch >= spec.epochs {
-            return Err(proto_err(format!(
-                "resume frame says epoch {start_epoch} of a {} epoch run: nothing to do",
-                spec.epochs
-            )));
+        ResumeMode::Elastic => {
+            let es = EpochSync::decode(&expect_ctrl(t.recv_broadcast()?, "epoch-sync")?)?;
+            if !es.resharded {
+                return Err(proto_err(
+                    "elastic join: the admission epoch-sync did not announce a reshard \
+                     (aggregator/site version skew?)"
+                        .into(),
+                ));
+            }
+            let rs = ResumeState::decode(&expect_ctrl(t.recv_broadcast()?, "resume")?)?;
+            check_resume_fits(&shapes, &rs)?;
+            params = rs.params;
+            model.set_params(&params);
+            opt = Adam::from_state(spec.lr, rs.adam_t, rs.adam_m, rs.adam_v);
+            rng = Rng::from_parts(rs.rng_state, rs.rng_inc, rs.rng_spare);
+            start_epoch = rs.next_epoch as usize;
+            my_rank = rank_of(site_id as u32, &es.live)?;
+            cur_shards = reshard_indices(shards, es.live.len());
+            sizes = cur_shards.iter().map(|s| s.len()).collect();
         }
     }
 
@@ -976,10 +1364,10 @@ pub fn join_training_resumable<M: DistModel, D: DataSource>(
             let step_t0 = Instant::now();
             let batch = if oracle {
                 // The pooled oracle trains the union batch in every process.
-                union_batch(data, shards, &mut plan)?
+                union_batch(data, &cur_shards, &mut plan)?
             } else {
-                let local = plan[site_id].next().ok_or_else(|| short_shard(site_id))?;
-                shard_batch(data, &shards[site_id], &local)
+                let local = plan[my_rank].next().ok_or_else(|| short_shard(my_rank))?;
+                shard_batch(data, &cur_shards[my_rank], &local)
             };
             if oracle || spec.schedule.is_sync_step(step) {
                 let out = remote_site_step(
@@ -988,7 +1376,7 @@ pub fn join_training_resumable<M: DistModel, D: DataSource>(
                     &mut *ledger,
                     &model,
                     &batch,
-                    site_id,
+                    my_rank,
                     &mut ws,
                 )?;
                 loss_sum += out.loss as f64;
@@ -1027,6 +1415,344 @@ pub fn join_training_resumable<M: DistModel, D: DataSource>(
         if trace::enabled() {
             let _ = trace::flush();
         }
+        // Membership roll-call: every process consumes the root's
+        // epoch-sync at every non-final boundary. A reshard re-applies the
+        // broadcast cursor snapshot (a no-op for incumbents, whose state
+        // is already the canonical one) and re-deals the shards.
+        if epoch + 1 < spec.epochs {
+            let es = EpochSync::decode(&expect_ctrl(t.recv_broadcast()?, "epoch-sync")?)?;
+            if es.resharded {
+                let rs = ResumeState::decode(&expect_ctrl(t.recv_broadcast()?, "resume")?)?;
+                check_resume_fits(&shapes, &rs)?;
+                params = rs.params;
+                model.set_params(&params);
+                opt = Adam::from_state(spec.lr, rs.adam_t, rs.adam_m, rs.adam_v);
+                rng = Rng::from_parts(rs.rng_state, rs.rng_inc, rs.rng_spare);
+                my_rank = rank_of(site_id as u32, &es.live)?;
+                cur_shards = reshard_indices(shards, es.live.len());
+                sizes = cur_shards.iter().map(|s| s.len()).collect();
+            }
+        }
     }
     Ok(TrainLog { algo: spec.algo.name(), epochs, sim_time_s: 0.0, entry_names })
+}
+
+// ---------------------------------------------------------------------------
+// Sub-aggregator (relay) loop
+// ---------------------------------------------------------------------------
+
+/// Sub-aggregator training loop (`dad relay`): one interior tree level,
+/// holding no data and no model state. Each synchronized step runs the
+/// aggregator half of the prologue against the child links — gathering
+/// per-leaf `step-meta` and degrading per subtree exactly like the root —
+/// re-ships the batched metas up, forwards the `step-sync` broadcast
+/// down, and then executes the protocol's [`StepPlan`] generically:
+/// up rounds gather the children's partials and combine them
+/// associatively (dense segment sums, leaf-order stacks, sparse index
+/// unions, per-leaf control batching) before re-shipping the reduced
+/// payload to the parent, and [`Round::Down`] rounds forward the root's
+/// broadcast verbatim. No per-algorithm code runs here — that is the
+/// point of the [`StepProtocol`] seam.
+///
+/// The relay replays the epoch plan (and every reshard broadcast) purely
+/// to stay in lockstep on the step count; it never draws a batch.
+/// `shards` are the canonical per-site shards every process rebuilds from
+/// the config. The relay's parent-side ledger is the headline artifact:
+/// its `SiteToAgg` bytes are what one root link costs, independent of how
+/// many leaves sit below. `_model` is never touched — it only pins the
+/// model type the protocol family is instantiated at, exactly as the
+/// other drivers' `build::<M>()` call does.
+#[allow(clippy::too_many_arguments)]
+pub fn relay_training<M: DistModel>(
+    parent: &mut dyn Transport,
+    children: &mut dyn Transport,
+    parent_ledger: &mut Ledger,
+    child_ledger: &mut Ledger,
+    cfg: &RemoteConfig,
+    shards: &[Vec<usize>],
+    policy: FaultPolicy,
+    _model: M,
+) -> io::Result<()> {
+    let spec = &cfg.spec;
+    validate_remote(spec)?;
+    validate_remote_topology(spec, &Topology::Tree { root_links: 1 })?;
+    let mut proto = spec.algo.build::<M>().protocol();
+    let oracle = proto.oracle();
+    // Captured once from the handshake: a subtree that declared a single
+    // leaf must ship raw (flat-star) control bodies upward, a multi-leaf
+    // one the batched per-leaf form — the shape the parent inferred from
+    // this relay's hello, which never changes even if leaves die later.
+    let declared: u32 = (0..children.n_sites()).map(|l| children.link_leaves(l).1).sum();
+    let batched_up = declared > 1;
+    let mut rng = Rng::new(spec.seed);
+    let mut sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+    let mut start_epoch = 0usize;
+    match cfg.resume {
+        ResumeMode::Fresh => {}
+        ResumeMode::Checkpoint => {
+            let body = expect_ctrl(parent.recv_broadcast()?, "resume")?;
+            children.ship_control(Direction::AggToSite, "resume", &body)?;
+            let rs = ResumeState::decode(&body)?;
+            rng = Rng::from_parts(rs.rng_state, rs.rng_inc, rs.rng_spare);
+            start_epoch = rs.next_epoch as usize;
+        }
+        ResumeMode::Elastic => {
+            return Err(proto_err(
+                "a relay cannot join elastically: admission only covers single-leaf sites"
+                    .into(),
+            ));
+        }
+    }
+    metrics::TREE_LEVEL.set(1);
+    for epoch in start_epoch..spec.epochs {
+        let plan = epoch_plan(&sizes, spec.batch_per_site, &mut rng);
+        let n_steps = plan.iter().map(|i| i.n_batches()).min().unwrap_or(0);
+        for step in 0..n_steps {
+            if oracle || spec.schedule.is_sync_step(step) {
+                relay_step(
+                    proto.as_mut(),
+                    &mut *parent,
+                    &mut *children,
+                    &mut *parent_ledger,
+                    &mut *child_ledger,
+                    policy,
+                    batched_up,
+                )?;
+            } else {
+                // Off-sync phase: gather and re-batch the subtree's
+                // ledger-exempt local losses; the root does the averaging.
+                let mut cep = Endpoint::new(&mut *children, &mut *child_ledger);
+                let mut items: Vec<(u32, Vec<u8>)> = Vec::new();
+                let mut gone: Vec<(usize, String, io::Error)> = Vec::new();
+                for link in 0..cep.n_links() {
+                    match ctrl_from_leaves(&mut cep, link, "local-loss") {
+                        Ok(pairs) => items.extend(pairs),
+                        Err(e) if is_link_failure(&e) => {
+                            let label = cep.site_label(link);
+                            gone.push((link, label, e));
+                        }
+                        Err(e) => return Err(e),
+                    }
+                }
+                let lost = handle_lost(
+                    &mut cep,
+                    proto.name(),
+                    proto.supports_degrade(),
+                    policy,
+                    items.len(),
+                    gone,
+                )?;
+                for label in &lost {
+                    eprintln!(
+                        "[degrade] relay lost site {label} in a local phase; subtree \
+                         continues with {} leaves",
+                        items.len()
+                    );
+                }
+                let mut pep = Endpoint::new(&mut *parent, &mut *parent_ledger);
+                if batched_up {
+                    pep.ctrl_up("local-loss", &encode_leaf_ctrl(&items))?;
+                } else {
+                    pep.ctrl_up("local-loss", &items[0].1)?;
+                }
+            }
+            metrics::CHILDREN_LIVE.set(children.n_sites() as u64);
+        }
+        // Forward the membership roll-call (and any reshard snapshot)
+        // verbatim — encode∘decode is bit-identical, so the leaves see
+        // exactly the root's bytes — and track the step-count bookkeeping
+        // locally.
+        if epoch + 1 < spec.epochs {
+            let body = expect_ctrl(parent.recv_broadcast()?, "epoch-sync")?;
+            children.ship_control(Direction::AggToSite, "epoch-sync", &body)?;
+            let es = EpochSync::decode(&body)?;
+            if es.resharded {
+                let rbody = expect_ctrl(parent.recv_broadcast()?, "resume")?;
+                children.ship_control(Direction::AggToSite, "resume", &rbody)?;
+                let rs = ResumeState::decode(&rbody)?;
+                rng = Rng::from_parts(rs.rng_state, rs.rng_inc, rs.rng_spare);
+                sizes = reshard_indices(shards, es.live.len()).iter().map(|s| s.len()).collect();
+            }
+        }
+    }
+    Ok(())
+}
+
+/// One synchronized step at a relay (see [`relay_training`]): prologue
+/// gather + uplink, sync forward, then the generic round interpreter.
+fn relay_step<M: DistModel>(
+    proto: &mut dyn StepProtocol<M>,
+    parent: &mut dyn Transport,
+    children: &mut dyn Transport,
+    parent_ledger: &mut Ledger,
+    child_ledger: &mut Ledger,
+    policy: FaultPolicy,
+    batched_up: bool,
+) -> io::Result<()> {
+    let mut cep = Endpoint::new(children, child_ledger);
+    let mut items: Vec<(u32, Vec<u8>)> = Vec::new();
+    let mut metas: Vec<StepMeta> = Vec::new();
+    let mut link_leaves: Vec<Vec<u32>> = Vec::new();
+    let mut gone: Vec<(usize, String, io::Error)> = Vec::new();
+    for link in 0..cep.n_links() {
+        match ctrl_from_leaves(&mut cep, link, "step-meta") {
+            Ok(pairs) => {
+                link_leaves.push(pairs.iter().map(|p| p.0).collect());
+                for (leaf, body) in pairs {
+                    metas.push(StepMeta::decode(&body)?);
+                    items.push((leaf, body));
+                }
+            }
+            Err(e) if is_link_failure(&e) => {
+                let label = cep.site_label(link);
+                gone.push((link, label, e));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    let lost =
+        handle_lost(&mut cep, proto.name(), proto.supports_degrade(), policy, metas.len(), gone)?;
+    for label in &lost {
+        eprintln!(
+            "[degrade] relay lost site {label}; subtree continues with {} leaves",
+            items.len()
+        );
+    }
+    cep.set_link_leaves(link_leaves);
+    let plan = proto.plan(&metas)?;
+    let mut pep = Endpoint::new(parent, parent_ledger);
+    if batched_up {
+        pep.ctrl_up("step-meta", &encode_leaf_ctrl(&items))?;
+    } else {
+        pep.ctrl_up("step-meta", &items[0].1)?;
+    }
+    // Past the uplink the step is committed fabric-wide (the root will
+    // broadcast a sync frame covering this subtree's leaves), so any
+    // failure below can only fail the run — exactly the root's rule.
+    let mid = |e: io::Error| {
+        if is_link_failure(&e) {
+            io::Error::new(
+                e.kind(),
+                format!("link failed mid-exchange (cannot degrade mid-step): {e}"),
+            )
+        } else {
+            e
+        }
+    };
+    let f = pep.down_frame("step-sync").map_err(mid)?;
+    cep.bcast_frame(&f).map_err(mid)?;
+    for round in &plan.rounds {
+        let r = match *round {
+            Round::UpSum { tag } => gather_seg_parts(&mut cep, tag).and_then(|segs| {
+                // Surviving segments sit side by side; the parent folds
+                // them left-to-right in the same canonical bracketing.
+                let refs: Vec<&Matrix> =
+                    segs.segs().iter().flat_map(|s| s.val.iter()).collect();
+                pep.up(tag, &refs)
+            }),
+            Round::UpStack { tag } => gather_stack1(&mut cep, tag)
+                .and_then(|stacked| pep.up(tag, &[&stacked])),
+            Round::UpSparse { tag } => gather_sparse_parts(&mut cep, tag).and_then(|segs| {
+                let refs: Vec<&SparseMat> = segs.segs().iter().map(|s| &s.val).collect();
+                pep.up_sparse(tag, &refs)
+            }),
+            Round::CtrlUp { tag } => (|| {
+                let mut up: Vec<(u32, Vec<u8>)> = Vec::new();
+                for link in 0..cep.n_links() {
+                    up.extend(ctrl_from_leaves(&mut cep, link, tag)?);
+                }
+                if batched_up {
+                    pep.ctrl_up(tag, &encode_leaf_ctrl(&up))
+                } else {
+                    pep.ctrl_up(tag, &up[0].1)
+                }
+            })(),
+            Round::Down { tag } => {
+                pep.down_frame(tag).and_then(|f| cep.bcast_frame(&f))
+            }
+        };
+        r.map_err(mid)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoch_sync_roundtrip() {
+        let es = EpochSync { next_epoch: 3, live: vec![0, 2, 5, 9], resharded: true };
+        assert_eq!(EpochSync::decode(&es.encode()).unwrap(), es);
+        let empty = EpochSync { next_epoch: 0, live: vec![], resharded: false };
+        assert_eq!(EpochSync::decode(&empty.encode()).unwrap(), empty);
+    }
+
+    #[test]
+    fn epoch_sync_rejects_trailing_bytes() {
+        let mut body = EpochSync { next_epoch: 1, live: vec![0], resharded: false }.encode();
+        body.push(0);
+        let e = EpochSync::decode(&body).unwrap_err();
+        assert!(e.to_string().contains("trailing"), "{e}");
+    }
+
+    #[test]
+    fn resume_mode_wire_roundtrip() {
+        for m in [ResumeMode::Fresh, ResumeMode::Checkpoint, ResumeMode::Elastic] {
+            assert_eq!(ResumeMode::from_wire(m.wire_byte()).unwrap(), m);
+        }
+        assert!(ResumeMode::from_wire(3).is_err());
+    }
+
+    #[test]
+    fn reshard_deals_every_index_round_robin() {
+        let shards = vec![vec![0usize, 1, 2], vec![3, 4, 5], vec![6, 7]];
+        let out = reshard_indices(&shards, 4);
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[0], vec![0, 4]);
+        assert_eq!(out[1], vec![1, 5]);
+        assert_eq!(out[2], vec![2, 6]);
+        assert_eq!(out[3], vec![3, 7]);
+        let mut all: Vec<usize> = out.into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..8).collect::<Vec<_>>());
+        assert!(reshard_indices(&shards, 0).is_empty());
+    }
+
+    #[test]
+    fn topology_parse_roundtrip_and_errors() {
+        assert_eq!(Topology::parse("flat").unwrap(), Topology::Flat);
+        assert_eq!(Topology::parse("tree:4").unwrap(), Topology::Tree { root_links: 4 });
+        assert_eq!(Topology::Tree { root_links: 4 }.name(), "tree:4");
+        assert_eq!(Topology::parse(&Topology::Flat.name()).unwrap(), Topology::Flat);
+        assert!(Topology::parse("ring").unwrap_err().to_string().contains("unknown topology"));
+        assert!(Topology::parse("tree:x").unwrap_err().to_string().contains("bad tree fan-out"));
+    }
+
+    #[test]
+    fn tree_topology_rejects_non_associative_algos_by_name() {
+        let spec = |algo: &str| TrainSpec {
+            algo: AlgoSpec::parse(algo).unwrap(),
+            n_sites: 4,
+            batch_per_site: 8,
+            epochs: 1,
+            lr: 1e-4,
+            seed: 7,
+            schedule: Schedule::EveryBatch,
+        };
+        let tree = Topology::Tree { root_links: 2 };
+        for algo in ["edad", "dad-p2p"] {
+            let e = validate_remote_topology(&spec(algo), &tree).unwrap_err();
+            assert!(e.to_string().contains(algo), "{algo}: {e}");
+            assert!(e.to_string().contains("tree topology"), "{algo}: {e}");
+        }
+        for algo in ["dad", "dsgd", "pooled", "rank-dad:4", "powersgd:4", "dgc:25"] {
+            validate_remote_topology(&spec(algo), &tree).unwrap();
+        }
+        assert!(validate_remote_topology(&spec("dad"), &Topology::Tree { root_links: 0 })
+            .is_err());
+        assert!(validate_remote_topology(&spec("dad"), &Topology::Tree { root_links: 9 })
+            .is_err());
+        validate_remote_topology(&spec("edad"), &Topology::Flat).unwrap();
+    }
 }

@@ -82,6 +82,16 @@ impl Ledger {
         &self.entries
     }
 
+    /// Fold another ledger's rows into this one, per (tag, direction).
+    /// Used to sum per-level ledgers of an aggregation tree (every site's
+    /// uplink ledger plus the root's broadcast ledger reconstructs the
+    /// flat star's census — what the tree equivalence tests assert).
+    pub fn merge(&mut self, other: &Ledger) {
+        for (tag, dir, bytes) in other.breakdown() {
+            self.record(tag, *dir, *bytes);
+        }
+    }
+
     /// Forget everything (per-run reuse).
     pub fn reset(&mut self) {
         self.entries.clear();

@@ -27,7 +27,7 @@ pub mod wire;
 pub use ledger::{Direction, Ledger};
 pub use transport::{
     is_link_failure, ChaosSpec, ChaosTransport, FaultEvent, Loopback, TcpAgg, TcpAggListener,
-    TcpSite, Transport,
+    TcpAggPending, TcpSite, Transport,
 };
 
 use std::cell::RefCell;

@@ -412,6 +412,27 @@ impl Transport for ChaosTransport {
             None => site.to_string(),
         }
     }
+
+    fn link_leaves(&self, site: usize) -> (u32, u32) {
+        match &self.inner {
+            Some(t) => t.link_leaves(site),
+            None => (site as u32, 1),
+        }
+    }
+
+    fn admit_joiners(&mut self) -> io::Result<Vec<usize>> {
+        self.alive()?;
+        let new = self.inner_mut()?.admit_joiners()?;
+        self.n_sites = self.inner.as_ref().map(|t| t.n_sites()).unwrap_or(0);
+        Ok(new)
+    }
+
+    fn ship_control_to(&mut self, site: usize, tag: &str, body: &[u8]) -> io::Result<u64> {
+        // Management-plane unicast (admission config): delegated without a
+        // fault gate so a drop schedule can never eat a joiner's welcome.
+        self.alive()?;
+        self.inner_mut()?.ship_control_to(site, tag, body)
+    }
 }
 
 #[cfg(test)]

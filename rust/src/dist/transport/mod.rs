@@ -28,7 +28,7 @@ pub mod tcp;
 
 pub use chaos::{ChaosSpec, ChaosTransport, FaultEvent};
 pub use loopback::Loopback;
-pub use tcp::{is_link_failure, TcpAgg, TcpAggListener, TcpSite};
+pub use tcp::{is_link_failure, retry_backoff_ms, TcpAgg, TcpAggListener, TcpAggPending, TcpSite};
 
 use std::io;
 
@@ -102,6 +102,32 @@ pub trait Transport: Send {
     /// links. Endpoints without retirement report the index itself.
     fn site_label(&self, site: usize) -> String {
         site.to_string()
+    }
+
+    /// The contiguous leaf range live link `site` aggregates, as
+    /// `(first leaf id, count)` — assigned at the handshake (aggregator-
+    /// role endpoints only). On a flat star every link is a single leaf
+    /// whose id is its link index, which is the default; a tree aggregator
+    /// overrides this with the subtree ranges its children declared.
+    fn link_leaves(&self, site: usize) -> (u32, u32) {
+        (site as u32, 1)
+    }
+
+    /// Admit any sites waiting to join the fabric (root aggregator
+    /// endpoints only): handshake every queued connection and return the
+    /// newly created live link indices. The default fabric is closed to
+    /// joiners and returns an empty list.
+    fn admit_joiners(&mut self) -> io::Result<Vec<usize>> {
+        Ok(vec![])
+    }
+
+    /// Ship a control frame to exactly one live link (aggregator-role
+    /// endpoints only) — the management-plane unicast used to hand a
+    /// freshly admitted site its run configuration. Like all control
+    /// traffic it is never recorded in the ledger.
+    fn ship_control_to(&mut self, site: usize, tag: &str, body: &[u8]) -> io::Result<u64> {
+        let _ = (site, tag, body);
+        Err(unsupported(self.name(), "ship_control_to"))
     }
 
     /// Forward one site's peer-to-peer frames through a star hub: write

@@ -1,9 +1,17 @@
 //! The TCP backend: aggregator and sites as separate OS processes over
 //! `std::net` sockets — no external dependencies.
 //!
-//! Topology is the paper's star. The aggregator binds, accepts exactly
-//! `n_sites` connections, and assigns site ids in accept order during a
-//! `hello`/`welcome` control handshake (which also pins the codec version).
+//! Topology is a star by default, and composes into trees: every `hello`
+//! declares how many *leaves* the dialing endpoint aggregates (a leaf site
+//! sends the historical empty body, meaning one; a relay declares its
+//! subtree's total), and every `welcome` answers with the link's first
+//! global leaf id plus the fabric-wide leaf total. The aggregator assigns
+//! contiguous leaf ranges in accept order, so `dad relay` can run a
+//! [`TcpAgg`] toward its children and a [`TcpSite`] toward its parent with
+//! nothing but these two control frames. The two-phase split
+//! ([`TcpAggListener::accept_hellos_deadline`] then
+//! [`TcpAggPending::welcome_all`]) exists for exactly that: a relay must
+//! learn its subtree size before it can dial up and hear its own range.
 //! After the handshake both endpoints speak nothing but
 //! [`crate::dist::wire`] frames:
 //!
@@ -24,6 +32,7 @@
 //! sub-fabric keeps training — the seams `coordinator::remote`'s
 //! degradation state machine is built on.
 
+use std::cell::Cell;
 use std::io::{self, BufReader, BufWriter, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::time::{Duration, Instant};
@@ -32,7 +41,7 @@ use super::{unsupported, Transport};
 use crate::dist::ledger::Direction;
 use crate::dist::wire::{self, Body, ByteReader, ByteWriter, Frame};
 use crate::obs::trace::{phase_span, tagged_span, Phase};
-use crate::tensor::Matrix;
+use crate::tensor::{Matrix, Rng};
 
 /// One established connection: buffered reader + writer over the same
 /// stream (`try_clone` shares the socket).
@@ -57,6 +66,24 @@ fn expect_control(f: &Frame, want: &str) -> io::Result<Vec<u8>> {
     }
 }
 
+/// How many leaves a `hello` body declares. The empty body every leaf
+/// site sends means one leaf (the historical format); a relay dialing on
+/// behalf of a subtree declares the subtree's leaf count as a `u32`.
+fn hello_leaves(body: &[u8]) -> io::Result<u32> {
+    if body.is_empty() {
+        return Ok(1);
+    }
+    let mut rd = ByteReader::new(body);
+    let n = rd.read_u32()?;
+    if n == 0 {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            "hello declared a zero-leaf subtree",
+        ));
+    }
+    Ok(n)
+}
+
 /// A bound-but-not-yet-connected aggregator: lets the caller learn the
 /// listen address (e.g. for port 0) before sites dial in.
 pub struct TcpAggListener {
@@ -70,9 +97,9 @@ impl TcpAggListener {
         self.listener.local_addr()
     }
 
-    /// Block until all `n_sites` sites have connected and completed the
-    /// `hello`/`welcome` handshake; site ids are assigned in accept order.
-    /// Blocks forever if a site never shows — use
+    /// Block until connections covering all `n_sites` leaves have completed
+    /// the `hello`/`welcome` handshake; leaf ranges are assigned in accept
+    /// order. Blocks forever if a site never shows — use
     /// [`TcpAggListener::accept_sites_deadline`] for a bounded wait.
     pub fn accept_sites(self) -> io::Result<TcpAgg> {
         self.accept_sites_deadline(None)
@@ -85,12 +112,28 @@ impl TcpAggListener {
     /// `dad serve` forever. `None` waits indefinitely (the historical
     /// behavior).
     pub fn accept_sites_deadline(self, timeout: Option<Duration>) -> io::Result<TcpAgg> {
+        let total = self.n_sites as u32;
+        self.accept_hellos_deadline(timeout)?.welcome_all(0, total)
+    }
+
+    /// The first half of the handshake with the `welcome`s deferred:
+    /// accept connections and read their `hello`s until the declared leaf
+    /// counts sum to exactly `n_sites`. A relay uses this split to learn
+    /// its subtree size, dial its own parent, and only then assign leaf
+    /// ranges with [`TcpAggPending::welcome_all`]; the root welcomes
+    /// immediately via [`TcpAggListener::accept_sites_deadline`]. A link
+    /// whose declaration would overshoot the fabric's leaf total is a
+    /// named `InvalidData` error.
+    pub fn accept_hellos_deadline(self, timeout: Option<Duration>) -> io::Result<TcpAggPending> {
         let deadline = timeout.map(|t| Instant::now() + t);
         if deadline.is_some() {
             self.listener.set_nonblocking(true)?;
         }
-        let mut links = Vec::with_capacity(self.n_sites);
-        for site_id in 0..self.n_sites {
+        let mut links = Vec::new();
+        let mut n_leaves: Vec<u32> = Vec::new();
+        let mut leaf_total = 0u32;
+        while (leaf_total as usize) < self.n_sites {
+            let site_id = links.len();
             let stream = loop {
                 match self.listener.accept() {
                     Ok((stream, _)) => break stream,
@@ -137,18 +180,78 @@ impl TcpAggListener {
                     e
                 }
             })?;
-            expect_control(&hello, "hello")?;
+            let body = expect_control(&hello, "hello")?;
+            let n = hello_leaves(&body)?;
+            if leaf_total + n > self.n_sites as u32 {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!(
+                        "link {site_id} declared a {n}-leaf subtree, overshooting the \
+                         fabric's {} leaves ({leaf_total} already claimed)",
+                        self.n_sites
+                    ),
+                ));
+            }
+            leaf_total += n;
+            links.push(l);
+            n_leaves.push(n);
+        }
+        Ok(TcpAggPending { links, n_leaves, listener: self.listener })
+    }
+}
+
+/// Accepted links whose `hello`s are read but whose `welcome`s are still
+/// deferred — the relay's half-open handshake state between learning its
+/// subtree size and hearing its own leaf range from its parent.
+pub struct TcpAggPending {
+    links: Vec<Link>,
+    n_leaves: Vec<u32>,
+    listener: TcpListener,
+}
+
+impl TcpAggPending {
+    /// Total leaves declared across the accepted links.
+    pub fn total_leaves(&self) -> u32 {
+        self.n_leaves.iter().sum()
+    }
+
+    /// Number of direct links accepted (each a leaf site or a relay
+    /// subtree).
+    pub fn n_links(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Complete the handshake: assign each link a contiguous leaf range in
+    /// accept order starting at `leaf_start`, and tell every link the
+    /// fabric-wide leaf total `global_total`. The `welcome` body is
+    /// `(first leaf id, global leaf total)` — on a flat star this is the
+    /// historical `(site id, n_sites)` pair, bit for bit.
+    pub fn welcome_all(self, leaf_start: u32, global_total: u32) -> io::Result<TcpAgg> {
+        let mut links = self.links;
+        let mut ids = Vec::with_capacity(links.len());
+        let mut leaves = Vec::with_capacity(links.len());
+        let mut offset = leaf_start;
+        for (l, &n) in links.iter_mut().zip(&self.n_leaves) {
             let mut w = ByteWriter::new();
-            w.push_u32(site_id as u32);
-            w.push_u32(self.n_sites as u32);
+            w.push_u32(offset);
+            w.push_u32(global_total);
             wire::encode_control(&mut l.w, "welcome", &w.finish())?;
             l.w.flush()?;
             // Back to unbounded reads; training timeouts are opted into
             // separately via `TcpAgg::set_recv_timeout`.
             l.r.get_ref().set_read_timeout(None)?;
-            links.push(l);
+            ids.push(offset as usize);
+            leaves.push((offset, n));
+            offset += n;
         }
-        Ok(TcpAgg { links, ids: (0..self.n_sites).collect() })
+        Ok(TcpAgg {
+            links,
+            ids,
+            leaves,
+            listener: Some(self.listener),
+            next_leaf: offset,
+            recv_timeout: Cell::new(None),
+        })
     }
 }
 
@@ -168,19 +271,54 @@ pub fn is_link_failure(e: &io::Error) -> bool {
     )
 }
 
-/// Aggregator endpoint: one socket per site, star topology. `links` holds
-/// the *live* sites in handshake order; `ids` remembers each live link's
-/// originally assigned site id so diagnostics stay stable after
-/// [`TcpAgg::retire_site`] compacts the fabric.
+/// Aggregator endpoint: one socket per child link, star (or tree level)
+/// topology. `links` holds the *live* links in handshake order; `ids`
+/// remembers each live link's first assigned leaf id and `leaves` its
+/// contiguous `(first leaf, count)` range, so diagnostics and re-sharding
+/// stay stable after [`TcpAgg::retire_site`] compacts the fabric. The
+/// listener is retained so elastic joiners can be admitted later via
+/// [`Transport::admit_joiners`].
 pub struct TcpAgg {
     links: Vec<Link>,
     ids: Vec<usize>,
+    leaves: Vec<(u32, u32)>,
+    listener: Option<TcpListener>,
+    next_leaf: u32,
+    recv_timeout: Cell<Option<Duration>>,
+}
+
+/// Handshake one joiner connection: bounded `hello` read, single-leaf
+/// check, `welcome` with the fresh leaf id and the new leaf high-water as
+/// the global total. Any failure forfeits this joiner's admission without
+/// failing the run.
+fn admit_one(stream: TcpStream, leaf: u32, recv_timeout: Option<Duration>) -> io::Result<Link> {
+    stream.set_nonblocking(false)?;
+    // Bounded handshake: a half-open dial must not wedge the epoch
+    // boundary this poll runs at.
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    let mut l = link(stream)?;
+    let hello = wire::decode(&mut l.r)?;
+    let body = expect_control(&hello, "hello")?;
+    let n = hello_leaves(&body)?;
+    if n != 1 {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("elastic join must be a single leaf site, got a {n}-leaf subtree"),
+        ));
+    }
+    let mut w = ByteWriter::new();
+    w.push_u32(leaf);
+    w.push_u32(leaf + 1);
+    wire::encode_control(&mut l.w, "welcome", &w.finish())?;
+    l.w.flush()?;
+    l.r.get_ref().set_read_timeout(recv_timeout)?;
+    Ok(l)
 }
 
 impl TcpAgg {
     /// Bind the aggregator on `addr` (e.g. `"127.0.0.1:7009"` or `":0"`
-    /// forms) for an `n_sites` fabric. Accepting is a separate step so the
-    /// caller can print/propagate the address first.
+    /// forms) for a fabric of `n_sites` *leaves*. Accepting is a separate
+    /// step so the caller can print/propagate the address first.
     pub fn bind(addr: &str, n_sites: usize) -> io::Result<TcpAggListener> {
         assert!(n_sites >= 1, "a fabric needs at least one site");
         Ok(TcpAggListener { listener: TcpListener::bind(addr)?, n_sites })
@@ -190,8 +328,10 @@ impl TcpAgg {
     /// unbounded blocking reads). This is the straggler deadline's
     /// mechanism: a site that stays silent past the timeout surfaces as a
     /// `TimedOut`/`WouldBlock` read error, which the remote driver either
-    /// degrades on or fails cleanly — never a hang.
+    /// degrades on or fails cleanly — never a hang. Links admitted later
+    /// inherit the most recent setting.
     pub fn set_recv_timeout(&self, timeout: Option<Duration>) -> io::Result<()> {
+        self.recv_timeout.set(timeout);
         for l in &self.links {
             l.r.get_ref().set_read_timeout(timeout)?;
         }
@@ -286,6 +426,7 @@ impl Transport for TcpAgg {
         }
         let l = self.links.remove(site);
         self.ids.remove(site);
+        self.leaves.remove(site);
         // Best effort: wake the site (or its stalled kernel buffers) so it
         // fails fast on its side instead of blocking on a broadcast that
         // will never come.
@@ -299,6 +440,62 @@ impl Transport for TcpAgg {
             None => site.to_string(),
         }
     }
+
+    fn link_leaves(&self, site: usize) -> (u32, u32) {
+        match self.leaves.get(site) {
+            Some(&range) => range,
+            None => (site as u32, 1),
+        }
+    }
+
+    fn admit_joiners(&mut self) -> io::Result<Vec<usize>> {
+        if self.listener.is_none() {
+            return Ok(vec![]);
+        }
+        self.listener.as_ref().expect("checked above").set_nonblocking(true)?;
+        let mut admitted = Vec::new();
+        loop {
+            let stream = match self.listener.as_ref().expect("checked above").accept() {
+                Ok((stream, _)) => stream,
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        io::ErrorKind::WouldBlock | io::ErrorKind::Interrupted
+                    ) =>
+                {
+                    break;
+                }
+                Err(e) => return Err(e),
+            };
+            match admit_one(stream, self.next_leaf, self.recv_timeout.get()) {
+                Ok(l) => {
+                    self.links.push(l);
+                    self.ids.push(self.next_leaf as usize);
+                    self.leaves.push((self.next_leaf, 1));
+                    self.next_leaf += 1;
+                    admitted.push(self.links.len() - 1);
+                }
+                // A malformed or half-open dial forfeits admission; the
+                // run itself goes on.
+                Err(_) => continue,
+            }
+        }
+        Ok(admitted)
+    }
+
+    fn ship_control_to(&mut self, site: usize, tag: &str, body: &[u8]) -> io::Result<u64> {
+        let _s = tagged_span("tcp-ship", tag, Phase::Comms);
+        let n_links = self.links.len();
+        let l = self.links.get_mut(site).ok_or_else(|| {
+            io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!("ship_control_to {site}: only {n_links} live links"),
+            )
+        })?;
+        let n = wire::encode_control(&mut l.w, tag, body)?;
+        l.w.flush()?;
+        Ok(n)
+    }
 }
 
 /// Site endpoint: a single socket to the aggregator plus the identity the
@@ -309,12 +506,42 @@ pub struct TcpSite {
     n_sites: usize,
 }
 
+/// Attempt `attempt`'s retry sleep in milliseconds: capped exponential
+/// backoff with deterministic seeded jitter, so a fleet of sites launched
+/// by the same script does not re-dial the aggregator in lockstep. The
+/// base doubles from 50 ms to a 1600 ms cap; the jittered sleep is
+/// uniform in `[base/2, base]`, derived purely from `(seed, attempt)` —
+/// a given seed always replays the same schedule.
+pub fn retry_backoff_ms(seed: u64, attempt: u32) -> u64 {
+    let base = (50u64 << attempt.min(5)).min(1600);
+    let mut rng = Rng::new(seed.wrapping_add((attempt as u64).wrapping_mul(0x9e3779b97f4a7c15)));
+    base / 2 + rng.next_u64() % (base / 2 + 1)
+}
+
+/// Stable FNV-1a jitter seed for [`TcpSite::connect_retry`]: the dial
+/// target de-correlates different fabrics, the process id de-correlates
+/// sibling sites dialing the same aggregator.
+fn retry_seed(addr: &str) -> u64 {
+    let mut seed = 0xcbf2_9ce4_8422_2325u64;
+    for b in addr.bytes().chain(std::process::id().to_le_bytes()) {
+        seed ^= b as u64;
+        seed = seed.wrapping_mul(0x100_0000_01b3);
+    }
+    seed
+}
+
 impl TcpSite {
-    /// Connect to a serving aggregator and complete the handshake.
-    pub fn connect(addr: &str) -> io::Result<TcpSite> {
+    fn connect_inner(addr: &str, n_leaves: u32) -> io::Result<TcpSite> {
         let stream = TcpStream::connect(addr)?;
         let mut l = link(stream)?;
-        wire::encode_control(&mut l.w, "hello", &[])?;
+        let hello = if n_leaves == 1 {
+            Vec::new() // the historical empty body: one leaf
+        } else {
+            let mut w = ByteWriter::new();
+            w.push_u32(n_leaves);
+            w.finish()
+        };
+        wire::encode_control(&mut l.w, "hello", &hello)?;
         l.w.flush()?;
         let welcome = wire::decode(&mut l.r)?;
         let body = expect_control(&welcome, "welcome")?;
@@ -324,24 +551,50 @@ impl TcpSite {
         Ok(TcpSite { link: l, site_id, n_sites })
     }
 
-    /// The id the aggregator assigned this site (0-based, accept order).
+    /// Connect to a serving aggregator and complete the handshake as a
+    /// single leaf site.
+    pub fn connect(addr: &str) -> io::Result<TcpSite> {
+        TcpSite::connect_inner(addr, 1)
+    }
+
+    /// Connect declaring an `n_leaves`-leaf subtree behind this endpoint —
+    /// the relay's parent-side dial. [`TcpSite::site_id`] then reports the
+    /// subtree's *first global leaf id* and [`Transport::n_sites`] the
+    /// fabric-wide leaf total.
+    pub fn connect_with_leaves(addr: &str, n_leaves: u32) -> io::Result<TcpSite> {
+        TcpSite::connect_inner(addr, n_leaves)
+    }
+
+    /// The first global leaf id the aggregator assigned this endpoint
+    /// (0-based; on a flat star this is the classic accept-order site id).
     pub fn site_id(&self) -> usize {
         self.site_id
     }
 
-    /// [`TcpSite::connect`] with bounded exponential backoff: launcher
-    /// scripts (and the CI remote-matrix job) start the aggregator and the
-    /// sites concurrently, so the first dials can land before the listener
-    /// is bound. Retries connection-refused/reset with a doubling delay
-    /// (50 ms up to a 1.6 s cap) until `timeout` elapses; protocol errors
-    /// still fail immediately, and the final error reports how long the
-    /// site tried.
+    /// [`TcpSite::connect`] with bounded, jittered exponential backoff:
+    /// launcher scripts (and the CI remote-matrix job) start the
+    /// aggregator and the sites concurrently, so the first dials can land
+    /// before the listener is bound. Retries connection-refused/reset on
+    /// the [`retry_backoff_ms`] schedule until `timeout` elapses; protocol
+    /// errors still fail immediately, and the final error reports how
+    /// long the site tried.
     pub fn connect_retry(addr: &str, timeout: Duration) -> io::Result<TcpSite> {
+        TcpSite::connect_retry_with_leaves(addr, 1, timeout)
+    }
+
+    /// [`TcpSite::connect_retry`] declaring an `n_leaves`-leaf subtree —
+    /// the relay's parent-side dial with the same bounded backoff.
+    pub fn connect_retry_with_leaves(
+        addr: &str,
+        n_leaves: u32,
+        timeout: Duration,
+    ) -> io::Result<TcpSite> {
         let start = Instant::now();
         let deadline = start + timeout;
-        let mut backoff = Duration::from_millis(50);
+        let seed = retry_seed(addr);
+        let mut attempt = 0u32;
         loop {
-            match TcpSite::connect(addr) {
+            match TcpSite::connect_inner(addr, n_leaves) {
                 Ok(site) => return Ok(site),
                 Err(e)
                     if matches!(
@@ -360,10 +613,11 @@ impl TcpSite {
                             ),
                         ));
                     }
-                    std::thread::sleep(backoff.min(deadline.saturating_duration_since(
+                    let sleep = Duration::from_millis(retry_backoff_ms(seed, attempt));
+                    std::thread::sleep(sleep.min(deadline.saturating_duration_since(
                         Instant::now(),
                     )));
-                    backoff = (backoff * 2).min(Duration::from_millis(1600));
+                    attempt += 1;
                 }
                 Err(e) => return Err(e),
             }
@@ -566,6 +820,125 @@ mod tests {
         let e = agg.recv_from_site(0).unwrap_err();
         assert!(is_link_failure(&e), "unexpected kind: {e}");
         t.join().unwrap();
+    }
+
+    /// The retry backoff schedule is a pure function of `(seed, attempt)`:
+    /// one seed always replays one schedule, different seeds de-correlate
+    /// the jitter, and every sleep stays inside `[base/2, base]` under the
+    /// 1600 ms cap.
+    #[test]
+    fn retry_backoff_schedule_is_deterministic_per_seed_and_capped() {
+        let a: Vec<u64> = (0..12).map(|k| retry_backoff_ms(7, k)).collect();
+        let b: Vec<u64> = (0..12).map(|k| retry_backoff_ms(7, k)).collect();
+        assert_eq!(a, b, "same seed must replay the same schedule");
+        let c: Vec<u64> = (0..12).map(|k| retry_backoff_ms(8, k)).collect();
+        assert_ne!(a, c, "different seeds must de-correlate the jitter");
+        for (k, &ms) in a.iter().enumerate() {
+            let base = (50u64 << (k as u32).min(5)).min(1600);
+            assert!(
+                ms >= base / 2 && ms <= base,
+                "attempt {k}: {ms}ms outside [{}, {base}]",
+                base / 2
+            );
+        }
+    }
+
+    /// A relay-style handshake: two links declare 4- and 2-leaf subtrees,
+    /// the deferred welcome assigns contiguous ranges from an arbitrary
+    /// `leaf_start`, and each welcome carries `(first leaf, global total)`.
+    #[test]
+    fn deferred_welcome_assigns_subtree_leaf_ranges() {
+        let listener = TcpAgg::bind("127.0.0.1:0", 6).unwrap();
+        let addr = listener.local_addr().unwrap();
+        // Dial by hand, sequentially, using the listen backlog (connects
+        // complete before accept runs) so accept order is deterministic.
+        let dial = |n: u32| {
+            let stream = TcpStream::connect(addr).unwrap();
+            let mut w = ByteWriter::new();
+            w.push_u32(n);
+            let mut bw = BufWriter::new(stream.try_clone().unwrap());
+            wire::encode_control(&mut bw, "hello", &w.finish()).unwrap();
+            bw.flush().unwrap();
+            stream
+        };
+        let s1 = dial(4);
+        let s2 = dial(2);
+        let pending =
+            listener.accept_hellos_deadline(Some(Duration::from_secs(5))).unwrap();
+        assert_eq!(pending.total_leaves(), 6);
+        let agg = pending.welcome_all(10, 16).unwrap();
+        assert_eq!(agg.n_sites(), 2);
+        assert_eq!(agg.link_leaves(0), (10, 4));
+        assert_eq!(agg.link_leaves(1), (14, 2));
+        assert_eq!(agg.site_label(0), "10");
+        assert_eq!(agg.site_label(1), "14");
+        for (s, want) in [(&s1, 10u32), (&s2, 14u32)] {
+            let mut r = BufReader::new(s.try_clone().unwrap());
+            let f = wire::decode(&mut r).unwrap();
+            let body = expect_control(&f, "welcome").unwrap();
+            let mut rd = ByteReader::new(&body);
+            assert_eq!(rd.read_u32().unwrap(), want);
+            assert_eq!(rd.read_u32().unwrap(), 16);
+        }
+    }
+
+    /// A subtree declaring more leaves than the fabric has left is a
+    /// named handshake error, not a silently mis-sharded run.
+    #[test]
+    fn overdeclared_leaves_are_rejected_by_name() {
+        let listener = TcpAgg::bind("127.0.0.1:0", 3).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let dial = |n: u32| {
+            let stream = TcpStream::connect(addr).unwrap();
+            let mut w = ByteWriter::new();
+            w.push_u32(n);
+            let mut bw = BufWriter::new(stream.try_clone().unwrap());
+            wire::encode_control(&mut bw, "hello", &w.finish()).unwrap();
+            bw.flush().unwrap();
+            stream
+        };
+        let _s1 = dial(2);
+        let _s2 = dial(2);
+        let e = listener
+            .accept_hellos_deadline(Some(Duration::from_secs(5)))
+            .unwrap_err();
+        assert_eq!(e.kind(), io::ErrorKind::InvalidData);
+        assert!(e.to_string().contains("overshooting"), "{e}");
+    }
+
+    /// The retained listener admits late joiners with fresh leaf ids, and
+    /// `ship_control_to` reaches exactly the named link.
+    #[test]
+    fn joiners_are_admitted_with_fresh_leaf_ids() {
+        let listener = TcpAgg::bind("127.0.0.1:0", 1).unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let t = {
+            let addr = addr.clone();
+            thread::spawn(move || TcpSite::connect(&addr).unwrap())
+        };
+        let mut agg = listener.accept_sites().unwrap();
+        let _site0 = t.join().unwrap();
+        // Nobody waiting: the poll is empty, not an error.
+        assert!(agg.admit_joiners().unwrap().is_empty());
+        let tj = thread::spawn(move || TcpSite::connect(&addr).unwrap());
+        let admitted = loop {
+            let got = agg.admit_joiners().unwrap();
+            if !got.is_empty() {
+                break got;
+            }
+            thread::sleep(Duration::from_millis(10));
+        };
+        assert_eq!(admitted, vec![1]);
+        let mut joiner = tj.join().unwrap();
+        assert_eq!(joiner.site_id(), 1);
+        assert_eq!(joiner.n_sites(), 2);
+        assert_eq!(agg.link_leaves(1), (1, 1));
+        assert_eq!(agg.site_label(1), "1");
+        agg.ship_control_to(1, "cfg", b"abc").unwrap();
+        let f = joiner.recv_broadcast().unwrap();
+        assert_eq!(f.tag, "cfg");
+        assert!(matches!(f.body, Body::Control(ref b) if b == b"abc"));
+        assert!(agg.ship_control_to(9, "cfg", b"").is_err());
     }
 
     /// The bounded backoff dial gives up with an error that reports the

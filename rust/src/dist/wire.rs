@@ -68,10 +68,13 @@ use crate::tensor::Matrix;
 /// layer); to 4 when frame kind 2 (sparse payload: u32 index + f32 value
 /// pairs for DGC/VBC/AdaComp) was added; to 5 when `config` gained the
 /// resume flag (followed by a `resume` control frame carrying checkpoint
-/// state) and the `infer-*` serving handshake was added. A peer from an
-/// older build dialing a newer endpoint fails cleanly at the handshake
-/// instead of mid-run.
-pub const WIRE_VERSION: u8 = 5;
+/// state) and the `infer-*` serving handshake was added; to 6 when the
+/// hello/welcome handshake gained multi-leaf subtree declarations (tree
+/// topologies), the config resume flag became a three-state mode byte
+/// (fresh / checkpoint / elastic), and the `epoch-sync` membership
+/// roll-call was added. A peer from an older build dialing a newer
+/// endpoint fails cleanly at the handshake instead of mid-run.
+pub const WIRE_VERSION: u8 = 6;
 
 /// Upper bound on one frame's post-prefix length (1 GiB): a decoder sanity
 /// check against corrupt or hostile length prefixes.

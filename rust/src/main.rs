@@ -9,12 +9,19 @@
 //! train [--algo A] [--dataset D] [--epochs N] [--batch B] [--sites S]
 //!       [--scale SC] [--config path.toml]
 //!     one training run with full telemetry (in-process loopback cluster)
-//! serve [--sites S] [--addr HOST:PORT] [--strict] [--partition P] [train options]
+//! serve [--sites S] [--addr HOST:PORT] [--strict] [--partition P]
+//!       [--topology flat|tree:R] [train options]
 //!     run the aggregator for a multi-process TCP run and wait for S
-//!     `dad join` processes; lost sites degrade the run (or fail it,
-//!     under --strict) instead of hanging it
+//!     `dad join` processes (or, under --topology tree:R, for R direct
+//!     children — `dad relay` subtrees and/or leaves — covering S sites);
+//!     lost sites degrade the run (or fail it, under --strict) instead of
+//!     hanging it
 //! join [HOST:PORT]
 //!     run one training site against a serving aggregator
+//! relay --parent HOST:PORT --sites N [--addr HOST:PORT] [--strict]
+//!     run one interior level of an aggregation tree: accept N leaves,
+//!     dial the parent as a single N-leaf subtree, and reduce each
+//!     exchange before forwarding (gather → associative combine → emit)
 //! chaos --list | --recipe NAME [--strict] | --recipe-file PATH
 //!     run a named fault-injection scenario over real TCP sockets and
 //!     assert its convergence-or-clean-failure expectation
@@ -45,13 +52,13 @@ use dad::checkpoint::{Checkpoint, CheckpointPlan};
 use dad::config::{Args, TomlLite};
 use dad::coordinator::experiments::{self, Scale};
 use dad::coordinator::{
-    build_task, join_training_resumable, serve_training_checkpointed, train_checkpointed,
-    validate_dataset_algo, validate_remote, FaultPolicy, RemoteConfig, Schedule, TrainLog,
-    TrainSpec, TrainTask,
+    build_task, join_training_resumable, relay_training, serve_training_checkpointed,
+    train_checkpointed, validate_dataset_algo, validate_remote, validate_remote_topology,
+    FaultPolicy, RemoteConfig, ResumeMode, Schedule, Topology, TrainLog, TrainSpec, TrainTask,
 };
 use dad::infer::{run_bench, InferClient, InferOpts, InferServer};
 use dad::data::Partition;
-use dad::dist::{Direction, Ledger, TcpAgg, TcpSite};
+use dad::dist::{Direction, Ledger, TcpAgg, TcpSite, Transport};
 use dad::scenario::{find_recipe, named_recipes, run_recipe, Recipe};
 
 fn main() {
@@ -62,6 +69,7 @@ fn main() {
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
         "join" => cmd_join(&args),
+        "relay" => cmd_relay(&args),
         "chaos" => cmd_chaos(&args),
         "infer" => cmd_infer(&args),
         "trace" => cmd_trace(&args),
@@ -134,10 +142,13 @@ fn print_help() {
                      [--scale quick|default|paper] [--config path.toml] [--csv PATH]\n\
                      [--checkpoint PATH] [--checkpoint-every N] [--resume PATH]\n\
            dad serve [--addr HOST:PORT] [--sites S] [--csv PATH] [--strict]\n\
-                     [--partition default|iid|skew:R] [--straggler-deadline SECS]\n\
+                     [--partition default|iid|skew:R] [--topology flat|tree:R]\n\
+                     [--straggler-deadline SECS]\n\
                      [--handshake-timeout SECS] [--recv-timeout SECS]\n\
                      [--checkpoint PATH] [--checkpoint-every N] [--resume PATH] [train options]\n\
            dad join  [HOST:PORT] [--csv PATH]\n\
+           dad relay --parent HOST:PORT --sites N [--addr HOST:PORT] [--strict]\n\
+                     [--straggler-deadline SECS] [--handshake-timeout SECS]\n\
            dad chaos --list | --recipe NAME [--strict] [--csv PATH] | --recipe-file PATH\n\
            dad infer --serve HOST:PORT --checkpoint PATH [--max-batch N] [--batch-window-ms MS]\n\
            dad infer --bench --addr HOST:PORT [--requests N] [--concurrency C]\n\
@@ -153,6 +164,10 @@ fn print_help() {
          edad is rejected up front — attention has no delta recomputation).\n\
          A site lost at a step boundary degrades the run to the survivors\n\
          (logged as sites_live in the CSV); --strict fails it cleanly instead.\n\
+         `serve --topology tree:R` + `relay` build a multi-level aggregation\n\
+         tree that is bit-equal to the flat star (grads, losses, per-tag\n\
+         ledger bytes); a site dialing a running fabric is admitted at the\n\
+         next epoch boundary and the shards are re-dealt (elastic join).\n\
          `chaos` replays named deterministic fault scenarios (see README).\n\
          --checkpoint saves resumable state (model, Adam moments, RNG cursor,\n\
          epoch position) at epoch boundaries; --resume continues a saved run\n\
@@ -469,6 +484,14 @@ fn cmd_serve(args: &Args) {
         eprintln!("{e}");
         std::process::exit(2)
     });
+    let topology = Topology::parse(args.opt_or("topology", "flat")).unwrap_or_else(|e| {
+        eprintln!("--topology: {e}");
+        std::process::exit(2)
+    });
+    validate_remote_topology(&spec, &topology).unwrap_or_else(|e| {
+        eprintln!("{e}");
+        std::process::exit(2)
+    });
     let partition = Partition::parse(args.opt_or("partition", "default")).unwrap_or_else(|e| {
         eprintln!("--partition: {e}");
         std::process::exit(2)
@@ -496,12 +519,38 @@ fn cmd_serve(args: &Args) {
         std::process::exit(1)
     });
     let shown = listener.local_addr().map(|a| a.to_string()).unwrap_or_else(|_| addr.clone());
-    println!(
-        "serving {} on {dataset} ({scale:?}) at {shown}; waiting for {} x `dad join {shown}`",
-        spec.algo.name(),
-        spec.n_sites
-    );
-    let mut agg = listener.accept_sites_deadline(handshake).unwrap_or_else(|e| {
+    match topology {
+        Topology::Flat => println!(
+            "serving {} on {dataset} ({scale:?}) at {shown}; waiting for {} x `dad join {shown}`",
+            spec.algo.name(),
+            spec.n_sites
+        ),
+        Topology::Tree { root_links } => println!(
+            "serving {} on {dataset} ({scale:?}) at {shown}; waiting for {root_links} tree \
+             link(s) covering {} site(s)",
+            spec.algo.name(),
+            spec.n_sites
+        ),
+    }
+    let mut agg = match topology {
+        Topology::Flat => listener.accept_sites_deadline(handshake),
+        Topology::Tree { root_links } => {
+            listener.accept_hellos_deadline(handshake).and_then(|pending| {
+                if pending.n_links() != root_links {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        format!(
+                            "tree topology expected {root_links} root links, got {} (did a \
+                             relay's leaves connect here directly?)",
+                            pending.n_links()
+                        ),
+                    ));
+                }
+                pending.welcome_all(0, spec.n_sites as u32)
+            })
+        }
+    }
+    .unwrap_or_else(|e| {
         eprintln!("handshake: {e}");
         std::process::exit(1)
     });
@@ -509,16 +558,15 @@ fn cmd_serve(args: &Args) {
         eprintln!("arming straggler deadline: {e}");
         std::process::exit(1)
     });
-    RemoteConfig {
+    let cfg = RemoteConfig {
         spec: spec.clone(),
         dataset: dataset.clone(),
         scale: scale_s,
         recv_timeout_ms,
         partition,
-        resume: resume.is_some(),
-    }
-    .send(&mut agg)
-    .unwrap_or_else(|e| {
+        resume: if resume.is_some() { ResumeMode::Checkpoint } else { ResumeMode::Fresh },
+    };
+    cfg.send(&mut agg).unwrap_or_else(|e| {
         eprintln!("config broadcast: {e}");
         std::process::exit(1)
     });
@@ -542,6 +590,7 @@ fn cmd_serve(args: &Args) {
             policy,
             &plan,
             resume,
+            Some(&cfg),
         ),
         TrainTask::Seq { train_ds, test_ds, shards, model } => serve_training_checkpointed(
             &mut agg,
@@ -554,6 +603,7 @@ fn cmd_serve(args: &Args) {
             policy,
             &plan,
             resume,
+            Some(&cfg),
         ),
         TrainTask::Tokens { train_ds, test_ds, shards, model } => serve_training_checkpointed(
             &mut agg,
@@ -566,6 +616,7 @@ fn cmd_serve(args: &Args) {
             policy,
             &plan,
             resume,
+            Some(&cfg),
         ),
     }
     .unwrap_or_else(|e| {
@@ -618,7 +669,11 @@ fn cmd_join(args: &Args) {
         cfg.spec.n_sites,
         cfg.spec.algo.name(),
         cfg.dataset,
-        if cfg.resume { " [resumed]" } else { "" }
+        match cfg.resume {
+            ResumeMode::Fresh => "",
+            ResumeMode::Checkpoint => " [resumed]",
+            ResumeMode::Elastic => " [elastic]",
+        }
     );
     let mut ledger = Ledger::new();
     let _obs = obs_setup(args);
@@ -677,6 +732,148 @@ fn cmd_join(args: &Args) {
         t0.elapsed().as_secs_f32(),
         ledger.total_dir(Direction::SiteToAgg),
         ledger.total_dir(Direction::AggToSite),
+    );
+    obs_finish();
+}
+
+/// `dad relay`: one interior level of an aggregation tree. Accepts
+/// `--sites N` direct children (leaves and/or deeper relays), dials
+/// `--parent` as a single N-leaf subtree, forwards the parent's config
+/// verbatim, then runs the algorithm's aggregator half against the
+/// children and its site half against the parent with each exchange
+/// reduced in place (gather → associative combine → emit).
+fn cmd_relay(args: &Args) {
+    let parent_addr = args
+        .opt("parent")
+        .map(str::to_string)
+        .or_else(|| args.positional.get(1).map(|s| s.to_string()))
+        .unwrap_or_else(|| {
+            eprintln!(
+                "usage: dad relay --parent HOST:PORT --sites N [--addr HOST:PORT] [--strict]"
+            );
+            std::process::exit(2)
+        });
+    let n_children = args.usize_or("sites", 0);
+    if n_children == 0 {
+        eprintln!("relay: --sites N (direct children of this relay) is required and must be > 0");
+        std::process::exit(2);
+    }
+    let policy =
+        if args.has_flag("strict") { FaultPolicy::strict() } else { FaultPolicy::degrade() };
+    let secs = |key: &str, default: usize| -> Option<Duration> {
+        let s = args.usize_or(key, default);
+        (s > 0).then(|| Duration::from_secs(s as u64))
+    };
+    let handshake = secs("handshake-timeout", 120);
+    let straggler = secs("straggler-deadline", 300);
+    let addr = args.opt_or("addr", "127.0.0.1:7011").to_string();
+    let listener = TcpAgg::bind(&addr, n_children).unwrap_or_else(|e| {
+        eprintln!("bind {addr}: {e}");
+        std::process::exit(1)
+    });
+    let shown = listener.local_addr().map(|a| a.to_string()).unwrap_or_else(|_| addr.clone());
+    println!(
+        "relay at {shown}: waiting for {n_children} child link(s), then dialing {parent_addr}"
+    );
+    // Children first: the hello to the parent declares this subtree's leaf
+    // count, which is only known once every child has said hello.
+    let pending = listener.accept_hellos_deadline(handshake).unwrap_or_else(|e| {
+        eprintln!("child handshake: {e}");
+        std::process::exit(1)
+    });
+    let total = pending.total_leaves();
+    let mut parent =
+        TcpSite::connect_retry_with_leaves(&parent_addr, total, Duration::from_secs(10))
+            .unwrap_or_else(|e| {
+                eprintln!("connect {parent_addr}: {e}");
+                std::process::exit(1)
+            });
+    // The parent's welcome assigns this subtree a contiguous global leaf
+    // range; re-welcome the children inside it so every leaf id is
+    // fabric-unique and the fabric-wide site count reaches every site.
+    let leaf_start = parent.site_id() as u32;
+    let global_total = parent.n_sites() as u32;
+    let mut children = pending.welcome_all(leaf_start, global_total).unwrap_or_else(|e| {
+        eprintln!("welcoming children: {e}");
+        std::process::exit(1)
+    });
+    children.set_recv_timeout(straggler).unwrap_or_else(|e| {
+        eprintln!("arming straggler deadline: {e}");
+        std::process::exit(1)
+    });
+    let cfg = RemoteConfig::recv_forward(&mut parent, &mut children).unwrap_or_else(|e| {
+        eprintln!("config: {e}");
+        std::process::exit(1)
+    });
+    if cfg.recv_timeout_ms > 0 {
+        parent
+            .set_recv_timeout(Some(Duration::from_millis(u64::from(cfg.recv_timeout_ms))))
+            .unwrap_or_else(|e| {
+                eprintln!("arming recv timeout: {e}");
+                std::process::exit(1)
+            });
+    }
+    let scale = Scale::parse(&cfg.scale).unwrap_or(Scale::Default);
+    println!(
+        "relaying leaves {leaf_start}..{} of {}: {} on {} ({scale:?})",
+        leaf_start + total,
+        cfg.spec.n_sites,
+        cfg.spec.algo.name(),
+        cfg.dataset,
+    );
+    let mut parent_ledger = Ledger::new();
+    let mut child_ledger = Ledger::new();
+    let _obs = obs_setup(args);
+    let t0 = std::time::Instant::now();
+    let task = build_task(&cfg.dataset, scale, cfg.spec.n_sites, cfg.spec.seed)
+        .unwrap_or_else(|e| {
+            eprintln!("{e}");
+            std::process::exit(2)
+        })
+        .repartition(cfg.partition, cfg.spec.seed);
+    match task {
+        TrainTask::Dense { shards, model, .. } => relay_training(
+            &mut parent,
+            &mut children,
+            &mut parent_ledger,
+            &mut child_ledger,
+            &cfg,
+            &shards,
+            policy,
+            model,
+        ),
+        TrainTask::Seq { shards, model, .. } => relay_training(
+            &mut parent,
+            &mut children,
+            &mut parent_ledger,
+            &mut child_ledger,
+            &cfg,
+            &shards,
+            policy,
+            model,
+        ),
+        TrainTask::Tokens { shards, model, .. } => relay_training(
+            &mut parent,
+            &mut children,
+            &mut parent_ledger,
+            &mut child_ledger,
+            &cfg,
+            &shards,
+            policy,
+            model,
+        ),
+    }
+    .unwrap_or_else(|e| {
+        eprintln!("relay: {e}");
+        std::process::exit(1)
+    });
+    println!(
+        "relay done in {:.1}s; uplink {} B up / {} B down; subtree {} B up / {} B down",
+        t0.elapsed().as_secs_f32(),
+        parent_ledger.total_dir(Direction::SiteToAgg),
+        parent_ledger.total_dir(Direction::AggToSite),
+        child_ledger.total_dir(Direction::SiteToAgg),
+        child_ledger.total_dir(Direction::AggToSite),
     );
     obs_finish();
 }

@@ -177,10 +177,18 @@ pub static STEP_LATENCY: Histogram = Histogram::new();
 /// (`dad_batcher_queue_depth`).
 pub static BATCHER_QUEUE_DEPTH: Gauge = Gauge::new();
 
+/// This process's level in the aggregation tree (`dad_tree_level`): 0 at
+/// the root aggregator, 1 at a `dad relay` sub-aggregator.
+pub static TREE_LEVEL: Gauge = Gauge::new();
+
+/// Live directly-connected child links (`dad_children_live`): leaf sites
+/// or relay subtrees still answering this aggregation level.
+pub static CHILDREN_LIVE: Gauge = Gauge::new();
+
 /// Every metric name the `/metrics` endpoint exposes, in exposition
 /// order. `tests/format_spec.rs` asserts each appears (backticked) in the
 /// `docs/FORMATS.md` inventory so the spec cannot drift from the code.
-pub const METRIC_NAMES: [&str; 8] = [
+pub const METRIC_NAMES: [&str; 10] = [
     "dad_step",
     "dad_sites_live",
     "dad_bytes_up_total",
@@ -189,6 +197,8 @@ pub const METRIC_NAMES: [&str; 8] = [
     "dad_step_latency_p50_seconds",
     "dad_step_latency_p99_seconds",
     "dad_batcher_queue_depth",
+    "dad_tree_level",
+    "dad_children_live",
 ];
 
 /// Set the byte counters from a ledger census: counters are monotone, so
@@ -212,6 +222,8 @@ pub fn reset_all() {
     BYTES_DOWN.reset();
     STEP_LATENCY.reset();
     BATCHER_QUEUE_DEPTH.set(0);
+    TREE_LEVEL.set(0);
+    CHILDREN_LIVE.set(0);
 }
 
 /// Render every metric in Prometheus text exposition format (version
@@ -254,6 +266,12 @@ pub fn render() -> String {
         out,
         "# TYPE dad_batcher_queue_depth gauge\ndad_batcher_queue_depth {}",
         BATCHER_QUEUE_DEPTH.get()
+    );
+    let _ = writeln!(out, "# TYPE dad_tree_level gauge\ndad_tree_level {}", TREE_LEVEL.get());
+    let _ = writeln!(
+        out,
+        "# TYPE dad_children_live gauge\ndad_children_live {}",
+        CHILDREN_LIVE.get()
     );
     out
 }

@@ -102,6 +102,11 @@ pub struct Recipe {
     pub handshake_timeout_ms: u64,
     /// Site-side per-frame recv deadline (shipped in the config frame), ms.
     pub recv_timeout_ms: u32,
+    /// Interior fan-out: 0 runs the classic flat star; `R > 0` interposes
+    /// `R` relay threads between the aggregator and the sites, splitting
+    /// the sites into `R` contiguous subtrees (the `dad relay` topology,
+    /// compressed into one process).
+    pub tree_links: usize,
     /// The outcome this recipe is supposed to produce.
     pub expect: Expectation,
 }
@@ -130,6 +135,7 @@ impl Recipe {
             straggler_deadline_ms: 30_000,
             handshake_timeout_ms: 30_000,
             recv_timeout_ms: 60_000,
+            tree_links: 0,
             expect: Expectation::Converge,
         }
     }
@@ -161,6 +167,7 @@ impl Recipe {
     /// seed = 13
     /// sync_every = 1
     /// partition = "default"         # default | iid | skew:<ratio>
+    /// tree_links = 0                # 0 = flat star; R = sites behind R relays
     ///
     /// [chaos.site.1]                # one section per faulty site
     /// seed = 7
@@ -190,6 +197,7 @@ impl Recipe {
         r.spec.schedule = Schedule::from_sync_every(cfg.int_or("train", "sync_every", 1) as usize);
         r.partition = Partition::parse(cfg.str_or("train", "partition", "default"))
             .map_err(|e| format!("train.partition: {e}"))?;
+        r.tree_links = cfg.int_or("train", "tree_links", 0) as usize;
         r.strict = cfg.bool_or("", "strict", false);
         r.straggler_deadline_ms = cfg.int_or("", "straggler_deadline_ms", 30_000) as u64;
         r.handshake_timeout_ms = cfg.int_or("", "handshake_timeout_ms", 30_000) as u64;
@@ -281,6 +289,20 @@ pub fn named_recipes() -> Vec<Recipe> {
     // state dies with it; the survivors' residuals are per-site, so the
     // protocol degrades rather than refusing.
     recipes.push(mid_drop("dgc-mid-drop", AlgoSpec::Dgc { density: 25.0 }, "DGC"));
+
+    let mut r = Recipe::base(
+        "tree-churn-dad",
+        "4 sites behind 2 relays; site 3 dies at step 3 and the whole tree degrades to 3",
+        AlgoSpec::Dad,
+    );
+    r.spec.n_sites = 4;
+    r.tree_links = 2;
+    let mut chaos = vec![ChaosSpec::default(); 4];
+    chaos[3] = ChaosSpec { seed: 23, disconnect_at_step: 3, ..ChaosSpec::default() };
+    r.site_chaos = chaos;
+    r.straggler_deadline_ms = 5_000;
+    r.expect = Expectation::Degrade(3);
+    recipes.push(r);
 
     let mut r = Recipe::base(
         "straggler-dad",

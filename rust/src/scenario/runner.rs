@@ -17,8 +17,9 @@ use std::time::Duration;
 
 use super::{Expectation, Recipe};
 use crate::coordinator::{
-    build_task, join_training, serve_training, validate_dataset_algo, validate_remote,
-    FaultPolicy, RemoteConfig, Scale, TrainLog, TrainTask,
+    build_task, join_training, relay_training, serve_training, validate_dataset_algo,
+    validate_remote, validate_remote_topology, FaultPolicy, RemoteConfig, ResumeMode, Scale,
+    Topology, TrainLog, TrainTask,
 };
 use crate::dist::{ChaosTransport, Ledger, TcpAgg, TcpAggListener, TcpSite, Transport};
 
@@ -148,7 +149,19 @@ fn site_run(site: TcpSite, site_id: usize, recipe: &Recipe) -> io::Result<TrainL
 /// policy. Owns `agg`, so returning (cleanly or not) closes every site
 /// socket and unblocks the site threads.
 fn serve_main(listener: TcpAggListener, recipe: &Recipe, strict: bool) -> io::Result<TrainLog> {
-    let mut agg: TcpAgg = listener.accept_sites_deadline(millis(recipe.handshake_timeout_ms))?;
+    let links = recipe.tree_links.min(recipe.spec.n_sites);
+    let mut agg: TcpAgg = if links == 0 {
+        listener.accept_sites_deadline(millis(recipe.handshake_timeout_ms))?
+    } else {
+        let pending = listener.accept_hellos_deadline(millis(recipe.handshake_timeout_ms))?;
+        if pending.n_links() != links {
+            return Err(invalid(format!(
+                "tree recipe expected {links} root links, got {}",
+                pending.n_links()
+            )));
+        }
+        pending.welcome_all(0, recipe.spec.n_sites as u32)?
+    };
     agg.set_recv_timeout(millis(recipe.straggler_deadline_ms))?;
     RemoteConfig {
         spec: recipe.spec.clone(),
@@ -156,7 +169,7 @@ fn serve_main(listener: TcpAggListener, recipe: &Recipe, strict: bool) -> io::Re
         scale: recipe.scale.clone(),
         recv_timeout_ms: recipe.recv_timeout_ms,
         partition: recipe.partition,
-        resume: false,
+        resume: ResumeMode::Fresh,
     }
     .send(&mut agg)?;
     let scale = Scale::parse(&recipe.scale).unwrap_or(Scale::Quick);
@@ -179,6 +192,65 @@ fn serve_main(listener: TcpAggListener, recipe: &Recipe, strict: bool) -> io::Re
     }
 }
 
+/// One relay process compressed into a thread (the `dad relay` role):
+/// accept this subtree's leaves, dial the aggregator declaring all of
+/// them, assign their global leaf ids from the parent's welcome, forward
+/// the config verbatim, and run the reduce-and-forward loop until the
+/// run ends.
+fn relay_main(parent_addr: String, listener: TcpAggListener, recipe: Recipe) -> io::Result<()> {
+    let pending = listener.accept_hellos_deadline(millis(recipe.handshake_timeout_ms))?;
+    let total = pending.total_leaves();
+    let mut parent =
+        TcpSite::connect_retry_with_leaves(&parent_addr, total, Duration::from_secs(10))?;
+    let leaf_start = parent.site_id() as u32;
+    let global_total = parent.n_sites() as u32;
+    let mut children = pending.welcome_all(leaf_start, global_total)?;
+    children.set_recv_timeout(millis(recipe.straggler_deadline_ms))?;
+    let cfg = RemoteConfig::recv_forward(&mut parent, &mut children)?;
+    if let Some(t) = millis(u64::from(cfg.recv_timeout_ms)) {
+        parent.set_recv_timeout(Some(t))?;
+    }
+    let scale = Scale::parse(&cfg.scale).unwrap_or(Scale::Quick);
+    let task = build_task(&cfg.dataset, scale, cfg.spec.n_sites, cfg.spec.seed)
+        .map_err(invalid)?
+        .repartition(cfg.partition, cfg.spec.seed);
+    let policy = if recipe.strict { FaultPolicy::strict() } else { FaultPolicy::degrade() };
+    let mut parent_ledger = Ledger::new();
+    let mut child_ledger = Ledger::new();
+    match task {
+        TrainTask::Dense { shards, model, .. } => relay_training(
+            &mut parent,
+            &mut children,
+            &mut parent_ledger,
+            &mut child_ledger,
+            &cfg,
+            &shards,
+            policy,
+            model,
+        ),
+        TrainTask::Seq { shards, model, .. } => relay_training(
+            &mut parent,
+            &mut children,
+            &mut parent_ledger,
+            &mut child_ledger,
+            &cfg,
+            &shards,
+            policy,
+            model,
+        ),
+        TrainTask::Tokens { shards, model, .. } => relay_training(
+            &mut parent,
+            &mut children,
+            &mut parent_ledger,
+            &mut child_ledger,
+            &cfg,
+            &shards,
+            policy,
+            model,
+        ),
+    }
+}
+
 /// Run `recipe` start to finish and report what happened — completion
 /// with metrics, or a clean error; never a hang or a panic. `strict`
 /// overrides the recipe's own fault policy (the CLI's `--strict`).
@@ -198,6 +270,13 @@ pub fn run_recipe(recipe: &Recipe, strict: bool) -> RecipeReport {
     if let Err(e) = validate_remote(&recipe.spec) {
         return fail(e);
     }
+    let links = recipe.tree_links.min(recipe.spec.n_sites);
+    if links > 0 {
+        let topo = Topology::Tree { root_links: links };
+        if let Err(e) = validate_remote_topology(&recipe.spec, &topo) {
+            return fail(e);
+        }
+    }
     let listener = match TcpAgg::bind("127.0.0.1:0", recipe.spec.n_sites) {
         Ok(l) => l,
         Err(e) => return fail(e),
@@ -206,22 +285,60 @@ pub fn run_recipe(recipe: &Recipe, strict: bool) -> RecipeReport {
         Ok(a) => a.to_string(),
         Err(e) => return fail(e),
     };
-    let handles: Vec<_> = (0..recipe.spec.n_sites)
-        .map(|_| {
+    let mut handles = Vec::new();
+    let mut relay_handles = Vec::new();
+    if links == 0 {
+        for _ in 0..recipe.spec.n_sites {
             let addr = addr.clone();
             let r = recipe.clone();
-            thread::spawn(move || site_main(addr, r))
-        })
-        .collect();
+            handles.push(thread::spawn(move || site_main(addr, r)));
+        }
+    } else {
+        // Bind every relay listener before spawning anything, so a bind
+        // failure is a clean early return rather than a handshake timeout.
+        let n = recipe.spec.n_sites;
+        let mut groups = Vec::with_capacity(links);
+        for g in 0..links {
+            let size = n / links + usize::from(g < n % links);
+            match TcpAgg::bind("127.0.0.1:0", size) {
+                Ok(l) => groups.push((l, size)),
+                Err(e) => return fail(e),
+            }
+        }
+        for (relay_listener, size) in groups {
+            let relay_addr = match relay_listener.local_addr() {
+                Ok(a) => a.to_string(),
+                Err(e) => return fail(e),
+            };
+            for _ in 0..size {
+                let a = relay_addr.clone();
+                let r = recipe.clone();
+                handles.push(thread::spawn(move || site_main(a, r)));
+            }
+            let parent = addr.clone();
+            let mut r = recipe.clone();
+            // The CLI's --strict must reach the relay's fault policy too.
+            r.strict = strict || recipe.strict;
+            relay_handles.push(thread::spawn(move || relay_main(parent, relay_listener, r)));
+        }
+    }
     let served = serve_main(listener, recipe, strict || recipe.strict);
-    // serve_main dropped the aggregator: surviving site threads now see
-    // closed sockets (or their own recv deadline) and terminate promptly.
+    // serve_main dropped the aggregator: surviving relay and site threads
+    // now see closed sockets (or their own recv deadline) and terminate
+    // promptly.
     let mut site_errors = Vec::new();
     for h in handles {
         match h.join() {
             Ok((_, Ok(_))) => {}
             Ok((site, Err(e))) => site_errors.push((site, e.to_string())),
             Err(_) => site_errors.push((usize::MAX, "site thread panicked".to_string())),
+        }
+    }
+    for h in relay_handles {
+        match h.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => site_errors.push((usize::MAX, format!("relay: {e}"))),
+            Err(_) => site_errors.push((usize::MAX, "relay thread panicked".to_string())),
         }
     }
     match served {

@@ -90,7 +90,7 @@ fn spec_documents_every_live_tag() {
     for tag in [
         "acts", "deltas", "aux-acts", "delta-L", "grad", "lowrank-q", "lowrank-g", "psgd-p",
         "psgd-q", "sparse-grad", "bias-grad", "direct-grad", "hello", "welcome", "config",
-        "step-meta", "step-sync", "eff-rank", "local-loss", "resume", "infer-hello",
+        "step-meta", "step-sync", "eff-rank", "local-loss", "epoch-sync", "resume", "infer-hello",
         "infer-welcome", "infer-req", "infer-res", "infer-shutdown", "ckpt-meta", "ckpt-params",
         "ckpt-adam-m", "ckpt-adam-v", "ckpt-algo", "ckpt-end",
     ] {

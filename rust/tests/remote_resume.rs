@@ -13,7 +13,7 @@ use dad::algos::AlgoSpec;
 use dad::checkpoint::{Checkpoint, CheckpointPlan};
 use dad::coordinator::{
     build_task, join_training_resumable, serve_training_checkpointed, train_checkpointed,
-    FaultPolicy, Scale, Schedule, TrainLog, TrainSpec, TrainTask,
+    FaultPolicy, ResumeMode, Scale, Schedule, TrainLog, TrainSpec, TrainTask,
 };
 use dad::data::DenseDataset;
 use dad::dist::{Ledger, Loopback, TcpAgg, TcpSite};
@@ -59,7 +59,7 @@ fn spec_for(epochs: usize) -> TrainSpec {
 fn tcp_run(spec: &TrainSpec, plan: &CheckpointPlan, resume: Option<Checkpoint>) -> TrainLog {
     let listener = TcpAgg::bind("127.0.0.1:0", 2).expect("bind");
     let addr = listener.local_addr().expect("addr").to_string();
-    let resume_flag = resume.is_some();
+    let resume_mode = if resume.is_some() { ResumeMode::Checkpoint } else { ResumeMode::Fresh };
     let joins: Vec<_> = (0..2)
         .map(|_| {
             let addr = addr.clone();
@@ -70,7 +70,7 @@ fn tcp_run(spec: &TrainSpec, plan: &CheckpointPlan, resume: Option<Checkpoint>) 
                 let (train_ds, _test_ds, shards, model) = mnist_task(spec.seed);
                 let mut ledger = Ledger::new();
                 join_training_resumable(
-                    &mut t, &mut ledger, &spec, model, &train_ds, &shards, site_id, resume_flag,
+                    &mut t, &mut ledger, &spec, model, &train_ds, &shards, site_id, resume_mode,
                 )
                 .expect("join")
             })
@@ -90,6 +90,7 @@ fn tcp_run(spec: &TrainSpec, plan: &CheckpointPlan, resume: Option<Checkpoint>) 
         FaultPolicy::default(),
         plan,
         resume,
+        None,
     )
     .expect("serve");
     for j in joins {
@@ -182,6 +183,7 @@ fn remote_checkpoint_rejects_stateful_algorithms() {
         FaultPolicy::default(),
         &plan_at(&path),
         None,
+        None,
     )
     .expect_err("dgc + remote checkpoint must be rejected");
     assert!(err.to_string().contains("compressor state"), "unclear error: {err}");
@@ -189,7 +191,7 @@ fn remote_checkpoint_rejects_stateful_algorithms() {
     // The join side guards resume with the same gate.
     let (train_ds, _test_ds, shards, model) = mnist_task(spec.seed);
     let err = join_training_resumable(
-        &mut t, &mut ledger, &spec, model, &train_ds, &shards, 0, true,
+        &mut t, &mut ledger, &spec, model, &train_ds, &shards, 0, ResumeMode::Checkpoint,
     )
     .expect_err("dgc join resume must be rejected");
     assert!(err.to_string().contains("compressor state"), "unclear error: {err}");
@@ -212,6 +214,7 @@ fn remote_checkpoint_rejects_periodic_schedules() {
         &test_ds,
         FaultPolicy::default(),
         &plan_at(&path),
+        None,
         None,
     )
     .expect_err("periodic + remote checkpoint must be rejected");

@@ -11,17 +11,21 @@
 //! `dad serve` / `dad join` use.
 
 use std::thread;
+use std::time::Duration;
 
 use dad::algos::common::DistAlgorithm;
 use dad::algos::{concat_batches, AlgoSpec, StepOutcome};
+use dad::checkpoint::CheckpointPlan;
 use dad::coordinator::{
-    build_task, join_training, remote_agg_step, remote_site_step, serve_training, train,
-    validate_dataset_algo, validate_remote, DataSource, FaultPolicy, RemoteStep, Scale, Schedule,
-    TrainSpec, TrainTask,
+    build_task, join_training, join_training_resumable, relay_training, remote_agg_step,
+    remote_site_step, serve_training, serve_training_checkpointed, train, validate_dataset_algo,
+    validate_remote, validate_remote_topology, DataSource, FaultPolicy, RemoteConfig, RemoteStep,
+    ResumeMode, Scale, Schedule, Topology, TrainLog, TrainSpec, TrainTask,
 };
-use dad::data::{mnist_like, split_by_label, TokenDataset};
+use dad::data::{mnist_like, split_by_label, Partition, TokenDataset};
 use dad::dist::{
     ChaosSpec, ChaosTransport, Cluster, CostModel, Direction, Ledger, Loopback, TcpAgg, TcpSite,
+    Transport,
 };
 use dad::nn::loss::one_hot;
 use dad::nn::model::{Batch, DistModel};
@@ -735,4 +739,456 @@ fn pure_delay_chaos_is_invisible_and_deterministic_over_tcp() {
     }
     // Both chaos runs also equal the two per-step losses of the clean
     // site runs by transitivity through the aggregator checks above.
+}
+
+// ---------------------------------------------------------------------------
+// Tree topologies: hierarchical aggregation and elastic membership
+// ---------------------------------------------------------------------------
+
+/// Deterministic dense task with `n_sites` *equal contiguous* shards of
+/// `per_site` examples each — equal shards mean every site draws the same
+/// step count, so tree runs with different site totals stay
+/// step-comparable.
+fn build_even_task(
+    seed: u64,
+    n_sites: usize,
+    per_site: usize,
+) -> (dad::data::DenseDataset, dad::data::DenseDataset, Vec<Vec<usize>>, Mlp) {
+    let n_train = n_sites * per_site;
+    let mut rng = Rng::new(seed);
+    let full = mnist_like(n_train + 40, &mut rng);
+    let train_ds = full.subset(&(0..n_train).collect::<Vec<_>>());
+    let test_ds = full.subset(&(n_train..n_train + 40).collect::<Vec<_>>());
+    let shards: Vec<Vec<usize>> =
+        (0..n_sites).map(|s| (s * per_site..(s + 1) * per_site).collect()).collect();
+    (train_ds, test_ds, shards, mk_model(9, &[784, 24, 10]))
+}
+
+/// A flat multi-process star at arbitrary site count: serve in this
+/// thread, one `join_training` thread per site. Returns the serve log and
+/// the aggregator's ledger (the reference the tree runs are held to).
+fn flat_training_run<M, D, F>(spec: &TrainSpec, build: F) -> (TrainLog, Ledger)
+where
+    M: DistModel + Clone + Send + 'static,
+    D: DataSource,
+    F: Fn() -> (D, D, Vec<Vec<usize>>, M) + Send + Clone + 'static,
+{
+    let listener = TcpAgg::bind("127.0.0.1:0", spec.n_sites).expect("bind");
+    let addr = listener.local_addr().expect("addr").to_string();
+    let joins: Vec<_> = (0..spec.n_sites)
+        .map(|_| {
+            let addr = addr.clone();
+            let spec = spec.clone();
+            let build = build.clone();
+            thread::spawn(move || {
+                let mut t = TcpSite::connect(&addr).expect("connect");
+                let site_id = t.site_id();
+                let (train_ds, _test_ds, shards, model) = build();
+                let mut ledger = Ledger::new();
+                join_training(&mut t, &mut ledger, &spec, model, &train_ds, &shards, site_id)
+                    .expect("join")
+            })
+        })
+        .collect();
+    let mut agg = listener.accept_sites().expect("accept");
+    let mut ledger = Ledger::new();
+    let (train_ds, test_ds, shards, model) = build();
+    let log = serve_training(
+        &mut agg,
+        &mut ledger,
+        spec,
+        model,
+        &train_ds,
+        &shards,
+        &test_ds,
+        FaultPolicy::default(),
+    )
+    .expect("serve");
+    for j in joins {
+        j.join().expect("join thread");
+    }
+    (log, ledger)
+}
+
+/// A 2-level aggregation tree over real sockets: the root in this thread,
+/// `root_links` relay threads each covering an equal contiguous leaf
+/// group, one `join_training` thread per leaf. Returns the root's serve
+/// log, the root's own ledger (its reduced uplink view), the union of
+/// every leaf's ledger, and the per-leaf logs.
+fn tree_training_run<M, D, F>(
+    spec: &TrainSpec,
+    root_links: usize,
+    build: F,
+) -> (TrainLog, Ledger, Ledger, Vec<TrainLog>)
+where
+    M: DistModel + Clone + Send + 'static,
+    D: DataSource,
+    F: Fn() -> (D, D, Vec<Vec<usize>>, M) + Send + Clone + 'static,
+{
+    let n_sites = spec.n_sites;
+    let listener = TcpAgg::bind("127.0.0.1:0", n_sites).expect("bind root");
+    let root_addr = listener.local_addr().expect("addr").to_string();
+    let mut site_handles = Vec::new();
+    let mut relay_handles = Vec::new();
+    for g in 0..root_links {
+        let size = n_sites / root_links + usize::from(g < n_sites % root_links);
+        let relay_listener = TcpAgg::bind("127.0.0.1:0", size).expect("bind relay");
+        let relay_addr = relay_listener.local_addr().expect("relay addr").to_string();
+        for _ in 0..size {
+            let addr = relay_addr.clone();
+            let spec = spec.clone();
+            let build = build.clone();
+            site_handles.push(thread::spawn(move || {
+                let mut t = TcpSite::connect(&addr).expect("connect");
+                let site_id = t.site_id();
+                let (train_ds, _test_ds, shards, model) = build();
+                let mut ledger = Ledger::new();
+                let log = join_training(
+                    &mut t,
+                    &mut ledger,
+                    &spec,
+                    model,
+                    &train_ds,
+                    &shards,
+                    site_id,
+                )
+                .expect("join");
+                (log, ledger)
+            }));
+        }
+        let parent = root_addr.clone();
+        let spec = spec.clone();
+        let build = build.clone();
+        relay_handles.push(thread::spawn(move || {
+            let pending = relay_listener.accept_hellos_deadline(None).expect("relay accept");
+            let total = pending.total_leaves();
+            let mut up =
+                TcpSite::connect_retry_with_leaves(&parent, total, Duration::from_secs(10))
+                    .expect("relay dial");
+            let leaf_start = up.site_id() as u32;
+            let global = up.n_sites() as u32;
+            let mut children = pending.welcome_all(leaf_start, global).expect("welcome");
+            let (_train_ds, _test_ds, shards, model) = build();
+            let cfg = RemoteConfig {
+                spec: spec.clone(),
+                dataset: String::new(),
+                scale: String::new(),
+                recv_timeout_ms: 0,
+                partition: Partition::Default,
+                resume: ResumeMode::Fresh,
+            };
+            let mut parent_ledger = Ledger::new();
+            let mut child_ledger = Ledger::new();
+            relay_training(
+                &mut up,
+                &mut children,
+                &mut parent_ledger,
+                &mut child_ledger,
+                &cfg,
+                &shards,
+                FaultPolicy::default(),
+                model,
+            )
+            .expect("relay");
+        }));
+    }
+    let mut agg = listener
+        .accept_hellos_deadline(None)
+        .expect("root accept")
+        .welcome_all(0, n_sites as u32)
+        .expect("root welcome");
+    let mut root_ledger = Ledger::new();
+    let (train_ds, test_ds, shards, model) = build();
+    let log = serve_training(
+        &mut agg,
+        &mut root_ledger,
+        spec,
+        model,
+        &train_ds,
+        &shards,
+        &test_ds,
+        FaultPolicy::default(),
+    )
+    .expect("serve");
+    for h in relay_handles {
+        h.join().expect("relay thread");
+    }
+    let mut leaf_union = Ledger::new();
+    let mut leaf_logs = Vec::new();
+    for h in site_handles {
+        let (slog, sledger) = h.join().expect("site thread");
+        leaf_union.merge(&sledger);
+        leaf_logs.push(slog);
+    }
+    (log, root_ledger, leaf_union, leaf_logs)
+}
+
+/// Per-(tag) rows of one direction, sorted — the unit of the tree ledger
+/// equivalence mapping.
+fn dir_rows(l: &Ledger, dir: Direction) -> Vec<(String, u64)> {
+    let mut rows: Vec<(String, u64)> = l
+        .breakdown()
+        .iter()
+        .filter(|r| r.1 == dir)
+        .map(|r| (r.0.clone(), r.2))
+        .collect();
+    rows.sort();
+    rows
+}
+
+/// The tentpole acceptance criterion: a 2-level 16-site tree (4 relays x
+/// 4 leaves) is bit-equal to the flat star and the loopback simulation —
+/// same per-epoch losses and evaluation, and the per-(tag, direction)
+/// ledger census maps exactly: the leaves' uplinks sum to the flat star's
+/// site->agg rows, the root's broadcast rows equal the flat star's
+/// agg->site rows, and the root's *incoming* uplink is never larger than
+/// the flat star's (the relays reduce in place).
+#[test]
+fn tcp_tree_training_matches_flat_star_and_simulation() {
+    let algos = [
+        AlgoSpec::Dad,
+        AlgoSpec::Dsgd,
+        AlgoSpec::RankDad { max_rank: 4, n_iters: 6, theta: 1e-3 },
+        AlgoSpec::Dgc { density: 25.0 },
+    ];
+    for algo in algos {
+        let spec = TrainSpec {
+            algo,
+            n_sites: 16,
+            batch_per_site: 8,
+            epochs: 2,
+            lr: 1e-3,
+            seed: 47,
+            schedule: Schedule::EveryBatch,
+        };
+        let name = spec.algo.name();
+        let build = move || build_even_task(47, 16, 10);
+        let (train_ds, test_ds, shards, model) = build();
+        let sim_log = train(model, &spec, &train_ds, &shards, &test_ds);
+        let (flat_log, flat_ledger) = flat_training_run(&spec, build);
+        let (tree_log, root_ledger, leaf_union, leaf_logs) =
+            tree_training_run(&spec, 4, build);
+        assert_eq!(tree_log.epochs.len(), sim_log.epochs.len(), "{name}: epoch count");
+        for (e, (tree, sim)) in tree_log.epochs.iter().zip(&sim_log.epochs).enumerate() {
+            assert!(
+                (tree.train_loss - sim.train_loss).abs() < 1e-6,
+                "{name} epoch {e}: tree loss {} vs sim {}",
+                tree.train_loss,
+                sim.train_loss
+            );
+            assert!((tree.test_auc - sim.test_auc).abs() < 1e-5, "{name} epoch {e} AUC");
+            assert_eq!(tree.sites_live, 16, "{name} epoch {e}: sites_live");
+        }
+        for (e, (tree, flat)) in tree_log.epochs.iter().zip(&flat_log.epochs).enumerate() {
+            assert!(
+                (tree.train_loss - flat.train_loss).abs() < 1e-6,
+                "{name} epoch {e}: tree loss {} vs flat {}",
+                tree.train_loss,
+                flat.train_loss
+            );
+        }
+        // Every leaf sees the same global per-step losses.
+        for (leaf, log) in leaf_logs.iter().enumerate() {
+            for (e, (srv, site)) in tree_log.epochs.iter().zip(&log.epochs).enumerate() {
+                assert!(
+                    (srv.train_loss - site.train_loss).abs() < 1e-6,
+                    "{name} leaf {leaf} epoch {e} loss"
+                );
+            }
+        }
+        // The ledger census mapping (per tag): leaves' uplinks == the flat
+        // star's uplink rows; the root's broadcast == the flat star's.
+        assert_eq!(
+            dir_rows(&leaf_union, Direction::SiteToAgg),
+            dir_rows(&flat_ledger, Direction::SiteToAgg),
+            "{name}: leaf uplink census"
+        );
+        assert_eq!(
+            dir_rows(&root_ledger, Direction::AggToSite),
+            dir_rows(&flat_ledger, Direction::AggToSite),
+            "{name}: root broadcast census"
+        );
+        // The relays reduce: the root's incoming uplink never exceeds the
+        // flat star's, per tag.
+        for (tag, bytes) in dir_rows(&root_ledger, Direction::SiteToAgg) {
+            let flat_bytes = dir_rows(&flat_ledger, Direction::SiteToAgg)
+                .into_iter()
+                .find(|(t, _)| *t == tag)
+                .map(|(_, b)| b)
+                .unwrap_or_else(|| panic!("{name}: root shipped unknown tag {tag:?}"));
+            assert!(
+                bytes <= flat_bytes,
+                "{name}: root uplink {tag} grew: tree {bytes} vs flat {flat_bytes}"
+            );
+        }
+    }
+}
+
+/// The fan-out law: for a sum-combined protocol (dSGD) the root's
+/// incoming uplink bytes are a function of the root's *fan-out*, not the
+/// total site count — 16 sites behind 4 relays cost the root exactly what
+/// 8 sites behind 4 relays cost, and 4x less than the flat 16-site star.
+#[test]
+fn tree_root_uplink_bytes_follow_fanout_not_site_count() {
+    let spec_n = |n_sites| TrainSpec {
+        algo: AlgoSpec::Dsgd,
+        n_sites,
+        batch_per_site: 16,
+        epochs: 1,
+        lr: 1e-3,
+        seed: 59,
+        schedule: Schedule::EveryBatch,
+    };
+    let (_, root16, _, _) = tree_training_run(&spec_n(16), 4, move || build_even_task(59, 16, 16));
+    let (_, root8, _, _) = tree_training_run(&spec_n(8), 4, move || build_even_task(59, 8, 16));
+    let (_, flat16) = flat_training_run(&spec_n(16), move || build_even_task(59, 16, 16));
+    let up16 = root16.total_dir(Direction::SiteToAgg);
+    let up8 = root8.total_dir(Direction::SiteToAgg);
+    let up_flat = flat16.total_dir(Direction::SiteToAgg);
+    assert!(up16 > 0);
+    assert_eq!(up16, up8, "root uplink must depend on fan-out, not site count");
+    assert_eq!(up_flat, 4 * up16, "4 relays must cost the root 4/16 of the flat star");
+}
+
+/// Fail-fast validation for tree topologies: the non-associative
+/// algorithms are rejected by name before any socket opens, and malformed
+/// `--topology` spellings are named errors.
+#[test]
+fn tree_topology_rejects_non_associative_algorithms_end_to_end() {
+    let spec = |algo| TrainSpec {
+        algo,
+        n_sites: 4,
+        batch_per_site: 8,
+        epochs: 1,
+        lr: 1e-3,
+        seed: 3,
+        schedule: Schedule::EveryBatch,
+    };
+    for (algo, name) in [(AlgoSpec::Edad, "edad"), (AlgoSpec::DadP2p, "dad-p2p")] {
+        let err = validate_remote_topology(&spec(algo.clone()), &Topology::Tree { root_links: 2 })
+            .expect_err("non-associative algorithm must be rejected on trees")
+            .to_string();
+        assert!(err.contains(name), "error must name the algorithm: {err}");
+        assert!(err.contains("tree topology"), "error must name the topology: {err}");
+        assert!(validate_remote_topology(&spec(algo), &Topology::Flat).is_ok());
+    }
+    assert_eq!(Topology::parse("flat").unwrap(), Topology::Flat);
+    assert_eq!(Topology::parse("tree:4").unwrap(), Topology::Tree { root_links: 4 });
+    // Parsing is purely syntactic: `tree:0` parses, validation rejects it.
+    assert_eq!(Topology::parse("tree:0").unwrap(), Topology::Tree { root_links: 0 });
+    assert!(Topology::parse("tree:x").is_err());
+    assert!(Topology::parse("ring").is_err());
+    // Fan-out bounds are checked against the spec.
+    let dad = spec(AlgoSpec::Dad);
+    assert!(validate_remote_topology(&dad, &Topology::Tree { root_links: 0 }).is_err());
+    assert!(validate_remote_topology(&dad, &Topology::Tree { root_links: 5 }).is_err());
+    assert!(validate_remote_topology(&dad, &Topology::Tree { root_links: 4 }).is_ok());
+}
+
+/// Elastic membership over a live flat star: a third site dials a running
+/// 2-site fabric, is admitted at the epoch boundary, bootstraps from the
+/// `epoch-sync` + `resume` broadcasts, and trains the final epoch as a
+/// full member — the run ends with 3 live sites and the joiner's log
+/// covering exactly the post-admission epochs.
+#[test]
+fn elastic_join_admits_a_site_at_the_epoch_boundary() {
+    let spec = TrainSpec {
+        algo: AlgoSpec::Dad,
+        n_sites: 2,
+        batch_per_site: 8,
+        epochs: 2,
+        lr: 1e-3,
+        seed: 53,
+        schedule: Schedule::EveryBatch,
+    };
+    let build = move || build_task_200(53);
+    let listener = TcpAgg::bind("127.0.0.1:0", 2).expect("bind");
+    let addr = listener.local_addr().expect("addr").to_string();
+    let incumbents: Vec<_> = (0..2)
+        .map(|_| {
+            let addr = addr.clone();
+            let spec = spec.clone();
+            thread::spawn(move || {
+                let mut t = TcpSite::connect(&addr).expect("connect");
+                let site_id = t.site_id();
+                let (train_ds, _test_ds, shards, model) = build();
+                let mut ledger = Ledger::new();
+                join_training(&mut t, &mut ledger, &spec, model, &train_ds, &shards, site_id)
+                    .expect("incumbent")
+            })
+        })
+        .collect();
+    let mut agg = listener.accept_sites().expect("accept");
+    // The joiner dials *after* the handshake closed: its connection waits
+    // in the listener's backlog until the epoch boundary admits it.
+    let (dialed_tx, dialed_rx) = std::sync::mpsc::channel::<()>();
+    let joiner = {
+        let addr = addr.clone();
+        thread::spawn(move || {
+            dialed_tx.send(()).expect("signal");
+            let mut t = TcpSite::connect(&addr).expect("joiner connect");
+            let site_id = t.site_id();
+            assert_eq!(site_id, 2, "joiner must get the next global leaf id");
+            let cfg = RemoteConfig::recv(&mut t).expect("joiner config");
+            assert_eq!(cfg.resume, ResumeMode::Elastic, "admission config mode");
+            let (train_ds, _test_ds, shards, model) = build();
+            let mut ledger = Ledger::new();
+            join_training_resumable(
+                &mut t,
+                &mut ledger,
+                &cfg.spec,
+                model,
+                &train_ds,
+                &shards,
+                site_id,
+                cfg.resume,
+            )
+            .expect("joiner train")
+        })
+    };
+    dialed_rx.recv().expect("joiner spawned");
+    // The SYN lands in the backlog within this margin (loopback); epoch 0
+    // takes far longer than the remainder of the dial.
+    thread::sleep(Duration::from_millis(100));
+    let admit_cfg = RemoteConfig {
+        spec: spec.clone(),
+        dataset: "mnist".into(),
+        scale: "quick".into(),
+        recv_timeout_ms: 0,
+        partition: Partition::Default,
+        resume: ResumeMode::Fresh,
+    };
+    let plan = CheckpointPlan {
+        save_path: None,
+        every: 0,
+        dataset: "mnist".into(),
+        scale: "quick".into(),
+    };
+    let mut ledger = Ledger::new();
+    let (train_ds, test_ds, shards, model) = build();
+    let serve_log = serve_training_checkpointed(
+        &mut agg,
+        &mut ledger,
+        &spec,
+        model,
+        &train_ds,
+        &shards,
+        &test_ds,
+        FaultPolicy::default(),
+        &plan,
+        None,
+        Some(&admit_cfg),
+    )
+    .expect("serve");
+    assert_eq!(serve_log.epochs.len(), 2);
+    assert_eq!(serve_log.epochs[0].sites_live, 2, "epoch 0 runs with the incumbents");
+    assert_eq!(serve_log.epochs[1].sites_live, 3, "epoch 1 runs with the admitted joiner");
+    for h in incumbents {
+        let log = h.join().expect("incumbent thread");
+        assert_eq!(log.epochs.len(), 2);
+    }
+    let joiner_log = joiner.join().expect("joiner thread");
+    assert_eq!(joiner_log.epochs.len(), 1, "joiner trains only the post-admission epoch");
+    assert_eq!(joiner_log.epochs[0].epoch, 1);
+    assert!(joiner_log.epochs[0].train_loss.is_finite());
 }
